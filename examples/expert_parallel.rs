@@ -1,0 +1,109 @@
+//! Paper §7 "Extension to expert parallelism": OEA with per-rank
+//! piggybacking. Under EP, step latency follows the MAX per-rank activated
+//! experts, so the goal shifts from minimizing T to balancing/minimizing
+//! max_r T_r. This example drives the EP router over realistic
+//! domain-structured score traces and reports max-rank-T and simulated
+//! latency for vanilla / OEA / EP-OEA (with and without k0 top-up).
+//!
+//!     cargo run --release --example expert_parallel
+
+use oea_serve::latency::CostModel;
+use oea_serve::moe::ep::route_ep;
+use oea_serve::moe::policy::{route, Policy, RoutingInput};
+use oea_serve::moe::ScoreMatrix;
+use oea_serve::util::bench::Table;
+use oea_serve::util::rng::Rng;
+use oea_serve::util::stats;
+
+/// Domain-structured router scores: tokens cluster on domain-affine
+/// experts, mirroring the trained router's behaviour (DESIGN.md §7).
+fn trace_scores(rng: &mut Rng, b: usize, n: usize, n_domains: usize) -> ScoreMatrix {
+    let mut centers = vec![0.0f64; n_domains * n];
+    for x in centers.iter_mut() {
+        *x = rng.gaussian();
+    }
+    let mut scores = vec![0.0f32; b * n];
+    for i in 0..b {
+        let d = rng.below(n_domains);
+        let row = &mut scores[i * n..(i + 1) * n];
+        let mut sum = 0.0f32;
+        for (e, x) in row.iter_mut().enumerate() {
+            let logit = 1.5 * centers[d * n + e] + rng.gaussian();
+            *x = logit.exp() as f32;
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    ScoreMatrix::new(b, n, scores)
+}
+
+fn main() {
+    let (b, n, k, k0, ranks) = (16usize, 128usize, 8usize, 3usize, 8usize);
+    let steps = 400;
+    let mut rng = Rng::new(0);
+    // per-rank fetch cost: one rank's H100 slice (paper's TP/EP testbed)
+    let cost = CostModel { fetch_us: 2.91, compute_us: 0.012, overhead_us: 33.5 };
+
+    let mut rows: Vec<(String, Vec<f64>, Vec<f64>)> = vec![
+        ("vanilla top-8".into(), vec![], vec![]),
+        (format!("OEA k0={k0} (global)"), vec![], vec![]),
+        (format!("EP-OEA k0={k0}, topup=0"), vec![], vec![]),
+        (format!("EP-OEA k0={k0}, topup=2"), vec![], vec![]),
+    ];
+
+    for _ in 0..steps {
+        let s = trace_scores(&mut rng, b, n, 4);
+        let live = vec![true; b];
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+
+        let per_rank = |active: &[u16]| {
+            let mut c = vec![0usize; ranks];
+            for &e in active {
+                c[oea_serve::moe::ep::rank_of(e as usize, n, ranks)] += 1;
+            }
+            *c.iter().max().unwrap()
+        };
+
+        let v = route(Policy::Vanilla { k }, &input);
+        rows[0].1.push(per_rank(&v.active) as f64);
+        rows[0].2.push(v.t() as f64);
+
+        let o = route(Policy::OeaSimplified { k0, k }, &input);
+        rows[1].1.push(per_rank(&o.active) as f64);
+        rows[1].2.push(o.t() as f64);
+
+        let e0 = route_ep(&input, k0, k, ranks, 0);
+        rows[2].1.push(e0.max_rank_t() as f64);
+        rows[2].2.push(e0.inner.t() as f64);
+
+        let e2 = route_ep(&input, k0, k, ranks, 2);
+        rows[3].1.push(e2.max_rank_t() as f64);
+        rows[3].2.push(e2.inner.t() as f64);
+    }
+
+    let mut table = Table::new(
+        format!(
+            "Expert-parallel OEA (paper §7): B={b}, N={n}, k={k}, {ranks} ranks, \
+             {steps} simulated steps"
+        )
+        .as_str(),
+        &["policy", "avg max-rank T", "avg total T", "sim step us (EP)"],
+    );
+    for (name, max_rank_t, total_t) in &rows {
+        let mr = stats::mean(max_rank_t);
+        table.row(vec![
+            name.clone(),
+            format!("{mr:.2}"),
+            format!("{:.2}", stats::mean(total_t)),
+            format!("{:.1}", cost.layer_us(mr.round() as usize, b * k / ranks)),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nEP latency follows max-rank T: OEA lowers it roughly proportionally\n\
+         to the global T drop, and the paper's suggested k0 top-up on\n\
+         underloaded ranks buys extra quality at nearly no max-rank cost.\n"
+    );
+}

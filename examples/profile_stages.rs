@@ -1,0 +1,28 @@
+//! Per-stage profiling tool (L2/runtime perf work, DESIGN.md §8 / EXPERIMENTS.md §Perf):
+//! times every decode-path stage on the `small` config at B=16, plus the
+//! end-to-end decode step. Run after any artifact-shape change.
+//!
+//!     cargo run --release --example profile_stages
+
+use std::time::Instant;
+
+fn main() {
+    let rt = oea_serve::runtime::Runtime::load(std::path::Path::new("artifacts"), "small").unwrap();
+    let c = rt.config().clone();
+    let b = 16usize;
+    let runner = oea_serve::model::ModelRunner::new(rt);
+    let mut batch = runner.new_batch(b).unwrap();
+    let tokens: Vec<i32> = (0..b as i32).collect();
+    let live = vec![true; b];
+    for step in 0..6 {
+        let pos = vec![step as i32; b];
+        let t0 = Instant::now();
+        let out = runner.decode_step(&mut batch, &tokens, &pos, &live,
+            oea_serve::moe::policy::Policy::Vanilla { k: c.top_k }, true).unwrap();
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let avg_t: f64 = out.layers.iter().map(|l| l.t as f64).sum::<f64>() / out.layers.len() as f64;
+        let moe_ms: f64 = out.layers.iter().map(|l| l.moe_us).sum::<f64>() / 1e3;
+        let route_us: f64 = out.layers.iter().map(|l| l.route_us).sum::<f64>();
+        println!("step {step}: {ms:.1}ms total | moe(sum) {moe_ms:.1}ms | route(sum) {route_us:.0}us | avg_t {avg_t:.1}");
+    }
+}

@@ -1,0 +1,62 @@
+//! Quickstart: load the `small` model, serve a handful of requests under
+//! vanilla routing and under OEA, and compare activated experts / latency.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::path::Path;
+
+use oea_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use oea_serve::latency::H100Presets;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::runtime::Runtime;
+use oea_serve::util::bpe::Tokenizer;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let rt = Runtime::load(Path::new("artifacts"), "small")?;
+    let vocab = rt.manifest.dir.join(&rt.manifest.vocab_file);
+    let tok = Tokenizer::load(&vocab)?;
+    let mut runner = Some(ModelRunner::new(rt));
+
+    let prompts = [
+        "The quiet river carried the ancient lantern",
+        "let total: int = buffer % 42;",
+        "Q: what is the boiling point of the harbour? A:",
+        "integral of sin(t) cos(t) dt from 0 to 3",
+    ];
+
+    for policy in [
+        Policy::Vanilla { k: 8 },
+        Policy::OeaSimplified { k0: 3, k: 8 },
+    ] {
+        let mut engine = Engine::new(
+            runner.take().unwrap(),
+            EngineConfig {
+                policy,
+                mask_padding: true,
+                max_running: 4,
+                eos_token: None,
+                cost_model: H100Presets::qwen3_30b(),
+            },
+        )?;
+        println!("=== policy: {} ===", policy.label());
+        for (i, p) in prompts.iter().enumerate() {
+            let ids: Vec<i32> = tok.encode(p).iter().map(|&t| t as i32).collect();
+            engine.submit(GenRequest::greedy(i as u64, ids, 16));
+        }
+        let done = engine.run_to_completion()?;
+        for f in &done {
+            let text = tok.decode(&f.tokens.iter().map(|&t| t as u32).collect::<Vec<_>>());
+            println!("  [{}] {}…{}", f.id, prompts[f.id as usize], text.trim_end());
+        }
+        println!(
+            "  avg active experts T = {:.1}, simulated H100 MoE latency = {:.1} us, \
+             measured CPU MoE latency = {:.1} us\n",
+            engine.moe.avg_t(),
+            engine.moe.avg_latency_us(true),
+            engine.moe.avg_latency_us(false),
+        );
+        runner = Some(engine.runner);
+    }
+    Ok(())
+}

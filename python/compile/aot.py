@@ -1,0 +1,263 @@
+"""AOT pipeline: corpus -> vocab -> weights -> HLO text artifacts + manifest.
+
+Emits HLO *text* (NOT `.serialize()`): jax >= 0.5 writes HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the rust `xla`
+0.1.6 crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE here, at build time. The rust binary is self-contained
+afterwards: it loads `artifacts/<cfg>/manifest.json`, the `*.hlo.txt`
+stages, `weights.npz` and `vocab.json`, and never calls back into python.
+
+Usage:
+    python -m compile.aot --config small --out ../artifacts
+    python -m compile.aot --all --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import bpe, configs, corpus, model, weights
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(fn, *args, return_tuple=True):
+    """Lower `fn` to HLO text. Single-output stages use return_tuple=False
+    so the PJRT result is a plain array buffer that chains to the next
+    stage on-device (PJRT via the rust crate does not untuple; tuple
+    results must round-trip through a host literal)."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def stage_specs(cfg):
+    """Every HLO stage to export: name -> (fn, example_args, n_outputs).
+
+    Single-output stages (n_outputs == 1) are lowered without a tuple root
+    so their result buffer chains to the next stage without leaving the
+    device; multi-output stages are decomposed host-side by the runtime.
+    """
+    D, V, N, H = cfg.d_model, cfg.vocab, cfg.n_experts, cfg.d_expert
+    S, hd = cfg.s_max, cfg.head_dim
+    Hq, Hkv = cfg.n_q_heads, cfg.n_kv_heads
+    qd, kvd = cfg.q_dim, cfg.kv_dim
+    C = cfg.prefill_chunk
+
+    stages = {}
+    for b in cfg.batch_buckets:
+        kv = sds((2, b, S, Hkv, hd))
+        stages[f"embed_b{b}"] = (
+            model.embed, (sds((b,), I32), sds((V, D))), 1,
+        )
+        stages[f"layer_pre_b{b}"] = (
+            lambda *a: model.layer_pre(cfg, *a),
+            (sds((b, D)), kv, sds((b,), I32),
+             sds((D, qd)), sds((D, kvd)), sds((D, kvd)), sds((qd, D)),
+             sds((D,)), sds((D,)), sds((D, N))),
+            4,
+        )
+        stages[f"cache_append_b{b}"] = (
+            model.cache_append,
+            (kv, sds((b, Hkv, hd)), sds((b, Hkv, hd)), sds((b,), I32)),
+            1,
+        )
+        stages[f"logits_b{b}"] = (
+            lambda *a: model.logits_head(cfg, *a),
+            (sds((b, D)), sds((D,)), sds((D, V))),
+            1,
+        )
+        stages[f"insert_row_b{b}"] = (
+            model.insert_row,
+            (kv, sds((S, Hkv, hd)), sds((S, Hkv, hd)), sds((), I32)),
+            1,
+        )
+        stages[f"extract_row_b{b}"] = (
+            model.extract_row, (kv, sds((), I32)), 1,
+        )
+        for t in cfg.t_buckets:
+            stages[f"moe_b{b}_t{t}"] = (
+                lambda *a: model.moe_apply(cfg, *a),
+                (sds((b, D)), sds((b, N)), sds((t,), I32),
+                 sds((N, D, H)), sds((N, D, H)), sds((N, H, D)), sds((D,))),
+                1,
+            )
+    # one Pallas-kernel moe artifact (TPU-shaped lowering) so the rust
+    # integration suite can assert it matches the gathered-einsum stage
+    # through the real PJRT runtime
+    bp, tp = cfg.batch_buckets[0], cfg.t_buckets[-1]
+    stages[f"moe_pallas_b{bp}_t{tp}"] = (
+        lambda *a: model.moe_apply(cfg, *a, use_pallas=True),
+        (sds((bp, D)), sds((bp, N)), sds((tp,), I32),
+         sds((N, D, H)), sds((N, D, H)), sds((N, H, D)), sds((D,))),
+        1,
+    )
+    # prefill (batch of one sequence, chunked)
+    stages[f"embed_c{C}"] = (
+        model.embed_seq, (sds((C,), I32), sds((V, D))), 1,
+    )
+    stages[f"prefill_layer_c{C}"] = (
+        lambda *a: model.prefill_layer(cfg, *a),
+        (sds((C, D)), sds((S, Hkv, hd)), sds((S, Hkv, hd)), sds((), I32),
+         sds((D, qd)), sds((D, kvd)), sds((D, kvd)), sds((qd, D)),
+         sds((D,)), sds((D,)), sds((D, N)),
+         sds((N, D, H)), sds((N, D, H)), sds((N, H, D))),
+        3,
+    )
+    return stages
+
+
+def router_diagnostics(cfg, w, tok, pairs, n_tokens=2048):
+    """Measured router-score concentration on real corpus tokens, layer 0
+    (sanity: top-k mass must be << 1 and top-1 dominant, DESIGN.md §7)."""
+    ids = []
+    for _, line in pairs:
+        ids.extend(tok.encode(line))
+        if len(ids) >= n_tokens:
+            break
+    ids = np.array(ids[:n_tokens], np.int32)
+    h = w["embed"][ids]
+    from .kernels import ref
+    scores = np.asarray(ref.router_scores_ref(
+        jnp.asarray(h), jnp.asarray(w["l0.n2"]), jnp.asarray(w["l0.router"])
+    ))
+    srt = np.sort(scores, axis=-1)[:, ::-1]
+    return {
+        "top1_mass": float(srt[:, 0].mean()),
+        "topk_mass": float(srt[:, : cfg.top_k].sum(axis=-1).mean()),
+        "top2k_mass": float(srt[:, : 2 * cfg.top_k].sum(axis=-1).mean()),
+    }
+
+
+def test_vectors(cfg, w, n_steps=3, batch=2, seed=0):
+    """Cross-language ground truth: teacher-forced decode steps with vanilla
+    routing through the staged graphs. The rust integration suite replays
+    the same tokens through the HLO artifacts and must match these logits.
+    """
+    from . import model as M
+
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(3, cfg.vocab, size=(n_steps, batch)).astype(np.int32)
+    shape = (2, batch, cfg.s_max, cfg.n_kv_heads, cfg.head_dim)
+    kvs = [jnp.zeros(shape) for _ in range(cfg.n_layers)]
+    wj = {k: jnp.asarray(v) for k, v in w.items()}
+    steps = []
+    for t in range(n_steps):
+        pos = jnp.full((batch,), t, jnp.int32)
+        lg, kvs, _ = M.full_decode_step_ref(
+            cfg, wj, jnp.asarray(toks[t]), kvs, pos)
+        lg = np.asarray(lg, np.float64)
+        steps.append({
+            "tokens": toks[t].tolist(),
+            "pos": int(t),
+            "logits_head": lg[:, :8].flatten().tolist(),
+            "logits_norm": float(np.linalg.norm(lg)),
+            "argmax": np.argmax(lg, axis=-1).tolist(),
+        })
+    return {"batch": batch, "steps": steps}
+
+
+def build_config(cfg, out_root, data_root, pairs, text, skip_hlo=False):
+    out = os.path.join(out_root, cfg.name)
+    os.makedirs(out, exist_ok=True)
+
+    print(f"[{cfg.name}] training BPE vocab ({cfg.vocab})...")
+    tok = bpe.train_tokenizer(text, cfg.vocab)
+    tok.save(os.path.join(out, "vocab.json"))
+
+    print(f"[{cfg.name}] token/domain affinity + weights...")
+    aff = weights.token_affinity_from_corpus(
+        tok, pairs, cfg.vocab, cfg.n_domains, corpus.DOMAINS
+    )
+    w = weights.init(cfg, aff, seed=0)
+    np.savez(os.path.join(out, "weights.npz"), **w)
+
+    diag = router_diagnostics(cfg, w, tok, pairs)
+    print(f"[{cfg.name}] router concentration: {diag}")
+
+    print(f"[{cfg.name}] test vectors...")
+    with open(os.path.join(out, "testvec.json"), "w") as f:
+        json.dump(test_vectors(cfg, w), f)
+
+    stages = stage_specs(cfg)
+    manifest = {
+        "config": cfg.to_dict(),
+        "weights": "weights.npz",
+        "vocab": "vocab.json",
+        "router_diag": diag,
+        "stages": {},
+    }
+    if not skip_hlo:
+        t0 = time.time()
+        for i, (name, (fn, args, n_out)) in enumerate(stages.items()):
+            fname = f"{name}.hlo.txt"
+            text_hlo = to_hlo_text(fn, *args, return_tuple=n_out > 1)
+            assert "custom-call" not in text_hlo, f"{name}: custom-call in HLO"
+            with open(os.path.join(out, fname), "w") as f:
+                f.write(text_hlo)
+            manifest["stages"][name] = {"file": fname, "outputs": n_out}
+            if (i + 1) % 20 == 0:
+                print(f"[{cfg.name}] lowered {i + 1}/{len(stages)} "
+                      f"({time.time() - t0:.1f}s)")
+        print(f"[{cfg.name}] lowered {len(stages)} stages "
+              f"in {time.time() - t0:.1f}s")
+    else:
+        for name, (_, _, n_out) in stages.items():
+            manifest["stages"][name] = {"file": f"{name}.hlo.txt", "outputs": n_out}
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", action="append", default=[])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--data", default="../data")
+    ap.add_argument("--corpus-lines", type=int, default=20000)
+    ap.add_argument("--skip-hlo", action="store_true",
+                    help="manifest/weights/vocab only (fast tests)")
+    args = ap.parse_args()
+
+    names = list(configs.CONFIGS) if args.all else (args.config or ["tiny", "small"])
+    os.makedirs(args.out, exist_ok=True)
+    os.makedirs(args.data, exist_ok=True)
+
+    corpus_txt = os.path.join(args.data, "corpus.txt")
+    corpus_dom = os.path.join(args.data, "corpus.domains")
+    if not (os.path.exists(corpus_txt) and os.path.exists(corpus_dom)):
+        print(f"generating corpus ({args.corpus_lines} lines)...")
+        corpus.write(corpus_txt, corpus_dom, n_lines=args.corpus_lines, seed=0)
+    with open(corpus_txt) as f:
+        lines = f.read().splitlines()
+    with open(corpus_dom) as f:
+        doms = f.read().splitlines()
+    pairs = list(zip(doms, lines))
+    text = "\n".join(lines)
+
+    for name in names:
+        build_config(configs.get(name), args.out, args.data, pairs, text,
+                     skip_hlo=args.skip_hlo)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Byte-level BPE: trained here (build time), executed in rust (request path).
+
+GPT-2-style training over word types (frequency-weighted pair counts over
+unique whitespace-delimited words), which keeps training fast even in pure
+python. The emitted `vocab.json` holds the merge list in rank order; the
+rust tokenizer (`rust/src/util/bpe.rs`) re-implements encode/decode from the
+same merge table and is tested for round-trip identity against this module.
+
+Token id layout:
+    0 = <pad>, 1 = <bos>, 2 = <eos>, 3..258 = raw bytes 0..255,
+    259.. = merges in rank order (capped at config.vocab).
+"""
+
+import collections
+import json
+
+PAD, BOS, EOS = 0, 1, 2
+N_SPECIAL = 3
+
+
+def _word_types(text, max_bytes=400_000):
+    """Frequency-counted whitespace-word types over a prefix of the corpus."""
+    sample = text[:max_bytes]
+    counts = collections.Counter()
+    for w in sample.split():
+        # word + trailing space marker so merges can cross into separators
+        counts[w + " "] += 1
+    return counts
+
+
+def train(text, vocab_size):
+    """Return merge list [(left_bytes, right_bytes), ...] in rank order."""
+    n_merges = vocab_size - N_SPECIAL - 256
+    if n_merges <= 0:
+        return []
+    words = {
+        tuple(bytes([b]) for b in w.encode("utf-8")): c
+        for w, c in _word_types(text).items()
+    }
+    merges = []
+    for _ in range(n_merges):
+        pairs = collections.Counter()
+        for sym, c in words.items():
+            for a, b in zip(sym, sym[1:]):
+                pairs[(a, b)] += c
+        if not pairs:
+            break
+        (a, b), cnt = pairs.most_common(1)[0]
+        if cnt < 2:
+            break
+        merges.append((a, b))
+        ab = a + b
+        new_words = {}
+        for sym, c in words.items():
+            out, i = [], 0
+            while i < len(sym):
+                if i + 1 < len(sym) and sym[i] == a and sym[i + 1] == b:
+                    out.append(ab)
+                    i += 2
+                else:
+                    out.append(sym[i])
+                    i += 1
+            new_words[tuple(out)] = new_words.get(tuple(out), 0) + c
+        words = new_words
+    return merges
+
+
+class Tokenizer:
+    def __init__(self, merges, vocab_size):
+        self.vocab_size = vocab_size
+        self.merges = list(merges)
+        # token string (bytes) -> id
+        self.token_ids = {}
+        for b in range(256):
+            self.token_ids[bytes([b])] = N_SPECIAL + b
+        for i, (a, b) in enumerate(self.merges):
+            self.token_ids[a + b] = N_SPECIAL + 256 + i
+        self.id_tokens = {v: k for k, v in self.token_ids.items()}
+        self.rank = {(a, b): i for i, (a, b) in enumerate(self.merges)}
+
+    def encode(self, text):
+        sym = [bytes([b]) for b in text.encode("utf-8")]
+        while len(sym) > 1:
+            best, best_rank = None, None
+            for i in range(len(sym) - 1):
+                r = self.rank.get((sym[i], sym[i + 1]))
+                if r is not None and (best_rank is None or r < best_rank):
+                    best, best_rank = i, r
+            if best is None:
+                break
+            sym[best:best + 2] = [sym[best] + sym[best + 1]]
+        return [self.token_ids[s] for s in sym]
+
+    def decode(self, ids):
+        out = b""
+        for t in ids:
+            if t < N_SPECIAL:
+                continue
+            out += self.id_tokens[t]
+        return out.decode("utf-8", errors="replace")
+
+    def save(self, path):
+        with open(path, "w") as f:
+            json.dump(
+                {
+                    "vocab_size": self.vocab_size,
+                    "merges": [
+                        [a.decode("latin-1"), b.decode("latin-1")]
+                        for a, b in self.merges
+                    ],
+                },
+                f,
+            )
+
+    @classmethod
+    def load(cls, path):
+        with open(path) as f:
+            d = json.load(f)
+        merges = [
+            (a.encode("latin-1"), b.encode("latin-1")) for a, b in d["merges"]
+        ]
+        return cls(merges, d["vocab_size"])
+
+
+def train_tokenizer(text, vocab_size):
+    return Tokenizer(train(text, vocab_size), vocab_size)

@@ -1,0 +1,113 @@
+"""Model configurations for the oea-serve reproduction.
+
+Scaled-down Qwen3-style MoE configs (see DESIGN.md §3/§7 for the
+substitution table). `small` stands in for Qwen3-30B-A3B, `base` for
+Qwen3-235B-A22B, `tiny` is for tests.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_experts: int          # N
+    top_k: int              # k (default experts per token)
+    d_expert: int           # expert hidden dim H (SwiGLU)
+    n_q_heads: int
+    n_kv_heads: int
+    head_dim: int
+    vocab: int              # BPE vocab size (incl. specials + 256 bytes)
+    s_max: int              # max sequence length (KV cache capacity)
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+    n_domains: int = 4      # synthetic corpus / router-affinity domains
+    # serving-time shape buckets (CUDA-graph analogy; §6 of the paper)
+    batch_buckets: tuple = (1, 2, 4, 8, 16, 32)
+    t_buckets: tuple = ()   # active-expert count buckets, default N/8 steps
+    prefill_chunk: int = 64
+
+    def __post_init__(self):
+        if not self.t_buckets:
+            step = max(1, self.n_experts // 8)
+            object.__setattr__(
+                self, "t_buckets",
+                tuple(range(step, self.n_experts + 1, step)),
+            )
+        assert self.d_model == self.n_q_heads * self.head_dim, (
+            "d_model must equal n_q_heads * head_dim"
+        )
+        assert self.n_q_heads % self.n_kv_heads == 0
+        assert self.top_k <= self.n_experts
+
+    @property
+    def q_dim(self):
+        return self.n_q_heads * self.head_dim
+
+    @property
+    def kv_dim(self):
+        return self.n_kv_heads * self.head_dim
+
+    def to_dict(self):
+        d = asdict(self)
+        d["batch_buckets"] = list(self.batch_buckets)
+        d["t_buckets"] = list(self.t_buckets)
+        return d
+
+
+TINY = ModelConfig(
+    name="tiny",
+    n_layers=2,
+    d_model=64,
+    n_experts=8,
+    top_k=2,
+    d_expert=32,
+    n_q_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    vocab=512,
+    s_max=128,
+    batch_buckets=(1, 2, 4, 8),
+    prefill_chunk=16,
+)
+
+# Qwen3-30B-A3B slot: 48L/D2048/N128/k8/H768 -> 8L/D256/N32/k8/H128.
+SMALL = ModelConfig(
+    name="small",
+    n_layers=8,
+    d_model=256,
+    n_experts=32,
+    top_k=8,
+    d_expert=128,
+    n_q_heads=8,
+    n_kv_heads=2,
+    head_dim=32,
+    vocab=1024,
+    s_max=256,
+)
+
+# Qwen3-235B-A22B slot: 96L/D4096/N128/k8/H1536 -> 12L/D384/N64/k8/H192.
+BASE = ModelConfig(
+    name="base",
+    n_layers=12,
+    d_model=384,
+    n_experts=64,
+    top_k=8,
+    d_expert=192,
+    n_q_heads=8,
+    n_kv_heads=2,
+    head_dim=48,
+    vocab=1024,
+    s_max=256,
+    batch_buckets=(1, 8, 16, 32),
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, BASE)}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown config {name!r}; have {sorted(CONFIGS)}")
+    return CONFIGS[name]

@@ -1,0 +1,129 @@
+"""Deterministic multi-domain synthetic corpus.
+
+Substitution for FineWeb-Edu (see DESIGN.md §3): the paper's cross-entropy
+experiments need (a) a token stream with enough length, and (b) domain
+structure so batch composition matters (§6 of the paper: similar tokens
+overlap experts; diverse batches enlarge S_base). We generate four domains
+(prose, code, math, qa) from seeded stochastic grammars. The generator is
+the single source of truth — rust reads the emitted `data/corpus.txt` and
+`data/corpus.domains`.
+"""
+
+import random
+
+DOMAINS = ("prose", "code", "math", "qa")
+
+_PROSE_NOUNS = (
+    "river city forest library mountain harbour engine lantern meadow "
+    "village garden bridge winter market traveller archive painter valley "
+    "orchard compass island monastery festival caravan telescope".split()
+)
+_PROSE_ADJS = (
+    "quiet ancient luminous distant careful sprawling weathered gentle "
+    "crowded narrow forgotten amber restless deliberate hollow vivid".split()
+)
+_PROSE_VERBS = (
+    "carried described remembered sheltered crossed measured revealed "
+    "followed gathered outlined replaced sketched guarded echoed".split()
+)
+
+_CODE_TYPES = "int float str bool vec map list chan buf ptr".split()
+_CODE_NAMES = (
+    "count total index buffer cursor offset handle state queue node "
+    "parent result cache limit window batch token expert score".split()
+)
+_CODE_OPS = ["+", "-", "*", "/", "%", "<<", ">>", "&", "|"]
+
+_MATH_FUNCS = "sin cos exp log sqrt tanh sigma phi".split()
+
+_QA_TOPICS = (
+    "the capital the boiling point the average depth the orbital period "
+    "the tallest peak the oldest bridge the largest moon the speed".split(" the ")
+)
+
+
+def _prose_sentence(rng):
+    a1, a2 = rng.choice(_PROSE_ADJS), rng.choice(_PROSE_ADJS)
+    n1, n2 = rng.choice(_PROSE_NOUNS), rng.choice(_PROSE_NOUNS)
+    v = rng.choice(_PROSE_VERBS)
+    forms = (
+        f"The {a1} {n1} {v} the {a2} {n2}.",
+        f"Beyond the {n1}, a {a1} {n2} {v} its {a2} shape.",
+        f"Every {n1} in the {a2} {n2} {v} something {a1}.",
+        f"A {a1} {n1} {v} near the {n2} at dusk.",
+    )
+    return rng.choice(forms)
+
+
+def _code_line(rng):
+    t = rng.choice(_CODE_TYPES)
+    a, b, c = (rng.choice(_CODE_NAMES) for _ in range(3))
+    op = rng.choice(_CODE_OPS)
+    k = rng.randrange(128)
+    forms = (
+        f"let {a}: {t} = {b} {op} {k};",
+        f"fn get_{a}({b}: {t}) -> {t} {{ {b} {op} {k} }}",
+        f"if {a} {op} {k} > {b} {{ {c} += 1; }}",
+        f"for i in 0..{k} {{ {a}[i] = {b} {op} i; }}",
+        f"assert_eq!({a}.len(), {b} {op} {k});",
+    )
+    return rng.choice(forms)
+
+
+def _math_line(rng):
+    f, g = rng.choice(_MATH_FUNCS), rng.choice(_MATH_FUNCS)
+    a, b, c = rng.randrange(2, 99), rng.randrange(2, 99), rng.randrange(2, 9)
+    forms = (
+        f"{f}(x) = {a} x^{c} + {b}",
+        f"solve {a} y + {b} = {f}({b}) for y",
+        f"integral of {f}(t) {g}(t) dt from 0 to {c}",
+        f"{a} * {b} = {a * b} and {a} + {b} = {a + b}",
+        f"let {f} = {g} composed {c} times; evaluate at {a}",
+    )
+    return rng.choice(forms)
+
+
+def _qa_line(rng):
+    t = rng.choice(_QA_TOPICS).strip()
+    n = rng.choice(_PROSE_NOUNS)
+    k = rng.randrange(3, 400)
+    forms = (
+        f"Q: what is the {t} of the {n}? A: about {k}.",
+        f"Q: which {n} has the {t} of {k}? A: the {rng.choice(_PROSE_ADJS)} one.",
+        f"Q: does the {n} change the {t}? A: {'yes' if k % 2 else 'no'}, by {k}.",
+    )
+    return rng.choice(forms)
+
+
+_GEN = {
+    "prose": _prose_sentence,
+    "code": _code_line,
+    "math": _math_line,
+    "qa": _qa_line,
+}
+
+
+def generate(n_lines=20000, seed=0, domain_mix=None):
+    """Yield (domain, line) pairs deterministically.
+
+    domain_mix: optional dict domain->weight; default uniform.
+    """
+    rng = random.Random(seed)
+    domains = list(DOMAINS)
+    weights = [1.0] * len(domains)
+    if domain_mix:
+        weights = [float(domain_mix.get(d, 0.0)) for d in domains]
+    out = []
+    for _ in range(n_lines):
+        d = rng.choices(domains, weights)[0]
+        out.append((d, _GEN[d](rng)))
+    return out
+
+
+def write(path_txt, path_domains, n_lines=20000, seed=0):
+    pairs = generate(n_lines=n_lines, seed=seed)
+    with open(path_txt, "w") as f_txt, open(path_domains, "w") as f_dom:
+        for d, line in pairs:
+            f_txt.write(line + "\n")
+            f_dom.write(d + "\n")
+    return len(pairs)

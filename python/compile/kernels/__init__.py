@@ -1,0 +1,11 @@
+"""L1 Pallas kernels (build-time; lowered into the L2 HLO artifacts).
+
+All kernels are lowered with interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers to plain HLO ops (verified:
+zero custom-calls in the emitted text). Numerics are validated against the
+pure-jnp oracles in `ref.py` by `python/tests/`.
+"""
+
+from .moe_ffn import moe_ffn_gather
+from .router import router_scores
+from .attention import decode_attention

@@ -1,0 +1,62 @@
+"""Single-token GQA decode attention (flash-decode shape).
+
+Grid over batch rows; each step loads one sequence's K/V cache tile
+HBM->VMEM and computes a masked softmax-attention for the one query token.
+Per-row masking uses the row's position: key slots > pos are masked, so
+stale cache beyond the sequence length (or a freed slot) never contributes.
+
+VMEM per grid step = 2·S·Hkv·hd·4B + q/o tiles (paper-scale:
+2·512·4·128·4B = 2 MB) — comfortably within budget; at long S the S axis
+would be tiled with an online-softmax accumulator, which interpret-mode
+correctness here does not require (S_max <= 512 in every config).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, *, scale, n_rep):
+    q = q_ref[0]            # [Hq, hd]
+    k = k_ref[0]            # [S, Hkv, hd]
+    v = v_ref[0]            # [S, Hkv, hd]
+    pos = pos_ref[0, 0]
+    S = k.shape[0]
+    Hq, hd = q.shape
+
+    # expand kv heads to q heads (GQA)
+    k = jnp.repeat(k, n_rep, axis=1)          # [S, Hq, hd]
+    v = jnp.repeat(v, n_rep, axis=1)
+    logits = jnp.einsum("qd,sqd->qs", q, k) * scale   # [Hq, S]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (Hq, S), 1)
+    logits = jnp.where(idx <= pos, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.einsum("qs,sqd->qd", p, v)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, interpret=True):
+    """q: [B, Hq, hd]; k/v_cache: [B, S, Hkv, hd]; pos: [B] i32 (index of the
+    current token's slot in the cache; attends to slots 0..=pos).
+    Returns [B, Hq, hd]."""
+    B, Hq, hd = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    n_rep = Hq // Hkv
+    scale = 1.0 / (hd ** 0.5)
+    pos2 = pos.reshape(B, 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, n_rep=n_rep),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Hq, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, S, Hkv, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, S, Hkv, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, pos2)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every L1 kernel (the correctness ground truth)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(x, wg, wu, wd, comb, ids):
+    """Dense reference of the gather kernel: iterate the active list."""
+    out = jnp.zeros_like(x)
+    for j in range(ids.shape[0]):
+        e = ids[j]
+        act = jax.nn.silu(x @ wg[e]) * (x @ wu[e])
+        out = out + comb[:, e][:, None] * (act @ wd[e])
+    return out
+
+
+def moe_ffn_gathered(x, wg, wu, wd, comb, ids):
+    """XLA-friendly expression of the gather kernel's exact schedule: gather
+    the T active experts' weights once, then batch the SwiGLU contractions
+    over the T axis. Same math as `moe_ffn_gather` (additive over ids, so
+    zero-combine padding entries contribute nothing); compute and weight
+    traffic both stay proportional to T, but the CPU lowering is three
+    GEMMs instead of a T-iteration while loop whose state copies dominate
+    (xla_extension 0.5.1 CPU copies loop-carried operands every iteration —
+    ~2 ms/expert at the `small` config). Used by model.moe_apply for the
+    CPU artifacts; the Pallas kernel stays the TPU-shaped artifact and is
+    asserted equal in python/tests."""
+    wg_t = wg[ids]                       # [T, D, H] — only active experts
+    wu_t = wu[ids]
+    wd_t = wd[ids]
+    cw = comb[:, ids]                    # [B, T]
+    g = jnp.einsum("bd,tdh->bth", x, wg_t)
+    u = jnp.einsum("bd,tdh->bth", x, wu_t)
+    act = jax.nn.silu(g) * u
+    y = jnp.einsum("bth,thd->btd", act, wd_t)
+    return jnp.einsum("bt,btd->bd", cw, y)
+
+
+def moe_ffn_dense_ref(x, wg, wu, wd, comb):
+    """Fully dense reference: run ALL experts, weight by comb. Equals the
+    gather kernel whenever `ids` covers every column where comb != 0."""
+    act = jax.nn.silu(jnp.einsum("bd,ndh->bnh", x, wg)) * jnp.einsum(
+        "bd,ndh->bnh", x, wu
+    )
+    y = jnp.einsum("bnh,nhd->bnd", act, wd)
+    return jnp.einsum("bn,bnd->bd", comb, y)
+
+
+def rmsnorm_ref(h, scale, eps=1e-6):
+    rms = jnp.sqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return h / rms * scale
+
+
+def router_scores_ref(h, scale, w, eps=1e-6):
+    return jax.nn.softmax(rmsnorm_ref(h, scale, eps) @ w, axis=-1)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    B, Hq, hd = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    n_rep = Hq // Hkv
+    k = jnp.repeat(k_cache, n_rep, axis=2)   # [B, S, Hq, hd]
+    v = jnp.repeat(v_cache, n_rep, axis=2)
+    logits = jnp.einsum("bqd,bsqd->bqs", q, k) / (hd ** 0.5)
+    idx = jnp.arange(S)[None, None, :]
+    mask = idx <= pos[:, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqs,bsqd->bqd", p, v)

@@ -1,0 +1,34 @@
+"""Fused RMSNorm -> router projection -> softmax scores.
+
+One block: B×D activations, D-vector norm scale and D×N router weights all
+fit VMEM at every config in DESIGN.md §7 (paper scale: 2048·128·4B = 1 MB).
+Emitting *normalized scores* (not logits) matches Eq. 1: the rust router
+renormalizes over the selected set S_i, preserving learned preferences.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(h_ref, scale_ref, w_ref, o_ref, *, eps):
+    h = h_ref[...]
+    rms = jnp.sqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    hn = h / rms * scale_ref[...]
+    logits = hn @ w_ref[...]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def router_scores(h, scale, w, *, eps=1e-6, interpret=True):
+    """h: [B, D] (pre-norm hidden), scale: [D], w: [D, N] -> scores [B, N]."""
+    B, D = h.shape
+    N = w.shape[1]
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((B, N), h.dtype),
+        interpret=interpret,
+    )(h, scale, w)

@@ -1,0 +1,244 @@
+"""L2: Qwen3-style MoE transformer in JAX, split into request-path stages.
+
+The paper's L3 contribution (OEA routing) sits BETWEEN the router and the
+expert execution, so the decode step is exported as separate HLO stages and
+the rust coordinator runs the pipeline:
+
+    embed -> [ layer_pre -> (rust routing) -> moe_apply ] x L -> logits
+
+Per-layer weights are runtime *arguments* (device buffers uploaded once by
+rust), so one `layer_pre` executable serves every layer. Stage signatures
+are frozen here and mirrored in `rust/src/model/stages.rs`; the manifest
+records shapes only.
+
+All shapes are static per (batch-bucket b, T-bucket t) — the serving-time
+analog of SGLang capturing CUDA graphs per batch size (paper §6).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# decode stages
+# ---------------------------------------------------------------------------
+
+def embed(tokens, emb):
+    """tokens [B] i32, emb [V, D] -> hidden [B, D]."""
+    return (jnp.take(emb, tokens, axis=0),)
+
+
+def rope(x, pos, theta):
+    """x [B, Hx, hd], pos [B] i32 -> rotated x. Pairs (i, i+half)."""
+    B, H, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)  # [half]
+    ang = pos[:, None].astype(jnp.float32) * freqs[None, :]         # [B, half]
+    cos = jnp.cos(ang)[:, None, :]                                  # [B, 1, half]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def layer_pre(cfg, hidden, kv, pos,
+              wq, wk, wv, wo, n1, n2, router_w):
+    """Attention sub-block + router scores for ONE layer.
+
+    hidden [B, D]; kv [2, B, S, Hkv, hd] (K at index 0, V at index 1 — one
+    combined buffer so the decode path needs a single cache_append per
+    layer); pos [B] i32 (cache slot of the current token; padding rows use
+    pos=0).
+
+    Returns SMALL outputs only — (h [B,D], scores [B,N], k_new [B,Hkv,hd],
+    v_new [B,Hkv,hd]) — because the rust runtime must decompose the output
+    tuple through a host literal (PJRT here does not untuple); the big KV
+    cache stays device-resident and is updated by the single-output
+    `cache_append` stage instead. The attention inside uses the updated
+    cache (recomputing the cheap row select).
+    """
+    B, D = hidden.shape
+    h1 = ref.rmsnorm_ref(hidden, n1, cfg.rms_eps)
+    q = (h1 @ wq).reshape(B, cfg.n_q_heads, cfg.head_dim)
+    k = (h1 @ wk).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+    v = (h1 @ wv).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    kc2 = _row_update(kv[0], k, pos)
+    vc2 = _row_update(kv[1], v, pos)
+    # batched-einsum attention (ref oracle's formulation): the Pallas
+    # decode-attention kernel's grid-per-row interpret lowering pays the
+    # 0.5.1 CPU while-loop state-copy tax on the full cache; the einsum
+    # form is identical math (asserted in python/tests) with no loop.
+    attn = ref.decode_attention_ref(q, kc2, vc2, pos)      # [B, Hq, hd]
+    h = hidden + attn.reshape(B, -1) @ wo
+    scores = kernels.router_scores(h, n2, router_w, eps=cfg.rms_eps)
+    return h, scores, k, v
+
+
+def _row_update(cache, new, pos):
+    """cache [B, S, Hkv, hd], new [B, Hkv, hd], pos [B] -> cache with
+    row b's slot pos[b] replaced. Expressed as a select over an iota mask:
+    the equivalent scatter lowers to a ~10x slower op under the 0.5.1 CPU
+    runtime."""
+    S = cache.shape[1]
+    mask = (jnp.arange(S)[None, :] == pos[:, None])[:, :, None, None]
+    return jnp.where(mask, new[:, None], cache)
+
+
+def cache_append(kv, k_new, v_new, pos):
+    """kv [2, B, S, Hkv, hd], k_new/v_new [B, Hkv, hd], pos [B] i32 -> kv'.
+
+    Device-side KV append for both K and V in one executable (single
+    output => no tuple => the cache buffer never round-trips through the
+    host on the decode path).
+    """
+    S = kv.shape[2]
+    mask = (jnp.arange(S)[None, :] == pos[:, None])[None, :, :, None, None]
+    new = jnp.stack([k_new, v_new])[:, :, None]   # [2, B, 1, Hkv, hd]
+    return (jnp.where(mask, new, kv),)
+
+
+def moe_apply(cfg, h, comb, ids, wg, wu, wd, n2, *, use_pallas=False):
+    """MoE sub-block: h + expert-FFN(rmsnorm(h), comb over ids).
+
+    comb [B, N] is the routing policy's renormalized combine matrix (zero
+    outside each token's expert set); ids [t] is the padded active list.
+
+    The CPU artifacts lower the gathered-einsum formulation (see
+    ref.moe_ffn_gathered — identical schedule/math, ~4x faster under the
+    0.5.1 CPU runtime); `use_pallas=True` lowers the Pallas kernel instead
+    (the TPU-shaped artifact, also what python/tests verify against).
+    """
+    hn = ref.rmsnorm_ref(h, n2, cfg.rms_eps)
+    if use_pallas:
+        y = kernels.moe_ffn_gather(hn, wg, wu, wd, comb, ids)
+    else:
+        y = ref.moe_ffn_gathered(hn, wg, wu, wd, comb, ids)
+    return (h + y,)
+
+
+def logits_head(cfg, h, final_norm, unemb):
+    """h [B, D] -> logits [B, V]."""
+    hn = ref.rmsnorm_ref(h, final_norm, cfg.rms_eps)
+    return (hn @ unemb,)
+
+
+def insert_row(kv, row_k, row_v, slot):
+    """kv [2, B, S, Hkv, hd], row_k/row_v [S, Hkv, hd], slot i32 -> kv'.
+
+    Device-side KV install: a prefilled sequence joins a decode batch
+    without a host round trip.
+    """
+    row = jnp.stack([row_k, row_v])[:, None]      # [2, 1, S, Hkv, hd]
+    return (jax.lax.dynamic_update_slice(kv, row, (0, slot, 0, 0, 0)),)
+
+
+def extract_row(kv, slot):
+    """kv [2, B, S, Hkv, hd], slot i32 -> rows [2, S, Hkv, hd]."""
+    _, B, S, Hkv, hd = kv.shape
+    return (jax.lax.dynamic_slice(
+        kv, (0, slot, 0, 0, 0), (2, 1, S, Hkv, hd)
+    )[:, 0],)
+
+
+# ---------------------------------------------------------------------------
+# prefill (vanilla routing in-graph; the paper applies OEA to decode only)
+# ---------------------------------------------------------------------------
+
+def vanilla_combine(scores, k):
+    """Top-k one-hot combine matrix with Eq. 1 renormalization.
+
+    Implemented as k rounds of argmax+mask instead of `jax.lax.top_k`: the
+    TopK HLO op gained a `largest=` attribute that the xla_extension 0.5.1
+    text parser (the rust loader) rejects; argmax lowers to plain reduces.
+    """
+    comb = jnp.zeros_like(scores)
+    masked = scores
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)                     # [B]
+        onehot = jax.nn.one_hot(idx, scores.shape[-1], dtype=scores.dtype)
+        comb = comb + onehot * scores
+        masked = masked - onehot * 1e9
+    return comb / (jnp.sum(comb, axis=-1, keepdims=True) + 1e-9)
+
+
+def prefill_attention(q, kc, vc, pos0, cfg):
+    """Causal (in-chunk) + cache-prefix attention for a C-token chunk of one
+    sequence. q [C, Hq, hd]; kc/vc [S, Hkv, hd] hold positions < pos0 + C."""
+    C = q.shape[0]
+    S = kc.shape[0]
+    n_rep = cfg.n_q_heads // cfg.n_kv_heads
+    kk = jnp.repeat(kc, n_rep, axis=1)        # [S, Hq, hd]
+    vv = jnp.repeat(vc, n_rep, axis=1)
+    logits = jnp.einsum("qhd,shd->hqs", q, kk) / (cfg.head_dim ** 0.5)
+    qi = jnp.arange(C)[:, None]
+    si = jnp.arange(S)[None, :]
+    mask = (si <= qi + pos0)[None]            # causal over absolute positions
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqs,shd->qhd", p, vv)
+
+
+def prefill_layer(cfg, h, kc, vc, pos0,
+                  wq, wk, wv, wo, n1, n2, router_w, wg, wu, wd):
+    """One layer over a C-token chunk of ONE sequence, vanilla top-k MoE.
+
+    h [C, D]; kc/vc [S, Hkv, hd]; pos0 scalar i32 (chunk offset within the
+    sequence). Pad tokens beyond the prompt only write cache slots that are
+    overwritten or never attended to. Returns (h', kc', vc').
+    """
+    C, D = h.shape
+    h1 = ref.rmsnorm_ref(h, n1, cfg.rms_eps)
+    q = (h1 @ wq).reshape(C, cfg.n_q_heads, cfg.head_dim)
+    k = (h1 @ wk).reshape(C, cfg.n_kv_heads, cfg.head_dim)
+    v = (h1 @ wv).reshape(C, cfg.n_kv_heads, cfg.head_dim)
+    chunk_pos = pos0 + jnp.arange(C, dtype=jnp.int32)
+    q = rope(q, chunk_pos, cfg.rope_theta)
+    k = rope(k, chunk_pos, cfg.rope_theta)
+    kc2 = jax.lax.dynamic_update_slice(kc, k, (pos0, 0, 0))
+    vc2 = jax.lax.dynamic_update_slice(vc, v, (pos0, 0, 0))
+    attn = prefill_attention(q, kc2, vc2, pos0, cfg)
+    h = h + attn.reshape(C, -1) @ wo
+    scores = ref.router_scores_ref(h, n2, router_w, cfg.rms_eps)
+    comb = vanilla_combine(scores, cfg.top_k)
+    hn = ref.rmsnorm_ref(h, n2, cfg.rms_eps)
+    y = ref.moe_ffn_dense_ref(hn, wg, wu, wd, comb)
+    return h + y, kc2, vc2
+
+
+def embed_seq(tokens, emb):
+    """tokens [C] i32 -> hidden [C, D] (same graph as decode embed)."""
+    return (jnp.take(emb, tokens, axis=0),)
+
+
+# ---------------------------------------------------------------------------
+# full-model reference (python tests only; never exported)
+# ---------------------------------------------------------------------------
+
+def full_decode_step_ref(cfg, w, tokens, kvs, pos):
+    """One decode step through the staged graphs with vanilla routing.
+    kvs: per-layer combined caches [2, B, S, Hkv, hd].
+    Returns (logits, new kvs, per-layer scores)."""
+    (h,) = embed(tokens, w["embed"])
+    all_scores, new_kvs = [], []
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        h, scores, k_new, v_new = layer_pre(
+            cfg, h, kvs[l], pos,
+            w[p + "wq"], w[p + "wk"], w[p + "wv"], w[p + "wo"],
+            w[p + "n1"], w[p + "n2"], w[p + "router"],
+        )
+        (kv2,) = cache_append(kvs[l], k_new, v_new, pos)
+        comb = vanilla_combine(scores, cfg.top_k)
+        ids = jnp.arange(cfg.n_experts, dtype=jnp.int32)
+        (h,) = moe_apply(cfg, h, comb, ids,
+                         w[p + "wg"], w[p + "wu"], w[p + "wd"], w[p + "n2"])
+        all_scores.append(scores)
+        new_kvs.append(kv2)
+    (lg,) = logits_head(cfg, h, w["final_norm"], w["unembed"])
+    return lg, new_kvs, all_scores

@@ -1,0 +1,97 @@
+"""BPE tokenizer + synthetic corpus generator."""
+
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import bpe, corpus
+
+
+SAMPLE = "\n".join(line for _, line in corpus.generate(n_lines=400, seed=1))
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return bpe.train_tokenizer(SAMPLE, 512)
+
+
+def test_roundtrip_corpus_lines(tok):
+    for _, line in corpus.generate(n_lines=50, seed=2):
+        assert tok.decode(tok.encode(line)) == line
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(max_size=80))
+def test_roundtrip_arbitrary_text(tok, s):
+    assert tok.decode(tok.encode(s)) == s
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.binary(max_size=40))
+def test_byte_fallback_never_raises(tok, b):
+    # any byte string can be encoded via the 256 byte tokens
+    ids = tok.encode(b.decode("latin-1"))
+    assert all(0 <= i < tok.vocab_size for i in ids)
+
+
+def test_ids_in_range(tok):
+    ids = tok.encode(SAMPLE[:2000])
+    assert max(ids) < 512 and min(ids) >= bpe.N_SPECIAL
+
+
+def test_merges_reduce_length(tok):
+    ids = tok.encode("the quiet river carried the ancient lantern.")
+    assert len(ids) < len("the quiet river carried the ancient lantern.".encode())
+
+
+def test_save_load_identical(tok, tmp_path):
+    p = tmp_path / "vocab.json"
+    tok.save(p)
+    tok2 = bpe.Tokenizer.load(p)
+    s = "Q: what is the capital of the village? A: about 42."
+    assert tok.encode(s) == tok2.encode(s)
+    with open(p) as f:
+        d = json.load(f)
+    assert d["vocab_size"] == 512
+
+
+def test_merge_prefix_stability():
+    """Training with a larger vocab must yield the smaller vocab's merges
+    as a prefix (aot relies on greedy BPE determinism)."""
+    m1 = bpe.train(SAMPLE, 300)
+    m2 = bpe.train(SAMPLE, 330)
+    assert m2[: len(m1)] == m1
+
+
+def test_corpus_deterministic():
+    a = corpus.generate(n_lines=100, seed=3)
+    b = corpus.generate(n_lines=100, seed=3)
+    assert a == b
+    c = corpus.generate(n_lines=100, seed=4)
+    assert a != c
+
+
+def test_corpus_domains_balanced():
+    pairs = corpus.generate(n_lines=4000, seed=0)
+    from collections import Counter
+
+    counts = Counter(d for d, _ in pairs)
+    assert set(counts) == set(corpus.DOMAINS)
+    for d in corpus.DOMAINS:
+        assert counts[d] > 4000 / len(corpus.DOMAINS) * 0.7
+
+
+def test_corpus_domain_mix():
+    pairs = corpus.generate(n_lines=200, seed=0, domain_mix={"code": 1.0})
+    assert all(d == "code" for d, _ in pairs)
+
+
+def test_corpus_write(tmp_path):
+    pt, pd = tmp_path / "c.txt", tmp_path / "c.dom"
+    n = corpus.write(pt, pd, n_lines=50, seed=0)
+    assert n == 50
+    lines = pt.read_text().splitlines()
+    doms = pd.read_text().splitlines()
+    assert len(lines) == len(doms) == 50
+    assert all(d in corpus.DOMAINS for d in doms)

@@ -1,0 +1,129 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+"""Gather-based MoE FFN Pallas kernel vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import moe_ffn_gather
+from compile.kernels import ref
+
+
+def make_inputs(B, D, H, N, T, dtype=jnp.float32, seed=0, sparse_comb=True, k=2):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (B, D), dtype)
+    wg = jax.random.normal(ks[1], (N, D, H), dtype) * 0.2
+    wu = jax.random.normal(ks[2], (N, D, H), dtype) * 0.2
+    wd = jax.random.normal(ks[3], (N, H, D), dtype) * 0.2
+    ids = jax.random.permutation(ks[4], N)[:T].astype(jnp.int32)
+    if sparse_comb:
+        # combine mass only on a k-subset of the active list per token
+        comb = np.zeros((B, N), np.float32)
+        rng = np.random.default_rng(seed)
+        for b in range(B):
+            chosen = rng.choice(np.asarray(ids), size=min(k, T), replace=False)
+            w = rng.random(len(chosen)).astype(np.float32)
+            comb[b, chosen] = w / w.sum()
+        comb = jnp.asarray(comb, dtype)
+    else:
+        comb = jax.nn.softmax(jax.random.normal(ks[5], (B, N))).astype(dtype)
+    return x, wg, wu, wd, comb, ids
+
+
+def test_matches_ref_basic():
+    args = make_inputs(8, 32, 16, 16, 4)
+    got = moe_ffn_gather(*args)
+    want = ref.moe_ffn_ref(*args)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_matches_dense_ref_when_ids_cover_comb():
+    x, wg, wu, wd, comb, ids = make_inputs(4, 16, 8, 8, 8, sparse_comb=False)
+    ids = jnp.arange(8, dtype=jnp.int32)  # full coverage
+    got = moe_ffn_gather(x, wg, wu, wd, comb, ids)
+    want = ref.moe_ffn_dense_ref(x, wg, wu, wd, comb)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_zero_comb_gives_zero_output():
+    x, wg, wu, wd, _, ids = make_inputs(4, 16, 8, 8, 4)
+    comb = jnp.zeros((4, 8), jnp.float32)
+    got = moe_ffn_gather(x, wg, wu, wd, comb, ids)
+    np.testing.assert_allclose(got, jnp.zeros_like(x))
+
+
+def test_duplicate_padding_ids_counts_twice_only_with_mass():
+    # padding convention: repeated id is harmless iff its comb column is 0
+    x, wg, wu, wd, comb, _ = make_inputs(4, 16, 8, 8, 4)
+    comb = comb.at[:, 3].set(0.0)
+    ids = jnp.array([3, 3, 3, 5], jnp.int32)
+    got = moe_ffn_gather(x, wg, wu, wd, comb, ids)
+    want = ref.moe_ffn_ref(x, wg, wu, wd, comb, jnp.array([5], jnp.int32))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_single_expert_single_token():
+    args = make_inputs(1, 8, 4, 4, 1)
+    got = moe_ffn_gather(*args)
+    want = ref.moe_ffn_ref(*args)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_t_equals_n_full_activation():
+    args = make_inputs(8, 16, 8, 8, 8)
+    got = moe_ffn_gather(*args)
+    want = ref.moe_ffn_ref(*args)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    B=st.sampled_from([1, 2, 4, 8, 16]),
+    D=st.sampled_from([8, 16, 32]),
+    H=st.sampled_from([4, 8, 16]),
+    N=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 1000),
+    data=st.data(),
+)
+def test_hypothesis_shapes(B, D, H, N, seed, data):
+    T = data.draw(st.integers(1, N))
+    args = make_inputs(B, D, H, N, T, seed=seed)
+    got = moe_ffn_gather(*args)
+    want = ref.moe_ffn_ref(*args)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_hypothesis_bf16(seed):
+    args = make_inputs(4, 16, 8, 8, 4, dtype=jnp.bfloat16, seed=seed)
+    got = moe_ffn_gather(*args).astype(jnp.float32)
+    want = ref.moe_ffn_ref(*args).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_output_dtype_matches_input():
+    args = make_inputs(2, 8, 4, 4, 2, dtype=jnp.bfloat16)
+    assert moe_ffn_gather(*args).dtype == jnp.bfloat16
+
+
+def test_gathered_einsum_matches_kernel():
+    """ref.moe_ffn_gathered (the CPU artifact's formulation) must equal the
+    Pallas kernel (the TPU artifact) on identical inputs."""
+    for seed in range(4):
+        args = make_inputs(8, 32, 16, 16, 6, seed=seed)
+        got = ref.moe_ffn_gathered(*args)
+        want = moe_ffn_gather(*args)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_gathered_einsum_handles_duplicate_padding():
+    x, wg, wu, wd, comb, _ = make_inputs(4, 16, 8, 8, 4)
+    comb = comb.at[:, 3].set(0.0)
+    ids = jnp.array([3, 3, 5, 3], jnp.int32)
+    got = ref.moe_ffn_gathered(x, wg, wu, wd, comb, ids)
+    want = ref.moe_ffn_ref(x, wg, wu, wd, comb, jnp.array([5], jnp.int32))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

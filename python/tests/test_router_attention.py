@@ -1,0 +1,105 @@
+"""Router and decode-attention Pallas kernels vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import router_scores, decode_attention
+from compile.kernels import ref
+
+
+def test_router_matches_ref():
+    key = jax.random.PRNGKey(0)
+    h = jax.random.normal(key, (8, 32))
+    scale = jnp.ones(32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    got = router_scores(h, scale, w)
+    want = ref.router_scores_ref(h, scale, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_router_rows_sum_to_one():
+    h = jax.random.normal(jax.random.PRNGKey(2), (4, 16)) * 3.0
+    got = router_scores(h, jnp.ones(16), jax.random.normal(jax.random.PRNGKey(3), (16, 8)))
+    np.testing.assert_allclose(jnp.sum(got, -1), jnp.ones(4), rtol=1e-5)
+
+
+def test_router_scale_sensitivity():
+    # the norm scale must actually be applied
+    h = jax.random.normal(jax.random.PRNGKey(4), (4, 16))
+    w = jax.random.normal(jax.random.PRNGKey(5), (16, 8))
+    a = router_scores(h, jnp.ones(16), w)
+    b = router_scores(h, jnp.full((16,), 2.0), w)
+    assert not np.allclose(a, b)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    B=st.sampled_from([1, 4, 16]),
+    D=st.sampled_from([8, 32]),
+    N=st.sampled_from([8, 32]),
+    seed=st.integers(0, 500),
+)
+def test_router_hypothesis(B, D, N, seed):
+    k = jax.random.PRNGKey(seed)
+    h = jax.random.normal(k, (B, D)) * 2.0
+    scale = jnp.ones(D) + 0.1 * jax.random.normal(jax.random.PRNGKey(seed + 1), (D,))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 2), (D, N))
+    got = router_scores(h, scale, w)
+    want = ref.router_scores_ref(h, scale, w)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-6)
+
+
+def make_attn(B, S, Hq, Hkv, hd, seed=0, pos=None):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+    q = jax.random.normal(ks[0], (B, Hq, hd))
+    kc = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    vc = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    if pos is None:
+        pos = jax.random.randint(ks[3], (B,), 0, S)
+    return q, kc, vc, pos.astype(jnp.int32)
+
+
+def test_attention_matches_ref():
+    q, kc, vc, pos = make_attn(4, 32, 4, 2, 16)
+    got = decode_attention(q, kc, vc, pos)
+    want = ref.decode_attention_ref(q, kc, vc, pos)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_pos_zero_attends_only_first_slot():
+    q, kc, vc, _ = make_attn(2, 16, 4, 2, 8, seed=3)
+    pos = jnp.zeros(2, jnp.int32)
+    got = decode_attention(q, kc, vc, pos)
+    # with only one key slot, output must equal v at slot 0 (repeated heads)
+    want = jnp.repeat(vc[:, 0], 2, axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_ignores_future_slots():
+    q, kc, vc, pos = make_attn(2, 16, 4, 2, 8, seed=4,
+                               pos=jnp.array([5, 9]))
+    got1 = decode_attention(q, kc, vc, pos)
+    # scribble on slots beyond pos: output must not change
+    kc2 = kc.at[0, 6:].set(99.0).at[1, 10:].set(-7.0)
+    vc2 = vc.at[0, 6:].set(13.0).at[1, 10:].set(5.0)
+    got2 = decode_attention(q, kc2, vc2, pos)
+    np.testing.assert_allclose(got1, got2, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    B=st.sampled_from([1, 2, 8]),
+    S=st.sampled_from([4, 16, 64]),
+    heads=st.sampled_from([(2, 1), (4, 2), (8, 2), (4, 4)]),
+    hd=st.sampled_from([4, 16]),
+    seed=st.integers(0, 500),
+)
+def test_attention_hypothesis(B, S, heads, hd, seed):
+    Hq, Hkv = heads
+    q, kc, vc, pos = make_attn(B, S, Hq, Hkv, hd, seed=seed)
+    got = decode_attention(q, kc, vc, pos)
+    want = ref.decode_attention_ref(q, kc, vc, pos)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)

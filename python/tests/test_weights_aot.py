@@ -1,0 +1,102 @@
+"""Weight init structure + AOT stage specs / HLO lowering smoke tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, bpe, configs, corpus, model, weights
+from compile.kernels import ref
+
+
+CFG = configs.TINY
+
+
+def test_weight_names_complete():
+    w = weights.init(CFG, seed=0)
+    assert set(w) == set(weights.weight_names(CFG))
+
+
+def test_weight_shapes():
+    w = weights.init(CFG, seed=0)
+    D, V, N, H = CFG.d_model, CFG.vocab, CFG.n_experts, CFG.d_expert
+    assert w["embed"].shape == (V, D)
+    assert w["unembed"].shape == (D, V)
+    assert w["l0.router"].shape == (D, N)
+    assert w["l0.wg"].shape == (N, D, H)
+    assert w["l0.wd"].shape == (N, H, D)
+    assert w["l1.wq"].shape == (D, CFG.q_dim)
+    assert all(v.dtype == np.float32 for v in w.values())
+
+
+def test_weights_deterministic():
+    a = weights.init(CFG, seed=0)
+    b = weights.init(CFG, seed=0)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    c = weights.init(CFG, seed=1)
+    assert not np.allclose(a["embed"], c["embed"])
+
+
+def test_router_concentration_realistic():
+    """Top-k softmax mass must be meaningfully below 1 (else pruning is
+    free and the reproduction degenerates) and above uniform."""
+    pairs = corpus.generate(n_lines=300, seed=0)
+    text = "\n".join(l for _, l in pairs)
+    tok = bpe.train_tokenizer(text, CFG.vocab)
+    aff = weights.token_affinity_from_corpus(
+        tok, pairs, CFG.vocab, CFG.n_domains, corpus.DOMAINS)
+    w = weights.init(CFG, aff, seed=0)
+    diag = aot.router_diagnostics(CFG, w, tok, pairs, n_tokens=512)
+    uniform_topk = CFG.top_k / CFG.n_experts
+    assert diag["topk_mass"] < 0.98
+    assert diag["topk_mass"] > uniform_topk * 1.2
+    assert diag["top1_mass"] > 1.5 / CFG.n_experts
+
+
+def test_token_affinity_rows_normalized():
+    pairs = corpus.generate(n_lines=100, seed=0)
+    text = "\n".join(l for _, l in pairs)
+    tok = bpe.train_tokenizer(text, CFG.vocab)
+    aff = weights.token_affinity_from_corpus(
+        tok, pairs, CFG.vocab, CFG.n_domains, corpus.DOMAINS)
+    np.testing.assert_allclose(aff.sum(1), np.ones(CFG.vocab), rtol=1e-5)
+
+
+def test_stage_specs_cover_all_buckets():
+    stages = aot.stage_specs(CFG)
+    for b in CFG.batch_buckets:
+        assert f"embed_b{b}" in stages
+        assert f"layer_pre_b{b}" in stages
+        assert f"cache_append_b{b}" in stages
+        assert f"logits_b{b}" in stages
+        assert f"insert_row_b{b}" in stages
+        for t in CFG.t_buckets:
+            assert f"moe_b{b}_t{t}" in stages
+    assert f"prefill_layer_c{CFG.prefill_chunk}" in stages
+
+
+def test_stage_output_arities():
+    stages = aot.stage_specs(CFG)
+    assert stages["layer_pre_b2"][2] == 4
+    assert stages[f"prefill_layer_c{CFG.prefill_chunk}"][2] == 3
+    assert stages["moe_b2_t4"][2] == 1
+    assert stages["cache_append_b2"][2] == 1
+
+
+@pytest.mark.parametrize("name", ["embed_b1", "moe_b2_t4", "insert_row_b1",
+                                  "cache_append_b2"])
+def test_lowering_has_no_custom_calls(name):
+    stages = aot.stage_specs(CFG)
+    fn, args, n_out = stages[name]
+    text = aot.to_hlo_text(fn, *args, return_tuple=n_out > 1)
+    assert "custom-call" not in text
+    assert "ENTRY" in text
+
+
+def test_layer_pre_lowering_smoke():
+    stages = aot.stage_specs(CFG)
+    fn, args, n_out = stages["layer_pre_b2"]
+    assert n_out == 4
+    text = aot.to_hlo_text(fn, *args, return_tuple=True)
+    assert "custom-call" not in text
+    assert "ENTRY" in text

@@ -1,0 +1,158 @@
+//! Figures 6 / 7 / 9 — the hyperparameter ablations behind "simplifying
+//! OEA" (paper §4.1):
+//!   Fig 6: maxP ∈ {8, 16, 32, N}  -> maxP < N hurts; maxP = N best
+//!   Fig 7: k_max around k         -> k_max = k best, larger degrades
+//!   Fig 9: p = 1 vs p < 1         -> top-p adaptivity buys nothing
+//!
+//!     cargo bench --bench fig_ablations            # all three
+//!     cargo bench --bench fig_ablations -- maxp    # one group
+
+use std::path::Path;
+
+use oea_serve::eval;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::runtime::Runtime;
+use oea_serve::util::bench::Table;
+use oea_serve::util::bpe::Tokenizer;
+use oea_serve::util::corpus::Corpus;
+use oea_serve::util::rng::Rng;
+use oea_serve::util::stats;
+
+fn frontier_rows(
+    pts: &[(String, f64, f64)],
+) -> Vec<(String, f64, f64)> {
+    let coords: Vec<(f64, f64)> = pts.iter().map(|p| (p.1, p.2)).collect();
+    stats::pareto_min_min(&coords)
+        .into_iter()
+        .map(|i| pts[i].clone())
+        .collect()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let which = args
+        .iter()
+        .find(|a| ["maxp", "kmax", "topp"].contains(&a.as_str()))
+        .cloned()
+        .unwrap_or_else(|| "all".into());
+    let fast = std::env::var("OEA_BENCH_FAST").is_ok();
+
+    let rt = Runtime::load(Path::new("artifacts"), "small").expect("make artifacts");
+    let vocab = rt.manifest.dir.join(&rt.manifest.vocab_file);
+    let tok = Tokenizer::load(&vocab).unwrap();
+    let corpus = Corpus::load(Path::new("data")).unwrap();
+    let runner = ModelRunner::new(rt);
+    let c = runner.cfg().clone();
+    let k = c.top_k;
+    let n = c.n_experts;
+    let b = 16;
+    let positions = if fast { 12 } else { 24 };
+
+    let mut rng = Rng::new(9);
+    let seqs = eval::sequences_from_corpus(&corpus, &tok, &mut rng, b, positions, true);
+    let vanilla =
+        eval::forced_run(&runner, &seqs, positions, Policy::Vanilla { k }, true).unwrap();
+    let mut evaluate = |pol: Policy| -> (f64, f64) {
+        let run = eval::forced_run(&runner, &seqs, positions, pol, true).unwrap();
+        let r = eval::ce_compare(&seqs, &run, &vanilla);
+        (stats::round_to(r.avg_t, 0.1), stats::round_to(r.kl_vanilla, 0.0005))
+    };
+
+    // ---- Fig 6: maxP ablation --------------------------------------------
+    if which == "all" || which == "maxp" {
+        let mut table = Table::new(
+            "Figure 6: maxP ablation (Pareto frontier per maxP; k_max = k)",
+            &["maxP", "policy (frontier)", "avg T", "KL"],
+        );
+        for max_p in [k, n / 4, n / 2, n] {
+            let mut pts = Vec::new();
+            for k0 in [1, 2, 3, 4, 5] {
+                let pol = Policy::Oea { k0, p: 1.0, k_max: k, max_p };
+                let (t, q) = evaluate(pol);
+                pts.push((pol.label(), t, q));
+            }
+            for (label, t, q) in frontier_rows(&pts) {
+                table.row(vec![
+                    max_p.to_string(),
+                    label,
+                    format!("{t:.1}"),
+                    format!("{q:.4}"),
+                ]);
+            }
+            eprintln!("maxP={max_p} done");
+        }
+        table.print();
+        println!("expected: maxP = N dominates; maxP = k strictly worse (paper Fig 6)\n");
+    }
+
+    // ---- Fig 7: k_max ablation -------------------------------------------
+    if which == "all" || which == "kmax" {
+        let mut table = Table::new(
+            "Figure 7: k_max ablation (Pareto frontier per k_max; maxP = N)",
+            &["k_max", "policy (frontier)", "avg T", "KL"],
+        );
+        for k_max in [k - 2, k - 1, k, k + 2, k + 4] {
+            let mut pts = Vec::new();
+            for k0 in [1, 2, 3, 4, 5] {
+                if k0 > k_max {
+                    continue;
+                }
+                let pol = Policy::Oea { k0, p: 1.0, k_max, max_p: n };
+                let (t, q) = evaluate(pol);
+                pts.push((pol.label(), t, q));
+            }
+            for (label, t, q) in frontier_rows(&pts) {
+                table.row(vec![
+                    k_max.to_string(),
+                    label,
+                    format!("{t:.1}"),
+                    format!("{q:.4}"),
+                ]);
+            }
+            eprintln!("k_max={k_max} done");
+        }
+        table.print();
+        println!("expected: k_max = k ({k}) on the frontier; larger k_max degrades (paper Fig 7)\n");
+    }
+
+    // ---- Fig 9: p ablation -----------------------------------------------
+    if which == "all" || which == "topp" {
+        let mut table = Table::new(
+            "Figure 9: top-p ablation (pruned / OEA x p=1 / p<1 frontiers)",
+            &["group", "policy (frontier)", "avg T", "KL"],
+        );
+        let ps = [0.5, 0.7, 0.9];
+        for (group, use_oea, use_topp) in [
+            ("pruned, p=1", false, false),
+            ("pruned, p<1", false, true),
+            ("OEA, p=1", true, false),
+            ("OEA, p<1", true, true),
+        ] {
+            let mut pts = Vec::new();
+            for k0 in [2, 3, 4, 5, 6] {
+                let pvals: &[f64] = if use_topp { &ps } else { &[1.0] };
+                for &p in pvals {
+                    let pol = if use_oea {
+                        Policy::Oea { k0, p, k_max: k, max_p: n }
+                    } else {
+                        Policy::Pruned { k0, p }
+                    };
+                    let (t, q) = evaluate(pol);
+                    pts.push((pol.label(), t, q));
+                }
+            }
+            for (label, t, q) in frontier_rows(&pts) {
+                table.row(vec![
+                    group.into(),
+                    label,
+                    format!("{t:.1}"),
+                    format!("{q:.4}"),
+                ]);
+            }
+            eprintln!("group {group} done");
+        }
+        table.print();
+        println!("expected: within each family the p=1 frontier ~matches p<1 (paper Fig 9)\n");
+    }
+}

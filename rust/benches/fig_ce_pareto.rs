@@ -1,0 +1,178 @@
+//! Figures 2/3/5/8: CE-delta vs avg-activated-experts Pareto frontiers.
+//!
+//! - Fig 2/5: pruned (Phase 1 only) vs OEA arms, per batch size — OEA's
+//!   frontier must dominate.
+//! - Fig 3/8: simplified OEA vs the general-hyperparameter arms — the
+//!   simplified frontier must match the best general settings.
+//!
+//! Quality axis: KL(vanilla || policy) per token (the CE-delta stand-in
+//! justified in DESIGN.md §3; the raw CE delta is also printed). Values
+//! rounded like the paper (quality to 0.005-analog, T to 0.1) before the
+//! frontier computation.
+//!
+//!     cargo bench --bench fig_ce_pareto
+//!     OEA_BENCH_FAST=1 cargo bench --bench fig_ce_pareto   # smaller grid
+
+use std::path::Path;
+
+use oea_serve::eval;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::runtime::Runtime;
+use oea_serve::util::bench::Table;
+use oea_serve::util::bpe::Tokenizer;
+use oea_serve::util::corpus::Corpus;
+use oea_serve::util::rng::Rng;
+use oea_serve::util::stats;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Family {
+    Pruned,
+    OeaSimplified,
+    OeaGeneral,
+}
+
+fn main() {
+    let fast = std::env::var("OEA_BENCH_FAST").is_ok();
+    let rt = Runtime::load(Path::new("artifacts"), "small").expect("make artifacts");
+    let vocab = rt.manifest.dir.join(&rt.manifest.vocab_file);
+    let tok = Tokenizer::load(&vocab).unwrap();
+    let corpus = Corpus::load(Path::new("data")).unwrap();
+    let runner = ModelRunner::new(rt);
+    let c = runner.cfg().clone();
+    let k = c.top_k;
+    let positions = if fast { 12 } else { 24 };
+    let batches: &[usize] = if fast { &[16] } else { &[4, 8, 16] };
+
+    // the arm grid (a condensed version of the paper's §4.1 sweep)
+    let mut arms: Vec<(Family, Policy)> = Vec::new();
+    for k0 in [1, 2, 3, 4, 5, 6, 8] {
+        arms.push((Family::Pruned, Policy::Pruned { k0, p: 1.0 }));
+        arms.push((Family::OeaSimplified, Policy::OeaSimplified { k0, k }));
+    }
+    if !fast {
+        for k0 in [2, 3, 4] {
+            for p in [0.7, 1.0] {
+                for k_max in [k - 1, k, k + 2] {
+                    for max_p in [8, c.n_experts] {
+                        arms.push((
+                            Family::OeaGeneral,
+                            Policy::Oea { k0, p, k_max, max_p },
+                        ));
+                    }
+                }
+            }
+            arms.push((Family::Pruned, Policy::Pruned { k0, p: 0.7 }));
+        }
+    }
+
+    for &b in batches {
+        let mut rng = Rng::new(b as u64);
+        // mixed-domain batches (the paper's FineWeb CE regime)
+        let seqs =
+            eval::sequences_from_corpus(&corpus, &tok, &mut rng, b, positions, true);
+        let vanilla =
+            eval::forced_run(&runner, &seqs, positions, Policy::Vanilla { k }, true)
+                .unwrap();
+
+        let mut pts: Vec<(Family, Policy, f64, f64, f64)> = Vec::new();
+        for &(fam, pol) in &arms {
+            let run = eval::forced_run(&runner, &seqs, positions, pol, true).unwrap();
+            let r = eval::ce_compare(&seqs, &run, &vanilla);
+            // paper-style rounding to de-crowd
+            let q = stats::round_to(r.kl_vanilla, 0.0005);
+            let t = stats::round_to(r.avg_t, 0.1);
+            pts.push((fam, pol, t, q, r.ce_delta));
+        }
+        eprintln!("B={b}: {} arms evaluated", pts.len());
+
+        // --- Fig 2/5: pruned vs OEA frontiers
+        for (title, fam_a, fam_b) in [(
+            format!("Figure 2/5 @ B={b}: Pareto frontiers, pruned vs OEA"),
+            Family::Pruned,
+            Family::OeaSimplified,
+        )] {
+            let mut table = Table::new(&title, &["family", "policy", "avg T", "KL", "CE delta"]);
+            for fam in [fam_a, fam_b] {
+                let sub: Vec<usize> = (0..pts.len()).filter(|&i| pts[i].0 == fam).collect();
+                let coords: Vec<(f64, f64)> =
+                    sub.iter().map(|&i| (pts[i].2, pts[i].3)).collect();
+                for &fi in &stats::pareto_min_min(&coords) {
+                    let i = sub[fi];
+                    table.row(vec![
+                        match fam {
+                            Family::Pruned => "pruned".into(),
+                            Family::OeaSimplified => "OEA".into(),
+                            Family::OeaGeneral => "OEA-general".into(),
+                        },
+                        pts[i].1.label(),
+                        format!("{:.1}", pts[i].2),
+                        format!("{:.4}", pts[i].3),
+                        format!("{:+.4}", pts[i].4),
+                    ]);
+                }
+            }
+            table.print();
+        }
+
+        // --- Fig 3/8: simplified OEA vs everything else
+        if !fast {
+            let mut table = Table::new(
+                &format!("Figure 3/8 @ B={b}: simplified OEA vs all other settings"),
+                &["group", "policy", "avg T", "KL"],
+            );
+            let simp: Vec<usize> = (0..pts.len())
+                .filter(|&i| pts[i].0 == Family::OeaSimplified)
+                .collect();
+            let rest: Vec<usize> = (0..pts.len())
+                .filter(|&i| pts[i].0 != Family::OeaSimplified)
+                .collect();
+            for (name, set) in [("simplified-OEA", simp), ("all-others", rest)] {
+                let coords: Vec<(f64, f64)> =
+                    set.iter().map(|&i| (pts[i].2, pts[i].3)).collect();
+                for &fi in &stats::pareto_min_min(&coords) {
+                    let i = set[fi];
+                    table.row(vec![
+                        name.into(),
+                        pts[i].1.label(),
+                        format!("{:.1}", pts[i].2),
+                        format!("{:.4}", pts[i].3),
+                    ]);
+                }
+            }
+            table.print();
+            println!(
+                "expected: the simplified-OEA frontier tracks the all-others \
+                 frontier (paper Fig 3/8)"
+            );
+        }
+
+        // dominance summary (the Fig 2 claim, checked numerically): for each
+        // pruned frontier point, the best OEA arm at <= same T has <= KL
+        let pruned_pts: Vec<&(Family, Policy, f64, f64, f64)> =
+            pts.iter().filter(|p| p.0 == Family::Pruned).collect();
+        let oea_pts: Vec<&(Family, Policy, f64, f64, f64)> = pts
+            .iter()
+            .filter(|p| p.0 == Family::OeaSimplified)
+            .collect();
+        let mut dominated = 0;
+        let mut total = 0;
+        for pp in &pruned_pts {
+            if let Some(best) = oea_pts
+                .iter()
+                .filter(|op| op.2 <= pp.2 + 0.05)
+                .map(|op| op.3)
+                .min_by(|a, b| a.partial_cmp(b).unwrap())
+            {
+                total += 1;
+                if best <= pp.3 + 1e-12 {
+                    dominated += 1;
+                }
+            }
+        }
+        println!(
+            "B={b}: OEA matches-or-beats pruned at equal T on {dominated}/{total} \
+             comparable points\n"
+        );
+    }
+}

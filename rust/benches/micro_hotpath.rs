@@ -1,0 +1,108 @@
+//! L3 hot-path microbenchmarks (DESIGN.md §8 targets):
+//! - route() for B=16, N=128 must stay < 5 µs — it sits between two device
+//!   calls on every layer of every decode step;
+//! - ScoreMatrix construction (the argsorts) < 10 µs at the same shape;
+//! - tokenizer / json / sampler sanity numbers for the serving edge.
+//!
+//!     cargo bench --bench micro_hotpath
+
+use oea_serve::coordinator::sampler;
+use oea_serve::model::pad_active_list;
+use oea_serve::moe::policy::{route, Policy, RoutingInput};
+use oea_serve::moe::ScoreMatrix;
+use oea_serve::util::bench::bench;
+use oea_serve::util::bpe::Tokenizer;
+use oea_serve::util::json::Json;
+use oea_serve::util::rng::Rng;
+
+fn random_scores(rng: &mut Rng, b: usize, n: usize) -> Vec<f32> {
+    let mut scores = vec![0.0f32; b * n];
+    for i in 0..b {
+        let row = &mut scores[i * n..(i + 1) * n];
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (2.0 * rng.gaussian()).exp() as f32;
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    scores
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let (b, n) = (16usize, 128usize);
+    let raw = random_scores(&mut rng, b, n);
+    let live = vec![true; b];
+
+    let r = bench("ScoreMatrix::new  B=16 N=128", 50, 2000, || {
+        std::hint::black_box(ScoreMatrix::new(b, n, raw.clone()));
+    });
+    r.print();
+
+    let sm = ScoreMatrix::new(b, n, raw.clone());
+    let input = RoutingInput { scores: &sm, live: &live, mask_padding: true };
+
+    let r_van = bench("route vanilla(k=8)  B=16 N=128", 50, 5000, || {
+        std::hint::black_box(route(Policy::Vanilla { k: 8 }, &input));
+    });
+    r_van.print();
+
+    let r_oea = bench("route OEA(k0=3,k=8)  B=16 N=128", 50, 5000, || {
+        std::hint::black_box(route(Policy::OeaSimplified { k0: 3, k: 8 }, &input));
+    });
+    r_oea.print();
+
+    let r_full = bench("route OEA-full(k0=3,p=.7,kmax=9)", 50, 5000, || {
+        std::hint::black_box(route(
+            Policy::Oea { k0: 3, p: 0.7, k_max: 9, max_p: 32 },
+            &input,
+        ));
+    });
+    r_full.print();
+
+    let r_lynx = bench("route lynx(t=32)  B=16 N=128", 50, 3000, || {
+        std::hint::black_box(route(Policy::Lynx { k: 8, target_t: 32 }, &input));
+    });
+    r_lynx.print();
+
+    let d = route(Policy::OeaSimplified { k0: 3, k: 8 }, &input);
+    let r_pad = bench("pad_active_list -> t_bucket", 50, 5000, || {
+        std::hint::black_box(pad_active_list(&d.active, 64, n));
+    });
+    r_pad.print();
+
+    // serving edge
+    let tok = Tokenizer::load(std::path::Path::new("artifacts/small/vocab.json"))
+        .expect("make artifacts");
+    let text = "The quiet river carried the ancient lantern across the meadow.";
+    bench("bpe encode 63 chars", 20, 2000, || {
+        std::hint::black_box(tok.encode(text));
+    })
+    .print();
+
+    let body = r#"{"prompt": "The quiet river", "max_tokens": 32, "temperature": 0.6}"#;
+    bench("json parse request body", 20, 5000, || {
+        std::hint::black_box(Json::parse(body).unwrap());
+    })
+    .print();
+
+    let logits: Vec<f32> = (0..1024).map(|_| rng.gaussian() as f32).collect();
+    let mut srng = Rng::new(1);
+    bench("sample top-p over 1024 logits", 20, 2000, || {
+        std::hint::black_box(sampler::sample(&logits, 0.6, 0.95, &mut srng));
+    })
+    .print();
+
+    println!(
+        "\ntarget (DESIGN.md §8): route() < 5 us at B=16 N=128 — got {:.2} us (OEA)",
+        r_oea.mean_us
+    );
+    assert!(
+        r_oea.mean_us < 50.0,
+        "routing hot path regressed badly: {} us",
+        r_oea.mean_us
+    );
+}

@@ -1,0 +1,149 @@
+//! Tables 3 + 4 (small config) and Tables 5 + 10 (base config): average
+//! MoE-layer latency and average activated experts per benchmark suite as
+//! a function of k0, under simplified OEA at B=16 — including the
+//! normalized-average rows the paper reports.
+//!
+//!     cargo bench --bench tab_latency
+//!     OEA_BENCH_CONFIG=base cargo bench --bench tab_latency
+
+use std::path::Path;
+
+use oea_serve::eval;
+use oea_serve::latency::H100Presets;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::runtime::Runtime;
+use oea_serve::util::bench::{fmt1, fmt2, Table};
+use oea_serve::util::bpe::Tokenizer;
+use oea_serve::util::corpus::Corpus;
+use oea_serve::util::rng::Rng;
+use oea_serve::util::stats;
+
+fn main() {
+    let cfg_name = std::env::var("OEA_BENCH_CONFIG").unwrap_or_else(|_| "small".into());
+    let fast = std::env::var("OEA_BENCH_FAST").is_ok();
+    let rt = Runtime::load(Path::new("artifacts"), &cfg_name).expect("make artifacts");
+    let vocab = rt.manifest.dir.join(&rt.manifest.vocab_file);
+    let tok = Tokenizer::load(&vocab).unwrap();
+    let corpus = Corpus::load(Path::new("data")).unwrap();
+    let runner = ModelRunner::new(rt);
+    let c = runner.cfg().clone();
+    let cost = H100Presets::for_config(&c.name);
+
+    let b = 16;
+    let positions = if fast { 12 } else { 24 };
+    let k0s: Vec<usize> = if c.name == "base" {
+        vec![3, 4, 5, 6]
+    } else {
+        vec![3, 4, 5, 6, 7]
+    };
+
+    // rows[suite][arm] = (avg_t, sim_us, measured_us)
+    let mut results: Vec<Vec<(f64, f64, f64)>> = Vec::new();
+    for (si, (suite, _, dom)) in eval::SUITES.iter().enumerate() {
+        let mut rng = Rng::new(1000 + si as u64);
+        // domain-pure batches: the paper's conservative serving regime
+        let mut seqs = eval::suite_prompts(&corpus, &tok, &mut rng, *dom, b, positions + 1);
+        for s in seqs.iter_mut() {
+            assert!(s.len() > positions);
+        }
+        let mut row = Vec::new();
+        for &k0 in &k0s {
+            let run = eval::forced_run(
+                &runner, &seqs, positions,
+                Policy::OeaSimplified { k0, k: c.top_k }, true,
+            )
+            .unwrap();
+            row.push((
+                run.avg_t,
+                cost.layer_us(run.avg_t.round() as usize, (b * k0) as usize),
+                run.avg_moe_us,
+            ));
+        }
+        // vanilla
+        let run = eval::forced_run(
+            &runner, &seqs, positions, Policy::Vanilla { k: c.top_k }, true,
+        )
+        .unwrap();
+        row.push((
+            run.avg_t,
+            cost.layer_us(run.avg_t.round() as usize, b * c.top_k),
+            run.avg_moe_us,
+        ));
+        results.push(row);
+        eprintln!("suite {suite} done");
+    }
+
+    let n_arms = k0s.len() + 1;
+    let mut header: Vec<String> = vec!["BENCHMARK".into()];
+    header.extend(k0s.iter().map(|k| format!("k0={k}")));
+    header.push("VANILLA".into());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+
+    let tab_lat = if c.name == "base" { "Table 5" } else { "Table 3" };
+    let tab_t = if c.name == "base" { "Table 10" } else { "Table 4" };
+
+    // --- latency table (simulated H100 µs, like the paper's H100 numbers)
+    let mut t1 = Table::new(
+        &format!("{tab_lat}: avg MoE layer latency, simulated H100 us ({}, B={b})", c.name),
+        &header_refs,
+    );
+    for (si, (suite, ..)) in eval::SUITES.iter().enumerate() {
+        let mut row = vec![suite.to_string()];
+        row.extend(results[si].iter().map(|r| fmt1(r.1)));
+        t1.row(row);
+    }
+    let avgs: Vec<f64> = (0..n_arms)
+        .map(|a| stats::mean(&results.iter().map(|r| r[a].1).collect::<Vec<_>>()))
+        .collect();
+    let mut row = vec!["AVERAGE".to_string()];
+    row.extend(avgs.iter().map(|&x| fmt1(x)));
+    t1.row(row);
+    let mut row = vec!["NORMALIZED AVERAGE".to_string()];
+    row.extend(avgs.iter().map(|&x| fmt2(x / avgs[n_arms - 1])));
+    t1.row(row);
+    t1.print();
+    println!("paper normalized averages (Tab 3):  0.61 0.69 0.77 0.86 0.93 1.00");
+    println!("paper normalized averages (Tab 5):  0.73 0.79 0.85 0.90 1.00");
+
+    // --- measured-CPU latency variant (same shape on this machine)
+    let mut t1m = Table::new(
+        &format!("{tab_lat}-measured: avg MoE layer latency, measured CPU us"),
+        &header_refs,
+    );
+    for (si, (suite, ..)) in eval::SUITES.iter().enumerate() {
+        let mut row = vec![suite.to_string()];
+        row.extend(results[si].iter().map(|r| fmt1(r.2)));
+        t1m.row(row);
+    }
+    let avgs_m: Vec<f64> = (0..n_arms)
+        .map(|a| stats::mean(&results.iter().map(|r| r[a].2).collect::<Vec<_>>()))
+        .collect();
+    let mut row = vec!["NORMALIZED AVERAGE".to_string()];
+    row.extend(avgs_m.iter().map(|&x| fmt2(x / avgs_m[n_arms - 1])));
+    t1m.row(row);
+    t1m.print();
+
+    // --- activated experts table
+    let mut t2 = Table::new(
+        &format!("{tab_t}: avg activated experts ({}, B={b})", c.name),
+        &header_refs,
+    );
+    for (si, (suite, ..)) in eval::SUITES.iter().enumerate() {
+        let mut row = vec![suite.to_string()];
+        row.extend(results[si].iter().map(|r| fmt1(r.0)));
+        t2.row(row);
+    }
+    let avg_t: Vec<f64> = (0..n_arms)
+        .map(|a| stats::mean(&results.iter().map(|r| r[a].0).collect::<Vec<_>>()))
+        .collect();
+    let mut row = vec!["AVERAGE".to_string()];
+    row.extend(avg_t.iter().map(|&x| fmt1(x)));
+    t2.row(row);
+    let mut row = vec!["NORMALIZED AVERAGE".to_string()];
+    row.extend(avg_t.iter().map(|&x| fmt2(x / avg_t[n_arms - 1])));
+    t2.row(row);
+    t2.print();
+    println!("paper normalized averages (Tab 4):  0.51 0.61 0.72 0.83 0.91 1.00");
+    println!("paper normalized averages (Tab 10): 0.53 0.64 0.74 0.83 1.00");
+}

@@ -1,0 +1,213 @@
+//! Model / artifact configuration, parsed from `artifacts/<cfg>/manifest.json`
+//! (written by `python/compile/aot.py`; single source of truth is
+//! `python/compile/configs.py`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Mirror of `python/compile/configs.py::ModelConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_expert: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub s_max: usize,
+    pub n_domains: usize,
+    pub batch_buckets: Vec<usize>,
+    pub t_buckets: Vec<usize>,
+    pub prefill_chunk: usize,
+}
+
+impl ModelConfig {
+    pub fn q_dim(&self) -> usize {
+        self.n_q_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Smallest batch bucket that fits `b` live rows (the CUDA-graph
+    /// padding analogy, paper §6).
+    pub fn bucket_for(&self, b: usize) -> Result<usize> {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .filter(|&x| x >= b)
+            .min()
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "batch {b} exceeds largest bucket {:?}",
+                    self.batch_buckets.iter().max()
+                ))
+            })
+    }
+
+    /// Smallest T bucket that fits `t` active experts (t=0 uses the
+    /// smallest bucket; the combine matrix is all-zero there).
+    pub fn t_bucket_for(&self, t: usize) -> Result<usize> {
+        self.t_buckets
+            .iter()
+            .copied()
+            .filter(|&x| x >= t.max(1))
+            .min()
+            .ok_or_else(|| Error::Config(format!("T={t} exceeds N={}", self.n_experts)))
+    }
+
+    fn from_json(v: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: v.get("name")?.as_str()?.to_string(),
+            n_layers: v.get("n_layers")?.as_usize()?,
+            d_model: v.get("d_model")?.as_usize()?,
+            n_experts: v.get("n_experts")?.as_usize()?,
+            top_k: v.get("top_k")?.as_usize()?,
+            d_expert: v.get("d_expert")?.as_usize()?,
+            n_q_heads: v.get("n_q_heads")?.as_usize()?,
+            n_kv_heads: v.get("n_kv_heads")?.as_usize()?,
+            head_dim: v.get("head_dim")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            s_max: v.get("s_max")?.as_usize()?,
+            n_domains: v.get("n_domains")?.as_usize()?,
+            batch_buckets: v.get("batch_buckets")?.usize_list()?,
+            t_buckets: v.get("t_buckets")?.usize_list()?,
+            prefill_chunk: v.get("prefill_chunk")?.as_usize()?,
+        })
+    }
+}
+
+/// One exported HLO stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageInfo {
+    pub file: String,
+    pub outputs: usize,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub stages: BTreeMap<String, StageInfo>,
+    pub weights_file: String,
+    pub vocab_file: String,
+}
+
+impl Manifest {
+    pub fn load(artifact_root: &Path, cfg_name: &str) -> Result<Manifest> {
+        let dir = artifact_root.join(cfg_name);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "{path:?}: {e} — run `make artifacts` (or artifacts-base) first"
+            ))
+        })?;
+        let v = Json::parse(&text)?;
+        let config = ModelConfig::from_json(v.get("config")?)?;
+        let mut stages = BTreeMap::new();
+        for (name, s) in v.get("stages")?.as_obj()? {
+            stages.insert(
+                name.clone(),
+                StageInfo {
+                    file: s.get("file")?.as_str()?.to_string(),
+                    outputs: s.get("outputs")?.as_usize()?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir,
+            config,
+            stages,
+            weights_file: v.get("weights")?.as_str()?.to_string(),
+            vocab_file: v.get("vocab")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn stage(&self, name: &str) -> Result<&StageInfo> {
+        self.stages
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("stage {name:?} not in manifest")))
+    }
+
+    pub fn stage_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.stage(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            n_layers: 2,
+            d_model: 64,
+            n_experts: 8,
+            top_k: 2,
+            d_expert: 32,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 16,
+            vocab: 512,
+            s_max: 128,
+            n_domains: 4,
+            batch_buckets: vec![1, 2, 4, 8],
+            t_buckets: vec![2, 4, 6, 8],
+            prefill_chunk: 16,
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let c = cfg();
+        assert_eq!(c.bucket_for(1).unwrap(), 1);
+        assert_eq!(c.bucket_for(3).unwrap(), 4);
+        assert_eq!(c.bucket_for(8).unwrap(), 8);
+        assert!(c.bucket_for(9).is_err());
+    }
+
+    #[test]
+    fn t_bucket_selection() {
+        let c = cfg();
+        assert_eq!(c.t_bucket_for(0).unwrap(), 2);
+        assert_eq!(c.t_bucket_for(2).unwrap(), 2);
+        assert_eq!(c.t_bucket_for(5).unwrap(), 6);
+        assert_eq!(c.t_bucket_for(8).unwrap(), 8);
+        assert!(c.t_bucket_for(9).is_err());
+    }
+
+    #[test]
+    fn parses_manifest_json() {
+        let j = r#"{
+          "config": {"name":"t","n_layers":2,"d_model":64,"n_experts":8,
+            "top_k":2,"d_expert":32,"n_q_heads":4,"n_kv_heads":2,
+            "head_dim":16,"vocab":512,"s_max":128,"n_domains":4,
+            "batch_buckets":[1,2],"t_buckets":[2,4],"prefill_chunk":16},
+          "weights": "weights.npz", "vocab": "vocab.json",
+          "stages": {"embed_b1": {"file": "embed_b1.hlo.txt", "outputs": 1}}
+        }"#;
+        let dir = std::env::temp_dir().join("oea_manifest_test");
+        std::fs::create_dir_all(dir.join("t")).unwrap();
+        std::fs::write(dir.join("t/manifest.json"), j).unwrap();
+        let m = Manifest::load(&dir, "t").unwrap();
+        assert_eq!(m.config.n_experts, 8);
+        assert_eq!(m.stage("embed_b1").unwrap().outputs, 1);
+        assert!(m.stage("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let err = Manifest::load(Path::new("/nonexistent"), "x").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,260 @@
+//! Continuous-batching serving engine.
+//!
+//! One [`Engine`] owns a slot-stable [`DecodeBatch`] sized by
+//! `max_running` (rounded up to a batch bucket — the padding regime of
+//! paper §6), admits queued requests into free slots after a chunked
+//! vanilla prefill, decodes all live slots in lockstep with the configured
+//! routing policy, samples, and retires finished sequences. MoE telemetry
+//! (T, load, measured µs, simulated H100 µs) is recorded per (layer, step).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::config::ModelConfig;
+use crate::coordinator::request::{FinishReason, FinishedRequest, GenRequest};
+use crate::coordinator::sampler;
+use crate::coordinator::slots::SlotAllocator;
+use crate::latency::CostModel;
+use crate::metrics::{MoeMetrics, RequestMetrics, StepRecord};
+use crate::model::{DecodeBatch, ModelRunner};
+use crate::moe::policy::Policy;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub policy: Policy,
+    /// §6 fix: zero padding rows' expert choices (true in all experiments
+    /// except the padding-anecdote reproduction)
+    pub mask_padding: bool,
+    /// SGLang's --max-running-requests
+    pub max_running: usize,
+    pub eos_token: Option<i32>,
+    /// simulated-latency preset (H100 µs per Eq. 2)
+    pub cost_model: CostModel,
+}
+
+struct SeqState {
+    req: GenRequest,
+    /// next token to feed (last sampled / last prompt-derived)
+    next_token: i32,
+    /// cache position the next token writes
+    pos: usize,
+    generated: Vec<i32>,
+    rng: Rng,
+    t_submit: Instant,
+    t_first_token: Option<Instant>,
+}
+
+pub struct Engine {
+    pub runner: ModelRunner,
+    pub cfg: EngineConfig,
+    batch: DecodeBatch,
+    slots: SlotAllocator,
+    running: Vec<Option<SeqState>>,
+    queue: VecDeque<(GenRequest, Instant)>,
+    pub moe: MoeMetrics,
+    pub requests: RequestMetrics,
+    step_no: u32,
+    t_start: Instant,
+}
+
+impl Engine {
+    pub fn new(runner: ModelRunner, cfg: EngineConfig) -> Result<Engine> {
+        let mc: &ModelConfig = runner.cfg();
+        if cfg.max_running == 0 {
+            return Err(Error::Config("max_running must be > 0".into()));
+        }
+        let bucket = mc.bucket_for(cfg.max_running)?;
+        let s_max = mc.s_max;
+        let batch = runner.new_batch(bucket)?;
+        Ok(Engine {
+            runner,
+            cfg,
+            batch,
+            slots: SlotAllocator::new(bucket, s_max),
+            running: (0..bucket).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            moe: MoeMetrics::default(),
+            requests: RequestMetrics::default(),
+            step_no: 0,
+            t_start: Instant::now(),
+        })
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.batch.bucket
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.slots.n_used()
+    }
+
+    pub fn n_queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.n_running() == 0 && self.queue.is_empty()
+    }
+
+    pub fn submit(&mut self, req: GenRequest) {
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    /// Admit queued requests into free slots (bounded by `max_running`),
+    /// running their prefill. Returns requests rejected as too long to
+    /// ever fit the KV capacity.
+    fn admit(&mut self) -> Result<Vec<FinishedRequest>> {
+        let mut rejected = Vec::new();
+        while self.slots.n_used() < self.cfg.max_running && !self.queue.is_empty() {
+            let (req, t_submit) = self.queue.pop_front().unwrap();
+            // a request that can never fit is finished immediately
+            if req.prompt.is_empty() || !self.slots.fits(req.prompt.len(), 1) {
+                rejected.push(FinishedRequest {
+                    id: req.id,
+                    prompt_len: req.prompt.len(),
+                    tokens: Vec::new(),
+                    reason: FinishReason::KvExhausted,
+                    ttft_us: 0.0,
+                    e2e_us: t_submit.elapsed().as_secs_f64() * 1e6,
+                });
+                continue;
+            }
+            let seq = self.runner.prefill(&req.prompt)?;
+            let slot = self.slots.alloc(req.id)?;
+            self.runner.install_prefilled(&mut self.batch, slot, &seq)?;
+            let mut rng = Rng::new(req.seed);
+            let first =
+                sampler::sample(&seq.last_logits, req.temperature, req.top_p, &mut rng) as i32;
+            let t_first = Instant::now();
+            self.requests.total_prompt_tokens += req.prompt.len();
+            let pos = req.prompt.len();
+            self.running[slot] = Some(SeqState {
+                req,
+                next_token: first,
+                pos,
+                generated: vec![first],
+                rng,
+                t_submit,
+                t_first_token: Some(t_first),
+            });
+        }
+        Ok(rejected)
+    }
+
+    /// One engine iteration: admit + one decode step over live slots.
+    /// Returns requests finished this step.
+    pub fn step(&mut self) -> Result<Vec<FinishedRequest>> {
+        let mut finished = self.admit()?;
+        let b = self.batch.bucket;
+        if self.slots.n_used() == 0 {
+            return Ok(finished);
+        }
+
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut live = vec![false; b];
+        for (i, s) in self.running.iter().enumerate() {
+            if let Some(s) = s {
+                tokens[i] = s.next_token;
+                pos[i] = s.pos as i32;
+                live[i] = true;
+            }
+        }
+
+        let t0 = Instant::now();
+        let out = self.runner.decode_step(
+            &mut self.batch,
+            &tokens,
+            &pos,
+            &live,
+            self.cfg.policy,
+            self.cfg.mask_padding,
+        )?;
+        let step_us = t0.elapsed().as_secs_f64() * 1e6;
+        self.requests.decode_step_us.push(step_us);
+
+        let n_live = self.slots.n_used();
+        for (l, ls) in out.layers.iter().enumerate() {
+            self.moe.record(StepRecord {
+                layer: l as u16,
+                step: self.step_no,
+                bucket: b as u16,
+                live: n_live as u16,
+                t: ls.t as u16,
+                load: ls.load as u32,
+                measured_us: ls.moe_us,
+                simulated_us: self.cfg.cost_model.layer_us(ls.t, ls.load),
+            });
+        }
+        self.step_no += 1;
+
+        // sample next tokens and retire finished sequences
+        let vocab = self.runner.cfg().vocab;
+        for i in 0..b {
+            let Some(mut s) = self.running[i].take() else { continue };
+            let row = &out.logits[i * vocab..(i + 1) * vocab];
+            let next =
+                sampler::sample(row, s.req.temperature, s.req.top_p, &mut s.rng) as i32;
+            s.pos += 1;
+            s.generated.push(next);
+            s.next_token = next;
+
+            let emitted_eos = self.cfg.eos_token == Some(next);
+            let hit_len = s.generated.len() >= s.req.max_new_tokens;
+            let kv_full = s.pos + 1 >= self.runner.cfg().s_max;
+            if emitted_eos || hit_len || kv_full {
+                let reason = if emitted_eos {
+                    FinishReason::Eos
+                } else if hit_len {
+                    FinishReason::Length
+                } else {
+                    FinishReason::KvExhausted
+                };
+                let mut toks = s.generated.clone();
+                if emitted_eos {
+                    toks.pop();
+                }
+                self.requests.n_finished += 1;
+                self.requests.total_generated_tokens += toks.len();
+                if let Some(tf) = s.t_first_token {
+                    self.requests
+                        .ttft_us
+                        .push((tf - s.t_submit).as_secs_f64() * 1e6);
+                }
+                self.requests
+                    .e2e_us
+                    .push(s.t_submit.elapsed().as_secs_f64() * 1e6);
+                finished.push(FinishedRequest {
+                    id: s.req.id,
+                    prompt_len: s.req.prompt.len(),
+                    tokens: toks,
+                    reason,
+                    ttft_us: s
+                        .t_first_token
+                        .map(|tf| (tf - s.t_submit).as_secs_f64() * 1e6)
+                        .unwrap_or(0.0),
+                    e2e_us: s.t_submit.elapsed().as_secs_f64() * 1e6,
+                });
+                self.slots.free(i)?;
+            } else {
+                self.running[i] = Some(s);
+            }
+        }
+        Ok(finished)
+    }
+
+    /// Drive until every submitted request finishes.
+    pub fn run_to_completion(&mut self) -> Result<Vec<FinishedRequest>> {
+        let mut done = Vec::new();
+        while !self.idle() {
+            done.extend(self.step()?);
+        }
+        Ok(done)
+    }
+
+    pub fn wall_us(&self) -> f64 {
+        self.t_start.elapsed().as_secs_f64() * 1e6
+    }
+}

@@ -1,0 +1,16 @@
+//! The serving coordinator: continuous batching over the decode pipeline.
+//!
+//! Mirrors the slice of SGLang the paper's experiments used: a request
+//! queue, `--max-running-requests`-bounded continuous batching with
+//! slot-stable decode batches, chunked prefill on admission, per-step
+//! sampling, and per-(layer, step) MoE telemetry. OEA (or any baseline
+//! policy) runs on the decode path only — prefill stays vanilla, exactly as
+//! in the paper (§4.2).
+
+pub mod engine;
+pub mod request;
+pub mod sampler;
+pub mod slots;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{FinishReason, FinishedRequest, GenRequest};

@@ -1,0 +1,49 @@
+//! Request types for the serving engine.
+
+/// A generation request (the engine's unit of admission).
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy
+    pub temperature: f32,
+    /// nucleus threshold; 1.0 disables
+    pub top_p: f32,
+    pub seed: u64,
+}
+
+impl GenRequest {
+    pub fn greedy(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            temperature: 0.0,
+            top_p: 1.0,
+            seed: id,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// hit max_new_tokens
+    Length,
+    /// emitted the EOS token
+    Eos,
+    /// prompt + generation reached the KV capacity (s_max)
+    KvExhausted,
+}
+
+/// A completed request with telemetry.
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub reason: FinishReason,
+    /// time to first token (prefill + first sample)
+    pub ttft_us: f64,
+    pub e2e_us: f64,
+}

@@ -1,0 +1,149 @@
+//! Token sampling: greedy / temperature / top-p nucleus (the paper's runs
+//! use temperature 0.6, top-p 0.95).
+
+use crate::util::rng::Rng;
+
+/// Sample a token id from a logits row.
+pub fn sample(logits: &[f32], temperature: f32, top_p: f32, rng: &mut Rng) -> usize {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // softmax with temperature (stable)
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f64> = logits
+        .iter()
+        .map(|&x| (((x - m) / temperature) as f64).exp())
+        .collect();
+    let z: f64 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+    if top_p < 1.0 {
+        nucleus_mask(&mut probs, top_p as f64);
+    }
+    let total: f64 = probs.iter().sum();
+    let mut t = rng.f64() * total;
+    for (i, &p) in probs.iter().enumerate() {
+        t -= p;
+        if t <= 0.0 && p > 0.0 {
+            return i;
+        }
+    }
+    argmax(logits)
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Zero out everything outside the smallest prefix (by descending prob)
+/// whose mass reaches `p`.
+fn nucleus_mask(probs: &mut [f64], p: f64) {
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    let mut acc = 0.0;
+    let mut cut = probs.len();
+    for (rank, &i) in idx.iter().enumerate() {
+        acc += probs[i];
+        if acc >= p {
+            cut = rank + 1;
+            break;
+        }
+    }
+    for &i in &idx[cut..] {
+        probs[i] = 0.0;
+    }
+}
+
+/// Log-softmax cross-entropy of `target` under a logits row (CE eval).
+pub fn cross_entropy(logits: &[f32], target: usize) -> f64 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let z: f64 = logits.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    -((logits[target] as f64) - m - z.ln())
+}
+
+/// KL(p || q) between two logits rows' softmax distributions.
+pub fn kl_divergence(p_logits: &[f32], q_logits: &[f32]) -> f64 {
+    assert_eq!(p_logits.len(), q_logits.len());
+    let lse = |xs: &[f32]| {
+        let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        m + xs.iter().map(|&x| ((x as f64) - m).exp()).sum::<f64>().ln()
+    };
+    let zp = lse(p_logits);
+    let zq = lse(q_logits);
+    let mut kl = 0.0;
+    for i in 0..p_logits.len() {
+        let lp = p_logits[i] as f64 - zp;
+        let lq = q_logits[i] as f64 - zq;
+        kl += lp.exp() * (lp - lq);
+    }
+    kl.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut rng = Rng::new(0);
+        let logits = [0.1, 3.0, -1.0, 2.9];
+        assert_eq!(sample(&logits, 0.0, 1.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let mut rng = Rng::new(1);
+        let logits = [1.0, 1.0, 1.0];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[sample(&logits, 1.0, 1.0, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Rng::new(2);
+        let logits = [0.0, 5.0, 0.0];
+        for _ in 0..100 {
+            assert_eq!(sample(&logits, 0.05, 1.0, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_p_excludes_tail() {
+        let mut rng = Rng::new(3);
+        // probs ~ [0.88, 0.11, 0.007, ...]: top_p=0.9 keeps only two
+        let logits = [5.0, 3.0, 0.2, 0.1];
+        for _ in 0..300 {
+            let s = sample(&logits, 1.0, 0.9, &mut rng);
+            assert!(s < 2, "sampled tail token {s}");
+        }
+    }
+
+    #[test]
+    fn cross_entropy_matches_manual() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let z: f64 = logits.iter().map(|&x| (x as f64).exp()).sum();
+        let want = -( (2.0f64) - z.ln());
+        assert!((cross_entropy(&logits, 1) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let l = [0.3f32, -1.0, 2.0, 0.0];
+        assert!(kl_divergence(&l, &l) < 1e-12);
+    }
+
+    #[test]
+    fn kl_positive_for_different() {
+        let p = [2.0f32, 0.0, 0.0];
+        let q = [0.0f32, 2.0, 0.0];
+        assert!(kl_divergence(&p, &q) > 0.1);
+    }
+}

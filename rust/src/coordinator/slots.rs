@@ -1,0 +1,108 @@
+//! Slot allocator for the decode batch's KV cache.
+//!
+//! Each running sequence owns one bucket slot holding `s_max` KV positions.
+//! The allocator tracks occupancy and per-slot capacity so the engine can
+//! refuse admission (queue the request) instead of corrupting a neighbor's
+//! cache, and retract sequences that run out of positions.
+
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub struct SlotAllocator {
+    /// slot -> request id
+    slots: Vec<Option<u64>>,
+    s_max: usize,
+}
+
+impl SlotAllocator {
+    pub fn new(n_slots: usize, s_max: usize) -> Self {
+        SlotAllocator { slots: vec![None; n_slots], s_max }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn n_used(&self) -> usize {
+        self.slots.len() - self.n_free()
+    }
+
+    pub fn owner(&self, slot: usize) -> Option<u64> {
+        self.slots[slot]
+    }
+
+    /// Capacity check: can a prompt of `prompt_len` with up to `gen` new
+    /// tokens fit a slot at all?
+    pub fn fits(&self, prompt_len: usize, gen: usize) -> bool {
+        prompt_len + gen <= self.s_max
+    }
+
+    /// Claim the lowest free slot for `req_id`.
+    pub fn alloc(&mut self, req_id: u64) -> Result<usize> {
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if s.is_none() {
+                *s = Some(req_id);
+                return Ok(i);
+            }
+        }
+        Err(Error::Engine("no free slots".into()))
+    }
+
+    pub fn free(&mut self, slot: usize) -> Result<u64> {
+        self.slots
+            .get_mut(slot)
+            .ok_or_else(|| Error::Engine(format!("slot {slot} out of range")))?
+            .take()
+            .ok_or_else(|| Error::Engine(format!("double free of slot {slot}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_lowest_first() {
+        let mut a = SlotAllocator::new(3, 16);
+        assert_eq!(a.alloc(10).unwrap(), 0);
+        assert_eq!(a.alloc(11).unwrap(), 1);
+        a.free(0).unwrap();
+        assert_eq!(a.alloc(12).unwrap(), 0);
+        assert_eq!(a.n_used(), 2);
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let mut a = SlotAllocator::new(1, 16);
+        a.alloc(1).unwrap();
+        assert!(a.alloc(2).is_err());
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mut a = SlotAllocator::new(2, 16);
+        let s = a.alloc(7).unwrap();
+        assert_eq!(a.free(s).unwrap(), 7);
+        assert!(a.free(s).is_err());
+    }
+
+    #[test]
+    fn capacity_check() {
+        let a = SlotAllocator::new(2, 128);
+        assert!(a.fits(100, 28));
+        assert!(!a.fits(100, 29));
+    }
+
+    #[test]
+    fn owner_tracking() {
+        let mut a = SlotAllocator::new(2, 8);
+        let s = a.alloc(42).unwrap();
+        assert_eq!(a.owner(s), Some(42));
+        a.free(s).unwrap();
+        assert_eq!(a.owner(s), None);
+    }
+}

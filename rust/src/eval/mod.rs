@@ -1,0 +1,272 @@
+//! Quality evaluation harnesses (the paper's §4.1 + §4.2 measurements,
+//! under the DESIGN.md §3 substitutions):
+//!
+//! - [`ce_eval`]: teacher-forced "parallel decode" over B sequences in
+//!   lockstep, exactly the paper's CE methodology — routing happens within
+//!   each position only. Reports CE (vs corpus tokens), CE delta and mean
+//!   KL vs a vanilla reference run, and the average activated experts.
+//! - [`fidelity_eval`]: greedy-generation agreement against vanilla routing
+//!   (the benchmark-accuracy stand-in for Tables 1/2).
+
+use crate::coordinator::sampler;
+use crate::model::ModelRunner;
+use crate::moe::policy::Policy;
+use crate::util::error::Result;
+
+/// Per-position logits of a teacher-forced run, for reuse as reference.
+pub struct ForcedRun {
+    pub b: usize,
+    pub positions: usize,
+    pub vocab: usize,
+    /// `[positions][b * vocab]`
+    pub logits: Vec<Vec<f32>>,
+    pub avg_t: f64,
+    pub avg_load: f64,
+    /// mean measured µs of the MoE stage per layer-step
+    pub avg_moe_us: f64,
+}
+
+/// Run `positions` teacher-forced lockstep decode steps over `b` sequences
+/// (`tokens[i]` must hold at least `positions + 1` entries).
+pub fn forced_run(
+    runner: &ModelRunner,
+    tokens: &[Vec<i32>],
+    positions: usize,
+    policy: Policy,
+    mask_padding: bool,
+) -> Result<ForcedRun> {
+    let b = tokens.len();
+    let c = runner.cfg().clone();
+    let bucket = c.bucket_for(b)?;
+    assert!(positions + 1 <= c.s_max);
+    for s in tokens {
+        assert!(s.len() > positions, "sequences must cover all positions");
+    }
+    let mut batch = runner.new_batch(bucket)?;
+    let mut logits = Vec::with_capacity(positions);
+    let mut sum_t = 0.0;
+    let mut sum_load = 0.0;
+    let mut sum_us = 0.0;
+    let mut n_layer_steps = 0usize;
+    let mut toks = vec![0i32; bucket];
+    let mut pos = vec![0i32; bucket];
+    let mut live = vec![false; bucket];
+    for (i, s) in tokens.iter().enumerate() {
+        let _ = s;
+        live[i] = true;
+    }
+    for t in 0..positions {
+        for i in 0..b {
+            toks[i] = tokens[i][t];
+            pos[i] = t as i32;
+        }
+        let out = runner.decode_step(&mut batch, &toks, &pos, &live, policy, mask_padding)?;
+        for ls in &out.layers {
+            sum_t += ls.t as f64;
+            sum_load += ls.load as f64;
+            sum_us += ls.moe_us;
+            n_layer_steps += 1;
+        }
+        logits.push(out.logits);
+    }
+    Ok(ForcedRun {
+        b,
+        positions,
+        vocab: c.vocab,
+        logits,
+        avg_t: sum_t / n_layer_steps as f64,
+        avg_load: sum_load / n_layer_steps as f64,
+        avg_moe_us: sum_us / n_layer_steps as f64,
+    })
+}
+
+/// CE metrics of a policy run against corpus tokens and a vanilla reference.
+#[derive(Debug, Clone, Copy)]
+pub struct CeResult {
+    /// mean next-token CE against the corpus
+    pub ce: f64,
+    /// ce - ce_vanilla (the paper's y-axis in Figs 2/3/5-9)
+    pub ce_delta: f64,
+    /// mean KL(vanilla || policy) per position/sequence
+    pub kl_vanilla: f64,
+    /// average unique active experts per layer-step (the x-axis)
+    pub avg_t: f64,
+    pub avg_load: f64,
+    pub avg_moe_us: f64,
+}
+
+/// Compare a policy's forced run against a vanilla reference run over the
+/// same tokens. `tokens[i][positions]` supplies the CE target at the last
+/// position.
+pub fn ce_compare(
+    tokens: &[Vec<i32>],
+    policy_run: &ForcedRun,
+    vanilla_run: &ForcedRun,
+) -> CeResult {
+    assert_eq!(policy_run.positions, vanilla_run.positions);
+    assert_eq!(policy_run.b, vanilla_run.b);
+    let (b, v) = (policy_run.b, policy_run.vocab);
+    let mut ce = 0.0;
+    let mut ce_van = 0.0;
+    let mut kl = 0.0;
+    let mut n = 0usize;
+    for t in 0..policy_run.positions {
+        for i in 0..b {
+            let target = tokens[i][t + 1] as usize;
+            let row_p = &policy_run.logits[t][i * v..(i + 1) * v];
+            let row_v = &vanilla_run.logits[t][i * v..(i + 1) * v];
+            ce += sampler::cross_entropy(row_p, target);
+            ce_van += sampler::cross_entropy(row_v, target);
+            kl += sampler::kl_divergence(row_v, row_p);
+            n += 1;
+        }
+    }
+    CeResult {
+        ce: ce / n as f64,
+        ce_delta: (ce - ce_van) / n as f64,
+        kl_vanilla: kl / n as f64,
+        avg_t: policy_run.avg_t,
+        avg_load: policy_run.avg_load,
+        avg_moe_us: policy_run.avg_moe_us,
+    }
+}
+
+/// Greedy-generation fidelity vs vanilla routing: the fraction of decode
+/// steps where the policy's greedy token equals vanilla's, batched like the
+/// serving runs (same batch composition for both arms).
+#[derive(Debug, Clone, Copy)]
+pub struct FidelityResult {
+    /// exact-match rate over all generated tokens
+    pub token_agreement: f64,
+    /// fraction of sequences whose entire continuation matches
+    pub seq_exact: f64,
+    pub avg_t: f64,
+}
+
+pub fn fidelity_eval(
+    runner: &ModelRunner,
+    prompts: &[Vec<i32>],
+    gen_len: usize,
+    policy: Policy,
+) -> Result<FidelityResult> {
+    let b = prompts.len();
+    let c = runner.cfg().clone();
+    let bucket = c.bucket_for(b)?;
+
+    // two arms with identical start states
+    let mut arms: Vec<(Policy, Vec<Vec<i32>>, f64)> = Vec::new();
+    for pol in [Policy::Vanilla { k: c.top_k }, policy] {
+        let mut sum_t = 0.0;
+        let mut n_t = 0usize;
+        let mut batch = runner.new_batch(bucket)?;
+        let mut next = vec![0i32; bucket];
+        let mut posv = vec![0i32; bucket];
+        let mut live = vec![false; bucket];
+        for (i, p) in prompts.iter().enumerate() {
+            let seq = runner.prefill(p)?;
+            runner.install_prefilled(&mut batch, i, &seq)?;
+            next[i] = sampler::argmax(&seq.last_logits) as i32;
+            posv[i] = p.len() as i32;
+            live[i] = true;
+        }
+        let mut gen: Vec<Vec<i32>> = vec![Vec::new(); b];
+        for i in 0..b {
+            gen[i].push(next[i]);
+        }
+        for _ in 0..gen_len - 1 {
+            let out = runner.decode_step(&mut batch, &next, &posv, &live, pol, true)?;
+            for ls in &out.layers {
+                sum_t += ls.t as f64;
+                n_t += 1;
+            }
+            for i in 0..b {
+                let row = &out.logits[i * c.vocab..(i + 1) * c.vocab];
+                next[i] = sampler::argmax(row) as i32;
+                posv[i] += 1;
+                gen[i].push(next[i]);
+            }
+        }
+        arms.push((pol, gen, if n_t > 0 { sum_t / n_t as f64 } else { 0.0 }));
+    }
+
+    let (_, ref_gen, _) = &arms[0];
+    let (_, pol_gen, pol_avg_t) = &arms[1];
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    let mut exact = 0usize;
+    for i in 0..b {
+        let mut all = true;
+        for t in 0..gen_len {
+            total += 1;
+            if ref_gen[i][t] == pol_gen[i][t] {
+                agree += 1;
+            } else {
+                all = false;
+            }
+        }
+        if all {
+            exact += 1;
+        }
+    }
+    Ok(FidelityResult {
+        token_agreement: agree as f64 / total as f64,
+        seq_exact: exact as f64 / b as f64,
+        avg_t: *pol_avg_t,
+    })
+}
+
+/// The four benchmark-suite slots (paper: AIME24 / GPQA / LiveCodeBench /
+/// MATH_500 -> here: one synthetic-corpus domain each, DESIGN.md §3).
+pub const SUITES: [(&str, &str, usize); 4] = [
+    ("AIME24", "math", 1),
+    ("GPQA", "qa", 3),
+    ("LIVECODEBENCH", "code", 2),
+    ("MATH_500", "prose", 0),
+];
+
+/// Domain-pure prompt batch for one benchmark suite (the paper's
+/// "similar distribution" serving regime, §6).
+pub fn suite_prompts(
+    corpus: &crate::util::corpus::Corpus,
+    tok: &crate::util::bpe::Tokenizer,
+    rng: &mut crate::util::rng::Rng,
+    domain: usize,
+    b: usize,
+    prompt_len: usize,
+) -> Vec<Vec<i32>> {
+    (0..b)
+        .map(|_| {
+            let text = corpus.sample_text_domain(rng, domain, prompt_len * 8);
+            let mut ids: Vec<i32> =
+                tok.encode(&text).iter().map(|&t| t as i32).collect();
+            ids.truncate(prompt_len);
+            while ids.len() < prompt_len {
+                ids.push(3);
+            }
+            ids
+        })
+        .collect()
+}
+
+/// Tokenize corpus text into fixed-length sequences for CE eval.
+pub fn sequences_from_corpus(
+    corpus: &crate::util::corpus::Corpus,
+    tok: &crate::util::bpe::Tokenizer,
+    rng: &mut crate::util::rng::Rng,
+    b: usize,
+    len: usize,
+    mixed: bool,
+) -> Vec<Vec<i32>> {
+    let prompts = corpus.sample_batch(rng, b, len * 8, mixed);
+    prompts
+        .into_iter()
+        .map(|text| {
+            let mut ids: Vec<i32> = tok.encode(&text).iter().map(|&t| t as i32).collect();
+            while ids.len() < len + 1 {
+                ids.push(crate::util::bpe::PAD as i32 + 3);
+            }
+            ids.truncate(len + 1);
+            ids
+        })
+        .collect()
+}

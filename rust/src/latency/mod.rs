@@ -1,0 +1,18 @@
+//! MoE latency models (paper §3.1, Eq. 2):
+//!
+//! `latency(T, load) = overhead + b·T + a·load`, where `T` is the number of
+//! unique activated experts, `load = Σ cnt_i = Σ_i |S_i|` the total
+//! token-expert assignments, `b` the per-expert HBM->SRAM weight-fetch cost
+//! and `a` the per-token-per-expert compute cost.
+//!
+//! Two uses:
+//! - **simulation**: H100 presets derived from the paper's own tables (the
+//!   headline µs numbers in Tables 3/5 and Figures 1/4), since this testbed
+//!   has no H100;
+//! - **calibration**: fit (a-ish, b, overhead) from measured CPU-PJRT step
+//!   latencies via OLS, which reproduces Figure 1's linearity claim on real
+//!   measurements from this machine.
+
+pub mod roofline;
+
+pub use roofline::{CostModel, H100Presets};

@@ -1,0 +1,148 @@
+//! Roofline cost model f(n) = a·n + b per expert (Eq. 2) + H100 presets.
+
+use crate::util::stats;
+
+/// Eq. 2 cost model for one MoE layer's decode step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// per-unique-expert weight fetch (µs) — the `b` term
+    pub fetch_us: f64,
+    /// per token-expert assignment compute (µs) — the `a` term
+    pub compute_us: f64,
+    /// fixed per-layer overhead: kernel launches, norms, router, and (for
+    /// TP configs) the all-reduce floor
+    pub overhead_us: f64,
+}
+
+impl CostModel {
+    /// Latency of one MoE layer step with `t` active experts and `load`
+    /// total token-expert assignments.
+    pub fn layer_us(&self, t: usize, load: usize) -> f64 {
+        if t == 0 {
+            return self.overhead_us;
+        }
+        self.overhead_us + self.fetch_us * t as f64 + self.compute_us * load as f64
+    }
+
+    /// Fit (fetch, overhead) by OLS on measured (t, µs) samples, leaving
+    /// compute at 0 (decode loads are tiny; the measured slope absorbs per-
+    /// token work). Returns the fit's R² as well — the paper's Figure 1
+    /// linearity check.
+    pub fn fit(samples_t: &[f64], samples_us: &[f64]) -> Option<(CostModel, f64)> {
+        let f = stats::linreg(samples_t, samples_us)?;
+        Some((
+            CostModel {
+                fetch_us: f.slope,
+                compute_us: 0.0,
+                overhead_us: f.intercept,
+            },
+            f.r2,
+        ))
+    }
+
+    /// Batch-size-aware threshold: the batch size where compute-bound and
+    /// memory-bound terms cross (paper §2: ~1.6k for Qwen3 on H100).
+    pub fn compute_bound_batch(&self, k: usize, n: usize) -> f64 {
+        if self.compute_us == 0.0 {
+            return f64::INFINITY;
+        }
+        // b·N = a·B·k  =>  B = b·N / (a·k): all experts fetched, compute
+        // catches up with the full fetch bill
+        self.fetch_us * n as f64 / (self.compute_us * k as f64)
+    }
+}
+
+/// Presets for the paper's two testbeds, derived from first principles and
+/// cross-checked against the paper's own tables (DESIGN.md §3).
+pub struct H100Presets;
+
+impl H100Presets {
+    /// Qwen3-30B-A3B on one H100 (Tables 3/4, Figure 1).
+    ///
+    /// First-principles `b`: expert = 3 SwiGLU mats of 2048x768 in bf16 =
+    /// 9.44 MB; HBM3 at ~3.35 TB/s -> 2.8 µs/expert. The paper's own
+    /// Tables 3+4 give slope (184.1-111.0)/(51.6-26.5) = 2.91 µs and
+    /// intercept ~34 µs on GPQA — we adopt the table-derived values.
+    pub fn qwen3_30b() -> CostModel {
+        CostModel { fetch_us: 2.91, compute_us: 0.012, overhead_us: 33.5 }
+    }
+
+    /// Qwen3-235B-A22B under TP=8 (Tables 5/10, Figure 4).
+    ///
+    /// Per-rank expert shard = 3·4096·1536·2B / 8 = 4.7 MB -> ~1.4 µs;
+    /// tables 5+10 give slope (119.4-87.7)/(54.0-28.3) = 1.23 µs and a
+    /// ~53 µs floor — the all-reduce overhead the paper cites for the
+    /// smaller relative gains.
+    pub fn qwen3_235b_tp8() -> CostModel {
+        CostModel { fetch_us: 1.23, compute_us: 0.006, overhead_us: 53.0 }
+    }
+
+    /// Map a scaled-down config onto a paper-scale preset: experts are
+    /// fetched per unique activation regardless of model size, so the
+    /// simulated µs uses the preset as-is with the *measured* T and load
+    /// from the scaled model (DESIGN.md §3 substitution table).
+    pub fn for_config(name: &str) -> CostModel {
+        match name {
+            "base" => Self::qwen3_235b_tp8(),
+            _ => Self::qwen3_30b(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_active_is_overhead_only() {
+        let m = H100Presets::qwen3_30b();
+        assert_eq!(m.layer_us(0, 0), m.overhead_us);
+    }
+
+    #[test]
+    fn monotone_in_t() {
+        let m = H100Presets::qwen3_30b();
+        let mut prev = 0.0;
+        for t in 1..128 {
+            let us = m.layer_us(t, t * 2);
+            assert!(us > prev);
+            prev = us;
+        }
+    }
+
+    #[test]
+    fn fit_recovers_exact_line() {
+        let truth = CostModel { fetch_us: 2.5, compute_us: 0.0, overhead_us: 30.0 };
+        let ts: Vec<f64> = (8..=128).step_by(8).map(|t| t as f64).collect();
+        let us: Vec<f64> = ts.iter().map(|&t| truth.layer_us(t as usize, 0)).collect();
+        let (fit, r2) = CostModel::fit(&ts, &us).unwrap();
+        assert!((fit.fetch_us - 2.5).abs() < 1e-9);
+        assert!((fit.overhead_us - 30.0).abs() < 1e-7);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn preset_reproduces_table3_vanilla_gpqa() {
+        // Table 4: vanilla GPQA avg T = 51.6 over B=16, k=8 (load = 16*8);
+        // Table 3 reports 184.1 µs. The preset must land within a few µs.
+        let m = H100Presets::qwen3_30b();
+        let us = m.layer_us(51, 16 * 8);
+        assert!((us - 184.1).abs() < 5.0, "got {us}");
+    }
+
+    #[test]
+    fn preset_reproduces_table5_vanilla_gpqa() {
+        // Table 10: vanilla GPQA avg T = 51.6; Table 5: 116.0 µs (TP=8).
+        let m = H100Presets::qwen3_235b_tp8();
+        let us = m.layer_us(51, 16 * 8);
+        assert!((us - 116.0).abs() < 6.0, "got {us}");
+    }
+
+    #[test]
+    fn compute_bound_threshold_order_of_magnitude() {
+        // paper §2: Qwen3 needs batch ~1.6k to be compute bound
+        let m = H100Presets::qwen3_30b();
+        let b = m.compute_bound_batch(8, 128);
+        assert!((1000.0..8000.0).contains(&b), "threshold {b}");
+    }
+}

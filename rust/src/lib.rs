@@ -1,0 +1,27 @@
+//! # oea-serve
+//!
+//! A three-layer (Rust + JAX + Pallas) MoE serving framework reproducing
+//! *"Opportunistic Expert Activation: Batch-Aware Expert Routing for Faster
+//! Decode Without Retraining"* (CS.LG 2025).
+//!
+//! Layers:
+//! - **L3 (this crate)**: request router, continuous batcher, KV-cache
+//!   manager, OEA routing engine, latency model, metrics. Python never runs
+//!   on the request path.
+//! - **L2** (`python/compile/model.py`): Qwen3-style MoE transformer in JAX,
+//!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//! - **L1** (`python/compile/kernels/`): Pallas kernels (gather-based grouped
+//!   expert FFN, router, decode attention) called from L2.
+
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod latency;
+pub mod metrics;
+pub mod model;
+pub mod moe;
+pub mod runtime;
+pub mod server;
+pub mod util;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,218 @@
+//! `oea-serve` launcher.
+//!
+//! Subcommands:
+//!   serve     start the HTTP serving frontend
+//!   generate  one-shot generation from the command line
+//!   ce-eval   teacher-forced CE comparison of a policy vs vanilla
+//!   info      print manifest / config / router stats
+//!
+//! Examples:
+//!   oea-serve serve --config small --policy oea:k0=3 --max-running 16 \
+//!       --port 8080
+//!   oea-serve generate --config small --policy oea:k0=3 \
+//!       --prompt "The quiet river" --max-tokens 32
+//!   oea-serve ce-eval --config small --policy pruned:k0=3 --batch 16
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use oea_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use oea_serve::eval;
+use oea_serve::latency::H100Presets;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::runtime::Runtime;
+use oea_serve::server;
+use oea_serve::util::bpe::Tokenizer;
+use oea_serve::util::cli::{Args, Spec};
+use oea_serve::util::corpus::Corpus;
+use oea_serve::util::error::Result;
+use oea_serve::util::rng::Rng;
+
+fn spec() -> Spec {
+    Spec {
+        name: "oea-serve",
+        about: "MoE serving with Opportunistic Expert Activation (OEA) routing",
+        options: vec![
+            ("config", true, "model config: tiny | small | base (default small)"),
+            ("artifacts", true, "artifact root (default ./artifacts)"),
+            ("data", true, "corpus dir (default ./data)"),
+            ("policy", true, "routing policy, e.g. vanilla, pruned:k0=3, oea:k0=3, \
+                              oea-full:k0=3,p=0.7,kmax=9,maxp=32, lynx:t=16, dynskip:tau=0.3"),
+            ("max-running", true, "max concurrent requests (default 8)"),
+            ("port", true, "serve: TCP port (default 8080)"),
+            ("max-requests", true, "serve: exit after N generations (default: run forever)"),
+            ("no-mask-padding", false, "disable the padding-token routing fix (paper §6)"),
+            ("prompt", true, "generate: prompt text"),
+            ("max-tokens", true, "generate: tokens to generate (default 32)"),
+            ("temperature", true, "sampling temperature (default 0)"),
+            ("top-p", true, "nucleus threshold (default 1.0)"),
+            ("batch", true, "ce-eval: batch size (default 16)"),
+            ("positions", true, "ce-eval: decode positions (default 48)"),
+            ("mixed", false, "ce-eval: mixed-domain batches (default: domain-pure)"),
+            ("seed", true, "rng seed (default 0)"),
+        ],
+    }
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.iter().any(|a| a == "--help" || a == "-h") || argv.is_empty() {
+        print!("{}", spec().usage());
+        println!("\nsubcommands: serve | generate | ce-eval | info");
+        return ExitCode::SUCCESS;
+    }
+    match run(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn load_runner(args: &Args) -> Result<ModelRunner> {
+    let root = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let cfg = args.str_or("config", "small");
+    let rt = Runtime::load(&root, &cfg)?;
+    Ok(ModelRunner::new(rt))
+}
+
+fn parse_policy(args: &Args, runner: &ModelRunner) -> Result<Policy> {
+    let c = runner.cfg();
+    Policy::from_cli(&args.str_or("policy", "vanilla"), c.top_k, c.n_experts)
+}
+
+fn make_engine(args: &Args, runner: ModelRunner) -> Result<Engine> {
+    let policy = parse_policy(args, &runner)?;
+    let preset = H100Presets::for_config(&runner.cfg().name);
+    Engine::new(
+        runner,
+        EngineConfig {
+            policy,
+            mask_padding: !args.flag("no-mask-padding"),
+            max_running: args.usize_or("max-running", 8)?,
+            eos_token: None,
+            cost_model: preset,
+        },
+    )
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = spec().parse(argv, true)?;
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("ce-eval") => cmd_ce_eval(&args),
+        Some("info") => cmd_info(&args),
+        other => Err(oea_serve::Error::Config(format!(
+            "unknown subcommand {other:?}; try serve | generate | ce-eval | info"
+        ))),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    // validate flags + resolve the vocab WITHOUT creating a PJRT client:
+    // xla_extension 0.5.1 cannot survive a create/destroy/create cycle of
+    // TfrtCpuClient in one process, so only the engine thread makes one.
+    let root = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let cfg_name = args.str_or("config", "small");
+    let manifest = oea_serve::config::Manifest::load(&root, &cfg_name)?;
+    let tok = Tokenizer::load(&manifest.dir.join(&manifest.vocab_file))?;
+    let policy = Policy::from_cli(
+        &args.str_or("policy", "vanilla"),
+        manifest.config.top_k,
+        manifest.config.n_experts,
+    )?;
+    let port = args.usize_or("port", 8080)?;
+    let max_requests = match args.str_opt("max-requests") {
+        Some(_) => Some(args.usize_or("max-requests", 0)?),
+        None => None,
+    };
+    println!(
+        "serving config={} policy={} max_running={} on 127.0.0.1:{port}",
+        manifest.config.name,
+        policy.label(),
+        args.usize_or("max-running", 8)?,
+    );
+    let args2 = args.clone();
+    server::serve(
+        move || {
+            let runner = load_runner(&args2)?;
+            make_engine(&args2, runner)
+        },
+        tok,
+        &format!("127.0.0.1:{port}"),
+        max_requests,
+    )
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let runner = load_runner(args)?;
+    let vocab_path = runner.rt.manifest.dir.join(&runner.rt.manifest.vocab_file);
+    let tok = Tokenizer::load(&vocab_path)?;
+    let prompt_text = args.str_or("prompt", "The quiet river carried the");
+    let prompt: Vec<i32> = tok.encode(&prompt_text).iter().map(|&t| t as i32).collect();
+    let mut engine = make_engine(args, runner)?;
+    engine.submit(GenRequest {
+        id: 1,
+        prompt,
+        max_new_tokens: args.usize_or("max-tokens", 32)?,
+        temperature: args.f64_or("temperature", 0.0)? as f32,
+        top_p: args.f64_or("top-p", 1.0)? as f32,
+        seed: args.usize_or("seed", 0)? as u64,
+    });
+    let done = engine.run_to_completion()?;
+    for f in done {
+        let text = tok.decode(&f.tokens.iter().map(|&t| t as u32).collect::<Vec<_>>());
+        println!("--- request {} ({:?}, {} tokens)", f.id, f.reason, f.tokens.len());
+        println!("{prompt_text}{text}");
+    }
+    println!(
+        "\navg active experts: {:.1}  simulated MoE latency: {:.1} us  \
+         measured MoE latency: {:.1} us",
+        engine.moe.avg_t(),
+        engine.moe.avg_latency_us(true),
+        engine.moe.avg_latency_us(false),
+    );
+    Ok(())
+}
+
+fn cmd_ce_eval(args: &Args) -> Result<()> {
+    let runner = load_runner(args)?;
+    let policy = parse_policy(args, &runner)?;
+    let corpus = Corpus::load(&PathBuf::from(args.str_or("data", "data")))?;
+    let vocab_path = runner.rt.manifest.dir.join(&runner.rt.manifest.vocab_file);
+    let tok = Tokenizer::load(&vocab_path)?;
+    let mut rng = Rng::new(args.usize_or("seed", 0)? as u64);
+    let b = args.usize_or("batch", 16)?;
+    let positions = args.usize_or("positions", 48)?;
+    let seqs =
+        eval::sequences_from_corpus(&corpus, &tok, &mut rng, b, positions, args.flag("mixed"));
+
+    let k = runner.cfg().top_k;
+    let vanilla = eval::forced_run(&runner, &seqs, positions, Policy::Vanilla { k }, true)?;
+    let run = eval::forced_run(&runner, &seqs, positions, policy, true)?;
+    let r = eval::ce_compare(&seqs, &run, &vanilla);
+    println!(
+        "policy={} B={b} positions={positions}\n  ce={:.4} ce_delta={:+.4} kl={:.5}\n  \
+         avg_active_experts={:.2} (vanilla {:.2})  avg_moe_us_measured={:.1}",
+        policy.label(),
+        r.ce,
+        r.ce_delta,
+        r.kl_vanilla,
+        r.avg_t,
+        vanilla.avg_t,
+        r.avg_moe_us,
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let runner = load_runner(args)?;
+    let c = runner.cfg();
+    println!("config: {c:#?}");
+    println!("stages: {}", runner.rt.manifest.stages.len());
+    println!("weights: {}", runner.rt.weight_names().len());
+    Ok(())
+}

@@ -1,0 +1,220 @@
+//! Serving telemetry: per-(layer, step) MoE records and the aggregations
+//! behind every table/figure (mean latency vs T, averages by policy, CSV
+//! export). The paper tracks "the batch size, number of activated experts
+//! and the latency for every layer and decode step" — so do we.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::{self, LinFit};
+
+/// One MoE layer execution during decode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepRecord {
+    pub layer: u16,
+    pub step: u32,
+    /// padded batch-bucket size
+    pub bucket: u16,
+    /// live (non-padding) rows
+    pub live: u16,
+    /// unique active experts (T)
+    pub t: u16,
+    /// total token-expert assignments (load = Σ|S_i|)
+    pub load: u32,
+    /// wall-clock µs measured on this machine (moe stage execution)
+    pub measured_us: f64,
+    /// simulated H100 µs from the roofline model
+    pub simulated_us: f64,
+}
+
+/// Append-only metrics sink for one run.
+#[derive(Debug, Default)]
+pub struct MoeMetrics {
+    pub records: Vec<StepRecord>,
+}
+
+impl MoeMetrics {
+    pub fn record(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Average number of activated experts (Tables 4/10).
+    pub fn avg_t(&self) -> f64 {
+        stats::mean(&self.records.iter().map(|r| r.t as f64).collect::<Vec<_>>())
+    }
+
+    /// Average MoE latency (Tables 3/5), simulated or measured.
+    pub fn avg_latency_us(&self, simulated: bool) -> f64 {
+        let xs: Vec<f64> = self
+            .records
+            .iter()
+            .map(|r| if simulated { r.simulated_us } else { r.measured_us })
+            .collect();
+        stats::mean(&xs)
+    }
+
+    /// Mean latency per T value — Figure 1/4's curve. Returns sorted
+    /// (t, mean µs, count) rows.
+    pub fn latency_vs_t(&self, simulated: bool) -> Vec<(usize, f64, usize)> {
+        let mut by_t: BTreeMap<u16, Vec<f64>> = BTreeMap::new();
+        for r in &self.records {
+            by_t.entry(r.t)
+                .or_default()
+                .push(if simulated { r.simulated_us } else { r.measured_us });
+        }
+        by_t.into_iter()
+            .map(|(t, xs)| (t as usize, stats::mean(&xs), xs.len()))
+            .collect()
+    }
+
+    /// OLS fit of latency against T (the paper's R² > 0.99 claim).
+    pub fn linear_fit(&self, simulated: bool) -> Option<LinFit> {
+        let curve = self.latency_vs_t(simulated);
+        if curve.len() < 2 {
+            return None;
+        }
+        let xs: Vec<f64> = curve.iter().map(|&(t, _, _)| t as f64).collect();
+        let ys: Vec<f64> = curve.iter().map(|&(_, us, _)| us).collect();
+        stats::linreg(&xs, &ys)
+    }
+
+    /// Per-layer average T (the paper's §7 layer-heterogeneity note).
+    pub fn avg_t_by_layer(&self) -> Vec<(u16, f64)> {
+        let mut by_layer: BTreeMap<u16, Vec<f64>> = BTreeMap::new();
+        for r in &self.records {
+            by_layer.entry(r.layer).or_default().push(r.t as f64);
+        }
+        by_layer
+            .into_iter()
+            .map(|(l, xs)| (l, stats::mean(&xs)))
+            .collect()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("layer,step,bucket,live,t,load,measured_us,simulated_us\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{:.3},{:.3}\n",
+                r.layer, r.step, r.bucket, r.live, r.t, r.load, r.measured_us, r.simulated_us
+            ));
+        }
+        s
+    }
+}
+
+/// End-to-end request telemetry for the serving engine.
+#[derive(Debug, Default, Clone)]
+pub struct RequestMetrics {
+    pub n_finished: usize,
+    pub total_prompt_tokens: usize,
+    pub total_generated_tokens: usize,
+    pub ttft_us: Vec<f64>,
+    pub e2e_us: Vec<f64>,
+    pub decode_step_us: Vec<f64>,
+}
+
+impl RequestMetrics {
+    pub fn throughput_tok_per_s(&self, wall_us: f64) -> f64 {
+        if wall_us <= 0.0 {
+            return 0.0;
+        }
+        self.total_generated_tokens as f64 / (wall_us / 1e6)
+    }
+
+    pub fn summary(&self, wall_us: f64) -> String {
+        format!(
+            "requests={} prompt_toks={} gen_toks={} throughput={:.1} tok/s \
+             ttft_p50={:.1}ms e2e_p50={:.1}ms decode_step_p50={:.2}ms",
+            self.n_finished,
+            self.total_prompt_tokens,
+            self.total_generated_tokens,
+            self.throughput_tok_per_s(wall_us),
+            stats::percentile(&self.ttft_us, 50.0) / 1e3,
+            stats::percentile(&self.e2e_us, 50.0) / 1e3,
+            stats::percentile(&self.decode_step_us, 50.0) / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(layer: u16, t: u16, us: f64) -> StepRecord {
+        StepRecord {
+            layer,
+            step: 0,
+            bucket: 16,
+            live: 16,
+            t,
+            load: t as u32 * 2,
+            measured_us: us,
+            simulated_us: 30.0 + 3.0 * t as f64,
+        }
+    }
+
+    #[test]
+    fn averages() {
+        let mut m = MoeMetrics::default();
+        m.record(rec(0, 10, 100.0));
+        m.record(rec(1, 20, 200.0));
+        assert_eq!(m.avg_t(), 15.0);
+        assert_eq!(m.avg_latency_us(false), 150.0);
+    }
+
+    #[test]
+    fn latency_curve_groups_by_t() {
+        let mut m = MoeMetrics::default();
+        m.record(rec(0, 10, 100.0));
+        m.record(rec(1, 10, 120.0));
+        m.record(rec(0, 20, 220.0));
+        let c = m.latency_vs_t(false);
+        assert_eq!(c, vec![(10, 110.0, 2), (20, 220.0, 1)]);
+    }
+
+    #[test]
+    fn fit_simulated_is_exact() {
+        let mut m = MoeMetrics::default();
+        for t in (4..=64).step_by(4) {
+            m.record(rec(0, t, 0.0));
+        }
+        let f = m.linear_fit(true).unwrap();
+        assert!((f.slope - 3.0).abs() < 1e-9);
+        assert!((f.intercept - 30.0).abs() < 1e-7);
+        assert!(f.r2 > 0.9999);
+    }
+
+    #[test]
+    fn per_layer_averages() {
+        let mut m = MoeMetrics::default();
+        m.record(rec(0, 10, 0.0));
+        m.record(rec(0, 20, 0.0));
+        m.record(rec(3, 40, 0.0));
+        assert_eq!(m.avg_t_by_layer(), vec![(0, 15.0), (3, 40.0)]);
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let mut m = MoeMetrics::default();
+        m.record(rec(0, 10, 1.5));
+        let csv = m.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("0,0,16,16,10,20,1.500"));
+    }
+
+    #[test]
+    fn request_metrics_throughput() {
+        let m = RequestMetrics {
+            total_generated_tokens: 500,
+            ..Default::default()
+        };
+        assert_eq!(m.throughput_tok_per_s(1e6), 500.0);
+    }
+}

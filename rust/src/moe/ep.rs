@@ -1,0 +1,212 @@
+//! Expert-parallel OEA (paper §7 "Extension to expert parallelism").
+//!
+//! Under expert parallelism experts are sharded across R ranks and step
+//! latency is driven by the *maximum* per-rank number of activated experts.
+//! The extension runs OEA per rank: Phase-1 baselines are global (quality
+//! must not depend on the sharding), Phase-2 piggybacking only onto experts
+//! of the same rank's union, optionally topping up `k0` on underloaded
+//! ranks (the paper's suggestion of a bigger k0 where `S_base` is small).
+
+use crate::moe::masks::ExpertMask;
+use crate::moe::policy::{RoutingDecision, RoutingInput};
+
+/// Contiguous block sharding: expert e lives on rank e / (n/ranks).
+pub fn rank_of(e: usize, n: usize, ranks: usize) -> usize {
+    let per = n.div_ceil(ranks);
+    (e / per).min(ranks - 1)
+}
+
+#[derive(Debug, Clone)]
+pub struct EpDecision {
+    pub inner: RoutingDecision,
+    /// active experts per rank; step latency ~ max of these
+    pub per_rank_t: Vec<usize>,
+}
+
+impl EpDecision {
+    pub fn max_rank_t(&self) -> usize {
+        self.per_rank_t.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// OEA with per-rank piggybacking.
+///
+/// `k0`: global Phase-1 baseline; `k_max`: per-token cap; `topup`: extra
+/// baseline experts taken on ranks whose union is smaller than the average
+/// (0 disables).
+pub fn route_ep(
+    input: &RoutingInput,
+    k0: usize,
+    k_max: usize,
+    ranks: usize,
+    topup: usize,
+) -> EpDecision {
+    let s = input.scores;
+    let live = |i: usize| !input.mask_padding || input.live[i];
+
+    // Phase 1 (global, batch independent)
+    let mut per_token: Vec<ExpertMask> = Vec::with_capacity(s.b);
+    let mut union = ExpertMask::new(s.n);
+    for i in 0..s.b {
+        let mut m = ExpertMask::new(s.n);
+        if live(i) {
+            for j in 0..k0.min(s.n) {
+                m.set(s.ranked(i, j));
+            }
+            union.union_with(&m);
+        }
+        per_token.push(m);
+    }
+
+    // per-rank unions
+    let mut rank_unions = vec![ExpertMask::new(s.n); ranks];
+    for e in union.iter_ids() {
+        rank_unions[rank_of(e, s.n, ranks)].set(e);
+    }
+
+    // top-up: ranks with below-average unions accept extra baseline experts
+    if topup > 0 {
+        let avg = union.count() as f64 / ranks as f64;
+        for i in 0..s.b {
+            if !live(i) {
+                continue;
+            }
+            let mut added = 0;
+            for j in k0..s.n {
+                if added >= topup {
+                    break;
+                }
+                let e = s.ranked(i, j);
+                let r = rank_of(e, s.n, ranks);
+                if (rank_unions[r].count() as f64) < avg && !union.contains(e) {
+                    per_token[i].set(e);
+                    union.set(e);
+                    rank_unions[r].set(e);
+                    added += 1;
+                }
+            }
+        }
+    }
+
+    // Phase 2: piggyback within each expert's own rank union (equivalent to
+    // the global union here since unions partition by rank, but the cap is
+    // enforced per token overall)
+    for i in 0..s.b {
+        if !live(i) {
+            continue;
+        }
+        let mut size = per_token[i].count();
+        if size >= k_max {
+            continue;
+        }
+        for j in 0..s.n {
+            let e = s.ranked(i, j);
+            if per_token[i].contains(e) {
+                continue;
+            }
+            if union.contains(e) {
+                per_token[i].set(e);
+                size += 1;
+                if size >= k_max {
+                    break;
+                }
+            }
+        }
+    }
+
+    // combine + realized decision
+    let (b, n) = (s.b, s.n);
+    let mut combine = vec![0.0f32; b * n];
+    let mut sets = Vec::with_capacity(b);
+    for i in 0..b {
+        let m = &per_token[i];
+        let mut sum = 0.0f32;
+        for e in m.iter_ids() {
+            sum += s.score(i, e);
+        }
+        if sum > 0.0 {
+            for e in m.iter_ids() {
+                combine[i * n + e] = s.score(i, e) / sum;
+            }
+        }
+        sets.push(m.to_vec());
+    }
+    let active = union.to_vec();
+    let mut per_rank_t = vec![0usize; ranks];
+    for &e in &active {
+        per_rank_t[rank_of(e as usize, n, ranks)] += 1;
+    }
+    EpDecision {
+        inner: RoutingDecision { b, n, sets, combine, active },
+        per_rank_t,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::scores::ScoreMatrix;
+    use crate::util::rng::Rng;
+
+    fn random_scores(b: usize, n: usize, seed: u64) -> ScoreMatrix {
+        let mut rng = Rng::new(seed);
+        let mut scores = vec![0.0f32; b * n];
+        for i in 0..b {
+            let row = &mut scores[i * n..(i + 1) * n];
+            let mut sum = 0.0;
+            for x in row.iter_mut() {
+                *x = (rng.gaussian().exp()) as f32;
+                sum += *x;
+            }
+            for x in row.iter_mut() {
+                *x /= sum;
+            }
+        }
+        ScoreMatrix::new(b, n, scores)
+    }
+
+    #[test]
+    fn rank_partitioning() {
+        assert_eq!(rank_of(0, 32, 4), 0);
+        assert_eq!(rank_of(7, 32, 4), 0);
+        assert_eq!(rank_of(8, 32, 4), 1);
+        assert_eq!(rank_of(31, 32, 4), 3);
+    }
+
+    #[test]
+    fn per_rank_counts_sum_to_t() {
+        let s = random_scores(16, 32, 0);
+        let live = vec![true; 16];
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let d = route_ep(&input, 3, 8, 4, 0);
+        assert_eq!(d.per_rank_t.iter().sum::<usize>(), d.inner.t());
+        assert!(d.max_rank_t() >= d.inner.t() / 4);
+    }
+
+    #[test]
+    fn topup_never_shrinks_quality() {
+        let s = random_scores(16, 32, 1);
+        let live = vec![true; 16];
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let base = route_ep(&input, 2, 8, 4, 0);
+        let topped = route_ep(&input, 2, 8, 4, 2);
+        // top-up can only add experts
+        assert!(topped.inner.t() >= base.inner.t());
+        for i in 0..16 {
+            assert!(topped.inner.sets[i].len() >= base.inner.sets[i].len());
+        }
+    }
+
+    #[test]
+    fn sets_within_union() {
+        let s = random_scores(8, 32, 2);
+        let live = vec![true; 8];
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let d = route_ep(&input, 3, 8, 4, 1);
+        for set in &d.inner.sets {
+            for e in set {
+                assert!(d.inner.active.contains(e));
+            }
+        }
+    }
+}

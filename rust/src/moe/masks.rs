@@ -1,0 +1,136 @@
+//! Fixed-width expert-set bitmask (N <= 1024), the routing hot path's set
+//! representation: membership tests and unions are word ops, no hashing.
+
+/// Bitset over expert ids `[0, n)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExpertMask {
+    words: [u64; 16],
+    n: usize,
+}
+
+impl ExpertMask {
+    pub fn new(n: usize) -> Self {
+        assert!(n <= 1024, "ExpertMask supports up to 1024 experts");
+        ExpertMask { words: [0; 16], n }
+    }
+
+    #[inline]
+    pub fn set(&mut self, e: usize) {
+        debug_assert!(e < self.n);
+        self.words[e >> 6] |= 1 << (e & 63);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, e: usize) {
+        self.words[e >> 6] &= !(1 << (e & 63));
+    }
+
+    #[inline]
+    pub fn contains(&self, e: usize) -> bool {
+        debug_assert!(e < self.n);
+        self.words[e >> 6] & (1 << (e & 63)) != 0
+    }
+
+    #[inline]
+    pub fn union_with(&mut self, other: &ExpertMask) {
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    pub fn intersect_with(&mut self, other: &ExpertMask) {
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn clear_all(&mut self) {
+        self.words = [0; 16];
+    }
+
+    /// Ascending expert ids.
+    pub fn iter_ids(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    pub fn to_vec(&self) -> Vec<u16> {
+        self.iter_ids().map(|e| e as u16).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_contains_clear() {
+        let mut m = ExpertMask::new(128);
+        m.set(0);
+        m.set(63);
+        m.set(64);
+        m.set(127);
+        assert!(m.contains(0) && m.contains(63) && m.contains(64) && m.contains(127));
+        assert!(!m.contains(1) && !m.contains(65));
+        assert_eq!(m.count(), 4);
+        m.clear(64);
+        assert!(!m.contains(64));
+        assert_eq!(m.count(), 3);
+    }
+
+    #[test]
+    fn union_and_iter() {
+        let mut a = ExpertMask::new(200);
+        let mut b = ExpertMask::new(200);
+        a.set(3);
+        a.set(150);
+        b.set(150);
+        b.set(7);
+        a.union_with(&b);
+        assert_eq!(a.to_vec(), vec![3, 7, 150]);
+    }
+
+    #[test]
+    fn intersect() {
+        let mut a = ExpertMask::new(64);
+        let mut b = ExpertMask::new(64);
+        for e in [1, 5, 9] {
+            a.set(e);
+        }
+        for e in [5, 9, 11] {
+            b.set(e);
+        }
+        a.intersect_with(&b);
+        assert_eq!(a.to_vec(), vec![5, 9]);
+    }
+
+    #[test]
+    fn empty_and_clear_all() {
+        let mut m = ExpertMask::new(32);
+        assert!(m.is_empty());
+        m.set(31);
+        assert!(!m.is_empty());
+        m.clear_all();
+        assert!(m.is_empty());
+        assert_eq!(m.count(), 0);
+    }
+}

@@ -1,0 +1,26 @@
+//! MoE routing engine — the paper's contribution (L3).
+//!
+//! Given the router's softmax scores `[B, N]` for one decode step of one
+//! layer, a [`policy::Policy`] decides each token's expert set, the batch's
+//! active-expert list `T = |union|`, and the renormalized combine matrix
+//! fed to the L1 gather kernel (Eq. 1 of the paper).
+//!
+//! Implemented policies:
+//! - `Vanilla` top-k (the model default),
+//! - `Pruned` top-k0 / top-p (Phase 1 only — the paper's "pruned" arm),
+//! - `OeaSimplified` (Algorithm 1),
+//! - `Oea` general (Algorithm 2: k0, p, k_max, maxP),
+//! - `Lynx` (Gupta et al. 2024 — the subtractive batch-aware baseline),
+//! - `DynSkip` (Lu et al. 2024 — per-token score-ratio skipping),
+//! - `ExpertChoice` (Zhou et al. 2022).
+//!
+//! plus the §7 expert-parallel extension in [`ep`].
+
+pub mod ep;
+pub mod masks;
+pub mod policy;
+pub mod scores;
+
+pub use masks::ExpertMask;
+pub use policy::{Policy, RoutingDecision, RoutingInput};
+pub use scores::ScoreMatrix;

@@ -1,0 +1,560 @@
+//! Routing policies: OEA (Algorithms 1 & 2) and every baseline the paper
+//! compares against or builds on.
+//!
+//! All policies consume a [`ScoreMatrix`] plus a liveness mask (padding
+//! rows; paper §6) and produce a [`RoutingDecision`]. Padding rows get an
+//! empty expert set and a zero combine row when `mask_padding` is on —
+//! exactly the "zero out the padding tokens' expert choices" fix the paper
+//! recommends; turning it off reproduces the §6 anecdote where pad tokens
+//! activate out-of-distribution experts.
+
+use crate::moe::masks::ExpertMask;
+use crate::moe::scores::ScoreMatrix;
+
+/// Which routing algorithm to run. See module docs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Model-default top-k routing (Eq. 1).
+    Vanilla { k: usize },
+    /// Phase 1 only ("pruned" in the paper's tables): top-k0 capped by the
+    /// top-p cumulative-mass cutoff `t_i` (p = 1.0 disables top-p).
+    Pruned { k0: usize, p: f64 },
+    /// Algorithm 1 — simplified OEA: top-k0 baseline + piggybacking up to
+    /// `k` experts, full preference list.
+    OeaSimplified { k0: usize, k: usize },
+    /// Algorithm 2 — general OEA with all four hyperparameters.
+    Oea { k0: usize, p: f64, k_max: usize, max_p: usize },
+    /// Lynx (Gupta et al.): subtractive batch-aware routing — drop the
+    /// least-popular experts of the vanilla union until `target_t` remain.
+    Lynx { k: usize, target_t: usize },
+    /// Lu et al. dynamic skipping: keep top-k experts whose score is at
+    /// least `tau` × the token's top-1 score (top-1 always kept).
+    DynSkip { k: usize, tau: f64 },
+    /// Expert-choice routing (Zhou et al.): each expert takes its top
+    /// `capacity` tokens.
+    ExpertChoice { capacity: usize },
+}
+
+impl Policy {
+    /// Parse a CLI policy spec. Examples:
+    /// `vanilla`, `pruned:k0=3`, `pruned:k0=4,p=0.7`, `oea:k0=3`,
+    /// `oea-full:k0=3,p=0.7,kmax=9,maxp=32`, `lynx:t=16`,
+    /// `dynskip:tau=0.3`, `expert-choice:cap=2`.
+    /// `k` defaults to the model's top_k.
+    pub fn from_cli(spec: &str, model_k: usize, n_experts: usize) -> crate::util::error::Result<Policy> {
+        use crate::util::error::Error;
+        let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
+        let mut kv = std::collections::BTreeMap::new();
+        for part in rest.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("bad policy arg {part:?}")))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get_usize = |k: &str, d: usize| -> crate::util::error::Result<usize> {
+            kv.get(k)
+                .map(|v| {
+                    v.parse()
+                        .map_err(|_| Error::Config(format!("--policy {k}={v}: not an integer")))
+                })
+                .unwrap_or(Ok(d))
+        };
+        let get_f64 = |k: &str, d: f64| -> crate::util::error::Result<f64> {
+            kv.get(k)
+                .map(|v| {
+                    v.parse()
+                        .map_err(|_| Error::Config(format!("--policy {k}={v}: not a number")))
+                })
+                .unwrap_or(Ok(d))
+        };
+        match name {
+            "vanilla" => Ok(Policy::Vanilla { k: get_usize("k", model_k)? }),
+            "pruned" => Ok(Policy::Pruned {
+                k0: get_usize("k0", model_k)?,
+                p: get_f64("p", 1.0)?,
+            }),
+            "oea" => Ok(Policy::OeaSimplified {
+                k0: get_usize("k0", model_k)?,
+                k: get_usize("k", model_k)?,
+            }),
+            "oea-full" => Ok(Policy::Oea {
+                k0: get_usize("k0", model_k)?,
+                p: get_f64("p", 1.0)?,
+                k_max: get_usize("kmax", model_k)?,
+                max_p: get_usize("maxp", n_experts)?,
+            }),
+            "lynx" => Ok(Policy::Lynx {
+                k: get_usize("k", model_k)?,
+                target_t: get_usize("t", n_experts / 2)?,
+            }),
+            "dynskip" => Ok(Policy::DynSkip {
+                k: get_usize("k", model_k)?,
+                tau: get_f64("tau", 0.2)?,
+            }),
+            "expert-choice" => Ok(Policy::ExpertChoice {
+                capacity: get_usize("cap", 2)?,
+            }),
+            other => Err(Error::Config(format!(
+                "unknown policy {other:?} (vanilla|pruned|oea|oea-full|lynx|dynskip|expert-choice)"
+            ))),
+        }
+    }
+
+    /// Short human-readable label (table rows, metrics files).
+    pub fn label(&self) -> String {
+        match self {
+            Policy::Vanilla { k } => format!("vanilla(k={k})"),
+            Policy::Pruned { k0, p } if *p >= 1.0 => format!("pruned(k0={k0})"),
+            Policy::Pruned { k0, p } => format!("pruned(k0={k0},p={p})"),
+            Policy::OeaSimplified { k0, k } => format!("oea(k0={k0},k={k})"),
+            Policy::Oea { k0, p, k_max, max_p } => {
+                format!("oea-full(k0={k0},p={p},kmax={k_max},maxp={max_p})")
+            }
+            Policy::Lynx { k, target_t } => format!("lynx(k={k},t={target_t})"),
+            Policy::DynSkip { k, tau } => format!("dynskip(k={k},tau={tau})"),
+            Policy::ExpertChoice { capacity } => format!("expert-choice(cap={capacity})"),
+        }
+    }
+}
+
+/// Per-step routing input.
+pub struct RoutingInput<'a> {
+    pub scores: &'a ScoreMatrix,
+    /// liveness per token row; padding rows are `false`
+    pub live: &'a [bool],
+    /// apply the §6 padding fix (zero padding rows' choices)
+    pub mask_padding: bool,
+}
+
+/// What the policy decided for one (layer, step).
+#[derive(Debug, Clone)]
+pub struct RoutingDecision {
+    pub b: usize,
+    pub n: usize,
+    /// per-token expert sets (ascending id order)
+    pub sets: Vec<Vec<u16>>,
+    /// `[B, N]` renormalized combine matrix (Eq. 1 over each S_i)
+    pub combine: Vec<f32>,
+    /// ascending unique active experts over live rows — `T = active.len()`
+    pub active: Vec<u16>,
+}
+
+impl RoutingDecision {
+    pub fn t(&self) -> usize {
+        self.active.len()
+    }
+
+    fn from_masks(
+        input: &RoutingInput,
+        per_token: &[ExpertMask],
+        union: &ExpertMask,
+    ) -> RoutingDecision {
+        let (b, n) = (input.scores.b, input.scores.n);
+        let mut combine = vec![0.0f32; b * n];
+        let mut sets = Vec::with_capacity(b);
+        for i in 0..b {
+            let mask = &per_token[i];
+            let mut sum = 0.0f32;
+            for e in mask.iter_ids() {
+                sum += input.scores.score(i, e);
+            }
+            let row = &mut combine[i * n..(i + 1) * n];
+            if sum > 0.0 {
+                for e in mask.iter_ids() {
+                    row[e] = input.scores.score(i, e) / sum;
+                }
+            }
+            sets.push(mask.to_vec());
+        }
+        RoutingDecision { b, n, sets, combine, active: union.to_vec() }
+    }
+}
+
+fn is_live(input: &RoutingInput, i: usize) -> bool {
+    !input.mask_padding || input.live[i]
+}
+
+/// Phase 1 of OEA: per-token baseline masks (batch independent).
+/// `n_i = min(k0, t_i)` where `t_i` is the top-p cutoff.
+fn phase1_masks(input: &RoutingInput, k0: usize, p: f64) -> (Vec<ExpertMask>, ExpertMask) {
+    let s = input.scores;
+    let mut union = ExpertMask::new(s.n);
+    let mut per_token = Vec::with_capacity(s.b);
+    for i in 0..s.b {
+        let mut m = ExpertMask::new(s.n);
+        if is_live(input, i) {
+            let t_i = s.top_p_cutoff(i, p);
+            let n_i = k0.min(t_i).min(s.n);
+            for j in 0..n_i {
+                m.set(s.ranked(i, j));
+            }
+            union.union_with(&m);
+        }
+        per_token.push(m);
+    }
+    (per_token, union)
+}
+
+/// Phase 2 of OEA: piggyback onto the baseline union. Walks each live
+/// token's preference list past its baseline, adding experts already in
+/// `S_base`, until the token holds `k_max` experts or rank `max_p` is
+/// reached. Never grows the union.
+fn phase2_piggyback(
+    input: &RoutingInput,
+    per_token: &mut [ExpertMask],
+    union: &ExpertMask,
+    k_max: usize,
+    max_p: usize,
+) {
+    let s = input.scores;
+    for i in 0..s.b {
+        if !is_live(input, i) {
+            continue;
+        }
+        let mut size = per_token[i].count();
+        if size >= k_max {
+            continue;
+        }
+        // baseline occupies ranks [0, n_i); continue from the first rank
+        // not in the token's own set (its baseline is exactly a prefix).
+        for j in 0..max_p.min(s.n) {
+            let e = s.ranked(i, j);
+            if per_token[i].contains(e) {
+                continue;
+            }
+            if union.contains(e) {
+                per_token[i].set(e);
+                size += 1;
+                if size >= k_max {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Run `policy` over one decode step's scores.
+pub fn route(policy: Policy, input: &RoutingInput) -> RoutingDecision {
+    let s = input.scores;
+    assert_eq!(input.live.len(), s.b, "live mask must have B entries");
+    match policy {
+        Policy::Vanilla { k } => {
+            let (per, union) = phase1_masks(input, k, 1.0);
+            RoutingDecision::from_masks(input, &per, &union)
+        }
+        Policy::Pruned { k0, p } => {
+            let (per, union) = phase1_masks(input, k0, p);
+            RoutingDecision::from_masks(input, &per, &union)
+        }
+        Policy::OeaSimplified { k0, k } => route(
+            Policy::Oea { k0, p: 1.0, k_max: k, max_p: s.n },
+            input,
+        ),
+        Policy::Oea { k0, p, k_max, max_p } => {
+            let (mut per, union) = phase1_masks(input, k0, p);
+            phase2_piggyback(input, &mut per, &union, k_max, max_p);
+            RoutingDecision::from_masks(input, &per, &union)
+        }
+        Policy::Lynx { k, target_t } => route_lynx(input, k, target_t),
+        Policy::DynSkip { k, tau } => route_dynskip(input, k, tau),
+        Policy::ExpertChoice { capacity } => route_expert_choice(input, capacity),
+    }
+}
+
+/// Lynx (subtractive): start from the vanilla top-k union, drop the
+/// least-popular experts (fewest routed tokens; ties by lower total score)
+/// until `target_t` remain; tokens keep their top-k choices that survive.
+/// A token whose choices are all dropped keeps its highest-ranked surviving
+/// expert so every token computes something.
+fn route_lynx(input: &RoutingInput, k: usize, target_t: usize) -> RoutingDecision {
+    let s = input.scores;
+    let (per, union) = phase1_masks(input, k, 1.0);
+    let mut popularity = vec![0usize; s.n];
+    let mut mass = vec![0.0f64; s.n];
+    for i in 0..s.b {
+        if !is_live(input, i) {
+            continue;
+        }
+        for e in per[i].iter_ids() {
+            popularity[e] += 1;
+            mass[e] += s.score(i, e) as f64;
+        }
+    }
+    let mut kept = union.clone();
+    let mut candidates: Vec<usize> = union.iter_ids().collect();
+    candidates.sort_by(|&a, &b| {
+        popularity[a]
+            .cmp(&popularity[b])
+            .then(mass[a].partial_cmp(&mass[b]).unwrap())
+    });
+    for &e in &candidates {
+        if kept.count() <= target_t {
+            break;
+        }
+        kept.clear(e);
+    }
+    let mut out = Vec::with_capacity(s.b);
+    for i in 0..s.b {
+        let mut m = per[i].clone();
+        m.intersect_with(&kept);
+        if m.is_empty() && is_live(input, i) && !kept.is_empty() {
+            // keep the best surviving expert for this token
+            for j in 0..s.n {
+                let e = s.ranked(i, j);
+                if kept.contains(e) {
+                    m.set(e);
+                    break;
+                }
+            }
+        }
+        out.push(m);
+    }
+    // recompute the realized union (may be < kept if some expert lost all)
+    let mut realized = ExpertMask::new(s.n);
+    for (i, m) in out.iter().enumerate() {
+        if is_live(input, i) {
+            realized.union_with(m);
+        }
+    }
+    RoutingDecision::from_masks(input, &out, &realized)
+}
+
+/// Lu et al. 2024: token-centric skipping — within the top-k, keep expert
+/// ranked j iff score >= tau * top-1 score. Not batch-aware.
+fn route_dynskip(input: &RoutingInput, k: usize, tau: f64) -> RoutingDecision {
+    let s = input.scores;
+    let mut union = ExpertMask::new(s.n);
+    let mut per = Vec::with_capacity(s.b);
+    for i in 0..s.b {
+        let mut m = ExpertMask::new(s.n);
+        if is_live(input, i) {
+            let top1 = s.score(i, s.ranked(i, 0)) as f64;
+            m.set(s.ranked(i, 0));
+            for j in 1..k.min(s.n) {
+                let e = s.ranked(i, j);
+                if (s.score(i, e) as f64) >= tau * top1 {
+                    m.set(e);
+                }
+            }
+            union.union_with(&m);
+        }
+        per.push(m);
+    }
+    RoutingDecision::from_masks(input, &per, &union)
+}
+
+/// Zhou et al. 2022: each expert selects its top-`capacity` live tokens.
+fn route_expert_choice(input: &RoutingInput, capacity: usize) -> RoutingDecision {
+    let s = input.scores;
+    let mut per = vec![ExpertMask::new(s.n); s.b];
+    let mut union = ExpertMask::new(s.n);
+    let mut col: Vec<usize> = Vec::with_capacity(s.b);
+    for e in 0..s.n {
+        col.clear();
+        col.extend((0..s.b).filter(|&i| is_live(input, i)));
+        col.sort_by(|&a, &b| {
+            s.score(b, e).partial_cmp(&s.score(a, e)).unwrap()
+        });
+        for &i in col.iter().take(capacity) {
+            per[i].set(e);
+            union.set(e);
+        }
+    }
+    RoutingDecision::from_masks(input, &per, &union)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 4 tokens, 8 experts, hand-built scores.
+    fn fixture() -> ScoreMatrix {
+        #[rustfmt::skip]
+        let scores = vec![
+            // e0    e1    e2    e3    e4    e5    e6    e7
+            0.40, 0.30, 0.10, 0.08, 0.05, 0.04, 0.02, 0.01, // t0: prefers 0,1
+            0.35, 0.05, 0.30, 0.15, 0.05, 0.04, 0.03, 0.03, // t1: prefers 0,2
+            0.02, 0.03, 0.05, 0.10, 0.40, 0.25, 0.10, 0.05, // t2: prefers 4,5
+            0.05, 0.40, 0.05, 0.05, 0.05, 0.10, 0.25, 0.05, // t3: prefers 1,6
+        ];
+        ScoreMatrix::new(4, 8, scores)
+    }
+
+    fn live4() -> Vec<bool> {
+        vec![true; 4]
+    }
+
+    fn input<'a>(s: &'a ScoreMatrix, live: &'a [bool]) -> RoutingInput<'a> {
+        RoutingInput { scores: s, live, mask_padding: true }
+    }
+
+    #[test]
+    fn vanilla_topk_sets() {
+        let s = fixture();
+        let live = live4();
+        let d = route(Policy::Vanilla { k: 2 }, &input(&s, &live));
+        assert_eq!(d.sets[0], vec![0, 1]);
+        assert_eq!(d.sets[1], vec![0, 2]);
+        assert_eq!(d.sets[2], vec![4, 5]);
+        assert_eq!(d.sets[3], vec![1, 6]);
+        assert_eq!(d.active, vec![0, 1, 2, 4, 5, 6]);
+        assert_eq!(d.t(), 6);
+    }
+
+    #[test]
+    fn combine_renormalizes_eq1() {
+        let s = fixture();
+        let live = live4();
+        let d = route(Policy::Vanilla { k: 2 }, &input(&s, &live));
+        // token 0 over {0, 1}: 0.4/0.7, 0.3/0.7
+        let row = &d.combine[0..8];
+        assert!((row[0] - 0.4 / 0.7).abs() < 1e-6);
+        assert!((row[1] - 0.3 / 0.7).abs() < 1e-6);
+        assert_eq!(row[2..].iter().filter(|&&x| x != 0.0).count(), 0);
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pruned_reduces_union() {
+        let s = fixture();
+        let live = live4();
+        let d = route(Policy::Pruned { k0: 1, p: 1.0 }, &input(&s, &live));
+        assert_eq!(d.active, vec![0, 1, 4]);
+        assert_eq!(d.sets[1], vec![0]);
+    }
+
+    #[test]
+    fn oea_piggybacks_without_growing_union() {
+        let s = fixture();
+        let live = live4();
+        let pruned = route(Policy::Pruned { k0: 1, p: 1.0 }, &input(&s, &live));
+        let oea = route(Policy::OeaSimplified { k0: 1, k: 3 }, &input(&s, &live));
+        // T identical to the pruned union (piggybacking is free)
+        assert_eq!(oea.active, pruned.active);
+        // token 0 baseline {0}; piggybacks e1 (via t3) and e4 (via t2),
+        // reaching k_max = 3 without growing the union
+        assert_eq!(oea.sets[0], vec![0, 1, 4]);
+        // token 2 baseline {4}; union = {0,1,4}; its prefs after 4 are
+        // 5,3/6.. none in union except 0 and 1 far down the list
+        assert!(oea.sets[2].contains(&4));
+        for e in &oea.sets[2] {
+            assert!(oea.active.contains(e));
+        }
+    }
+
+    #[test]
+    fn oea_k0_equals_k_is_vanilla() {
+        let s = fixture();
+        let live = live4();
+        let v = route(Policy::Vanilla { k: 3 }, &input(&s, &live));
+        let o = route(Policy::OeaSimplified { k0: 3, k: 3 }, &input(&s, &live));
+        assert_eq!(v.sets, o.sets);
+        assert_eq!(v.active, o.active);
+        assert_eq!(v.combine, o.combine);
+    }
+
+    #[test]
+    fn oea_respects_k_max() {
+        let s = fixture();
+        let live = live4();
+        let d = route(
+            Policy::Oea { k0: 2, p: 1.0, k_max: 3, max_p: 8 },
+            &input(&s, &live),
+        );
+        for set in &d.sets {
+            assert!(set.len() <= 3, "set {set:?} exceeds k_max");
+        }
+    }
+
+    #[test]
+    fn oea_max_p_limits_rank() {
+        let s = fixture();
+        let live = live4();
+        // max_p = 2: only ranks 0..2 can be piggybacked; equal to baseline
+        let d = route(
+            Policy::Oea { k0: 2, p: 1.0, k_max: 8, max_p: 2 },
+            &input(&s, &live),
+        );
+        let pruned = route(Policy::Pruned { k0: 2, p: 1.0 }, &input(&s, &live));
+        assert_eq!(d.sets, pruned.sets);
+    }
+
+    #[test]
+    fn oea_top_p_caps_baseline() {
+        let s = fixture();
+        let live = live4();
+        // token 0: top-1 mass 0.40 < p=0.5 so t_0 = 2; token 2 top-1 0.40
+        let d = route(Policy::Pruned { k0: 4, p: 0.5 }, &input(&s, &live));
+        assert_eq!(d.sets[0].len(), 2); // 0.40 + 0.30 >= 0.5
+        assert_eq!(d.sets[2].len(), 2); // 0.40 + 0.25 >= 0.5
+    }
+
+    #[test]
+    fn padding_rows_masked() {
+        let s = fixture();
+        let live = vec![true, true, false, false];
+        let d = route(Policy::Vanilla { k: 2 }, &input(&s, &live));
+        assert!(d.sets[2].is_empty() && d.sets[3].is_empty());
+        assert_eq!(d.active, vec![0, 1, 2]);
+        assert!(d.combine[2 * 8..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn padding_unmasked_reproduces_anecdote() {
+        let s = fixture();
+        let live = vec![true, true, false, false];
+        let d = route(
+            Policy::Vanilla { k: 2 },
+            &RoutingInput { scores: &s, live: &live, mask_padding: false },
+        );
+        // pad tokens route freely and enlarge the union (the §6 bug)
+        assert_eq!(d.active, vec![0, 1, 2, 4, 5, 6]);
+    }
+
+    #[test]
+    fn lynx_hits_target_t() {
+        let s = fixture();
+        let live = live4();
+        let d = route(Policy::Lynx { k: 2, target_t: 4 }, &input(&s, &live));
+        assert!(d.t() <= 4, "T = {}", d.t());
+        // every live token still has at least one expert
+        for set in &d.sets {
+            assert!(!set.is_empty());
+        }
+    }
+
+    #[test]
+    fn dynskip_keeps_top1_and_thresholds() {
+        let s = fixture();
+        let live = live4();
+        // tau=0.9: only experts within 90% of top-1 survive
+        let d = route(Policy::DynSkip { k: 2, tau: 0.9 }, &input(&s, &live));
+        assert_eq!(d.sets[0], vec![0]); // 0.30 < 0.9*0.40 = 0.36
+        assert_eq!(d.sets[1], vec![0]); // 0.30 < 0.9*0.35 = 0.315
+    }
+
+    #[test]
+    fn dynskip_tau_zero_is_vanilla() {
+        let s = fixture();
+        let live = live4();
+        let d = route(Policy::DynSkip { k: 2, tau: 0.0 }, &input(&s, &live));
+        let v = route(Policy::Vanilla { k: 2 }, &input(&s, &live));
+        assert_eq!(d.sets, v.sets);
+    }
+
+    #[test]
+    fn expert_choice_capacity() {
+        let s = fixture();
+        let live = live4();
+        let d = route(Policy::ExpertChoice { capacity: 1 }, &input(&s, &live));
+        // each expert takes exactly its argmax token
+        let mut per_expert = vec![0usize; 8];
+        for set in &d.sets {
+            for &e in set {
+                per_expert[e as usize] += 1;
+            }
+        }
+        assert!(per_expert.iter().all(|&c| c <= 1));
+    }
+}

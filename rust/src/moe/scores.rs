@@ -1,0 +1,110 @@
+//! Router score matrix `[B, N]` with per-row preference orderings
+//! (the paper's `e_{i,j}` permutations).
+
+/// Row-major `[B, N]` softmax scores plus, per row, expert indices sorted by
+/// descending score — computed once per (layer, step) and shared by every
+/// policy phase.
+#[derive(Debug, Clone)]
+pub struct ScoreMatrix {
+    pub b: usize,
+    pub n: usize,
+    pub scores: Vec<f32>,
+    /// `order[i*n + j]` = the j-th ranked expert of token i (e_{i, j+1})
+    pub order: Vec<u16>,
+}
+
+impl ScoreMatrix {
+    pub fn new(b: usize, n: usize, scores: Vec<f32>) -> Self {
+        assert_eq!(scores.len(), b * n, "scores must be [B, N]");
+        let mut order = vec![0u16; b * n];
+        let mut idx: Vec<u16> = (0..n as u16).collect();
+        for i in 0..b {
+            let row = &scores[i * n..(i + 1) * n];
+            idx.iter_mut().enumerate().for_each(|(j, v)| *v = j as u16);
+            // stable sort: deterministic tie-breaking by expert id
+            idx.sort_by(|&a, &bb| {
+                row[bb as usize]
+                    .partial_cmp(&row[a as usize])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            order[i * n..(i + 1) * n].copy_from_slice(&idx);
+        }
+        ScoreMatrix { b, n, scores, order }
+    }
+
+    #[inline]
+    pub fn score(&self, token: usize, expert: usize) -> f32 {
+        self.scores[token * self.n + expert]
+    }
+
+    /// The j-th ranked expert of `token` (0-based rank).
+    #[inline]
+    pub fn ranked(&self, token: usize, rank: usize) -> usize {
+        self.order[token * self.n + rank] as usize
+    }
+
+    pub fn row(&self, token: usize) -> &[f32] {
+        &self.scores[token * self.n..(token + 1) * self.n]
+    }
+
+    /// Top-k expert ids of `token` in descending score order.
+    pub fn top_k(&self, token: usize, k: usize) -> &[u16] {
+        &self.order[token * self.n..token * self.n + k.min(self.n)]
+    }
+
+    /// The paper's `t_i`: minimal prefix length whose cumulative score
+    /// reaches `p` (Huang et al. 2024a top-p rule). p >= 1 returns n.
+    pub fn top_p_cutoff(&self, token: usize, p: f64) -> usize {
+        if p >= 1.0 {
+            return self.n;
+        }
+        let mut acc = 0.0f64;
+        for j in 0..self.n {
+            acc += self.score(token, self.ranked(token, j)) as f64;
+            if acc >= p {
+                return j + 1;
+            }
+        }
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sm() -> ScoreMatrix {
+        // token 0: expert scores [0.1, 0.5, 0.4]; token 1: [0.7, 0.2, 0.1]
+        ScoreMatrix::new(2, 3, vec![0.1, 0.5, 0.4, 0.7, 0.2, 0.1])
+    }
+
+    #[test]
+    fn orders_descending() {
+        let m = sm();
+        assert_eq!(m.top_k(0, 3), &[1, 2, 0]);
+        assert_eq!(m.top_k(1, 2), &[0, 1]);
+        assert_eq!(m.ranked(0, 0), 1);
+    }
+
+    #[test]
+    fn ties_break_by_id() {
+        let m = ScoreMatrix::new(1, 4, vec![0.25; 4]);
+        assert_eq!(m.top_k(0, 4), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn top_p_cutoff_counts_prefix() {
+        let m = sm();
+        assert_eq!(m.top_p_cutoff(0, 0.5), 1);   // 0.5 >= 0.5
+        assert_eq!(m.top_p_cutoff(0, 0.6), 2);   // 0.5 + 0.4
+        assert_eq!(m.top_p_cutoff(1, 0.69), 1);
+        assert_eq!(m.top_p_cutoff(1, 1.0), 3);   // p=1 -> all
+        assert_eq!(m.top_p_cutoff(1, 2.0), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "scores must be")]
+    fn shape_checked() {
+        ScoreMatrix::new(2, 3, vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,197 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts, owns the device weight
+//! buffers, and executes stages on the request path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids (see /opt/xla-example).
+//!
+//! Executables are compiled lazily (first use) and memoized; weights are
+//! uploaded from `weights.npz` to device buffers exactly once. PJRT via
+//! this crate does not untuple results, so single-output stages are lowered
+//! tuple-free and chain device-side, while multi-output stages return host
+//! literals (the decode pipeline keeps those outputs small; DESIGN.md §2).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use xla::FromRawBytes;
+
+use crate::config::{Manifest, ModelConfig};
+use crate::util::error::{Error, Result};
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    weights: HashMap<String, xla::PjRtBuffer>,
+    /// Host literals backing `weights`: PJRT's BufferFromHostLiteral copies
+    /// asynchronously, so the literal must outlive the buffer — dropping it
+    /// early is a use-after-free (observed as a segfault on the `small`
+    /// config). Kept for the Runtime's lifetime.
+    _weight_literals: Vec<xla::Literal>,
+    /// Memoized rank-0 i32 buffers (slot ids, chunk offsets) with their
+    /// backing literals, for the same lifetime reason.
+    scalar_cache: RefCell<HashMap<i32, Rc<(xla::Literal, xla::PjRtBuffer)>>>,
+}
+
+impl Runtime {
+    /// Load manifest + weights for `cfg_name` under `artifact_root`.
+    pub fn load(artifact_root: &Path, cfg_name: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_root, cfg_name)?;
+        let client = xla::PjRtClient::cpu()?;
+        let wpath = manifest.dir.join(&manifest.weights_file);
+        // NOTE: read through Literal, not PjRtBuffer::read_npz — the crate's
+        // raw-bytes upload path passes ElementType where the C API expects
+        // PrimitiveType, silently mislabeling f32 arrays as f16.
+        let pairs: Vec<(String, xla::Literal)> = xla::Literal::read_npz(&wpath, &())
+            .map_err(|e| Error::Artifact(format!("weights {wpath:?}: {e}")))?;
+        let mut weights = HashMap::with_capacity(pairs.len());
+        let mut literals = Vec::with_capacity(pairs.len());
+        for (name, lit) in pairs {
+            let buf = client.buffer_from_host_literal(None, &lit)?;
+            weights.insert(name, buf);
+            literals.push(lit); // must outlive the async host->device copy
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            compiled: RefCell::new(HashMap::new()),
+            weights,
+            _weight_literals: literals,
+            scalar_cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.manifest.config
+    }
+
+    /// Device buffer of a named weight (e.g. `"l3.router"`).
+    pub fn weight(&self, name: &str) -> Result<&xla::PjRtBuffer> {
+        self.weights
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("weight {name:?} not in npz")))
+    }
+
+    pub fn weight_names(&self) -> Vec<&str> {
+        self.weights.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Compile-on-first-use executable cache.
+    pub fn exe(&self, stage: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.borrow().get(stage) {
+            return Ok(Rc::clone(e));
+        }
+        let path = self.manifest.stage_path(stage)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| Error::Artifact(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.compiled
+            .borrow_mut()
+            .insert(stage.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Number of stages compiled so far (perf/telemetry).
+    pub fn n_compiled(&self) -> usize {
+        self.compiled.borrow().len()
+    }
+
+    /// Eagerly compile every stage matching `pred` (warmup at server start,
+    /// so first requests don't pay compile latency).
+    pub fn warmup<F: Fn(&str) -> bool>(&self, pred: F) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .stages
+            .keys()
+            .filter(|n| pred(n))
+            .cloned()
+            .collect();
+        for n in &names {
+            self.exe(n)?;
+        }
+        Ok(names.len())
+    }
+
+    // ---- host <-> device ----------------------------------------------
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Rank-0 i32 upload, memoized. Goes through a literal (the raw
+    /// host-buffer path rejects empty dims) whose lifetime the cache pins —
+    /// BufferFromHostLiteral's copy is asynchronous.
+    pub fn upload_i32_scalar(&self, v: i32) -> Result<Rc<(xla::Literal, xla::PjRtBuffer)>> {
+        if let Some(e) = self.scalar_cache.borrow().get(&v) {
+            return Ok(Rc::clone(e));
+        }
+        let lit = xla::Literal::scalar(v);
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        let entry = Rc::new((lit, buf));
+        self.scalar_cache.borrow_mut().insert(v, Rc::clone(&entry));
+        Ok(entry)
+    }
+
+    pub fn zeros_f32(&self, dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let n: usize = dims.iter().product();
+        self.upload_f32(&vec![0.0; n], dims)
+    }
+
+    pub fn download_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+    }
+
+    /// Execute a single-output stage; the result stays on device.
+    pub fn exec1(&self, stage: &str, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        debug_assert_eq!(
+            self.manifest.stage(stage)?.outputs,
+            1,
+            "{stage} is not single-output"
+        );
+        let exe = self.exe(stage)?;
+        let mut out = exe.execute_b(args)?;
+        let buf = out
+            .pop()
+            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+            .ok_or_else(|| Error::Xla(format!("{stage}: no output buffer")))?;
+        Ok(buf)
+    }
+
+    /// Execute a multi-output stage; the tuple is decomposed through a host
+    /// literal (outputs are kept small by stage design).
+    pub fn exec_tuple(&self, stage: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let n_out = self.manifest.stage(stage)?.outputs;
+        let exe = self.exe(stage)?;
+        let mut out = exe.execute_b(args)?;
+        let buf = out
+            .pop()
+            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+            .ok_or_else(|| Error::Xla(format!("{stage}: no output buffer")))?;
+        let lits = buf.to_literal_sync()?.to_tuple()?;
+        if lits.len() != n_out {
+            return Err(Error::Xla(format!(
+                "{stage}: expected {n_out} outputs, got {}",
+                lits.len()
+            )));
+        }
+        Ok(lits)
+    }
+
+    /// Upload a host literal's raw f32 data (helper for re-uploading tuple
+    /// elements).
+    pub fn upload_literal_f32(&self, lit: &xla::Literal, dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let v = lit.to_vec::<f32>()?;
+        self.upload_f32(&v, dims)
+    }
+}
+
+// Runtime tests that need real artifacts live in
+// rust/tests/integration_runtime.rs (they require `make artifacts`).

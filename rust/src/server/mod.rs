@@ -1,0 +1,257 @@
+//! Minimal HTTP/1.1 serving frontend (offline substitute for axum/hyper).
+//!
+//! The engine owns non-`Send` PJRT handles, so it lives on a dedicated
+//! engine thread; connection handlers parse requests and exchange
+//! (request, reply-channel) pairs with it over std mpsc. Endpoints:
+//!
+//!   POST /generate   {"prompt": str, "max_tokens": n, "temperature": x,
+//!                     "top_p": x}  -> {"id", "text", "tokens", ...}
+//!   GET  /metrics    -> JSON MoE + request telemetry
+//!   GET  /healthz    -> ok
+
+pub mod http;
+
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::coordinator::{Engine, GenRequest};
+use crate::util::bpe::Tokenizer;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use http::{read_request, write_response, HttpRequest};
+
+enum EngineMsg {
+    Generate(GenRequest, mpsc::Sender<Json>),
+    Metrics(mpsc::Sender<Json>),
+    Shutdown,
+}
+
+/// Serve on `addr` until `max_requests` generations complete (`None` =
+/// forever). The engine owns non-`Send` PJRT handles, so it is CONSTRUCTED
+/// on the engine thread via `engine_builder`; the tokenizer translates
+/// text <-> ids at the edge.
+pub fn serve<F>(
+    engine_builder: F,
+    tokenizer: Tokenizer,
+    addr: &str,
+    max_requests: Option<usize>,
+) -> Result<()>
+where
+    F: FnOnce() -> Result<Engine> + Send + 'static,
+{
+    let listener = TcpListener::bind(addr).map_err(|e| Error::Io(format!("bind {addr}: {e}")))?;
+    listener.set_nonblocking(false).ok();
+    crate::log_info!("server", "listening on {addr}");
+
+    let (tx, rx) = mpsc::channel::<EngineMsg>();
+    let tok = Arc::new(tokenizer);
+    let tok_engine = Arc::clone(&tok);
+
+    // engine thread: owns the PJRT stack
+    let engine_thread = std::thread::spawn(move || {
+        let mut engine = match engine_builder() {
+            Ok(e) => e,
+            Err(e) => {
+                crate::util::logging::log(
+                    crate::util::logging::ERROR,
+                    "engine",
+                    &format!("failed to start: {e}"),
+                );
+                return;
+            }
+        };
+        let mut next_id = 1u64;
+        let mut waiting: Vec<(u64, mpsc::Sender<Json>)> = Vec::new();
+        let mut served = 0usize;
+        loop {
+            // drain the message queue
+            loop {
+                match rx.try_recv() {
+                    Ok(EngineMsg::Generate(mut req, reply)) => {
+                        req.id = next_id;
+                        next_id += 1;
+                        waiting.push((req.id, reply));
+                        engine.submit(req);
+                    }
+                    Ok(EngineMsg::Metrics(reply)) => {
+                        let _ = reply.send(metrics_json(&engine));
+                    }
+                    Ok(EngineMsg::Shutdown) => return,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => return,
+                }
+            }
+            if engine.idle() {
+                // park briefly; nothing to decode
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                continue;
+            }
+            match engine.step() {
+                Ok(finished) => {
+                    for f in finished {
+                        if let Some(pos) = waiting.iter().position(|(id, _)| *id == f.id) {
+                            let (_, reply) = waiting.swap_remove(pos);
+                            let text = tok_engine
+                                .decode(&f.tokens.iter().map(|&t| t as u32).collect::<Vec<_>>());
+                            let _ = reply.send(Json::obj(vec![
+                                ("id", Json::num(f.id as f64)),
+                                ("text", Json::str(&text)),
+                                ("n_tokens", Json::num(f.tokens.len() as f64)),
+                                ("prompt_len", Json::num(f.prompt_len as f64)),
+                                ("finish_reason", Json::str(match f.reason {
+                                    crate::coordinator::FinishReason::Length => "length",
+                                    crate::coordinator::FinishReason::Eos => "eos",
+                                    crate::coordinator::FinishReason::KvExhausted => "kv_exhausted",
+                                })),
+                                ("ttft_ms", Json::num(f.ttft_us / 1e3)),
+                                ("e2e_ms", Json::num(f.e2e_us / 1e3)),
+                            ]));
+                            served += 1;
+                        }
+                    }
+                    if let Some(maxr) = max_requests {
+                        if served >= maxr {
+                            return;
+                        }
+                    }
+                }
+                Err(e) => {
+                    crate::util::logging::log(
+                        crate::util::logging::ERROR,
+                        "engine",
+                        &format!("step failed: {e}"),
+                    );
+                    return;
+                }
+            }
+        }
+    });
+
+    // accept loop (this thread); handlers run DETACHED so concurrent
+    // clients batch together in the engine — joining inline would
+    // serialize requests and defeat continuous batching. The listener is
+    // non-blocking so the served-count exit condition is polled even when
+    // no further connection ever arrives.
+    listener.set_nonblocking(true).ok();
+    let served = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    loop {
+        if let Some(maxr) = max_requests {
+            if served.load(std::sync::atomic::Ordering::SeqCst) >= maxr {
+                break;
+            }
+        }
+        let mut stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                continue;
+            }
+            Err(_) => continue,
+        };
+        stream.set_nonblocking(false).ok();
+        let tx = tx.clone();
+        let tok = Arc::clone(&tok);
+        let served = Arc::clone(&served);
+        std::thread::spawn(move || {
+            let req = match read_request(&mut stream) {
+                Ok(r) => r,
+                Err(e) => {
+                    let _ = write_response(&mut stream, 400, &format!("bad request: {e}"));
+                    return;
+                }
+            };
+            let is_gen = req.method == "POST" && req.path == "/generate";
+            match handle(req, &tx, &tok) {
+                Ok((code, body)) => {
+                    let _ = write_response(&mut stream, code, &body);
+                }
+                Err(e) => {
+                    let _ = write_response(&mut stream, 500, &e.to_string());
+                }
+            }
+            if is_gen {
+                served.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            }
+        });
+    }
+    let _ = tx.send(EngineMsg::Shutdown);
+    let _ = engine_thread.join();
+    Ok(())
+}
+
+fn handle(
+    req: HttpRequest,
+    tx: &mpsc::Sender<EngineMsg>,
+    tok: &Tokenizer,
+) -> Result<(u16, String)> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Ok((200, "{\"status\":\"ok\"}".into())),
+        ("GET", "/metrics") => {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(EngineMsg::Metrics(rtx))
+                .map_err(|_| Error::Engine("engine gone".into()))?;
+            let m = rrx
+                .recv()
+                .map_err(|_| Error::Engine("engine gone".into()))?;
+            Ok((200, m.write()))
+        }
+        ("POST", "/generate") => {
+            let body = Json::parse(&req.body)?;
+            let prompt_text = body.get("prompt")?.as_str()?;
+            let max_tokens = body
+                .get_opt("max_tokens")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(32);
+            let temperature = body
+                .get_opt("temperature")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .unwrap_or(0.0) as f32;
+            let top_p = body
+                .get_opt("top_p")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .unwrap_or(1.0) as f32;
+            let prompt: Vec<i32> = tok.encode(prompt_text).iter().map(|&t| t as i32).collect();
+            let gen_req = GenRequest {
+                id: 0, // assigned by the engine thread
+                prompt,
+                max_new_tokens: max_tokens,
+                temperature,
+                top_p,
+                seed: 0xC0FFEE,
+            };
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(EngineMsg::Generate(gen_req, rtx))
+                .map_err(|_| Error::Engine("engine gone".into()))?;
+            let out = rrx
+                .recv()
+                .map_err(|_| Error::Engine("engine gone".into()))?;
+            Ok((200, out.write()))
+        }
+        _ => Ok((404, "{\"error\":\"not found\"}".into())),
+    }
+}
+
+fn metrics_json(engine: &Engine) -> Json {
+    let fit = engine.moe.linear_fit(true);
+    Json::obj(vec![
+        ("n_records", Json::num(engine.moe.len() as f64)),
+        ("avg_active_experts", Json::num(engine.moe.avg_t())),
+        ("avg_moe_us_simulated", Json::num(engine.moe.avg_latency_us(true))),
+        ("avg_moe_us_measured", Json::num(engine.moe.avg_latency_us(false))),
+        (
+            "latency_fit_r2",
+            fit.map(|f| Json::num(f.r2)).unwrap_or(Json::Null),
+        ),
+        ("n_finished", Json::num(engine.requests.n_finished as f64)),
+        (
+            "generated_tokens",
+            Json::num(engine.requests.total_generated_tokens as f64),
+        ),
+        ("n_running", Json::num(engine.n_running() as f64)),
+        ("n_queued", Json::num(engine.n_queued() as f64)),
+    ])
+}

@@ -1,0 +1,150 @@
+//! Bench harness (offline substitute for criterion): warmup + timed
+//! iterations, robust summary stats, and aligned table printing shared by
+//! every `rust/benches/*` target so each paper table/figure prints in the
+//! same format it appears in the paper.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub stderr_us: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: stats::mean(&samples),
+        p50_us: stats::percentile(&samples, 50.0),
+        p99_us: stats::percentile(&samples, 99.0),
+        stderr_us: stats::stderr(&samples),
+    }
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10.1} us  (p50 {:>9.1}, p99 {:>9.1}, se {:>6.2}, n={})",
+            self.name, self.mean_us, self.p50_us, self.p99_us, self.stderr_us, self.iters
+        );
+    }
+}
+
+/// Aligned table printer for paper-style tables.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i == 0 {
+                    s.push_str(&format!("{:<w$}", c, w = widths[i]));
+                } else {
+                    s.push_str(&format!("  {:>w$}", c, w = widths[i]));
+                }
+            }
+            s
+        };
+        println!("{}", line(&self.header));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// Also emit as CSV (for EXPERIMENTS.md extraction).
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.join(",") + "\n";
+        for row in &self.rows {
+            s.push_str(&(row.join(",") + "\n"));
+        }
+        s
+    }
+}
+
+pub fn fmt1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn fmt2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn fmt3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_us >= 0.0);
+        assert_eq!(r.iters, 10);
+        assert!(r.p99_us >= r.p50_us);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("Tab X", &["k0", "latency"]);
+        t.row(vec!["3".into(), "97.9".into()]);
+        t.row(vec!["vanilla".into(), "158.0".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("k0,latency"));
+        assert!(csv.contains("vanilla,158.0"));
+        t.print(); // should not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

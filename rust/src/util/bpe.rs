@@ -1,0 +1,167 @@
+//! Byte-level BPE tokenizer — request-path half.
+//!
+//! The merge table is trained at build time by `python/compile/bpe.py` and
+//! loaded from `artifacts/<cfg>/vocab.json`. Encode/decode here must agree
+//! byte-for-byte with the python implementation (round-trip identity and
+//! cross-language agreement are covered by the test suites).
+//!
+//! Id layout: 0 `<pad>`, 1 `<bos>`, 2 `<eos>`, 3..258 raw bytes, 259.. merges.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const N_SPECIAL: u32 = 3;
+
+#[derive(Debug)]
+pub struct Tokenizer {
+    pub vocab_size: usize,
+    /// token bytes by id (specials are empty)
+    tokens: Vec<Vec<u8>>,
+    /// (left bytes, right bytes) -> merge rank
+    rank: HashMap<(Vec<u8>, Vec<u8>), usize>,
+    /// token bytes -> id
+    ids: HashMap<Vec<u8>, u32>,
+}
+
+impl Tokenizer {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Artifact(format!("vocab {path:?}: {e}")))?;
+        let v = Json::parse(&text)?;
+        let vocab_size = v.get("vocab_size")?.as_usize()?;
+        let merges_json = v.get("merges")?.as_arr()?;
+        let mut merges = Vec::with_capacity(merges_json.len());
+        for m in merges_json {
+            let pair = m.as_arr()?;
+            if pair.len() != 2 {
+                return Err(Error::Artifact("merge entry must be a pair".into()));
+            }
+            // python encodes token bytes as latin-1 strings
+            let a: Vec<u8> = pair[0].as_str()?.chars().map(|c| c as u8).collect();
+            let b: Vec<u8> = pair[1].as_str()?.chars().map(|c| c as u8).collect();
+            merges.push((a, b));
+        }
+        Ok(Self::from_merges(merges, vocab_size))
+    }
+
+    pub fn from_merges(merges: Vec<(Vec<u8>, Vec<u8>)>, vocab_size: usize) -> Self {
+        let mut tokens: Vec<Vec<u8>> = vec![vec![]; N_SPECIAL as usize];
+        let mut ids = HashMap::new();
+        for b in 0u16..256 {
+            let t = vec![b as u8];
+            ids.insert(t.clone(), N_SPECIAL + b as u32);
+            tokens.push(t);
+        }
+        let mut rank = HashMap::new();
+        for (i, (a, b)) in merges.into_iter().enumerate() {
+            let mut ab = a.clone();
+            ab.extend_from_slice(&b);
+            ids.insert(ab.clone(), N_SPECIAL + 256 + i as u32);
+            tokens.push(ab);
+            rank.insert((a, b), i);
+        }
+        Tokenizer { vocab_size, tokens, rank, ids }
+    }
+
+    /// Greedy lowest-rank-first merge loop (mirrors python `Tokenizer.encode`).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut sym: Vec<Vec<u8>> = text.bytes().map(|b| vec![b]).collect();
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (pos, rank)
+            for i in 0..sym.len().saturating_sub(1) {
+                if let Some(&r) = self
+                    .rank
+                    .get(&(sym[i].clone(), sym[i + 1].clone()))
+                {
+                    if best.map_or(true, |(_, br)| r < br) {
+                        best = Some((i, r));
+                    }
+                }
+            }
+            match best {
+                Some((i, _)) => {
+                    let right = sym.remove(i + 1);
+                    sym[i].extend_from_slice(&right);
+                }
+                None => break,
+            }
+        }
+        sym.iter().map(|s| self.ids[s]).collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut out = Vec::new();
+        for &t in ids {
+            if t >= N_SPECIAL && (t as usize) < self.tokens.len() {
+                out.extend_from_slice(&self.tokens[t as usize]);
+            }
+        }
+        String::from_utf8_lossy(&out).into_owned()
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tokenizer {
+        // merges: ("t","h")->th, ("th","e")->the, ("e"," ")->"e "
+        Tokenizer::from_merges(
+            vec![
+                (b"t".to_vec(), b"h".to_vec()),
+                (b"th".to_vec(), b"e".to_vec()),
+                (b"e".to_vec(), b" ".to_vec()),
+            ],
+            512,
+        )
+    }
+
+    #[test]
+    fn encodes_with_merges() {
+        let t = toy();
+        let ids = t.encode("the");
+        assert_eq!(ids.len(), 1);
+        assert_eq!(ids[0], N_SPECIAL + 256 + 1);
+    }
+
+    #[test]
+    fn rank_order_beats_position() {
+        // in "othe", pair (t,h) rank 0 applies before (e, ) etc.
+        let t = toy();
+        assert_eq!(t.decode(&t.encode("othe")), "othe");
+    }
+
+    #[test]
+    fn roundtrip_ascii_and_utf8() {
+        let t = toy();
+        for s in ["hello the world", "héllo ✨", "", "a", "the the the"] {
+            assert_eq!(t.decode(&t.encode(s)), s, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn specials_skipped_in_decode() {
+        let t = toy();
+        let mut ids = vec![BOS];
+        ids.extend(t.encode("hi"));
+        ids.push(EOS);
+        assert_eq!(t.decode(&ids), "hi");
+    }
+
+    #[test]
+    fn byte_fallback() {
+        let t = toy();
+        let s = "\u{0007}\u{00ff}";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+}

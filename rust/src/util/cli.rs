@@ -1,0 +1,189 @@
+//! Tiny CLI argument parser (offline substitute for clap): subcommands,
+//! `--flag`, `--key value` / `--key=value`, positionals, typed accessors
+//! and generated usage text.
+
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+/// Declarative option spec used for parsing + usage text.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// (long name, takes value, help)
+    pub options: Vec<(&'static str, bool, &'static str)>,
+}
+
+impl Spec {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for (name, takes, help) in &self.options {
+            let v = if *takes { " <value>" } else { "" };
+            s.push_str(&format!("  --{name}{v}\n      {help}\n"));
+        }
+        s
+    }
+
+    /// Parse argv (without program name). `with_subcommand` consumes the
+    /// first non-flag token as a subcommand.
+    pub fn parse(&self, argv: &[String], with_subcommand: bool) -> Result<Args> {
+        let known: BTreeMap<&str, bool> =
+            self.options.iter().map(|(n, t, _)| (*n, *t)).collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let takes = *known.get(key).ok_or_else(|| {
+                    Error::Config(format!("unknown option --{key}\n\n{}", self.usage()))
+                })?;
+                if takes {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?
+                        }
+                    };
+                    out.options.insert(key.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(Error::Config(format!("--{key} takes no value")));
+                    }
+                    out.flags.push(key.to_string());
+                }
+            } else if with_subcommand && out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects a number, got {v:?}"))),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--k0 3,4,5`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.options.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| Error::Config(format!("--{name}: bad entry {p:?}")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec {
+            name: "t",
+            about: "test",
+            options: vec![
+                ("config", true, "model config"),
+                ("k0", true, "baseline experts"),
+                ("verbose", false, "chatty"),
+            ],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = spec()
+            .parse(&argv(&["serve", "--config", "small", "--verbose", "pos1"]), true)
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.str_opt("config"), Some("small"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = spec().parse(&argv(&["--config=base"]), false).unwrap();
+        assert_eq!(a.str_opt("config"), Some("base"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(spec().parse(&argv(&["--nope"]), false).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse(&argv(&["--config"]), false).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = spec().parse(&argv(&["--k0", "5"]), false).unwrap();
+        assert_eq!(a.usize_or("k0", 3).unwrap(), 5);
+        assert_eq!(a.usize_or("missing", 3).unwrap(), 3);
+        let a = spec().parse(&argv(&["--k0", "3,4,5"]), false).unwrap();
+        assert_eq!(a.usize_list_or("k0", &[]).unwrap(), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = spec().parse(&argv(&["--k0", "x"]), false).unwrap();
+        assert!(a.usize_or("k0", 3).is_err());
+    }
+}

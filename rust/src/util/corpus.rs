@@ -1,0 +1,158 @@
+//! Corpus loader + workload sampling.
+//!
+//! Reads the build-time synthetic corpus (`data/corpus.txt` + parallel
+//! `data/corpus.domains`) and samples evaluation/serving workloads from it:
+//! domain-pure batches ("similar distributions", the conservative regime of
+//! paper §6) or mixed batches (the diverse regime of §4.1).
+
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+pub const DOMAINS: [&str; 4] = ["prose", "code", "math", "qa"];
+
+#[derive(Debug)]
+pub struct Corpus {
+    pub lines: Vec<String>,
+    /// domain index (into DOMAINS) per line
+    pub domains: Vec<u8>,
+    /// line indices grouped by domain
+    pub by_domain: Vec<Vec<usize>>,
+}
+
+impl Corpus {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let txt = std::fs::read_to_string(dir.join("corpus.txt"))
+            .map_err(|e| Error::Io(format!("corpus.txt: {e} (run `make artifacts`)")))?;
+        let dom = std::fs::read_to_string(dir.join("corpus.domains"))
+            .map_err(|e| Error::Io(format!("corpus.domains: {e}")))?;
+        let lines: Vec<String> = txt.lines().map(|s| s.to_string()).collect();
+        let domains: Vec<u8> = dom
+            .lines()
+            .map(|d| {
+                DOMAINS
+                    .iter()
+                    .position(|x| *x == d)
+                    .map(|i| i as u8)
+                    .ok_or_else(|| Error::Artifact(format!("unknown domain {d:?}")))
+            })
+            .collect::<Result<_>>()?;
+        if lines.len() != domains.len() {
+            return Err(Error::Artifact(format!(
+                "corpus length mismatch: {} lines vs {} domains",
+                lines.len(),
+                domains.len()
+            )));
+        }
+        let mut by_domain = vec![Vec::new(); DOMAINS.len()];
+        for (i, &d) in domains.iter().enumerate() {
+            by_domain[d as usize].push(i);
+        }
+        Ok(Corpus { lines, domains, by_domain })
+    }
+
+    /// Concatenate random lines (all domains) until >= n_chars.
+    pub fn sample_text(&self, rng: &mut Rng, n_chars: usize) -> String {
+        let mut out = String::new();
+        while out.len() < n_chars {
+            out.push_str(&self.lines[rng.below(self.lines.len())]);
+            out.push(' ');
+        }
+        out
+    }
+
+    /// Like `sample_text` but restricted to one domain.
+    pub fn sample_text_domain(&self, rng: &mut Rng, domain: usize, n_chars: usize) -> String {
+        let pool = &self.by_domain[domain];
+        let mut out = String::new();
+        while out.len() < n_chars {
+            out.push_str(&self.lines[pool[rng.below(pool.len())]]);
+            out.push(' ');
+        }
+        out
+    }
+
+    /// A batch of B prompts. `mixed = true` draws each prompt from a random
+    /// domain (diverse batch); `false` uses one domain for the whole batch
+    /// (similar batch — the paper's conservative benchmark regime).
+    pub fn sample_batch(
+        &self,
+        rng: &mut Rng,
+        b: usize,
+        n_chars: usize,
+        mixed: bool,
+    ) -> Vec<String> {
+        let fixed = rng.below(DOMAINS.len());
+        (0..b)
+            .map(|_| {
+                let d = if mixed { rng.below(DOMAINS.len()) } else { fixed };
+                self.sample_text_domain(rng, d, n_chars)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_corpus(dir: &Path) {
+        let mut t = std::fs::File::create(dir.join("corpus.txt")).unwrap();
+        let mut d = std::fs::File::create(dir.join("corpus.domains")).unwrap();
+        for i in 0..40 {
+            writeln!(t, "line number {i} with words").unwrap();
+            writeln!(d, "{}", DOMAINS[i % 4]).unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_and_groups() {
+        let dir = std::env::temp_dir().join("oea_corpus_test1");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_corpus(&dir);
+        let c = Corpus::load(&dir).unwrap();
+        assert_eq!(c.lines.len(), 40);
+        for d in 0..4 {
+            assert_eq!(c.by_domain[d].len(), 10);
+        }
+    }
+
+    #[test]
+    fn domain_pure_sampling() {
+        let dir = std::env::temp_dir().join("oea_corpus_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_corpus(&dir);
+        let c = Corpus::load(&dir).unwrap();
+        let mut rng = Rng::new(0);
+        let s = c.sample_text_domain(&mut rng, 2, 100);
+        assert!(s.len() >= 100);
+        // every line in domain 2 has index % 4 == 2
+        for part in s.split("line number ").skip(1) {
+            let n: usize = part.split_whitespace().next().unwrap().parse().unwrap();
+            assert_eq!(n % 4, 2);
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let dir = std::env::temp_dir().join("oea_corpus_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_corpus(&dir);
+        let c = Corpus::load(&dir).unwrap();
+        let mut rng = Rng::new(1);
+        let b = c.sample_batch(&mut rng, 8, 50, true);
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|p| p.len() >= 50));
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("oea_corpus_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_corpus(&dir);
+        std::fs::write(dir.join("corpus.domains"), "prose\n").unwrap();
+        assert!(Corpus::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,70 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Library error type. A thin `String`-carrying error that also wraps
+/// [`xla::Error`] and [`std::io::Error`] so the whole stack can use one
+/// `Result` alias.
+#[derive(Debug)]
+pub enum Error {
+    /// Malformed configuration / CLI usage.
+    Config(String),
+    /// JSON parse or encode failure.
+    Json(String),
+    /// Artifact manifest / weights problems.
+    Artifact(String),
+    /// XLA / PJRT failure.
+    Xla(String),
+    /// I/O failure with context.
+    Io(String),
+    /// Serving-engine invariant violation or capacity problem.
+    Engine(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Engine(m) => write!(f, "engine error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_variant() {
+        let e = Error::Config("bad k0".into());
+        assert_eq!(e.to_string(), "config error: bad k0");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

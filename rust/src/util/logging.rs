@@ -1,0 +1,71 @@
+//! Leveled stderr logger, configured via `OEA_LOG` (error|warn|info|debug).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const ERROR: u8 = 0;
+pub const WARN: u8 = 1;
+pub const INFO: u8 = 2;
+pub const DEBUG: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+pub fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != u8::MAX {
+        return l;
+    }
+    let l = match std::env::var("OEA_LOG").as_deref() {
+        Ok("error") => ERROR,
+        Ok("warn") => WARN,
+        Ok("debug") => DEBUG,
+        _ => INFO,
+    };
+    LEVEL.store(l, Ordering::Relaxed);
+    l
+}
+
+pub fn set_level(l: u8) {
+    LEVEL.store(l, Ordering::Relaxed);
+}
+
+pub fn log(lvl: u8, tag: &str, msg: &str) {
+    if lvl <= level() {
+        let name = ["ERROR", "WARN", "INFO", "DEBUG"][lvl as usize];
+        eprintln!("[{name}] {tag}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::INFO, $tag, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::WARN, $tag, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::DEBUG, $tag, &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(WARN);
+        assert_eq!(level(), WARN);
+        log(ERROR, "t", "visible");
+        log(DEBUG, "t", "hidden");
+        set_level(INFO);
+    }
+}

@@ -1,0 +1,17 @@
+//! Hand-rolled substrates: this build environment is fully offline, so the
+//! usual ecosystem crates are replaced with small, tested, in-tree
+//! implementations (DESIGN.md §5): json (serde_json), cli (clap), rng
+//! (rand), stats (statrs), threadpool (rayon), proptest, bench (criterion),
+//! bpe (tokenizers), corpus (the eval dataset), logging (env_logger).
+
+pub mod bench;
+pub mod bpe;
+pub mod cli;
+pub mod corpus;
+pub mod error;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

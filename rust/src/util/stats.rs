@@ -1,0 +1,278 @@
+//! Statistics helpers: mean/stderr, linear regression with R², Pareto
+//! frontiers, histograms and the paper's "standard-error adjusted" rule.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample variance (n-1 denominator; 0.0 if n < 2).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Standard error of the mean.
+pub fn stderr(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    stddev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// The paper's comparison rule (§4.2 fn. 3): `(mu, se)` is *worse* than
+/// `(mu_ref, se_ref)` iff `mu + se < mu_ref - se_ref` (higher is better).
+pub fn se_adjusted_worse(mu: f64, se: f64, mu_ref: f64, se_ref: f64) -> bool {
+    mu + se < mu_ref - se_ref
+}
+
+/// Percentile via linear interpolation (p in [0, 100]); xs need not be sorted.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Ordinary least squares fit y = slope·x + intercept.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinFit {
+    pub slope: f64,
+    pub intercept: f64,
+    pub r2: f64,
+}
+
+/// OLS over (x, y) pairs. Returns None for < 2 points or degenerate x.
+pub fn linreg(xs: &[f64], ys: &[f64]) -> Option<LinFit> {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return None;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    if sxx == 0.0 {
+        return None;
+    }
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (slope * x + intercept);
+            e * e
+        })
+        .sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    Some(LinFit { slope, intercept, r2 })
+}
+
+/// Pareto frontier for minimize-both objectives: returns indices of points
+/// not dominated by any other (a dominates b iff a.x <= b.x && a.y <= b.y
+/// with at least one strict), sorted by x.
+pub fn pareto_min_min(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .0
+            .partial_cmp(&points[b].0)
+            .unwrap()
+            .then(points[a].1.partial_cmp(&points[b].1).unwrap())
+    });
+    let mut out = Vec::new();
+    let mut best_y = f64::INFINITY;
+    for &i in &idx {
+        if points[i].1 < best_y {
+            out.push(i);
+            best_y = points[i].1;
+        }
+    }
+    out
+}
+
+/// Round to the nearest multiple of `step` (the paper's plot de-crowding:
+/// CE deltas to 0.005, expert counts to 0.1).
+pub fn round_to(x: f64, step: f64) -> f64 {
+    (x / step).round() * step
+}
+
+/// Fixed-width histogram over [lo, hi) with n bins (+ clamped edges).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(hi > lo && n > 0);
+        Histogram { lo, hi, bins: vec![0; n] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let n = self.bins.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * n as f64).floor();
+        let i = (t.max(0.0) as usize).min(n - 1);
+        self.bins[i] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+}
+
+/// Welford online mean/variance accumulator (streaming metrics).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stderr(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.variance() / self.n as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stderr_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((stderr(&xs) - (variance(&xs) / 4.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linreg_exact_recovery() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.5 * x - 2.0).collect();
+        let f = linreg(&xs, &ys).unwrap();
+        assert!((f.slope - 3.5).abs() < 1e-10);
+        assert!((f.intercept + 2.0).abs() < 1e-9);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linreg_r2_degrades_with_noise() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let mut rng = crate::util::rng::Rng::new(0);
+        let ys: Vec<f64> = xs.iter().map(|x| x + 30.0 * rng.gaussian()).collect();
+        let f = linreg(&xs, &ys).unwrap();
+        assert!(f.r2 < 0.99 && f.r2 > 0.2, "r2 = {}", f.r2);
+    }
+
+    #[test]
+    fn linreg_degenerate() {
+        assert!(linreg(&[1.0], &[2.0]).is_none());
+        assert!(linreg(&[2.0, 2.0], &[1.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn pareto_frontier() {
+        // (experts, ce): minimize both
+        let pts = [(1.0, 5.0), (2.0, 3.0), (3.0, 4.0), (4.0, 1.0), (2.5, 3.0)];
+        let f = pareto_min_min(&pts);
+        assert_eq!(f, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn pareto_single_point() {
+        assert_eq!(pareto_min_min(&[(1.0, 1.0)]), vec![0]);
+        assert!(pareto_min_min(&[]).is_empty());
+    }
+
+    #[test]
+    fn se_rule_matches_paper() {
+        // worse iff mu+se < mu_ref - se_ref
+        assert!(se_adjusted_worse(50.0, 1.0, 60.0, 1.0));
+        assert!(!se_adjusted_worse(59.5, 1.0, 60.0, 1.0));
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn round_to_steps() {
+        assert!((round_to(0.0126, 0.005) - 0.015).abs() < 1e-12);
+        assert!((round_to(8.24, 0.1) - 8.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 5);
+        h.add(-1.0);
+        h.add(0.5);
+        h.add(9.9);
+        h.add(25.0);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[4], 2);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::default();
+        for x in xs {
+            w.add(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,153 @@
+//! Fixed-size thread pool with a scoped `parallel_map` (offline substitute
+//! for rayon). Sized to the host by default; on a 1-core box it degrades to
+//! an inline executor with identical semantics.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A classic channel-fed worker pool.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// `n = 0` picks the available parallelism.
+    pub fn new(n: usize) -> Self {
+        let n = if n == 0 {
+            thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            n
+        };
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+    }
+
+    /// Apply `f` to every item, preserving order. Panics in `f` are
+    /// propagated to the caller after all workers drain.
+    pub fn parallel_map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
+    where
+        T: Send + 'static,
+        U: Send + 'static,
+        F: Fn(T) -> U + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..n {
+            let (i, r) = rx.recv().expect("worker died");
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(e) => panic = Some(e),
+            }
+        }
+        if let Some(e) = panic {
+            std::panic::resume_unwind(e);
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.parallel_map((0..50).collect(), |x: usize| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.parallel_map(Vec::<usize>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn parallel_map_propagates_panic() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.parallel_map(vec![1, 2, 3], |x: i32| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn single_worker_is_sequentialish() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.size(), 1);
+        let out = pool.parallel_map(vec![1, 2, 3], |x: i32| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+}

@@ -1,0 +1,225 @@
+//! End-to-end engine integration over the tiny artifacts: continuous
+//! batching, admission bounds, determinism, policy effects on T, and the
+//! HTTP server loop. Requires `make artifacts`.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use oea_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest};
+use oea_serve::latency::H100Presets;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::runtime::Runtime;
+
+fn artifact_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+// Single shared PJRT client (see integration_runtime.rs for why).
+struct Shared(Option<ModelRunner>);
+unsafe impl Send for Shared {}
+
+static RUNNER: OnceLock<Mutex<Shared>> = OnceLock::new();
+
+fn shared() -> MutexGuard<'static, Shared> {
+    RUNNER
+        .get_or_init(|| {
+            let rt = Runtime::load(&artifact_root(), "tiny")
+                .expect("run `make artifacts` first");
+            Mutex::new(Shared(Some(ModelRunner::new(rt))))
+        })
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// Build an engine from the shared runner, run `f`, put the runner back.
+fn with_engine<F, R>(cfg_mod: impl FnOnce(&mut EngineConfig), f: F) -> R
+where
+    F: FnOnce(&mut Engine) -> R,
+{
+    let mut guard = shared();
+    let runner = guard.0.take().expect("runner in use");
+    let mut cfg = EngineConfig {
+        policy: Policy::Vanilla { k: 2 },
+        mask_padding: true,
+        max_running: 4,
+        eos_token: None,
+        cost_model: H100Presets::qwen3_30b(),
+    };
+    cfg_mod(&mut cfg);
+    let mut engine = Engine::new(runner, cfg).unwrap();
+    let out = f(&mut engine);
+    guard.0 = Some(engine.runner);
+    out
+}
+
+fn req(id: u64, len: usize, gen: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: (0..len).map(|i| 3 + ((id as usize * 31 + i * 7) % 500) as i32).collect(),
+        max_new_tokens: gen,
+        temperature: 0.0,
+        top_p: 1.0,
+        seed: id,
+    }
+}
+
+#[test]
+fn serves_batch_to_completion() {
+    with_engine(|_| {}, |engine| {
+        for i in 0..6 {
+            engine.submit(req(i, 5 + i as usize, 8));
+        }
+        let done = engine.run_to_completion().unwrap();
+        assert_eq!(done.len(), 6);
+        for f in &done {
+            assert_eq!(f.reason, FinishReason::Length);
+            assert_eq!(f.tokens.len(), 8);
+        }
+        assert!(engine.moe.len() > 0);
+        assert!(engine.requests.n_finished == 6);
+        assert!(engine.requests.total_generated_tokens == 48);
+    });
+}
+
+#[test]
+fn respects_max_running() {
+    with_engine(
+        |c| c.max_running = 2,
+        |engine| {
+            for i in 0..5 {
+                engine.submit(req(100 + i, 4, 4));
+            }
+            while !engine.idle() {
+                engine.step().unwrap();
+                assert!(engine.n_running() <= 2, "exceeded max_running");
+            }
+        },
+    );
+}
+
+#[test]
+fn greedy_generation_is_deterministic() {
+    let run = || {
+        with_engine(|_| {}, |engine| {
+            engine.submit(req(7, 6, 10));
+            let done = engine.run_to_completion().unwrap();
+            done[0].tokens.clone()
+        })
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn batched_greedy_matches_solo_greedy() {
+    // continuous batching must not change a request's greedy output
+    let solo = with_engine(
+        |c| c.max_running = 1,
+        |engine| {
+            engine.submit(req(42, 7, 8));
+            engine.run_to_completion().unwrap()[0].tokens.clone()
+        },
+    );
+    let batched = with_engine(
+        |c| c.max_running = 4,
+        |engine| {
+            for i in 0..4 {
+                engine.submit(req(if i == 0 { 42 } else { 200 + i }, 7, 8));
+            }
+            let done = engine.run_to_completion().unwrap();
+            done.iter().find(|f| f.id == 42).unwrap().tokens.clone()
+        },
+    );
+    assert_eq!(solo, batched);
+}
+
+#[test]
+fn oea_engine_activates_fewer_experts() {
+    let t_vanilla = with_engine(
+        |c| c.policy = Policy::Vanilla { k: 2 },
+        |engine| {
+            for i in 0..4 {
+                engine.submit(req(300 + i, 6, 6));
+            }
+            engine.run_to_completion().unwrap();
+            engine.moe.avg_t()
+        },
+    );
+    let t_oea = with_engine(
+        |c| c.policy = Policy::OeaSimplified { k0: 1, k: 2 },
+        |engine| {
+            for i in 0..4 {
+                engine.submit(req(300 + i, 6, 6));
+            }
+            engine.run_to_completion().unwrap();
+            engine.moe.avg_t()
+        },
+    );
+    assert!(
+        t_oea < t_vanilla,
+        "OEA avg T {t_oea} must be below vanilla {t_vanilla}"
+    );
+}
+
+#[test]
+fn rejects_overlong_prompts() {
+    with_engine(|_| {}, |engine| {
+        engine.submit(req(900, 4096, 4)); // greatly exceeds s_max
+        let done = engine.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].reason, FinishReason::KvExhausted);
+        assert!(done[0].tokens.is_empty());
+    });
+}
+
+#[test]
+fn kv_exhaustion_terminates_generation() {
+    // tiny s_max = 128; ask for more tokens than fit
+    with_engine(|_| {}, |engine| {
+        engine.submit(req(901, 100, 1000));
+        let done = engine.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].reason, FinishReason::KvExhausted);
+        // generated until the cache filled: ~ s_max - prompt
+        assert!(done[0].tokens.len() >= 20 && done[0].tokens.len() <= 30);
+    });
+}
+
+#[test]
+fn continuous_admission_joins_mid_flight() {
+    with_engine(
+        |c| c.max_running = 2,
+        |engine| {
+            engine.submit(req(500, 5, 12));
+            // run a few steps before the second arrives
+            for _ in 0..4 {
+                engine.step().unwrap();
+            }
+            engine.submit(req(501, 5, 12));
+            let done = engine.run_to_completion().unwrap();
+            assert_eq!(done.len(), 2);
+            for f in done {
+                assert_eq!(f.tokens.len(), 12);
+            }
+        },
+    );
+}
+
+#[test]
+fn metrics_fit_is_linearish() {
+    // enough varied steps -> latency-vs-T fit exists (measured CPU side)
+    with_engine(
+        |c| c.policy = Policy::OeaSimplified { k0: 1, k: 2 },
+        |engine| {
+            for i in 0..6 {
+                engine.submit(req(600 + i, 4 + i as usize, 10));
+            }
+            engine.run_to_completion().unwrap();
+            let curve = engine.moe.latency_vs_t(false);
+            assert!(!curve.is_empty());
+            // simulated side must fit the cost model exactly
+            let fit = engine.moe.linear_fit(true).unwrap();
+            assert!(fit.r2 > 0.999, "simulated fit r2 = {}", fit.r2);
+        },
+    );
+}

@@ -1,0 +1,346 @@
+//! Runtime + model-pipeline integration over the REAL tiny artifacts.
+//! Requires `make artifacts`. The cross-language ground truth is
+//! `artifacts/tiny/testvec.json`, produced by `python/compile/aot.py` from
+//! the pure-JAX reference model.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use oea_serve::model::{ModelRunner, PrefilledSeq};
+use oea_serve::moe::policy::Policy;
+use oea_serve::runtime::Runtime;
+use oea_serve::util::json::Json;
+
+fn artifact_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// One shared PJRT client for the whole test binary: xla_extension 0.5.1's
+/// CPU client segfaults when a process creates a second TfrtCpuClient after
+/// destroying the first, so every test borrows the same Runtime (PJRT CPU
+/// execution is thread-safe; the mutex serializes cache mutation).
+struct Shared(ModelRunner);
+unsafe impl Send for Shared {}
+
+static RUNNER: OnceLock<Mutex<Shared>> = OnceLock::new();
+
+fn runner() -> MutexGuard<'static, Shared> {
+    RUNNER
+        .get_or_init(|| {
+            let rt = Runtime::load(&artifact_root(), "tiny")
+                .expect("run `make artifacts` first");
+            Mutex::new(Shared(ModelRunner::new(rt)))
+        })
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+impl std::ops::Deref for Shared {
+    type Target = ModelRunner;
+    fn deref(&self) -> &ModelRunner {
+        &self.0
+    }
+}
+
+#[test]
+fn loads_manifest_weights_vocab() {
+    let m = runner();
+    let c = m.cfg();
+    assert_eq!(c.name, "tiny");
+    assert_eq!(c.n_experts, 8);
+    for l in 0..c.n_layers {
+        for s in ["wq", "wk", "wv", "wo", "n1", "n2", "router", "wg", "wu", "wd"] {
+            m.rt.weight(&format!("l{l}.{s}")).unwrap();
+        }
+    }
+    m.rt.weight("embed").unwrap();
+    m.rt.weight("unembed").unwrap();
+    m.rt.weight("final_norm").unwrap();
+}
+
+#[test]
+fn decode_matches_python_reference() {
+    let m = runner();
+    let c = m.cfg().clone();
+    let tv_text =
+        std::fs::read_to_string(artifact_root().join("tiny/testvec.json")).unwrap();
+    let tv = Json::parse(&tv_text).unwrap();
+    let b = tv.get("batch").unwrap().as_usize().unwrap();
+    let mut batch = m.new_batch(b).unwrap();
+
+    for step in tv.get("steps").unwrap().as_arr().unwrap() {
+        let tokens: Vec<i32> = step
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        let pos_val = step.get("pos").unwrap().as_usize().unwrap() as i32;
+        let pos = vec![pos_val; b];
+        let live = vec![true; b];
+        let out = m
+            .decode_step(
+                &mut batch,
+                &tokens,
+                &pos,
+                &live,
+                Policy::Vanilla { k: c.top_k },
+                true,
+            )
+            .unwrap();
+
+        // head of the logits matrix matches the JAX reference
+        let want_head: Vec<f64> = step
+            .get("logits_head")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        for (i, w) in want_head.iter().enumerate() {
+            let row = i / 8;
+            let col = i % 8;
+            let got = out.logits[row * c.vocab + col] as f64;
+            assert!(
+                (got - w).abs() < 2e-3 + 1e-3 * w.abs(),
+                "step pos={pos_val} logit[{row},{col}]: got {got}, want {w}"
+            );
+        }
+        // frobenius norm matches
+        let want_norm = step.get("logits_norm").unwrap().as_f64().unwrap();
+        let got_norm =
+            (out.logits.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt();
+        assert!(
+            (got_norm - want_norm).abs() / want_norm < 1e-3,
+            "norm: got {got_norm}, want {want_norm}"
+        );
+        // argmax agrees
+        for (row, am) in step
+            .get("argmax")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .enumerate()
+        {
+            let want = am.as_usize().unwrap();
+            let r = &out.logits[row * c.vocab..(row + 1) * c.vocab];
+            let got = r
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(got, want, "argmax row {row} at pos {pos_val}");
+        }
+        // vanilla top-k: every layer's load = B * k
+        for ls in &out.layers {
+            assert_eq!(ls.load, b * c.top_k);
+            assert!(ls.t >= c.top_k && ls.t <= (b * c.top_k).min(c.n_experts));
+        }
+    }
+}
+
+#[test]
+fn prefill_then_decode_consistent_with_teacher_forcing() {
+    // decode(prompt token-by-token) and prefill(prompt) must produce the
+    // same next-token distribution.
+    let m = runner();
+    let c = m.cfg().clone();
+    let prompt: Vec<i32> = vec![5, 100, 42, 260, 17, 300, 9];
+
+    // path A: teacher-forced decode from scratch (bucket 1)
+    let mut batch_a = m.new_batch(1).unwrap();
+    let mut last = None;
+    for (t, &tok) in prompt.iter().enumerate() {
+        let out = m
+            .decode_step(
+                &mut batch_a,
+                &[tok],
+                &[t as i32],
+                &[true],
+                Policy::Vanilla { k: c.top_k },
+                true,
+            )
+            .unwrap();
+        last = Some(out.logits);
+    }
+    let logits_a = last.unwrap();
+
+    // path B: fused prefill
+    let seq: PrefilledSeq = m.prefill(&prompt).unwrap();
+    assert_eq!(seq.n_tokens, prompt.len());
+    let logits_b = &seq.last_logits;
+
+    for i in 0..c.vocab {
+        let (a, b) = (logits_a[i] as f64, logits_b[i] as f64);
+        assert!(
+            (a - b).abs() < 2e-3 + 2e-3 * a.abs().max(b.abs()),
+            "logit {i}: decode {a} vs prefill {b}"
+        );
+    }
+}
+
+#[test]
+fn multi_chunk_prefill_matches_single_stream() {
+    // prompt longer than one chunk exercises the chunk loop + pos offsets
+    let m = runner();
+    let c = m.cfg().clone();
+    let n = c.prefill_chunk + 5;
+    let prompt: Vec<i32> = (0..n).map(|i| 3 + (i * 37 % (c.vocab - 3)) as i32).collect();
+
+    let seq = m.prefill(&prompt).unwrap();
+
+    let mut b1 = m.new_batch(1).unwrap();
+    let mut last = None;
+    for (t, &tok) in prompt.iter().enumerate() {
+        let out = m
+            .decode_step(&mut b1, &[tok], &[t as i32], &[true],
+                         Policy::Vanilla { k: c.top_k }, true)
+            .unwrap();
+        last = Some(out.logits);
+    }
+    let logits_a = last.unwrap();
+    for i in 0..c.vocab {
+        let (a, b) = (logits_a[i] as f64, seq.last_logits[i] as f64);
+        assert!(
+            (a - b).abs() < 3e-3 + 3e-3 * a.abs().max(b.abs()),
+            "logit {i}: decode {a} vs chunked prefill {b}"
+        );
+    }
+}
+
+#[test]
+fn install_prefilled_and_continue() {
+    // prefill a prompt, install into a bucket-2 batch at slot 1, decode one
+    // step; the live row must match decoding the same prompt in bucket 1.
+    let m = runner();
+    let c = m.cfg().clone();
+    let prompt: Vec<i32> = vec![7, 200, 33, 450];
+    let next_tok = 12i32;
+
+    let mut b1 = m.new_batch(1).unwrap();
+    for (t, &tok) in prompt.iter().enumerate() {
+        m.decode_step(&mut b1, &[tok], &[t as i32], &[true],
+                      Policy::Vanilla { k: c.top_k }, true)
+            .unwrap();
+    }
+    let ref_out = m
+        .decode_step(&mut b1, &[next_tok], &[prompt.len() as i32], &[true],
+                     Policy::Vanilla { k: c.top_k }, true)
+        .unwrap();
+
+    let seq = m.prefill(&prompt).unwrap();
+    let mut b2 = m.new_batch(2).unwrap();
+    m.install_prefilled(&mut b2, 1, &seq).unwrap();
+    let out = m
+        .decode_step(
+            &mut b2,
+            &[0, next_tok],
+            &[0, prompt.len() as i32],
+            &[false, true],
+            Policy::Vanilla { k: c.top_k },
+            true,
+        )
+        .unwrap();
+
+    for i in 0..c.vocab {
+        let a = ref_out.logits[i] as f64;
+        let b = out.logits[c.vocab + i] as f64;
+        assert!(
+            (a - b).abs() < 3e-3 + 3e-3 * a.abs().max(b.abs()),
+            "logit {i}: ref {a} vs installed {b}"
+        );
+    }
+}
+
+#[test]
+fn oea_reduces_t_but_keeps_valid_pipeline() {
+    let m = runner();
+    let c = m.cfg().clone();
+    let b = 4;
+    let mut batch = m.new_batch(b).unwrap();
+    let tokens: Vec<i32> = vec![10, 90, 200, 340];
+    let pos = vec![0i32; b];
+    let live = vec![true; b];
+
+    let van = m
+        .decode_step(&mut batch, &tokens, &pos, &live,
+                     Policy::Vanilla { k: c.top_k }, true)
+        .unwrap();
+    let mut batch2 = m.new_batch(b).unwrap();
+    let oea = m
+        .decode_step(&mut batch2, &tokens, &pos, &live,
+                     Policy::OeaSimplified { k0: 1, k: c.top_k }, true)
+        .unwrap();
+    for (lv, lo) in van.layers.iter().zip(&oea.layers) {
+        assert!(lo.t <= lv.t, "OEA must not activate more experts");
+    }
+    assert!(oea.logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn repack_preserves_rows() {
+    let m = runner();
+    let c = m.cfg().clone();
+    let prompt: Vec<i32> = vec![3, 8, 150];
+    let seq = m.prefill(&prompt).unwrap();
+    let mut b2 = m.new_batch(2).unwrap();
+    m.install_prefilled(&mut b2, 0, &seq).unwrap();
+
+    // grow to bucket 4, moving slot 0 -> slot 2
+    let mut b4 = m.repack(&b2, 4, &[Some(2), None]).unwrap();
+    let next = 44i32;
+    let out4 = m
+        .decode_step(
+            &mut b4,
+            &[0, 0, next, 0],
+            &[0, 0, prompt.len() as i32, 0],
+            &[false, false, true, false],
+            Policy::Vanilla { k: c.top_k },
+            true,
+        )
+        .unwrap();
+
+    // reference without repack
+    let mut b2b = m.new_batch(2).unwrap();
+    m.install_prefilled(&mut b2b, 0, &seq).unwrap();
+    let out2 = m
+        .decode_step(
+            &mut b2b,
+            &[next, 0],
+            &[prompt.len() as i32, 0],
+            &[true, false],
+            Policy::Vanilla { k: c.top_k },
+            true,
+        )
+        .unwrap();
+
+    for i in 0..c.vocab {
+        let a = out2.logits[i] as f64;
+        let b = out4.logits[2 * c.vocab + i] as f64;
+        assert!(
+            (a - b).abs() < 3e-3 + 3e-3 * a.abs().max(b.abs()),
+            "logit {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn tokenizer_loads_and_roundtrips() {
+    let m = runner();
+    let vocab_path = artifact_root().join("tiny/vocab.json");
+    let tok = oea_serve::util::bpe::Tokenizer::load(&vocab_path).unwrap();
+    assert!(tok.n_tokens() <= m.cfg().vocab);
+    for s in [
+        "The quiet river carried the ancient lantern.",
+        "let count: int = buffer % 99;",
+        "Q: what is the capital of the village? A: about 42.",
+    ] {
+        assert_eq!(tok.decode(&tok.encode(s)), s);
+        assert!(tok.encode(s).iter().all(|&t| (t as usize) < m.cfg().vocab));
+    }
+}

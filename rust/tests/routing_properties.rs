@@ -1,0 +1,332 @@
+//! Property suites over the routing engine — the paper's algorithmic
+//! invariants (DESIGN.md §9), checked on randomized score matrices.
+
+use oea_serve::moe::policy::{route, Policy, RoutingInput};
+use oea_serve::moe::ScoreMatrix;
+use oea_serve::util::proptest::check;
+use oea_serve::util::rng::Rng;
+
+/// Random softmax-ish score matrix with concentration like a real router.
+fn random_scores(rng: &mut Rng, b: usize, n: usize) -> ScoreMatrix {
+    let mut scores = vec![0.0f32; b * n];
+    for i in 0..b {
+        let row = &mut scores[i * n..(i + 1) * n];
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (2.0 * rng.gaussian()).exp() as f32;
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    ScoreMatrix::new(b, n, scores)
+}
+
+fn random_input(rng: &mut Rng) -> (ScoreMatrix, Vec<bool>) {
+    let b = 1 + rng.below(24);
+    let n = [8, 16, 32, 64, 128][rng.below(5)];
+    let s = random_scores(rng, b, n);
+    let live: Vec<bool> = (0..b).map(|_| rng.bool(0.85)).collect();
+    (s, live)
+}
+
+#[test]
+fn oea_union_equals_pruned_union() {
+    // Phase 2 never grows T: OEA's active set == Phase 1's union.
+    check("oea-union", 150, |rng| {
+        let (s, live) = random_input(rng);
+        let k0 = 1 + rng.below(6);
+        let k_max = k0 + rng.below(6);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let pruned = route(Policy::Pruned { k0, p: 1.0 }, &input);
+        let oea = route(Policy::Oea { k0, p: 1.0, k_max, max_p: s.n }, &input);
+        assert_eq!(oea.active, pruned.active, "piggybacking must be free");
+    });
+}
+
+#[test]
+fn oea_sets_contain_baseline_and_stay_in_union() {
+    check("oea-sets", 150, |rng| {
+        let (s, live) = random_input(rng);
+        let k0 = 1 + rng.below(4);
+        let k_max = k0 + 1 + rng.below(6);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let d = route(Policy::Oea { k0, p: 1.0, k_max, max_p: s.n }, &input);
+        for i in 0..s.b {
+            if !live[i] {
+                assert!(d.sets[i].is_empty());
+                continue;
+            }
+            for j in 0..k0.min(s.n) {
+                let e = s.ranked(i, j) as u16;
+                assert!(d.sets[i].contains(&e), "token {i} lost baseline expert {e}");
+            }
+            assert!(d.sets[i].len() <= k_max);
+            for e in &d.sets[i] {
+                assert!(d.active.contains(e));
+            }
+        }
+    });
+}
+
+#[test]
+fn oea_k0_equals_k_recovers_vanilla() {
+    check("oea-vanilla", 100, |rng| {
+        let (s, live) = random_input(rng);
+        let k = 1 + rng.below(8);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let v = route(Policy::Vanilla { k }, &input);
+        let o = route(Policy::OeaSimplified { k0: k, k }, &input);
+        assert_eq!(v.sets, o.sets);
+        assert_eq!(v.combine, o.combine);
+    });
+}
+
+#[test]
+fn phase1_is_batch_independent() {
+    // A token's baseline set must not depend on who else is in the batch.
+    check("phase1-batch-independent", 80, |rng| {
+        let (s, _) = random_input(rng);
+        let k0 = 1 + rng.below(4);
+        let live_all = vec![true; s.b];
+        let input = RoutingInput { scores: &s, live: &live_all, mask_padding: true };
+        let full = route(Policy::Pruned { k0, p: 0.8 }, &input);
+
+        let i = rng.below(s.b);
+        let solo = ScoreMatrix::new(1, s.n, s.row(i).to_vec());
+        let live1 = vec![true];
+        let input1 = RoutingInput { scores: &solo, live: &live1, mask_padding: true };
+        let alone = route(Policy::Pruned { k0, p: 0.8 }, &input1);
+        assert_eq!(full.sets[i], alone.sets[0]);
+    });
+}
+
+#[test]
+fn combine_matrix_is_valid_distribution() {
+    check("combine-valid", 120, |rng| {
+        let (s, live) = random_input(rng);
+        let pol = match rng.below(5) {
+            0 => Policy::Vanilla { k: 1 + rng.below(8) },
+            1 => Policy::Pruned { k0: 1 + rng.below(6), p: 0.3 + rng.f64() * 0.7 },
+            2 => Policy::OeaSimplified { k0: 1 + rng.below(4), k: 2 + rng.below(8) },
+            3 => Policy::Lynx { k: 1 + rng.below(6), target_t: 1 + rng.below(s.n) },
+            _ => Policy::DynSkip { k: 1 + rng.below(6), tau: rng.f64() },
+        };
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let d = route(pol, &input);
+        for i in 0..s.b {
+            let row = &d.combine[i * s.n..(i + 1) * s.n];
+            let sum: f32 = row.iter().sum();
+            assert!(row.iter().all(|&x| x >= 0.0));
+            if live[i] && !d.sets[i].is_empty() {
+                assert!((sum - 1.0).abs() < 1e-4, "row {i} sums to {sum}");
+                for e in &d.sets[i] {
+                    assert!(row[*e as usize] > 0.0);
+                }
+            } else {
+                assert_eq!(sum, 0.0);
+            }
+            for e in 0..s.n {
+                if !d.sets[i].contains(&(e as u16)) {
+                    assert_eq!(row[e], 0.0);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn unfull_sets_exhaust_the_union() {
+    // if a token ends Phase 2 with fewer than k_max experts, it must hold
+    // the entire union (nothing left to piggyback)
+    check("piggyback-exhaustive", 100, |rng| {
+        let (s, live) = random_input(rng);
+        let k0 = 1 + rng.below(3);
+        let k_max = k0 + 1 + rng.below(4);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let d = route(Policy::Oea { k0, p: 1.0, k_max, max_p: s.n }, &input);
+        for i in 0..s.b {
+            if !live[i] || d.sets[i].len() >= k_max {
+                continue;
+            }
+            for e in &d.active {
+                assert!(
+                    d.sets[i].contains(e),
+                    "token {i} has {} < k_max={k_max} experts but skipped union expert {e}",
+                    d.sets[i].len()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn t_monotone_in_k0() {
+    check("t-monotone-k0", 80, |rng| {
+        let (s, live) = random_input(rng);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let mut prev_t = 0;
+        for k0 in 1..=6.min(s.n) {
+            let d = route(Policy::Pruned { k0, p: 1.0 }, &input);
+            assert!(d.t() >= prev_t, "T must grow with k0");
+            prev_t = d.t();
+        }
+    });
+}
+
+#[test]
+fn lynx_never_exceeds_vanilla_and_no_starvation() {
+    check("lynx-bounds", 100, |rng| {
+        let (s, live) = random_input(rng);
+        let k = 1 + rng.below(6);
+        let target = 1 + rng.below(s.n);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let v = route(Policy::Vanilla { k }, &input);
+        let l = route(Policy::Lynx { k, target_t: target }, &input);
+        assert!(l.t() <= v.t());
+        for i in 0..s.b {
+            if live[i] && v.t() > 0 {
+                assert!(!l.sets[i].is_empty(), "token {i} starved");
+            }
+        }
+    });
+}
+
+#[test]
+fn padding_masked_rows_contribute_nothing() {
+    check("padding-masked", 80, |rng| {
+        let (s, live) = random_input(rng);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let d = route(Policy::OeaSimplified { k0: 2, k: 4 }, &input);
+        let mut expect: Vec<u16> = Vec::new();
+        for i in 0..s.b {
+            if live[i] {
+                for e in &d.sets[i] {
+                    if !expect.contains(e) {
+                        expect.push(*e);
+                    }
+                }
+            } else {
+                assert!(d.sets[i].is_empty());
+            }
+        }
+        expect.sort();
+        assert_eq!(d.active, expect);
+    });
+}
+
+#[test]
+fn unmasked_padding_can_only_grow_t() {
+    check("padding-grows", 80, |rng| {
+        let (s, live) = random_input(rng);
+        let masked = route(
+            Policy::Vanilla { k: 2 },
+            &RoutingInput { scores: &s, live: &live, mask_padding: true },
+        );
+        let unmasked = route(
+            Policy::Vanilla { k: 2 },
+            &RoutingInput { scores: &s, live: &live, mask_padding: false },
+        );
+        assert!(unmasked.t() >= masked.t());
+    });
+}
+
+#[test]
+fn dynskip_subset_of_vanilla() {
+    check("dynskip-subset", 80, |rng| {
+        let (s, live) = random_input(rng);
+        let k = 1 + rng.below(6);
+        let tau = rng.f64();
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let v = route(Policy::Vanilla { k }, &input);
+        let d = route(Policy::DynSkip { k, tau }, &input);
+        for i in 0..s.b {
+            for e in &d.sets[i] {
+                assert!(v.sets[i].contains(e));
+            }
+            if live[i] {
+                assert!(!d.sets[i].is_empty(), "top-1 always kept");
+            }
+        }
+    });
+}
+
+#[test]
+fn expert_choice_respects_capacity() {
+    check("ec-capacity", 60, |rng| {
+        let (s, live) = random_input(rng);
+        let cap = 1 + rng.below(4);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let d = route(Policy::ExpertChoice { capacity: cap }, &input);
+        let mut counts = vec![0usize; s.n];
+        for set in &d.sets {
+            for &e in set {
+                counts[e as usize] += 1;
+            }
+        }
+        assert!(counts.iter().all(|&c| c <= cap));
+    });
+}
+
+#[test]
+fn top_p_cutoff_reduces_baseline() {
+    check("top-p-cutoff", 80, |rng| {
+        let (s, live) = random_input(rng);
+        let k0 = 2 + rng.below(5);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let with_p = route(Policy::Pruned { k0, p: 0.5 }, &input);
+        let without = route(Policy::Pruned { k0, p: 1.0 }, &input);
+        for i in 0..s.b {
+            assert!(with_p.sets[i].len() <= without.sets[i].len());
+        }
+    });
+}
+
+#[test]
+fn max_p_truncates_piggybacking() {
+    check("max-p", 80, |rng| {
+        let (s, live) = random_input(rng);
+        let k0 = 1 + rng.below(3);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        // max_p = k0 -> no rank past the baseline may be piggybacked
+        let d = route(Policy::Oea { k0, p: 1.0, k_max: s.n, max_p: k0 }, &input);
+        let pruned = route(Policy::Pruned { k0, p: 1.0 }, &input);
+        assert_eq!(d.sets, pruned.sets);
+    });
+}
+
+#[test]
+fn ep_routing_union_consistency() {
+    check("ep-union", 60, |rng| {
+        let (s, live) = random_input(rng);
+        let ranks = [2, 4, 8][rng.below(3)];
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let d = oea_serve::moe::ep::route_ep(&input, 2, 6, ranks, 0);
+        assert_eq!(
+            d.per_rank_t.iter().sum::<usize>(),
+            d.inner.t(),
+            "per-rank counts must partition T"
+        );
+        assert!(d.max_rank_t() * ranks >= d.inner.t());
+    });
+}
+
+#[test]
+fn policy_cli_roundtrip() {
+    for spec in [
+        "vanilla",
+        "pruned:k0=3",
+        "pruned:k0=4,p=0.7",
+        "oea:k0=3",
+        "oea-full:k0=3,p=0.7,kmax=9,maxp=32",
+        "lynx:t=16",
+        "dynskip:tau=0.3",
+        "expert-choice:cap=2",
+    ] {
+        let p = Policy::from_cli(spec, 8, 128).unwrap();
+        let _ = p.label();
+    }
+    assert!(Policy::from_cli("nope", 8, 128).is_err());
+    assert!(Policy::from_cli("oea:k0=x", 8, 128).is_err());
+}

@@ -1,0 +1,222 @@
+//! Property suites over the hand-rolled substrates (json, bpe, stats,
+//! slots) — DESIGN.md §9's non-routing invariants.
+
+use oea_serve::coordinator::slots::SlotAllocator;
+use oea_serve::util::bpe::Tokenizer;
+use oea_serve::util::json::Json;
+use oea_serve::util::proptest::check;
+use oea_serve::util::rng::Rng;
+use oea_serve::util::stats;
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool(0.5)),
+        2 => Json::Num((rng.gaussian() * 100.0 * 1e6).round() / 1e6),
+        3 => {
+            let n = rng.below(12);
+            Json::Str(
+                (0..n)
+                    .map(|_| {
+                        let opts = ['a', 'é', '"', '\\', '\n', '中', ' ', '7'];
+                        opts[rng.below(opts.len())]
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn json_write_parse_roundtrip() {
+    check("json-roundtrip", 300, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.write();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(v, back, "roundtrip failed for {text}");
+    });
+}
+
+#[test]
+fn json_rejects_random_mutations() {
+    // mutating one structural byte of valid JSON should never panic —
+    // either it parses (to something) or errors cleanly
+    check("json-mutation", 200, |rng| {
+        let v = random_json(rng, 2);
+        let mut text: Vec<u8> = v.write().into_bytes();
+        if text.is_empty() {
+            return;
+        }
+        let i = rng.below(text.len());
+        text[i] = b"{}[],:\"x19"[rng.below(10)];
+        if let Ok(s) = String::from_utf8(text) {
+            let _ = Json::parse(&s); // must not panic
+        }
+    });
+}
+
+fn toy_tokenizer() -> Tokenizer {
+    Tokenizer::from_merges(
+        vec![
+            (b"t".to_vec(), b"h".to_vec()),
+            (b"th".to_vec(), b"e".to_vec()),
+            (b"e".to_vec(), b" ".to_vec()),
+            (b"a".to_vec(), b"n".to_vec()),
+            (b"an".to_vec(), b"d".to_vec()),
+        ],
+        512,
+    )
+}
+
+#[test]
+fn bpe_roundtrip_random_strings() {
+    let tok = toy_tokenizer();
+    check("bpe-roundtrip", 200, |rng| {
+        let n = rng.below(40);
+        let s: String = (0..n)
+            .map(|_| {
+                let opts = [
+                    'a', 'b', 'e', 'h', 'n', 't', 'd', ' ', 'é', '中', '!',
+                ];
+                opts[rng.below(opts.len())]
+            })
+            .collect();
+        assert_eq!(tok.decode(&tok.encode(&s)), s);
+    });
+}
+
+#[test]
+fn bpe_ids_always_in_vocab() {
+    let tok = toy_tokenizer();
+    check("bpe-ids", 100, |rng| {
+        let n = rng.below(30);
+        let s: String = (0..n).map(|_| rng.below(128) as u8 as char).collect();
+        for t in tok.encode(&s) {
+            assert!((t as usize) < tok.n_tokens());
+        }
+    });
+}
+
+#[test]
+fn linreg_recovers_random_lines() {
+    check("linreg-recovery", 100, |rng| {
+        let slope = rng.gaussian() * 5.0;
+        let intercept = rng.gaussian() * 50.0;
+        let xs: Vec<f64> = (0..40).map(|i| i as f64 + rng.f64()).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| slope * x + intercept).collect();
+        let f = stats::linreg(&xs, &ys).unwrap();
+        assert!((f.slope - slope).abs() < 1e-8);
+        assert!((f.intercept - intercept).abs() < 1e-6);
+        assert!(f.r2 > 1.0 - 1e-9);
+    });
+}
+
+#[test]
+fn pareto_frontier_is_sound() {
+    check("pareto-sound", 150, |rng| {
+        let pts: Vec<(f64, f64)> = (0..1 + rng.below(40))
+            .map(|_| (rng.f64() * 10.0, rng.f64() * 10.0))
+            .collect();
+        let front = stats::pareto_min_min(&pts);
+        assert!(!front.is_empty());
+        // no frontier point is dominated by any other point
+        for &i in &front {
+            for (j, q) in pts.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let p = pts[i];
+                let dominated =
+                    q.0 <= p.0 && q.1 <= p.1 && (q.0 < p.0 || q.1 < p.1);
+                assert!(!dominated, "frontier point {p:?} dominated by {q:?}");
+            }
+        }
+        // every non-frontier point is dominated by some frontier point
+        for (j, q) in pts.iter().enumerate() {
+            if front.contains(&j) {
+                continue;
+            }
+            let covered = front.iter().any(|&i| {
+                let p = pts[i];
+                p.0 <= q.0 && p.1 <= q.1
+            });
+            assert!(covered, "point {q:?} not dominated by any frontier point");
+        }
+    });
+}
+
+#[test]
+fn welford_matches_two_pass() {
+    check("welford", 100, |rng| {
+        let xs: Vec<f64> = (0..2 + rng.below(100)).map(|_| rng.gaussian() * 7.0).collect();
+        let mut w = stats::Welford::default();
+        for &x in &xs {
+            w.add(x);
+        }
+        assert!((w.mean() - stats::mean(&xs)).abs() < 1e-9);
+        assert!((w.variance() - stats::variance(&xs)).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn slot_allocator_conservation() {
+    // random alloc/free interleavings never lose or duplicate slots
+    check("slots-conservation", 150, |rng| {
+        let n = 1 + rng.below(16);
+        let mut a = SlotAllocator::new(n, 64);
+        let mut held: Vec<usize> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..200 {
+            if rng.bool(0.55) && held.len() < n {
+                let s = a.alloc(next_id).unwrap();
+                assert!(!held.contains(&s), "slot {s} double-allocated");
+                held.push(s);
+                next_id += 1;
+            } else if !held.is_empty() {
+                let idx = rng.below(held.len());
+                let s = held.swap_remove(idx);
+                a.free(s).unwrap();
+            }
+            assert_eq!(a.n_used(), held.len());
+            assert_eq!(a.n_free(), n - held.len());
+        }
+    });
+}
+
+#[test]
+fn sampler_top_p_support_shrinks() {
+    use oea_serve::coordinator::sampler::sample;
+    check("sampler-support", 60, |rng| {
+        let n = 8;
+        let logits: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32 * 2.0).collect();
+        let mut support_strict = std::collections::HashSet::new();
+        let mut support_loose = std::collections::HashSet::new();
+        let mut r1 = rng.fork(1);
+        let mut r2 = rng.fork(2);
+        for _ in 0..150 {
+            support_strict.insert(sample(&logits, 1.0, 0.5, &mut r1));
+            support_loose.insert(sample(&logits, 1.0, 1.0, &mut r2));
+        }
+        assert!(support_strict.len() <= support_loose.len());
+    });
+}
+
+#[test]
+fn cost_model_fit_on_noisy_linear_data() {
+    use oea_serve::latency::CostModel;
+    check("costmodel-fit", 60, |rng| {
+        let b = 1.0 + rng.f64() * 4.0;
+        let c = 20.0 + rng.f64() * 40.0;
+        let ts: Vec<f64> = (4..=64).step_by(4).map(|t| t as f64).collect();
+        let us: Vec<f64> = ts.iter().map(|t| c + b * t + rng.gaussian() * 0.01).collect();
+        let (m, r2) = CostModel::fit(&ts, &us).unwrap();
+        assert!((m.fetch_us - b).abs() < 0.01);
+        assert!(r2 > 0.999);
+    });
+}
