@@ -1,0 +1,80 @@
+"""Generate golden fixtures for the Rust CPU backend's kernel tests.
+
+Runs the pure-jnp oracles in `kernels/ref.py` (plus `model.rope`) on small
+deterministic float32 inputs and prints Rust constant arrays, which are
+pasted into `rust/tests/cpu_backend_golden.rs`. Re-run after any change to
+the reference math:
+
+    python -m python.compile.gen_golden > /tmp/golden.rs
+"""
+
+import numpy as np
+
+from . import model
+from .kernels import ref
+
+
+def _rs(name, arr):
+    a = np.asarray(arr, np.float32).reshape(-1)
+    body = ", ".join(f"{x:.6}" for x in a)
+    print(f"const {name}: [f32; {len(a)}] = [{body}];")
+
+
+def main():
+    rng = np.random.default_rng(7)
+
+    def r(*shape):
+        # round inputs so the printed fixture exactly reproduces them
+        return np.round(rng.standard_normal(shape), 4).astype(np.float32)
+
+    # ---- rmsnorm: h [2,4], scale [4] -----------------------------------
+    h = r(2, 4)
+    scale = np.abs(r(4)) + 0.5
+    _rs("RMS_H", h)
+    _rs("RMS_SCALE", scale)
+    _rs("RMS_OUT", ref.rmsnorm_ref(h, scale))
+
+    # ---- router scores: h [2,4], n2 [4], w [4,3] -----------------------
+    w = r(4, 3)
+    _rs("ROUTER_W", w)
+    _rs("ROUTER_OUT", ref.router_scores_ref(h, scale, w))
+
+    # ---- rope: x [2,2,4], pos [0,5], theta 10000 -----------------------
+    x = r(2, 2, 4)
+    pos = np.array([0, 5], np.int32)
+    _rs("ROPE_X", x)
+    _rs("ROPE_OUT", model.rope(x, pos, 10000.0))
+
+    # ---- decode attention: q [2,2,4], cache [2,6,1,4], pos [2,5] -------
+    q = r(2, 2, 4)
+    kc = r(2, 6, 1, 4)
+    vc = r(2, 6, 1, 4)
+    apos = np.array([2, 5], np.int32)
+    _rs("ATTN_Q", q)
+    _rs("ATTN_K", kc)
+    _rs("ATTN_V", vc)
+    _rs("ATTN_OUT", ref.decode_attention_ref(q, kc, vc, apos))
+
+    # ---- gathered MoE FFN: x [2,4], experts N=3 D=4 H=5 ----------------
+    # ids include a zero-combine padding entry (expert 1), exactly as the
+    # serving path pads the active list to a T bucket.
+    xm = r(2, 4)
+    wg = r(3, 4, 5)
+    wu = r(3, 4, 5)
+    wd = r(3, 5, 4)
+    comb = np.array([[0.7, 0.0, 0.3], [0.4, 0.0, 0.6]], np.float32)
+    ids = np.array([0, 2, 1], np.int32)
+    _rs("MOE_X", xm)
+    _rs("MOE_WG", wg)
+    _rs("MOE_WU", wu)
+    _rs("MOE_WD", wd)
+    _rs("MOE_COMB", comb)
+    out = ref.moe_ffn_gathered(xm, wg, wu, wd, comb, ids)
+    _rs("MOE_OUT", out)
+    # must equal the dense all-experts reference (ids cover comb's support)
+    dense = ref.moe_ffn_dense_ref(xm, wg, wu, wd, comb)
+    assert np.allclose(out, dense, atol=1e-5), (out, dense)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,28 @@
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# Optional-dependency gating: the CI python job installs pytest, numpy and
+# hypothesis, and installs jax best-effort — suites depending on a missing
+# package are skipped rather than erroring at collection, so the tier
+# stays green on minimal environments.
+_NEEDS = {
+    "jax": [
+        "test_kernel.py",
+        "test_model_stages.py",
+        "test_router_attention.py",
+        "test_weights_aot.py",
+    ],
+    "hypothesis": [
+        "test_bpe_corpus.py",
+        "test_kernel.py",
+        "test_router_attention.py",
+    ],
+}
+
+collect_ignore = []
+for _pkg, _files in _NEEDS.items():
+    if importlib.util.find_spec(_pkg) is None:
+        collect_ignore.extend(f for f in _files if f not in collect_ignore)

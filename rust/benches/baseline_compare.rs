@@ -12,32 +12,31 @@
 //! varies, motivating per-layer k0 (future work in the paper).
 //!
 //!     cargo bench --bench baseline_compare
+//!     cargo bench --bench baseline_compare -- --smoke   # CI tier
 
-use std::path::Path;
-
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
 use oea_serve::eval;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::Policy;
-use oea_serve::runtime::Runtime;
-use oea_serve::util::bench::Table;
-use oea_serve::util::bpe::Tokenizer;
-use oea_serve::util::corpus::Corpus;
+use oea_serve::util::bench::{BenchOpts, Table};
+use oea_serve::util::json::Json;
 use oea_serve::util::rng::Rng;
 
 fn main() {
+    let opts = BenchOpts::from_args();
     let fast = std::env::var("OEA_BENCH_FAST").is_ok();
-    let rt = Runtime::load(Path::new("artifacts"), "small").expect("make artifacts");
-    let vocab = rt.manifest.dir.join(&rt.manifest.vocab_file);
-    let tok = Tokenizer::load(&vocab).unwrap();
-    let corpus = Corpus::load(Path::new("data")).unwrap();
-    let runner = ModelRunner::new(rt);
-    let c = runner.cfg().clone();
+    let cfg_name = std::env::var("OEA_BENCH_CONFIG")
+        .unwrap_or_else(|_| if opts.smoke { "smoke" } else { "small" }.into());
+    let c = ModelConfig::preset(&cfg_name).unwrap();
+    let runner = ModelRunner::new(CpuBackend::synthetic(c.clone(), 0));
     let k = c.top_k;
+    let n = c.n_experts;
     let b = 16;
-    let positions = if fast { 12 } else { 24 };
+    let positions = if opts.smoke { 4 } else if fast { 12 } else { 24 };
 
     let mut rng = Rng::new(3);
-    let seqs = eval::sequences_from_corpus(&corpus, &tok, &mut rng, b, positions, true);
+    let seqs = eval::synthetic_sequences(&c, &mut rng, b, positions, true);
     let vanilla =
         eval::forced_run(&runner, &seqs, positions, Policy::Vanilla { k }, true).unwrap();
 
@@ -46,15 +45,18 @@ fn main() {
     let mut table = Table::new(
         &format!(
             "OEA vs batch-aware / token-centric baselines at matched T \
-             (small cfg, B={b}, {positions} positions)"
+             ({} cfg, B={b}, {positions} positions)",
+            c.name
         ),
         &["policy", "avg T", "KL vs vanilla", "CE delta"],
     );
     let mut arms: Vec<Policy> = Vec::new();
-    for k0 in [1, 2, 3, 4, 5] {
+    let k0_max = if opts.smoke { k.min(3) } else { k.min(5) };
+    for k0 in 1..=k0_max {
         arms.push(Policy::OeaSimplified { k0, k });
     }
-    for target_t in [12, 16, 20, 24, 28] {
+    for frac in [3, 4, 5, 6, 7] {
+        let target_t = (n * frac / 8).max(1);
         arms.push(Policy::Lynx { k, target_t });
     }
     for tau in [0.6, 0.4, 0.25, 0.15, 0.05] {
@@ -146,4 +148,31 @@ fn main() {
          spread here is near zero — the measurement hook is what this bench\n\
          contributes.)"
     );
+
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|(label, t, kl, ce)| {
+            Json::obj(vec![
+                ("policy", Json::str(label)),
+                ("avg_t", Json::num(*t)),
+                ("kl_vanilla", Json::num(*kl)),
+                ("ce_delta", Json::num(*ce)),
+            ])
+        })
+        .collect();
+    opts.emit(
+        "baseline_compare",
+        Json::obj(vec![
+            ("config", Json::str(&c.name)),
+            ("smoke", Json::Bool(opts.smoke)),
+            ("oea_wins", Json::num(oea_wins as f64)),
+            ("matched_comparisons", Json::num(total as f64)),
+            ("arms", Json::arr(rows_json)),
+            (
+                "layer_t_spread",
+                Json::num(if count > 0 { spread } else { 0.0 }),
+            ),
+        ]),
+    )
+    .unwrap();
 }

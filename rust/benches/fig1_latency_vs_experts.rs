@@ -1,40 +1,37 @@
-//! Figure 1 (and Figure 4 with --config base): mean MoE latency as a
-//! function of the number of activated experts in a decode batch.
+//! Figure 1 (and Figure 4 with OEA_BENCH_CONFIG=base): mean MoE latency as
+//! a function of the number of activated experts in a decode batch.
 //!
-//! Two latency columns are reported: the CPU-PJRT measurement from THIS
-//! machine (the gathered-expert stage's work is proportional to T, playing
-//! the role HBM fetch plays on H100 — same linear shape) and the simulated
-//! H100 µs from the Eq. 2 roofline preset. The paper's claim under test is
-//! the linear fit quality: R² > 0.99.
+//! Runs the hermetic CPU backend: the gathered-expert kernel's work is
+//! proportional to the executed T bucket, playing the role HBM fetch plays
+//! on H100 — same linear shape. Two latency columns are reported: the CPU
+//! measurement from THIS machine and the simulated H100 µs from the Eq. 2
+//! roofline preset. The paper's claim under test is the linear fit
+//! quality: R² > 0.99.
 //!
 //!     cargo bench --bench fig1_latency_vs_experts
+//!     cargo bench --bench fig1_latency_vs_experts -- --smoke   # CI tier
 //!     OEA_BENCH_CONFIG=base cargo bench --bench fig1_latency_vs_experts
 
-use std::path::Path;
-
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
 use oea_serve::eval;
 use oea_serve::latency::H100Presets;
 use oea_serve::metrics::{MoeMetrics, StepRecord};
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::Policy;
-use oea_serve::runtime::Runtime;
-use oea_serve::util::bench::Table;
-use oea_serve::util::bpe::Tokenizer;
-use oea_serve::util::corpus::Corpus;
+use oea_serve::util::bench::{BenchOpts, Table};
+use oea_serve::util::json::Json;
 use oea_serve::util::rng::Rng;
 
 fn main() {
-    let cfg_name = std::env::var("OEA_BENCH_CONFIG").unwrap_or_else(|_| "small".into());
+    let opts = BenchOpts::from_args();
     let fast = std::env::var("OEA_BENCH_FAST").is_ok();
-    let rt = Runtime::load(Path::new("artifacts"), &cfg_name)
-        .expect("run `make artifacts` (and artifacts-base for base) first");
-    let vocab = rt.manifest.dir.join(&rt.manifest.vocab_file);
-    let tok = Tokenizer::load(&vocab).unwrap();
-    let corpus = Corpus::load(Path::new("data")).unwrap();
-    let runner = ModelRunner::new(rt);
-    let c = runner.cfg().clone();
+    let cfg_name = std::env::var("OEA_BENCH_CONFIG")
+        .unwrap_or_else(|_| if opts.smoke { "smoke" } else { "small" }.into());
+    let c = ModelConfig::preset(&cfg_name).unwrap();
+    let runner = ModelRunner::new(CpuBackend::synthetic(c.clone(), 0));
     let cost = H100Presets::for_config(&c.name);
-    let positions = if fast { 8 } else { 16 };
+    let positions = if opts.smoke { 4 } else if fast { 8 } else { 16 };
 
     // Vary T at FIXED batch size via k0 and batch composition (the paper
     // gets the variation naturally from serving GPQA at B<=16). B must be
@@ -47,35 +44,22 @@ fn main() {
     let mut metrics_bucket = MoeMetrics::default();
     let mut rng = Rng::new(0);
     let b: usize = 16;
-    // warm up every decode-path executable for this bucket: the first call
-    // of a stage pays PJRT compilation (tens of ms) which must not land in
-    // the measured bins
-    let n_warm = runner
-        .rt
-        .warmup(|n| n.ends_with(&format!("_b{b}")) || n.contains(&format!("_b{b}_")))
-        .unwrap();
-    eprintln!("warmed up {n_warm} executables");
-    {
-        let seqs = eval::sequences_from_corpus(&corpus, &tok, &mut rng, b, 2, true);
-        for k0 in 1..=c.top_k {
-            let _ = eval::forced_run(
-                &runner, &seqs, 2,
-                Policy::OeaSimplified { k0, k: c.top_k }, true,
-            )
-            .unwrap();
-        }
-    }
+    let mut k0s: Vec<usize> = [1usize, 2, 3, 4, 6, c.top_k]
+        .iter()
+        .copied()
+        .filter(|&k0| k0 <= c.top_k)
+        .collect();
+    k0s.dedup();
     for mixed in [false, true] {
-        for k0 in [1, 2, 3, 4, 6, c.top_k] {
-            let seqs =
-                eval::sequences_from_corpus(&corpus, &tok, &mut rng, b, positions, mixed);
+        for &k0 in &k0s {
+            let seqs = eval::synthetic_sequences(&c, &mut rng, b, positions, mixed);
             let pol = if k0 == c.top_k {
                 Policy::Vanilla { k: c.top_k }
             } else {
                 Policy::OeaSimplified { k0, k: c.top_k }
             };
-            let mut batch = runner.new_batch(c.bucket_for(b).unwrap()).unwrap();
-            let bucket = batch.bucket;
+            let bucket = c.bucket_for(b).unwrap();
+            let mut batch = runner.new_batch(bucket).unwrap();
             let mut toks = vec![0i32; bucket];
             let mut pos = vec![0i32; bucket];
             let mut live = vec![false; bucket];
@@ -110,7 +94,7 @@ fn main() {
 
     let fig = if c.name == "base" { "Figure 4" } else { "Figure 1" };
     let mut table = Table::new(
-        &format!("{fig}: mean MoE latency vs activated experts ({} cfg)", c.name),
+        &format!("{fig}: mean MoE latency vs activated experts ({} cfg, cpu)", c.name),
         &["T", "n", "measured us (this CPU)", "simulated us (H100)"],
     );
     for (t, us, n) in metrics.latency_vs_t(false) {
@@ -124,30 +108,75 @@ fn main() {
     }
     table.print();
 
-    // fit over well-populated bins (the paper's Fig 1 averages are over a
-    // full GPQA run; thin bins here are dominated by scheduling noise)
+    // fit over well-populated bins (thin bins are dominated by scheduling
+    // noise); the executed-bucket fit is the padded work the system runs
+    let min_n = if opts.smoke { 2 } else { 10 };
     let curve = metrics.latency_vs_t(false);
-    let xs: Vec<f64> = curve.iter().filter(|r| r.2 >= 10).map(|r| r.0 as f64).collect();
-    let ys: Vec<f64> = curve.iter().filter(|r| r.2 >= 10).map(|r| r.1).collect();
-    let fit_m = oea_serve::util::stats::linreg(&xs, &ys).unwrap();
-    let fit_s = metrics.linear_fit(true).unwrap();
-    println!(
-        "\nmeasured (CPU):   latency = {:.1}·T + {:.0} us,  R² = {:.4}",
-        fit_m.slope, fit_m.intercept, fit_m.r2
-    );
+    let xs: Vec<f64> = curve.iter().filter(|r| r.2 >= min_n).map(|r| r.0 as f64).collect();
+    let ys: Vec<f64> = curve.iter().filter(|r| r.2 >= min_n).map(|r| r.1).collect();
+    let fit_m = oea_serve::util::stats::linreg(&xs, &ys);
+    if let Some(f) = &fit_m {
+        println!(
+            "\nmeasured (CPU):   latency = {:.1}·T + {:.0} us,  R² = {:.4}",
+            f.slope, f.intercept, f.r2
+        );
+    }
     let curve_b = metrics_bucket.latency_vs_t(false);
-    let xb: Vec<f64> = curve_b.iter().filter(|r| r.2 >= 10).map(|r| r.0 as f64).collect();
-    let yb: Vec<f64> = curve_b.iter().filter(|r| r.2 >= 10).map(|r| r.1).collect();
-    let fit_b = oea_serve::util::stats::linreg(&xb, &yb).unwrap();
-    println!(
-        "measured per executed T-bucket (the padded work the system runs): \
-         latency = {:.1}·T + {:.0} us,  R² = {:.4}",
-        fit_b.slope, fit_b.intercept, fit_b.r2
-    );
+    let xb: Vec<f64> = curve_b.iter().filter(|r| r.2 >= min_n).map(|r| r.0 as f64).collect();
+    let yb: Vec<f64> = curve_b.iter().filter(|r| r.2 >= min_n).map(|r| r.1).collect();
+    let fit_b = oea_serve::util::stats::linreg(&xb, &yb);
+    if let Some(f) = &fit_b {
+        println!(
+            "measured per executed T-bucket (the padded work the system runs): \
+             latency = {:.1}·T + {:.0} us,  R² = {:.4}",
+            f.slope, f.intercept, f.r2
+        );
+    }
+    let fit_s = metrics.linear_fit(true).unwrap();
     println!(
         "simulated (H100): latency = {:.2}·T + {:.1} us,  R² = {:.4}",
         fit_s.slope, fit_s.intercept, fit_s.r2
     );
     println!("paper: linear with R² > 0.99 (both columns must agree on shape)");
-    assert!(fit_m.r2 > 0.9, "measured latency no longer linear in T");
+
+    let fit_json = |f: &Option<oea_serve::util::stats::LinFit>| match f {
+        Some(f) => Json::obj(vec![
+            ("slope_us", Json::num(f.slope)),
+            ("intercept_us", Json::num(f.intercept)),
+            ("r2", Json::num(f.r2)),
+        ]),
+        None => Json::Null,
+    };
+    let points = Json::arr(metrics.latency_vs_t(false).into_iter().map(|(t, us, n)| {
+        Json::obj(vec![
+            ("t", Json::num(t as f64)),
+            ("measured_us", Json::num(us)),
+            ("n", Json::num(n as f64)),
+        ])
+    }));
+    opts.emit(
+        "fig1_latency_vs_experts",
+        Json::obj(vec![
+            ("config", Json::str(&c.name)),
+            ("smoke", Json::Bool(opts.smoke)),
+            ("positions", Json::num(positions as f64)),
+            ("points", points),
+            ("fit_measured", fit_json(&fit_m)),
+            ("fit_bucket", fit_json(&fit_b)),
+            (
+                "fit_simulated",
+                fit_json(&Some(fit_s)),
+            ),
+        ]),
+    )
+    .unwrap();
+
+    if !opts.smoke {
+        // the regression gate must be loud: no populated bins means the
+        // linearity claim went untested, which is itself a failure
+        let f = fit_m
+            .as_ref()
+            .expect("no T bin reached the sample floor; measured fit is untestable");
+        assert!(f.r2 > 0.9, "measured latency no longer linear in T (r2 {})", f.r2);
+    }
 }

@@ -6,22 +6,19 @@
 //!
 //!     cargo bench --bench fig_ablations            # all three
 //!     cargo bench --bench fig_ablations -- maxp    # one group
+//!     cargo bench --bench fig_ablations -- --smoke # CI tier
 
-use std::path::Path;
-
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
 use oea_serve::eval;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::Policy;
-use oea_serve::runtime::Runtime;
-use oea_serve::util::bench::Table;
-use oea_serve::util::bpe::Tokenizer;
-use oea_serve::util::corpus::Corpus;
+use oea_serve::util::bench::{BenchOpts, Table};
+use oea_serve::util::json::Json;
 use oea_serve::util::rng::Rng;
 use oea_serve::util::stats;
 
-fn frontier_rows(
-    pts: &[(String, f64, f64)],
-) -> Vec<(String, f64, f64)> {
+fn frontier_rows(pts: &[(String, f64, f64)]) -> Vec<(String, f64, f64)> {
     let coords: Vec<(f64, f64)> = pts.iter().map(|p| (p.1, p.2)).collect();
     stats::pareto_min_min(&coords)
         .into_iter()
@@ -30,33 +27,49 @@ fn frontier_rows(
 }
 
 fn main() {
+    let opts = BenchOpts::from_args();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let which = args
         .iter()
         .find(|a| ["maxp", "kmax", "topp"].contains(&a.as_str()))
         .cloned()
         .unwrap_or_else(|| "all".into());
-    let fast = std::env::var("OEA_BENCH_FAST").is_ok();
-
-    let rt = Runtime::load(Path::new("artifacts"), "small").expect("make artifacts");
-    let vocab = rt.manifest.dir.join(&rt.manifest.vocab_file);
-    let tok = Tokenizer::load(&vocab).unwrap();
-    let corpus = Corpus::load(Path::new("data")).unwrap();
-    let runner = ModelRunner::new(rt);
-    let c = runner.cfg().clone();
+    let fast = std::env::var("OEA_BENCH_FAST").is_ok() || opts.smoke;
+    let cfg_name = std::env::var("OEA_BENCH_CONFIG")
+        .unwrap_or_else(|_| if opts.smoke { "smoke" } else { "small" }.into());
+    let c = ModelConfig::preset(&cfg_name).unwrap();
+    let runner = ModelRunner::new(CpuBackend::synthetic(c.clone(), 0));
     let k = c.top_k;
     let n = c.n_experts;
     let b = 16;
-    let positions = if fast { 12 } else { 24 };
+    let positions = if opts.smoke { 4 } else if fast { 12 } else { 24 };
+    let k0_grid: Vec<usize> = (1..=if opts.smoke { 3 } else { 5 })
+        .filter(|&k0| k0 <= k)
+        .collect();
 
     let mut rng = Rng::new(9);
-    let seqs = eval::sequences_from_corpus(&corpus, &tok, &mut rng, b, positions, true);
+    let seqs = eval::synthetic_sequences(&c, &mut rng, b, positions, true);
     let vanilla =
         eval::forced_run(&runner, &seqs, positions, Policy::Vanilla { k }, true).unwrap();
-    let mut evaluate = |pol: Policy| -> (f64, f64) {
+    let evaluate = |pol: Policy| -> (f64, f64) {
         let run = eval::forced_run(&runner, &seqs, positions, pol, true).unwrap();
         let r = eval::ce_compare(&seqs, &run, &vanilla);
         (stats::round_to(r.avg_t, 0.1), stats::round_to(r.kl_vanilla, 0.0005))
+    };
+
+    let mut groups_json: Vec<Json> = Vec::new();
+    let record = |group: &str, pts: &[(String, f64, f64)]| {
+        let arr: Vec<Json> = pts
+            .iter()
+            .map(|(label, t, q)| {
+                Json::obj(vec![
+                    ("policy", Json::str(label)),
+                    ("avg_t", Json::num(*t)),
+                    ("kl", Json::num(*q)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("group", Json::str(group)), ("points", Json::arr(arr))])
     };
 
     // ---- Fig 6: maxP ablation --------------------------------------------
@@ -67,7 +80,7 @@ fn main() {
         );
         for max_p in [k, n / 4, n / 2, n] {
             let mut pts = Vec::new();
-            for k0 in [1, 2, 3, 4, 5] {
+            for &k0 in &k0_grid {
                 let pol = Policy::Oea { k0, p: 1.0, k_max: k, max_p };
                 let (t, q) = evaluate(pol);
                 pts.push((pol.label(), t, q));
@@ -80,6 +93,7 @@ fn main() {
                     format!("{q:.4}"),
                 ]);
             }
+            groups_json.push(record(&format!("maxp={max_p}"), &pts));
             eprintln!("maxP={max_p} done");
         }
         table.print();
@@ -92,9 +106,14 @@ fn main() {
             "Figure 7: k_max ablation (Pareto frontier per k_max; maxP = N)",
             &["k_max", "policy (frontier)", "avg T", "KL"],
         );
-        for k_max in [k - 2, k - 1, k, k + 2, k + 4] {
+        let kmaxes: Vec<usize> = [k.saturating_sub(2), k.saturating_sub(1), k, k + 2, k + 4]
+            .iter()
+            .copied()
+            .filter(|&km| km >= 1)
+            .collect();
+        for k_max in kmaxes {
             let mut pts = Vec::new();
-            for k0 in [1, 2, 3, 4, 5] {
+            for &k0 in &k0_grid {
                 if k0 > k_max {
                     continue;
                 }
@@ -110,10 +129,13 @@ fn main() {
                     format!("{q:.4}"),
                 ]);
             }
+            groups_json.push(record(&format!("kmax={k_max}"), &pts));
             eprintln!("k_max={k_max} done");
         }
         table.print();
-        println!("expected: k_max = k ({k}) on the frontier; larger k_max degrades (paper Fig 7)\n");
+        println!(
+            "expected: k_max = k ({k}) on the frontier; larger k_max degrades (paper Fig 7)\n"
+        );
     }
 
     // ---- Fig 9: p ablation -----------------------------------------------
@@ -130,7 +152,7 @@ fn main() {
             ("OEA, p<1", true, true),
         ] {
             let mut pts = Vec::new();
-            for k0 in [2, 3, 4, 5, 6] {
+            for &k0 in &k0_grid {
                 let pvals: &[f64] = if use_topp { &ps } else { &[1.0] };
                 for &p in pvals {
                     let pol = if use_oea {
@@ -150,9 +172,22 @@ fn main() {
                     format!("{q:.4}"),
                 ]);
             }
+            groups_json.push(record(group, &pts));
             eprintln!("group {group} done");
         }
         table.print();
         println!("expected: within each family the p=1 frontier ~matches p<1 (paper Fig 9)\n");
     }
+
+    opts.emit(
+        "fig_ablations",
+        Json::obj(vec![
+            ("config", Json::str(&c.name)),
+            ("smoke", Json::Bool(opts.smoke)),
+            ("which", Json::str(&which)),
+            ("positions", Json::num(positions as f64)),
+            ("groups", Json::arr(groups_json)),
+        ]),
+    )
+    .unwrap();
 }

@@ -11,17 +11,16 @@
 //! frontier computation.
 //!
 //!     cargo bench --bench fig_ce_pareto
+//!     cargo bench --bench fig_ce_pareto -- --smoke     # CI tier
 //!     OEA_BENCH_FAST=1 cargo bench --bench fig_ce_pareto   # smaller grid
 
-use std::path::Path;
-
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
 use oea_serve::eval;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::Policy;
-use oea_serve::runtime::Runtime;
-use oea_serve::util::bench::Table;
-use oea_serve::util::bpe::Tokenizer;
-use oea_serve::util::corpus::Corpus;
+use oea_serve::util::bench::{BenchOpts, Table};
+use oea_serve::util::json::Json;
 use oea_serve::util::rng::Rng;
 use oea_serve::util::stats;
 
@@ -33,25 +32,27 @@ enum Family {
 }
 
 fn main() {
-    let fast = std::env::var("OEA_BENCH_FAST").is_ok();
-    let rt = Runtime::load(Path::new("artifacts"), "small").expect("make artifacts");
-    let vocab = rt.manifest.dir.join(&rt.manifest.vocab_file);
-    let tok = Tokenizer::load(&vocab).unwrap();
-    let corpus = Corpus::load(Path::new("data")).unwrap();
-    let runner = ModelRunner::new(rt);
-    let c = runner.cfg().clone();
+    let opts = BenchOpts::from_args();
+    let fast = std::env::var("OEA_BENCH_FAST").is_ok() || opts.smoke;
+    let cfg_name = std::env::var("OEA_BENCH_CONFIG")
+        .unwrap_or_else(|_| if opts.smoke { "smoke" } else { "small" }.into());
+    let c = ModelConfig::preset(&cfg_name).unwrap();
+    let runner = ModelRunner::new(CpuBackend::synthetic(c.clone(), 0));
     let k = c.top_k;
-    let positions = if fast { 12 } else { 24 };
+    let positions = if opts.smoke { 4 } else if fast { 12 } else { 24 };
     let batches: &[usize] = if fast { &[16] } else { &[4, 8, 16] };
 
     // the arm grid (a condensed version of the paper's §4.1 sweep)
     let mut arms: Vec<(Family, Policy)> = Vec::new();
-    for k0 in [1, 2, 3, 4, 5, 6, 8] {
+    for k0 in [1usize, 2, 3, 4, 5, 6, 8] {
+        if k0 > k {
+            continue;
+        }
         arms.push((Family::Pruned, Policy::Pruned { k0, p: 1.0 }));
         arms.push((Family::OeaSimplified, Policy::OeaSimplified { k0, k }));
     }
     if !fast {
-        for k0 in [2, 3, 4] {
+        for k0 in [2usize, 3, 4] {
             for p in [0.7, 1.0] {
                 for k_max in [k - 1, k, k + 2] {
                     for max_p in [8, c.n_experts] {
@@ -66,11 +67,11 @@ fn main() {
         }
     }
 
+    let mut batches_json: Vec<Json> = Vec::new();
     for &b in batches {
         let mut rng = Rng::new(b as u64);
         // mixed-domain batches (the paper's FineWeb CE regime)
-        let seqs =
-            eval::sequences_from_corpus(&corpus, &tok, &mut rng, b, positions, true);
+        let seqs = eval::synthetic_sequences(&c, &mut rng, b, positions, true);
         let vanilla =
             eval::forced_run(&runner, &seqs, positions, Policy::Vanilla { k }, true)
                 .unwrap();
@@ -87,33 +88,30 @@ fn main() {
         eprintln!("B={b}: {} arms evaluated", pts.len());
 
         // --- Fig 2/5: pruned vs OEA frontiers
-        for (title, fam_a, fam_b) in [(
-            format!("Figure 2/5 @ B={b}: Pareto frontiers, pruned vs OEA"),
-            Family::Pruned,
-            Family::OeaSimplified,
-        )] {
-            let mut table = Table::new(&title, &["family", "policy", "avg T", "KL", "CE delta"]);
-            for fam in [fam_a, fam_b] {
-                let sub: Vec<usize> = (0..pts.len()).filter(|&i| pts[i].0 == fam).collect();
-                let coords: Vec<(f64, f64)> =
-                    sub.iter().map(|&i| (pts[i].2, pts[i].3)).collect();
-                for &fi in &stats::pareto_min_min(&coords) {
-                    let i = sub[fi];
-                    table.row(vec![
-                        match fam {
-                            Family::Pruned => "pruned".into(),
-                            Family::OeaSimplified => "OEA".into(),
-                            Family::OeaGeneral => "OEA-general".into(),
-                        },
-                        pts[i].1.label(),
-                        format!("{:.1}", pts[i].2),
-                        format!("{:.4}", pts[i].3),
-                        format!("{:+.4}", pts[i].4),
-                    ]);
-                }
+        let mut table = Table::new(
+            &format!("Figure 2/5 @ B={b}: Pareto frontiers, pruned vs OEA"),
+            &["family", "policy", "avg T", "KL", "CE delta"],
+        );
+        for fam in [Family::Pruned, Family::OeaSimplified] {
+            let sub: Vec<usize> = (0..pts.len()).filter(|&i| pts[i].0 == fam).collect();
+            let coords: Vec<(f64, f64)> =
+                sub.iter().map(|&i| (pts[i].2, pts[i].3)).collect();
+            for &fi in &stats::pareto_min_min(&coords) {
+                let i = sub[fi];
+                table.row(vec![
+                    match fam {
+                        Family::Pruned => "pruned".into(),
+                        Family::OeaSimplified => "OEA".into(),
+                        Family::OeaGeneral => "OEA-general".into(),
+                    },
+                    pts[i].1.label(),
+                    format!("{:.1}", pts[i].2),
+                    format!("{:.4}", pts[i].3),
+                    format!("{:+.4}", pts[i].4),
+                ]);
             }
-            table.print();
         }
+        table.print();
 
         // --- Fig 3/8: simplified OEA vs everything else
         if !fast {
@@ -174,5 +172,41 @@ fn main() {
             "B={b}: OEA matches-or-beats pruned at equal T on {dominated}/{total} \
              comparable points\n"
         );
+        let pts_json: Vec<Json> = pts
+            .iter()
+            .map(|(fam, pol, t, q, ce)| {
+                Json::obj(vec![
+                    (
+                        "family",
+                        Json::str(match fam {
+                            Family::Pruned => "pruned",
+                            Family::OeaSimplified => "oea",
+                            Family::OeaGeneral => "oea-general",
+                        }),
+                    ),
+                    ("policy", Json::str(&pol.label())),
+                    ("avg_t", Json::num(*t)),
+                    ("kl", Json::num(*q)),
+                    ("ce_delta", Json::num(*ce)),
+                ])
+            })
+            .collect();
+        batches_json.push(Json::obj(vec![
+            ("b", Json::num(b as f64)),
+            ("oea_dominates", Json::num(dominated as f64)),
+            ("comparable", Json::num(total as f64)),
+            ("points", Json::arr(pts_json)),
+        ]));
     }
+
+    opts.emit(
+        "fig_ce_pareto",
+        Json::obj(vec![
+            ("config", Json::str(&c.name)),
+            ("smoke", Json::Bool(opts.smoke)),
+            ("positions", Json::num(positions as f64)),
+            ("batches", Json::arr(batches_json)),
+        ]),
+    )
+    .unwrap();
 }

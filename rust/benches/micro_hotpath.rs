@@ -5,12 +5,13 @@
 //! - tokenizer / json / sampler sanity numbers for the serving edge.
 //!
 //!     cargo bench --bench micro_hotpath
+//!     cargo bench --bench micro_hotpath -- --smoke   # CI tier
 
 use oea_serve::coordinator::sampler;
 use oea_serve::model::pad_active_list;
 use oea_serve::moe::policy::{route, Policy, RoutingInput};
 use oea_serve::moe::ScoreMatrix;
-use oea_serve::util::bench::bench;
+use oea_serve::util::bench::{bench, BenchOpts, BenchResult};
 use oea_serve::util::bpe::Tokenizer;
 use oea_serve::util::json::Json;
 use oea_serve::util::rng::Rng;
@@ -32,30 +33,39 @@ fn random_scores(rng: &mut Rng, b: usize, n: usize) -> Vec<f32> {
 }
 
 fn main() {
+    let opts = BenchOpts::from_args();
+    // smoke keeps the same shapes (they are the hot path under test) but
+    // trims iteration counts so CI stays fast
+    let scale = if opts.smoke { 10 } else { 1 };
+    let iters = |n: usize| (n / scale).max(20);
+
     let mut rng = Rng::new(0);
     let (b, n) = (16usize, 128usize);
     let raw = random_scores(&mut rng, b, n);
     let live = vec![true; b];
 
-    let r = bench("ScoreMatrix::new  B=16 N=128", 50, 2000, || {
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    let r = bench("ScoreMatrix::new  B=16 N=128", 50, iters(2000), || {
         std::hint::black_box(ScoreMatrix::new(b, n, raw.clone()));
     });
     r.print();
+    results.push(r);
 
     let sm = ScoreMatrix::new(b, n, raw.clone());
     let input = RoutingInput { scores: &sm, live: &live, mask_padding: true };
 
-    let r_van = bench("route vanilla(k=8)  B=16 N=128", 50, 5000, || {
+    let r_van = bench("route vanilla(k=8)  B=16 N=128", 50, iters(5000), || {
         std::hint::black_box(route(Policy::Vanilla { k: 8 }, &input));
     });
     r_van.print();
 
-    let r_oea = bench("route OEA(k0=3,k=8)  B=16 N=128", 50, 5000, || {
+    let r_oea = bench("route OEA(k0=3,k=8)  B=16 N=128", 50, iters(5000), || {
         std::hint::black_box(route(Policy::OeaSimplified { k0: 3, k: 8 }, &input));
     });
     r_oea.print();
 
-    let r_full = bench("route OEA-full(k0=3,p=.7,kmax=9)", 50, 5000, || {
+    let r_full = bench("route OEA-full(k0=3,p=.7,kmax=9)", 50, iters(5000), || {
         std::hint::black_box(route(
             Policy::Oea { k0: 3, p: 0.7, k_max: 9, max_p: 32 },
             &input,
@@ -63,46 +73,68 @@ fn main() {
     });
     r_full.print();
 
-    let r_lynx = bench("route lynx(t=32)  B=16 N=128", 50, 3000, || {
+    let r_lynx = bench("route lynx(t=32)  B=16 N=128", 50, iters(3000), || {
         std::hint::black_box(route(Policy::Lynx { k: 8, target_t: 32 }, &input));
     });
     r_lynx.print();
 
     let d = route(Policy::OeaSimplified { k0: 3, k: 8 }, &input);
-    let r_pad = bench("pad_active_list -> t_bucket", 50, 5000, || {
+    let r_pad = bench("pad_active_list -> t_bucket", 50, iters(5000), || {
         std::hint::black_box(pad_active_list(&d.active, 64, n));
     });
     r_pad.print();
 
-    // serving edge
-    let tok = Tokenizer::load(std::path::Path::new("artifacts/small/vocab.json"))
-        .expect("make artifacts");
+    // serving edge (byte-level tokenizer: the hermetic request path)
+    let tok = Tokenizer::byte_level();
     let text = "The quiet river carried the ancient lantern across the meadow.";
-    bench("bpe encode 63 chars", 20, 2000, || {
+    let r_tok = bench("bpe encode 63 chars", 20, iters(2000), || {
         std::hint::black_box(tok.encode(text));
-    })
-    .print();
+    });
+    r_tok.print();
 
     let body = r#"{"prompt": "The quiet river", "max_tokens": 32, "temperature": 0.6}"#;
-    bench("json parse request body", 20, 5000, || {
+    let r_json = bench("json parse request body", 20, iters(5000), || {
         std::hint::black_box(Json::parse(body).unwrap());
-    })
-    .print();
+    });
+    r_json.print();
 
     let logits: Vec<f32> = (0..1024).map(|_| rng.gaussian() as f32).collect();
     let mut srng = Rng::new(1);
-    bench("sample top-p over 1024 logits", 20, 2000, || {
+    let r_sample = bench("sample top-p over 1024 logits", 20, iters(2000), || {
         std::hint::black_box(sampler::sample(&logits, 0.6, 0.95, &mut srng));
-    })
-    .print();
+    });
+    r_sample.print();
 
     println!(
         "\ntarget (DESIGN.md §8): route() < 5 us at B=16 N=128 — got {:.2} us (OEA)",
         r_oea.mean_us
     );
+    let oea_mean_us = r_oea.mean_us;
+    results.extend([r_van, r_oea, r_full, r_lynx, r_pad, r_tok, r_json, r_sample]);
+
+    let entries: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(&r.name)),
+                ("mean_us", Json::num(r.mean_us)),
+                ("p50_us", Json::num(r.p50_us)),
+                ("p99_us", Json::num(r.p99_us)),
+                ("iters", Json::num(r.iters as f64)),
+            ])
+        })
+        .collect();
+    opts.emit(
+        "micro_hotpath",
+        Json::obj(vec![
+            ("smoke", Json::Bool(opts.smoke)),
+            ("results", Json::arr(entries)),
+        ]),
+    )
+    .unwrap();
+
     assert!(
-        r_oea.mean_us < 50.0,
-        "routing hot path regressed badly: {} us",
-        r_oea.mean_us
+        oea_mean_us < 50.0,
+        "routing hot path regressed badly: {oea_mean_us} us"
     );
 }

@@ -4,49 +4,45 @@
 //! normalized-average rows the paper reports.
 //!
 //!     cargo bench --bench tab_latency
+//!     cargo bench --bench tab_latency -- --smoke   # CI tier
 //!     OEA_BENCH_CONFIG=base cargo bench --bench tab_latency
 
-use std::path::Path;
-
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
 use oea_serve::eval;
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::Policy;
-use oea_serve::runtime::Runtime;
-use oea_serve::util::bench::{fmt1, fmt2, Table};
-use oea_serve::util::bpe::Tokenizer;
-use oea_serve::util::corpus::Corpus;
+use oea_serve::util::bench::{fmt1, fmt2, BenchOpts, Table};
+use oea_serve::util::json::Json;
 use oea_serve::util::rng::Rng;
 use oea_serve::util::stats;
 
 fn main() {
-    let cfg_name = std::env::var("OEA_BENCH_CONFIG").unwrap_or_else(|_| "small".into());
+    let opts = BenchOpts::from_args();
     let fast = std::env::var("OEA_BENCH_FAST").is_ok();
-    let rt = Runtime::load(Path::new("artifacts"), &cfg_name).expect("make artifacts");
-    let vocab = rt.manifest.dir.join(&rt.manifest.vocab_file);
-    let tok = Tokenizer::load(&vocab).unwrap();
-    let corpus = Corpus::load(Path::new("data")).unwrap();
-    let runner = ModelRunner::new(rt);
-    let c = runner.cfg().clone();
+    let cfg_name = std::env::var("OEA_BENCH_CONFIG")
+        .unwrap_or_else(|_| if opts.smoke { "smoke" } else { "small" }.into());
+    let c = ModelConfig::preset(&cfg_name).unwrap();
+    let runner = ModelRunner::new(CpuBackend::synthetic(c.clone(), 0));
     let cost = H100Presets::for_config(&c.name);
 
     let b = 16;
-    let positions = if fast { 12 } else { 24 };
-    let k0s: Vec<usize> = if c.name == "base" {
-        vec![3, 4, 5, 6]
-    } else {
-        vec![3, 4, 5, 6, 7]
+    let positions = if opts.smoke { 4 } else if fast { 12 } else { 24 };
+    let k0s: Vec<usize> = match c.name.as_str() {
+        "base" => vec![3, 4, 5, 6],
+        "smoke" => vec![1, 2, 3],
+        _ => vec![3, 4, 5, 6, 7],
     };
+    let all_suites: &[(&str, &str, usize)] = &eval::SUITES;
+    let suites = if opts.smoke { &all_suites[..2] } else { all_suites };
 
     // rows[suite][arm] = (avg_t, sim_us, measured_us)
     let mut results: Vec<Vec<(f64, f64, f64)>> = Vec::new();
-    for (si, (suite, _, dom)) in eval::SUITES.iter().enumerate() {
+    for (si, (suite, _, dom)) in suites.iter().enumerate() {
         let mut rng = Rng::new(1000 + si as u64);
         // domain-pure batches: the paper's conservative serving regime
-        let mut seqs = eval::suite_prompts(&corpus, &tok, &mut rng, *dom, b, positions + 1);
-        for s in seqs.iter_mut() {
-            assert!(s.len() > positions);
-        }
+        let seqs = eval::synthetic_domain_prompts(&c, &mut rng, *dom, b, positions + 1);
         let mut row = Vec::new();
         for &k0 in &k0s {
             let run = eval::forced_run(
@@ -56,7 +52,7 @@ fn main() {
             .unwrap();
             row.push((
                 run.avg_t,
-                cost.layer_us(run.avg_t.round() as usize, (b * k0) as usize),
+                cost.layer_us(run.avg_t.round() as usize, b * k0),
                 run.avg_moe_us,
             ));
         }
@@ -88,7 +84,7 @@ fn main() {
         &format!("{tab_lat}: avg MoE layer latency, simulated H100 us ({}, B={b})", c.name),
         &header_refs,
     );
-    for (si, (suite, ..)) in eval::SUITES.iter().enumerate() {
+    for (si, (suite, ..)) in suites.iter().enumerate() {
         let mut row = vec![suite.to_string()];
         row.extend(results[si].iter().map(|r| fmt1(r.1)));
         t1.row(row);
@@ -111,7 +107,7 @@ fn main() {
         &format!("{tab_lat}-measured: avg MoE layer latency, measured CPU us"),
         &header_refs,
     );
-    for (si, (suite, ..)) in eval::SUITES.iter().enumerate() {
+    for (si, (suite, ..)) in suites.iter().enumerate() {
         let mut row = vec![suite.to_string()];
         row.extend(results[si].iter().map(|r| fmt1(r.2)));
         t1m.row(row);
@@ -129,7 +125,7 @@ fn main() {
         &format!("{tab_t}: avg activated experts ({}, B={b})", c.name),
         &header_refs,
     );
-    for (si, (suite, ..)) in eval::SUITES.iter().enumerate() {
+    for (si, (suite, ..)) in suites.iter().enumerate() {
         let mut row = vec![suite.to_string()];
         row.extend(results[si].iter().map(|r| fmt1(r.0)));
         t2.row(row);
@@ -146,4 +142,41 @@ fn main() {
     t2.print();
     println!("paper normalized averages (Tab 4):  0.51 0.61 0.72 0.83 0.91 1.00");
     println!("paper normalized averages (Tab 10): 0.53 0.64 0.74 0.83 1.00");
+
+    // machine-readable artifact for CI's perf trajectory
+    let mut suites_json: Vec<Json> = Vec::new();
+    for (si, (suite, ..)) in suites.iter().enumerate() {
+        let arms: Vec<Json> = results[si]
+            .iter()
+            .enumerate()
+            .map(|(ai, (t, us, mus))| {
+                let arm = if ai < k0s.len() {
+                    format!("oea:k0={}", k0s[ai])
+                } else {
+                    "vanilla".to_string()
+                };
+                Json::obj(vec![
+                    ("arm", Json::str(&arm)),
+                    ("avg_t", Json::num(*t)),
+                    ("sim_us", Json::num(*us)),
+                    ("measured_us", Json::num(*mus)),
+                ])
+            })
+            .collect();
+        suites_json.push(Json::obj(vec![
+            ("suite", Json::str(suite)),
+            ("arms", Json::arr(arms)),
+        ]));
+    }
+    opts.emit(
+        "tab_latency",
+        Json::obj(vec![
+            ("config", Json::str(&c.name)),
+            ("smoke", Json::Bool(opts.smoke)),
+            ("b", Json::num(b as f64)),
+            ("positions", Json::num(positions as f64)),
+            ("suites", Json::arr(suites_json)),
+        ]),
+    )
+    .unwrap();
 }

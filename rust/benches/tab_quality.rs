@@ -10,42 +10,41 @@
 //! same: pruning collapses at low k0, OEA recovers it at identical T.
 //!
 //!     cargo bench --bench tab_quality
+//!     cargo bench --bench tab_quality -- --smoke   # CI tier
 //!     OEA_BENCH_RUNS=4 cargo bench --bench tab_quality
 
-use std::path::Path;
-
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
 use oea_serve::eval;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::Policy;
-use oea_serve::runtime::Runtime;
-use oea_serve::util::bench::Table;
-use oea_serve::util::bpe::Tokenizer;
-use oea_serve::util::corpus::Corpus;
+use oea_serve::util::bench::{BenchOpts, Table};
+use oea_serve::util::json::Json;
 use oea_serve::util::rng::Rng;
 use oea_serve::util::stats;
 
 fn main() {
-    let cfg_name = std::env::var("OEA_BENCH_CONFIG").unwrap_or_else(|_| "small".into());
+    let opts = BenchOpts::from_args();
     let fast = std::env::var("OEA_BENCH_FAST").is_ok();
     let runs: usize = std::env::var("OEA_BENCH_RUNS")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(if fast { 1 } else { 2 });
-    let rt = Runtime::load(Path::new("artifacts"), &cfg_name).expect("make artifacts");
-    let vocab = rt.manifest.dir.join(&rt.manifest.vocab_file);
-    let tok = Tokenizer::load(&vocab).unwrap();
-    let corpus = Corpus::load(Path::new("data")).unwrap();
-    let runner = ModelRunner::new(rt);
-    let c = runner.cfg().clone();
+        .unwrap_or(if opts.smoke || fast { 1 } else { 2 });
+    let cfg_name = std::env::var("OEA_BENCH_CONFIG")
+        .unwrap_or_else(|_| if opts.smoke { "smoke" } else { "small" }.into());
+    let c = ModelConfig::preset(&cfg_name).unwrap();
+    let runner = ModelRunner::new(CpuBackend::synthetic(c.clone(), 0));
 
     let b = 8;
-    let prompt_len = 24;
-    let gen_len = if fast { 8 } else { 14 };
-    let k0s: Vec<usize> = if c.name == "base" {
-        vec![3, 4, 5, 6]
-    } else {
-        vec![3, 4, 5, 6, 7]
+    let prompt_len = if opts.smoke { 8 } else { 24 };
+    let gen_len = if opts.smoke { 4 } else if fast { 8 } else { 14 };
+    let k0s: Vec<usize> = match c.name.as_str() {
+        "base" => vec![3, 4, 5, 6],
+        "smoke" => vec![1, 2, 3],
+        _ => vec![3, 4, 5, 6, 7],
     };
+    let all_suites: &[(&str, &str, usize)] = &eval::SUITES;
+    let suites = if opts.smoke { &all_suites[..2] } else { all_suites };
 
     let tab = if c.name == "base" { "Table 2" } else { "Table 1" };
     let mut header: Vec<String> = vec!["BENCHMARK".into(), "MODE".into()];
@@ -61,14 +60,14 @@ fn main() {
         &header_refs,
     );
 
-    for (si, (suite, _, dom)) in eval::SUITES.iter().enumerate() {
+    let mut suites_json: Vec<Json> = Vec::new();
+    for (si, (suite, _, dom)) in suites.iter().enumerate() {
         // per k0: samples over runs, for pruned and OEA
         let mut pruned: Vec<Vec<f64>> = vec![Vec::new(); k0s.len()];
         let mut oea: Vec<Vec<f64>> = vec![Vec::new(); k0s.len()];
         for run in 0..runs {
             let mut rng = Rng::new(si as u64 * 97 + run as u64);
-            let prompts =
-                eval::suite_prompts(&corpus, &tok, &mut rng, *dom, b, prompt_len);
+            let prompts = eval::synthetic_domain_prompts(&c, &mut rng, *dom, b, prompt_len);
             for (ki, &k0) in k0s.iter().enumerate() {
                 let fp = eval::fidelity_eval(
                     &runner, &prompts, gen_len, Policy::Pruned { k0, p: 1.0 },
@@ -102,6 +101,21 @@ fn main() {
         row.extend(oea.iter().map(|xs| fmt_cell(xs)));
         row.push("100.0".into());
         t.row(row);
+        let arms: Vec<Json> = k0s
+            .iter()
+            .enumerate()
+            .map(|(ki, &k0)| {
+                Json::obj(vec![
+                    ("k0", Json::num(k0 as f64)),
+                    ("pruned_fidelity", Json::num(stats::mean(&pruned[ki]))),
+                    ("oea_fidelity", Json::num(stats::mean(&oea[ki]))),
+                ])
+            })
+            .collect();
+        suites_json.push(Json::obj(vec![
+            ("suite", Json::str(suite)),
+            ("arms", Json::arr(arms)),
+        ]));
         eprintln!("suite {suite} done ({runs} runs x {} k0s x 2 modes)", k0s.len());
     }
     t.print();
@@ -111,4 +125,17 @@ fn main() {
          pruned degrades sharply at low k0; OEA at the same k0 (same T!)\n\
          recovers most of it."
     );
+
+    opts.emit(
+        "tab_quality",
+        Json::obj(vec![
+            ("config", Json::str(&c.name)),
+            ("smoke", Json::Bool(opts.smoke)),
+            ("b", Json::num(b as f64)),
+            ("gen_len", Json::num(gen_len as f64)),
+            ("runs", Json::num(runs as f64)),
+            ("suites", Json::arr(suites_json)),
+        ]),
+    )
+    .unwrap();
 }

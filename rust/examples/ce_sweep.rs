@@ -6,45 +6,41 @@
 //!
 //!     cargo run --release --example ce_sweep [-- <batch> <positions>]
 
-use std::path::Path;
-
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
 use oea_serve::eval;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::Policy;
-use oea_serve::runtime::Runtime;
 use oea_serve::util::bench::Table;
-use oea_serve::util::bpe::Tokenizer;
-use oea_serve::util::corpus::Corpus;
 use oea_serve::util::rng::Rng;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let b: usize = args.first().map(|s| s.parse().unwrap()).unwrap_or(16);
-    let positions: usize = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(24);
+    let positions: usize = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(12);
 
-    let rt = Runtime::load(Path::new("artifacts"), "small")?;
-    let vocab = rt.manifest.dir.join(&rt.manifest.vocab_file);
-    let tok = Tokenizer::load(&vocab)?;
-    let corpus = Corpus::load(Path::new("data"))?;
-    let runner = ModelRunner::new(rt);
-    let k = runner.cfg().top_k;
+    let cfg = ModelConfig::preset(
+        &std::env::var("OEA_BENCH_CONFIG").unwrap_or_else(|_| "smoke".into()),
+    )?;
+    let runner = ModelRunner::new(CpuBackend::synthetic(cfg.clone(), 0));
+    let k = cfg.top_k;
 
     let mut rng = Rng::new(0);
     // mixed-domain batches: the diverse regime where piggybacking shines
-    let seqs = eval::sequences_from_corpus(&corpus, &tok, &mut rng, b, positions, true);
+    let seqs = eval::synthetic_sequences(&cfg, &mut rng, b, positions, true);
 
     println!("reference run (vanilla top-{k})...");
     let vanilla = eval::forced_run(&runner, &seqs, positions, Policy::Vanilla { k }, true)?;
 
     let mut table = Table::new(
-        &format!("CE sweep @ B={b}, {positions} positions (small config)"),
+        &format!("CE sweep @ B={b}, {positions} positions ({} config, cpu)", cfg.name),
         &["policy", "avg T", "CE delta", "KL vs vanilla", "moe us (cpu)"],
     );
     let mut arms: Vec<Policy> = Vec::new();
-    for k0 in [2, 3, 4, 5, 6] {
+    for k0 in 2..k {
         arms.push(Policy::Pruned { k0, p: 1.0 });
     }
-    for k0 in [1, 2, 3, 4, 5, 6] {
+    for k0 in 1..k {
         arms.push(Policy::OeaSimplified { k0, k });
     }
     for pol in arms {

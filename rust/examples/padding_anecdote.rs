@@ -6,32 +6,27 @@
 //!
 //!     cargo run --release --example padding_anecdote
 
-use std::path::Path;
-
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
 use oea_serve::eval;
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::{route, Policy, RoutingInput};
 use oea_serve::moe::ScoreMatrix;
-use oea_serve::runtime::Runtime;
 use oea_serve::util::bench::Table;
-use oea_serve::util::bpe::Tokenizer;
-use oea_serve::util::corpus::Corpus;
 use oea_serve::util::rng::Rng;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let rt = Runtime::load(Path::new("artifacts"), "small")?;
-    let vocab = rt.manifest.dir.join(&rt.manifest.vocab_file);
-    let tok = Tokenizer::load(&vocab)?;
-    let corpus = Corpus::load(Path::new("data"))?;
-    let runner = ModelRunner::new(rt);
-    let c = runner.cfg().clone();
+    let c = ModelConfig::preset(
+        &std::env::var("OEA_BENCH_CONFIG").unwrap_or_else(|_| "smoke".into()),
+    )?;
+    let runner = ModelRunner::new(CpuBackend::synthetic(c.clone(), 0));
     let mut rng = Rng::new(0);
-    let cost = H100Presets::qwen3_30b();
-    let positions = 24;
+    let cost = H100Presets::for_config(&c.name);
+    let positions = 12;
 
     // 8 domain-pure sequences; variants use the first `live` of them
-    let seqs = eval::sequences_from_corpus(&corpus, &tok, &mut rng, 8, positions, false);
+    let seqs = eval::synthetic_sequences(&c, &mut rng, 8, positions, false);
 
     let mut table = Table::new(
         "Paper §6 padding anecdote (bucket = 8, vanilla routing)",

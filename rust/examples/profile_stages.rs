@@ -1,0 +1,47 @@
+//! Per-stage profiling tool (perf work, DESIGN.md §8 / EXPERIMENTS.md
+//! §Perf): times the decode step on the CPU backend at B=16 and breaks out
+//! the MoE stage and routing decision. Run after any kernel change.
+//!
+//!     cargo run --release --example profile_stages
+//!     OEA_BENCH_CONFIG=small cargo run --release --example profile_stages
+
+use std::time::Instant;
+
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
+use oea_serve::model::ModelRunner;
+
+fn main() {
+    let c = ModelConfig::preset(
+        &std::env::var("OEA_BENCH_CONFIG").unwrap_or_else(|_| "smoke".into()),
+    )
+    .unwrap();
+    let b = 16usize;
+    let runner = ModelRunner::new(CpuBackend::synthetic(c.clone(), 0));
+    let mut batch = runner.new_batch(b).unwrap();
+    let tokens: Vec<i32> = (0..b as i32).map(|i| 3 + i * 17).collect();
+    let live = vec![true; b];
+    for step in 0..6 {
+        let pos = vec![step as i32; b];
+        let t0 = Instant::now();
+        let out = runner
+            .decode_step(
+                &mut batch,
+                &tokens,
+                &pos,
+                &live,
+                oea_serve::moe::policy::Policy::Vanilla { k: c.top_k },
+                true,
+            )
+            .unwrap();
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let avg_t: f64 =
+            out.layers.iter().map(|l| l.t as f64).sum::<f64>() / out.layers.len() as f64;
+        let moe_ms: f64 = out.layers.iter().map(|l| l.moe_us).sum::<f64>() / 1e3;
+        let route_us: f64 = out.layers.iter().map(|l| l.route_us).sum::<f64>();
+        println!(
+            "step {step}: {ms:.1}ms total | moe(sum) {moe_ms:.1}ms | \
+             route(sum) {route_us:.0}us | avg_t {avg_t:.1}"
+        );
+    }
+}

@@ -1,25 +1,24 @@
 //! END-TO-END serving driver (DESIGN.md E-e2e): starts the real HTTP
-//! server on the `small` model, drives it with concurrent client requests
-//! over TCP, and reports latency/throughput plus the MoE telemetry — once
-//! under vanilla routing and once under OEA.
+//! server on the hermetic CPU backend, drives it with concurrent client
+//! requests over TCP, and reports latency/throughput plus the MoE
+//! telemetry — once under vanilla routing and once under OEA.
 //!
-//!     make artifacts && cargo run --release --example serve_e2e
+//!     cargo run --release --example serve_e2e
+//!     OEA_E2E_CONFIG=small cargo run --release --example serve_e2e
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::path::Path;
 use std::time::{Duration, Instant};
 
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
 use oea_serve::coordinator::{Engine, EngineConfig};
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::Policy;
-use oea_serve::runtime::Runtime;
 use oea_serve::server;
 use oea_serve::util::bpe::Tokenizer;
-use oea_serve::util::corpus::Corpus;
 use oea_serve::util::json::Json;
-use oea_serve::util::rng::Rng;
 use oea_serve::util::stats;
 
 const N_REQUESTS: usize = 12;
@@ -42,26 +41,30 @@ fn http_post(addr: &str, path: &str, body: &str) -> Result<String, std::io::Erro
         .unwrap_or(out))
 }
 
+fn cfg_name() -> String {
+    std::env::var("OEA_E2E_CONFIG").unwrap_or_else(|_| "smoke".into())
+}
+
 fn run_one(policy_spec: &str, port: u16) -> (f64, f64, Vec<f64>) {
     let addr = format!("127.0.0.1:{port}");
     let spec = policy_spec.to_string();
     let server_thread = std::thread::spawn(move || {
-        let tok =
-            Tokenizer::load(Path::new("artifacts/small/vocab.json")).unwrap();
-        let policy = Policy::from_cli(&spec, 8, 32).unwrap();
+        let tok = Tokenizer::byte_level();
+        let cfg = ModelConfig::preset(&cfg_name()).unwrap();
+        let policy = Policy::from_cli(&spec, cfg.top_k, cfg.n_experts).unwrap();
+        let cost = H100Presets::for_config(&cfg.name);
         server::serve(
             move || {
-                // the engine (and its PJRT client) is built on the engine
-                // thread — PJRT handles are not Send
-                let rt = Runtime::load(Path::new("artifacts"), "small")?;
+                // the engine is built on the engine thread (backends may
+                // own non-Send handles; the CPU backend just rides along)
                 Engine::new(
-                    ModelRunner::new(rt),
+                    ModelRunner::new(CpuBackend::synthetic(cfg, 0)),
                     EngineConfig {
                         policy,
                         mask_padding: true,
                         max_running: 8,
                         eos_token: None,
-                        cost_model: H100Presets::qwen3_30b(),
+                        cost_model: cost,
                     },
                 )
             },
@@ -78,11 +81,13 @@ fn run_one(policy_spec: &str, port: u16) -> (f64, f64, Vec<f64>) {
         std::thread::sleep(Duration::from_millis(100));
     }
 
-    // sample real prompts from the corpus
-    let corpus = Corpus::load(Path::new("data")).unwrap();
-    let mut rng = Rng::new(42);
     let prompts: Vec<String> = (0..N_REQUESTS)
-        .map(|i| corpus.sample_text_domain(&mut rng, i % 4, 120))
+        .map(|i| {
+            format!(
+                "request {i}: the quiet river carried lantern number {} downstream",
+                i * 7 % 13
+            )
+        })
         .collect();
 
     // all clients at once: the engine batches up to max_running=8 and
@@ -158,7 +163,11 @@ fn run_one(policy_spec: &str, port: u16) -> (f64, f64, Vec<f64>) {
 }
 
 fn main() {
-    println!("=== end-to-end serving: small model, HTTP API, 12 requests ===");
+    println!(
+        "=== end-to-end serving: {} model (cpu backend), HTTP API, {} requests ===",
+        cfg_name(),
+        N_REQUESTS
+    );
     let (t_v, us_v, _) = run_one("vanilla", 18080);
     let (t_o, us_o, _) = run_one("oea:k0=3", 18081);
     println!(

@@ -1,0 +1,285 @@
+//! Pure-Rust reference kernels mirroring `python/compile/kernels/ref.py`
+//! (the cross-language correctness ground truth). All math is f32, plain
+//! loops ordered for cache locality — fast enough for tests and the CI
+//! bench-smoke tier; golden fixtures in `rust/tests/cpu_backend_golden.rs`
+//! pin these against the JAX oracles.
+
+/// `out[m, n] = a[m, k] @ b[k, n]` (row-major, ikj order so the inner loop
+/// streams both `b` and `out`).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// RMSNorm per row: `h / sqrt(mean(h^2) + eps) * scale` (ref.rmsnorm_ref).
+pub fn rmsnorm(h: &[f32], scale: &[f32], d: usize, eps: f32) -> Vec<f32> {
+    debug_assert_eq!(h.len() % d, 0);
+    debug_assert_eq!(scale.len(), d);
+    let mut out = vec![0.0f32; h.len()];
+    for (row, orow) in h.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let ms: f32 = row.iter().map(|&x| x * x).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for ((o, &x), &s) in orow.iter_mut().zip(row.iter()).zip(scale.iter()) {
+            *o = x * inv * s;
+        }
+    }
+    out
+}
+
+/// Numerically-stable softmax over each row of `x [rows, n]`, in place.
+pub fn softmax_rows(x: &mut [f32], n: usize) {
+    debug_assert_eq!(x.len() % n, 0);
+    for row in x.chunks_exact_mut(n) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= z;
+        }
+    }
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Router scores: `softmax(rmsnorm(h, n2) @ w)` (ref.router_scores_ref).
+pub fn router_scores(
+    h: &[f32],
+    n2: &[f32],
+    w: &[f32],
+    b: usize,
+    d: usize,
+    n_experts: usize,
+    eps: f32,
+) -> Vec<f32> {
+    let hn = rmsnorm(h, n2, d, eps);
+    let mut s = matmul(&hn, w, b, d, n_experts);
+    softmax_rows(&mut s, n_experts);
+    s
+}
+
+/// RoPE over `x [rows, heads, hd]` with per-row positions, pairing
+/// `(i, i + hd/2)` exactly like `model.rope`.
+pub fn rope(x: &mut [f32], heads: usize, hd: usize, pos: &[i32], theta: f32) {
+    let half = hd / 2;
+    debug_assert_eq!(x.len(), pos.len() * heads * hd);
+    for (r, &p) in pos.iter().enumerate() {
+        for hh in 0..heads {
+            let base = (r * heads + hh) * hd;
+            for i in 0..half {
+                let freq = theta.powf(-(i as f32) / half as f32);
+                let ang = p as f32 * freq;
+                let (sin, cos) = ang.sin_cos();
+                let x1 = x[base + i];
+                let x2 = x[base + half + i];
+                x[base + i] = x1 * cos - x2 * sin;
+                x[base + half + i] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+/// Decode attention over the slot-stable cache (ref.decode_attention_ref):
+/// GQA with `n_rep = Hq / Hkv`, causal mask `s <= pos[row]`, softmax over
+/// the visible prefix. `k_cache`/`v_cache` are `[B, S, Hkv, hd]` slices of
+/// the combined layer cache. Returns `[B, Hq, hd]`.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_attention(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    b: usize,
+    s_max: usize,
+    hq: usize,
+    hkv: usize,
+    hd: usize,
+    pos: &[i32],
+) -> Vec<f32> {
+    debug_assert_eq!(q.len(), b * hq * hd);
+    debug_assert_eq!(k_cache.len(), b * s_max * hkv * hd);
+    let n_rep = hq / hkv;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; b * hq * hd];
+    let mut logits = vec![0.0f32; s_max];
+    for i in 0..b {
+        let visible = (pos[i].max(0) as usize + 1).min(s_max);
+        for h in 0..hq {
+            let kvh = h / n_rep;
+            let qrow = &q[(i * hq + h) * hd..(i * hq + h + 1) * hd];
+            for (s, l) in logits[..visible].iter_mut().enumerate() {
+                let krow = &k_cache[((i * s_max + s) * hkv + kvh) * hd..][..hd];
+                let mut dot = 0.0f32;
+                for (qv, kv) in qrow.iter().zip(krow.iter()) {
+                    dot += qv * kv;
+                }
+                *l = dot * scale;
+            }
+            softmax_rows(&mut logits[..visible], visible);
+            let orow = &mut out[(i * hq + h) * hd..(i * hq + h + 1) * hd];
+            for (s, &p) in logits[..visible].iter().enumerate() {
+                let vrow = &v_cache[((i * s_max + s) * hkv + kvh) * hd..][..hd];
+                for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                    *o += p * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Gather-based grouped expert FFN (ref.moe_ffn_gathered): iterate the
+/// padded active list, `out += comb[:, e] * (silu(x@wg[e]) * (x@wu[e])) @
+/// wd[e]`. Zero-combine padding ids contribute nothing but still run their
+/// GEMMs — the measured work is proportional to `ids.len()` (the executed
+/// T bucket), exactly like the gathered device kernel. `x` is the
+/// already-normed input `[B, D]`; returns the FFN output `[B, D]` (the
+/// caller adds the residual).
+#[allow(clippy::too_many_arguments)]
+pub fn moe_ffn_gather(
+    x: &[f32],
+    wg: &[f32],
+    wu: &[f32],
+    wd: &[f32],
+    comb: &[f32],
+    ids: &[i32],
+    b: usize,
+    d: usize,
+    h: usize,
+    n_experts: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), b * d);
+    debug_assert_eq!(comb.len(), b * n_experts);
+    let mut out = vec![0.0f32; b * d];
+    for &id in ids {
+        let e = id as usize;
+        debug_assert!(e < n_experts);
+        let wg_e = &wg[e * d * h..(e + 1) * d * h];
+        let wu_e = &wu[e * d * h..(e + 1) * d * h];
+        let wd_e = &wd[e * h * d..(e + 1) * h * d];
+        let g = matmul(x, wg_e, b, d, h);
+        let u = matmul(x, wu_e, b, d, h);
+        let mut act = vec![0.0f32; b * h];
+        for ((a, &gv), &uv) in act.iter_mut().zip(g.iter()).zip(u.iter()) {
+            *a = silu(gv) * uv;
+        }
+        let y = matmul(&act, wd_e, b, h, d);
+        for i in 0..b {
+            let c = comb[i * n_experts + e];
+            if c == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * d..(i + 1) * d];
+            let yrow = &y[i * d..(i + 1) * d];
+            for (o, &yv) in orow.iter_mut().zip(yrow.iter()) {
+                *o += c * yv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let id = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &id, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 3);
+        for row in x.chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(row.iter().all(|&p| p > 0.0));
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale_unit_rows() {
+        let h = vec![3.0f32, 4.0, 0.0, 0.0];
+        let scale = vec![1.0f32; 4];
+        let out = rmsnorm(&h, &scale, 4, 0.0);
+        let ms: f32 = out.iter().map(|&x| x * x).sum::<f32>() / 4.0;
+        assert!((ms - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rope_at_pos_zero_is_identity() {
+        let orig = vec![0.5f32, -1.0, 2.0, 0.25];
+        let mut x = orig.clone();
+        rope(&mut x, 1, 4, &[0], 10000.0);
+        for (a, b) in x.iter().zip(orig.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_pair_norm() {
+        let mut x = vec![0.5f32, -1.0, 2.0, 0.25];
+        let norm0: f32 = x.iter().map(|v| v * v).sum();
+        rope(&mut x, 1, 4, &[17], 10000.0);
+        let norm1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((norm0 - norm1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn attention_single_visible_token_copies_v() {
+        // pos = 0: only cache slot 0 visible, attention output == v[0]
+        let (b, s, hq, hkv, hd) = (1, 4, 2, 1, 2);
+        let q = vec![0.3f32; hq * hd];
+        let mut k = vec![0.0f32; s * hkv * hd];
+        let mut v = vec![0.0f32; s * hkv * hd];
+        k[0] = 1.0;
+        v[0] = 5.0;
+        v[1] = -2.0;
+        let out = decode_attention(&q, &k, &v, b, s, hq, hkv, hd, &[0]);
+        for h in 0..hq {
+            assert!((out[h * hd] - 5.0).abs() < 1e-6);
+            assert!((out[h * hd + 1] + 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn moe_padding_id_contributes_nothing() {
+        let (b, d, h, n) = (2, 3, 4, 3);
+        let x = vec![0.2f32; b * d];
+        let wg = vec![0.1f32; n * d * h];
+        let wu = vec![0.1f32; n * d * h];
+        let wd = vec![0.1f32; n * h * d];
+        // only expert 0 has combine mass
+        let mut comb = vec![0.0f32; b * n];
+        comb[0] = 1.0;
+        comb[n] = 1.0;
+        let a = moe_ffn_gather(&x, &wg, &wu, &wd, &comb, &[0], b, d, h, n);
+        let bb = moe_ffn_gather(&x, &wg, &wu, &wd, &comb, &[0, 2, 2], b, d, h, n);
+        for (x1, x2) in a.iter().zip(bb.iter()) {
+            assert!((x1 - x2).abs() < 1e-6);
+        }
+    }
+}

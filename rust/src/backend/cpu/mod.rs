@@ -1,0 +1,499 @@
+//! Hermetic pure-Rust CPU reference backend.
+//!
+//! Mirrors the JAX model (`python/compile/model.py`) stage for stage using
+//! the reference kernels in [`kernels`]: embed, RoPE decode attention over
+//! the slot-stable KV cache, router score computation, and the
+//! gather-based grouped expert FFN with per-expert load accounting.
+//!
+//! Weights come from [`CpuBackend::synthetic`], the Rust port of
+//! `python/compile/weights.py`: seeded-random with *structure* — token
+//! embeddings carry a domain component and router columns carry per-expert
+//! domain affinities — so router softmax distributions have realistic
+//! concentration and domain-correlated expert choice, the two properties
+//! OEA's phases interact with. Quality is always measured relative to
+//! vanilla routing of the same model, exactly the quantity the paper
+//! sweeps, so no pretrained checkpoint is needed.
+
+pub mod kernels;
+
+use std::cell::RefCell;
+
+use crate::backend::{Backend, LayerPre, Prefilled};
+use crate::config::ModelConfig;
+use crate::moe::policy::{self, Policy, RoutingInput};
+use crate::moe::ScoreMatrix;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// One transformer layer's weights (shapes as in `weights.py`).
+pub struct LayerWeights {
+    /// `[D, Hq*hd]`
+    pub wq: Vec<f32>,
+    /// `[D, Hkv*hd]`
+    pub wk: Vec<f32>,
+    /// `[D, Hkv*hd]`
+    pub wv: Vec<f32>,
+    /// `[Hq*hd, D]`
+    pub wo: Vec<f32>,
+    /// `[D]`
+    pub n1: Vec<f32>,
+    /// `[D]`
+    pub n2: Vec<f32>,
+    /// `[D, N]`
+    pub router: Vec<f32>,
+    /// `[N, D, H]`
+    pub wg: Vec<f32>,
+    /// `[N, D, H]`
+    pub wu: Vec<f32>,
+    /// `[N, H, D]`
+    pub wd: Vec<f32>,
+}
+
+/// Per-layer KV cache of a decode batch: `[2, bucket, S, Hkv, hd]` per
+/// layer (K at index 0, V at index 1 — the PJRT layout, so repack logic
+/// and tests transfer unchanged).
+pub struct CpuKvCache {
+    pub bucket: usize,
+    pub layers: Vec<Vec<f32>>,
+}
+
+/// A prefilled sequence's per-layer KV rows, each `[S, Hkv, hd]`.
+pub struct CpuKvRows {
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+pub struct CpuBackend {
+    cfg: ModelConfig,
+    /// `[V, D]`
+    pub embed_w: Vec<f32>,
+    /// `[D, V]`
+    pub unembed_w: Vec<f32>,
+    /// `[D]`
+    pub final_norm: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    /// Cumulative token-expert assignments per expert id (telemetry for
+    /// load-balance analysis; counts decode and prefill work alike).
+    expert_load: RefCell<Vec<u64>>,
+}
+
+fn gauss(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian() as f32).collect()
+}
+
+fn scaled(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
+}
+
+impl CpuBackend {
+    /// Structured synthetic weights (the Rust port of `weights.py::init`).
+    /// Deterministic in `(cfg, seed)`.
+    pub fn synthetic(cfg: ModelConfig, seed: u64) -> CpuBackend {
+        let mut rng = Rng::new(seed ^ 0x5EED_CAFE_F00D);
+        let (d, v, n, h) = (cfg.d_model, cfg.vocab, cfg.n_experts, cfg.d_expert);
+        let (qd, kvd, nd) = (cfg.q_dim(), cfg.kv_dim(), cfg.n_domains);
+
+        // unit-norm domain centers in embedding space
+        let mut centers = gauss(&mut rng, nd * d);
+        for c in centers.chunks_exact_mut(d) {
+            let norm = c.iter().map(|&x| x * x).sum::<f32>().sqrt().max(1e-6);
+            for x in c.iter_mut() {
+                *x /= norm;
+            }
+        }
+
+        // embedding: domain component (band-structured token->domain
+        // affinity, the offline stand-in for corpus co-occurrence) + noise,
+        // unit-RMS rows
+        let mut embed_w = scaled(&mut rng, v * d, 0.5);
+        for (t, row) in embed_w.chunks_exact_mut(d).enumerate() {
+            let primary = if t < 3 || v <= 3 {
+                None
+            } else {
+                Some(((t - 3) * nd / (v - 3)).min(nd - 1))
+            };
+            for (dom, center) in centers.chunks_exact(d).enumerate() {
+                let aff = match primary {
+                    Some(p) if p == dom => 0.7,
+                    Some(_) => 0.3 / (nd.max(2) - 1) as f32,
+                    None => 1.0 / nd as f32,
+                };
+                for (x, &c) in row.iter_mut().zip(center.iter()) {
+                    *x += aff * c;
+                }
+            }
+            let ms = row.iter().map(|&x| x * x).sum::<f32>() / d as f32;
+            let inv = 1.0 / (ms.sqrt() + 1e-6);
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+        }
+
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        let unembed_w = scaled(&mut rng, d * v, inv_sqrt_d);
+        let final_norm = vec![1.0f32; d];
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            // expert -> domain assignment: round-robin, shuffled
+            let mut dom: Vec<usize> = (0..n).map(|e| e % nd).collect();
+            rng.shuffle(&mut dom);
+            // router: per-expert domain affinity + idiosyncratic component
+            let (beta, gamma) = (2.0 * inv_sqrt_d, inv_sqrt_d);
+            let mut router = vec![0.0f32; d * n];
+            for (e, &de) in dom.iter().enumerate() {
+                let center = &centers[de * d..(de + 1) * d];
+                for (dd, &c) in center.iter().enumerate() {
+                    router[dd * n + e] = beta * c + gamma * rng.gaussian() as f32;
+                }
+            }
+            layers.push(LayerWeights {
+                wq: scaled(&mut rng, d * qd, inv_sqrt_d),
+                wk: scaled(&mut rng, d * kvd, inv_sqrt_d),
+                wv: scaled(&mut rng, d * kvd, inv_sqrt_d),
+                wo: scaled(&mut rng, qd * d, 0.5 / (qd as f32).sqrt()),
+                n1: vec![1.0f32; d],
+                n2: vec![1.0f32; d],
+                router,
+                wg: scaled(&mut rng, n * d * h, inv_sqrt_d),
+                wu: scaled(&mut rng, n * d * h, inv_sqrt_d),
+                wd: scaled(&mut rng, n * h * d, 0.5 / (h as f32).sqrt()),
+            });
+        }
+
+        CpuBackend {
+            expert_load: RefCell::new(vec![0u64; n]),
+            cfg,
+            embed_w,
+            unembed_w,
+            final_norm,
+            layers,
+        }
+    }
+
+    /// Snapshot of cumulative per-expert token assignments.
+    pub fn expert_loads(&self) -> Vec<u64> {
+        self.expert_load.borrow().clone()
+    }
+
+    pub fn reset_expert_loads(&self) {
+        for x in self.expert_load.borrow_mut().iter_mut() {
+            *x = 0;
+        }
+    }
+
+    /// `S * Hkv * hd` — one slot's cache row length.
+    fn row_len(&self) -> usize {
+        self.cfg.s_max * self.cfg.n_kv_heads * self.cfg.head_dim
+    }
+}
+
+impl Backend for CpuBackend {
+    type Cache = CpuKvCache;
+    type Rows = CpuKvRows;
+
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn label(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn new_cache(&self, bucket: usize) -> Result<CpuKvCache> {
+        let layers = (0..self.cfg.n_layers)
+            .map(|_| vec![0.0f32; 2 * bucket * self.row_len()])
+            .collect();
+        Ok(CpuKvCache { bucket, layers })
+    }
+
+    fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (d, v) = (self.cfg.d_model, self.cfg.vocab);
+        let mut out = vec![0.0f32; tokens.len() * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            // clamp like jnp.take's default out-of-bounds behaviour
+            let t = (t.max(0) as usize).min(v - 1);
+            out[i * d..(i + 1) * d].copy_from_slice(&self.embed_w[t * d..(t + 1) * d]);
+        }
+        Ok(out)
+    }
+
+    fn layer_pre(
+        &self,
+        l: usize,
+        hidden: &[f32],
+        cache: &mut CpuKvCache,
+        pos: &[i32],
+    ) -> Result<LayerPre> {
+        let c = &self.cfg;
+        let b = pos.len();
+        if hidden.len() != b * c.d_model || cache.bucket != b {
+            return Err(Error::Engine(format!(
+                "layer_pre shape mismatch: hidden {} pos {} bucket {}",
+                hidden.len(),
+                b,
+                cache.bucket
+            )));
+        }
+        let lw = &self.layers[l];
+        let (d, qd, kvd) = (c.d_model, c.q_dim(), c.kv_dim());
+        let (hq, hkv, hd) = (c.n_q_heads, c.n_kv_heads, c.head_dim);
+
+        let h1 = kernels::rmsnorm(hidden, &lw.n1, d, c.rms_eps);
+        let mut q = kernels::matmul(&h1, &lw.wq, b, d, qd);
+        let mut k = kernels::matmul(&h1, &lw.wk, b, d, kvd);
+        let v = kernels::matmul(&h1, &lw.wv, b, d, kvd);
+        kernels::rope(&mut q, hq, hd, pos, c.rope_theta);
+        kernels::rope(&mut k, hkv, hd, pos, c.rope_theta);
+
+        // slot-stable cache append: row b's slot pos[b] gets this step's K/V
+        let row = self.row_len();
+        let half = b * row;
+        let cl = &mut cache.layers[l];
+        for i in 0..b {
+            let slot = (pos[i].max(0) as usize).min(c.s_max - 1);
+            let dst = i * row + slot * kvd;
+            cl[dst..dst + kvd].copy_from_slice(&k[i * kvd..(i + 1) * kvd]);
+            cl[half + dst..half + dst + kvd].copy_from_slice(&v[i * kvd..(i + 1) * kvd]);
+        }
+
+        // attention over the UPDATED cache (model.py layer_pre semantics)
+        let (kc, vc) = cl.split_at(half);
+        let attn = kernels::decode_attention(&q, kc, vc, b, c.s_max, hq, hkv, hd, pos);
+        let ao = kernels::matmul(&attn, &lw.wo, b, qd, d);
+        let mut h_out = hidden.to_vec();
+        for (o, &a) in h_out.iter_mut().zip(ao.iter()) {
+            *o += a;
+        }
+        let scores =
+            kernels::router_scores(&h_out, &lw.n2, &lw.router, b, d, c.n_experts, c.rms_eps);
+        Ok(LayerPre { h: h_out, scores })
+    }
+
+    fn moe_apply(
+        &self,
+        l: usize,
+        hidden: &[f32],
+        combine: &[f32],
+        ids: &[i32],
+    ) -> Result<Vec<f32>> {
+        let c = &self.cfg;
+        let (d, h, n) = (c.d_model, c.d_expert, c.n_experts);
+        let b = hidden.len() / d;
+        if combine.len() != b * n {
+            return Err(Error::Engine(format!(
+                "moe_apply combine len {} != {}x{}",
+                combine.len(),
+                b,
+                n
+            )));
+        }
+        for &id in ids {
+            if id < 0 || id as usize >= n {
+                return Err(Error::Engine(format!("moe_apply expert id {id} out of range")));
+            }
+        }
+        let lw = &self.layers[l];
+        let hn = kernels::rmsnorm(hidden, &lw.n2, d, c.rms_eps);
+        let y = kernels::moe_ffn_gather(&hn, &lw.wg, &lw.wu, &lw.wd, combine, ids, b, d, h, n);
+        {
+            let mut load = self.expert_load.borrow_mut();
+            for rowc in combine.chunks_exact(n) {
+                for (e, &cv) in rowc.iter().enumerate() {
+                    if cv > 0.0 {
+                        load[e] += 1;
+                    }
+                }
+            }
+        }
+        let mut out = hidden.to_vec();
+        for (o, &yv) in out.iter_mut().zip(y.iter()) {
+            *o += yv;
+        }
+        Ok(out)
+    }
+
+    fn logits(&self, hidden: &[f32]) -> Result<Vec<f32>> {
+        let (d, v) = (self.cfg.d_model, self.cfg.vocab);
+        let b = hidden.len() / d;
+        let hn = kernels::rmsnorm(hidden, &self.final_norm, d, self.cfg.rms_eps);
+        Ok(kernels::matmul(&hn, &self.unembed_w, b, d, v))
+    }
+
+    /// Teacher-forced prefill: the prompt runs through the decode path one
+    /// token at a time with in-graph vanilla routing, which is *exactly*
+    /// the decode pipeline's math — prefill/decode consistency holds by
+    /// construction (the chunked-prefill fast path is a PJRT artifact
+    /// concern; the reference backend favours exactness).
+    fn prefill(&self, prompt: &[i32]) -> Result<Prefilled<CpuKvRows>> {
+        let c = self.cfg.clone();
+        if prompt.is_empty() {
+            return Err(Error::Engine("empty prompt".into()));
+        }
+        if prompt.len() > c.s_max - 1 {
+            return Err(Error::Engine(format!(
+                "prompt of {} tokens exceeds s_max-1 = {}",
+                prompt.len(),
+                c.s_max - 1
+            )));
+        }
+        let mut cache = self.new_cache(1)?;
+        let mut last_hidden = Vec::new();
+        for (t, &tok) in prompt.iter().enumerate() {
+            let mut hidden = self.embed(&[tok])?;
+            for l in 0..c.n_layers {
+                let pre = self.layer_pre(l, &hidden, &mut cache, &[t as i32])?;
+                let scores = ScoreMatrix::new(1, c.n_experts, pre.scores);
+                let live = [true];
+                let d = policy::route(
+                    Policy::Vanilla { k: c.top_k },
+                    &RoutingInput { scores: &scores, live: &live, mask_padding: true },
+                );
+                let ids: Vec<i32> = d.active.iter().map(|&e| e as i32).collect();
+                hidden = self.moe_apply(l, &pre.h, &d.combine, &ids)?;
+            }
+            last_hidden = hidden;
+        }
+        let last_logits = self.logits(&last_hidden)?;
+        let row = self.row_len();
+        let mut k_rows = Vec::with_capacity(c.n_layers);
+        let mut v_rows = Vec::with_capacity(c.n_layers);
+        for cl in &cache.layers {
+            k_rows.push(cl[..row].to_vec());
+            v_rows.push(cl[row..2 * row].to_vec());
+        }
+        Ok(Prefilled {
+            rows: CpuKvRows { k: k_rows, v: v_rows },
+            n_tokens: prompt.len(),
+            last_logits,
+        })
+    }
+
+    fn install_rows(&self, cache: &mut CpuKvCache, slot: usize, rows: &CpuKvRows) -> Result<()> {
+        let row = self.row_len();
+        let b = cache.bucket;
+        if slot >= b {
+            return Err(Error::Engine(format!("slot {slot} out of bucket {b}")));
+        }
+        for (l, cl) in cache.layers.iter_mut().enumerate() {
+            let half = b * row;
+            cl[slot * row..(slot + 1) * row].copy_from_slice(&rows.k[l]);
+            cl[half + slot * row..half + (slot + 1) * row].copy_from_slice(&rows.v[l]);
+        }
+        Ok(())
+    }
+
+    fn clear_slot(&self, cache: &mut CpuKvCache, slot: usize) -> Result<()> {
+        let row = self.row_len();
+        let b = cache.bucket;
+        if slot >= b {
+            return Err(Error::Engine(format!("slot {slot} out of bucket {b}")));
+        }
+        for cl in cache.layers.iter_mut() {
+            let half = b * row;
+            cl[slot * row..(slot + 1) * row].fill(0.0);
+            cl[half + slot * row..half + (slot + 1) * row].fill(0.0);
+        }
+        Ok(())
+    }
+
+    fn repack(
+        &self,
+        cache: &CpuKvCache,
+        old_bucket: usize,
+        new_bucket: usize,
+        mapping: &[Option<usize>],
+    ) -> Result<CpuKvCache> {
+        if cache.bucket != old_bucket || mapping.len() != old_bucket {
+            return Err(Error::Engine("repack mapping/bucket mismatch".into()));
+        }
+        let row = self.row_len();
+        let mut out = self.new_cache(new_bucket)?;
+        for (l, cl) in cache.layers.iter().enumerate() {
+            let fresh = &mut out.layers[l];
+            for half in 0..2 {
+                let src_base = half * old_bucket * row;
+                let dst_base = half * new_bucket * row;
+                for (i, m) in mapping.iter().enumerate() {
+                    if let Some(j) = m {
+                        if *j >= new_bucket {
+                            return Err(Error::Engine(format!(
+                                "repack target slot {j} out of bucket {new_bucket}"
+                            )));
+                        }
+                        fresh[dst_base + j * row..dst_base + (j + 1) * row]
+                            .copy_from_slice(&cl[src_base + i * row..src_base + (i + 1) * row]);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> CpuBackend {
+        CpuBackend::synthetic(ModelConfig::preset("tiny").unwrap(), 0)
+    }
+
+    #[test]
+    fn synthetic_weights_are_deterministic() {
+        let a = backend();
+        let b = backend();
+        assert_eq!(a.embed_w, b.embed_w);
+        assert_eq!(a.layers[0].router, b.layers[0].router);
+        let c = CpuBackend::synthetic(ModelConfig::preset("tiny").unwrap(), 1);
+        assert_ne!(a.embed_w, c.embed_w);
+    }
+
+    #[test]
+    fn router_scores_have_realistic_concentration() {
+        // top-1 mass dominant but well below 1 — the property the OEA
+        // phases interact with (weights.py's stated calibration target)
+        let be = backend();
+        let c = be.config().clone();
+        let mut cache = be.new_cache(4).unwrap();
+        let h = be.embed(&[5, 100, 200, 400]).unwrap();
+        let pre = be.layer_pre(0, &h, &mut cache, &[0, 0, 0, 0]).unwrap();
+        for row in pre.scores.chunks_exact(c.n_experts) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "softmax rows sum to 1, got {sum}");
+            let top1 = row.iter().cloned().fold(0.0f32, f32::max);
+            assert!(top1 > 1.5 / c.n_experts as f32, "flat router (top1 {top1})");
+            assert!(top1 < 0.99, "collapsed router (top1 {top1})");
+        }
+    }
+
+    #[test]
+    fn expert_load_accounting_counts_assignments() {
+        let be = backend();
+        let c = be.config().clone();
+        let n = c.n_experts;
+        let b = 2;
+        let hidden = vec![0.1f32; b * c.d_model];
+        let mut combine = vec![0.0f32; b * n];
+        combine[0] = 0.6;
+        combine[1] = 0.4;
+        combine[n + 2] = 1.0;
+        be.moe_apply(0, &hidden, &combine, &[0, 1, 2]).unwrap();
+        let loads = be.expert_loads();
+        assert_eq!(loads[0], 1);
+        assert_eq!(loads[1], 1);
+        assert_eq!(loads[2], 1);
+        assert_eq!(loads.iter().sum::<u64>(), 3);
+        be.reset_expert_loads();
+        assert_eq!(be.expert_loads().iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn moe_rejects_out_of_range_ids() {
+        let be = backend();
+        let c = be.config().clone();
+        let hidden = vec![0.0f32; c.d_model];
+        let combine = vec![0.0f32; c.n_experts];
+        assert!(be.moe_apply(0, &hidden, &combine, &[c.n_experts as i32]).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Execution backends for the decode/prefill pipeline.
+//!
+//! The serving stack (model runner, engine, server, benches) is written
+//! against the [`Backend`] trait, which exposes the model's request-path
+//! primitives at the stage level:
+//!
+//!   embed -> [ layer_pre -> (rust routing) -> moe_apply ] x L -> logits
+//!
+//! Two implementations:
+//! - [`cpu::CpuBackend`] — a hermetic pure-Rust reference backend mirroring
+//!   `python/compile/kernels/ref.py`. No external dependencies; builds and
+//!   runs everywhere `cargo` does. This is the default and what CI tests.
+//! - `pjrt::PjrtBackend` (behind the `pjrt` cargo feature) — the original
+//!   PJRT/XLA runtime executing AOT HLO-text artifacts produced by
+//!   `python/compile/aot.py`.
+//!
+//! Hidden states cross the trait boundary as host `Vec<f32>` — they are
+//! `[B, d_model]`-sized (small) and the PJRT stage layout already decomposed
+//! its per-layer tuple outputs through host literals, so this costs nothing
+//! new. The KV cache, the only large state, stays backend-resident behind
+//! the associated `Cache` type.
+
+pub mod cpu;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use crate::config::ModelConfig;
+use crate::util::error::Result;
+
+/// Output of one layer's pre-MoE work (attention sub-block + router).
+pub struct LayerPre {
+    /// post-attention residual stream `[B, d_model]`
+    pub h: Vec<f32>,
+    /// router softmax scores `[B, n_experts]`
+    pub scores: Vec<f32>,
+}
+
+/// A prefilled sequence, ready to join a decode batch.
+pub struct Prefilled<R> {
+    /// backend-resident per-layer KV rows for the prompt
+    pub rows: R,
+    pub n_tokens: usize,
+    /// logits after the last prompt token `[vocab]`
+    pub last_logits: Vec<f32>,
+}
+
+/// A model-execution backend. One value owns the weights for one config;
+/// all methods take `&self` so a backend can be shared by an engine and
+/// its telemetry readers.
+pub trait Backend {
+    /// Per-layer KV cache state of one decode batch
+    /// (logically `[L][2, bucket, S, Hkv, hd]`, K at index 0).
+    type Cache;
+    /// Per-layer KV rows of one prefilled sequence
+    /// (logically `[L][S, Hkv, hd]` for K and V).
+    type Rows;
+
+    fn config(&self) -> &ModelConfig;
+
+    /// Short name for logs/metrics ("cpu", "pjrt").
+    fn label(&self) -> &'static str;
+
+    /// Fresh zeroed KV cache for a `bucket`-sized decode batch.
+    fn new_cache(&self, bucket: usize) -> Result<Self::Cache>;
+
+    /// Token embedding: `tokens [B] -> hidden [B, d_model]`.
+    fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Attention sub-block + router scores for layer `l` of one decode
+    /// step. Writes this step's K/V at `pos` into the cache (slot-stable;
+    /// padding rows use pos 0 and are masked out by routing, not here).
+    fn layer_pre(
+        &self,
+        l: usize,
+        hidden: &[f32],
+        cache: &mut Self::Cache,
+        pos: &[i32],
+    ) -> Result<LayerPre>;
+
+    /// MoE sub-block for layer `l`: `h + expert_ffn(rmsnorm(h), combine)`
+    /// over the padded active-expert list `ids` (length = executed T
+    /// bucket; padding ids carry zero combine mass).
+    fn moe_apply(
+        &self,
+        l: usize,
+        hidden: &[f32],
+        combine: &[f32],
+        ids: &[i32],
+    ) -> Result<Vec<f32>>;
+
+    /// Final norm + unembedding: `hidden [B, d_model] -> logits [B, vocab]`.
+    fn logits(&self, hidden: &[f32]) -> Result<Vec<f32>>;
+
+    /// Prefill one prompt under vanilla routing (the paper applies OEA to
+    /// decode only), returning its KV rows and last-token logits.
+    fn prefill(&self, prompt: &[i32]) -> Result<Prefilled<Self::Rows>>;
+
+    /// Install a prefilled sequence's rows into `slot` of a decode cache.
+    fn install_rows(&self, cache: &mut Self::Cache, slot: usize, rows: &Self::Rows) -> Result<()>;
+
+    /// Zero `slot`'s cache rows (hygiene on retirement; correctness does
+    /// not depend on it because pos masks attention).
+    fn clear_slot(&self, cache: &mut Self::Cache, slot: usize) -> Result<()>;
+
+    /// Rebuild the cache at a different bucket size, moving old slot `i`
+    /// to `mapping[i]` (None drops the row).
+    fn repack(
+        &self,
+        cache: &Self::Cache,
+        old_bucket: usize,
+        new_bucket: usize,
+        mapping: &[Option<usize>],
+    ) -> Result<Self::Cache>;
+}

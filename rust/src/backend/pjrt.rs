@@ -1,0 +1,324 @@
+//! PJRT backend (behind the `pjrt` cargo feature): executes the AOT
+//! HLO-text stage artifacts produced by `python/compile/aot.py` through
+//! [`crate::runtime::Runtime`].
+//!
+//! Stage mapping (see `python/compile/model.py` for the frozen signatures):
+//! `embed_b{b}`, `layer_pre_b{b}` + `cache_append_b{b}`, `moe_b{b}_t{t}`,
+//! `logits_b{b}`, `embed_c{c}` + `prefill_layer_c{c}`, `insert_row_b{b}`.
+//! Hidden states cross the trait boundary as host vectors — the stage
+//! layout already decomposed per-layer tuple outputs through host literals
+//! (PJRT here does not untuple), so the interchange cost is unchanged; the
+//! KV cache stays device-resident inside [`PjrtKvCache`].
+
+use std::path::Path;
+
+use crate::backend::{Backend, LayerPre, Prefilled};
+use crate::config::ModelConfig;
+use crate::runtime::Runtime;
+use crate::util::error::{Error, Result};
+
+/// Device-resident per-layer combined KV caches `[2, bucket, S, Hkv, hd]`.
+pub struct PjrtKvCache {
+    pub bucket: usize,
+    pub kvs: Vec<xla::PjRtBuffer>,
+}
+
+/// A prefilled sequence's device-side KV rows, per layer `[S, Hkv, hd]`.
+pub struct PjrtKvRows {
+    pub k_rows: Vec<xla::PjRtBuffer>,
+    pub v_rows: Vec<xla::PjRtBuffer>,
+}
+
+pub struct PjrtBackend {
+    pub rt: Runtime,
+}
+
+impl PjrtBackend {
+    /// Load manifest + weights for `cfg_name` under `artifact_root`.
+    pub fn load(artifact_root: &Path, cfg_name: &str) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: Runtime::load(artifact_root, cfg_name)? })
+    }
+
+    fn cache_dims(&self, bucket: usize) -> [usize; 5] {
+        let c = self.rt.config();
+        [2, bucket, c.s_max, c.n_kv_heads, c.head_dim]
+    }
+}
+
+impl Backend for PjrtBackend {
+    type Cache = PjrtKvCache;
+    type Rows = PjrtKvRows;
+
+    fn config(&self) -> &ModelConfig {
+        self.rt.config()
+    }
+
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn new_cache(&self, bucket: usize) -> Result<PjrtKvCache> {
+        let c = self.config();
+        let dims = self.cache_dims(bucket);
+        let mut kvs = Vec::with_capacity(c.n_layers);
+        for _ in 0..c.n_layers {
+            kvs.push(self.rt.zeros_f32(&dims)?);
+        }
+        Ok(PjrtKvCache { bucket, kvs })
+    }
+
+    fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let b = tokens.len();
+        let tok_buf = self.rt.upload_i32(tokens, &[b])?;
+        let h = self
+            .rt
+            .exec1(&format!("embed_b{b}"), &[&tok_buf, self.rt.weight("embed")?])?;
+        self.rt.download_f32(&h)
+    }
+
+    fn layer_pre(
+        &self,
+        l: usize,
+        hidden: &[f32],
+        cache: &mut PjrtKvCache,
+        pos: &[i32],
+    ) -> Result<LayerPre> {
+        let c = self.config().clone();
+        let b = cache.bucket;
+        let p = |s: &str| format!("l{l}.{s}");
+        let h_buf = self.rt.upload_f32(hidden, &[b, c.d_model])?;
+        let pos_buf = self.rt.upload_i32(pos, &[b])?;
+        let lits = self.rt.exec_tuple(
+            &format!("layer_pre_b{b}"),
+            &[
+                &h_buf,
+                &cache.kvs[l],
+                &pos_buf,
+                self.rt.weight(&p("wq"))?,
+                self.rt.weight(&p("wk"))?,
+                self.rt.weight(&p("wv"))?,
+                self.rt.weight(&p("wo"))?,
+                self.rt.weight(&p("n1"))?,
+                self.rt.weight(&p("n2"))?,
+                self.rt.weight(&p("router"))?,
+            ],
+        )?;
+        let [h_lit, s_lit, k_lit, v_lit]: [xla::Literal; 4] = lits
+            .try_into()
+            .map_err(|_| Error::Xla("layer_pre arity".into()))?;
+
+        // device-side cache append (single-output stage, no roundtrip)
+        let kv_dims = [b, c.n_kv_heads, c.head_dim];
+        let k_new = self.rt.upload_literal_f32(&k_lit, &kv_dims)?;
+        let v_new = self.rt.upload_literal_f32(&v_lit, &kv_dims)?;
+        cache.kvs[l] = self.rt.exec1(
+            &format!("cache_append_b{b}"),
+            &[&cache.kvs[l], &k_new, &v_new, &pos_buf],
+        )?;
+
+        Ok(LayerPre { h: h_lit.to_vec::<f32>()?, scores: s_lit.to_vec::<f32>()? })
+    }
+
+    fn moe_apply(
+        &self,
+        l: usize,
+        hidden: &[f32],
+        combine: &[f32],
+        ids: &[i32],
+    ) -> Result<Vec<f32>> {
+        let c = self.config();
+        let b = hidden.len() / c.d_model;
+        let t_bucket = ids.len();
+        let p = |s: &str| format!("l{l}.{s}");
+        let h_buf = self.rt.upload_f32(hidden, &[b, c.d_model])?;
+        let comb_buf = self.rt.upload_f32(combine, &[b, c.n_experts])?;
+        let ids_buf = self.rt.upload_i32(ids, &[t_bucket])?;
+        let out = self.rt.exec1(
+            &format!("moe_b{b}_t{t_bucket}"),
+            &[
+                &h_buf,
+                &comb_buf,
+                &ids_buf,
+                self.rt.weight(&p("wg"))?,
+                self.rt.weight(&p("wu"))?,
+                self.rt.weight(&p("wd"))?,
+                self.rt.weight(&p("n2"))?,
+            ],
+        )?;
+        self.rt.download_f32(&out)
+    }
+
+    fn logits(&self, hidden: &[f32]) -> Result<Vec<f32>> {
+        let c = self.config();
+        let b = hidden.len() / c.d_model;
+        let h_buf = self.rt.upload_f32(hidden, &[b, c.d_model])?;
+        let lg = self.rt.exec1(
+            &format!("logits_b{b}"),
+            &[
+                &h_buf,
+                self.rt.weight("final_norm")?,
+                self.rt.weight("unembed")?,
+            ],
+        )?;
+        self.rt.download_f32(&lg)
+    }
+
+    /// Chunked prefill through the `prefill_layer_c{chunk}` stages (vanilla
+    /// routing in-graph, like the paper: OEA applies to decode only).
+    fn prefill(&self, prompt: &[i32]) -> Result<Prefilled<PjrtKvRows>> {
+        let c = self.config().clone();
+        let chunk = c.prefill_chunk;
+        if prompt.is_empty() {
+            return Err(Error::Engine("empty prompt".into()));
+        }
+        if prompt.len() > c.s_max - 1 {
+            return Err(Error::Engine(format!(
+                "prompt of {} tokens exceeds s_max-1 = {}",
+                prompt.len(),
+                c.s_max - 1
+            )));
+        }
+        let row_dims = [c.s_max, c.n_kv_heads, c.head_dim];
+        let mut k_rows: Vec<xla::PjRtBuffer> = Vec::with_capacity(c.n_layers);
+        let mut v_rows: Vec<xla::PjRtBuffer> = Vec::with_capacity(c.n_layers);
+        for _ in 0..c.n_layers {
+            k_rows.push(self.rt.zeros_f32(&row_dims)?);
+            v_rows.push(self.rt.zeros_f32(&row_dims)?);
+        }
+
+        let mut last_hidden_row: Option<Vec<f32>> = None;
+        let n_chunks = prompt.len().div_ceil(chunk);
+        for ci in 0..n_chunks {
+            let pos0 = ci * chunk;
+            let mut toks = vec![0i32; chunk];
+            let upto = (pos0 + chunk).min(prompt.len());
+            toks[..upto - pos0].copy_from_slice(&prompt[pos0..upto]);
+            let tok_buf = self.rt.upload_i32(&toks, &[chunk])?;
+            let pos0_entry = self.rt.upload_i32_scalar(pos0 as i32)?;
+            let pos0_buf = &pos0_entry.1;
+
+            let mut h = self.rt.exec1(
+                &format!("embed_c{chunk}"),
+                &[&tok_buf, self.rt.weight("embed")?],
+            )?;
+            for l in 0..c.n_layers {
+                let p = |s: &str| format!("l{l}.{s}");
+                let lits = self.rt.exec_tuple(
+                    &format!("prefill_layer_c{chunk}"),
+                    &[
+                        &h,
+                        &k_rows[l],
+                        &v_rows[l],
+                        pos0_buf,
+                        self.rt.weight(&p("wq"))?,
+                        self.rt.weight(&p("wk"))?,
+                        self.rt.weight(&p("wv"))?,
+                        self.rt.weight(&p("wo"))?,
+                        self.rt.weight(&p("n1"))?,
+                        self.rt.weight(&p("n2"))?,
+                        self.rt.weight(&p("router"))?,
+                        self.rt.weight(&p("wg"))?,
+                        self.rt.weight(&p("wu"))?,
+                        self.rt.weight(&p("wd"))?,
+                    ],
+                )?;
+                let [h_lit, kc_lit, vc_lit]: [xla::Literal; 3] = lits
+                    .try_into()
+                    .map_err(|_| Error::Xla("prefill_layer arity".into()))?;
+                h = self.rt.upload_literal_f32(&h_lit, &[chunk, c.d_model])?;
+                k_rows[l] = self.rt.upload_literal_f32(&kc_lit, &row_dims)?;
+                v_rows[l] = self.rt.upload_literal_f32(&vc_lit, &row_dims)?;
+                if ci == n_chunks - 1 && l == c.n_layers - 1 {
+                    let hv = h_lit.to_vec::<f32>()?;
+                    let last = (prompt.len() - 1) - pos0;
+                    last_hidden_row =
+                        Some(hv[last * c.d_model..(last + 1) * c.d_model].to_vec());
+                }
+            }
+        }
+
+        let hrow = last_hidden_row.expect("last chunk processed");
+        let h1 = self.rt.upload_f32(&hrow, &[1, c.d_model])?;
+        let lg_buf = self.rt.exec1(
+            "logits_b1",
+            &[&h1, self.rt.weight("final_norm")?, self.rt.weight("unembed")?],
+        )?;
+        let last_logits = self.rt.download_f32(&lg_buf)?;
+        Ok(Prefilled {
+            rows: PjrtKvRows { k_rows, v_rows },
+            n_tokens: prompt.len(),
+            last_logits,
+        })
+    }
+
+    /// Fully device-side via the `insert_row` stage.
+    fn install_rows(&self, cache: &mut PjrtKvCache, slot: usize, rows: &PjrtKvRows) -> Result<()> {
+        let b = cache.bucket;
+        if slot >= b {
+            return Err(Error::Engine(format!("slot {slot} out of bucket {b}")));
+        }
+        let slot_entry = self.rt.upload_i32_scalar(slot as i32)?;
+        let slot_buf = &slot_entry.1;
+        let stage = format!("insert_row_b{b}");
+        for l in 0..self.config().n_layers {
+            cache.kvs[l] = self.rt.exec1(
+                &stage,
+                &[&cache.kvs[l], &rows.k_rows[l], &rows.v_rows[l], slot_buf],
+            )?;
+        }
+        Ok(())
+    }
+
+    fn clear_slot(&self, cache: &mut PjrtKvCache, slot: usize) -> Result<()> {
+        let c = self.config();
+        let zero_row = self.rt.zeros_f32(&[c.s_max, c.n_kv_heads, c.head_dim])?;
+        let slot_entry = self.rt.upload_i32_scalar(slot as i32)?;
+        let slot_buf = &slot_entry.1;
+        let stage = format!("insert_row_b{}", cache.bucket);
+        for l in 0..c.n_layers {
+            cache.kvs[l] =
+                self.rt.exec1(&stage, &[&cache.kvs[l], &zero_row, &zero_row, slot_buf])?;
+        }
+        Ok(())
+    }
+
+    /// Host roundtrip; rare (only when the running set outgrows the
+    /// current bucket).
+    fn repack(
+        &self,
+        cache: &PjrtKvCache,
+        old_bucket: usize,
+        new_bucket: usize,
+        mapping: &[Option<usize>],
+    ) -> Result<PjrtKvCache> {
+        let c = self.config();
+        if cache.bucket != old_bucket || mapping.len() != old_bucket {
+            return Err(Error::Engine("repack mapping/bucket mismatch".into()));
+        }
+        let row = c.s_max * c.n_kv_heads * c.head_dim;
+        let mut out = self.new_cache(new_bucket)?;
+        for l in 0..c.n_layers {
+            // [2, b, S, Hkv, hd]: permute the bucket axis within each half
+            let host = self.rt.download_f32(&cache.kvs[l])?;
+            let mut fresh = vec![0.0f32; 2 * new_bucket * row];
+            for half in 0..2 {
+                let src_base = half * old_bucket * row;
+                let dst_base = half * new_bucket * row;
+                for (i, m) in mapping.iter().enumerate() {
+                    if let Some(j) = m {
+                        if *j >= new_bucket {
+                            return Err(Error::Engine(format!(
+                                "repack target slot {j} out of bucket {new_bucket}"
+                            )));
+                        }
+                        fresh[dst_base + j * row..dst_base + (j + 1) * row].copy_from_slice(
+                            &host[src_base + i * row..src_base + (i + 1) * row],
+                        );
+                    }
+                }
+            }
+            out.kvs[l] = self.rt.upload_f32(&fresh, &self.cache_dims(new_bucket))?;
+        }
+        Ok(out)
+    }
+}

@@ -26,9 +26,109 @@ pub struct ModelConfig {
     pub batch_buckets: Vec<usize>,
     pub t_buckets: Vec<usize>,
     pub prefill_chunk: usize,
+    pub rope_theta: f32,
+    pub rms_eps: f32,
+}
+
+/// Default active-expert buckets: N/8 steps (mirrors configs.py).
+fn default_t_buckets(n_experts: usize) -> Vec<usize> {
+    let step = (n_experts / 8).max(1);
+    (1..=n_experts / step).map(|i| i * step).collect()
 }
 
 impl ModelConfig {
+    /// Built-in preset mirroring `python/compile/configs.py`, so the CPU
+    /// backend runs without any Python-generated manifest.
+    pub fn preset(name: &str) -> Result<ModelConfig> {
+        let c = match name {
+            "tiny" => ModelConfig {
+                name: "tiny".into(),
+                n_layers: 2,
+                d_model: 64,
+                n_experts: 8,
+                top_k: 2,
+                d_expert: 32,
+                n_q_heads: 4,
+                n_kv_heads: 2,
+                head_dim: 16,
+                vocab: 512,
+                s_max: 128,
+                n_domains: 4,
+                batch_buckets: vec![1, 2, 4, 8],
+                t_buckets: default_t_buckets(8),
+                prefill_chunk: 16,
+                rope_theta: 10000.0,
+                rms_eps: 1e-6,
+            },
+            "small" => ModelConfig {
+                name: "small".into(),
+                n_layers: 8,
+                d_model: 256,
+                n_experts: 32,
+                top_k: 8,
+                d_expert: 128,
+                n_q_heads: 8,
+                n_kv_heads: 2,
+                head_dim: 32,
+                vocab: 1024,
+                s_max: 256,
+                n_domains: 4,
+                batch_buckets: vec![1, 2, 4, 8, 16, 32],
+                t_buckets: default_t_buckets(32),
+                prefill_chunk: 64,
+                rope_theta: 10000.0,
+                rms_eps: 1e-6,
+            },
+            "base" => ModelConfig {
+                name: "base".into(),
+                n_layers: 12,
+                d_model: 384,
+                n_experts: 64,
+                top_k: 8,
+                d_expert: 192,
+                n_q_heads: 8,
+                n_kv_heads: 2,
+                head_dim: 48,
+                vocab: 1024,
+                s_max: 256,
+                n_domains: 4,
+                batch_buckets: vec![1, 8, 16, 32],
+                t_buckets: default_t_buckets(64),
+                prefill_chunk: 64,
+                rope_theta: 10000.0,
+                rms_eps: 1e-6,
+            },
+            // CI bench-smoke shape: structured like `small` (enough experts
+            // for k0 sweeps) but cheap enough for a few seconds per bench.
+            "smoke" => ModelConfig {
+                name: "smoke".into(),
+                n_layers: 2,
+                d_model: 64,
+                n_experts: 16,
+                top_k: 4,
+                d_expert: 32,
+                n_q_heads: 4,
+                n_kv_heads: 2,
+                head_dim: 16,
+                vocab: 512,
+                s_max: 64,
+                n_domains: 4,
+                batch_buckets: vec![1, 2, 4, 8, 16],
+                t_buckets: default_t_buckets(16),
+                prefill_chunk: 16,
+                rope_theta: 10000.0,
+                rms_eps: 1e-6,
+            },
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown config preset {other:?} (tiny|small|base|smoke)"
+                )))
+            }
+        };
+        debug_assert_eq!(c.d_model, c.n_q_heads * c.head_dim);
+        Ok(c)
+    }
+
     pub fn q_dim(&self) -> usize {
         self.n_q_heads * self.head_dim
     }
@@ -81,6 +181,14 @@ impl ModelConfig {
             batch_buckets: v.get("batch_buckets")?.usize_list()?,
             t_buckets: v.get("t_buckets")?.usize_list()?,
             prefill_chunk: v.get("prefill_chunk")?.as_usize()?,
+            rope_theta: match v.get_opt("rope_theta") {
+                Some(x) => x.as_f64()? as f32,
+                None => 10000.0,
+            },
+            rms_eps: match v.get_opt("rms_eps") {
+                Some(x) => x.as_f64()? as f32,
+                None => 1e-6,
+            },
         })
     }
 }
@@ -164,6 +272,8 @@ mod tests {
             batch_buckets: vec![1, 2, 4, 8],
             t_buckets: vec![2, 4, 6, 8],
             prefill_chunk: 16,
+            rope_theta: 10000.0,
+            rms_eps: 1e-6,
         }
     }
 
@@ -203,6 +313,20 @@ mod tests {
         assert_eq!(m.config.n_experts, 8);
         assert_eq!(m.stage("embed_b1").unwrap().outputs, 1);
         assert!(m.stage("nope").is_err());
+    }
+
+    #[test]
+    fn presets_mirror_configs_py() {
+        let t = ModelConfig::preset("tiny").unwrap();
+        assert_eq!(t.n_experts, 8);
+        assert_eq!(t.top_k, 2);
+        assert_eq!(t.t_buckets, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        let s = ModelConfig::preset("small").unwrap();
+        assert_eq!(s.d_model, s.n_q_heads * s.head_dim);
+        assert_eq!(s.t_buckets, vec![4, 8, 12, 16, 20, 24, 28, 32]);
+        let b = ModelConfig::preset("base").unwrap();
+        assert_eq!(b.t_buckets.len(), 8);
+        assert!(ModelConfig::preset("nope").is_err());
     }
 
     #[test]

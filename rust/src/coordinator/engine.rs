@@ -10,6 +10,7 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use crate::backend::Backend;
 use crate::config::ModelConfig;
 use crate::coordinator::request::{FinishReason, FinishedRequest, GenRequest};
 use crate::coordinator::sampler;
@@ -46,10 +47,10 @@ struct SeqState {
     t_first_token: Option<Instant>,
 }
 
-pub struct Engine {
-    pub runner: ModelRunner,
+pub struct Engine<B: Backend> {
+    pub runner: ModelRunner<B>,
     pub cfg: EngineConfig,
-    batch: DecodeBatch,
+    batch: DecodeBatch<B>,
     slots: SlotAllocator,
     running: Vec<Option<SeqState>>,
     queue: VecDeque<(GenRequest, Instant)>,
@@ -59,8 +60,8 @@ pub struct Engine {
     t_start: Instant,
 }
 
-impl Engine {
-    pub fn new(runner: ModelRunner, cfg: EngineConfig) -> Result<Engine> {
+impl<B: Backend> Engine<B> {
+    pub fn new(runner: ModelRunner<B>, cfg: EngineConfig) -> Result<Engine<B>> {
         let mc: &ModelConfig = runner.cfg();
         if cfg.max_running == 0 {
             return Err(Error::Config("max_running must be > 0".into()));

@@ -8,10 +8,13 @@
 //! - [`fidelity_eval`]: greedy-generation agreement against vanilla routing
 //!   (the benchmark-accuracy stand-in for Tables 1/2).
 
+use crate::backend::Backend;
+use crate::config::ModelConfig;
 use crate::coordinator::sampler;
 use crate::model::ModelRunner;
 use crate::moe::policy::Policy;
 use crate::util::error::Result;
+use crate::util::rng::Rng;
 
 /// Per-position logits of a teacher-forced run, for reuse as reference.
 pub struct ForcedRun {
@@ -28,8 +31,8 @@ pub struct ForcedRun {
 
 /// Run `positions` teacher-forced lockstep decode steps over `b` sequences
 /// (`tokens[i]` must hold at least `positions + 1` entries).
-pub fn forced_run(
-    runner: &ModelRunner,
+pub fn forced_run<B: Backend>(
+    runner: &ModelRunner<B>,
     tokens: &[Vec<i32>],
     positions: usize,
     policy: Policy,
@@ -143,8 +146,8 @@ pub struct FidelityResult {
     pub avg_t: f64,
 }
 
-pub fn fidelity_eval(
-    runner: &ModelRunner,
+pub fn fidelity_eval<B: Backend>(
+    runner: &ModelRunner<B>,
     prompts: &[Vec<i32>],
     gen_len: usize,
     policy: Policy,
@@ -244,6 +247,67 @@ pub fn suite_prompts(
                 ids.push(3);
             }
             ids
+        })
+        .collect()
+}
+
+/// Synthetic token sequence from one domain's vocab band — the hermetic
+/// stand-in for the corpus+tokenizer pipeline used by benches and CI
+/// smoke runs. `CpuBackend::synthetic` gives token-id bands the same
+/// domain structure, so domain-pure batches concentrate the router
+/// exactly like corpus-fed ones. Tokens are mostly in-band with
+/// occasional cross-domain draws (natural text is not domain-pure
+/// either).
+pub fn synthetic_domain_sequence(
+    cfg: &ModelConfig,
+    rng: &mut Rng,
+    domain: usize,
+    len: usize,
+) -> Vec<i32> {
+    let usable = cfg.vocab - 3;
+    let band = (usable / cfg.n_domains).max(1);
+    let lo = 3 + (domain % cfg.n_domains) * band;
+    (0..len)
+        .map(|_| {
+            if rng.bool(0.85) {
+                (lo + rng.below(band)) as i32
+            } else {
+                (3 + rng.below(usable)) as i32
+            }
+        })
+        .collect()
+}
+
+/// Domain-pure synthetic prompt batch (hermetic analog of
+/// [`suite_prompts`]): exactly `prompt_len` tokens each.
+pub fn synthetic_domain_prompts(
+    cfg: &ModelConfig,
+    rng: &mut Rng,
+    domain: usize,
+    b: usize,
+    prompt_len: usize,
+) -> Vec<Vec<i32>> {
+    (0..b)
+        .map(|_| synthetic_domain_sequence(cfg, rng, domain, prompt_len))
+        .collect()
+}
+
+/// Synthetic CE-eval batch (hermetic analog of [`sequences_from_corpus`]):
+/// `len + 1` tokens per sequence so `len` teacher-forced positions all
+/// have a next-token target. `mixed = true` draws each sequence from a
+/// random domain; `false` uses one domain for the whole batch.
+pub fn synthetic_sequences(
+    cfg: &ModelConfig,
+    rng: &mut Rng,
+    b: usize,
+    len: usize,
+    mixed: bool,
+) -> Vec<Vec<i32>> {
+    let fixed = rng.below(cfg.n_domains);
+    (0..b)
+        .map(|_| {
+            let d = if mixed { rng.below(cfg.n_domains) } else { fixed };
+            synthetic_domain_sequence(cfg, rng, d, len + 1)
         })
         .collect()
 }

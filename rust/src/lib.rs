@@ -1,18 +1,29 @@
 //! # oea-serve
 //!
-//! A three-layer (Rust + JAX + Pallas) MoE serving framework reproducing
-//! *"Opportunistic Expert Activation: Batch-Aware Expert Routing for Faster
-//! Decode Without Retraining"* (CS.LG 2025).
+//! A MoE serving framework reproducing *"Opportunistic Expert Activation:
+//! Batch-Aware Expert Routing for Faster Decode Without Retraining"*
+//! (CS.LG 2025).
 //!
 //! Layers:
 //! - **L3 (this crate)**: request router, continuous batcher, KV-cache
 //!   manager, OEA routing engine, latency model, metrics. Python never runs
 //!   on the request path.
-//! - **L2** (`python/compile/model.py`): Qwen3-style MoE transformer in JAX,
-//!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
-//! - **L1** (`python/compile/kernels/`): Pallas kernels (gather-based grouped
-//!   expert FFN, router, decode attention) called from L2.
+//! - **Backends** ([`backend`]): model execution behind the
+//!   [`backend::Backend`] trait. The default, hermetic
+//!   [`backend::cpu::CpuBackend`] runs the whole pipeline in pure Rust;
+//!   the `pjrt` cargo feature re-enables the PJRT/XLA [`runtime`] that
+//!   executes AOT HLO-text artifacts.
+//! - **L2** (`python/compile/model.py`): Qwen3-style MoE transformer in
+//!   JAX, AOT-lowered to HLO text artifacts (PJRT path only).
+//! - **L1** (`python/compile/kernels/`): Pallas kernels (gather-based
+//!   grouped expert FFN, router, decode attention) called from L2, with
+//!   pure-jnp oracles in `ref.py` that the CPU backend mirrors.
 
+// Index-heavy numeric kernels and telemetry plumbing read clearer with
+// explicit loops and full argument lists; keep clippy strict elsewhere.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
@@ -20,6 +31,7 @@ pub mod latency;
 pub mod metrics;
 pub mod model;
 pub mod moe;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
 pub mod util;

@@ -4,7 +4,13 @@
 //!   serve     start the HTTP serving frontend
 //!   generate  one-shot generation from the command line
 //!   ce-eval   teacher-forced CE comparison of a policy vs vanilla
-//!   info      print manifest / config / router stats
+//!   info      print backend / config info
+//!
+//! Backends (`--backend`):
+//!   cpu   (default) hermetic pure-Rust reference backend with structured
+//!         synthetic weights — runs anywhere `cargo` does, no artifacts
+//!   pjrt  PJRT/XLA over AOT HLO artifacts; requires a build with
+//!         `--features pjrt` and `make artifacts`
 //!
 //! Examples:
 //!   oea-serve serve --config small --policy oea:k0=3 --max-running 16 \
@@ -16,12 +22,14 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::backend::Backend;
+use oea_serve::config::ModelConfig;
 use oea_serve::coordinator::{Engine, EngineConfig, GenRequest};
 use oea_serve::eval;
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::Policy;
-use oea_serve::runtime::Runtime;
 use oea_serve::server;
 use oea_serve::util::bpe::Tokenizer;
 use oea_serve::util::cli::{Args, Spec};
@@ -34,9 +42,12 @@ fn spec() -> Spec {
         name: "oea-serve",
         about: "MoE serving with Opportunistic Expert Activation (OEA) routing",
         options: vec![
-            ("config", true, "model config: tiny | small | base (default small)"),
-            ("artifacts", true, "artifact root (default ./artifacts)"),
-            ("data", true, "corpus dir (default ./data)"),
+            ("backend", true, "execution backend: cpu (default, hermetic) | pjrt \
+                              (needs --features pjrt and artifacts)"),
+            ("config", true, "model config: tiny | small | base | smoke (default small)"),
+            ("artifacts", true, "artifact root (default ./artifacts; optional for cpu)"),
+            ("data", true, "corpus dir (default ./data; optional for cpu)"),
+            ("weight-seed", true, "cpu: synthetic-weight seed (default 0)"),
             ("policy", true, "routing policy, e.g. vanilla, pruned:k0=3, oea:k0=3, \
                               oea-full:k0=3,p=0.7,kmax=9,maxp=32, lynx:t=16, dynskip:tau=0.3"),
             ("max-running", true, "max concurrent requests (default 8)"),
@@ -71,89 +82,54 @@ fn main() -> ExitCode {
     }
 }
 
-fn load_runner(args: &Args) -> Result<ModelRunner> {
-    let root = PathBuf::from(args.str_or("artifacts", "artifacts"));
-    let cfg = args.str_or("config", "small");
-    let rt = Runtime::load(&root, &cfg)?;
-    Ok(ModelRunner::new(rt))
-}
-
-fn parse_policy(args: &Args, runner: &ModelRunner) -> Result<Policy> {
-    let c = runner.cfg();
-    Policy::from_cli(&args.str_or("policy", "vanilla"), c.top_k, c.n_experts)
-}
-
-fn make_engine(args: &Args, runner: ModelRunner) -> Result<Engine> {
-    let policy = parse_policy(args, &runner)?;
-    let preset = H100Presets::for_config(&runner.cfg().name);
-    Engine::new(
-        runner,
-        EngineConfig {
-            policy,
-            mask_padding: !args.flag("no-mask-padding"),
-            max_running: args.usize_or("max-running", 8)?,
-            eos_token: None,
-            cost_model: preset,
-        },
-    )
-}
-
 fn run(argv: &[String]) -> Result<()> {
     let args = spec().parse(argv, true)?;
-    match args.subcommand.as_deref() {
-        Some("serve") => cmd_serve(&args),
-        Some("generate") => cmd_generate(&args),
-        Some("ce-eval") => cmd_ce_eval(&args),
-        Some("info") => cmd_info(&args),
+    match args.str_or("backend", "cpu").as_str() {
+        "cpu" => run_cpu(&args),
+        "pjrt" => run_pjrt(&args),
         other => Err(oea_serve::Error::Config(format!(
-            "unknown subcommand {other:?}; try serve | generate | ce-eval | info"
+            "unknown backend {other:?} (cpu | pjrt)"
         ))),
     }
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    // validate flags + resolve the vocab WITHOUT creating a PJRT client:
-    // xla_extension 0.5.1 cannot survive a create/destroy/create cycle of
-    // TfrtCpuClient in one process, so only the engine thread makes one.
-    let root = PathBuf::from(args.str_or("artifacts", "artifacts"));
-    let cfg_name = args.str_or("config", "small");
-    let manifest = oea_serve::config::Manifest::load(&root, &cfg_name)?;
-    let tok = Tokenizer::load(&manifest.dir.join(&manifest.vocab_file))?;
-    let policy = Policy::from_cli(
-        &args.str_or("policy", "vanilla"),
-        manifest.config.top_k,
-        manifest.config.n_experts,
-    )?;
-    let port = args.usize_or("port", 8080)?;
-    let max_requests = match args.str_opt("max-requests") {
-        Some(_) => Some(args.usize_or("max-requests", 0)?),
-        None => None,
-    };
-    println!(
-        "serving config={} policy={} max_running={} on 127.0.0.1:{port}",
-        manifest.config.name,
-        policy.label(),
-        args.usize_or("max-running", 8)?,
-    );
-    let args2 = args.clone();
-    server::serve(
-        move || {
-            let runner = load_runner(&args2)?;
-            make_engine(&args2, runner)
-        },
-        tok,
-        &format!("127.0.0.1:{port}"),
-        max_requests,
-    )
+// ---- shared, backend-generic command bodies ------------------------------
+
+fn parse_policy(args: &Args, c: &ModelConfig) -> Result<Policy> {
+    Policy::from_cli(&args.str_or("policy", "vanilla"), c.top_k, c.n_experts)
 }
 
-fn cmd_generate(args: &Args) -> Result<()> {
-    let runner = load_runner(args)?;
-    let vocab_path = runner.rt.manifest.dir.join(&runner.rt.manifest.vocab_file);
-    let tok = Tokenizer::load(&vocab_path)?;
+fn engine_config(args: &Args, c: &ModelConfig) -> Result<EngineConfig> {
+    Ok(EngineConfig {
+        policy: parse_policy(args, c)?,
+        mask_padding: !args.flag("no-mask-padding"),
+        max_running: args.usize_or("max-running", 8)?,
+        eos_token: None,
+        cost_model: H100Presets::for_config(&c.name),
+    })
+}
+
+/// CPU path only: the trained vocab when artifacts exist, byte-level
+/// fallback otherwise (every model vocab here is >= 259, so byte-level
+/// ids always fit). The PJRT path loads the manifest's vocab strictly —
+/// a trained model with the wrong tokenizer must be a hard error.
+fn cpu_tokenizer(args: &Args, cfg_name: &str) -> Tokenizer {
+    let root = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let path = root.join(cfg_name).join("vocab.json");
+    match Tokenizer::load(&path) {
+        Ok(t) => t,
+        Err(_) => {
+            eprintln!("note: no trained vocab at {path:?}; using byte-level tokenizer");
+            Tokenizer::byte_level()
+        }
+    }
+}
+
+fn cmd_generate<B: Backend>(args: &Args, runner: ModelRunner<B>, tok: Tokenizer) -> Result<()> {
     let prompt_text = args.str_or("prompt", "The quiet river carried the");
     let prompt: Vec<i32> = tok.encode(&prompt_text).iter().map(|&t| t as i32).collect();
-    let mut engine = make_engine(args, runner)?;
+    let ecfg = engine_config(args, runner.cfg())?;
+    let mut engine = Engine::new(runner, ecfg)?;
     engine.submit(GenRequest {
         id: 1,
         prompt,
@@ -178,17 +154,20 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_ce_eval(args: &Args) -> Result<()> {
-    let runner = load_runner(args)?;
-    let policy = parse_policy(args, &runner)?;
-    let corpus = Corpus::load(&PathBuf::from(args.str_or("data", "data")))?;
-    let vocab_path = runner.rt.manifest.dir.join(&runner.rt.manifest.vocab_file);
-    let tok = Tokenizer::load(&vocab_path)?;
+fn cmd_ce_eval<B: Backend>(args: &Args, runner: ModelRunner<B>, tok: Tokenizer) -> Result<()> {
+    let policy = parse_policy(args, runner.cfg())?;
     let mut rng = Rng::new(args.usize_or("seed", 0)? as u64);
     let b = args.usize_or("batch", 16)?;
     let positions = args.usize_or("positions", 48)?;
-    let seqs =
-        eval::sequences_from_corpus(&corpus, &tok, &mut rng, b, positions, args.flag("mixed"));
+    let mixed = args.flag("mixed");
+    // corpus-fed sequences when the data dir exists, hermetic synthetic
+    // domain bands otherwise
+    let seqs = match Corpus::load(&PathBuf::from(args.str_or("data", "data"))) {
+        Ok(corpus) => {
+            eval::sequences_from_corpus(&corpus, &tok, &mut rng, b, positions, mixed)
+        }
+        Err(_) => eval::synthetic_sequences(runner.cfg(), &mut rng, b, positions, mixed),
+    };
 
     let k = runner.cfg().top_k;
     let vanilla = eval::forced_run(&runner, &seqs, positions, Policy::Vanilla { k }, true)?;
@@ -208,11 +187,118 @@ fn cmd_ce_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info(args: &Args) -> Result<()> {
-    let runner = load_runner(args)?;
-    let c = runner.cfg();
-    println!("config: {c:#?}");
-    println!("stages: {}", runner.rt.manifest.stages.len());
-    println!("weights: {}", runner.rt.weight_names().len());
+fn cmd_info<B: Backend>(runner: ModelRunner<B>) -> Result<()> {
+    println!("backend: {}", runner.backend.label());
+    println!("config: {:#?}", runner.cfg());
     Ok(())
+}
+
+fn serve_preamble(args: &Args, c: &ModelConfig, backend: &str) -> Result<(String, Option<usize>)> {
+    // validate the policy spec up front so typos fail before any engine
+    // thread spawns
+    let policy = parse_policy(args, c)?;
+    let port = args.usize_or("port", 8080)?;
+    let max_requests = match args.str_opt("max-requests") {
+        Some(_) => Some(args.usize_or("max-requests", 0)?),
+        None => None,
+    };
+    println!(
+        "serving backend={backend} config={} policy={} max_running={} on 127.0.0.1:{port}",
+        c.name,
+        policy.label(),
+        args.usize_or("max-running", 8)?,
+    );
+    Ok((format!("127.0.0.1:{port}"), max_requests))
+}
+
+// ---- CPU backend (default, hermetic) -------------------------------------
+
+fn cpu_runner(args: &Args) -> Result<ModelRunner<CpuBackend>> {
+    let cfg = ModelConfig::preset(&args.str_or("config", "small"))?;
+    let seed = args.usize_or("weight-seed", 0)? as u64;
+    Ok(ModelRunner::new(CpuBackend::synthetic(cfg, seed)))
+}
+
+fn run_cpu(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("serve") => {
+            let runner = cpu_runner(args)?;
+            let cfg_name = runner.cfg().name.clone();
+            let tok = cpu_tokenizer(args, &cfg_name);
+            let ecfg = engine_config(args, runner.cfg())?;
+            let (addr, max_requests) = serve_preamble(args, runner.cfg(), "cpu")?;
+            server::serve(move || Engine::new(runner, ecfg), tok, &addr, max_requests)
+        }
+        Some("generate") => {
+            let runner = cpu_runner(args)?;
+            let tok = cpu_tokenizer(args, &runner.cfg().name.clone());
+            cmd_generate(args, runner, tok)
+        }
+        Some("ce-eval") => {
+            let runner = cpu_runner(args)?;
+            let tok = cpu_tokenizer(args, &runner.cfg().name.clone());
+            cmd_ce_eval(args, runner, tok)
+        }
+        Some("info") => cmd_info(cpu_runner(args)?),
+        other => Err(oea_serve::Error::Config(format!(
+            "unknown subcommand {other:?}; try serve | generate | ce-eval | info"
+        ))),
+    }
+}
+
+// ---- PJRT backend (feature-gated) ----------------------------------------
+
+#[cfg(feature = "pjrt")]
+fn run_pjrt(args: &Args) -> Result<()> {
+    use oea_serve::backend::pjrt::PjrtBackend;
+
+    let root = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let cfg_name = args.str_or("config", "small");
+    match args.subcommand.as_deref() {
+        Some("serve") => {
+            // validate flags + resolve the vocab WITHOUT creating a PJRT
+            // client: xla_extension 0.5.1 cannot survive a create/destroy/
+            // create cycle of TfrtCpuClient in one process, so only the
+            // engine thread makes one.
+            let manifest = oea_serve::config::Manifest::load(&root, &cfg_name)?;
+            let tok = Tokenizer::load(&manifest.dir.join(&manifest.vocab_file))?;
+            let (addr, max_requests) = serve_preamble(args, &manifest.config, "pjrt")?;
+            let args2 = args.clone();
+            server::serve(
+                move || {
+                    let runner = ModelRunner::new(PjrtBackend::load(&root, &cfg_name)?);
+                    let ecfg = engine_config(&args2, runner.cfg())?;
+                    Engine::new(runner, ecfg)
+                },
+                tok,
+                &addr,
+                max_requests,
+            )
+        }
+        Some("generate") => {
+            let runner = ModelRunner::new(PjrtBackend::load(&root, &cfg_name)?);
+            let m = &runner.backend.rt.manifest;
+            let tok = Tokenizer::load(&m.dir.join(&m.vocab_file))?;
+            cmd_generate(args, runner, tok)
+        }
+        Some("ce-eval") => {
+            let runner = ModelRunner::new(PjrtBackend::load(&root, &cfg_name)?);
+            let m = &runner.backend.rt.manifest;
+            let tok = Tokenizer::load(&m.dir.join(&m.vocab_file))?;
+            cmd_ce_eval(args, runner, tok)
+        }
+        Some("info") => cmd_info(ModelRunner::new(PjrtBackend::load(&root, &cfg_name)?)),
+        other => Err(oea_serve::Error::Config(format!(
+            "unknown subcommand {other:?}; try serve | generate | ce-eval | info"
+        ))),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_pjrt(_args: &Args) -> Result<()> {
+    Err(oea_serve::Error::Config(
+        "this build has no PJRT support; rebuild with `cargo build --features pjrt` \
+         (and patch in the real xla crate — see README, \"PJRT backend\")"
+            .into(),
+    ))
 }

@@ -1,30 +1,33 @@
-//! Decode/prefill pipeline orchestration over the HLO stages.
+//! Decode/prefill pipeline orchestration over a [`Backend`].
 //!
-//! This is the request-path glue between the runtime (device execution) and
-//! the routing engine: per decode step it runs
+//! This is the request-path glue between backend execution and the routing
+//! engine: per decode step it runs
 //!
-//!   embed -> [ layer_pre -> route() -> cache_append x2 -> moe ] x L -> logits
+//!   embed -> [ layer_pre -> route() -> moe_apply ] x L -> logits
 //!
-//! with the KV caches living as device buffers inside [`DecodeBatch`]
+//! with the KV caches living backend-side inside [`DecodeBatch`]
 //! (slot-stable across steps; membership changes use `install_prefilled` /
-//! host repack, mirroring how serving frameworks capture fixed batch-shape
-//! graphs — paper §6).
+//! repack, mirroring how serving frameworks capture fixed batch-shape
+//! graphs — paper §6). The routing decision — the paper's contribution —
+//! always runs in Rust between the router scores and the expert execution,
+//! regardless of backend.
 
 use std::time::Instant;
 
+use crate::backend::{Backend, Prefilled};
 use crate::config::ModelConfig;
 use crate::moe::policy::{self, Policy, RoutingInput};
 use crate::moe::ScoreMatrix;
-use crate::runtime::Runtime;
 use crate::util::error::{Error, Result};
 
-/// Device-resident decode batch state (one per active bucket).
-pub struct DecodeBatch {
+/// Backend-resident decode batch state (one per active bucket).
+pub struct DecodeBatch<B: Backend> {
     pub bucket: usize,
-    /// per-layer combined KV caches `[2, bucket, S, Hkv, hd]` (K=0, V=1 —
-    /// one buffer so each layer needs a single cache_append execution)
-    pub kvs: Vec<xla::PjRtBuffer>,
+    pub cache: B::Cache,
 }
+
+/// A prefilled sequence's backend-side KV rows, ready to join a batch.
+pub type PrefilledSeq<B> = Prefilled<<B as Backend>::Rows>;
 
 /// Per-layer routing/latency info from one decode step.
 #[derive(Debug, Clone, Copy)]
@@ -45,36 +48,21 @@ pub struct StepOutput {
     pub layers: Vec<LayerStep>,
 }
 
-/// A prefilled sequence's device-side KV rows, ready to join a batch.
-pub struct PrefilledSeq {
-    /// per-layer `[S, Hkv, hd]`
-    pub k_rows: Vec<xla::PjRtBuffer>,
-    pub v_rows: Vec<xla::PjRtBuffer>,
-    pub n_tokens: usize,
-    /// logits after the last prompt token `[vocab]`
-    pub last_logits: Vec<f32>,
+pub struct ModelRunner<B: Backend> {
+    pub backend: B,
 }
 
-pub struct ModelRunner {
-    pub rt: Runtime,
-}
-
-impl ModelRunner {
-    pub fn new(rt: Runtime) -> Self {
-        ModelRunner { rt }
+impl<B: Backend> ModelRunner<B> {
+    pub fn new(backend: B) -> Self {
+        ModelRunner { backend }
     }
 
     pub fn cfg(&self) -> &ModelConfig {
-        self.rt.config()
-    }
-
-    fn cache_dims(&self, bucket: usize) -> [usize; 5] {
-        let c = self.cfg();
-        [2, bucket, c.s_max, c.n_kv_heads, c.head_dim]
+        self.backend.config()
     }
 
     /// Fresh zeroed decode batch for `bucket`.
-    pub fn new_batch(&self, bucket: usize) -> Result<DecodeBatch> {
+    pub fn new_batch(&self, bucket: usize) -> Result<DecodeBatch<B>> {
         let c = self.cfg();
         if !c.batch_buckets.contains(&bucket) {
             return Err(Error::Config(format!(
@@ -82,12 +70,7 @@ impl ModelRunner {
                 c.batch_buckets
             )));
         }
-        let dims = self.cache_dims(bucket);
-        let mut kvs = Vec::with_capacity(c.n_layers);
-        for _ in 0..c.n_layers {
-            kvs.push(self.rt.zeros_f32(&dims)?);
-        }
-        Ok(DecodeBatch { bucket, kvs })
+        Ok(DecodeBatch { bucket, cache: self.backend.new_cache(bucket)? })
     }
 
     /// One decode step over the whole bucket.
@@ -96,7 +79,7 @@ impl ModelRunner {
     /// pos 0, live false). `mask_padding=false` reproduces the §6 anecdote.
     pub fn decode_step(
         &self,
-        batch: &mut DecodeBatch,
+        batch: &mut DecodeBatch<B>,
         tokens: &[i32],
         pos: &[i32],
         live: &[bool],
@@ -107,69 +90,22 @@ impl ModelRunner {
         let b = batch.bucket;
         assert!(tokens.len() == b && pos.len() == b && live.len() == b);
 
-        let tok_buf = self.rt.upload_i32(tokens, &[b])?;
-        let pos_buf = self.rt.upload_i32(pos, &[b])?;
-        let mut hidden = self
-            .rt
-            .exec1(&format!("embed_b{b}"), &[&tok_buf, self.rt.weight("embed")?])?;
-
+        let mut hidden = self.backend.embed(tokens)?;
         let mut layers = Vec::with_capacity(c.n_layers);
         for l in 0..c.n_layers {
-            let p = |s: &str| format!("l{l}.{s}");
-            let lits = self.rt.exec_tuple(
-                &format!("layer_pre_b{b}"),
-                &[
-                    &hidden,
-                    &batch.kvs[l],
-                    &pos_buf,
-                    self.rt.weight(&p("wq"))?,
-                    self.rt.weight(&p("wk"))?,
-                    self.rt.weight(&p("wv"))?,
-                    self.rt.weight(&p("wo"))?,
-                    self.rt.weight(&p("n1"))?,
-                    self.rt.weight(&p("n2"))?,
-                    self.rt.weight(&p("router"))?,
-                ],
-            )?;
-            let [h_lit, s_lit, k_lit, v_lit]: [xla::Literal; 4] = lits
-                .try_into()
-                .map_err(|_| Error::Xla("layer_pre arity".into()))?;
-
-            // device-side cache append (single-output stage, no roundtrip)
-            let kv_dims = [b, c.n_kv_heads, c.head_dim];
-            let k_new = self.rt.upload_literal_f32(&k_lit, &kv_dims)?;
-            let v_new = self.rt.upload_literal_f32(&v_lit, &kv_dims)?;
-            batch.kvs[l] = self.rt.exec1(
-                &format!("cache_append_b{b}"),
-                &[&batch.kvs[l], &k_new, &v_new, &pos_buf],
-            )?;
+            let pre = self.backend.layer_pre(l, &hidden, &mut batch.cache, pos)?;
 
             // rust routing decision between router and expert execution
             let t0 = Instant::now();
-            let scores = ScoreMatrix::new(b, c.n_experts, s_lit.to_vec::<f32>()?);
+            let scores = ScoreMatrix::new(b, c.n_experts, pre.scores);
             let input = RoutingInput { scores: &scores, live, mask_padding };
             let d = policy::route(pol, &input);
             let t_bucket = c.t_bucket_for(d.t())?;
             let ids = pad_active_list(&d.active, t_bucket, c.n_experts);
             let route_us = t0.elapsed().as_secs_f64() * 1e6;
 
-            let h_buf = self.rt.upload_literal_f32(&h_lit, &[b, c.d_model])?;
-            let comb_buf = self.rt.upload_f32(&d.combine, &[b, c.n_experts])?;
-            let ids_buf = self.rt.upload_i32(&ids, &[t_bucket])?;
-
             let t0 = Instant::now();
-            hidden = self.rt.exec1(
-                &format!("moe_b{b}_t{t_bucket}"),
-                &[
-                    &h_buf,
-                    &comb_buf,
-                    &ids_buf,
-                    self.rt.weight(&p("wg"))?,
-                    self.rt.weight(&p("wu"))?,
-                    self.rt.weight(&p("wd"))?,
-                    self.rt.weight(&p("n2"))?,
-                ],
-            )?;
+            hidden = self.backend.moe_apply(l, &pre.h, &d.combine, &ids)?;
             let moe_us = t0.elapsed().as_secs_f64() * 1e6;
 
             layers.push(LayerStep {
@@ -181,177 +117,55 @@ impl ModelRunner {
             });
         }
 
-        let logits_buf = self.rt.exec1(
-            &format!("logits_b{b}"),
-            &[
-                &hidden,
-                self.rt.weight("final_norm")?,
-                self.rt.weight("unembed")?,
-            ],
-        )?;
-        let logits = self.rt.download_f32(&logits_buf)?;
+        let logits = self.backend.logits(&hidden)?;
         Ok(StepOutput { logits, layers })
     }
 
-    /// Chunked prefill of one prompt (vanilla routing in-graph, like the
-    /// paper: OEA applies to decode only). Returns device KV rows + the
-    /// last-token logits.
-    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefilledSeq> {
-        let c = self.cfg().clone();
-        let chunk = c.prefill_chunk;
-        if prompt.is_empty() {
-            return Err(Error::Engine("empty prompt".into()));
-        }
-        if prompt.len() > c.s_max - 1 {
-            return Err(Error::Engine(format!(
-                "prompt of {} tokens exceeds s_max-1 = {}",
-                prompt.len(),
-                c.s_max - 1
-            )));
-        }
-        let row_dims = [c.s_max, c.n_kv_heads, c.head_dim];
-        let mut k_rows: Vec<xla::PjRtBuffer> = Vec::with_capacity(c.n_layers);
-        let mut v_rows: Vec<xla::PjRtBuffer> = Vec::with_capacity(c.n_layers);
-        for _ in 0..c.n_layers {
-            k_rows.push(self.rt.zeros_f32(&row_dims)?);
-            v_rows.push(self.rt.zeros_f32(&row_dims)?);
-        }
-
-        let mut last_hidden_row: Option<Vec<f32>> = None;
-        let n_chunks = prompt.len().div_ceil(chunk);
-        for ci in 0..n_chunks {
-            let pos0 = ci * chunk;
-            let mut toks = vec![0i32; chunk];
-            let upto = (pos0 + chunk).min(prompt.len());
-            toks[..upto - pos0].copy_from_slice(&prompt[pos0..upto]);
-            let tok_buf = self.rt.upload_i32(&toks, &[chunk])?;
-            let pos0_entry = self.rt.upload_i32_scalar(pos0 as i32)?;
-            let pos0_buf = &pos0_entry.1;
-
-            let mut h = self.rt.exec1(
-                &format!("embed_c{chunk}"),
-                &[&tok_buf, self.rt.weight("embed")?],
-            )?;
-            for l in 0..c.n_layers {
-                let p = |s: &str| format!("l{l}.{s}");
-                let lits = self.rt.exec_tuple(
-                    &format!("prefill_layer_c{chunk}"),
-                    &[
-                        &h,
-                        &k_rows[l],
-                        &v_rows[l],
-                        &pos0_buf,
-                        self.rt.weight(&p("wq"))?,
-                        self.rt.weight(&p("wk"))?,
-                        self.rt.weight(&p("wv"))?,
-                        self.rt.weight(&p("wo"))?,
-                        self.rt.weight(&p("n1"))?,
-                        self.rt.weight(&p("n2"))?,
-                        self.rt.weight(&p("router"))?,
-                        self.rt.weight(&p("wg"))?,
-                        self.rt.weight(&p("wu"))?,
-                        self.rt.weight(&p("wd"))?,
-                    ],
-                )?;
-                let [h_lit, kc_lit, vc_lit]: [xla::Literal; 3] = lits
-                    .try_into()
-                    .map_err(|_| Error::Xla("prefill_layer arity".into()))?;
-                h = self.rt.upload_literal_f32(&h_lit, &[chunk, c.d_model])?;
-                k_rows[l] = self.rt.upload_literal_f32(&kc_lit, &row_dims)?;
-                v_rows[l] = self.rt.upload_literal_f32(&vc_lit, &row_dims)?;
-                if ci == n_chunks - 1 && l == c.n_layers - 1 {
-                    let hv = h_lit.to_vec::<f32>()?;
-                    let last = (prompt.len() - 1) - pos0;
-                    last_hidden_row =
-                        Some(hv[last * c.d_model..(last + 1) * c.d_model].to_vec());
-                }
-            }
-        }
-
-        let hrow = last_hidden_row.expect("last chunk processed");
-        let h1 = self.rt.upload_f32(&hrow, &[1, c.d_model])?;
-        let lg_buf = self.rt.exec1(
-            "logits_b1",
-            &[&h1, self.rt.weight("final_norm")?, self.rt.weight("unembed")?],
-        )?;
-        let last_logits = self.rt.download_f32(&lg_buf)?;
-        Ok(PrefilledSeq {
-            k_rows,
-            v_rows,
-            n_tokens: prompt.len(),
-            last_logits,
-        })
+    /// Prefill one prompt (vanilla routing, like the paper: OEA applies to
+    /// decode only). Returns backend KV rows + the last-token logits.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefilledSeq<B>> {
+        self.backend.prefill(prompt)
     }
 
-    /// Install a prefilled sequence's KV rows into `slot` of a decode batch
-    /// — fully device-side via the `insert_row` stage.
+    /// Install a prefilled sequence's KV rows into `slot` of a decode
+    /// batch.
     pub fn install_prefilled(
         &self,
-        batch: &mut DecodeBatch,
+        batch: &mut DecodeBatch<B>,
         slot: usize,
-        seq: &PrefilledSeq,
+        seq: &PrefilledSeq<B>,
     ) -> Result<()> {
         assert!(slot < batch.bucket);
-        let b = batch.bucket;
-        let slot_entry = self.rt.upload_i32_scalar(slot as i32)?;
-        let slot_buf = &slot_entry.1;
-        let stage = format!("insert_row_b{b}");
-        for l in 0..self.cfg().n_layers {
-            batch.kvs[l] = self.rt.exec1(
-                &stage,
-                &[&batch.kvs[l], &seq.k_rows[l], &seq.v_rows[l], &slot_buf],
-            )?;
-        }
-        Ok(())
+        self.backend.install_rows(&mut batch.cache, slot, &seq.rows)
     }
 
     /// Clear a slot's cache rows (defensive hygiene when a request leaves;
     /// correctness does not depend on it because pos masks attention).
-    pub fn clear_slot(&self, batch: &mut DecodeBatch, slot: usize) -> Result<()> {
-        let c = self.cfg();
-        let zero_row = self.rt.zeros_f32(&[c.s_max, c.n_kv_heads, c.head_dim])?;
-        let slot_entry = self.rt.upload_i32_scalar(slot as i32)?;
-        let slot_buf = &slot_entry.1;
-        let stage = format!("insert_row_b{}", batch.bucket);
-        for l in 0..c.n_layers {
-            batch.kvs[l] =
-                self.rt.exec1(&stage, &[&batch.kvs[l], &zero_row, &zero_row, &slot_buf])?;
-        }
-        Ok(())
+    pub fn clear_slot(&self, batch: &mut DecodeBatch<B>, slot: usize) -> Result<()> {
+        self.backend.clear_slot(&mut batch.cache, slot)
     }
 
     /// Move the batch to a different bucket, mapping old slot i to new slot
-    /// `mapping[i]` (None drops the row). Host roundtrip; rare (only when
-    /// the running set outgrows the current bucket).
+    /// `mapping[i]` (None drops the row). Rare (only when the running set
+    /// outgrows the current bucket).
     pub fn repack(
         &self,
-        batch: &DecodeBatch,
+        batch: &DecodeBatch<B>,
         new_bucket: usize,
         mapping: &[Option<usize>],
-    ) -> Result<DecodeBatch> {
+    ) -> Result<DecodeBatch<B>> {
         let c = self.cfg();
-        assert_eq!(mapping.len(), batch.bucket);
-        let row = c.s_max * c.n_kv_heads * c.head_dim;
-        let mut out = self.new_batch(new_bucket)?;
-        for l in 0..c.n_layers {
-            // [2, b, S, Hkv, hd]: permute the bucket axis within each half
-            let host = self.rt.download_f32(&batch.kvs[l])?;
-            let mut fresh = vec![0.0f32; 2 * new_bucket * row];
-            for half in 0..2 {
-                let src_base = half * batch.bucket * row;
-                let dst_base = half * new_bucket * row;
-                for (i, m) in mapping.iter().enumerate() {
-                    if let Some(j) = m {
-                        assert!(*j < new_bucket);
-                        fresh[dst_base + j * row..dst_base + (j + 1) * row].copy_from_slice(
-                            &host[src_base + i * row..src_base + (i + 1) * row],
-                        );
-                    }
-                }
-            }
-            out.kvs[l] = self.rt.upload_f32(&fresh, &self.cache_dims(new_bucket))?;
+        if !c.batch_buckets.contains(&new_bucket) {
+            return Err(Error::Config(format!(
+                "bucket {new_bucket} not in {:?}",
+                c.batch_buckets
+            )));
         }
-        Ok(out)
+        assert_eq!(mapping.len(), batch.bucket);
+        let cache = self
+            .backend
+            .repack(&batch.cache, batch.bucket, new_bucket, mapping)?;
+        Ok(DecodeBatch { bucket: new_bucket, cache })
     }
 }
 

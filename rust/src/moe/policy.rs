@@ -40,8 +40,13 @@ impl Policy {
     /// `vanilla`, `pruned:k0=3`, `pruned:k0=4,p=0.7`, `oea:k0=3`,
     /// `oea-full:k0=3,p=0.7,kmax=9,maxp=32`, `lynx:t=16`,
     /// `dynskip:tau=0.3`, `expert-choice:cap=2`.
-    /// `k` defaults to the model's top_k.
-    pub fn from_cli(spec: &str, model_k: usize, n_experts: usize) -> crate::util::error::Result<Policy> {
+    /// `k` defaults to the model's top_k. Unknown keys are rejected (a
+    /// typo like `oea:kmx=9` must not silently run with the default).
+    pub fn from_cli(
+        spec: &str,
+        model_k: usize,
+        n_experts: usize,
+    ) -> crate::util::error::Result<Policy> {
         use crate::util::error::Error;
         let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
         let mut kv = std::collections::BTreeMap::new();
@@ -50,6 +55,29 @@ impl Policy {
                 .split_once('=')
                 .ok_or_else(|| Error::Config(format!("bad policy arg {part:?}")))?;
             kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let allowed: &[&str] = match name {
+            "vanilla" => &["k"],
+            "pruned" => &["k0", "p"],
+            "oea" => &["k0", "k"],
+            "oea-full" => &["k0", "p", "kmax", "maxp"],
+            "lynx" => &["k", "t"],
+            "dynskip" => &["k", "tau"],
+            "expert-choice" => &["cap"],
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown policy {other:?} \
+                     (vanilla|pruned|oea|oea-full|lynx|dynskip|expert-choice)"
+                )))
+            }
+        };
+        for key in kv.keys() {
+            if !allowed.contains(&key.as_str()) {
+                return Err(Error::Config(format!(
+                    "--policy {name}: unknown key {key:?} (allowed: {})",
+                    allowed.join(", ")
+                )));
+            }
         }
         let get_usize = |k: &str, d: usize| -> crate::util::error::Result<usize> {
             kv.get(k)
@@ -541,6 +569,58 @@ mod tests {
         let d = route(Policy::DynSkip { k: 2, tau: 0.0 }, &input(&s, &live));
         let v = route(Policy::Vanilla { k: 2 }, &input(&s, &live));
         assert_eq!(d.sets, v.sets);
+    }
+
+    #[test]
+    fn from_cli_parses_every_doc_example() {
+        // one assertion per example in the from_cli doc comment
+        let p = |s: &str| Policy::from_cli(s, 8, 128).unwrap();
+        assert_eq!(p("vanilla"), Policy::Vanilla { k: 8 });
+        assert_eq!(p("pruned:k0=3"), Policy::Pruned { k0: 3, p: 1.0 });
+        assert_eq!(p("pruned:k0=4,p=0.7"), Policy::Pruned { k0: 4, p: 0.7 });
+        assert_eq!(p("oea:k0=3"), Policy::OeaSimplified { k0: 3, k: 8 });
+        assert_eq!(
+            p("oea-full:k0=3,p=0.7,kmax=9,maxp=32"),
+            Policy::Oea { k0: 3, p: 0.7, k_max: 9, max_p: 32 }
+        );
+        assert_eq!(p("lynx:t=16"), Policy::Lynx { k: 8, target_t: 16 });
+        assert_eq!(p("dynskip:tau=0.3"), Policy::DynSkip { k: 8, tau: 0.3 });
+        assert_eq!(p("expert-choice:cap=2"), Policy::ExpertChoice { capacity: 2 });
+    }
+
+    #[test]
+    fn from_cli_rejects_unknown_keys() {
+        use crate::util::error::Error;
+        // the motivating typo: `kmx` instead of `kmax` must not silently
+        // run with the default
+        for spec in [
+            "oea:kmx=9",
+            "oea:k0=3,kmax=9", // kmax belongs to oea-full, not oea
+            "vanilla:k0=3",
+            "pruned:kO=3",
+            "lynx:target=16",
+            "dynskip:thau=0.3",
+            "expert-choice:capacity=2",
+            "oea-full:k0=3,maxP=32", // keys are case-sensitive
+        ] {
+            let err = Policy::from_cli(spec, 8, 128).unwrap_err();
+            assert!(
+                matches!(err, Error::Config(_)),
+                "{spec} must fail with Error::Config, got {err}"
+            );
+            assert!(
+                err.to_string().contains("allowed"),
+                "{spec}: error should list allowed keys, got {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn from_cli_rejects_malformed_and_unknown_names() {
+        assert!(Policy::from_cli("nope", 8, 128).is_err());
+        assert!(Policy::from_cli("oea:k0", 8, 128).is_err()); // missing '='
+        assert!(Policy::from_cli("oea:k0=x", 8, 128).is_err()); // not an int
+        assert!(Policy::from_cli("dynskip:tau=abc", 8, 128).is_err());
     }
 
     #[test]

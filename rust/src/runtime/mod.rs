@@ -187,7 +187,11 @@ impl Runtime {
 
     /// Upload a host literal's raw f32 data (helper for re-uploading tuple
     /// elements).
-    pub fn upload_literal_f32(&self, lit: &xla::Literal, dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    pub fn upload_literal_f32(
+        &self,
+        lit: &xla::Literal,
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
         let v = lit.to_vec::<f32>()?;
         self.upload_f32(&v, dims)
     }

@@ -15,6 +15,7 @@ use std::net::TcpListener;
 use std::sync::mpsc;
 use std::sync::Arc;
 
+use crate::backend::Backend;
 use crate::coordinator::{Engine, GenRequest};
 use crate::util::bpe::Tokenizer;
 use crate::util::error::{Error, Result};
@@ -28,17 +29,18 @@ enum EngineMsg {
 }
 
 /// Serve on `addr` until `max_requests` generations complete (`None` =
-/// forever). The engine owns non-`Send` PJRT handles, so it is CONSTRUCTED
-/// on the engine thread via `engine_builder`; the tokenizer translates
-/// text <-> ids at the edge.
-pub fn serve<F>(
+/// forever). Backends may own non-`Send` handles (PJRT does), so the
+/// engine is CONSTRUCTED on the engine thread via `engine_builder`; the
+/// tokenizer translates text <-> ids at the edge.
+pub fn serve<B, F>(
     engine_builder: F,
     tokenizer: Tokenizer,
     addr: &str,
     max_requests: Option<usize>,
 ) -> Result<()>
 where
-    F: FnOnce() -> Result<Engine> + Send + 'static,
+    B: Backend + 'static,
+    F: FnOnce() -> Result<Engine<B>> + Send + 'static,
 {
     let listener = TcpListener::bind(addr).map_err(|e| Error::Io(format!("bind {addr}: {e}")))?;
     listener.set_nonblocking(false).ok();
@@ -235,7 +237,7 @@ fn handle(
     }
 }
 
-fn metrics_json(engine: &Engine) -> Json {
+fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
     let fit = engine.moe.linear_fit(true);
     Json::obj(vec![
         ("n_records", Json::num(engine.moe.len() as f64)),

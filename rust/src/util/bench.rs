@@ -3,9 +3,61 @@
 //! every `rust/benches/*` target so each paper table/figure prints in the
 //! same format it appears in the paper.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats;
+
+/// CLI options shared by every bench binary.
+///
+/// `cargo bench --bench <name> -- --smoke [--out DIR]` runs the CI smoke
+/// tier: tiny config, few steps, and a machine-readable `BENCH_<name>.json`
+/// artifact — the seed of the perf trajectory tracked across PRs.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub smoke: bool,
+    /// directory receiving `BENCH_<name>.json` artifacts
+    pub out_dir: PathBuf,
+}
+
+impl BenchOpts {
+    /// Parse from the process args. Unknown args are ignored so each bench
+    /// can keep its own positional filters (and cargo's `--bench` marker
+    /// passes through harmlessly).
+    pub fn from_args() -> BenchOpts {
+        Self::parse(&std::env::args().skip(1).collect::<Vec<_>>())
+    }
+
+    pub fn parse(args: &[String]) -> BenchOpts {
+        let mut smoke = std::env::var("OEA_BENCH_SMOKE").is_ok();
+        let mut out_dir = PathBuf::from(".");
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--smoke" => smoke = true,
+                "--out" => {
+                    if let Some(d) = args.get(i + 1) {
+                        out_dir = PathBuf::from(d);
+                        i += 1;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        BenchOpts { smoke, out_dir }
+    }
+
+    /// Write `BENCH_<name>.json` (the CI-uploaded perf artifact) and
+    /// return the path written.
+    pub fn emit(&self, name: &str, payload: Json) -> std::io::Result<PathBuf> {
+        let path = self.out_dir.join(format!("BENCH_{name}.json"));
+        std::fs::write(&path, payload.write())?;
+        eprintln!("wrote {}", path.display());
+        Ok(path)
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -146,5 +198,30 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn bench_opts_parse_smoke_and_out() {
+        let args: Vec<String> = ["--bench", "--smoke", "--out", "/tmp/x", "maxp"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let o = BenchOpts::parse(&args);
+        assert!(o.smoke);
+        assert_eq!(o.out_dir, std::path::Path::new("/tmp/x"));
+        let o2 = BenchOpts::parse(&[]);
+        assert_eq!(o2.out_dir, std::path::Path::new("."));
+    }
+
+    #[test]
+    fn bench_emit_writes_artifact() {
+        let dir = std::env::temp_dir().join("oea_bench_emit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let o = BenchOpts { smoke: true, out_dir: dir.clone() };
+        let payload = Json::obj(vec![("mean_us", Json::num(1.5))]);
+        let path = o.emit("unit_test", payload).unwrap();
+        assert_eq!(path, dir.join("BENCH_unit_test.json"));
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("mean_us").unwrap().as_f64().unwrap(), 1.5);
     }
 }

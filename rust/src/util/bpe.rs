@@ -50,6 +50,13 @@ impl Tokenizer {
         Ok(Self::from_merges(merges, vocab_size))
     }
 
+    /// Merge-free byte-level tokenizer (ids 3..258 = raw bytes): the
+    /// hermetic fallback when no trained `vocab.json` artifact exists.
+    /// Every encode stays within any model vocab >= 259.
+    pub fn byte_level() -> Self {
+        Self::from_merges(Vec::new(), (N_SPECIAL + 256) as usize)
+    }
+
     pub fn from_merges(merges: Vec<(Vec<u8>, Vec<u8>)>, vocab_size: usize) -> Self {
         let mut tokens: Vec<Vec<u8>> = vec![vec![]; N_SPECIAL as usize];
         let mut ids = HashMap::new();
@@ -163,5 +170,17 @@ mod tests {
         let t = toy();
         let s = "\u{0007}\u{00ff}";
         assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn byte_level_roundtrips_and_bounds_ids() {
+        let t = Tokenizer::byte_level();
+        for s in ["plain ascii", "héllo ✨ 中", ""] {
+            assert_eq!(t.decode(&t.encode(s)), s, "{s:?}");
+        }
+        assert_eq!(t.n_tokens(), 259);
+        for id in t.encode("any text at all") {
+            assert!((id as usize) < 259);
+        }
     }
 }

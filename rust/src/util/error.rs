@@ -3,8 +3,8 @@
 use std::fmt;
 
 /// Library error type. A thin `String`-carrying error that also wraps
-/// [`xla::Error`] and [`std::io::Error`] so the whole stack can use one
-/// `Result` alias.
+/// [`std::io::Error`] (and `xla::Error` under the `pjrt` feature) so the
+/// whole stack can use one `Result` alias.
 #[derive(Debug)]
 pub enum Error {
     /// Malformed configuration / CLI usage.
@@ -13,7 +13,9 @@ pub enum Error {
     Json(String),
     /// Artifact manifest / weights problems.
     Artifact(String),
-    /// XLA / PJRT failure.
+    /// XLA / PJRT failure (the variant exists in every build so
+    /// backend-agnostic code can match on it; it is only constructed by
+    /// the `pjrt` feature).
     Xla(String),
     /// I/O failure with context.
     Io(String),
@@ -42,6 +44,7 @@ impl From<std::io::Error> for Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

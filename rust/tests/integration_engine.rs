@@ -1,44 +1,24 @@
-//! End-to-end engine integration over the tiny artifacts: continuous
-//! batching, admission bounds, determinism, policy effects on T, and the
-//! HTTP server loop. Requires `make artifacts`.
+//! End-to-end engine integration over the hermetic CPU backend:
+//! continuous batching, admission bounds, determinism, policy effects on
+//! T, and server-visible telemetry. Runs on any machine with only
+//! `cargo` — no artifacts, Python, or XLA required.
 
-use std::path::{Path, PathBuf};
-use std::sync::{Mutex, MutexGuard, OnceLock};
-
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
 use oea_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest};
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::Policy;
-use oea_serve::runtime::Runtime;
 
-fn artifact_root() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+fn runner() -> ModelRunner<CpuBackend> {
+    ModelRunner::new(CpuBackend::synthetic(ModelConfig::preset("tiny").unwrap(), 0))
 }
 
-// Single shared PJRT client (see integration_runtime.rs for why).
-struct Shared(Option<ModelRunner>);
-unsafe impl Send for Shared {}
-
-static RUNNER: OnceLock<Mutex<Shared>> = OnceLock::new();
-
-fn shared() -> MutexGuard<'static, Shared> {
-    RUNNER
-        .get_or_init(|| {
-            let rt = Runtime::load(&artifact_root(), "tiny")
-                .expect("run `make artifacts` first");
-            Mutex::new(Shared(Some(ModelRunner::new(rt))))
-        })
-        .lock()
-        .unwrap_or_else(|p| p.into_inner())
-}
-
-/// Build an engine from the shared runner, run `f`, put the runner back.
+/// Build a fresh engine (deterministic synthetic weights), run `f`.
 fn with_engine<F, R>(cfg_mod: impl FnOnce(&mut EngineConfig), f: F) -> R
 where
-    F: FnOnce(&mut Engine) -> R,
+    F: FnOnce(&mut Engine<CpuBackend>) -> R,
 {
-    let mut guard = shared();
-    let runner = guard.0.take().expect("runner in use");
     let mut cfg = EngineConfig {
         policy: Policy::Vanilla { k: 2 },
         mask_padding: true,
@@ -47,10 +27,8 @@ where
         cost_model: H100Presets::qwen3_30b(),
     };
     cfg_mod(&mut cfg);
-    let mut engine = Engine::new(runner, cfg).unwrap();
-    let out = f(&mut engine);
-    guard.0 = Some(engine.runner);
-    out
+    let mut engine = Engine::new(runner(), cfg).unwrap();
+    f(&mut engine)
 }
 
 fn req(id: u64, len: usize, gen: usize) -> GenRequest {
@@ -76,7 +54,7 @@ fn serves_batch_to_completion() {
             assert_eq!(f.reason, FinishReason::Length);
             assert_eq!(f.tokens.len(), 8);
         }
-        assert!(engine.moe.len() > 0);
+        assert!(!engine.moe.is_empty());
         assert!(engine.requests.n_finished == 6);
         assert!(engine.requests.total_generated_tokens == 48);
     });
@@ -159,6 +137,38 @@ fn oea_engine_activates_fewer_experts() {
         t_oea < t_vanilla,
         "OEA avg T {t_oea} must be below vanilla {t_vanilla}"
     );
+}
+
+#[test]
+fn every_policy_serves_through_the_engine() {
+    // the seven routing policies all drive the full admission -> prefill
+    // -> lockstep decode -> sample -> retire pipeline on the CPU backend
+    let policies = [
+        Policy::Vanilla { k: 2 },
+        Policy::Pruned { k0: 1, p: 0.8 },
+        Policy::OeaSimplified { k0: 1, k: 2 },
+        Policy::Oea { k0: 1, p: 0.9, k_max: 2, max_p: 8 },
+        Policy::Lynx { k: 2, target_t: 4 },
+        Policy::DynSkip { k: 2, tau: 0.3 },
+        Policy::ExpertChoice { capacity: 2 },
+    ];
+    for pol in policies {
+        with_engine(
+            |c| c.policy = pol,
+            |engine| {
+                for i in 0..3 {
+                    engine.submit(req(700 + i, 5, 4));
+                }
+                let done = engine.run_to_completion().unwrap();
+                assert_eq!(done.len(), 3, "policy {} lost requests", pol.label());
+                for f in &done {
+                    assert_eq!(f.tokens.len(), 4, "policy {}", pol.label());
+                }
+                assert!(!engine.moe.is_empty());
+                assert!(engine.moe.avg_latency_us(true) > 0.0);
+            },
+        );
+    }
 }
 
 #[test]
