@@ -1,36 +1,160 @@
-//! Pure-Rust reference kernels mirroring `python/compile/kernels/ref.py`
-//! (the cross-language correctness ground truth). All math is f32, plain
-//! loops ordered for cache locality — fast enough for tests and the CI
-//! bench-smoke tier; golden fixtures in `rust/tests/cpu_backend_golden.rs`
-//! pin these against the JAX oracles.
+//! Pure-Rust kernels mirroring `python/compile/kernels/ref.py` (the
+//! cross-language correctness ground truth), engineered for the decode
+//! hot path:
+//!
+//! - one cache-blocked GEMM micro-kernel ([`matmul_packed`]) behind both
+//!   the dense [`matmul`] and the pre-transposed/padded expert weight
+//!   layout ([`PackedMat`]) — 4 output rows per pass so each streamed
+//!   weight row is reused 4×, with a branch-free autovectorizable inner
+//!   loop (the old `if av == 0.0` skip pessimized dense rows and is
+//!   obsolete now that zero-combine tokens are never dispatched);
+//! - a fused `silu(g) · u` activation ([`silu_mul`]);
+//! - `_into` variants that write caller-provided buffers, with an
+//!   [`Arena`] supplying scratch so the hot loop performs no per-call
+//!   heap allocation;
+//! - the token-grouped expert FFN ([`moe_ffn_groups`]) executing an
+//!   [`ExpertGroups`] work-list, and the original gather-style kernel
+//!   ([`moe_ffn_gather`]) kept as the correctness oracle.
+//!
+//! All math is f32; golden fixtures in `rust/tests/cpu_backend_golden.rs`
+//! pin these against the JAX oracles. Per-row results are independent of
+//! batch composition (each output element accumulates over `k` in the
+//! same order regardless of how rows are grouped or chunked), which is
+//! what makes serial grouped dispatch bitwise-identical to the gather
+//! oracle's per-token math; the threaded partial-accumulator reduce in
+//! the backend adds only rounding-level (~ulp) reassociation.
 
-/// `out[m, n] = a[m, k] @ b[k, n]` (row-major, ikj order so the inner loop
-/// streams both `b` and `out`).
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
+use crate::moe::dispatch::ExpertGroups;
+use crate::util::arena::Arena;
+
+/// Pad width of packed weight columns (f32 lanes of one AVX2 register;
+/// also divides every preset's `d_model`/`d_expert`, so padding is
+/// usually a no-op).
+pub const LANES: usize = 8;
+
+/// A weight matrix (or a bank of per-expert matrices) pre-packed for
+/// [`matmul_packed`]: row-major `[K, n_pad]` panels with `n_pad` the
+/// column count rounded up to [`LANES`] and the padding columns zeroed.
+/// The `[K, N]` orientation means the GEMM inner loop streams weight rows
+/// contiguously (the layout `ref.py` already uses), and the padding keeps
+/// every row a whole number of vector lanes.
+#[derive(Debug, Clone)]
+pub struct PackedMat {
+    /// reduction dimension (rows of one panel)
+    pub k: usize,
+    /// logical output columns
+    pub n: usize,
+    /// padded output columns (row stride)
+    pub n_pad: usize,
+    /// number of stacked per-expert panels
+    pub experts: usize,
+    data: Vec<f32>,
+}
+
+impl PackedMat {
+    /// Pack `experts` stacked `[k, n]` row-major matrices.
+    pub fn pack(raw: &[f32], experts: usize, k: usize, n: usize) -> PackedMat {
+        debug_assert_eq!(raw.len(), experts * k * n);
+        let n_pad = n.div_ceil(LANES) * LANES;
+        let mut data = vec![0.0f32; experts * k * n_pad];
+        for row in 0..experts * k {
+            data[row * n_pad..row * n_pad + n].copy_from_slice(&raw[row * n..(row + 1) * n]);
+        }
+        PackedMat { k, n, n_pad, experts, data }
+    }
+
+    /// Expert `e`'s `[k, n_pad]` panel.
+    #[inline]
+    pub fn expert(&self, e: usize) -> &[f32] {
+        let stride = self.k * self.n_pad;
+        &self.data[e * stride..(e + 1) * stride]
+    }
+}
+
+/// Core GEMM micro-kernel: `out[m, n_pad] = a[m, k] @ panel[k, n_pad]`,
+/// where `a` rows are `lda` elements apart (so callers can feed padded
+/// scratch rows straight back in as the next GEMM's input). `out` is
+/// overwritten. Processes 4 output rows per pass — the panel row loaded
+/// in the inner loop is reused for all 4, and the 4-way accumulate over
+/// a full vector row autovectorizes without branches. Output rows stay
+/// L1-resident across the `k` sweep, which is the cache-blocking that
+/// matters at decode shapes (`m <= B`, panel streamed once per 4 rows).
+pub fn matmul_packed(
+    a: &[f32],
+    lda: usize,
+    panel: &[f32],
+    k: usize,
+    n_pad: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(m == 0 || a.len() >= (m - 1) * lda + k);
+    debug_assert_eq!(panel.len(), k * n_pad);
+    debug_assert_eq!(out.len(), m * n_pad);
+    out.fill(0.0);
+    let mut i = 0;
+    while i + 4 <= m {
+        let block = &mut out[i * n_pad..(i + 4) * n_pad];
+        let (o0, rest) = block.split_at_mut(n_pad);
+        let (o1, rest) = rest.split_at_mut(n_pad);
+        let (o2, o3) = rest.split_at_mut(n_pad);
+        let a0 = &a[i * lda..i * lda + k];
+        let a1 = &a[(i + 1) * lda..(i + 1) * lda + k];
+        let a2 = &a[(i + 2) * lda..(i + 2) * lda + k];
+        let a3 = &a[(i + 3) * lda..(i + 3) * lda + k];
+        for kk in 0..k {
+            let brow = &panel[kk * n_pad..(kk + 1) * n_pad];
+            let (c0, c1, c2, c3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+            let it = o0
+                .iter_mut()
+                .zip(o1.iter_mut())
+                .zip(o2.iter_mut())
+                .zip(o3.iter_mut())
+                .zip(brow.iter());
+            for ((((v0, v1), v2), v3), &bv) in it {
+                *v0 += c0 * bv;
+                *v1 += c1 * bv;
+                *v2 += c2 * bv;
+                *v3 += c3 * bv;
             }
-            let brow = &b[kk * n..(kk + 1) * n];
+        }
+        i += 4;
+    }
+    while i < m {
+        let orow = &mut out[i * n_pad..(i + 1) * n_pad];
+        let arow = &a[i * lda..i * lda + k];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &panel[kk * n_pad..(kk + 1) * n_pad];
             for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
                 *o += av * bv;
             }
         }
+        i += 1;
     }
+}
+
+/// `out[m, n] = a[m, k] @ b[k, n]` (row-major) into a caller buffer.
+pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    // a dense [K, N] matrix is a packed panel with n_pad = n
+    matmul_packed(a, k, b, k, n, m, out);
+}
+
+/// Allocating wrapper over [`matmul_into`].
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_into(a, b, m, k, n, &mut out);
     out
 }
 
-/// RMSNorm per row: `h / sqrt(mean(h^2) + eps) * scale` (ref.rmsnorm_ref).
-pub fn rmsnorm(h: &[f32], scale: &[f32], d: usize, eps: f32) -> Vec<f32> {
+/// RMSNorm per row into a caller buffer: `h / sqrt(mean(h^2) + eps) *
+/// scale` (ref.rmsnorm_ref).
+pub fn rmsnorm_into(h: &[f32], scale: &[f32], d: usize, eps: f32, out: &mut [f32]) {
     debug_assert_eq!(h.len() % d, 0);
     debug_assert_eq!(scale.len(), d);
-    let mut out = vec![0.0f32; h.len()];
+    debug_assert_eq!(out.len(), h.len());
     for (row, orow) in h.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
         let ms: f32 = row.iter().map(|&x| x * x).sum::<f32>() / d as f32;
         let inv = 1.0 / (ms + eps).sqrt();
@@ -38,6 +162,12 @@ pub fn rmsnorm(h: &[f32], scale: &[f32], d: usize, eps: f32) -> Vec<f32> {
             *o = x * inv * s;
         }
     }
+}
+
+/// Allocating wrapper over [`rmsnorm_into`].
+pub fn rmsnorm(h: &[f32], scale: &[f32], d: usize, eps: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; h.len()];
+    rmsnorm_into(h, scale, d, eps, &mut out);
     out
 }
 
@@ -60,6 +190,15 @@ pub fn softmax_rows(x: &mut [f32], n: usize) {
 #[inline]
 pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
+}
+
+/// Fused SwiGLU activation: `g[i] = silu(g[i]) * u[i]` in place — one
+/// pass instead of materializing `silu(g)` and multiplying separately.
+pub fn silu_mul(g: &mut [f32], u: &[f32]) {
+    debug_assert_eq!(g.len(), u.len());
+    for (gv, &uv) in g.iter_mut().zip(u.iter()) {
+        *gv = silu(*gv) * uv;
+    }
 }
 
 /// Router scores: `softmax(rmsnorm(h, n2) @ w)` (ref.router_scores_ref).
@@ -99,29 +238,34 @@ pub fn rope(x: &mut [f32], heads: usize, hd: usize, pos: &[i32], theta: f32) {
     }
 }
 
-/// Decode attention over the slot-stable cache (ref.decode_attention_ref):
-/// GQA with `n_rep = Hq / Hkv`, causal mask `s <= pos[row]`, softmax over
-/// the visible prefix. `k_cache`/`v_cache` are `[B, S, Hkv, hd]` slices of
-/// the combined layer cache. Returns `[B, Hq, hd]`.
-#[allow(clippy::too_many_arguments)]
-pub fn decode_attention(
+/// Decode attention for a contiguous span of batch rows (the threadpool
+/// work item): GQA with `n_rep = Hq / Hkv`, causal mask `s <= pos[row]`,
+/// softmax over the visible prefix. `k_cache`/`v_cache` are the full
+/// `[B, S, Hkv, hd]` halves of the layer cache; `out` covers rows
+/// `row0 ..` (its length picks the span) and `logits` is caller scratch
+/// of at least `s_max` elements. Per-row math is independent of the
+/// span, so any chunking of the batch produces identical results.
+pub fn decode_attention_rows(
     q: &[f32],
     k_cache: &[f32],
     v_cache: &[f32],
-    b: usize,
     s_max: usize,
     hq: usize,
     hkv: usize,
     hd: usize,
     pos: &[i32],
-) -> Vec<f32> {
-    debug_assert_eq!(q.len(), b * hq * hd);
-    debug_assert_eq!(k_cache.len(), b * s_max * hkv * hd);
+    row0: usize,
+    out: &mut [f32],
+    logits: &mut [f32],
+) {
     let n_rep = hq / hkv;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = vec![0.0f32; b * hq * hd];
-    let mut logits = vec![0.0f32; s_max];
-    for i in 0..b {
+    let rows = out.len() / (hq * hd);
+    debug_assert!(logits.len() >= s_max);
+    debug_assert!(row0 + rows <= pos.len());
+    out.fill(0.0);
+    for li in 0..rows {
+        let i = row0 + li;
         let visible = (pos[i].max(0) as usize + 1).min(s_max);
         for h in 0..hq {
             let kvh = h / n_rep;
@@ -135,7 +279,7 @@ pub fn decode_attention(
                 *l = dot * scale;
             }
             softmax_rows(&mut logits[..visible], visible);
-            let orow = &mut out[(i * hq + h) * hd..(i * hq + h + 1) * hd];
+            let orow = &mut out[(li * hq + h) * hd..(li * hq + h + 1) * hd];
             for (s, &p) in logits[..visible].iter().enumerate() {
                 let vrow = &v_cache[((i * s_max + s) * hkv + kvh) * hd..][..hd];
                 for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
@@ -144,18 +288,41 @@ pub fn decode_attention(
             }
         }
     }
+}
+
+/// Whole-batch decode attention (ref.decode_attention_ref); allocating
+/// wrapper over [`decode_attention_rows`]. Returns `[B, Hq, hd]`.
+pub fn decode_attention(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    b: usize,
+    s_max: usize,
+    hq: usize,
+    hkv: usize,
+    hd: usize,
+    pos: &[i32],
+) -> Vec<f32> {
+    debug_assert_eq!(q.len(), b * hq * hd);
+    debug_assert_eq!(k_cache.len(), b * s_max * hkv * hd);
+    let mut out = vec![0.0f32; b * hq * hd];
+    let mut logits = vec![0.0f32; s_max];
+    decode_attention_rows(
+        q, k_cache, v_cache, s_max, hq, hkv, hd, pos, 0, &mut out, &mut logits,
+    );
     out
 }
 
-/// Gather-based grouped expert FFN (ref.moe_ffn_gathered): iterate the
-/// padded active list, `out += comb[:, e] * (silu(x@wg[e]) * (x@wu[e])) @
-/// wd[e]`. Zero-combine padding ids contribute nothing but still run their
-/// GEMMs — the measured work is proportional to `ids.len()` (the executed
-/// T bucket), exactly like the gathered device kernel. `x` is the
-/// already-normed input `[B, D]`; returns the FFN output `[B, D]` (the
-/// caller adds the residual).
-#[allow(clippy::too_many_arguments)]
-pub fn moe_ffn_gather(
+/// Gather-based grouped expert FFN (ref.moe_ffn_gathered), the
+/// correctness oracle for grouped dispatch: iterate the padded active
+/// list, `out += comb[:, e] * (silu(x@wg[e]) * (x@wu[e])) @ wd[e]`.
+/// Zero-combine padding ids contribute nothing but still run their
+/// full-batch GEMMs — the measured work is proportional to `ids.len() ·
+/// B` (the executed T bucket times the batch), exactly like the gathered
+/// device kernel. `x` is the already-normed input `[B, D]`; adds into
+/// `out [B, D]` (the caller owns the residual); `arena` supplies the
+/// GEMM scratch.
+pub fn moe_ffn_gather_into(
     x: &[f32],
     wg: &[f32],
     wu: &[f32],
@@ -166,23 +333,25 @@ pub fn moe_ffn_gather(
     d: usize,
     h: usize,
     n_experts: usize,
-) -> Vec<f32> {
+    out: &mut [f32],
+    arena: &mut Arena,
+) {
     debug_assert_eq!(x.len(), b * d);
     debug_assert_eq!(comb.len(), b * n_experts);
-    let mut out = vec![0.0f32; b * d];
+    debug_assert_eq!(out.len(), b * d);
+    let mut g = arena.take(b * h);
+    let mut u = arena.take(b * h);
+    let mut y = arena.take(b * d);
     for &id in ids {
         let e = id as usize;
         debug_assert!(e < n_experts);
         let wg_e = &wg[e * d * h..(e + 1) * d * h];
         let wu_e = &wu[e * d * h..(e + 1) * d * h];
         let wd_e = &wd[e * h * d..(e + 1) * h * d];
-        let g = matmul(x, wg_e, b, d, h);
-        let u = matmul(x, wu_e, b, d, h);
-        let mut act = vec![0.0f32; b * h];
-        for ((a, &gv), &uv) in act.iter_mut().zip(g.iter()).zip(u.iter()) {
-            *a = silu(gv) * uv;
-        }
-        let y = matmul(&act, wd_e, b, h, d);
+        matmul_into(x, wg_e, b, d, h, &mut g);
+        matmul_into(x, wu_e, b, d, h, &mut u);
+        silu_mul(&mut g, &u);
+        matmul_into(&g, wd_e, b, h, d, &mut y);
         for i in 0..b {
             let c = comb[i * n_experts + e];
             if c == 0.0 {
@@ -195,18 +364,178 @@ pub fn moe_ffn_gather(
             }
         }
     }
+    arena.put(y);
+    arena.put(u);
+    arena.put(g);
+}
+
+/// Allocating wrapper over [`moe_ffn_gather_into`]. Returns the FFN
+/// output `[B, D]` (the caller adds the residual).
+pub fn moe_ffn_gather(
+    x: &[f32],
+    wg: &[f32],
+    wu: &[f32],
+    wd: &[f32],
+    comb: &[f32],
+    ids: &[i32],
+    b: usize,
+    d: usize,
+    h: usize,
+    n_experts: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * d];
+    let mut arena = Arena::new();
+    moe_ffn_gather_into(x, wg, wu, wd, comb, ids, b, d, h, n_experts, &mut out, &mut arena);
     out
+}
+
+/// Token-grouped expert FFN over groups `g0..g1` of the work-list: for
+/// each expert, gather its routed rows from `x [B, D]` into a contiguous
+/// mini-batch, run the expert's SwiGLU FFN on just those rows through the
+/// packed panels, and scatter-add the combine-weighted result into
+/// `acc [B, D]`. Work is `Σ_g |rows(g)| · 3DH` — the routed load, not
+/// `T · B`. Groups must be processed in ascending-expert order for the
+/// per-token sums to match the gather oracle bitwise; `ExpertGroups`
+/// guarantees that order and disjoint `g0..g1` ranges preserve it.
+pub fn moe_ffn_groups(
+    x: &[f32],
+    wg: &PackedMat,
+    wu: &PackedMat,
+    wd: &PackedMat,
+    groups: &ExpertGroups,
+    g0: usize,
+    g1: usize,
+    acc: &mut [f32],
+    arena: &mut Arena,
+) {
+    let d = wg.k;
+    let h = wd.k;
+    let h_pad = wg.n_pad;
+    let d_pad = wd.n_pad;
+    debug_assert_eq!(wu.k, d);
+    debug_assert_eq!(wu.n_pad, h_pad);
+    debug_assert_eq!(wg.n, h);
+    debug_assert_eq!(wd.n, d);
+    debug_assert_eq!(acc.len() % d, 0);
+    let mut m_max = 0;
+    for gi in g0..g1 {
+        m_max = m_max.max(groups.group(gi).rows.len());
+    }
+    if m_max == 0 {
+        return;
+    }
+    let mut xg = arena.take(m_max * d);
+    let mut g = arena.take(m_max * h_pad);
+    let mut u = arena.take(m_max * h_pad);
+    let mut y = arena.take(m_max * d_pad);
+    for gi in g0..g1 {
+        let grp = groups.group(gi);
+        let m = grp.rows.len();
+        if m == 0 {
+            continue;
+        }
+        let e = grp.expert;
+        for (j, &r) in grp.rows.iter().enumerate() {
+            let r = r as usize;
+            xg[j * d..(j + 1) * d].copy_from_slice(&x[r * d..(r + 1) * d]);
+        }
+        matmul_packed(&xg[..m * d], d, wg.expert(e), d, h_pad, m, &mut g[..m * h_pad]);
+        matmul_packed(&xg[..m * d], d, wu.expert(e), d, h_pad, m, &mut u[..m * h_pad]);
+        silu_mul(&mut g[..m * h_pad], &u[..m * h_pad]);
+        matmul_packed(&g[..m * h_pad], h_pad, wd.expert(e), h, d_pad, m, &mut y[..m * d_pad]);
+        for (j, (&r, &w)) in grp.rows.iter().zip(grp.weights.iter()).enumerate() {
+            let r = r as usize;
+            let orow = &mut acc[r * d..(r + 1) * d];
+            let yrow = &y[j * d_pad..j * d_pad + d];
+            for (o, &yv) in orow.iter_mut().zip(yrow.iter()) {
+                *o += w * yv;
+            }
+        }
+    }
+    arena.put(y);
+    arena.put(u);
+    arena.put(g);
+    arena.put(xg);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::moe::policy::{route, Policy, RoutingInput};
+    use crate::moe::ScoreMatrix;
+    use crate::util::rng::Rng;
 
     #[test]
     fn matmul_identity() {
         let a = vec![1.0, 2.0, 3.0, 4.0];
         let id = vec![1.0, 0.0, 0.0, 1.0];
         assert_eq!(matmul(&a, &id, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_microkernel_matches_naive() {
+        // odd m exercises both the 4-row block and the remainder path
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in &[(1usize, 5usize, 3usize), (4, 8, 8), (7, 16, 24), (9, 3, 40)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.gaussian() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.gaussian() as f32).collect();
+            let got = matmul(&a, &b, m, k, n);
+            let mut want = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0f32;
+                    for kk in 0..k {
+                        s += a[i * k + kk] * b[kk * n + j];
+                    }
+                    want[i * n + j] = s;
+                }
+            }
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert!((g - w).abs() < 1e-4, "({m},{k},{n}): {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_pads_to_lanes_and_preserves_rows() {
+        // n = 5 pads to 8, with zeros beyond column 5
+        let raw: Vec<f32> = (0..2 * 3 * 5).map(|x| x as f32).collect();
+        let p = PackedMat::pack(&raw, 2, 3, 5);
+        assert_eq!(p.n_pad, 8);
+        let e1 = p.expert(1);
+        assert_eq!(e1.len(), 3 * 8);
+        assert_eq!(e1[0], raw[3 * 5]);
+        assert_eq!(&e1[5..8], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn matmul_packed_matches_dense_with_padding() {
+        let mut rng = Rng::new(4);
+        let (m, k, n) = (6usize, 7usize, 5usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gaussian() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gaussian() as f32).collect();
+        let p = PackedMat::pack(&b, 1, k, n);
+        let mut out = vec![1.0f32; m * p.n_pad]; // dirty: kernel must overwrite
+        matmul_packed(&a, k, p.expert(0), k, p.n_pad, m, &mut out);
+        let want = matmul(&a, &b, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let (g, w) = (out[i * p.n_pad + j], want[i * n + j]);
+                assert!((g - w).abs() < 1e-5, "[{i},{j}] {g} vs {w}");
+            }
+            for j in n..p.n_pad {
+                assert_eq!(out[i * p.n_pad + j], 0.0, "pad column leaked");
+            }
+        }
+    }
+
+    #[test]
+    fn silu_mul_fuses_activation() {
+        let mut g = vec![-1.0f32, 0.0, 2.0];
+        let u = vec![3.0f32, 5.0, -1.5];
+        let want: Vec<f32> = g.iter().zip(u.iter()).map(|(&gv, &uv)| silu(gv) * uv).collect();
+        silu_mul(&mut g, &u);
+        assert_eq!(g, want);
     }
 
     #[test]
@@ -266,6 +595,27 @@ mod tests {
     }
 
     #[test]
+    fn attention_row_spans_compose() {
+        // computing rows [0,2) and [2,4) separately must equal the whole
+        let (b, s, hq, hkv, hd) = (4usize, 6usize, 2usize, 1usize, 4usize);
+        let mut rng = Rng::new(9);
+        let q: Vec<f32> = (0..b * hq * hd).map(|_| rng.gaussian() as f32).collect();
+        let k: Vec<f32> = (0..b * s * hkv * hd).map(|_| rng.gaussian() as f32).collect();
+        let v: Vec<f32> = (0..b * s * hkv * hd).map(|_| rng.gaussian() as f32).collect();
+        let pos = vec![3i32, 0, 5, 2];
+        let whole = decode_attention(&q, &k, &v, b, s, hq, hkv, hd, &pos);
+        let mut parts = vec![0.0f32; b * hq * hd];
+        let mut logits = vec![0.0f32; s];
+        let half = 2 * hq * hd;
+        {
+            let (lo, hi) = parts.split_at_mut(half);
+            decode_attention_rows(&q, &k, &v, s, hq, hkv, hd, &pos, 0, lo, &mut logits);
+            decode_attention_rows(&q, &k, &v, s, hq, hkv, hd, &pos, 2, hi, &mut logits);
+        }
+        assert_eq!(whole, parts);
+    }
+
+    #[test]
     fn moe_padding_id_contributes_nothing() {
         let (b, d, h, n) = (2, 3, 4, 3);
         let x = vec![0.2f32; b * d];
@@ -280,6 +630,99 @@ mod tests {
         let bb = moe_ffn_gather(&x, &wg, &wu, &wd, &comb, &[0, 2, 2], b, d, h, n);
         for (x1, x2) in a.iter().zip(bb.iter()) {
             assert!((x1 - x2).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn grouped_ffn_matches_gather_oracle() {
+        let (b, d, h, n) = (5usize, 8usize, 6usize, 4usize);
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..b * d).map(|_| rng.gaussian() as f32).collect();
+        let wg: Vec<f32> = (0..n * d * h).map(|_| rng.gaussian() as f32 * 0.2).collect();
+        let wu: Vec<f32> = (0..n * d * h).map(|_| rng.gaussian() as f32 * 0.2).collect();
+        let wd: Vec<f32> = (0..n * h * d).map(|_| rng.gaussian() as f32 * 0.2).collect();
+        // random-ish sparse combine (some zero rows / zero entries)
+        let mut comb = vec![0.0f32; b * n];
+        for i in 0..b {
+            for e in 0..n {
+                if (i + e) % 3 != 0 {
+                    comb[i * n + e] = 0.1 + ((i * n + e) % 7) as f32 * 0.1;
+                }
+            }
+        }
+        let ids: Vec<i32> = (0..n as i32).collect();
+        let want = moe_ffn_gather(&x, &wg, &wu, &wd, &comb, &ids, b, d, h, n);
+        let pg = PackedMat::pack(&wg, n, d, h);
+        let pu = PackedMat::pack(&wu, n, d, h);
+        let pd = PackedMat::pack(&wd, n, h, d);
+        let groups = ExpertGroups::from_combine(&comb, &ids, b, n);
+        let mut acc = vec![0.0f32; b * d];
+        let mut arena = Arena::new();
+        moe_ffn_groups(&x, &pg, &pu, &pd, &groups, 0, groups.len(), &mut acc, &mut arena);
+        for (i, (g, w)) in acc.iter().zip(want.iter()).enumerate() {
+            assert!((g - w).abs() < 1e-5, "[{i}] grouped {g} vs gather {w}");
+        }
+        // split ranges (the parallel chunking) must also agree
+        let mut acc2 = vec![0.0f32; b * d];
+        let mid = groups.len() / 2;
+        moe_ffn_groups(&x, &pg, &pu, &pd, &groups, 0, mid, &mut acc2, &mut arena);
+        moe_ffn_groups(&x, &pg, &pu, &pd, &groups, mid, groups.len(), &mut acc2, &mut arena);
+        assert_eq!(acc, acc2);
+    }
+
+    #[test]
+    fn grouped_ffn_skips_unrouted_tokens() {
+        // a token with zero combine everywhere must not affect any output
+        let (b, d, h, n) = (3usize, 4usize, 4usize, 2usize);
+        let x = vec![0.5f32; b * d];
+        let wg = vec![0.1f32; n * d * h];
+        let wu = vec![0.2f32; n * d * h];
+        let wd = vec![0.3f32; n * h * d];
+        let mut comb = vec![0.0f32; b * n];
+        comb[0] = 1.0; // token 0 -> expert 0; tokens 1,2 unrouted
+        let pg = PackedMat::pack(&wg, n, d, h);
+        let pu = PackedMat::pack(&wu, n, d, h);
+        let pd = PackedMat::pack(&wd, n, h, d);
+        let groups = ExpertGroups::from_combine(&comb, &[0, 1], b, n);
+        assert_eq!(groups.routed_tokens(), 1);
+        let mut acc = vec![0.0f32; b * d];
+        let mut arena = Arena::new();
+        moe_ffn_groups(&x, &pg, &pu, &pd, &groups, 0, groups.len(), &mut acc, &mut arena);
+        assert!(acc[..d].iter().all(|&v| v != 0.0));
+        assert!(acc[d..].iter().all(|&v| v == 0.0), "unrouted rows touched");
+    }
+
+    #[test]
+    fn grouped_ffn_from_decision_route() {
+        // end-to-end through a routing decision, per-expert order stable
+        let scores = vec![
+            0.6, 0.3, 0.1, //
+            0.2, 0.5, 0.3, //
+        ];
+        let s = ScoreMatrix::new(2, 3, scores);
+        let live = vec![true; 2];
+        let d_route = route(
+            Policy::Vanilla { k: 2 },
+            &RoutingInput { scores: &s, live: &live, mask_padding: true },
+        );
+        let groups = ExpertGroups::from_decision(&d_route);
+        assert_eq!(groups.routed_tokens(), 4);
+        let (b, d, h, n) = (2usize, 4usize, 4usize, 3usize);
+        let mut rng = Rng::new(21);
+        let x: Vec<f32> = (0..b * d).map(|_| rng.gaussian() as f32).collect();
+        let wg: Vec<f32> = (0..n * d * h).map(|_| rng.gaussian() as f32 * 0.3).collect();
+        let wu: Vec<f32> = (0..n * d * h).map(|_| rng.gaussian() as f32 * 0.3).collect();
+        let wd: Vec<f32> = (0..n * h * d).map(|_| rng.gaussian() as f32 * 0.3).collect();
+        let ids: Vec<i32> = d_route.active.iter().map(|&e| e as i32).collect();
+        let want = moe_ffn_gather(&x, &wg, &wu, &wd, &d_route.combine, &ids, b, d, h, n);
+        let pg = PackedMat::pack(&wg, n, d, h);
+        let pu = PackedMat::pack(&wu, n, d, h);
+        let pd = PackedMat::pack(&wd, n, h, d);
+        let mut acc = vec![0.0f32; b * d];
+        let mut arena = Arena::new();
+        moe_ffn_groups(&x, &pg, &pu, &pd, &groups, 0, groups.len(), &mut acc, &mut arena);
+        for (g, w) in acc.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-5);
         }
     }
 }

@@ -1,9 +1,26 @@
-//! Hermetic pure-Rust CPU reference backend.
+//! Hermetic pure-Rust CPU backend.
 //!
 //! Mirrors the JAX model (`python/compile/model.py`) stage for stage using
-//! the reference kernels in [`kernels`]: embed, RoPE decode attention over
-//! the slot-stable KV cache, router score computation, and the
-//! gather-based grouped expert FFN with per-expert load accounting.
+//! the kernels in [`kernels`]: embed, RoPE decode attention over the
+//! slot-stable KV cache, router score computation, and the expert FFN.
+//!
+//! The MoE stage runs in one of two dispatch modes
+//! ([`DispatchMode`], a constructor flag):
+//!
+//! - **Grouped** (default): token-grouped expert dispatch — each active
+//!   expert's routed rows are gathered into a contiguous mini-batch, run
+//!   through pre-packed weight panels ([`kernels::PackedMat`]), and
+//!   scatter-added back weighted by combine. Per-step work is
+//!   `Σ_e |tokens(e)| · 3DH` (the routed load), expert groups and
+//!   attention batch rows execute in parallel over a
+//!   [`crate::util::threadpool::ThreadPool`], and all kernel scratch
+//!   comes from reusable arenas ([`crate::util::arena`]) so the hot loop
+//!   performs no per-step heap allocation once warm.
+//! - **Gather**: the original gathered-kernel oracle — every listed
+//!   expert runs full-batch GEMMs (`T_bucket · B · 3DH` work), matching
+//!   the gathered device kernel's cost model. Kept as the golden-pinned
+//!   correctness reference; the two modes agree within float tolerance
+//!   (see `rust/tests/dispatch_equivalence.rs`).
 //!
 //! Weights come from [`CpuBackend::synthetic`], the Rust port of
 //! `python/compile/weights.py`: seeded-random with *structure* — token
@@ -16,14 +33,68 @@
 
 pub mod kernels;
 
-use std::cell::RefCell;
+use std::sync::Mutex;
 
 use crate::backend::{Backend, LayerPre, Prefilled};
 use crate::config::ModelConfig;
+use crate::moe::dispatch::{ExpertGroups, RoutedStep};
 use crate::moe::policy::{self, Policy, RoutingInput};
 use crate::moe::ScoreMatrix;
+use crate::util::arena::{with_thread_arena, ScratchPool};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+
+use kernels::PackedMat;
+
+/// How `moe_apply` executes the expert FFN. See the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchMode {
+    /// Token-grouped dispatch (work ∝ routed load) — the fast default.
+    #[default]
+    Grouped,
+    /// Full-batch gathered kernel (work ∝ T bucket × B) — the oracle.
+    Gather,
+}
+
+/// Construction options for [`CpuBackend::synthetic_with`].
+#[derive(Debug, Clone, Copy)]
+pub struct CpuOptions {
+    pub dispatch: DispatchMode,
+    /// Worker threads for expert groups and attention rows: `0` = one
+    /// per available core, `1` = run inline (no pool).
+    pub threads: usize,
+}
+
+impl Default for CpuOptions {
+    fn default() -> Self {
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 0 }
+    }
+}
+
+impl CpuOptions {
+    /// Environment overrides for benches and A/B runs:
+    /// `OEA_DISPATCH=grouped|gather`, `OEA_THREADS=<n>`. Panics on
+    /// unrecognized values — a typo must not silently measure the wrong
+    /// dispatch mode.
+    pub fn from_env() -> CpuOptions {
+        let mut o = CpuOptions::default();
+        if let Ok(v) = std::env::var("OEA_DISPATCH") {
+            o.dispatch = match v.trim().to_ascii_lowercase().as_str() {
+                "gather" => DispatchMode::Gather,
+                "grouped" => DispatchMode::Grouped,
+                other => panic!("OEA_DISPATCH={other:?}: expected grouped|gather"),
+            };
+        }
+        if let Ok(v) = std::env::var("OEA_THREADS") {
+            o.threads = v
+                .trim()
+                .parse::<usize>()
+                .unwrap_or_else(|_| panic!("OEA_THREADS={v:?}: not an integer"));
+        }
+        o
+    }
+}
 
 /// One transformer layer's weights (shapes as in `weights.py`).
 pub struct LayerWeights {
@@ -49,6 +120,13 @@ pub struct LayerWeights {
     pub wd: Vec<f32>,
 }
 
+/// Pre-packed expert panels of one layer (grouped mode only).
+struct PackedLayer {
+    wg: PackedMat,
+    wu: PackedMat,
+    wd: PackedMat,
+}
+
 /// Per-layer KV cache of a decode batch: `[2, bucket, S, Hkv, hd]` per
 /// layer (K at index 0, V at index 1 — the PJRT layout, so repack logic
 /// and tests transfer unchanged).
@@ -72,9 +150,18 @@ pub struct CpuBackend {
     /// `[D]`
     pub final_norm: Vec<f32>,
     pub layers: Vec<LayerWeights>,
-    /// Cumulative token-expert assignments per expert id (telemetry for
-    /// load-balance analysis; counts decode and prefill work alike).
-    expert_load: RefCell<Vec<u64>>,
+    /// pre-transposed/padded expert panels, one per layer (grouped mode)
+    packed: Vec<PackedLayer>,
+    mode: DispatchMode,
+    /// worker pool for expert groups / attention rows (None = inline)
+    pool: Option<ThreadPool>,
+    /// shared scratch for buffers that cross threads or live across one
+    /// backend call (hidden-state temporaries, partial accumulators)
+    scratch: ScratchPool,
+    /// Cumulative routed (nonzero-combine) token-expert assignments per
+    /// expert id (telemetry for load-balance analysis; counts decode and
+    /// prefill work alike).
+    expert_load: Mutex<Vec<u64>>,
 }
 
 fn gauss(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -85,10 +172,39 @@ fn scaled(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
 }
 
+/// Contiguous group ranges balanced by routed-row count, preserving the
+/// ascending-expert order (so chunked execution sums in the same order
+/// as serial).
+fn chunk_groups(groups: &ExpertGroups, workers: usize) -> Vec<(usize, usize)> {
+    let ngroups = groups.len();
+    let nchunks = workers.min(ngroups).max(1);
+    let target = groups.routed_tokens().div_ceil(nchunks).max(1);
+    let mut out = Vec::with_capacity(nchunks);
+    let mut start = 0;
+    let mut acc = 0;
+    for gi in 0..ngroups {
+        acc += groups.group(gi).rows.len();
+        if acc >= target || gi == ngroups - 1 {
+            out.push((start, gi + 1));
+            start = gi + 1;
+            acc = 0;
+        }
+    }
+    out
+}
+
 impl CpuBackend {
-    /// Structured synthetic weights (the Rust port of `weights.py::init`).
-    /// Deterministic in `(cfg, seed)`.
+    /// Structured synthetic weights (the Rust port of `weights.py::init`)
+    /// with default options: grouped dispatch, one worker per core.
+    /// Deterministic in `(cfg, seed)` — the dispatch mode never changes
+    /// the weights.
     pub fn synthetic(cfg: ModelConfig, seed: u64) -> CpuBackend {
+        Self::synthetic_with(cfg, seed, CpuOptions::default())
+    }
+
+    /// Structured synthetic weights with explicit dispatch/threading
+    /// options ([`CpuOptions`]).
+    pub fn synthetic_with(cfg: ModelConfig, seed: u64, opts: CpuOptions) -> CpuBackend {
         let mut rng = Rng::new(seed ^ 0x5EED_CAFE_F00D);
         let (d, v, n, h) = (cfg.d_model, cfg.vocab, cfg.n_experts, cfg.d_expert);
         let (qd, kvd, nd) = (cfg.q_dim(), cfg.kv_dim(), cfg.n_domains);
@@ -161,30 +277,178 @@ impl CpuBackend {
             });
         }
 
+        let packed = match opts.dispatch {
+            DispatchMode::Grouped => layers
+                .iter()
+                .map(|lw| PackedLayer {
+                    wg: PackedMat::pack(&lw.wg, n, d, h),
+                    wu: PackedMat::pack(&lw.wu, n, d, h),
+                    wd: PackedMat::pack(&lw.wd, n, h, d),
+                })
+                .collect(),
+            DispatchMode::Gather => Vec::new(),
+        };
+
+        let workers = match opts.threads {
+            0 => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            t => t,
+        };
+        let pool = if workers > 1 { Some(ThreadPool::new(workers)) } else { None };
+
         CpuBackend {
-            expert_load: RefCell::new(vec![0u64; n]),
+            expert_load: Mutex::new(vec![0u64; n]),
             cfg,
             embed_w,
             unembed_w,
             final_norm,
             layers,
+            packed,
+            mode: opts.dispatch,
+            pool,
+            scratch: ScratchPool::new(),
         }
     }
 
-    /// Snapshot of cumulative per-expert token assignments.
+    pub fn dispatch_mode(&self) -> DispatchMode {
+        self.mode
+    }
+
+    /// Snapshot of cumulative per-expert routed-token counts.
     pub fn expert_loads(&self) -> Vec<u64> {
-        self.expert_load.borrow().clone()
+        self.expert_load.lock().unwrap().clone()
     }
 
     pub fn reset_expert_loads(&self) {
-        for x in self.expert_load.borrow_mut().iter_mut() {
+        for x in self.expert_load.lock().unwrap().iter_mut() {
             *x = 0;
         }
+    }
+
+    /// Fresh-allocation count of the backend's shared scratch pool
+    /// (stable across steps once warm; per-thread kernel arenas are
+    /// tracked separately via `util::arena::thread_arena_fresh_allocs`).
+    pub fn scratch_fresh_allocs(&self) -> u64 {
+        self.scratch.fresh_allocs()
     }
 
     /// `S * Hkv * hd` — one slot's cache row length.
     fn row_len(&self) -> usize {
         self.cfg.s_max * self.cfg.n_kv_heads * self.cfg.head_dim
+    }
+
+    /// Decode attention over the updated cache, expert rows fanned out
+    /// over the pool (per-row math is chunk-invariant, so any split is
+    /// bitwise-identical to serial).
+    fn attention(&self, q: &[f32], kc: &[f32], vc: &[f32], b: usize, pos: &[i32], out: &mut [f32]) {
+        let c = &self.cfg;
+        let (hq, hkv, hd) = (c.n_q_heads, c.n_kv_heads, c.head_dim);
+        let s_max = c.s_max;
+        let row = hq * hd;
+        let workers = self.pool.as_ref().map(|p| p.size()).unwrap_or(1);
+        let nchunks = workers.min(b).max(1);
+        if nchunks <= 1 {
+            with_thread_arena(|arena| {
+                let mut logits = arena.take(s_max);
+                kernels::decode_attention_rows(
+                    q, kc, vc, s_max, hq, hkv, hd, pos, 0, out, &mut logits,
+                );
+                arena.put(logits);
+            });
+            return;
+        }
+        let rows_per = b.div_ceil(nchunks);
+        let items: Vec<(usize, &mut [f32])> = out
+            .chunks_mut(rows_per * row)
+            .enumerate()
+            .map(|(ci, chunk)| (ci * rows_per, chunk))
+            .collect();
+        self.pool.as_ref().unwrap().scoped_map(items, |(start, chunk): (usize, &mut [f32])| {
+            with_thread_arena(|arena| {
+                let mut logits = arena.take(s_max);
+                kernels::decode_attention_rows(
+                    q, kc, vc, s_max, hq, hkv, hd, pos, start, chunk, &mut logits,
+                );
+                arena.put(logits);
+            });
+        });
+    }
+
+    /// Grouped-dispatch expert FFN + residual: `hidden + Σ_groups ...`.
+    fn moe_apply_grouped(
+        &self,
+        l: usize,
+        hidden: &[f32],
+        groups: &ExpertGroups,
+    ) -> Result<Vec<f32>> {
+        let c = &self.cfg;
+        let (d, n) = (c.d_model, c.n_experts);
+        let b = hidden.len() / d;
+        if groups.b != b || groups.n_experts != n {
+            return Err(Error::Engine(format!(
+                "moe groups shape [{}x{}] != batch [{}x{}]",
+                groups.b, groups.n_experts, b, n
+            )));
+        }
+        for grp in groups.iter() {
+            if grp.expert >= n {
+                return Err(Error::Engine(format!(
+                    "moe group expert {} out of range",
+                    grp.expert
+                )));
+            }
+        }
+        let lw = &self.layers[l];
+        let pk = &self.packed[l];
+        let mut hn = self.scratch.take(b * d);
+        kernels::rmsnorm_into(hidden, &lw.n2, d, c.rms_eps, &mut hn);
+        let mut acc = self.scratch.take(b * d);
+        let ngroups = groups.len();
+        let workers = self.pool.as_ref().map(|p| p.size()).unwrap_or(1);
+        if workers <= 1 || ngroups <= 1 {
+            with_thread_arena(|arena| {
+                kernels::moe_ffn_groups(
+                    &hn, &pk.wg, &pk.wu, &pk.wd, groups, 0, ngroups, &mut acc, arena,
+                );
+            });
+        } else {
+            let chunks = chunk_groups(groups, workers);
+            let scratch = &self.scratch;
+            let hn_ref = &hn;
+            let pool = self.pool.as_ref().unwrap();
+            let partials = pool.scoped_map(chunks, |(g0, g1): (usize, usize)| {
+                let mut part = scratch.take(b * d);
+                with_thread_arena(|arena| {
+                    kernels::moe_ffn_groups(
+                        hn_ref, &pk.wg, &pk.wu, &pk.wd, groups, g0, g1, &mut part, arena,
+                    );
+                });
+                part
+            });
+            // reduce in chunk order == ascending-expert order (see
+            // chunk_groups). Deterministic for a fixed worker count; a
+            // token whose 3+ experts straddle a chunk boundary sums with
+            // different float parenthesization than serial, so across
+            // thread counts agreement is to rounding (~ulp), not bitwise.
+            for part in partials {
+                for (o, &pv) in acc.iter_mut().zip(part.iter()) {
+                    *o += pv;
+                }
+                self.scratch.put(part);
+            }
+        }
+        {
+            let mut load = self.expert_load.lock().unwrap();
+            for grp in groups.iter() {
+                load[grp.expert] += grp.rows.len() as u64;
+            }
+        }
+        let mut out = hidden.to_vec();
+        for (o, &yv) in out.iter_mut().zip(acc.iter()) {
+            *o += yv;
+        }
+        self.scratch.put(acc);
+        self.scratch.put(hn);
+        Ok(out)
     }
 }
 
@@ -239,10 +503,15 @@ impl Backend for CpuBackend {
         let (d, qd, kvd) = (c.d_model, c.q_dim(), c.kv_dim());
         let (hq, hkv, hd) = (c.n_q_heads, c.n_kv_heads, c.head_dim);
 
-        let h1 = kernels::rmsnorm(hidden, &lw.n1, d, c.rms_eps);
-        let mut q = kernels::matmul(&h1, &lw.wq, b, d, qd);
-        let mut k = kernels::matmul(&h1, &lw.wk, b, d, kvd);
-        let v = kernels::matmul(&h1, &lw.wv, b, d, kvd);
+        let mut h1 = self.scratch.take(b * d);
+        kernels::rmsnorm_into(hidden, &lw.n1, d, c.rms_eps, &mut h1);
+        let mut q = self.scratch.take(b * qd);
+        let mut k = self.scratch.take(b * kvd);
+        let mut v = self.scratch.take(b * kvd);
+        kernels::matmul_into(&h1, &lw.wq, b, d, qd, &mut q);
+        kernels::matmul_into(&h1, &lw.wk, b, d, kvd, &mut k);
+        kernels::matmul_into(&h1, &lw.wv, b, d, kvd, &mut v);
+        self.scratch.put(h1);
         kernels::rope(&mut q, hq, hd, pos, c.rope_theta);
         kernels::rope(&mut k, hkv, hd, pos, c.rope_theta);
 
@@ -256,15 +525,23 @@ impl Backend for CpuBackend {
             cl[dst..dst + kvd].copy_from_slice(&k[i * kvd..(i + 1) * kvd]);
             cl[half + dst..half + dst + kvd].copy_from_slice(&v[i * kvd..(i + 1) * kvd]);
         }
+        self.scratch.put(k);
+        self.scratch.put(v);
 
-        // attention over the UPDATED cache (model.py layer_pre semantics)
+        // attention over the UPDATED cache (model.py layer_pre semantics),
+        // batch rows fanned out over the pool
         let (kc, vc) = cl.split_at(half);
-        let attn = kernels::decode_attention(&q, kc, vc, b, c.s_max, hq, hkv, hd, pos);
-        let ao = kernels::matmul(&attn, &lw.wo, b, qd, d);
+        let mut attn = self.scratch.take(b * qd);
+        self.attention(&q, kc, vc, b, pos, &mut attn);
+        self.scratch.put(q);
+        let mut ao = self.scratch.take(b * d);
+        kernels::matmul_into(&attn, &lw.wo, b, qd, d, &mut ao);
+        self.scratch.put(attn);
         let mut h_out = hidden.to_vec();
         for (o, &a) in h_out.iter_mut().zip(ao.iter()) {
             *o += a;
         }
+        self.scratch.put(ao);
         let scores =
             kernels::router_scores(&h_out, &lw.n2, &lw.router, b, d, c.n_experts, c.rms_eps);
         Ok(LayerPre { h: h_out, scores })
@@ -293,31 +570,67 @@ impl Backend for CpuBackend {
                 return Err(Error::Engine(format!("moe_apply expert id {id} out of range")));
             }
         }
-        let lw = &self.layers[l];
-        let hn = kernels::rmsnorm(hidden, &lw.n2, d, c.rms_eps);
-        let y = kernels::moe_ffn_gather(&hn, &lw.wg, &lw.wu, &lw.wd, combine, ids, b, d, h, n);
-        {
-            let mut load = self.expert_load.borrow_mut();
-            for rowc in combine.chunks_exact(n) {
-                for (e, &cv) in rowc.iter().enumerate() {
-                    if cv > 0.0 {
-                        load[e] += 1;
+        match self.mode {
+            DispatchMode::Grouped => {
+                let groups = ExpertGroups::from_combine(combine, ids, b, n);
+                self.moe_apply_grouped(l, hidden, &groups)
+            }
+            DispatchMode::Gather => {
+                let lw = &self.layers[l];
+                let mut hn = self.scratch.take(b * d);
+                kernels::rmsnorm_into(hidden, &lw.n2, d, c.rms_eps, &mut hn);
+                let mut y = self.scratch.take(b * d);
+                with_thread_arena(|arena| {
+                    kernels::moe_ffn_gather_into(
+                        &hn, &lw.wg, &lw.wu, &lw.wd, combine, ids, b, d, h, n, &mut y, arena,
+                    );
+                });
+                {
+                    // telemetry: routed (nonzero-combine) tokens of the
+                    // experts the kernel actually executed (those in
+                    // `ids`), so the histogram matches grouped dispatch
+                    // on identical inputs
+                    let mut active = vec![false; n];
+                    for &id in ids {
+                        active[id as usize] = true;
+                    }
+                    let mut load = self.expert_load.lock().unwrap();
+                    for rowc in combine.chunks_exact(n) {
+                        for (e, &cv) in rowc.iter().enumerate() {
+                            if active[e] && cv != 0.0 {
+                                load[e] += 1;
+                            }
+                        }
                     }
                 }
+                let mut out = hidden.to_vec();
+                for (o, &yv) in out.iter_mut().zip(y.iter()) {
+                    *o += yv;
+                }
+                self.scratch.put(y);
+                self.scratch.put(hn);
+                Ok(out)
             }
         }
-        let mut out = hidden.to_vec();
-        for (o, &yv) in out.iter_mut().zip(y.iter()) {
-            *o += yv;
+    }
+
+    fn moe_apply_routed(&self, l: usize, hidden: &[f32], step: &RoutedStep) -> Result<Vec<f32>> {
+        match self.mode {
+            // the serving path: groups come straight from the routing
+            // decision, no dense combine scan needed
+            DispatchMode::Grouped => self.moe_apply_grouped(l, hidden, step.groups),
+            DispatchMode::Gather => self.moe_apply(l, hidden, step.combine, step.ids),
         }
-        Ok(out)
     }
 
     fn logits(&self, hidden: &[f32]) -> Result<Vec<f32>> {
         let (d, v) = (self.cfg.d_model, self.cfg.vocab);
         let b = hidden.len() / d;
-        let hn = kernels::rmsnorm(hidden, &self.final_norm, d, self.cfg.rms_eps);
-        Ok(kernels::matmul(&hn, &self.unembed_w, b, d, v))
+        let mut hn = self.scratch.take(b * d);
+        kernels::rmsnorm_into(hidden, &self.final_norm, d, self.cfg.rms_eps, &mut hn);
+        let out = kernels::matmul(&hn, &self.unembed_w, b, d, v);
+        self.scratch.put(hn);
+        Ok(out)
     }
 
     /// Teacher-forced prefill: the prompt runs through the decode path one
@@ -439,6 +752,14 @@ mod tests {
         CpuBackend::synthetic(ModelConfig::preset("tiny").unwrap(), 0)
     }
 
+    fn backend_with(dispatch: DispatchMode, threads: usize) -> CpuBackend {
+        CpuBackend::synthetic_with(
+            ModelConfig::preset("tiny").unwrap(),
+            0,
+            CpuOptions { dispatch, threads },
+        )
+    }
+
     #[test]
     fn synthetic_weights_are_deterministic() {
         let a = backend();
@@ -447,6 +768,10 @@ mod tests {
         assert_eq!(a.layers[0].router, b.layers[0].router);
         let c = CpuBackend::synthetic(ModelConfig::preset("tiny").unwrap(), 1);
         assert_ne!(a.embed_w, c.embed_w);
+        // dispatch mode never changes the weights
+        let g = backend_with(DispatchMode::Gather, 1);
+        assert_eq!(a.embed_w, g.embed_w);
+        assert_eq!(a.layers[1].wg, g.layers[1].wg);
     }
 
     #[test]
@@ -469,31 +794,98 @@ mod tests {
 
     #[test]
     fn expert_load_accounting_counts_assignments() {
-        let be = backend();
-        let c = be.config().clone();
-        let n = c.n_experts;
-        let b = 2;
-        let hidden = vec![0.1f32; b * c.d_model];
-        let mut combine = vec![0.0f32; b * n];
-        combine[0] = 0.6;
-        combine[1] = 0.4;
-        combine[n + 2] = 1.0;
-        be.moe_apply(0, &hidden, &combine, &[0, 1, 2]).unwrap();
-        let loads = be.expert_loads();
-        assert_eq!(loads[0], 1);
-        assert_eq!(loads[1], 1);
-        assert_eq!(loads[2], 1);
-        assert_eq!(loads.iter().sum::<u64>(), 3);
-        be.reset_expert_loads();
-        assert_eq!(be.expert_loads().iter().sum::<u64>(), 0);
+        for be in [backend_with(DispatchMode::Grouped, 1), backend_with(DispatchMode::Gather, 1)]
+        {
+            let c = be.config().clone();
+            let n = c.n_experts;
+            let b = 2;
+            let hidden = vec![0.1f32; b * c.d_model];
+            let mut combine = vec![0.0f32; b * n];
+            combine[0] = 0.6;
+            combine[1] = 0.4;
+            combine[n + 2] = 1.0;
+            be.moe_apply(0, &hidden, &combine, &[0, 1, 2]).unwrap();
+            let loads = be.expert_loads();
+            assert_eq!(loads[0], 1);
+            assert_eq!(loads[1], 1);
+            assert_eq!(loads[2], 1);
+            assert_eq!(loads.iter().sum::<u64>(), 3);
+            be.reset_expert_loads();
+            assert_eq!(be.expert_loads().iter().sum::<u64>(), 0);
+        }
     }
 
     #[test]
     fn moe_rejects_out_of_range_ids() {
-        let be = backend();
+        for be in [backend_with(DispatchMode::Grouped, 1), backend_with(DispatchMode::Gather, 1)]
+        {
+            let c = be.config().clone();
+            let hidden = vec![0.0f32; c.d_model];
+            let combine = vec![0.0f32; c.n_experts];
+            assert!(be.moe_apply(0, &hidden, &combine, &[c.n_experts as i32]).is_err());
+        }
+    }
+
+    #[test]
+    fn grouped_matches_gather_per_layer() {
+        // one moe_apply under each mode (and threaded vs inline) agrees
+        let grouped = backend_with(DispatchMode::Grouped, 1);
+        let threaded = backend_with(DispatchMode::Grouped, 3);
+        let gather = backend_with(DispatchMode::Gather, 1);
+        let c = grouped.config().clone();
+        let (b, n) = (4usize, c.n_experts);
+        let hidden: Vec<f32> =
+            (0..b * c.d_model).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let mut combine = vec![0.0f32; b * n];
+        // tokens spread over experts, one token unrouted
+        combine[0] = 0.7;
+        combine[1] = 0.3;
+        combine[n + 1] = 0.5;
+        combine[n + 4] = 0.5;
+        combine[2 * n + 4] = 1.0;
+        let ids = [0i32, 1, 4, 6]; // 6 is active-but-unused padding
+        let a = gather.moe_apply(1, &hidden, &combine, &ids).unwrap();
+        let g1 = grouped.moe_apply(1, &hidden, &combine, &ids).unwrap();
+        let g2 = threaded.moe_apply(1, &hidden, &combine, &ids).unwrap();
+        for ((x, y), z) in a.iter().zip(g1.iter()).zip(g2.iter()) {
+            assert!((x - y).abs() < 1e-4, "grouped {y} vs gather {x}");
+            assert!((y - z).abs() < 1e-6, "threaded {z} vs inline {y}");
+        }
+        // the unrouted padding row passes through as pure residual
+        assert_eq!(&g1[3 * c.d_model..], &hidden[3 * c.d_model..]);
+    }
+
+    #[test]
+    fn grouped_scratch_reaches_steady_state() {
+        use crate::util::arena::thread_arena_fresh_allocs;
+        let be = backend_with(DispatchMode::Grouped, 1);
         let c = be.config().clone();
-        let hidden = vec![0.0f32; c.d_model];
-        let combine = vec![0.0f32; c.n_experts];
-        assert!(be.moe_apply(0, &hidden, &combine, &[c.n_experts as i32]).is_err());
+        let (b, n, d) = (4usize, c.n_experts, c.d_model);
+        let hidden = vec![0.05f32; b * d];
+        // warmup: dense combine maximizes every group, sizing all scratch
+        let combine_full = vec![1.0f32 / n as f32; b * n];
+        let all_ids: Vec<i32> = (0..n as i32).collect();
+        let mut cache = be.new_cache(b).unwrap();
+        let pos = vec![0i32; b];
+        for _ in 0..3 {
+            be.layer_pre(0, &hidden, &mut cache, &pos).unwrap();
+            be.moe_apply(0, &hidden, &combine_full, &all_ids).unwrap();
+        }
+        let pool0 = be.scratch_fresh_allocs();
+        let thread0 = thread_arena_fresh_allocs();
+        for _ in 0..8 {
+            be.layer_pre(0, &hidden, &mut cache, &pos).unwrap();
+            be.moe_apply(0, &hidden, &combine_full, &all_ids).unwrap();
+        }
+        assert_eq!(
+            be.scratch_fresh_allocs(),
+            pool0,
+            "shared scratch allocated after warmup"
+        );
+        assert_eq!(
+            thread_arena_fresh_allocs(),
+            thread0,
+            "thread arena allocated after warmup"
+        );
     }
 }

@@ -25,6 +25,7 @@ pub mod cpu;
 pub mod pjrt;
 
 use crate::config::ModelConfig;
+use crate::moe::dispatch::RoutedStep;
 use crate::util::error::Result;
 
 /// Output of one layer's pre-MoE work (attention sub-block + router).
@@ -87,6 +88,15 @@ pub trait Backend {
         combine: &[f32],
         ids: &[i32],
     ) -> Result<Vec<f32>>;
+
+    /// MoE sub-block given the full routing artifacts of one step (the
+    /// serving path). Backends that execute per-expert token groups (the
+    /// CPU backend's grouped dispatch) override this to consume
+    /// `step.groups` directly; the default falls back to the dense
+    /// `[combine, ids]` calling convention of [`Backend::moe_apply`].
+    fn moe_apply_routed(&self, l: usize, hidden: &[f32], step: &RoutedStep) -> Result<Vec<f32>> {
+        self.moe_apply(l, hidden, step.combine, step.ids)
+    }
 
     /// Final norm + unembedding: `hidden [B, d_model] -> logits [B, vocab]`.
     fn logits(&self, hidden: &[f32]) -> Result<Vec<f32>>;

@@ -3,7 +3,13 @@
 //! This is the request-path glue between backend execution and the routing
 //! engine: per decode step it runs
 //!
-//!   embed -> [ layer_pre -> route() -> moe_apply ] x L -> logits
+//!   embed -> [ layer_pre -> route() -> moe_apply_routed ] x L -> logits
+//!
+//! where `moe_apply_routed` receives the routing decision in every
+//! representation a backend might execute — the token-grouped per-expert
+//! work-list (`moe::dispatch::ExpertGroups`, built here once per layer)
+//! plus the dense combine matrix and padded active list for gather-style
+//! kernels —
 //!
 //! with the KV caches living backend-side inside [`DecodeBatch`]
 //! (slot-stable across steps; membership changes use `install_prefilled` /
@@ -16,6 +22,7 @@ use std::time::Instant;
 
 use crate::backend::{Backend, Prefilled};
 use crate::config::ModelConfig;
+use crate::moe::dispatch::{ExpertGroups, RoutedStep};
 use crate::moe::policy::{self, Policy, RoutingInput};
 use crate::moe::ScoreMatrix;
 use crate::util::error::{Error, Result};
@@ -34,6 +41,8 @@ pub type PrefilledSeq<B> = Prefilled<<B as Backend>::Rows>;
 pub struct LayerStep {
     pub t: usize,
     pub t_bucket: usize,
+    /// routed (nonzero-combine) token-expert assignments, `Σ_e |tokens(e)|`
+    /// — the grouped dispatch path's actual work for this layer
     pub load: usize,
     /// measured wall µs of the MoE stage execution only
     pub moe_us: f64,
@@ -104,17 +113,16 @@ impl<B: Backend> ModelRunner<B> {
             let ids = pad_active_list(&d.active, t_bucket, c.n_experts);
             let route_us = t0.elapsed().as_secs_f64() * 1e6;
 
+            // grouped-dispatch work-list from the decision; building it is
+            // part of the MoE stage cost, so it runs inside the timer
             let t0 = Instant::now();
-            hidden = self.backend.moe_apply(l, &pre.h, &d.combine, &ids)?;
+            let groups = ExpertGroups::from_decision(&d);
+            let load = groups.routed_tokens();
+            let step = RoutedStep { groups: &groups, combine: &d.combine, ids: &ids };
+            hidden = self.backend.moe_apply_routed(l, &pre.h, &step)?;
             let moe_us = t0.elapsed().as_secs_f64() * 1e6;
 
-            layers.push(LayerStep {
-                t: d.t(),
-                t_bucket,
-                load: d.sets.iter().map(|s| s.len()).sum(),
-                moe_us,
-                route_us,
-            });
+            layers.push(LayerStep { t: d.t(), t_bucket, load, moe_us, route_us });
         }
 
         let logits = self.backend.logits(&hidden)?;

@@ -1,0 +1,305 @@
+//! Token-grouped expert dispatch: the per-expert work-list for one decode
+//! step.
+//!
+//! The gather-style device kernel runs every active expert over the whole
+//! `[B, D]` batch, so measured MoE cost is `T_bucket · B · 3DH` even
+//! though most tokens carry zero combine weight for most experts. Real
+//! MoE serving kernels instead gather each expert's routed rows into a
+//! contiguous mini-batch, run the expert FFN on just those rows, and
+//! scatter-add back — per-step work `Σ_e |tokens(e)| · 3DH`, the quantity
+//! the paper's routing policies actually shrink.
+//!
+//! [`ExpertGroups`] is that work-list in CSR form: for each active expert
+//! (ascending id) the row indices of its routed tokens plus their combine
+//! weights. Built either from a [`RoutingDecision`] (the serving path —
+//! sets are sparse, so this is `O(load)`) or from the dense
+//! `[combine, ids]` calling convention of `Backend::moe_apply`. A token
+//! counts as routed to an expert only when its combine weight is nonzero,
+//! so padding ids and §6-style zero-weight assignments dispatch nothing
+//! and per-expert load telemetry stays honest under either constructor.
+
+use crate::moe::policy::RoutingDecision;
+
+/// Per-expert token groups of one (layer, step), CSR over
+/// `(rows, weights)`; experts appear in ascending id order so grouped
+/// execution applies each token's experts in the same order as the
+/// gather kernel's ascending active list (bitwise-reproducible sums).
+#[derive(Debug, Clone)]
+pub struct ExpertGroups {
+    /// token rows in the step's batch (`B`)
+    pub b: usize,
+    /// expert-axis width the combine rows were laid out with
+    pub n_experts: usize,
+    experts: Vec<u16>,
+    offsets: Vec<u32>,
+    rows: Vec<u32>,
+    weights: Vec<f32>,
+}
+
+/// One expert's routed mini-batch.
+pub struct Group<'a> {
+    pub expert: usize,
+    /// token row indices, ascending
+    pub rows: &'a [u32],
+    /// combine weight per row (all nonzero)
+    pub weights: &'a [f32],
+}
+
+impl ExpertGroups {
+    /// CSR shell from per-expert counts; returns the per-expert write
+    /// cursors for the fill pass.
+    fn shell(b: usize, n: usize, count: &[u32]) -> (ExpertGroups, Vec<usize>) {
+        let mut experts = Vec::new();
+        let mut offsets = vec![0u32];
+        let mut cursor = vec![usize::MAX; n];
+        let mut total = 0u32;
+        for (e, &c) in count.iter().enumerate() {
+            if c > 0 {
+                cursor[e] = total as usize;
+                experts.push(e as u16);
+                total += c;
+                offsets.push(total);
+            }
+        }
+        let g = ExpertGroups {
+            b,
+            n_experts: n,
+            experts,
+            offsets,
+            rows: vec![0u32; total as usize],
+            weights: vec![0.0f32; total as usize],
+        };
+        (g, cursor)
+    }
+
+    /// Build groups straight from a routing decision (`O(load)`): walk
+    /// each token's expert set and keep the nonzero-combine assignments.
+    pub fn from_decision(d: &RoutingDecision) -> ExpertGroups {
+        let (b, n) = (d.b, d.n);
+        debug_assert_eq!(d.sets.len(), b);
+        debug_assert_eq!(d.combine.len(), b * n);
+        let mut count = vec![0u32; n];
+        for (i, set) in d.sets.iter().enumerate() {
+            for &e in set {
+                if d.combine[i * n + e as usize] != 0.0 {
+                    count[e as usize] += 1;
+                }
+            }
+        }
+        let (mut g, mut cursor) = Self::shell(b, n, &count);
+        for (i, set) in d.sets.iter().enumerate() {
+            for &e in set {
+                let w = d.combine[i * n + e as usize];
+                if w != 0.0 {
+                    let c = &mut cursor[e as usize];
+                    g.rows[*c] = i as u32;
+                    g.weights[*c] = w;
+                    *c += 1;
+                }
+            }
+        }
+        g
+    }
+
+    /// Build groups from the dense `[B, N]` combine matrix plus the padded
+    /// active list `ids` (the `Backend::moe_apply` calling convention).
+    /// Duplicate and out-of-range ids are ignored; only nonzero-combine
+    /// entries of listed experts dispatch.
+    pub fn from_combine(combine: &[f32], ids: &[i32], b: usize, n: usize) -> ExpertGroups {
+        debug_assert_eq!(combine.len(), b * n);
+        let mut active = vec![false; n];
+        for &id in ids {
+            if id >= 0 && (id as usize) < n {
+                active[id as usize] = true;
+            }
+        }
+        let mut count = vec![0u32; n];
+        for (e, a) in active.iter().enumerate() {
+            if !a {
+                continue;
+            }
+            for i in 0..b {
+                if combine[i * n + e] != 0.0 {
+                    count[e] += 1;
+                }
+            }
+        }
+        let (mut g, mut cursor) = Self::shell(b, n, &count);
+        for (e, a) in active.iter().enumerate() {
+            if !a {
+                continue;
+            }
+            for i in 0..b {
+                let w = combine[i * n + e];
+                if w != 0.0 {
+                    let c = &mut cursor[e];
+                    g.rows[*c] = i as u32;
+                    g.weights[*c] = w;
+                    *c += 1;
+                }
+            }
+        }
+        g
+    }
+
+    /// Number of expert groups (= active experts with at least one routed
+    /// token).
+    pub fn len(&self) -> usize {
+        self.experts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.experts.is_empty()
+    }
+
+    /// Total routed (nonzero-combine) token-expert assignments — the
+    /// grouped path's actual work, `Σ_e |tokens(e)|`.
+    pub fn routed_tokens(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Largest group size (rows of the busiest expert) — sizes scratch.
+    pub fn max_group_rows(&self) -> usize {
+        (0..self.len())
+            .map(|gi| (self.offsets[gi + 1] - self.offsets[gi]) as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn group(&self, gi: usize) -> Group<'_> {
+        let (s, e) = (self.offsets[gi] as usize, self.offsets[gi + 1] as usize);
+        Group {
+            expert: self.experts[gi] as usize,
+            rows: &self.rows[s..e],
+            weights: &self.weights[s..e],
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Group<'_>> {
+        (0..self.len()).map(move |gi| self.group(gi))
+    }
+
+    /// Routed-token count per expert id over the full `[0, N)` axis
+    /// (load-balance telemetry).
+    pub fn load_histogram(&self) -> Vec<u32> {
+        let mut hist = vec![0u32; self.n_experts];
+        for gi in 0..self.len() {
+            hist[self.experts[gi] as usize] = self.offsets[gi + 1] - self.offsets[gi];
+        }
+        hist
+    }
+}
+
+/// One decode step's routing artifacts in every representation a backend
+/// might want: the CSR groups (grouped dispatch), the dense combine
+/// matrix, and the padded active-expert list (gather kernels, PJRT).
+pub struct RoutedStep<'a> {
+    pub groups: &'a ExpertGroups,
+    /// `[B, N]` renormalized combine matrix
+    pub combine: &'a [f32],
+    /// active list padded to the executed T bucket
+    pub ids: &'a [i32],
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::policy::{route, Policy, RoutingInput};
+    use crate::moe::ScoreMatrix;
+
+    fn fixture() -> ScoreMatrix {
+        #[rustfmt::skip]
+        let scores = vec![
+            0.40, 0.30, 0.10, 0.08, 0.05, 0.04, 0.02, 0.01,
+            0.35, 0.05, 0.30, 0.15, 0.05, 0.04, 0.03, 0.03,
+            0.02, 0.03, 0.05, 0.10, 0.40, 0.25, 0.10, 0.05,
+            0.05, 0.40, 0.05, 0.05, 0.05, 0.10, 0.25, 0.05,
+        ];
+        ScoreMatrix::new(4, 8, scores)
+    }
+
+    fn decision() -> RoutingDecision {
+        let s = fixture();
+        let live = vec![true; 4];
+        route(
+            Policy::Vanilla { k: 2 },
+            &RoutingInput { scores: &s, live: &live, mask_padding: true },
+        )
+    }
+
+    #[test]
+    fn groups_mirror_decision_sets() {
+        let d = decision();
+        let g = ExpertGroups::from_decision(&d);
+        // vanilla k=2 over the fixture: active = {0,1,2,4,5,6}
+        let experts: Vec<usize> = g.iter().map(|grp| grp.expert).collect();
+        assert_eq!(experts, vec![0, 1, 2, 4, 5, 6]);
+        assert_eq!(g.routed_tokens(), 8); // 4 tokens x k=2
+        // expert 0 serves tokens 0 and 1
+        let g0 = g.group(0);
+        assert_eq!(g0.rows, &[0, 1]);
+        for (&r, &w) in g0.rows.iter().zip(g0.weights.iter()) {
+            let expect = d.combine[r as usize * d.n];
+            assert_eq!(w, expect);
+            assert!(w > 0.0);
+        }
+        assert_eq!(g.max_group_rows(), 2);
+        let hist = g.load_histogram();
+        assert_eq!(hist[0], 2);
+        assert_eq!(hist[3], 0);
+        assert_eq!(hist.iter().sum::<u32>() as usize, g.routed_tokens());
+    }
+
+    #[test]
+    fn from_combine_matches_from_decision() {
+        let d = decision();
+        let ids: Vec<i32> = d.active.iter().map(|&e| e as i32).collect();
+        let a = ExpertGroups::from_decision(&d);
+        let b = ExpertGroups::from_combine(&d.combine, &ids, d.b, d.n);
+        assert_eq!(a.experts, b.experts);
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn padding_ids_dispatch_nothing() {
+        let d = decision();
+        // pad with expert 3 (inactive) and a duplicate + out-of-range id
+        let mut ids: Vec<i32> = d.active.iter().map(|&e| e as i32).collect();
+        ids.extend([3, 3, -1, 99]);
+        let g = ExpertGroups::from_combine(&d.combine, &ids, d.b, d.n);
+        let experts: Vec<usize> = g.iter().map(|grp| grp.expert).collect();
+        assert_eq!(experts, vec![0, 1, 2, 4, 5, 6]);
+        assert_eq!(g.routed_tokens(), 8);
+    }
+
+    #[test]
+    fn zero_combine_assignments_are_not_routed() {
+        // an expert listed in ids with no combine mass anywhere: no group
+        let combine = vec![0.5, 0.0, 0.5, 0.0, 1.0, 0.0, 0.0, 0.0];
+        let g = ExpertGroups::from_combine(&combine, &[0, 1, 2, 3], 2, 4);
+        let experts: Vec<usize> = g.iter().map(|grp| grp.expert).collect();
+        assert_eq!(experts, vec![0, 2]);
+        assert_eq!(g.group(0).rows, &[0, 1]);
+        assert_eq!(g.group(1).rows, &[0]);
+        assert_eq!(g.routed_tokens(), 3);
+    }
+
+    #[test]
+    fn padding_rows_absent_from_groups() {
+        let s = fixture();
+        let live = vec![true, false, false, true];
+        let d = route(
+            Policy::Vanilla { k: 2 },
+            &RoutingInput { scores: &s, live: &live, mask_padding: true },
+        );
+        let g = ExpertGroups::from_decision(&d);
+        assert_eq!(g.routed_tokens(), 4);
+        for grp in g.iter() {
+            for &r in grp.rows {
+                assert!(r == 0 || r == 3, "padding row {r} dispatched");
+            }
+        }
+    }
+}

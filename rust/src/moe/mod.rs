@@ -14,13 +14,18 @@
 //! - `DynSkip` (Lu et al. 2024 — per-token score-ratio skipping),
 //! - `ExpertChoice` (Zhou et al. 2022).
 //!
-//! plus the §7 expert-parallel extension in [`ep`].
+//! plus the §7 expert-parallel extension in [`ep`] and, in [`dispatch`],
+//! the token-grouped per-expert work-list ([`ExpertGroups`]) that the CPU
+//! backend's grouped dispatch path executes so per-step MoE cost scales
+//! with the routed load `Σ_e |tokens(e)|` rather than `T · B`.
 
+pub mod dispatch;
 pub mod ep;
 pub mod masks;
 pub mod policy;
 pub mod scores;
 
+pub use dispatch::{ExpertGroups, RoutedStep};
 pub use masks::ExpertMask;
 pub use policy::{Policy, RoutingDecision, RoutingInput};
 pub use scores::ScoreMatrix;

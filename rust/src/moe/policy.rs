@@ -310,10 +310,13 @@ fn route_lynx(input: &RoutingInput, k: usize, target_t: usize) -> RoutingDecisio
     }
     let mut kept = union.clone();
     let mut candidates: Vec<usize> = union.iter_ids().collect();
+    // total_cmp: router scores are softmax outputs, but a NaN that leaks
+    // through (overflow upstream, hand-built matrices in tests) must not
+    // panic the serving path mid-request
     candidates.sort_by(|&a, &b| {
         popularity[a]
             .cmp(&popularity[b])
-            .then(mass[a].partial_cmp(&mass[b]).unwrap())
+            .then(mass[a].total_cmp(&mass[b]))
     });
     for &e in &candidates {
         if kept.count() <= target_t {
@@ -380,9 +383,8 @@ fn route_expert_choice(input: &RoutingInput, capacity: usize) -> RoutingDecision
     for e in 0..s.n {
         col.clear();
         col.extend((0..s.b).filter(|&i| is_live(input, i)));
-        col.sort_by(|&a, &b| {
-            s.score(b, e).partial_cmp(&s.score(a, e)).unwrap()
-        });
+        // NaN-safe (see route_lynx): total_cmp instead of partial_cmp
+        col.sort_by(|&a, &b| s.score(b, e).total_cmp(&s.score(a, e)));
         for &i in col.iter().take(capacity) {
             per[i].set(e);
             union.set(e);
@@ -621,6 +623,31 @@ mod tests {
         assert!(Policy::from_cli("oea:k0", 8, 128).is_err()); // missing '='
         assert!(Policy::from_cli("oea:k0=x", 8, 128).is_err()); // not an int
         assert!(Policy::from_cli("dynskip:tau=abc", 8, 128).is_err());
+    }
+
+    #[test]
+    fn nan_scores_do_not_panic_any_policy() {
+        // regression: route_lynx / route_expert_choice used
+        // partial_cmp().unwrap(), which panics on NaN scores
+        let mut scores = vec![0.1f32; 4 * 8];
+        scores[0] = f32::NAN; // token 0, expert 0
+        scores[8 + 3] = f32::NAN; // token 1, expert 3
+        let s = ScoreMatrix::new(4, 8, scores);
+        let live = live4();
+        for pol in [
+            Policy::Vanilla { k: 2 },
+            Policy::Pruned { k0: 2, p: 0.7 },
+            Policy::OeaSimplified { k0: 1, k: 3 },
+            Policy::Oea { k0: 1, p: 0.9, k_max: 3, max_p: 8 },
+            Policy::Lynx { k: 2, target_t: 3 },
+            Policy::DynSkip { k: 2, tau: 0.5 },
+            Policy::ExpertChoice { capacity: 2 },
+        ] {
+            let d = route(pol, &input(&s, &live));
+            // whatever the NaN rows produced, the outputs stay well-formed
+            assert_eq!(d.sets.len(), 4);
+            assert_eq!(d.combine.len(), 4 * 8);
+        }
     }
 
     #[test]

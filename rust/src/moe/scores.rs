@@ -21,12 +21,10 @@ impl ScoreMatrix {
         for i in 0..b {
             let row = &scores[i * n..(i + 1) * n];
             idx.iter_mut().enumerate().for_each(|(j, v)| *v = j as u16);
-            // stable sort: deterministic tie-breaking by expert id
-            idx.sort_by(|&a, &bb| {
-                row[bb as usize]
-                    .partial_cmp(&row[a as usize])
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            });
+            // stable sort: deterministic tie-breaking by expert id.
+            // total_cmp keeps the ordering total (and the downstream
+            // policy sorts panic-free) even if a NaN score leaks in.
+            idx.sort_by(|&a, &bb| row[bb as usize].total_cmp(&row[a as usize]));
             order[i * n..(i + 1) * n].copy_from_slice(&idx);
         }
         ScoreMatrix { b, n, scores, order }

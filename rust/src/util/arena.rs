@@ -1,0 +1,238 @@
+//! Reusable f32 scratch buffers for the decode hot path.
+//!
+//! The CPU backend's kernels used to allocate a fresh `Vec` per GEMM /
+//! attention / expert-FFN call — dozens of heap round-trips per decode
+//! step. [`Arena`] is a tiny free-list allocator: `take(len)` hands out a
+//! zero-filled buffer (recycling the best-fitting previous one), `put`
+//! returns it. Capacities only grow, so after a warmup step every `take`
+//! is a memset into an existing allocation and the hot loop performs no
+//! heap allocation at all — `fresh_allocs()` makes that a testable
+//! property.
+//!
+//! Two deployment shapes:
+//! - [`with_thread_arena`]: a per-thread arena for buffers that never
+//!   cross threads (kernel temporaries inside one worker's job);
+//! - [`ScratchPool`]: a mutex-guarded arena owned by a backend for
+//!   buffers that do cross threads (per-worker partial accumulators that
+//!   the caller reduces), taken/put a handful of times per step.
+
+use std::cell::RefCell;
+use std::sync::Mutex;
+
+/// Free-list of reusable `Vec<f32>` buffers. Single-threaded; see
+/// [`ScratchPool`] for the shared variant.
+#[derive(Debug)]
+pub struct Arena {
+    free: Vec<Vec<f32>>,
+    fresh: u64,
+}
+
+impl Arena {
+    pub const fn new() -> Arena {
+        Arena { free: Vec::new(), fresh: 0 }
+    }
+
+    /// A zero-filled buffer of exactly `len` elements. Reuses the
+    /// best-fitting free buffer (smallest sufficient capacity, else the
+    /// largest available, grown in place); `fresh` counts the takes that
+    /// had to touch the global allocator.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, v) in self.free.iter().enumerate() {
+            let cap = v.capacity();
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let bc = self.free[b].capacity();
+                    if bc >= len {
+                        cap >= len && cap < bc
+                    } else {
+                        cap > bc
+                    }
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let mut v = match best {
+            Some(i) => self.free.swap_remove(i),
+            None => Vec::new(),
+        };
+        if v.capacity() < len {
+            self.fresh += 1;
+        }
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a buffer for reuse.
+    pub fn put(&mut self, v: Vec<f32>) {
+        self.free.push(v);
+    }
+
+    /// Cumulative number of `take` calls that had to allocate or grow.
+    /// Stable across steps once the arena is warm — the "no per-step heap
+    /// allocation" property the tests pin.
+    pub fn fresh_allocs(&self) -> u64 {
+        self.fresh
+    }
+}
+
+impl Default for Arena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+thread_local! {
+    static THREAD_ARENA: RefCell<Arena> = const { RefCell::new(Arena::new()) };
+}
+
+/// Run `f` with the calling thread's arena. Kernel temporaries that live
+/// within one job use this: buffers stay on the worker that took them, so
+/// there is no cross-thread contention and reuse is perfect.
+pub fn with_thread_arena<R>(f: impl FnOnce(&mut Arena) -> R) -> R {
+    THREAD_ARENA.with(|a| f(&mut a.borrow_mut()))
+}
+
+/// Fresh-allocation count of the calling thread's arena (telemetry).
+pub fn thread_arena_fresh_allocs() -> u64 {
+    THREAD_ARENA.with(|a| a.borrow().fresh_allocs())
+}
+
+/// Shared arena for buffers that cross threads (e.g. per-worker partial
+/// accumulators reduced on the caller). Lock-per-`take`/`put`, a handful
+/// of times per decode step — contention is negligible next to the GEMMs.
+#[derive(Debug)]
+pub struct ScratchPool {
+    inner: Mutex<Arena>,
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool { inner: Mutex::new(Arena::new()) }
+    }
+
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        self.inner.lock().unwrap().take(len)
+    }
+
+    pub fn put(&self, v: Vec<f32>) {
+        self.inner.lock().unwrap().put(v)
+    }
+
+    pub fn fresh_allocs(&self) -> u64 {
+        self.inner.lock().unwrap().fresh_allocs()
+    }
+}
+
+impl Default for ScratchPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zero_filled_and_sized() {
+        let mut a = Arena::new();
+        let mut v = a.take(16);
+        assert_eq!(v.len(), 16);
+        assert!(v.iter().all(|&x| x == 0.0));
+        v[3] = 7.0;
+        a.put(v);
+        // recycled buffer comes back zeroed
+        let v2 = a.take(16);
+        assert!(v2.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn reuse_stops_fresh_allocations() {
+        let mut a = Arena::new();
+        for _ in 0..3 {
+            let x = a.take(64);
+            let y = a.take(32);
+            a.put(x);
+            a.put(y);
+        }
+        let warm = a.fresh_allocs();
+        for _ in 0..10 {
+            let x = a.take(64);
+            let y = a.take(32);
+            let z = a.take(8);
+            a.put(z);
+            a.put(y);
+            a.put(x);
+        }
+        // the small `z` fits any warm buffer; no new allocations
+        assert_eq!(a.fresh_allocs(), warm + 1); // one fresh for the 3rd live buffer
+        let before = a.fresh_allocs();
+        for _ in 0..10 {
+            let x = a.take(64);
+            a.put(x);
+        }
+        assert_eq!(a.fresh_allocs(), before);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let mut a = Arena::new();
+        let big = a.take(100);
+        let small = a.take(10);
+        a.put(big);
+        a.put(small);
+        let v = a.take(10);
+        assert!(v.capacity() < 100, "picked the 100-cap buffer for a 10-take");
+        a.put(v);
+    }
+
+    #[test]
+    fn growth_counts_as_fresh() {
+        let mut a = Arena::new();
+        let v = a.take(8);
+        a.put(v);
+        let f0 = a.fresh_allocs();
+        let v = a.take(1024); // must grow
+        a.put(v);
+        assert_eq!(a.fresh_allocs(), f0 + 1);
+        let v = a.take(1024); // now warm
+        a.put(v);
+        assert_eq!(a.fresh_allocs(), f0 + 1);
+    }
+
+    #[test]
+    fn scratch_pool_shares_buffers() {
+        let p = ScratchPool::new();
+        let v = p.take(32);
+        p.put(v);
+        let f = p.fresh_allocs();
+        let v = p.take(32);
+        p.put(v);
+        assert_eq!(p.fresh_allocs(), f);
+    }
+
+    #[test]
+    fn thread_arena_is_reusable() {
+        let before = thread_arena_fresh_allocs();
+        with_thread_arena(|a| {
+            let v = a.take(123);
+            a.put(v);
+        });
+        with_thread_arena(|a| {
+            let v = a.take(123);
+            a.put(v);
+        });
+        let after = thread_arena_fresh_allocs();
+        assert!(after >= before);
+        with_thread_arena(|a| {
+            let v = a.take(123);
+            a.put(v);
+        });
+        assert_eq!(thread_arena_fresh_allocs(), after);
+    }
+}

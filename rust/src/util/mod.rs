@@ -4,6 +4,7 @@
 //! (rand), stats (statrs), threadpool (rayon), proptest, bench (criterion),
 //! bpe (tokenizers), corpus (the eval dataset), logging (env_logger).
 
+pub mod arena;
 pub mod bench;
 pub mod bpe;
 pub mod cli;

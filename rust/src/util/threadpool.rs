@@ -56,16 +56,47 @@ impl ThreadPool {
         U: Send + 'static,
         F: Fn(T) -> U + Send + Sync + 'static,
     {
+        self.scoped_map(items, f)
+    }
+
+    /// Borrowing variant of [`ThreadPool::parallel_map`]: `f` and the
+    /// items may capture references to the caller's stack (weights,
+    /// hidden-state slices, `&mut` output chunks) without cloning into
+    /// `'static` closures — the decode hot path's requirement.
+    ///
+    /// Blocks until every submitted job has finished (result order is
+    /// preserved; a panic in `f` is re-raised after all jobs drain), which
+    /// is what makes the lifetime erasure below sound: no job can outlive
+    /// this call, so no borrow it captured can dangle.
+    ///
+    /// Must not be called from inside one of this pool's own jobs (the
+    /// nested call would wait on workers that are busy running it).
+    pub fn scoped_map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
+    where
+        T: Send,
+        U: Send,
+        F: Fn(T) -> U + Sync,
+    {
         let n = items.len();
-        let f = Arc::new(f);
-        let (tx, rx) = mpsc::channel();
+        if n == 0 {
+            return Vec::new();
+        }
+        let fref = &f;
+        let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<U>)>();
         for (i, item) in items.into_iter().enumerate() {
-            let f = Arc::clone(&f);
             let tx = tx.clone();
-            self.execute(move || {
-                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let r = catch_unwind(AssertUnwindSafe(|| fref(item)));
                 let _ = tx.send((i, r));
             });
+            // SAFETY: the result loop below receives exactly one message
+            // per job before this function returns (workers run every job
+            // to completion, wrapping panics via catch_unwind), so the
+            // borrows captured by `job` strictly outlive its execution.
+            // `execute` only fails if the pool is closed, which cannot
+            // happen while `&self` is alive.
+            let job: Job = unsafe { std::mem::transmute(job) };
+            self.tx.as_ref().unwrap().send(job).expect("pool closed");
         }
         drop(tx);
         let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
@@ -138,6 +169,45 @@ mod tests {
         let _ = pool.parallel_map(vec![1, 2, 3], |x: i32| {
             if x == 2 {
                 panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn scoped_map_borrows_stack_data() {
+        // non-'static borrows: the whole point of the scoped variant
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..100).collect();
+        let chunks: Vec<&[u64]> = data.chunks(7).collect();
+        let sums = pool.scoped_map(chunks, |c: &[u64]| c.iter().sum::<u64>());
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn scoped_map_mutates_disjoint_chunks() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0u64; 64];
+        {
+            let items: Vec<(usize, &mut [u64])> =
+                out.chunks_mut(16).enumerate().collect();
+            pool.scoped_map(items, |(ci, chunk): (usize, &mut [u64])| {
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    *x = (ci * 16 + j) as u64;
+                }
+            });
+        }
+        let want: Vec<u64> = (0..64).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped boom")]
+    fn scoped_map_propagates_panic() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.scoped_map(vec![1, 2, 3], |x: i32| {
+            if x == 3 {
+                panic!("scoped boom");
             }
             x
         });
