@@ -1,0 +1,387 @@
+//! serve_load: end-to-end serving benchmark under load, sweeping routing
+//! policies at the paper's operating point (small config, B=16, vanilla
+//! k=8 vs OEA k0=4).
+//!
+//! Boots the REAL HTTP server (engine thread, worker pool, bounded queue,
+//! streaming responses) on the hermetic CPU backend — one fresh server
+//! per (policy, workload) so /metrics SLO percentiles are per-workload —
+//! and drives it with:
+//!
+//! - a **closed-loop** workload: C concurrent clients, each issuing its
+//!   next request when the previous completes (C > max_running, so the
+//!   admission queue is exercised);
+//! - an **open-loop** workload: requests launched at a fixed arrival
+//!   rate regardless of completions (the serving-SLO regime — queueing
+//!   shows up as TTFT/queue-wait tail growth, not reduced offered load).
+//!
+//! Clients stream (chunked NDJSON) and timestamp their first token, so
+//! client-observed TTFT is measured alongside the server-side SLO
+//! percentiles scraped from /metrics. Emits `BENCH_serve_load.json` with
+//! requests/s plus p50/p95/p99 queue-wait, TTFT and TPOT per policy.
+//!
+//!     cargo bench --bench serve_load
+//!     cargo bench --bench serve_load -- --smoke   # CI tier
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
+use oea_serve::coordinator::{Engine, EngineConfig};
+use oea_serve::latency::H100Presets;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::server::http::{read_chunk, read_response};
+use oea_serve::server::{self, ServeOptions};
+use oea_serve::util::bench::{fmt1, BenchOpts, Table};
+use oea_serve::util::bpe::Tokenizer;
+use oea_serve::util::json::Json;
+use oea_serve::util::stats;
+
+const MAX_RUNNING: usize = 16; // the paper's B=16 decode bucket
+const MAX_QUEUE: usize = 64;
+
+#[derive(Debug)]
+enum ClientResult {
+    Ok { e2e_ms: f64, ttft_ms: f64, tokens: usize },
+    Rejected,
+    Failed(String),
+}
+
+/// One streaming generation over raw TCP, timestamping the first token
+/// chunk (client-observed TTFT).
+fn generate_stream(addr: SocketAddr, prompt: &str, max_tokens: usize) -> ClientResult {
+    let t0 = Instant::now();
+    let stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => return ClientResult::Failed(format!("connect: {e}")),
+    };
+    stream.set_read_timeout(Some(Duration::from_secs(300))).ok();
+    let body = Json::obj(vec![
+        ("prompt", Json::str(prompt)),
+        ("max_tokens", Json::num(max_tokens as f64)),
+        ("stream", Json::Bool(true)),
+    ])
+    .write();
+    let req = format!(
+        "POST /generate HTTP/1.1\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => return ClientResult::Failed(format!("clone: {e}")),
+    };
+    if let Err(e) = writer.write_all(req.as_bytes()) {
+        return ClientResult::Failed(format!("write: {e}"));
+    }
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    if reader.read_line(&mut line).is_err() {
+        return ClientResult::Failed("no status line".into());
+    }
+    let code: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or(0);
+    loop {
+        line.clear();
+        if reader.read_line(&mut line).is_err() {
+            return ClientResult::Failed("truncated headers".into());
+        }
+        if line.trim_end().is_empty() {
+            break;
+        }
+    }
+    if code == 429 {
+        return ClientResult::Rejected;
+    }
+    if code != 200 {
+        return ClientResult::Failed(format!("status {code}"));
+    }
+    let mut ttft_ms: Option<f64> = None;
+    let mut tokens = 0usize;
+    loop {
+        match read_chunk(&mut reader) {
+            Ok(Some(data)) => {
+                let text = String::from_utf8_lossy(&data);
+                for l in text.lines().filter(|l| !l.trim().is_empty()) {
+                    let v = match Json::parse(l) {
+                        Ok(v) => v,
+                        Err(e) => return ClientResult::Failed(format!("bad line: {e}")),
+                    };
+                    if v.get_opt("done").is_some() {
+                        continue;
+                    }
+                    if ttft_ms.is_none() {
+                        ttft_ms = Some(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                    tokens += 1;
+                }
+            }
+            Ok(None) => break,
+            Err(e) => return ClientResult::Failed(format!("chunk: {e}")),
+        }
+    }
+    let e2e_ms = t0.elapsed().as_secs_f64() * 1e3;
+    ClientResult::Ok { e2e_ms, ttft_ms: ttft_ms.unwrap_or(e2e_ms), tokens }
+}
+
+fn boot_server(
+    policy_spec: &str,
+    cfg: &ModelConfig,
+) -> (SocketAddr, std::thread::JoinHandle<oea_serve::Result<()>>) {
+    let cfg = cfg.clone();
+    let policy = Policy::from_cli(policy_spec, cfg.top_k, cfg.n_experts).unwrap();
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let cost = H100Presets::for_config(&cfg.name);
+        server::serve(
+            move || {
+                Engine::new(
+                    ModelRunner::new(CpuBackend::synthetic(cfg, 0)),
+                    EngineConfig {
+                        policy,
+                        mask_padding: true,
+                        max_running: MAX_RUNNING,
+                        max_queue: MAX_QUEUE,
+                        eos_token: None,
+                        cost_model: cost,
+                    },
+                )
+            },
+            Tokenizer::byte_level(),
+            "127.0.0.1:0",
+            ServeOptions { max_requests: None, http_workers: 32, ready: Some(ready_tx) },
+        )
+    });
+    let addr = ready_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("server never bound");
+    (addr, handle)
+}
+
+fn prompt_for(i: usize) -> String {
+    format!("load client {i}: river {}", i * 7 % 13)
+}
+
+/// Closed loop: `clients` workers, `per_client` back-to-back requests
+/// each. Returns per-request results + wall seconds.
+fn closed_loop(
+    addr: SocketAddr,
+    clients: usize,
+    per_client: usize,
+    max_tokens: usize,
+) -> (Vec<ClientResult>, f64) {
+    let t0 = Instant::now();
+    let (rtx, rrx) = mpsc::channel();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let rtx = rtx.clone();
+            std::thread::spawn(move || {
+                for r in 0..per_client {
+                    let _ = rtx.send(generate_stream(addr, &prompt_for(c * 100 + r), max_tokens));
+                }
+            })
+        })
+        .collect();
+    drop(rtx);
+    let results: Vec<ClientResult> = rrx.iter().collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    (results, t0.elapsed().as_secs_f64())
+}
+
+/// Open loop: `n` requests launched at a fixed `interval` regardless of
+/// completions (arrival rate = 1000/interval_ms req/s).
+fn open_loop(
+    addr: SocketAddr,
+    n: usize,
+    interval: Duration,
+    max_tokens: usize,
+) -> (Vec<ClientResult>, f64) {
+    let t0 = Instant::now();
+    let (rtx, rrx) = mpsc::channel();
+    let mut workers = Vec::with_capacity(n);
+    for i in 0..n {
+        let rtx = rtx.clone();
+        workers.push(std::thread::spawn(move || {
+            let _ = rtx.send(generate_stream(addr, &prompt_for(i), max_tokens));
+        }));
+        std::thread::sleep(interval);
+    }
+    drop(rtx);
+    let results: Vec<ClientResult> = rrx.iter().collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    (results, t0.elapsed().as_secs_f64())
+}
+
+fn pct_json(xs: &[f64]) -> Json {
+    Json::obj(vec![
+        ("p50", Json::num(stats::percentile(xs, 50.0))),
+        ("p95", Json::num(stats::percentile(xs, 95.0))),
+        ("p99", Json::num(stats::percentile(xs, 99.0))),
+        ("n", Json::num(xs.len() as f64)),
+    ])
+}
+
+struct WorkloadSummary {
+    json: Json,
+    requests_per_s: f64,
+    server_ttft_p99_ms: f64,
+}
+
+/// Boot a fresh server, run one workload against it, scrape /metrics,
+/// drain it, and summarize.
+fn run_workload(
+    policy_spec: &str,
+    cfg: &ModelConfig,
+    workload: &str,
+    run: impl FnOnce(SocketAddr) -> (Vec<ClientResult>, f64),
+    expected: usize,
+) -> WorkloadSummary {
+    let (addr, handle) = boot_server(policy_spec, cfg);
+    let (results, wall_s) = run(addr);
+
+    let mut e2e = Vec::new();
+    let mut ttft = Vec::new();
+    let mut total_tokens = 0usize;
+    let mut rejected = 0usize;
+    for r in &results {
+        match r {
+            ClientResult::Ok { e2e_ms, ttft_ms, tokens } => {
+                e2e.push(*e2e_ms);
+                ttft.push(*ttft_ms);
+                total_tokens += tokens;
+            }
+            ClientResult::Rejected => rejected += 1,
+            ClientResult::Failed(e) => panic!("{policy_spec}/{workload}: client failed: {e}"),
+        }
+    }
+    let completed = e2e.len();
+    assert_eq!(completed + rejected, expected, "{policy_spec}/{workload}: lost requests");
+    assert!(completed > 0, "{policy_spec}/{workload}: nothing completed");
+
+    // server-side SLO percentiles for exactly this workload
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+    let metrics = Json::parse(&read_response(&mut s).unwrap().body).unwrap();
+    let slo = metrics.get("slo").unwrap().clone();
+    let server_ttft_p99_ms = slo.get("ttft_ms").unwrap().get("p99").unwrap().as_f64().unwrap();
+
+    // graceful drain
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"POST /shutdown HTTP/1.1\r\nContent-Length: 0\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let _ = read_response(&mut s);
+    handle.join().unwrap().unwrap();
+
+    let requests_per_s = completed as f64 / wall_s;
+    let json = Json::obj(vec![
+        ("requests_per_s", Json::num(requests_per_s)),
+        ("tokens_per_s", Json::num(total_tokens as f64 / wall_s)),
+        ("completed", Json::num(completed as f64)),
+        ("rejected", Json::num(rejected as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("queue_wait_ms", slo.get("queue_wait_ms").unwrap().clone()),
+        ("ttft_ms", slo.get("ttft_ms").unwrap().clone()),
+        ("tpot_ms", slo.get("tpot_ms").unwrap().clone()),
+        ("e2e_ms", slo.get("e2e_ms").unwrap().clone()),
+        ("client_ttft_ms", pct_json(&ttft)),
+        ("client_e2e_ms", pct_json(&e2e)),
+    ]);
+    WorkloadSummary { json, requests_per_s, server_ttft_p99_ms }
+}
+
+fn main() {
+    let opts = BenchOpts::from_args();
+    // closed loop: C > max_running so the admission queue is exercised;
+    // open loop: arrival rate chosen to keep the decode bucket saturated
+    let (clients, per_client, max_tokens, open_n, open_interval_ms) =
+        if opts.smoke { (24, 1, 12, 24, 15u64) } else { (24, 4, 24, 96, 20u64) };
+    let cfg = ModelConfig::preset("small").unwrap();
+
+    println!(
+        "=== serve_load: {} cfg, max_running={MAX_RUNNING}, max_queue={MAX_QUEUE} ===\n\
+         closed loop: {clients} clients x {per_client} requests, {max_tokens} tokens each\n\
+         open loop: {open_n} requests at {:.0} req/s",
+        cfg.name,
+        1000.0 / open_interval_ms as f64,
+    );
+
+    let mut table = Table::new(
+        "Serving under load (streaming clients, server-side SLO percentiles)",
+        &["policy", "workload", "req/s", "qwait p99 ms", "ttft p99 ms", "tpot p99 ms"],
+    );
+    let mut policy_entries = Vec::new();
+    let mut rps: Vec<(String, f64, f64)> = Vec::new(); // (policy, closed rps, open rps)
+    for spec in ["vanilla", "oea:k0=4"] {
+        let closed = run_workload(
+            spec,
+            &cfg,
+            "closed",
+            |addr| closed_loop(addr, clients, per_client, max_tokens),
+            clients * per_client,
+        );
+        let open = run_workload(
+            spec,
+            &cfg,
+            "open",
+            |addr| open_loop(addr, open_n, Duration::from_millis(open_interval_ms), max_tokens),
+            open_n,
+        );
+        for (name, w) in [("closed", &closed), ("open", &open)] {
+            let p99 = |key: &str| w.json.get(key).unwrap().get("p99").unwrap().as_f64().unwrap();
+            table.row(vec![
+                spec.to_string(),
+                name.to_string(),
+                fmt1(w.requests_per_s),
+                fmt1(p99("queue_wait_ms")),
+                fmt1(p99("ttft_ms")),
+                fmt1(p99("tpot_ms")),
+            ]);
+        }
+        rps.push((spec.to_string(), closed.requests_per_s, open.requests_per_s));
+        println!(
+            "{spec}: closed {:.1} req/s (server ttft p99 {:.1} ms), open {:.1} req/s \
+             (server ttft p99 {:.1} ms)",
+            closed.requests_per_s,
+            closed.server_ttft_p99_ms,
+            open.requests_per_s,
+            open.server_ttft_p99_ms,
+        );
+        policy_entries.push(Json::obj(vec![
+            ("policy", Json::str(spec)),
+            ("closed_loop", closed.json),
+            ("open_loop", open.json),
+        ]));
+    }
+    table.print();
+    if rps.len() == 2 {
+        println!(
+            "\nOEA vs vanilla closed-loop throughput: {:.2}x",
+            rps[1].1 / rps[0].1
+        );
+    }
+
+    opts.emit(
+        "serve_load",
+        Json::obj(vec![
+            ("smoke", Json::Bool(opts.smoke)),
+            ("config", Json::str(&cfg.name)),
+            ("max_running", Json::num(MAX_RUNNING as f64)),
+            ("max_queue", Json::num(MAX_QUEUE as f64)),
+            ("max_tokens", Json::num(max_tokens as f64)),
+            ("closed_clients", Json::num(clients as f64)),
+            ("open_offered_rps", Json::num(1000.0 / open_interval_ms as f64)),
+            ("policies", Json::arr(policy_entries)),
+        ]),
+    )
+    .unwrap();
+}

@@ -36,6 +36,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 policy,
                 mask_padding: true,
                 max_running: 4,
+                max_queue: usize::MAX, // offline: the whole workload queues
                 eos_token: None,
                 cost_model: H100Presets::for_config(&cfg.name),
             },

@@ -63,6 +63,7 @@ fn run_one(policy_spec: &str, port: u16) -> (f64, f64, Vec<f64>) {
                         policy,
                         mask_padding: true,
                         max_running: 8,
+                        max_queue: 64,
                         eos_token: None,
                         cost_model: cost,
                     },
@@ -70,7 +71,7 @@ fn run_one(policy_spec: &str, port: u16) -> (f64, f64, Vec<f64>) {
             },
             tok,
             &format!("127.0.0.1:{port}"),
-            Some(N_REQUESTS + 1), // +1 for the final shutdown-triggering gen
+            server::ServeOptions::default(), // stopped via POST /shutdown
         )
         .unwrap();
     });
@@ -124,7 +125,7 @@ fn run_one(policy_spec: &str, port: u16) -> (f64, f64, Vec<f64>) {
     }
     let wall_s = t0.elapsed().as_secs_f64();
 
-    // fetch metrics then send the final request that shuts the server down
+    // fetch metrics, then drain the server via POST /shutdown
     let metrics_raw = {
         let mut s = TcpStream::connect(&addr).unwrap();
         s.write_all(b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n")
@@ -137,15 +138,8 @@ fn run_one(policy_spec: &str, port: u16) -> (f64, f64, Vec<f64>) {
     let avg_t = m.get("avg_active_experts").unwrap().as_f64().unwrap();
     let sim_us = m.get("avg_moe_us_simulated").unwrap().as_f64().unwrap();
 
-    let _ = http_post(
-        &addr,
-        "/generate",
-        &Json::obj(vec![
-            ("prompt", Json::str("bye")),
-            ("max_tokens", Json::num(1.0)),
-        ])
-        .write(),
-    );
+    // graceful drain: the server stops accepting and exits once idle
+    let _ = http_post(&addr, "/shutdown", "");
     server_thread.join().unwrap();
 
     println!(

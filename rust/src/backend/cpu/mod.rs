@@ -623,12 +623,34 @@ impl Backend for CpuBackend {
         }
     }
 
+    /// Final-norm + unembedding GEMM `[B, D] x [D, V]` — the largest
+    /// single GEMM of a decode step. Batch rows fan out over the pool in
+    /// micro-kernel-aligned chunks; per-row accumulation order is
+    /// identical under any row split, so the parallel result is the same
+    /// as serial (see `logits_parallel_matches_serial` in
+    /// `tests/dispatch_equivalence.rs`).
     fn logits(&self, hidden: &[f32]) -> Result<Vec<f32>> {
         let (d, v) = (self.cfg.d_model, self.cfg.vocab);
         let b = hidden.len() / d;
         let mut hn = self.scratch.take(b * d);
         kernels::rmsnorm_into(hidden, &self.final_norm, d, self.cfg.rms_eps, &mut hn);
-        let out = kernels::matmul(&hn, &self.unembed_w, b, d, v);
+        let mut out = vec![0.0f32; b * v];
+        let workers = self.pool.as_ref().map(|p| p.size()).unwrap_or(1);
+        if workers <= 1 || b <= 4 {
+            kernels::matmul_into(&hn, &self.unembed_w, b, d, v, &mut out);
+        } else {
+            // rows per chunk: even split across workers, rounded up to the
+            // GEMM micro-kernel's 4-row pass so no chunk wastes a pass
+            let rows_per = b.div_ceil(workers).div_ceil(4) * 4;
+            let items: Vec<(&[f32], &mut [f32])> = hn
+                .chunks(rows_per * d)
+                .zip(out.chunks_mut(rows_per * v))
+                .collect();
+            let w = &self.unembed_w;
+            self.pool.as_ref().unwrap().scoped_map(items, |(a, o): (&[f32], &mut [f32])| {
+                kernels::matmul_into(a, w, o.len() / v, d, v, o);
+            });
+        }
         self.scratch.put(hn);
         Ok(out)
     }

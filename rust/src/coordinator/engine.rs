@@ -12,11 +12,11 @@ use std::time::Instant;
 
 use crate::backend::Backend;
 use crate::config::ModelConfig;
-use crate::coordinator::request::{FinishReason, FinishedRequest, GenRequest};
+use crate::coordinator::request::{FinishReason, FinishedRequest, GenRequest, TokenEvent};
 use crate::coordinator::sampler;
 use crate::coordinator::slots::SlotAllocator;
 use crate::latency::CostModel;
-use crate::metrics::{MoeMetrics, RequestMetrics, StepRecord};
+use crate::metrics::{push_sample, MoeMetrics, RequestMetrics, StepRecord};
 use crate::model::{DecodeBatch, ModelRunner};
 use crate::moe::policy::Policy;
 use crate::util::error::{Error, Result};
@@ -30,6 +30,13 @@ pub struct EngineConfig {
     pub mask_padding: bool,
     /// SGLang's --max-running-requests
     pub max_running: usize,
+    /// Bound on requests *waiting* for a slot: [`Engine::try_submit`]
+    /// rejects once the system is at capacity (free decode slots +
+    /// `max_queue` — the serving backpressure signal, HTTP 429 at the
+    /// server edge), so at most `max_running + max_queue` requests are
+    /// ever held. Offline drivers that pre-load the whole workload use
+    /// `usize::MAX`.
+    pub max_queue: usize,
     pub eos_token: Option<i32>,
     /// simulated-latency preset (H100 µs per Eq. 2)
     pub cost_model: CostModel,
@@ -45,6 +52,16 @@ struct SeqState {
     rng: Rng,
     t_submit: Instant,
     t_first_token: Option<Instant>,
+    /// submit -> admission delay (the queue-wait SLO component)
+    queue_wait_us: f64,
+}
+
+/// Everything one engine iteration produced: per-token events the moment
+/// each token is sampled (the streaming feed) plus retired requests.
+#[derive(Debug, Default)]
+pub struct StepEvents {
+    pub tokens: Vec<TokenEvent>,
+    pub finished: Vec<FinishedRequest>,
 }
 
 pub struct Engine<B: Backend> {
@@ -99,37 +116,105 @@ impl<B: Backend> Engine<B> {
         self.n_running() == 0 && self.queue.is_empty()
     }
 
-    pub fn submit(&mut self, req: GenRequest) {
+    /// Bounded admission: rejects (returning the request to the caller)
+    /// once the system is at capacity. Capacity counts free decode slots
+    /// as well as the `max_queue` wait bound — a burst arriving at an
+    /// idle engine must not be 429'd while slots sit empty just because
+    /// admission (which happens on the next step) hasn't drained the
+    /// queue yet. With all slots busy the bound degrades to `max_queue`,
+    /// so the system never holds more than `max_running + max_queue`.
+    pub fn try_submit(&mut self, req: GenRequest) -> std::result::Result<(), GenRequest> {
+        let free_slots = self.cfg.max_running.saturating_sub(self.slots.n_used());
+        let capacity = self.cfg.max_queue.saturating_add(free_slots);
+        if self.queue.len() >= capacity {
+            self.requests.n_rejected += 1;
+            return Err(req);
+        }
         self.queue.push_back((req, Instant::now()));
+        Ok(())
+    }
+
+    /// Submit for offline drivers that sized `max_queue` to their
+    /// workload; panics on queue overflow (serving paths must use
+    /// [`Engine::try_submit`] and surface backpressure instead).
+    pub fn submit(&mut self, req: GenRequest) {
+        if let Err(r) = self.try_submit(req) {
+            panic!(
+                "engine queue full (max_queue={}) for request {}; use try_submit",
+                self.cfg.max_queue, r.id
+            );
+        }
     }
 
     /// Admit queued requests into free slots (bounded by `max_running`),
-    /// running their prefill. Returns requests rejected as too long to
-    /// ever fit the KV capacity.
-    fn admit(&mut self) -> Result<Vec<FinishedRequest>> {
-        let mut rejected = Vec::new();
+    /// running their prefill. Pushes the first sampled token of each
+    /// admission (the TTFT token) and requests rejected as too long to
+    /// ever fit the KV capacity into `ev`.
+    fn admit(&mut self, ev: &mut StepEvents) -> Result<()> {
         while self.slots.n_used() < self.cfg.max_running && !self.queue.is_empty() {
             let (req, t_submit) = self.queue.pop_front().unwrap();
-            // a request that can never fit is finished immediately
+            let queue_wait_us = t_submit.elapsed().as_secs_f64() * 1e6;
+            push_sample(&mut self.requests.queue_wait_us, queue_wait_us);
+            // a request that can never fit is finished immediately (it
+            // still counts as finished — the serve exit counter and
+            // /metrics must agree on one definition)
             if req.prompt.is_empty() || !self.slots.fits(req.prompt.len(), 1) {
-                rejected.push(FinishedRequest {
+                let e2e_us = t_submit.elapsed().as_secs_f64() * 1e6;
+                self.requests.n_finished += 1;
+                push_sample(&mut self.requests.e2e_us, e2e_us);
+                ev.finished.push(FinishedRequest {
                     id: req.id,
                     prompt_len: req.prompt.len(),
                     tokens: Vec::new(),
                     reason: FinishReason::KvExhausted,
+                    queue_wait_us,
                     ttft_us: 0.0,
-                    e2e_us: t_submit.elapsed().as_secs_f64() * 1e6,
+                    e2e_us,
                 });
                 continue;
             }
             let seq = self.runner.prefill(&req.prompt)?;
-            let slot = self.slots.alloc(req.id)?;
-            self.runner.install_prefilled(&mut self.batch, slot, &seq)?;
             let mut rng = Rng::new(req.seed);
             let first =
                 sampler::sample(&seq.last_logits, req.temperature, req.top_p, &mut rng) as i32;
             let t_first = Instant::now();
             self.requests.total_prompt_tokens += req.prompt.len();
+            // finish at admission when the prefill's sample already ends
+            // the generation: an EOS first token (terminates, not output),
+            // or a max_new_tokens <= 1 budget the sample satisfies (a
+            // decode step would overshoot by one token)
+            let eos_first = self.cfg.eos_token == Some(first);
+            if eos_first || req.max_new_tokens <= 1 {
+                let tokens = if eos_first || req.max_new_tokens == 0 {
+                    Vec::new()
+                } else {
+                    vec![first]
+                };
+                let reason = if eos_first { FinishReason::Eos } else { FinishReason::Length };
+                let mut ttft_us = 0.0;
+                if !tokens.is_empty() {
+                    ev.tokens.push(TokenEvent { id: req.id, index: 0, token: first });
+                    ttft_us = (t_first - t_submit).as_secs_f64() * 1e6;
+                    push_sample(&mut self.requests.ttft_us, ttft_us);
+                }
+                self.requests.n_finished += 1;
+                self.requests.total_generated_tokens += tokens.len();
+                let e2e_us = t_submit.elapsed().as_secs_f64() * 1e6;
+                push_sample(&mut self.requests.e2e_us, e2e_us);
+                ev.finished.push(FinishedRequest {
+                    id: req.id,
+                    prompt_len: req.prompt.len(),
+                    tokens,
+                    reason,
+                    queue_wait_us,
+                    ttft_us,
+                    e2e_us,
+                });
+                continue;
+            }
+            let slot = self.slots.alloc(req.id)?;
+            self.runner.install_prefilled(&mut self.batch, slot, &seq)?;
+            ev.tokens.push(TokenEvent { id: req.id, index: 0, token: first });
             let pos = req.prompt.len();
             self.running[slot] = Some(SeqState {
                 req,
@@ -139,18 +224,27 @@ impl<B: Backend> Engine<B> {
                 rng,
                 t_submit,
                 t_first_token: Some(t_first),
+                queue_wait_us,
             });
         }
-        Ok(rejected)
+        Ok(())
     }
 
     /// One engine iteration: admit + one decode step over live slots.
-    /// Returns requests finished this step.
+    /// Returns requests finished this step. Streaming callers use
+    /// [`Engine::step_events`] to also observe per-token events.
     pub fn step(&mut self) -> Result<Vec<FinishedRequest>> {
-        let mut finished = self.admit()?;
+        Ok(self.step_events()?.finished)
+    }
+
+    /// One engine iteration, reporting every token sampled this step (in
+    /// addition to retired requests) so the serving edge can stream them.
+    pub fn step_events(&mut self) -> Result<StepEvents> {
+        let mut events = StepEvents::default();
+        self.admit(&mut events)?;
         let b = self.batch.bucket;
         if self.slots.n_used() == 0 {
-            return Ok(finished);
+            return Ok(events);
         }
 
         let mut tokens = vec![0i32; b];
@@ -174,7 +268,7 @@ impl<B: Backend> Engine<B> {
             self.cfg.mask_padding,
         )?;
         let step_us = t0.elapsed().as_secs_f64() * 1e6;
-        self.requests.decode_step_us.push(step_us);
+        push_sample(&mut self.requests.decode_step_us, step_us);
 
         let n_live = self.slots.n_used();
         for (l, ls) in out.layers.iter().enumerate() {
@@ -203,6 +297,15 @@ impl<B: Backend> Engine<B> {
             s.next_token = next;
 
             let emitted_eos = self.cfg.eos_token == Some(next);
+            // an EOS token terminates but is not part of the output, so it
+            // never becomes a stream event
+            if !emitted_eos {
+                events.tokens.push(TokenEvent {
+                    id: s.req.id,
+                    index: s.generated.len() - 1,
+                    token: next,
+                });
+            }
             let hit_len = s.generated.len() >= s.req.max_new_tokens;
             let kv_full = s.pos + 1 >= self.runner.cfg().s_max;
             if emitted_eos || hit_len || kv_full {
@@ -220,30 +323,35 @@ impl<B: Backend> Engine<B> {
                 self.requests.n_finished += 1;
                 self.requests.total_generated_tokens += toks.len();
                 if let Some(tf) = s.t_first_token {
-                    self.requests
-                        .ttft_us
-                        .push((tf - s.t_submit).as_secs_f64() * 1e6);
+                    let us = (tf - s.t_submit).as_secs_f64() * 1e6;
+                    push_sample(&mut self.requests.ttft_us, us);
                 }
-                self.requests
-                    .e2e_us
-                    .push(s.t_submit.elapsed().as_secs_f64() * 1e6);
-                finished.push(FinishedRequest {
+                push_sample(
+                    &mut self.requests.e2e_us,
+                    s.t_submit.elapsed().as_secs_f64() * 1e6,
+                );
+                let done = FinishedRequest {
                     id: s.req.id,
                     prompt_len: s.req.prompt.len(),
                     tokens: toks,
                     reason,
+                    queue_wait_us: s.queue_wait_us,
                     ttft_us: s
                         .t_first_token
                         .map(|tf| (tf - s.t_submit).as_secs_f64() * 1e6)
                         .unwrap_or(0.0),
                     e2e_us: s.t_submit.elapsed().as_secs_f64() * 1e6,
-                });
+                };
+                if let Some(tpot) = done.tpot_us() {
+                    push_sample(&mut self.requests.tpot_us, tpot);
+                }
+                events.finished.push(done);
                 self.slots.free(i)?;
             } else {
                 self.running[i] = Some(s);
             }
         }
-        Ok(finished)
+        Ok(events)
     }
 
     /// Drive until every submitted request finishes.

@@ -12,5 +12,5 @@ pub mod request;
 pub mod sampler;
 pub mod slots;
 
-pub use engine::{Engine, EngineConfig};
-pub use request::{FinishReason, FinishedRequest, GenRequest};
+pub use engine::{Engine, EngineConfig, StepEvents};
+pub use request::{FinishReason, FinishedRequest, GenRequest, TokenEvent};

@@ -26,6 +26,17 @@ impl GenRequest {
     }
 }
 
+/// One sampled token, emitted by the engine the moment it exists — the
+/// unit of the server's streaming response (and of TTFT observability:
+/// the `index == 0` event is the first token).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenEvent {
+    pub id: u64,
+    /// 0-based position within the generation
+    pub index: usize,
+    pub token: i32,
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FinishReason {
     /// hit max_new_tokens
@@ -43,7 +54,20 @@ pub struct FinishedRequest {
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
     pub reason: FinishReason,
-    /// time to first token (prefill + first sample)
+    /// time spent waiting in the admission queue before a slot freed
+    pub queue_wait_us: f64,
+    /// time to first token (queue wait + prefill + first sample)
     pub ttft_us: f64,
     pub e2e_us: f64,
+}
+
+impl FinishedRequest {
+    /// Mean time per output token after the first (the serving TPOT SLO);
+    /// `None` for 0/1-token generations.
+    pub fn tpot_us(&self) -> Option<f64> {
+        if self.tokens.len() < 2 {
+            return None;
+        }
+        Some((self.e2e_us - self.ttft_us) / (self.tokens.len() - 1) as f64)
+    }
 }

@@ -51,8 +51,14 @@ fn spec() -> Spec {
             ("policy", true, "routing policy, e.g. vanilla, pruned:k0=3, oea:k0=3, \
                               oea-full:k0=3,p=0.7,kmax=9,maxp=32, lynx:t=16, dynskip:tau=0.3"),
             ("max-running", true, "max concurrent requests (default 8)"),
+            ("max-queue", true, "serve: waiting-request bound before 429 backpressure \
+                              (default 64)"),
+            ("http-workers", true, "serve: connection worker threads (default \
+                              max-running + 16; a streaming handler occupies a worker \
+                              for its whole generation)"),
             ("port", true, "serve: TCP port (default 8080)"),
-            ("max-requests", true, "serve: exit after N generations (default: run forever)"),
+            ("max-requests", true, "serve: drain and exit after N generations \
+                              (default: run until POST /shutdown)"),
             ("no-mask-padding", false, "disable the padding-token routing fix (paper §6)"),
             ("prompt", true, "generate: prompt text"),
             ("max-tokens", true, "generate: tokens to generate (default 32)"),
@@ -104,6 +110,7 @@ fn engine_config(args: &Args, c: &ModelConfig) -> Result<EngineConfig> {
         policy: parse_policy(args, c)?,
         mask_padding: !args.flag("no-mask-padding"),
         max_running: args.usize_or("max-running", 8)?,
+        max_queue: args.usize_or("max-queue", 64)?,
         eos_token: None,
         cost_model: H100Presets::for_config(&c.name),
     })
@@ -193,22 +200,33 @@ fn cmd_info<B: Backend>(runner: ModelRunner<B>) -> Result<()> {
     Ok(())
 }
 
-fn serve_preamble(args: &Args, c: &ModelConfig, backend: &str) -> Result<(String, Option<usize>)> {
+fn serve_preamble(
+    args: &Args,
+    c: &ModelConfig,
+    backend: &str,
+) -> Result<(String, server::ServeOptions)> {
     // validate the policy spec up front so typos fail before any engine
     // thread spawns
     let policy = parse_policy(args, c)?;
     let port = args.usize_or("port", 8080)?;
-    let max_requests = match args.str_opt("max-requests") {
-        Some(_) => Some(args.usize_or("max-requests", 0)?),
-        None => None,
+    // a generation handler holds its worker until the stream completes,
+    // so the default pool must exceed max_running or the decode bucket
+    // can never fill
+    let max_running = args.usize_or("max-running", 8)?;
+    let opts = server::ServeOptions {
+        max_requests: args.usize_opt("max-requests")?,
+        http_workers: args.usize_or("http-workers", max_running + 16)?,
+        ready: None,
     };
     println!(
-        "serving backend={backend} config={} policy={} max_running={} on 127.0.0.1:{port}",
+        "serving backend={backend} config={} policy={} max_running={max_running} \
+         max_queue={} workers={} on 127.0.0.1:{port}",
         c.name,
         policy.label(),
-        args.usize_or("max-running", 8)?,
+        args.usize_or("max-queue", 64)?,
+        opts.http_workers,
     );
-    Ok((format!("127.0.0.1:{port}"), max_requests))
+    Ok((format!("127.0.0.1:{port}"), opts))
 }
 
 // ---- CPU backend (default, hermetic) -------------------------------------
@@ -226,8 +244,8 @@ fn run_cpu(args: &Args) -> Result<()> {
             let cfg_name = runner.cfg().name.clone();
             let tok = cpu_tokenizer(args, &cfg_name);
             let ecfg = engine_config(args, runner.cfg())?;
-            let (addr, max_requests) = serve_preamble(args, runner.cfg(), "cpu")?;
-            server::serve(move || Engine::new(runner, ecfg), tok, &addr, max_requests)
+            let (addr, opts) = serve_preamble(args, runner.cfg(), "cpu")?;
+            server::serve(move || Engine::new(runner, ecfg), tok, &addr, opts)
         }
         Some("generate") => {
             let runner = cpu_runner(args)?;
@@ -262,7 +280,7 @@ fn run_pjrt(args: &Args) -> Result<()> {
             // engine thread makes one.
             let manifest = oea_serve::config::Manifest::load(&root, &cfg_name)?;
             let tok = Tokenizer::load(&manifest.dir.join(&manifest.vocab_file))?;
-            let (addr, max_requests) = serve_preamble(args, &manifest.config, "pjrt")?;
+            let (addr, opts) = serve_preamble(args, &manifest.config, "pjrt")?;
             let args2 = args.clone();
             server::serve(
                 move || {
@@ -272,7 +290,7 @@ fn run_pjrt(args: &Args) -> Result<()> {
                 },
                 tok,
                 &addr,
-                max_requests,
+                opts,
             )
         }
         Some("generate") => {

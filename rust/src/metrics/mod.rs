@@ -5,6 +5,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::util::json::Json;
 use crate::util::stats::{self, LinFit};
 
 /// One MoE layer execution during decode.
@@ -26,7 +27,22 @@ pub struct StepRecord {
     pub simulated_us: f64,
 }
 
-/// Append-only metrics sink for one run.
+/// Bound on each sample store in a run-forever server: on reaching twice
+/// this, the older half is dropped (amortized O(1)), so aggregations
+/// always cover at least the most recent window while memory stays flat.
+/// Far above anything an offline bench or test accumulates.
+pub const SAMPLE_WINDOW: usize = 65_536;
+
+/// Append a sample under the bounded-window policy above.
+pub fn push_sample(v: &mut Vec<f64>, x: f64) {
+    if v.len() >= 2 * SAMPLE_WINDOW {
+        v.drain(..SAMPLE_WINDOW);
+    }
+    v.push(x);
+}
+
+/// Metrics sink for one run; windowed per [`SAMPLE_WINDOW`] so a
+/// long-lived server reports recent behaviour at flat memory.
 #[derive(Debug, Default)]
 pub struct MoeMetrics {
     pub records: Vec<StepRecord>,
@@ -34,6 +50,9 @@ pub struct MoeMetrics {
 
 impl MoeMetrics {
     pub fn record(&mut self, r: StepRecord) {
+        if self.records.len() >= 2 * SAMPLE_WINDOW {
+            self.records.drain(..SAMPLE_WINDOW);
+        }
         self.records.push(r);
     }
 
@@ -109,15 +128,35 @@ impl MoeMetrics {
     }
 }
 
-/// End-to-end request telemetry for the serving engine.
+/// End-to-end request telemetry for the serving engine, including the
+/// per-request SLO components a serving operator watches: queue wait,
+/// TTFT, and time per output token (TPOT). The engine appends via
+/// [`push_sample`], so the vectors stay bounded on a run-forever server.
 #[derive(Debug, Default, Clone)]
 pub struct RequestMetrics {
     pub n_finished: usize,
+    /// submissions rejected by the bounded admission queue (HTTP 429s)
+    pub n_rejected: usize,
     pub total_prompt_tokens: usize,
     pub total_generated_tokens: usize,
+    /// submit -> admission delay per admitted request
+    pub queue_wait_us: Vec<f64>,
     pub ttft_us: Vec<f64>,
+    /// mean inter-token latency after the first token, per request
+    pub tpot_us: Vec<f64>,
     pub e2e_us: Vec<f64>,
     pub decode_step_us: Vec<f64>,
+}
+
+/// `{p50, p95, p99, n}` percentile summary of a µs sample vector,
+/// reported in ms (the unit the HTTP surface speaks).
+fn percentiles_ms(xs: &[f64]) -> Json {
+    Json::obj(vec![
+        ("p50", Json::num(stats::percentile(xs, 50.0) / 1e3)),
+        ("p95", Json::num(stats::percentile(xs, 95.0) / 1e3)),
+        ("p99", Json::num(stats::percentile(xs, 99.0) / 1e3)),
+        ("n", Json::num(xs.len() as f64)),
+    ])
 }
 
 impl RequestMetrics {
@@ -126,6 +165,19 @@ impl RequestMetrics {
             return 0.0;
         }
         self.total_generated_tokens as f64 / (wall_us / 1e6)
+    }
+
+    /// The `/metrics` SLO block: p50/p95/p99 (ms) of queue wait, TTFT,
+    /// TPOT and end-to-end latency, plus admission counters.
+    pub fn slo_json(&self) -> Json {
+        Json::obj(vec![
+            ("queue_wait_ms", percentiles_ms(&self.queue_wait_us)),
+            ("ttft_ms", percentiles_ms(&self.ttft_us)),
+            ("tpot_ms", percentiles_ms(&self.tpot_us)),
+            ("e2e_ms", percentiles_ms(&self.e2e_us)),
+            ("n_finished", Json::num(self.n_finished as f64)),
+            ("n_rejected", Json::num(self.n_rejected as f64)),
+        ])
     }
 
     pub fn summary(&self, wall_us: f64) -> String {
@@ -216,5 +268,57 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(m.throughput_tok_per_s(1e6), 500.0);
+    }
+
+    #[test]
+    fn slo_json_reports_ordered_percentiles_in_ms() {
+        let m = RequestMetrics {
+            n_finished: 3,
+            n_rejected: 2,
+            queue_wait_us: vec![1000.0, 2000.0, 50000.0],
+            ttft_us: vec![10_000.0, 20_000.0, 30_000.0],
+            tpot_us: vec![4000.0, 5000.0],
+            e2e_us: vec![100_000.0, 200_000.0, 300_000.0],
+            ..Default::default()
+        };
+        let s = m.slo_json();
+        for key in ["queue_wait_ms", "ttft_ms", "tpot_ms", "e2e_ms"] {
+            let p = s.get(key).unwrap();
+            let (p50, p95, p99) = (
+                p.get("p50").unwrap().as_f64().unwrap(),
+                p.get("p95").unwrap().as_f64().unwrap(),
+                p.get("p99").unwrap().as_f64().unwrap(),
+            );
+            assert!(p50 <= p95 && p95 <= p99, "{key}: {p50} {p95} {p99}");
+            assert!(p.get("n").unwrap().as_usize().unwrap() > 0);
+        }
+        // µs inputs surface as ms
+        assert_eq!(s.get("ttft_ms").unwrap().get("p50").unwrap().as_f64().unwrap(), 20.0);
+        assert_eq!(s.get("n_rejected").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn sample_window_bounds_growth() {
+        let mut v = Vec::new();
+        for i in 0..(2 * SAMPLE_WINDOW + 10) {
+            push_sample(&mut v, i as f64);
+        }
+        assert!(v.len() <= 2 * SAMPLE_WINDOW, "vector must stay bounded");
+        assert!(v.len() >= SAMPLE_WINDOW, "at least one window retained");
+        // the most recent sample is always present
+        assert_eq!(*v.last().unwrap(), (2 * SAMPLE_WINDOW + 9) as f64);
+
+        let mut m = MoeMetrics::default();
+        for i in 0..(2 * SAMPLE_WINDOW + 5) {
+            m.record(rec(0, (i % 7) as u16, 1.0));
+        }
+        assert!(m.len() <= 2 * SAMPLE_WINDOW);
+    }
+
+    #[test]
+    fn slo_json_is_well_formed_when_empty() {
+        let s = RequestMetrics::default().slo_json();
+        assert_eq!(s.get("ttft_ms").unwrap().get("n").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(s.get("queue_wait_ms").unwrap().get("p99").unwrap().as_f64().unwrap(), 0.0);
     }
 }

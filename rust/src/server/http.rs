@@ -1,10 +1,18 @@
-//! Blocking HTTP/1.1 request/response codec — just enough of RFC 7230 for
-//! the JSON API: request line, headers, Content-Length bodies.
+//! Blocking HTTP/1.1 codec — just enough of RFC 7230 for the JSON API:
+//! request line + headers + Content-Length bodies on the way in;
+//! fixed-length or chunked (streaming NDJSON) responses on the way out.
+//! The client half ([`read_response`]) parses both body framings so
+//! tests, benches and the smoke clients share one implementation.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
 use crate::util::error::{Error, Result};
+
+/// Hard caps keeping a hostile/broken peer from ballooning memory.
+const MAX_HEADER_LINE: usize = 8 * 1024;
+const MAX_HEADERS: usize = 100;
+const MAX_BODY: usize = 16 * 1024 * 1024;
 
 #[derive(Debug)]
 pub struct HttpRequest {
@@ -16,17 +24,83 @@ pub struct HttpRequest {
 
 impl HttpRequest {
     pub fn header(&self, name: &str) -> Option<&str> {
-        self.headers
-            .iter()
-            .find(|(k, _)| k.eq_ignore_ascii_case(name))
-            .map(|(_, v)| v.as_str())
+        header_lookup(&self.headers, name)
     }
+}
+
+/// A parsed response (the client side of the codec).
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub code: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header_lookup(&self.headers, name)
+    }
+}
+
+fn header_lookup<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case(name))
+        .map(|(_, v)| v.as_str())
+}
+
+/// Read one `\r\n`-terminated line with a length cap (the cap bounds the
+/// read itself, so a newline-free flood cannot balloon memory).
+fn read_line_capped<R: BufRead>(reader: &mut R) -> Result<String> {
+    let mut limited = reader.by_ref().take(MAX_HEADER_LINE as u64 + 1);
+    let mut line = String::new();
+    let n = limited
+        .read_line(&mut line)
+        .map_err(|e| Error::Io(format!("read line: {e}")))?;
+    if n > MAX_HEADER_LINE {
+        return Err(Error::Io("header line too long".into()));
+    }
+    Ok(line)
+}
+
+/// Header block (everything up to the blank line), shared by the request
+/// and response parsers.
+fn read_headers<R: BufRead>(reader: &mut R) -> Result<Vec<(String, String)>> {
+    let mut headers = Vec::new();
+    loop {
+        let h = read_line_capped(reader)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            return Ok(headers);
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(Error::Io("too many headers".into()));
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+}
+
+/// Content-Length, strictly: absent means 0, unparsable or oversized is a
+/// hard error (silently treating garbage as 0 would truncate bodies).
+fn content_length(headers: &[(String, String)]) -> Result<usize> {
+    let Some(v) = header_lookup(headers, "content-length") else {
+        return Ok(0);
+    };
+    let len: usize = v
+        .trim()
+        .parse()
+        .map_err(|_| Error::Io(format!("bad Content-Length {v:?}")))?;
+    if len > MAX_BODY {
+        return Err(Error::Io("body too large".into()));
+    }
+    Ok(len)
 }
 
 pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
+    let line = read_line_capped(&mut reader)?;
     let mut parts = line.split_whitespace();
     let method = parts
         .next()
@@ -36,27 +110,12 @@ pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
         .next()
         .ok_or_else(|| Error::Io("no path".into()))?
         .to_string();
+    if !path.starts_with('/') {
+        return Err(Error::Io(format!("malformed request line {line:?}")));
+    }
 
-    let mut headers = Vec::new();
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
-        }
-        if let Some((k, v)) = h.split_once(':') {
-            headers.push((k.trim().to_string(), v.trim().to_string()));
-        }
-    }
-    let len: usize = headers
-        .iter()
-        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
-        .and_then(|(_, v)| v.parse().ok())
-        .unwrap_or(0);
-    if len > 16 * 1024 * 1024 {
-        return Err(Error::Io("body too large".into()));
-    }
+    let headers = read_headers(&mut reader)?;
+    let len = content_length(&headers)?;
     let mut body = vec![0u8; len];
     reader.read_exact(&mut body)?;
     Ok(HttpRequest {
@@ -67,21 +126,159 @@ pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
     })
 }
 
-pub fn write_response(stream: &mut TcpStream, code: u16, body: &str) -> Result<()> {
-    let status = match code {
+pub fn status_text(code: u16) -> &'static str {
+    match code {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
-    };
-    let resp = format!(
-        "HTTP/1.1 {code} {status}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+    }
+}
+
+/// Fixed-length JSON response with extra headers (e.g. `Retry-After`).
+pub fn write_response_with(
+    stream: &mut TcpStream,
+    code: u16,
+    extra_headers: &[(&str, &str)],
+    body: &str,
+) -> Result<()> {
+    let mut resp = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        status_text(code),
         body.len()
     );
+    for (k, v) in extra_headers {
+        resp.push_str(&format!("{k}: {v}\r\n"));
+    }
+    resp.push_str("\r\n");
+    resp.push_str(body);
     stream.write_all(resp.as_bytes())?;
     stream.flush()?;
     Ok(())
+}
+
+pub fn write_response(stream: &mut TcpStream, code: u16, body: &str) -> Result<()> {
+    write_response_with(stream, code, &[], body)
+}
+
+/// Chunked-transfer response writer: the streaming `/generate` path emits
+/// one chunk per NDJSON line, so a client observes each token the moment
+/// it is sampled (TTFT) instead of after full completion. Owns a cloned
+/// socket handle so the caller keeps its own for error responses.
+pub struct ChunkedWriter {
+    stream: TcpStream,
+}
+
+impl ChunkedWriter {
+    /// Write the status line + `Transfer-Encoding: chunked` header block.
+    pub fn begin(stream: TcpStream, code: u16, content_type: &str) -> Result<ChunkedWriter> {
+        let head = format!(
+            "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\n\
+             Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+            status_text(code)
+        );
+        let mut w = ChunkedWriter { stream };
+        w.stream.write_all(head.as_bytes())?;
+        w.stream.flush()?;
+        Ok(w)
+    }
+
+    /// One data chunk, flushed immediately. Empty data is skipped (a
+    /// zero-length chunk would terminate the stream).
+    pub fn chunk(&mut self, data: &str) -> Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        let framed = format!("{:x}\r\n{data}\r\n", data.len());
+        self.stream.write_all(framed.as_bytes())?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Terminating zero chunk.
+    pub fn finish(mut self) -> Result<()> {
+        self.stream.write_all(b"0\r\n\r\n")?;
+        self.stream.flush()?;
+        Ok(())
+    }
+}
+
+/// Read one full response: status line, headers, and a body framed by
+/// Content-Length, chunked transfer coding, or connection close.
+pub fn read_response(stream: &mut TcpStream) -> Result<HttpResponse> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    read_response_from(&mut reader)
+}
+
+/// [`read_response`] over any buffered reader (benches wrap the socket
+/// themselves to timestamp individual chunks).
+pub fn read_response_from<R: BufRead>(reader: &mut R) -> Result<HttpResponse> {
+    let status = read_line_capped(reader)?;
+    let code: u16 = status
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| Error::Io(format!("bad status line {status:?}")))?;
+    let headers = read_headers(reader)?;
+    let chunked = header_lookup(&headers, "transfer-encoding")
+        .map(|v| v.to_ascii_lowercase().contains("chunked"))
+        .unwrap_or(false);
+    let body = if chunked {
+        let mut out = Vec::new();
+        loop {
+            let Some(data) = read_chunk(reader)? else { break };
+            out.extend_from_slice(&data);
+            if out.len() > MAX_BODY {
+                return Err(Error::Io("chunked body too large".into()));
+            }
+        }
+        out
+    } else if let Some(len) = header_lookup(&headers, "content-length") {
+        let len: usize = len
+            .trim()
+            .parse()
+            .map_err(|_| Error::Io(format!("bad Content-Length {len:?}")))?;
+        if len > MAX_BODY {
+            return Err(Error::Io("body too large".into()));
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body)?;
+        body
+    } else {
+        // Connection: close framing
+        let mut body = Vec::new();
+        reader.read_to_end(&mut body)?;
+        body
+    };
+    Ok(HttpResponse {
+        code,
+        headers,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+/// One chunk of a chunked body: `Some(data)`, or `None` for the
+/// terminating zero chunk (trailing CRLF consumed either way).
+pub fn read_chunk<R: BufRead>(reader: &mut R) -> Result<Option<Vec<u8>>> {
+    let size_line = read_line_capped(reader)?;
+    let size = usize::from_str_radix(size_line.trim(), 16)
+        .map_err(|_| Error::Io(format!("bad chunk size {size_line:?}")))?;
+    if size > MAX_BODY {
+        return Err(Error::Io("chunk too large".into()));
+    }
+    if size == 0 {
+        let mut crlf = String::new();
+        let _ = reader.read_line(&mut crlf);
+        return Ok(None);
+    }
+    let mut data = vec![0u8; size];
+    reader.read_exact(&mut data)?;
+    let mut crlf = [0u8; 2];
+    reader.read_exact(&mut crlf)?;
+    Ok(Some(data))
 }
 
 #[cfg(test)]
@@ -89,48 +286,182 @@ mod tests {
     use super::*;
     use std::net::TcpListener;
 
-    #[test]
-    fn roundtrip_post() {
+    /// Run `server` against a raw client payload; returns what the client
+    /// read back.
+    fn with_conn(
+        server: impl FnOnce(&mut TcpStream) + Send + 'static,
+        client_payload: &[u8],
+    ) -> String {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let server = std::thread::spawn(move || {
+        let handle = std::thread::spawn(move || {
             let (mut s, _) = listener.accept().unwrap();
-            let req = read_request(&mut s).unwrap();
-            assert_eq!(req.method, "POST");
-            assert_eq!(req.path, "/generate");
-            assert_eq!(req.body, "{\"x\":1}");
-            assert_eq!(req.header("content-type"), Some("application/json"));
-            write_response(&mut s, 200, "{\"ok\":true}").unwrap();
+            server(&mut s);
         });
         let mut c = TcpStream::connect(addr).unwrap();
-        c.write_all(
-            b"POST /generate HTTP/1.1\r\nContent-Type: application/json\r\n\
-              Content-Length: 7\r\n\r\n{\"x\":1}",
-        )
-        .unwrap();
+        c.write_all(client_payload).unwrap();
+        c.shutdown(std::net::Shutdown::Write).ok();
         let mut out = String::new();
         c.read_to_string(&mut out).unwrap();
+        handle.join().unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrip_post() {
+        let out = with_conn(
+            |s| {
+                let req = read_request(s).unwrap();
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/generate");
+                assert_eq!(req.body, "{\"x\":1}");
+                assert_eq!(req.header("content-type"), Some("application/json"));
+                write_response(s, 200, "{\"ok\":true}").unwrap();
+            },
+            b"POST /generate HTTP/1.1\r\nContent-Type: application/json\r\n\
+              Content-Length: 7\r\n\r\n{\"x\":1}",
+        );
         assert!(out.starts_with("HTTP/1.1 200"));
         assert!(out.ends_with("{\"ok\":true}"));
-        server.join().unwrap();
     }
 
     #[test]
     fn get_without_body() {
+        let out = with_conn(
+            |s| {
+                let req = read_request(s).unwrap();
+                assert_eq!(req.method, "GET");
+                assert_eq!(req.body, "");
+                write_response(s, 404, "{}").unwrap();
+            },
+            b"GET /nope HTTP/1.1\r\n\r\n",
+        );
+        assert!(out.starts_with("HTTP/1.1 404"));
+    }
+
+    #[test]
+    fn malformed_request_line_rejected() {
+        for payload in [
+            &b"\r\n\r\n"[..],                  // empty request line
+            &b"GARBAGE\r\n\r\n"[..],           // no path
+            &b"GET nopath HTTP/1.1\r\n\r\n"[..], // path missing leading /
+        ] {
+            let out = with_conn(
+                |s| {
+                    assert!(read_request(s).is_err());
+                    write_response(s, 400, "{}").unwrap();
+                },
+                payload,
+            );
+            assert!(out.starts_with("HTTP/1.1 400"), "payload {payload:?}");
+        }
+    }
+
+    #[test]
+    fn missing_content_length_means_empty_body() {
+        with_conn(
+            |s| {
+                let req = read_request(s).unwrap();
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.body, "");
+                write_response(s, 200, "{}").unwrap();
+            },
+            b"POST /generate HTTP/1.1\r\n\r\n{\"ignored\":true}",
+        );
+    }
+
+    #[test]
+    fn bad_and_oversized_content_length_rejected() {
+        for cl in ["banana", "-5", "999999999999999"] {
+            let payload = format!("POST /x HTTP/1.1\r\nContent-Length: {cl}\r\n\r\n");
+            let out = with_conn(
+                move |s| {
+                    assert!(read_request(s).is_err());
+                    write_response(s, 400, "{}").unwrap();
+                },
+                payload.as_bytes(),
+            );
+            assert!(out.starts_with("HTTP/1.1 400"), "Content-Length {cl}");
+        }
+    }
+
+    #[test]
+    fn header_lookup_is_case_insensitive() {
+        with_conn(
+            |s| {
+                let req = read_request(s).unwrap();
+                assert_eq!(req.header("x-mixed-case"), Some("yes"));
+                assert_eq!(req.header("X-MIXED-CASE"), Some("yes"));
+                assert_eq!(req.header("X-Mixed-Case"), Some("yes"));
+                assert_eq!(req.header("absent"), None);
+                write_response(s, 200, "{}").unwrap();
+            },
+            b"GET /h HTTP/1.1\r\nX-MiXeD-cAsE: yes\r\n\r\n",
+        );
+    }
+
+    #[test]
+    fn response_with_extra_headers() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let server = std::thread::spawn(move || {
+        let handle = std::thread::spawn(move || {
             let (mut s, _) = listener.accept().unwrap();
-            let req = read_request(&mut s).unwrap();
-            assert_eq!(req.method, "GET");
-            assert_eq!(req.body, "");
-            write_response(&mut s, 404, "{}").unwrap();
+            let _ = read_request(&mut s).unwrap();
+            write_response_with(&mut s, 429, &[("Retry-After", "1")], "{\"error\":\"busy\"}")
+                .unwrap();
         });
         let mut c = TcpStream::connect(addr).unwrap();
-        c.write_all(b"GET /nope HTTP/1.1\r\n\r\n").unwrap();
-        let mut out = String::new();
-        c.read_to_string(&mut out).unwrap();
-        assert!(out.starts_with("HTTP/1.1 404"));
-        server.join().unwrap();
+        c.write_all(b"POST /generate HTTP/1.1\r\n\r\n").unwrap();
+        let resp = read_response(&mut c).unwrap();
+        assert_eq!(resp.code, 429);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.body, "{\"error\":\"busy\"}");
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn chunked_response_roundtrips() {
+        let lines = ["{\"token\":1}\n", "{\"token\":2}\n", "{\"done\":true}\n"];
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let _ = read_request(&mut s).unwrap();
+            let mut w =
+                ChunkedWriter::begin(s.try_clone().unwrap(), 200, "application/x-ndjson").unwrap();
+            for l in lines {
+                w.chunk(l).unwrap();
+            }
+            w.chunk("").unwrap(); // must NOT terminate the stream
+            w.chunk(lines[0]).unwrap();
+            w.finish().unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"GET /stream HTTP/1.1\r\n\r\n").unwrap();
+        let resp = read_response(&mut c).unwrap();
+        assert_eq!(resp.code, 200);
+        assert!(resp
+            .header("transfer-encoding")
+            .unwrap()
+            .contains("chunked"));
+        let want: String = lines.iter().copied().collect::<String>() + lines[0];
+        assert_eq!(resp.body, want);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn chunk_reader_parses_frames_individually() {
+        let framed = b"3\r\nabc\r\n1\r\nz\r\n0\r\n\r\n";
+        let mut r = std::io::BufReader::new(&framed[..]);
+        assert_eq!(read_chunk(&mut r).unwrap().unwrap(), b"abc");
+        assert_eq!(read_chunk(&mut r).unwrap().unwrap(), b"z");
+        assert!(read_chunk(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn chunk_reader_rejects_bad_size() {
+        let framed = b"xyz\r\nabc\r\n";
+        let mut r = std::io::BufReader::new(&framed[..]);
+        assert!(read_chunk(&mut r).is_err());
     }
 }

@@ -1,56 +1,127 @@
-//! Minimal HTTP/1.1 serving frontend (offline substitute for axum/hyper).
+//! HTTP/1.1 serving frontend (offline substitute for axum/hyper), built
+//! for load: streaming token output, bounded-queue backpressure, a
+//! connection worker pool, SLO telemetry, and graceful drain.
 //!
-//! The engine owns non-`Send` PJRT handles, so it lives on a dedicated
-//! engine thread; connection handlers parse requests and exchange
-//! (request, reply-channel) pairs with it over std mpsc. Endpoints:
+//! The engine owns potentially non-`Send` backend handles (PJRT does), so
+//! it lives on a dedicated engine thread; connection handlers run on a
+//! [`ThreadPool`] and exchange messages with it over std mpsc. Each
+//! generation gets a per-request event channel carrying every sampled
+//! token the moment it exists, so TTFT is observable at the client
+//! instead of buried behind full-completion latency.
+//!
+//! Endpoints:
 //!
 //!   POST /generate   {"prompt": str, "max_tokens": n, "temperature": x,
-//!                     "top_p": x}  -> {"id", "text", "tokens", ...}
-//!   GET  /metrics    -> JSON MoE + request telemetry
+//!                     "top_p": x, "stream": bool}
+//!                    stream=false -> one JSON object (text + telemetry)
+//!                    stream=true  -> chunked NDJSON: one line per token
+//!                    ({"id","index","token","text"} — per-token text is
+//!                    a best-effort preview, lossy across multi-byte
+//!                    characters), then a final {"done":true, "text":
+//!                    <authoritative full text>, ...telemetry} line
+//!                    queue full   -> 429 + Retry-After (backpressure)
+//!   GET  /metrics    -> MoE + request telemetry + SLO percentiles
+//!                    (queue wait / TTFT / TPOT / e2e, p50/p95/p99)
 //!   GET  /healthz    -> ok
+//!   POST /shutdown   -> stop accepting, drain running requests, exit
 
 pub mod http;
 
-use std::net::TcpListener;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use crate::backend::Backend;
-use crate::coordinator::{Engine, GenRequest};
+use crate::coordinator::{Engine, FinishReason, FinishedRequest, GenRequest, TokenEvent};
 use crate::util::bpe::Tokenizer;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
-use http::{read_request, write_response, HttpRequest};
+use crate::util::threadpool::ThreadPool;
+use http::{read_request, write_response, write_response_with, ChunkedWriter, HttpRequest};
+
+/// Hint clients send with a 429 (seconds).
+const RETRY_AFTER_S: &str = "1";
+
+/// Server-edge options for [`serve`] (the engine-side knobs — policy,
+/// `max_running`, `max_queue` — live in
+/// [`crate::coordinator::EngineConfig`]).
+pub struct ServeOptions {
+    /// exit (with a graceful drain) after this many finished generations
+    pub max_requests: Option<usize>,
+    /// connection worker threads handling requests concurrently. A
+    /// generation handler holds its worker until the response completes,
+    /// so size this ABOVE the engine's `max_running` or the decode batch
+    /// can never fill (the CLI defaults to `max_running + 16`).
+    pub http_workers: usize,
+    /// receives the bound address once the listener is up (lets tests and
+    /// benches serve on port 0)
+    pub ready: Option<mpsc::Sender<SocketAddr>>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { max_requests: None, http_workers: 8, ready: None }
+    }
+}
 
 enum EngineMsg {
-    Generate(GenRequest, mpsc::Sender<Json>),
+    /// (request, client wants per-token events, reply stream). The flag
+    /// lets the engine thread skip per-token channel sends for the
+    /// non-streaming majority — their tokens arrive inside `Done`.
+    Generate(GenRequest, bool, mpsc::Sender<GenEvent>),
     Metrics(mpsc::Sender<Json>),
     Shutdown,
 }
 
-/// Serve on `addr` until `max_requests` generations complete (`None` =
-/// forever). Backends may own non-`Send` handles (PJRT does), so the
-/// engine is CONSTRUCTED on the engine thread via `engine_builder`; the
-/// tokenizer translates text <-> ids at the edge.
+/// Per-request events from the engine thread to a connection handler.
+enum GenEvent {
+    /// bounded admission queue overflow -> HTTP 429
+    Rejected,
+    /// server draining, no new work accepted -> HTTP 503
+    Draining,
+    Token(TokenEvent),
+    Done(Box<FinishedRequest>),
+}
+
+/// Serve on `addr` until a graceful shutdown (`POST /shutdown`) or until
+/// `opts.max_requests` generations complete. Backends may own non-`Send`
+/// handles (PJRT does), so the engine is CONSTRUCTED on the engine thread
+/// via `engine_builder`; the tokenizer translates text <-> ids at the
+/// edge. In-flight requests are drained before the listener exits.
 pub fn serve<B, F>(
     engine_builder: F,
     tokenizer: Tokenizer,
     addr: &str,
-    max_requests: Option<usize>,
+    opts: ServeOptions,
 ) -> Result<()>
 where
     B: Backend + 'static,
     F: FnOnce() -> Result<Engine<B>> + Send + 'static,
 {
     let listener = TcpListener::bind(addr).map_err(|e| Error::Io(format!("bind {addr}: {e}")))?;
-    listener.set_nonblocking(false).ok();
-    crate::log_info!("server", "listening on {addr}");
+    let local = listener
+        .local_addr()
+        .map_err(|e| Error::Io(format!("local_addr: {e}")))?;
+    crate::log_info!("server", "listening on {local}");
+    if let Some(ready) = &opts.ready {
+        let _ = ready.send(local);
+    }
 
     let (tx, rx) = mpsc::channel::<EngineMsg>();
     let tok = Arc::new(tokenizer);
-    let tok_engine = Arc::clone(&tok);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicUsize::new(0));
+    // a crash must be distinguishable from a graceful drain: supervisors
+    // and the CI smoke check the process exit status
+    let engine_failed = Arc::new(AtomicBool::new(false));
 
-    // engine thread: owns the PJRT stack
+    // engine thread: owns the backend stack, streams per-token events out
+    let engine_shutdown = Arc::clone(&shutdown);
+    let engine_served = Arc::clone(&served);
+    let failed = Arc::clone(&engine_failed);
     let engine_thread = std::thread::spawn(move || {
         let mut engine = match engine_builder() {
             Ok(e) => e,
@@ -60,62 +131,71 @@ where
                     "engine",
                     &format!("failed to start: {e}"),
                 );
+                // unblock the accept loop; handlers see a dead channel
+                failed.store(true, Ordering::SeqCst);
+                engine_shutdown.store(true, Ordering::SeqCst);
                 return;
             }
         };
         let mut next_id = 1u64;
-        let mut waiting: Vec<(u64, mpsc::Sender<Json>)> = Vec::new();
-        let mut served = 0usize;
+        // open per-request event streams, keyed by engine request id;
+        // the bool records whether the client wants per-token events
+        let mut streams: BTreeMap<u64, (mpsc::Sender<GenEvent>, bool)> = BTreeMap::new();
+        let mut draining = false;
         loop {
-            // drain the message queue
+            // drain the control queue
             loop {
                 match rx.try_recv() {
-                    Ok(EngineMsg::Generate(mut req, reply)) => {
+                    Ok(EngineMsg::Generate(mut req, wants_tokens, reply)) => {
+                        if draining {
+                            let _ = reply.send(GenEvent::Draining);
+                            continue;
+                        }
                         req.id = next_id;
                         next_id += 1;
-                        waiting.push((req.id, reply));
-                        engine.submit(req);
+                        let id = req.id;
+                        match engine.try_submit(req) {
+                            Ok(()) => {
+                                streams.insert(id, (reply, wants_tokens));
+                            }
+                            Err(_) => {
+                                let _ = reply.send(GenEvent::Rejected);
+                            }
+                        }
                     }
                     Ok(EngineMsg::Metrics(reply)) => {
                         let _ = reply.send(metrics_json(&engine));
                     }
-                    Ok(EngineMsg::Shutdown) => return,
+                    Ok(EngineMsg::Shutdown) => draining = true,
                     Err(mpsc::TryRecvError::Empty) => break,
-                    Err(mpsc::TryRecvError::Disconnected) => return,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        draining = true;
+                        break;
+                    }
                 }
             }
             if engine.idle() {
+                if draining {
+                    return; // drained: every accepted request has finished
+                }
                 // park briefly; nothing to decode
-                std::thread::sleep(std::time::Duration::from_millis(1));
+                std::thread::sleep(Duration::from_millis(1));
                 continue;
             }
-            match engine.step() {
-                Ok(finished) => {
-                    for f in finished {
-                        if let Some(pos) = waiting.iter().position(|(id, _)| *id == f.id) {
-                            let (_, reply) = waiting.swap_remove(pos);
-                            let text = tok_engine
-                                .decode(&f.tokens.iter().map(|&t| t as u32).collect::<Vec<_>>());
-                            let _ = reply.send(Json::obj(vec![
-                                ("id", Json::num(f.id as f64)),
-                                ("text", Json::str(&text)),
-                                ("n_tokens", Json::num(f.tokens.len() as f64)),
-                                ("prompt_len", Json::num(f.prompt_len as f64)),
-                                ("finish_reason", Json::str(match f.reason {
-                                    crate::coordinator::FinishReason::Length => "length",
-                                    crate::coordinator::FinishReason::Eos => "eos",
-                                    crate::coordinator::FinishReason::KvExhausted => "kv_exhausted",
-                                })),
-                                ("ttft_ms", Json::num(f.ttft_us / 1e3)),
-                                ("e2e_ms", Json::num(f.e2e_us / 1e3)),
-                            ]));
-                            served += 1;
+            match engine.step_events() {
+                Ok(ev) => {
+                    for t in ev.tokens {
+                        if let Some((stream, wants_tokens)) = streams.get(&t.id) {
+                            if *wants_tokens {
+                                let _ = stream.send(GenEvent::Token(t));
+                            }
                         }
                     }
-                    if let Some(maxr) = max_requests {
-                        if served >= maxr {
-                            return;
+                    for f in ev.finished {
+                        if let Some((stream, _)) = streams.remove(&f.id) {
+                            let _ = stream.send(GenEvent::Done(Box::new(f)));
                         }
+                        engine_served.fetch_add(1, Ordering::SeqCst);
                     }
                 }
                 Err(e) => {
@@ -124,29 +204,32 @@ where
                         "engine",
                         &format!("step failed: {e}"),
                     );
+                    failed.store(true, Ordering::SeqCst);
+                    engine_shutdown.store(true, Ordering::SeqCst);
                     return;
                 }
             }
         }
     });
 
-    // accept loop (this thread); handlers run DETACHED so concurrent
-    // clients batch together in the engine — joining inline would
-    // serialize requests and defeat continuous batching. The listener is
-    // non-blocking so the served-count exit condition is polled even when
-    // no further connection ever arrives.
+    // accept loop (this thread) feeding the connection worker pool. The
+    // listener is non-blocking so the shutdown flag and the served-count
+    // exit condition are polled even when no further connection arrives.
     listener.set_nonblocking(true).ok();
-    let served = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let pool = ThreadPool::new(opts.http_workers.max(1));
     loop {
-        if let Some(maxr) = max_requests {
-            if served.load(std::sync::atomic::Ordering::SeqCst) >= maxr {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Some(maxr) = opts.max_requests {
+            if served.load(Ordering::SeqCst) >= maxr {
                 break;
             }
         }
-        let mut stream = match listener.accept() {
+        let stream = match listener.accept() {
             Ok((s, _)) => s,
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
+                std::thread::sleep(Duration::from_millis(2));
                 continue;
             }
             Err(_) => continue,
@@ -154,87 +237,248 @@ where
         stream.set_nonblocking(false).ok();
         let tx = tx.clone();
         let tok = Arc::clone(&tok);
-        let served = Arc::clone(&served);
-        std::thread::spawn(move || {
-            let req = match read_request(&mut stream) {
-                Ok(r) => r,
-                Err(e) => {
-                    let _ = write_response(&mut stream, 400, &format!("bad request: {e}"));
-                    return;
-                }
-            };
-            let is_gen = req.method == "POST" && req.path == "/generate";
-            match handle(req, &tx, &tok) {
-                Ok((code, body)) => {
-                    let _ = write_response(&mut stream, code, &body);
-                }
-                Err(e) => {
-                    let _ = write_response(&mut stream, 500, &e.to_string());
-                }
-            }
-            if is_gen {
-                served.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-            }
+        let shutdown = Arc::clone(&shutdown);
+        pool.execute(move || {
+            // a panicking handler must not kill its pool worker
+            let _ = catch_unwind(AssertUnwindSafe(|| {
+                handle_connection(stream, &tx, &tok, &shutdown);
+            }));
         });
     }
+
+    // graceful drain: stop accepting, let in-flight handlers finish
+    // against the still-running engine, then retire the engine thread.
+    drop(listener);
+    drop(pool); // joins workers: every accepted connection gets its reply
     let _ = tx.send(EngineMsg::Shutdown);
+    drop(tx);
     let _ = engine_thread.join();
+    if engine_failed.load(Ordering::SeqCst) {
+        return Err(Error::Engine("engine thread failed; see logs".into()));
+    }
     Ok(())
 }
 
-fn handle(
+fn handle_connection(
+    mut stream: TcpStream,
+    tx: &mpsc::Sender<EngineMsg>,
+    tok: &Tokenizer,
+    shutdown: &AtomicBool,
+) {
+    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    // a client that stops reading mid-stream must not pin a pool worker
+    // forever (write_all would otherwise block on a zero recv window,
+    // and graceful drain joins the pool)
+    stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = write_response(&mut stream, 400, &err_json(&format!("bad request: {e}")));
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let _ = write_response(&mut stream, 200, "{\"status\":\"ok\"}");
+        }
+        ("GET", "/metrics") => {
+            let (rtx, rrx) = mpsc::channel();
+            let body = tx
+                .send(EngineMsg::Metrics(rtx))
+                .ok()
+                .and_then(|_| rrx.recv().ok());
+            match body {
+                Some(m) => {
+                    let _ = write_response(&mut stream, 200, &m.write());
+                }
+                None => {
+                    let _ = write_response(&mut stream, 503, &err_json("engine unavailable"));
+                }
+            }
+        }
+        ("POST", "/shutdown") => {
+            shutdown.store(true, Ordering::SeqCst);
+            let _ = write_response(&mut stream, 200, "{\"status\":\"draining\"}");
+        }
+        ("POST", "/generate") => handle_generate(stream, req, tx, tok),
+        _ => {
+            let _ = write_response(&mut stream, 404, &err_json("not found"));
+        }
+    }
+}
+
+/// Submit one generation and relay its event stream to the client, either
+/// as a single JSON object or as chunked NDJSON (one line per token).
+fn handle_generate(
+    mut stream: TcpStream,
     req: HttpRequest,
     tx: &mpsc::Sender<EngineMsg>,
     tok: &Tokenizer,
-) -> Result<(u16, String)> {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => Ok((200, "{\"status\":\"ok\"}".into())),
-        ("GET", "/metrics") => {
-            let (rtx, rrx) = mpsc::channel();
-            tx.send(EngineMsg::Metrics(rtx))
-                .map_err(|_| Error::Engine("engine gone".into()))?;
-            let m = rrx
-                .recv()
-                .map_err(|_| Error::Engine("engine gone".into()))?;
-            Ok((200, m.write()))
+) {
+    let (gen_req, stream_mode) = match parse_generate(&req, tok) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = write_response(&mut stream, 400, &err_json(&e.to_string()));
+            return;
         }
-        ("POST", "/generate") => {
-            let body = Json::parse(&req.body)?;
-            let prompt_text = body.get("prompt")?.as_str()?;
-            let max_tokens = body
-                .get_opt("max_tokens")
-                .map(|v| v.as_usize())
-                .transpose()?
-                .unwrap_or(32);
-            let temperature = body
-                .get_opt("temperature")
-                .map(|v| v.as_f64())
-                .transpose()?
-                .unwrap_or(0.0) as f32;
-            let top_p = body
-                .get_opt("top_p")
-                .map(|v| v.as_f64())
-                .transpose()?
-                .unwrap_or(1.0) as f32;
-            let prompt: Vec<i32> = tok.encode(prompt_text).iter().map(|&t| t as i32).collect();
-            let gen_req = GenRequest {
-                id: 0, // assigned by the engine thread
-                prompt,
-                max_new_tokens: max_tokens,
-                temperature,
-                top_p,
-                seed: 0xC0FFEE,
-            };
-            let (rtx, rrx) = mpsc::channel();
-            tx.send(EngineMsg::Generate(gen_req, rtx))
-                .map_err(|_| Error::Engine("engine gone".into()))?;
-            let out = rrx
-                .recv()
-                .map_err(|_| Error::Engine("engine gone".into()))?;
-            Ok((200, out.write()))
-        }
-        _ => Ok((404, "{\"error\":\"not found\"}".into())),
+    };
+    let (etx, erx) = mpsc::channel();
+    if tx.send(EngineMsg::Generate(gen_req, stream_mode, etx)).is_err() {
+        let _ = write_response(&mut stream, 503, &err_json("engine unavailable"));
+        return;
     }
+    let mut writer: Option<ChunkedWriter> = None;
+    loop {
+        match erx.recv() {
+            Ok(GenEvent::Rejected) => {
+                let _ = write_response_with(
+                    &mut stream,
+                    429,
+                    &[("Retry-After", RETRY_AFTER_S)],
+                    &err_json("queue full"),
+                );
+                return;
+            }
+            Ok(GenEvent::Draining) => {
+                let _ = write_response(&mut stream, 503, &err_json("server draining"));
+                return;
+            }
+            Ok(GenEvent::Token(ev)) => {
+                if !stream_mode {
+                    continue; // tokens arrive again inside Done
+                }
+                if writer.is_none() {
+                    match begin_stream(&stream) {
+                        Some(w) => writer = Some(w),
+                        None => return, // client went away
+                    }
+                }
+                let mut line = Json::obj(vec![
+                    ("id", Json::num(ev.id as f64)),
+                    ("index", Json::num(ev.index as f64)),
+                    ("token", Json::num(ev.token as f64)),
+                    ("text", Json::str(&tok.decode(&[ev.token as u32]))),
+                ])
+                .write();
+                line.push('\n');
+                if let Some(w) = writer.as_mut() {
+                    if w.chunk(&line).is_err() {
+                        // client disconnected mid-stream; the engine keeps
+                        // decoding (no cancellation propagation yet) but
+                        // nothing more can be written
+                        return;
+                    }
+                }
+            }
+            Ok(GenEvent::Done(f)) => {
+                let text = tok.decode(&f.tokens.iter().map(|&t| t as u32).collect::<Vec<_>>());
+                let fin = finished_json(&f, &text);
+                if stream_mode {
+                    // a request finished with zero tokens (e.g. an
+                    // overlong prompt) still gets a valid chunked reply
+                    if writer.is_none() {
+                        match begin_stream(&stream) {
+                            Some(w) => writer = Some(w),
+                            None => return,
+                        }
+                    }
+                    if let Some(mut w) = writer.take() {
+                        let _ = w.chunk(&(fin.write() + "\n"));
+                        let _ = w.finish();
+                    }
+                } else {
+                    let _ = write_response(&mut stream, 200, &fin.write());
+                }
+                return;
+            }
+            Err(_) => {
+                // engine thread died before completing this request
+                if writer.is_none() {
+                    let _ = write_response(&mut stream, 503, &err_json("engine unavailable"));
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Open the chunked NDJSON response on a cloned socket handle (the
+/// caller keeps its own handle for error responses).
+fn begin_stream(stream: &TcpStream) -> Option<ChunkedWriter> {
+    let clone = stream.try_clone().ok()?;
+    ChunkedWriter::begin(clone, 200, "application/x-ndjson").ok()
+}
+
+fn parse_generate(req: &HttpRequest, tok: &Tokenizer) -> Result<(GenRequest, bool)> {
+    let body = Json::parse(&req.body)?;
+    let prompt_text = body.get("prompt")?.as_str()?;
+    let max_tokens = body
+        .get_opt("max_tokens")
+        .map(|v| v.as_usize())
+        .transpose()?
+        .unwrap_or(32);
+    let temperature = body
+        .get_opt("temperature")
+        .map(|v| v.as_f64())
+        .transpose()?
+        .unwrap_or(0.0) as f32;
+    let top_p = body
+        .get_opt("top_p")
+        .map(|v| v.as_f64())
+        .transpose()?
+        .unwrap_or(1.0) as f32;
+    let stream_mode = body
+        .get_opt("stream")
+        .map(|v| v.as_bool())
+        .transpose()?
+        .unwrap_or(false);
+    let prompt: Vec<i32> = tok.encode(prompt_text).iter().map(|&t| t as i32).collect();
+    Ok((
+        GenRequest {
+            id: 0, // assigned by the engine thread
+            prompt,
+            max_new_tokens: max_tokens,
+            temperature,
+            top_p,
+            seed: 0xC0FFEE,
+        },
+        stream_mode,
+    ))
+}
+
+/// The completion object: final line of a stream (`done: true`) or the
+/// whole body of a non-streaming response. Always carries the full
+/// decoded text — per-token stream lines decode tokens individually,
+/// which is lossy across multi-byte characters, so the done line is the
+/// authoritative output.
+fn finished_json(f: &FinishedRequest, text: &str) -> Json {
+    let pairs = vec![
+        ("done", Json::Bool(true)),
+        ("id", Json::num(f.id as f64)),
+        ("n_tokens", Json::num(f.tokens.len() as f64)),
+        ("prompt_len", Json::num(f.prompt_len as f64)),
+        (
+            "finish_reason",
+            Json::str(match f.reason {
+                FinishReason::Length => "length",
+                FinishReason::Eos => "eos",
+                FinishReason::KvExhausted => "kv_exhausted",
+            }),
+        ),
+        ("queue_wait_ms", Json::num(f.queue_wait_us / 1e3)),
+        ("ttft_ms", Json::num(f.ttft_us / 1e3)),
+        (
+            "tpot_ms",
+            f.tpot_us().map(|t| Json::num(t / 1e3)).unwrap_or(Json::Null),
+        ),
+        ("e2e_ms", Json::num(f.e2e_us / 1e3)),
+        ("text", Json::str(text)),
+    ];
+    Json::obj(pairs)
+}
+
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).write()
 }
 
 fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
@@ -249,11 +493,13 @@ fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
             fit.map(|f| Json::num(f.r2)).unwrap_or(Json::Null),
         ),
         ("n_finished", Json::num(engine.requests.n_finished as f64)),
+        ("n_rejected", Json::num(engine.requests.n_rejected as f64)),
         (
             "generated_tokens",
             Json::num(engine.requests.total_generated_tokens as f64),
         ),
         ("n_running", Json::num(engine.n_running() as f64)),
         ("n_queued", Json::num(engine.n_queued() as f64)),
+        ("slo", engine.requests.slo_json()),
     ])
 }

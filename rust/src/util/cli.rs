@@ -92,10 +92,17 @@ impl Args {
     }
 
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.usize_opt(name)?.unwrap_or(default))
+    }
+
+    /// Present-or-absent integer option (for flags whose absence means a
+    /// different behaviour than any default value, e.g. `--max-requests`).
+    pub fn usize_opt(&self, name: &str) -> Result<Option<usize>> {
         match self.options.get(name) {
-            None => Ok(default),
+            None => Ok(None),
             Some(v) => v
                 .parse()
+                .map(Some)
                 .map_err(|_| Error::Config(format!("--{name} expects an integer, got {v:?}"))),
         }
     }
@@ -177,6 +184,8 @@ mod tests {
         let a = spec().parse(&argv(&["--k0", "5"]), false).unwrap();
         assert_eq!(a.usize_or("k0", 3).unwrap(), 5);
         assert_eq!(a.usize_or("missing", 3).unwrap(), 3);
+        assert_eq!(a.usize_opt("k0").unwrap(), Some(5));
+        assert_eq!(a.usize_opt("missing").unwrap(), None);
         let a = spec().parse(&argv(&["--k0", "3,4,5"]), false).unwrap();
         assert_eq!(a.usize_list_or("k0", &[]).unwrap(), vec![3, 4, 5]);
     }

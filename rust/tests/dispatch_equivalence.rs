@@ -213,3 +213,39 @@ fn grouped_threaded_is_deterministic() {
         );
     }
 }
+
+#[test]
+fn logits_parallel_matches_serial() {
+    // The unembedding GEMM fans batch rows out over the pool; per-row
+    // accumulation order is row-split-invariant, so the parallel result
+    // must match the serial one (1e-4 guards any future reassociating
+    // kernel change).
+    let cfg = ModelConfig::preset("small").unwrap();
+    let serial = CpuBackend::synthetic_with(
+        cfg.clone(),
+        0,
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1 },
+    );
+    let parallel = CpuBackend::synthetic_with(
+        cfg.clone(),
+        0,
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 4 },
+    );
+    let mut rng = Rng::new(7);
+    // the paper's operating point (B=16) plus odd sizes that exercise the
+    // partial last row-chunk of the split
+    for b in [1usize, 5, 16] {
+        let hidden: Vec<f32> = (0..b * cfg.d_model)
+            .map(|_| rng.gaussian() as f32 * 0.4)
+            .collect();
+        let a = serial.logits(&hidden).unwrap();
+        let p = parallel.logits(&hidden).unwrap();
+        assert_eq!(a.len(), b * cfg.vocab);
+        for (i, (x, y)) in a.iter().zip(p.iter()).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-4,
+                "B={b} logit {i}: serial {x} vs parallel {y}"
+            );
+        }
+    }
+}

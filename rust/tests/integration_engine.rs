@@ -23,6 +23,7 @@ where
         policy: Policy::Vanilla { k: 2 },
         mask_padding: true,
         max_running: 4,
+        max_queue: usize::MAX,
         eos_token: None,
         cost_model: H100Presets::qwen3_30b(),
     };
@@ -169,6 +170,102 @@ fn every_policy_serves_through_the_engine() {
             },
         );
     }
+}
+
+#[test]
+fn bounded_queue_rejects_and_counts() {
+    with_engine(
+        |c| {
+            c.max_running = 1;
+            c.max_queue = 2;
+        },
+        |engine| {
+            // idle capacity = free slots + max_queue = 1 + 2
+            assert!(engine.try_submit(req(1, 4, 4)).is_ok());
+            assert!(engine.try_submit(req(2, 4, 4)).is_ok());
+            assert!(engine.try_submit(req(3, 4, 4)).is_ok());
+            let back = engine.try_submit(req(4, 4, 4));
+            assert_eq!(back.unwrap_err().id, 4, "rejected request returns to caller");
+            assert_eq!(engine.requests.n_rejected, 1);
+            // a step admits one into the running slot: 1 running + 2
+            // queued is the steady-state bound, so the system stays full
+            engine.step().unwrap();
+            assert_eq!(engine.n_running(), 1);
+            assert!(engine.try_submit(req(5, 4, 4)).is_err(), "slots busy + queue full");
+            let done = engine.run_to_completion().unwrap();
+            assert_eq!(done.len(), 3, "accepted requests all finish");
+            // queue-wait telemetry recorded per admission
+            assert_eq!(engine.requests.queue_wait_us.len(), 3);
+            for f in &done {
+                assert!(f.queue_wait_us >= 0.0);
+                assert!(f.ttft_us >= f.queue_wait_us, "TTFT includes queue wait");
+            }
+        },
+    );
+}
+
+#[test]
+#[should_panic(expected = "queue full")]
+fn submit_panics_on_overflow() {
+    with_engine(
+        |c| {
+            c.max_running = 1;
+            c.max_queue = 1;
+        },
+        |engine| {
+            engine.submit(req(1, 4, 4));
+            engine.submit(req(2, 4, 4));
+            engine.submit(req(3, 4, 4)); // beyond free slot + queue bound
+        },
+    );
+}
+
+#[test]
+fn single_token_budget_is_respected() {
+    // max_new_tokens=1 must yield exactly one token (the prefill sample),
+    // and max_new_tokens=0 none — not the decode-step overshoot
+    with_engine(|_| {}, |engine| {
+        engine.submit(req(21, 5, 1));
+        let done = engine.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens.len(), 1);
+        assert_eq!(done[0].reason, FinishReason::Length);
+        assert!(done[0].ttft_us > 0.0);
+        assert!(done[0].tpot_us().is_none(), "no inter-token latency for 1 token");
+        assert_eq!(engine.requests.total_generated_tokens, 1);
+    });
+    with_engine(|_| {}, |engine| {
+        engine.submit(req(22, 5, 0));
+        let done = engine.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].tokens.is_empty());
+    });
+}
+
+#[test]
+fn token_events_cover_every_generated_token() {
+    with_engine(|_| {}, |engine| {
+        engine.submit(req(11, 5, 6));
+        let mut tokens = Vec::new();
+        let mut finished = Vec::new();
+        while !engine.idle() {
+            let ev = engine.step_events().unwrap();
+            tokens.extend(ev.tokens);
+            finished.extend(ev.finished);
+        }
+        assert_eq!(finished.len(), 1);
+        let f = &finished[0];
+        assert_eq!(tokens.len(), f.tokens.len(), "one event per output token");
+        for (i, ev) in tokens.iter().enumerate() {
+            assert_eq!(ev.id, 11);
+            assert_eq!(ev.index, i, "events arrive in order");
+            assert_eq!(ev.token, f.tokens[i], "events match the final output");
+        }
+        // the admission-time first token is the TTFT observable
+        assert_eq!(tokens[0].index, 0);
+        assert!(f.tpot_us().unwrap() >= 0.0);
+        assert_eq!(engine.requests.tpot_us.len(), 1);
+    });
 }
 
 #[test]

@@ -1,0 +1,174 @@
+//! End-to-end HTTP serving over the hermetic CPU backend: streaming
+//! NDJSON responses, bounded-queue backpressure (429 + Retry-After), SLO
+//! percentiles on /metrics, and graceful drain via /shutdown. One test
+//! drives one server through every phase (phases share engine state, and
+//! a single listener avoids port races under parallel test threads).
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
+use oea_serve::coordinator::{Engine, EngineConfig};
+use oea_serve::latency::H100Presets;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::server::http::{read_response, HttpResponse};
+use oea_serve::server::{self, ServeOptions};
+use oea_serve::util::bpe::Tokenizer;
+use oea_serve::util::json::Json;
+
+fn request(addr: &std::net::SocketAddr, raw: &str) -> HttpResponse {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    s.write_all(raw.as_bytes()).unwrap();
+    read_response(&mut s).expect("response")
+}
+
+fn post(addr: &std::net::SocketAddr, path: &str, body: &str) -> HttpResponse {
+    request(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn get(addr: &std::net::SocketAddr, path: &str) -> HttpResponse {
+    request(addr, &format!("GET {path} HTTP/1.1\r\nConnection: close\r\n\r\n"))
+}
+
+fn gen_body(prompt: &str, max_tokens: usize, stream: bool) -> String {
+    Json::obj(vec![
+        ("prompt", Json::str(prompt)),
+        ("max_tokens", Json::num(max_tokens as f64)),
+        ("stream", Json::Bool(stream)),
+    ])
+    .write()
+}
+
+#[test]
+fn server_streams_backpressures_reports_and_drains() {
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let cost = H100Presets::for_config(&cfg.name);
+        server::serve(
+            move || {
+                Engine::new(
+                    ModelRunner::new(CpuBackend::synthetic(cfg, 0)),
+                    EngineConfig {
+                        policy: Policy::OeaSimplified { k0: 1, k: 2 },
+                        mask_padding: true,
+                        max_running: 2,
+                        max_queue: 1,
+                        eos_token: None,
+                        cost_model: cost,
+                    },
+                )
+            },
+            Tokenizer::byte_level(),
+            "127.0.0.1:0",
+            ServeOptions { max_requests: None, http_workers: 8, ready: Some(ready_tx) },
+        )
+    });
+    let addr = ready_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("server never bound");
+
+    // -- health ----------------------------------------------------------
+    let h = get(&addr, "/healthz");
+    assert_eq!(h.code, 200);
+    assert_eq!(Json::parse(&h.body).unwrap().get("status").unwrap().as_str().unwrap(), "ok");
+
+    // -- backpressure: burst > max_running + max_queue -> mixed 200/429 --
+    // a barrier releases every client at once so all requests reach the
+    // engine within one service time, forcing queue overflow
+    let burst = 8;
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(burst));
+    let clients: Vec<_> = (0..burst)
+        .map(|i| {
+            let addr = addr;
+            let barrier = std::sync::Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                post(
+                    &addr,
+                    "/generate",
+                    &gen_body(&format!("burst request number {i} padding the prompt"), 32, false),
+                )
+            })
+        })
+        .collect();
+    let responses: Vec<HttpResponse> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    let ok: Vec<&HttpResponse> = responses.iter().filter(|r| r.code == 200).collect();
+    let rejected: Vec<&HttpResponse> = responses.iter().filter(|r| r.code == 429).collect();
+    assert!(!ok.is_empty(), "no request succeeded under burst");
+    assert!(
+        !rejected.is_empty(),
+        "queue bound 1 never produced a 429 across {burst} concurrent requests"
+    );
+    assert_eq!(ok.len() + rejected.len(), burst, "unexpected status in {responses:?}");
+    for r in &rejected {
+        assert_eq!(r.header("retry-after"), Some("1"), "429 must carry Retry-After");
+        assert!(Json::parse(&r.body).unwrap().get("error").is_ok());
+    }
+    for r in &ok {
+        let v = Json::parse(&r.body).unwrap();
+        assert!(v.get("n_tokens").unwrap().as_usize().unwrap() > 0);
+        assert!(v.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(v.get("text").is_ok());
+        assert_eq!(v.get("finish_reason").unwrap().as_str().unwrap(), "length");
+    }
+
+    // -- streaming: one NDJSON line per token, then a done line ----------
+    let r = post(&addr, "/generate", &gen_body("stream this please", 6, true));
+    assert_eq!(r.code, 200);
+    assert!(r.header("transfer-encoding").unwrap().contains("chunked"));
+    let lines: Vec<Json> = r
+        .body
+        .lines()
+        .map(|l| Json::parse(l).expect("each stream line is JSON"))
+        .collect();
+    assert_eq!(lines.len(), 7, "6 token lines + 1 done line: {}", r.body);
+    for (i, line) in lines[..6].iter().enumerate() {
+        assert_eq!(line.get("index").unwrap().as_usize().unwrap(), i);
+        assert!(line.get("token").is_ok());
+        assert!(line.get("text").is_ok());
+    }
+    let done = &lines[6];
+    assert!(done.get("done").unwrap().as_bool().unwrap());
+    assert_eq!(done.get("n_tokens").unwrap().as_usize().unwrap(), 6);
+    assert!(done.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(done.get("tpot_ms").unwrap().as_f64().unwrap() >= 0.0);
+
+    // -- SLO metrics -----------------------------------------------------
+    let m = get(&addr, "/metrics");
+    assert_eq!(m.code, 200);
+    let v = Json::parse(&m.body).unwrap();
+    assert!(v.get("n_finished").unwrap().as_usize().unwrap() >= ok.len() + 1);
+    assert!(v.get("n_rejected").unwrap().as_usize().unwrap() >= rejected.len());
+    let slo = v.get("slo").unwrap();
+    for key in ["queue_wait_ms", "ttft_ms", "tpot_ms", "e2e_ms"] {
+        let p = slo.get(key).unwrap();
+        assert!(p.get("n").unwrap().as_usize().unwrap() > 0, "{key} has no samples");
+        let (p50, p95, p99) = (
+            p.get("p50").unwrap().as_f64().unwrap(),
+            p.get("p95").unwrap().as_f64().unwrap(),
+            p.get("p99").unwrap().as_f64().unwrap(),
+        );
+        assert!(p50 <= p95 && p95 <= p99, "{key}: {p50} {p95} {p99}");
+    }
+
+    // -- graceful drain --------------------------------------------------
+    let s = post(&addr, "/shutdown", "");
+    assert_eq!(s.code, 200);
+    handle
+        .join()
+        .expect("server thread panicked")
+        .expect("serve() returned an error");
+}
