@@ -7,7 +7,11 @@ backend and exercise the serving contract end to end:
      with a Retry-After header (backpressure);
   2. a streaming client (stream=true) receives chunked NDJSON: one line
      per token, then a final done line with TTFT/TPOT telemetry;
-  3. GET /metrics reports non-empty, ordered SLO percentiles;
+  3. GET /metrics reports non-empty, ordered SLO percentiles, plus the
+     expert residency block (hit rate, bytes paged, churn), the per-policy
+     expert_load histogram, and the n_cancelled counter — the server runs
+     with --expert-cache, so every cache metrics field must be present and
+     well-formed;
   4. POST /shutdown drains and the process exits 0 (graceful shutdown).
 
 Usage: python3 ci/serve_smoke.py <path-to-oea-serve-binary>
@@ -49,7 +53,9 @@ def check(cond, msg):
 def main():
     binary = sys.argv[1]
     proc = subprocess.Popen([
-        binary, "serve", "--config", "smoke", "--policy", "oea:k0=2",
+        binary, "serve", "--config", "smoke",
+        "--policy", "cache-aware:k0=2,alpha=0.5",
+        "--expert-cache", "8", "--evict", "lru", "--prefetch", "1",
         "--max-running", "2", "--max-queue", "2", "--http-workers", "8",
         "--port", str(PORT),
     ])
@@ -147,6 +153,35 @@ def run_checks(proc):
         check(p["n"] > 0, f"slo.{key} has samples")
         check(p["p50"] <= p["p95"] <= p["p99"],
               f"slo.{key} percentiles ordered ({p['p50']:.2f}/{p['p95']:.2f}/{p['p99']:.2f})")
+
+    # -- phase 3b: residency + expert-load + cancellation fields ----------
+    check(m["policy"] == "cache-aware(k0=2,k=4,alpha=0.5)",
+          f"metrics report the routing policy ({m.get('policy')})")
+    check(isinstance(m["n_cancelled"], (int, float)) and m["n_cancelled"] >= 0,
+          f"n_cancelled present ({m['n_cancelled']})")
+    load = m["expert_load"]
+    check(load["total"] > 0, f"expert_load.total counts routed tokens ({load['total']})")
+    check(len(load["per_expert"]) == 16,
+          f"expert_load.per_expert covers all 16 experts")
+    check(abs(sum(load["per_expert"]) - load["total"]) < 0.5,
+          "expert_load histogram sums to its total")
+    check(0.0 < load["max_share"] <= 1.0,
+          f"expert_load.max_share in (0, 1] ({load['max_share']:.3f})")
+    res = m["residency"]
+    check(res["capacity"] == 8 and res["n_experts"] == 16,
+          "residency reports the configured capacity")
+    check(res["evict"] == "lru" and res["prefetch"] == 1,
+          "residency reports eviction policy and prefetch lookahead")
+    check(res["misses"] > 0 and res["bytes_paged"] > 0,
+          f"residency paged experts in ({res['misses']} misses, "
+          f"{res['bytes_paged']:.0f} bytes)")
+    check(res["hits"] + res["misses"] > 0 and 0.0 <= res["hit_rate"] <= 1.0,
+          f"residency hit_rate well-formed ({res['hit_rate']:.3f})")
+    check(0 < res["resident"] <= res["layers"] * res["capacity"],
+          f"resident set within capacity ({res['resident']} experts, "
+          f"{res['layers']} layers)")
+    check(res["evictions"] >= 0 and res["prefetches"] >= 0,
+          "residency churn counters present")
 
     # -- phase 4: graceful shutdown --------------------------------------
     status, _, body = post_json("/shutdown", {})

@@ -44,7 +44,7 @@ fn run_sweep(
     let runner = ModelRunner::new(CpuBackend::synthetic_with(
         c.clone(),
         0,
-        CpuOptions { dispatch: mode, threads: 0 },
+        CpuOptions { dispatch: mode, threads: 0, residency: None },
     ));
     // Vary T at FIXED batch size via k0 and batch composition (the paper
     // gets the variation naturally from serving GPQA at B<=16). B must be
@@ -95,8 +95,9 @@ fn run_sweep(
                         live: b as u16,
                         t: ls.t as u16,
                         load: ls.load as u32,
+                        misses: ls.misses as u32,
                         measured_us: ls.moe_us,
-                        simulated_us: cost.layer_us(ls.t, ls.load),
+                        simulated_us: cost.layer_us(ls.t, ls.load, ls.misses),
                     };
                     metrics.record(rec);
                     metrics_bucket.record(StepRecord { t: ls.t_bucket as u16, ..rec });
@@ -181,7 +182,7 @@ fn main() {
         );
         let curve = metrics.latency_vs_t(false);
         for &(t, us, n) in &curve {
-            let sim = cost.layer_us(t, 0);
+            let sim = cost.layer_us(t, 0, 0);
             table.row(vec![
                 t.to_string(),
                 n.to_string(),

@@ -1,0 +1,366 @@
+//! Expert residency sweep: tokens/s and expert-cache hit rate across
+//! capacity × eviction × routing policy at the paper's B=16 decode
+//! operating point.
+//!
+//! Every run decodes the same teacher-forced domain-correlated traffic
+//! through a CPU backend whose packed expert panels are managed as a
+//! bounded per-layer cache (`--expert-cache` in the CLI). Three policies
+//! are compared on identical caches:
+//!
+//! - **vanilla top-k**: routing ignores residency entirely;
+//! - **oea k0=k/2**: fewer activated experts (smaller unions page less),
+//!   but still residency-blind;
+//! - **cache-aware k0=k/2**: OEA whose selection scores are boosted for
+//!   cross-step resident experts, steering the union toward panels that
+//!   are already loaded.
+//!
+//! The headline claim (ISSUE 4 acceptance): at capacity < n_experts,
+//! cache-aware routing achieves a strictly higher hit rate than vanilla
+//! top-k at equal-or-better tokens/s. Counters reset after warmup, so
+//! hit rates reflect steady state, not compulsory cold misses.
+//!
+//!     cargo bench --bench residency
+//!     cargo bench --bench residency -- --smoke   # CI tier
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use oea_serve::backend::cpu::{CpuBackend, CpuOptions, DispatchMode};
+use oea_serve::backend::Backend;
+use oea_serve::config::ModelConfig;
+use oea_serve::eval;
+use oea_serve::latency::{CostModel, H100Presets};
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::residency::{EvictPolicy, ResidencyConfig};
+use oea_serve::util::bench::{BenchOpts, Table};
+use oea_serve::util::json::Json;
+use oea_serve::util::rng::Rng;
+
+const B: usize = 16;
+
+/// Everything one (policy × residency config) run produced.
+struct RunOut {
+    policy: &'static str,
+    capacity: usize,
+    evict: EvictPolicy,
+    prefetch: usize,
+    tokens_per_s: f64,
+    hit_rate: f64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    bytes_paged: u64,
+    prefetches: u64,
+    avg_t: f64,
+    /// mean simulated H100 µs per layer-step (misses charged page_in_us)
+    sim_us_mean: f64,
+    /// routed token-expert assignments over the measured window
+    expert_load_total: u64,
+    expert_load_max_share: f64,
+    /// per-layer-step (t, load) trace — the decision-equivalence check
+    trace: Vec<(usize, usize)>,
+    /// per-layer-step (misses, measured µs) — the page-in fit input
+    miss_us: Vec<(f64, f64)>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_policy(
+    c: &ModelConfig,
+    cost: &CostModel,
+    name: &'static str,
+    pol: Policy,
+    rc: ResidencyConfig,
+    warmup: usize,
+    steps: usize,
+) -> RunOut {
+    let backend = CpuBackend::synthetic_with(
+        c.clone(),
+        0,
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 0, residency: Some(rc) },
+    );
+    let runner = ModelRunner::new(backend);
+    let bucket = c.bucket_for(B).unwrap();
+    let mut rng = Rng::new(7);
+    // one domain per batch: the temporally-correlated traffic residency
+    // exploits (mixed batches are the pessimistic case, not the common one)
+    let seqs = eval::synthetic_sequences(c, &mut rng, B, warmup + steps, false);
+    let mut batch = runner.new_batch(bucket).unwrap();
+    let mut toks = vec![0i32; bucket];
+    let mut pos = vec![0i32; bucket];
+    let mut live = vec![false; bucket];
+    for item in live.iter_mut().take(B) {
+        *item = true;
+    }
+    let mut step_at = |t: usize| {
+        for i in 0..B {
+            toks[i] = seqs[i][t];
+            pos[i] = t as i32;
+        }
+        runner.decode_step(&mut batch, &toks, &pos, &live, pol, true).unwrap()
+    };
+    for t in 0..warmup {
+        step_at(t);
+    }
+    // steady state: drop compulsory cold misses (and the warmup's routed
+    // load) so the counters describe cross-step behaviour only
+    runner.backend.reset_residency_counters();
+    let load0 = runner.backend.expert_loads().unwrap_or_default();
+    let mut trace = Vec::new();
+    let mut miss_us = Vec::new();
+    let mut sim_sum = 0.0;
+    let mut t_sum = 0usize;
+    let mut nrec = 0usize;
+    let t0 = Instant::now();
+    for t in warmup..warmup + steps {
+        let out = step_at(t);
+        for ls in &out.layers {
+            trace.push((ls.t, ls.load));
+            miss_us.push((ls.misses as f64, ls.moe_us));
+            sim_sum += cost.layer_us(ls.t, ls.load, ls.misses);
+            t_sum += ls.t;
+            nrec += 1;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = runner.backend.residency_stats().expect("residency configured");
+    let loads = runner.backend.expert_loads().unwrap_or_default();
+    let diff: Vec<u64> = loads
+        .iter()
+        .zip(load0.iter().chain(std::iter::repeat(&0)))
+        .map(|(&a, &b)| a - b)
+        .collect();
+    let total: u64 = diff.iter().sum();
+    let max = diff.iter().copied().max().unwrap_or(0);
+    RunOut {
+        policy: name,
+        capacity: rc.capacity,
+        evict: rc.evict,
+        prefetch: rc.prefetch,
+        tokens_per_s: (B * steps) as f64 / secs.max(1e-9),
+        hit_rate: stats.counters.hit_rate(),
+        hits: stats.counters.hits,
+        misses: stats.counters.misses,
+        evictions: stats.counters.evictions,
+        bytes_paged: stats.counters.bytes_paged,
+        prefetches: stats.counters.prefetches,
+        avg_t: t_sum as f64 / nrec.max(1) as f64,
+        sim_us_mean: sim_sum / nrec.max(1) as f64,
+        expert_load_total: total,
+        expert_load_max_share: if total > 0 { max as f64 / total as f64 } else { 0.0 },
+        trace,
+        miss_us,
+    }
+}
+
+fn run_json(r: &RunOut) -> Json {
+    Json::obj(vec![
+        ("policy", Json::str(r.policy)),
+        ("capacity", Json::num(r.capacity as f64)),
+        ("evict", Json::str(r.evict.label())),
+        ("prefetch", Json::num(r.prefetch as f64)),
+        ("tokens_per_s", Json::num(r.tokens_per_s)),
+        ("hit_rate", Json::num(r.hit_rate)),
+        ("hits", Json::num(r.hits as f64)),
+        ("misses", Json::num(r.misses as f64)),
+        ("evictions", Json::num(r.evictions as f64)),
+        ("bytes_paged", Json::num(r.bytes_paged as f64)),
+        ("prefetches", Json::num(r.prefetches as f64)),
+        ("avg_t", Json::num(r.avg_t)),
+        ("sim_us_mean", Json::num(r.sim_us_mean)),
+        (
+            "expert_load",
+            Json::obj(vec![
+                ("total", Json::num(r.expert_load_total as f64)),
+                ("max_share", Json::num(r.expert_load_max_share)),
+            ]),
+        ),
+    ])
+}
+
+fn main() {
+    let opts = BenchOpts::from_args();
+    let cfg_name = std::env::var("OEA_BENCH_CONFIG")
+        .unwrap_or_else(|_| if opts.smoke { "smoke" } else { "small" }.into());
+    let c = ModelConfig::preset(&cfg_name).unwrap();
+    let cost = H100Presets::for_config(&c.name);
+    let (warmup, steps) = if opts.smoke { (2, 6) } else { (8, 32) };
+    let n = c.n_experts;
+    let (k, k0) = (c.top_k, (c.top_k / 2).max(1));
+
+    let policies: [(&'static str, Policy); 3] = [
+        ("vanilla", Policy::Vanilla { k }),
+        ("oea", Policy::OeaSimplified { k0, k }),
+        ("cache-aware", Policy::CacheAware { k0, k, alpha: 1.0 }),
+    ];
+    let mut capacities = vec![n / 4, n / 2, n];
+    capacities.retain(|&cp| cp >= 1);
+    capacities.dedup();
+
+    let mut table = Table::new(
+        &format!("Residency sweep ({} cfg, B={B}, {steps} steps, post-warmup counters)", c.name),
+        &["policy", "C", "evict", "pf", "hit%", "tok/s", "miss/step", "MB paged", "sim us"],
+    );
+    let mut runs: Vec<RunOut> = Vec::new();
+    for &capacity in &capacities {
+        // eviction only matters below capacity; the unbounded point is the
+        // no-eviction reference and runs once under LRU
+        let evicts: &[EvictPolicy] = if capacity < n {
+            &[EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::ScoreAware]
+        } else {
+            &[EvictPolicy::Lru]
+        };
+        for &evict in evicts {
+            for &(name, pol) in &policies {
+                let rc = ResidencyConfig::new(capacity, evict, 0);
+                runs.push(run_policy(&c, &cost, name, pol, rc, warmup, steps));
+            }
+        }
+    }
+    // one lookahead variant: does paging predicted-hot experts in ahead of
+    // the routing decision buy anything on top of cache-aware routing?
+    runs.push(run_policy(
+        &c,
+        &cost,
+        "cache-aware",
+        Policy::CacheAware { k0, k, alpha: 1.0 },
+        ResidencyConfig::new(n / 2, EvictPolicy::Lru, 2),
+        warmup,
+        steps,
+    ));
+
+    let nsteps = steps as f64;
+    for r in &runs {
+        table.row(vec![
+            r.policy.to_string(),
+            r.capacity.to_string(),
+            r.evict.label().to_string(),
+            r.prefetch.to_string(),
+            format!("{:.1}", 100.0 * r.hit_rate),
+            format!("{:.0}", r.tokens_per_s),
+            format!("{:.1}", r.misses as f64 / nsteps),
+            format!("{:.2}", r.bytes_paged as f64 / 1e6),
+            format!("{:.1}", r.sim_us_mean),
+        ]);
+    }
+    table.print();
+
+    // empirical page-in penalty: per-miss slope of measured MoE µs over
+    // the bounded cache-aware runs (the CostModel::page_in_us validation —
+    // on this backend a page-in is real panel-packing work). fit_page_in
+    // expects samples at fixed (t, load); pooling raw layer-steps would
+    // confound the miss slope with fetch/compute cost (misses correlate
+    // with t), so samples are centered within their (t, load) group first
+    // — the fixed-effects form of that precondition.
+    let mut by_shape: HashMap<(usize, usize), Vec<(f64, f64)>> = HashMap::new();
+    for r in runs.iter().filter(|r| r.policy == "cache-aware" && r.capacity < n) {
+        for (i, &(m, us)) in r.miss_us.iter().enumerate() {
+            by_shape.entry(r.trace[i]).or_default().push((m, us));
+        }
+    }
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for pts in by_shape.values() {
+        if pts.len() < 2 {
+            continue;
+        }
+        let inv = 1.0 / pts.len() as f64;
+        let mx = pts.iter().map(|p| p.0).sum::<f64>() * inv;
+        let my = pts.iter().map(|p| p.1).sum::<f64>() * inv;
+        for &(m, us) in pts {
+            xs.push(m - mx);
+            ys.push(us - my);
+        }
+    }
+    let page_fit = CostModel::fit_page_in(&xs, &ys);
+    let page_json = match &page_fit {
+        // centered samples: the intercept is ~0 by construction, only the
+        // slope (us per miss) and fit quality carry information
+        Some((slope, _, r2)) => {
+            println!(
+                "\nmeasured page-in penalty (within-(T,load) fit): \
+                 {slope:.1} us/miss, R^2 {r2:.3}"
+            );
+            Json::obj(vec![("page_in_us", Json::num(*slope)), ("r2", Json::num(*r2))])
+        }
+        None => Json::Null,
+    };
+
+    // unbounded capacity: cache-aware must be decision-identical to OEA
+    // (same per-layer-step T and routed load on identical traffic)
+    let at = |policy: &str, capacity: usize, prefetch: usize| {
+        runs.iter()
+            .find(|r| r.policy == policy && r.capacity == capacity && r.prefetch == prefetch)
+            .expect("run present")
+    };
+    let unbounded_equiv = at("oea", n, 0).trace == at("cache-aware", n, 0).trace;
+    assert!(
+        unbounded_equiv,
+        "cache-aware at C = n_experts must route identically to base OEA"
+    );
+
+    // headline (ISSUE 4 acceptance), gated at C = N/2: cache-aware beats
+    // vanilla's hit rate outright at equal-or-better tokens/s (smoke-aware
+    // slack — µs-scale smoke shapes are noisy; the JSON reports exact
+    // numbers). C = N/4 is below the per-step union for EVERY policy, so
+    // LRU loop-thrash can zero both hit rates there — it is reported in
+    // the JSON as the capacity floor, not gated.
+    let mut head = Vec::new();
+    for &capacity in capacities.iter().filter(|&&cp| cp < n) {
+        let v = at("vanilla", capacity, 0);
+        let ca = at("cache-aware", capacity, 0);
+        if capacity == n / 2 {
+            assert!(
+                ca.hit_rate > v.hit_rate,
+                "C={capacity}: cache-aware hit rate {:.3} must beat vanilla {:.3}",
+                ca.hit_rate,
+                v.hit_rate
+            );
+            // wall-clock gate on real shapes only: a smoke run's measured
+            // window is milliseconds, where one scheduler preemption on a
+            // shared CI runner could fail the build with no code defect
+            // (fig1 gates its speedup the same way); the JSON booleans
+            // report the exact comparison in both modes
+            if !opts.smoke {
+                assert!(
+                    ca.tokens_per_s >= v.tokens_per_s,
+                    "C={capacity}: cache-aware tokens/s {:.0} fell below vanilla {:.0}",
+                    ca.tokens_per_s,
+                    v.tokens_per_s
+                );
+            }
+        }
+        println!(
+            "C={capacity}: cache-aware hit rate {:.1}% vs vanilla {:.1}% at {:.2}x tokens/s",
+            100.0 * ca.hit_rate,
+            100.0 * v.hit_rate,
+            ca.tokens_per_s / v.tokens_per_s.max(1e-9)
+        );
+        head.push(Json::obj(vec![
+            ("capacity", Json::num(capacity as f64)),
+            ("hit_rate_vanilla", Json::num(v.hit_rate)),
+            ("hit_rate_cache_aware", Json::num(ca.hit_rate)),
+            ("tokens_per_s_vanilla", Json::num(v.tokens_per_s)),
+            ("tokens_per_s_cache_aware", Json::num(ca.tokens_per_s)),
+            ("cache_aware_hit_rate_wins", Json::Bool(ca.hit_rate > v.hit_rate)),
+            (
+                "cache_aware_tokens_at_least_vanilla",
+                Json::Bool(ca.tokens_per_s >= v.tokens_per_s),
+            ),
+        ]));
+    }
+
+    let payload = Json::obj(vec![
+        ("config", Json::str(&c.name)),
+        ("smoke", Json::Bool(opts.smoke)),
+        ("b", Json::num(B as f64)),
+        ("steps", Json::num(steps as f64)),
+        ("warmup", Json::num(warmup as f64)),
+        ("n_experts", Json::num(n as f64)),
+        ("unbounded_equivalent_to_oea", Json::Bool(unbounded_equiv)),
+        ("page_in_fit", page_json),
+        ("summary", Json::arr(head)),
+        ("runs", Json::arr(runs.iter().map(run_json))),
+    ]);
+    opts.emit("residency", payload).unwrap();
+}

@@ -52,7 +52,7 @@ fn main() {
             .unwrap();
             row.push((
                 run.avg_t,
-                cost.layer_us(run.avg_t.round() as usize, b * k0),
+                cost.layer_us(run.avg_t.round() as usize, b * k0, 0),
                 run.avg_moe_us,
             ));
         }
@@ -63,7 +63,7 @@ fn main() {
         .unwrap();
         row.push((
             run.avg_t,
-            cost.layer_us(run.avg_t.round() as usize, b * c.top_k),
+            cost.layer_us(run.avg_t.round() as usize, b * c.top_k, 0),
             run.avg_moe_us,
         ));
         results.push(row);

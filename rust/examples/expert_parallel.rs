@@ -44,7 +44,7 @@ fn main() {
     let steps = 400;
     let mut rng = Rng::new(0);
     // per-rank fetch cost: one rank's H100 slice (paper's TP/EP testbed)
-    let cost = CostModel { fetch_us: 2.91, compute_us: 0.012, overhead_us: 33.5 };
+    let cost = CostModel { fetch_us: 2.91, compute_us: 0.012, overhead_us: 33.5, page_in_us: 0.0 };
 
     let mut rows: Vec<(String, Vec<f64>, Vec<f64>)> = vec![
         ("vanilla top-8".into(), vec![], vec![]),
@@ -56,7 +56,7 @@ fn main() {
     for _ in 0..steps {
         let s = trace_scores(&mut rng, b, n, 4);
         let live = vec![true; b];
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
 
         let per_rank = |active: &[u16]| {
             let mut c = vec![0usize; ranks];
@@ -97,7 +97,7 @@ fn main() {
             name.clone(),
             format!("{mr:.2}"),
             format!("{:.2}", stats::mean(total_t)),
-            format!("{:.1}", cost.layer_us(mr.round() as usize, b * k / ranks)),
+            format!("{:.1}", cost.layer_us(mr.round() as usize, b * k / ranks, 0)),
         ]);
     }
     table.print();

@@ -64,7 +64,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             format!("{live_n} live"),
             if mask { "on".into() } else { "off (anecdote)".into() },
             format!("{avg_t:.2}"),
-            format!("{:.1}", cost.layer_us(avg_t.round() as usize, live_n * c.top_k)),
+            format!("{:.1}", cost.layer_us(avg_t.round() as usize, live_n * c.top_k, 0)),
         ]);
     }
     table.print();
@@ -94,7 +94,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     for mask in [true, false] {
         let d = route(
             Policy::Vanilla { k: c.top_k },
-            &RoutingInput { scores: &sm, live: &live, mask_padding: mask },
+            &RoutingInput { scores: &sm, live: &live, mask_padding: mask, resident: None },
         );
         println!("single-step routing with 7 live rows, mask={mask}: T = {}", d.t());
     }

@@ -389,6 +389,61 @@ pub fn moe_ffn_gather(
     out
 }
 
+/// One expert group's FFN through that expert's packed panels: gather the
+/// routed `rows` of `x [B, D]` into a contiguous mini-batch, run the
+/// SwiGLU FFN through `[D, h_pad]`/`[H, d_pad]` panels, and scatter-add
+/// the combine-weighted result into `acc [B, D]`. Shared by the
+/// whole-layer pack ([`moe_ffn_groups`]) and the residency path's
+/// lazily-paged per-expert panels — the same micro-kernels run on the
+/// same panel bytes, so the two paths are bitwise-identical.
+pub fn moe_ffn_group_rows(
+    x: &[f32],
+    wg_panel: &[f32],
+    wu_panel: &[f32],
+    wd_panel: &[f32],
+    d: usize,
+    h: usize,
+    h_pad: usize,
+    d_pad: usize,
+    rows: &[u32],
+    weights: &[f32],
+    acc: &mut [f32],
+    arena: &mut Arena,
+) {
+    let m = rows.len();
+    if m == 0 {
+        return;
+    }
+    debug_assert_eq!(rows.len(), weights.len());
+    debug_assert_eq!(wg_panel.len(), d * h_pad);
+    debug_assert_eq!(wu_panel.len(), d * h_pad);
+    debug_assert_eq!(wd_panel.len(), h * d_pad);
+    let mut xg = arena.take(m * d);
+    let mut g = arena.take(m * h_pad);
+    let mut u = arena.take(m * h_pad);
+    let mut y = arena.take(m * d_pad);
+    for (j, &r) in rows.iter().enumerate() {
+        let r = r as usize;
+        xg[j * d..(j + 1) * d].copy_from_slice(&x[r * d..(r + 1) * d]);
+    }
+    matmul_packed(&xg, d, wg_panel, d, h_pad, m, &mut g);
+    matmul_packed(&xg, d, wu_panel, d, h_pad, m, &mut u);
+    silu_mul(&mut g, &u);
+    matmul_packed(&g, h_pad, wd_panel, h, d_pad, m, &mut y);
+    for (j, (&r, &w)) in rows.iter().zip(weights.iter()).enumerate() {
+        let r = r as usize;
+        let orow = &mut acc[r * d..(r + 1) * d];
+        let yrow = &y[j * d_pad..j * d_pad + d];
+        for (o, &yv) in orow.iter_mut().zip(yrow.iter()) {
+            *o += w * yv;
+        }
+    }
+    arena.put(y);
+    arena.put(u);
+    arena.put(g);
+    arena.put(xg);
+}
+
 /// Token-grouped expert FFN over groups `g0..g1` of the work-list: for
 /// each expert, gather its routed rows from `x [B, D]` into a contiguous
 /// mini-batch, run the expert's SwiGLU FFN on just those rows through the
@@ -417,45 +472,24 @@ pub fn moe_ffn_groups(
     debug_assert_eq!(wg.n, h);
     debug_assert_eq!(wd.n, d);
     debug_assert_eq!(acc.len() % d, 0);
-    let mut m_max = 0;
-    for gi in g0..g1 {
-        m_max = m_max.max(groups.group(gi).rows.len());
-    }
-    if m_max == 0 {
-        return;
-    }
-    let mut xg = arena.take(m_max * d);
-    let mut g = arena.take(m_max * h_pad);
-    let mut u = arena.take(m_max * h_pad);
-    let mut y = arena.take(m_max * d_pad);
     for gi in g0..g1 {
         let grp = groups.group(gi);
-        let m = grp.rows.len();
-        if m == 0 {
-            continue;
-        }
         let e = grp.expert;
-        for (j, &r) in grp.rows.iter().enumerate() {
-            let r = r as usize;
-            xg[j * d..(j + 1) * d].copy_from_slice(&x[r * d..(r + 1) * d]);
-        }
-        matmul_packed(&xg[..m * d], d, wg.expert(e), d, h_pad, m, &mut g[..m * h_pad]);
-        matmul_packed(&xg[..m * d], d, wu.expert(e), d, h_pad, m, &mut u[..m * h_pad]);
-        silu_mul(&mut g[..m * h_pad], &u[..m * h_pad]);
-        matmul_packed(&g[..m * h_pad], h_pad, wd.expert(e), h, d_pad, m, &mut y[..m * d_pad]);
-        for (j, (&r, &w)) in grp.rows.iter().zip(grp.weights.iter()).enumerate() {
-            let r = r as usize;
-            let orow = &mut acc[r * d..(r + 1) * d];
-            let yrow = &y[j * d_pad..j * d_pad + d];
-            for (o, &yv) in orow.iter_mut().zip(yrow.iter()) {
-                *o += w * yv;
-            }
-        }
+        moe_ffn_group_rows(
+            x,
+            wg.expert(e),
+            wu.expert(e),
+            wd.expert(e),
+            d,
+            h,
+            h_pad,
+            d_pad,
+            grp.rows,
+            grp.weights,
+            acc,
+            arena,
+        );
     }
-    arena.put(y);
-    arena.put(u);
-    arena.put(g);
-    arena.put(xg);
 }
 
 #[cfg(test)]
@@ -703,7 +737,7 @@ mod tests {
         let live = vec![true; 2];
         let d_route = route(
             Policy::Vanilla { k: 2 },
-            &RoutingInput { scores: &s, live: &live, mask_padding: true },
+            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
         );
         let groups = ExpertGroups::from_decision(&d_route);
         assert_eq!(groups.routed_tokens(), 4);

@@ -33,14 +33,18 @@
 
 pub mod kernels;
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::backend::{Backend, LayerPre, Prefilled};
 use crate::config::ModelConfig;
 use crate::moe::dispatch::{ExpertGroups, RoutedStep};
 use crate::moe::policy::{self, Policy, RoutingInput};
 use crate::moe::ScoreMatrix;
-use crate::util::arena::{with_thread_arena, ScratchPool};
+use crate::residency::{
+    EvictPolicy, Prefetcher, ResidencyConfig, ResidencyCounters, ResidencySet, ResidencyStats,
+    Touch,
+};
+use crate::util::arena::{with_thread_arena, Arena, ScratchPool};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
@@ -64,11 +68,16 @@ pub struct CpuOptions {
     /// Worker threads for expert groups and attention rows: `0` = one
     /// per available core, `1` = run inline (no pool).
     pub threads: usize,
+    /// Expert residency: manage each layer's packed panels as a bounded
+    /// cache (capacity `C` experts, pluggable eviction, optional
+    /// lookahead prefetch). `None` = every expert pre-packed at
+    /// construction, the pre-residency behaviour. Grouped dispatch only.
+    pub residency: Option<ResidencyConfig>,
 }
 
 impl Default for CpuOptions {
     fn default() -> Self {
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 0 }
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 0, residency: None }
     }
 }
 
@@ -127,6 +136,68 @@ struct PackedLayer {
     wd: PackedMat,
 }
 
+/// One expert's packed SwiGLU panels — the unit of residency paging.
+/// Behind an `Arc` so an in-flight step keeps executing an expert that a
+/// later group's miss evicts (capacity thrash re-pages it next step).
+pub struct ExpertPanels {
+    wg: PackedMat,
+    wu: PackedMat,
+    wd: PackedMat,
+}
+
+impl ExpertPanels {
+    /// Pack expert `e`'s three matrices out of the layer's raw weights —
+    /// byte-identical to the corresponding rows of the whole-layer pack,
+    /// which is what keeps residency execution bitwise-equal.
+    fn pack(lw: &LayerWeights, e: usize, d: usize, h: usize) -> ExpertPanels {
+        ExpertPanels {
+            wg: PackedMat::pack(&lw.wg[e * d * h..(e + 1) * d * h], 1, d, h),
+            wu: PackedMat::pack(&lw.wu[e * d * h..(e + 1) * d * h], 1, d, h),
+            wd: PackedMat::pack(&lw.wd[e * h * d..(e + 1) * h * d], 1, h, d),
+        }
+    }
+
+    /// Packed footprint in bytes (the page-in size the ledger charges).
+    fn bytes(&self) -> usize {
+        (self.wg.k * self.wg.n_pad + self.wu.k * self.wu.n_pad + self.wd.k * self.wd.n_pad)
+            * std::mem::size_of::<f32>()
+    }
+}
+
+/// One layer's residency state: the bounded set, the lookahead
+/// prefetcher, the load-event counters, and the lazily-paged panels
+/// (`Some` iff resident, so cold-start memory is only what was touched).
+struct LayerResidency {
+    set: ResidencySet,
+    prefetch: Prefetcher,
+    counters: ResidencyCounters,
+    panels: Vec<Option<Arc<ExpertPanels>>>,
+}
+
+impl LayerResidency {
+    fn new(n_experts: usize, cfg: &ResidencyConfig) -> LayerResidency {
+        LayerResidency {
+            set: ResidencySet::new(n_experts, cfg.capacity, cfg.evict),
+            prefetch: Prefetcher::new(cfg.prefetch),
+            counters: ResidencyCounters::default(),
+            panels: (0..n_experts).map(|_| None).collect(),
+        }
+    }
+
+    /// Page expert `e`'s panels in (packing them if absent) and charge
+    /// the ledger.
+    fn page_in(&mut self, lw: &LayerWeights, e: usize, d: usize, h: usize) {
+        let p = Arc::new(ExpertPanels::pack(lw, e, d, h));
+        self.counters.bytes_paged += p.bytes() as u64;
+        self.panels[e] = Some(p);
+    }
+
+    fn drop_panel(&mut self, e: usize) {
+        self.counters.evictions += 1;
+        self.panels[e] = None;
+    }
+}
+
 /// Per-layer KV cache of a decode batch: `[2, bucket, S, Hkv, hd]` per
 /// layer (K at index 0, V at index 1 — the PJRT layout, so repack logic
 /// and tests transfer unchanged).
@@ -150,8 +221,12 @@ pub struct CpuBackend {
     /// `[D]`
     pub final_norm: Vec<f32>,
     pub layers: Vec<LayerWeights>,
-    /// pre-transposed/padded expert panels, one per layer (grouped mode)
+    /// pre-transposed/padded expert panels, one per layer (grouped mode
+    /// without residency; empty when residency pages panels lazily)
     packed: Vec<PackedLayer>,
+    /// per-layer expert residency (None = all panels pre-packed above)
+    residency: Option<Mutex<Vec<LayerResidency>>>,
+    res_cfg: Option<ResidencyConfig>,
     mode: DispatchMode,
     /// worker pool for expert groups / attention rows (None = inline)
     pool: Option<ThreadPool>,
@@ -277,8 +352,18 @@ impl CpuBackend {
             });
         }
 
-        let packed = match opts.dispatch {
-            DispatchMode::Grouped => layers
+        if opts.residency.is_some() && opts.dispatch == DispatchMode::Gather {
+            // loud failure, like the env-var typo path: gather mode runs
+            // whole-batch GEMMs out of the raw weights and never consults
+            // panels, so a "cached" gather run would silently measure
+            // nothing
+            panic!("expert residency requires grouped dispatch (OEA_DISPATCH=grouped)");
+        }
+        let packed = match (opts.dispatch, opts.residency) {
+            // residency: panels page in lazily on first touch, so nothing
+            // is packed up front (the cold-start memory win)
+            (DispatchMode::Grouped, Some(_)) => Vec::new(),
+            (DispatchMode::Grouped, None) => layers
                 .iter()
                 .map(|lw| PackedLayer {
                     wg: PackedMat::pack(&lw.wg, n, d, h),
@@ -286,8 +371,11 @@ impl CpuBackend {
                     wd: PackedMat::pack(&lw.wd, n, h, d),
                 })
                 .collect(),
-            DispatchMode::Gather => Vec::new(),
+            (DispatchMode::Gather, _) => Vec::new(),
         };
+        let residency = opts.residency.map(|rc| {
+            Mutex::new((0..cfg.n_layers).map(|_| LayerResidency::new(n, &rc)).collect())
+        });
 
         let workers = match opts.threads {
             0 => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
@@ -303,6 +391,8 @@ impl CpuBackend {
             final_norm,
             layers,
             packed,
+            residency,
+            res_cfg: opts.residency,
             mode: opts.dispatch,
             pool,
             scratch: ScratchPool::new(),
@@ -321,6 +411,17 @@ impl CpuBackend {
     pub fn reset_expert_loads(&self) {
         for x in self.expert_load.lock().unwrap().iter_mut() {
             *x = 0;
+        }
+    }
+
+    /// Zero the residency ledger without touching residency *state*
+    /// (what's loaded stays loaded) — benches reset after warmup so hit
+    /// rates reflect steady-state behaviour, not compulsory cold misses.
+    pub fn reset_residency_counters(&self) {
+        if let Some(res) = &self.residency {
+            for lr in res.lock().unwrap().iter_mut() {
+                lr.counters = ResidencyCounters::default();
+            }
         }
     }
 
@@ -398,30 +499,82 @@ impl CpuBackend {
             }
         }
         let lw = &self.layers[l];
-        let pk = &self.packed[l];
+        let h = c.d_expert;
+        // Residency bookkeeping first, under one lock: touch every
+        // group's expert (ascending order — the access trace the eviction
+        // policies see), page misses in by lazily packing their panels
+        // (the simulated page-in cost is that real packing work), and
+        // collect panel handles so a later group's eviction cannot pull
+        // weights out from under this step's execution.
+        let panels: Option<Vec<Arc<ExpertPanels>>> = self.residency.as_ref().map(|res| {
+            let mut res = res.lock().unwrap();
+            let lr = &mut res[l];
+            groups
+                .iter()
+                .map(|grp| {
+                    let e = grp.expert;
+                    match lr.set.touch(e) {
+                        Touch::Hit => lr.counters.hits += 1,
+                        Touch::Miss { evicted } => {
+                            lr.counters.misses += 1;
+                            if let Some(v) = evicted {
+                                lr.drop_panel(v);
+                            }
+                            lr.page_in(lw, e, d, h);
+                        }
+                    }
+                    Arc::clone(lr.panels[e].as_ref().expect("resident expert has panels"))
+                })
+                .collect()
+        });
+        let pk = if panels.is_none() { Some(&self.packed[l]) } else { None };
         let mut hn = self.scratch.take(b * d);
         kernels::rmsnorm_into(hidden, &lw.n2, d, c.rms_eps, &mut hn);
         let mut acc = self.scratch.take(b * d);
         let ngroups = groups.len();
         let workers = self.pool.as_ref().map(|p| p.size()).unwrap_or(1);
+        // One executor for both panel sources: residency panels hold the
+        // same packed bytes as the whole-layer pack, and both run through
+        // kernels::moe_ffn_group_rows, so outputs are bitwise-identical
+        // with or without residency bookkeeping.
+        let hn_ref = &hn;
+        let run_range = |g0: usize, g1: usize, out: &mut [f32], arena: &mut Arena| match (
+            &panels, pk,
+        ) {
+            (Some(ps), _) => {
+                for gi in g0..g1 {
+                    let grp = groups.group(gi);
+                    let p = &ps[gi];
+                    kernels::moe_ffn_group_rows(
+                        hn_ref,
+                        p.wg.expert(0),
+                        p.wu.expert(0),
+                        p.wd.expert(0),
+                        d,
+                        h,
+                        p.wg.n_pad,
+                        p.wd.n_pad,
+                        grp.rows,
+                        grp.weights,
+                        out,
+                        arena,
+                    );
+                }
+            }
+            (None, Some(pk)) => {
+                kernels::moe_ffn_groups(hn_ref, &pk.wg, &pk.wu, &pk.wd, groups, g0, g1, out, arena)
+            }
+            (None, None) => unreachable!("no packed panels and no residency"),
+        };
         if workers <= 1 || ngroups <= 1 {
-            with_thread_arena(|arena| {
-                kernels::moe_ffn_groups(
-                    &hn, &pk.wg, &pk.wu, &pk.wd, groups, 0, ngroups, &mut acc, arena,
-                );
-            });
+            with_thread_arena(|arena| run_range(0, ngroups, &mut acc, arena));
         } else {
             let chunks = chunk_groups(groups, workers);
             let scratch = &self.scratch;
-            let hn_ref = &hn;
             let pool = self.pool.as_ref().unwrap();
             let partials = pool.scoped_map(chunks, |(g0, g1): (usize, usize)| {
                 let mut part = scratch.take(b * d);
-                with_thread_arena(|arena| {
-                    kernels::moe_ffn_groups(
-                        hn_ref, &pk.wg, &pk.wu, &pk.wd, groups, g0, g1, &mut part, arena,
-                    );
-                });
+                with_thread_arena(|arena| run_range(g0, g1, &mut part, arena));
                 part
             });
             // reduce in chunk order == ascending-expert order (see
@@ -498,6 +651,32 @@ impl Backend for CpuBackend {
                 b,
                 cache.bucket
             )));
+        }
+        // residency: apply the lookahead predictions recorded at the
+        // PREVIOUS step (see residency::prefetch) before this step's
+        // routing decision and expert execution — the paged-in experts
+        // are resident by the time routing and dispatch look
+        if let Some(res) = &self.residency {
+            let lw = &self.layers[l];
+            let (d, h) = (c.d_model, c.d_expert);
+            let mut res = res.lock().unwrap();
+            let lr = &mut res[l];
+            let pending = lr.prefetch.take_pending();
+            // wave protection: this step's predictions must not evict
+            // each other (admits are recency-silent, so wave-mates would
+            // otherwise be each other's "stalest" victims)
+            let mut wave: Vec<usize> = Vec::with_capacity(pending.len());
+            for e in pending {
+                let e = e as usize;
+                if let Some(evicted) = lr.set.admit_protecting(e, &wave) {
+                    if let Some(v) = evicted {
+                        lr.drop_panel(v);
+                    }
+                    lr.counters.prefetches += 1;
+                    lr.page_in(lw, e, d, h);
+                    wave.push(e);
+                }
+            }
         }
         let lw = &self.layers[l];
         let (d, qd, kvd) = (c.d_model, c.q_dim(), c.kv_dim());
@@ -674,6 +853,10 @@ impl Backend for CpuBackend {
         }
         let mut cache = self.new_cache(1)?;
         let mut last_hidden = Vec::new();
+        // prefill routes vanilla per token (paper: OEA is decode-only)
+        // but still runs through the shared expert cache — its touches
+        // count in the residency ledger, since serving a prompt really
+        // does page those weights in (see README's scoping note)
         for (t, &tok) in prompt.iter().enumerate() {
             let mut hidden = self.embed(&[tok])?;
             for l in 0..c.n_layers {
@@ -682,7 +865,7 @@ impl Backend for CpuBackend {
                 let live = [true];
                 let d = policy::route(
                     Policy::Vanilla { k: c.top_k },
-                    &RoutingInput { scores: &scores, live: &live, mask_padding: true },
+                    &RoutingInput::new(&scores, &live, true),
                 );
                 let ids: Vec<i32> = d.active.iter().map(|&e| e as i32).collect();
                 hidden = self.moe_apply(l, &pre.h, &d.combine, &ids)?;
@@ -764,6 +947,64 @@ impl Backend for CpuBackend {
         }
         Ok(out)
     }
+
+    fn expert_loads(&self) -> Option<Vec<u64>> {
+        Some(self.expert_load.lock().unwrap().clone())
+    }
+
+    fn residency_view(&self, l: usize) -> Option<Vec<bool>> {
+        let res = self.residency.as_ref()?;
+        let res = res.lock().unwrap();
+        let lr = &res[l];
+        if lr.set.unbounded() {
+            // unbounded: no eviction, so no capacity misses for routing to
+            // avoid — the view is withheld and cache-aware == base OEA
+            None
+        } else {
+            Some(lr.set.resident_mask().to_vec())
+        }
+    }
+
+    fn residency_counters(&self, l: usize) -> Option<ResidencyCounters> {
+        let res = self.residency.as_ref()?;
+        Some(res.lock().unwrap()[l].counters)
+    }
+
+    fn residency_stats(&self) -> Option<ResidencyStats> {
+        let res = self.residency.as_ref()?;
+        let rc = self.res_cfg.expect("res_cfg present when residency is");
+        let res = res.lock().unwrap();
+        let mut counters = ResidencyCounters::default();
+        let mut resident = 0;
+        for lr in res.iter() {
+            counters.add(&lr.counters);
+            resident += lr.set.n_resident();
+        }
+        Some(ResidencyStats {
+            capacity: rc.capacity.clamp(1, self.cfg.n_experts),
+            n_experts: self.cfg.n_experts,
+            evict: rc.evict,
+            prefetch: rc.prefetch,
+            counters,
+            resident,
+            layers: res.len(),
+        })
+    }
+
+    fn residency_wants_scores(&self) -> bool {
+        self.res_cfg
+            .is_some_and(|rc| rc.prefetch > 0 || rc.evict == EvictPolicy::ScoreAware)
+    }
+
+    fn residency_observe(&self, l: usize, agg: &[f32]) {
+        if let Some(res) = &self.residency {
+            debug_assert_eq!(agg.len(), self.cfg.n_experts);
+            let mut res = res.lock().unwrap();
+            let lr = &mut res[l];
+            lr.set.note_scores(agg);
+            lr.prefetch.observe(agg);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -778,7 +1019,7 @@ mod tests {
         CpuBackend::synthetic_with(
             ModelConfig::preset("tiny").unwrap(),
             0,
-            CpuOptions { dispatch, threads },
+            CpuOptions { dispatch, threads, residency: None },
         )
     }
 
@@ -875,6 +1116,156 @@ mod tests {
         }
         // the unrouted padding row passes through as pure residual
         assert_eq!(&g1[3 * c.d_model..], &hidden[3 * c.d_model..]);
+    }
+
+    fn backend_res(capacity: usize, evict: crate::residency::EvictPolicy) -> CpuBackend {
+        CpuBackend::synthetic_with(
+            ModelConfig::preset("tiny").unwrap(),
+            0,
+            CpuOptions {
+                dispatch: DispatchMode::Grouped,
+                threads: 1,
+                residency: Some(ResidencyConfig::new(capacity, evict, 0)),
+            },
+        )
+    }
+
+    /// One-expert-per-token combine row for experts `es` over a 1-row
+    /// batch each — drives a deterministic access trace through moe_apply.
+    fn touch_experts(be: &CpuBackend, es: &[usize]) {
+        let c = be.config().clone();
+        let hidden = vec![0.1f32; c.d_model];
+        for &e in es {
+            let mut combine = vec![0.0f32; c.n_experts];
+            combine[e] = 1.0;
+            be.moe_apply(0, &hidden, &combine, &[e as i32]).unwrap();
+        }
+    }
+
+    #[test]
+    fn residency_output_bitwise_equals_eager_pack() {
+        use crate::residency::EvictPolicy;
+        // capacity 2 < groups per call: same-step eviction + repaging
+        // must still produce bit-identical output to the eager pack
+        let plain = backend_with(DispatchMode::Grouped, 1);
+        let res = backend_res(2, EvictPolicy::Lru);
+        let c = plain.config().clone();
+        let (b, n) = (4usize, c.n_experts);
+        let hidden: Vec<f32> =
+            (0..b * c.d_model).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let mut combine = vec![0.0f32; b * n];
+        combine[0] = 0.7;
+        combine[1] = 0.3;
+        combine[n + 1] = 0.5;
+        combine[n + 4] = 0.5;
+        combine[2 * n + 4] = 1.0;
+        combine[3 * n + 7] = 1.0;
+        let ids = [0i32, 1, 4, 7];
+        for l in 0..c.n_layers {
+            let a = plain.moe_apply(l, &hidden, &combine, &ids).unwrap();
+            let r = res.moe_apply(l, &hidden, &combine, &ids).unwrap();
+            assert_eq!(a, r, "layer {l}: residency changed the math");
+        }
+    }
+
+    #[test]
+    fn residency_counts_hits_misses_evictions() {
+        use crate::residency::EvictPolicy;
+        let be = backend_res(2, EvictPolicy::Lru);
+        touch_experts(&be, &[0, 1]); // 2 compulsory misses
+        touch_experts(&be, &[0, 1]); // 2 hits
+        touch_experts(&be, &[2]); // miss, evicts LRU (expert 0)
+        touch_experts(&be, &[0]); // miss again: 0 was evicted
+        let s = Backend::residency_stats(&be).unwrap();
+        assert_eq!(s.counters.hits, 2);
+        assert_eq!(s.counters.misses, 4);
+        assert_eq!(s.counters.evictions, 2);
+        assert!(s.counters.bytes_paged > 0);
+        assert_eq!(s.resident, 2, "layer 0 holds exactly capacity experts");
+        assert!((s.counters.hit_rate() - 2.0 / 6.0).abs() < 1e-12);
+        be.reset_residency_counters();
+        let s2 = Backend::residency_stats(&be).unwrap();
+        assert_eq!(s2.counters.accesses(), 0);
+        assert_eq!(s2.resident, 2, "reset clears counters, not residency");
+    }
+
+    #[test]
+    fn residency_pages_lazily_and_view_gates_on_capacity() {
+        use crate::residency::EvictPolicy;
+        let c = ModelConfig::preset("tiny").unwrap();
+        // unbounded capacity: no view (cache-aware == OEA), panels only
+        // pack on first touch (cold-start memory drops)
+        let be = backend_res(c.n_experts, EvictPolicy::Lru);
+        assert!(Backend::residency_view(&be, 0).is_none());
+        let s0 = Backend::residency_stats(&be).unwrap();
+        assert_eq!(s0.counters.bytes_paged, 0, "nothing packed before first touch");
+        touch_experts(&be, &[3]);
+        let s1 = Backend::residency_stats(&be).unwrap();
+        assert!(s1.counters.bytes_paged > 0);
+        touch_experts(&be, &[3]);
+        let s2 = Backend::residency_stats(&be).unwrap();
+        assert_eq!(s2.counters.bytes_paged, s1.counters.bytes_paged, "hit pages nothing");
+
+        // bounded capacity: the routing view reports exactly the residents
+        let bb = backend_res(2, EvictPolicy::Lru);
+        touch_experts(&bb, &[5]);
+        let view = Backend::residency_view(&bb, 0).unwrap();
+        assert!(view[5]);
+        assert_eq!(view.iter().filter(|&&r| r).count(), 1);
+        // per-layer counters: only layer 0 was touched
+        assert_eq!(Backend::residency_counters(&bb, 0).unwrap().misses, 1);
+        assert_eq!(Backend::residency_counters(&bb, 1).unwrap().misses, 0);
+    }
+
+    #[test]
+    fn prefetch_pages_ahead_from_previous_step_scores() {
+        use crate::residency::EvictPolicy;
+        let c = ModelConfig::preset("tiny").unwrap();
+        let be = CpuBackend::synthetic_with(
+            c.clone(),
+            0,
+            CpuOptions {
+                dispatch: DispatchMode::Grouped,
+                threads: 1,
+                residency: Some(ResidencyConfig::new(4, EvictPolicy::Lru, 2)),
+            },
+        );
+        let mut cache = be.new_cache(2).unwrap();
+        let h = be.embed(&[10, 200]).unwrap();
+        // step 1: the model runner feeds the batch-aggregated router mass
+        // of the ROUTED rows (residency_observe) — recorded as next-step
+        // predictions
+        let pre = be.layer_pre(0, &h, &mut cache, &[0, 0]).unwrap();
+        let n = c.n_experts;
+        let mut agg = vec![0.0f32; n];
+        for row in pre.scores.chunks_exact(n) {
+            for (a, &v) in agg.iter_mut().zip(row.iter()) {
+                *a += v;
+            }
+        }
+        Backend::residency_observe(&be, 0, &agg);
+        assert_eq!(Backend::residency_stats(&be).unwrap().counters.prefetches, 0);
+        // step 2: the pending predictions page in ahead of routing
+        be.layer_pre(0, &h, &mut cache, &[1, 1]).unwrap();
+        let s = Backend::residency_stats(&be).unwrap();
+        assert_eq!(s.counters.prefetches, 2);
+        assert!(s.counters.bytes_paged > 0);
+        assert_eq!(s.counters.misses, 0, "prefetches are not demand misses");
+    }
+
+    #[test]
+    #[should_panic(expected = "residency requires grouped dispatch")]
+    fn residency_rejects_gather_mode() {
+        use crate::residency::EvictPolicy;
+        CpuBackend::synthetic_with(
+            ModelConfig::preset("tiny").unwrap(),
+            0,
+            CpuOptions {
+                dispatch: DispatchMode::Gather,
+                threads: 1,
+                residency: Some(ResidencyConfig::new(4, EvictPolicy::Lru, 0)),
+            },
+        );
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub mod pjrt;
 
 use crate::config::ModelConfig;
 use crate::moe::dispatch::RoutedStep;
+use crate::residency::{ResidencyCounters, ResidencyStats};
 use crate::util::error::Result;
 
 /// Output of one layer's pre-MoE work (attention sub-block + router).
@@ -121,4 +122,50 @@ pub trait Backend {
         new_bucket: usize,
         mapping: &[Option<usize>],
     ) -> Result<Self::Cache>;
+
+    // ---- telemetry (optional; default = backend doesn't track it) ------
+
+    /// Cumulative routed (nonzero-combine) token-expert assignments per
+    /// expert id — the per-policy load histogram surfaced on `/metrics`
+    /// and in bench JSON.
+    fn expert_loads(&self) -> Option<Vec<u64>> {
+        None
+    }
+
+    /// Per-expert "weights loaded" flags for layer `l`, when the backend
+    /// manages a *bounded* expert residency set (the cache-aware routing
+    /// view). `None` when no residency is configured or the set is
+    /// unbounded — cache-aware policies then reduce to base OEA.
+    fn residency_view(&self, _l: usize) -> Option<Vec<bool>> {
+        None
+    }
+
+    /// Layer `l`'s cumulative residency counters (monotone; the model
+    /// runner diffs them around the MoE stage to attribute per-step
+    /// misses).
+    fn residency_counters(&self, _l: usize) -> Option<ResidencyCounters> {
+        None
+    }
+
+    /// Aggregate residency telemetry across layers (the `/metrics` and
+    /// bench surface).
+    fn residency_stats(&self) -> Option<ResidencyStats> {
+        None
+    }
+
+    /// Whether [`Backend::residency_observe`] has a consumer (score-aware
+    /// eviction or a prefetcher). The model runner skips the per-layer
+    /// score aggregation entirely when this is false, keeping the decode
+    /// hot path free of work nothing reads.
+    fn residency_wants_scores(&self) -> bool {
+        false
+    }
+
+    /// Feed one decode step's routed-row-aggregated router mass for layer
+    /// `l` (per-expert sums over the rows that actually route). Drives
+    /// score-aware eviction and the lookahead prefetcher; no-op for
+    /// backends without a residency layer. The caller must exclude dead
+    /// bucket rows — their router scores are the §6 padding garbage, and
+    /// feeding them would page in experts no live token wants.
+    fn residency_observe(&self, _l: usize, _agg: &[f32]) {}
 }

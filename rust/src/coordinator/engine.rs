@@ -279,8 +279,9 @@ impl<B: Backend> Engine<B> {
                 live: n_live as u16,
                 t: ls.t as u16,
                 load: ls.load as u32,
+                misses: ls.misses as u32,
                 measured_us: ls.moe_us,
-                simulated_us: self.cfg.cost_model.layer_us(ls.t, ls.load),
+                simulated_us: self.cfg.cost_model.layer_us(ls.t, ls.load, ls.misses),
             });
         }
         self.step_no += 1;
@@ -352,6 +353,63 @@ impl<B: Backend> Engine<B> {
             }
         }
         Ok(events)
+    }
+
+    /// Retire request `id` early (the client went away): a queued request
+    /// is dropped before admission, a running one frees its decode slot
+    /// immediately instead of decoding to completion. Counted as finished
+    /// (one definition of "finished" everywhere) *and* cancelled. Returns
+    /// the retired request's record, or `None` if `id` is not held.
+    pub fn cancel(&mut self, id: u64) -> Option<FinishedRequest> {
+        if let Some(qi) = self.queue.iter().position(|(r, _)| r.id == id) {
+            let (req, t_submit) = self.queue.remove(qi).unwrap();
+            let e2e_us = t_submit.elapsed().as_secs_f64() * 1e6;
+            self.requests.n_finished += 1;
+            self.requests.n_cancelled += 1;
+            // its whole life was queue wait; admitted requests sample this
+            // at admission, and the longest waiters are exactly the ones
+            // that abandon — the queue-wait SLO must not exclude them
+            push_sample(&mut self.requests.queue_wait_us, e2e_us);
+            push_sample(&mut self.requests.e2e_us, e2e_us);
+            return Some(FinishedRequest {
+                id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                reason: FinishReason::Cancelled,
+                queue_wait_us: e2e_us,
+                ttft_us: 0.0,
+                e2e_us,
+            });
+        }
+        let slot = (0..self.running.len())
+            .find(|&i| self.running[i].as_ref().is_some_and(|s| s.req.id == id))?;
+        let s = self.running[slot].take().unwrap();
+        self.slots.free(slot).ok();
+        let e2e_us = s.t_submit.elapsed().as_secs_f64() * 1e6;
+        self.requests.n_finished += 1;
+        self.requests.n_cancelled += 1;
+        // the tokens were generated (and possibly streamed) — they count
+        self.requests.total_generated_tokens += s.generated.len();
+        if let Some(tf) = s.t_first_token {
+            push_sample(&mut self.requests.ttft_us, (tf - s.t_submit).as_secs_f64() * 1e6);
+        }
+        push_sample(&mut self.requests.e2e_us, e2e_us);
+        let done = FinishedRequest {
+            id,
+            prompt_len: s.req.prompt.len(),
+            tokens: s.generated,
+            reason: FinishReason::Cancelled,
+            queue_wait_us: s.queue_wait_us,
+            ttft_us: s
+                .t_first_token
+                .map(|tf| (tf - s.t_submit).as_secs_f64() * 1e6)
+                .unwrap_or(0.0),
+            e2e_us,
+        };
+        if let Some(tpot) = done.tpot_us() {
+            push_sample(&mut self.requests.tpot_us, tpot);
+        }
+        Some(done)
     }
 
     /// Drive until every submitted request finishes.

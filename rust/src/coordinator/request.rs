@@ -45,6 +45,9 @@ pub enum FinishReason {
     Eos,
     /// prompt + generation reached the KV capacity (s_max)
     KvExhausted,
+    /// client went away (disconnect / explicit cancel): the sequence was
+    /// retired early and its slot freed instead of decoding to completion
+    Cancelled,
 }
 
 /// A completed request with telemetry.

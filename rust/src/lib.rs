@@ -31,6 +31,7 @@ pub mod latency;
 pub mod metrics;
 pub mod model;
 pub mod moe;
+pub mod residency;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;

@@ -22,8 +22,9 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::backend::cpu::{CpuBackend, CpuOptions};
 use oea_serve::backend::Backend;
+use oea_serve::residency::{EvictPolicy, ResidencyConfig};
 use oea_serve::config::ModelConfig;
 use oea_serve::coordinator::{Engine, EngineConfig, GenRequest};
 use oea_serve::eval;
@@ -49,7 +50,16 @@ fn spec() -> Spec {
             ("data", true, "corpus dir (default ./data; optional for cpu)"),
             ("weight-seed", true, "cpu: synthetic-weight seed (default 0)"),
             ("policy", true, "routing policy, e.g. vanilla, pruned:k0=3, oea:k0=3, \
-                              oea-full:k0=3,p=0.7,kmax=9,maxp=32, lynx:t=16, dynskip:tau=0.3"),
+                              oea-full:k0=3,p=0.7,kmax=9,maxp=32, lynx:t=16, dynskip:tau=0.3, \
+                              cache-aware:k0=4,alpha=0.5"),
+            ("expert-cache", true, "cpu: expert residency capacity (experts per layer); \
+                              misses page packed panels in lazily (default: off, all \
+                              experts pre-packed)"),
+            ("evict", true, "cpu: residency eviction policy: lru | lfu | score \
+                              (default lru; requires --expert-cache)"),
+            ("prefetch", true, "cpu: residency lookahead page-ins per layer-step, fed by \
+                              the previous step's router scores (default 0; requires \
+                              --expert-cache)"),
             ("max-running", true, "max concurrent requests (default 8)"),
             ("max-queue", true, "serve: waiting-request bound before 429 backpressure \
                               (default 64)"),
@@ -234,7 +244,30 @@ fn serve_preamble(
 fn cpu_runner(args: &Args) -> Result<ModelRunner<CpuBackend>> {
     let cfg = ModelConfig::preset(&args.str_or("config", "small"))?;
     let seed = args.usize_or("weight-seed", 0)? as u64;
-    Ok(ModelRunner::new(CpuBackend::synthetic(cfg, seed)))
+    let mut opts = CpuOptions::from_env();
+    match args.usize_opt("expert-cache")? {
+        Some(capacity) => {
+            if capacity == 0 {
+                return Err(oea_serve::Error::Config(
+                    "--expert-cache must be >= 1 (omit the flag to disable residency)".into(),
+                ));
+            }
+            let evict = EvictPolicy::from_cli(&args.str_or("evict", "lru"))?;
+            let prefetch = args.usize_or("prefetch", 0)?;
+            opts.residency = Some(ResidencyConfig::new(capacity, evict, prefetch));
+        }
+        None => {
+            // loud failure over silently ignoring cache knobs
+            for dep in ["evict", "prefetch"] {
+                if args.str_opt(dep).is_some() {
+                    return Err(oea_serve::Error::Config(format!(
+                        "--{dep} requires --expert-cache"
+                    )));
+                }
+            }
+        }
+    }
+    Ok(ModelRunner::new(CpuBackend::synthetic_with(cfg, seed, opts)))
 }
 
 fn run_cpu(args: &Args) -> Result<()> {

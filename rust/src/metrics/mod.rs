@@ -21,6 +21,8 @@ pub struct StepRecord {
     pub t: u16,
     /// total token-expert assignments (load = Σ|S_i|)
     pub load: u32,
+    /// expert residency demand misses (0 without a residency layer)
+    pub misses: u32,
     /// wall-clock µs measured on this machine (moe stage execution)
     pub measured_us: f64,
     /// simulated H100 µs from the roofline model
@@ -117,11 +119,20 @@ impl MoeMetrics {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("layer,step,bucket,live,t,load,measured_us,simulated_us\n");
+        let mut s =
+            String::from("layer,step,bucket,live,t,load,misses,measured_us,simulated_us\n");
         for r in &self.records {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{:.3},{:.3}\n",
-                r.layer, r.step, r.bucket, r.live, r.t, r.load, r.measured_us, r.simulated_us
+                "{},{},{},{},{},{},{},{:.3},{:.3}\n",
+                r.layer,
+                r.step,
+                r.bucket,
+                r.live,
+                r.t,
+                r.load,
+                r.misses,
+                r.measured_us,
+                r.simulated_us
             ));
         }
         s
@@ -137,6 +148,9 @@ pub struct RequestMetrics {
     pub n_finished: usize,
     /// submissions rejected by the bounded admission queue (HTTP 429s)
     pub n_rejected: usize,
+    /// requests retired early because the client went away (counted in
+    /// `n_finished` too — one definition of "finished" everywhere)
+    pub n_cancelled: usize,
     pub total_prompt_tokens: usize,
     pub total_generated_tokens: usize,
     /// submit -> admission delay per admitted request
@@ -177,6 +191,7 @@ impl RequestMetrics {
             ("e2e_ms", percentiles_ms(&self.e2e_us)),
             ("n_finished", Json::num(self.n_finished as f64)),
             ("n_rejected", Json::num(self.n_rejected as f64)),
+            ("n_cancelled", Json::num(self.n_cancelled as f64)),
         ])
     }
 
@@ -207,6 +222,7 @@ mod tests {
             live: 16,
             t,
             load: t as u32 * 2,
+            misses: t as u32 / 4,
             measured_us: us,
             simulated_us: 30.0 + 3.0 * t as f64,
         }
@@ -258,7 +274,7 @@ mod tests {
         m.record(rec(0, 10, 1.5));
         let csv = m.to_csv();
         assert_eq!(csv.lines().count(), 2);
-        assert!(csv.contains("0,0,16,16,10,20,1.500"));
+        assert!(csv.contains("0,0,16,16,10,20,2,1.500"));
     }
 
     #[test]

@@ -44,6 +44,9 @@ pub struct LayerStep {
     /// routed (nonzero-combine) token-expert assignments, `Σ_e |tokens(e)|`
     /// — the grouped dispatch path's actual work for this layer
     pub load: usize,
+    /// residency misses this step (experts paged in on demand); 0 when
+    /// the backend runs without an expert residency layer
+    pub misses: usize,
     /// measured wall µs of the MoE stage execution only
     pub moe_us: f64,
     /// µs spent in the rust routing decision
@@ -107,22 +110,59 @@ impl<B: Backend> ModelRunner<B> {
             // rust routing decision between router and expert execution
             let t0 = Instant::now();
             let scores = ScoreMatrix::new(b, c.n_experts, pre.scores);
-            let input = RoutingInput { scores: &scores, live, mask_padding };
+            // feed the residency layer this step's aggregate router mass
+            // (score-aware eviction + next-step lookahead prefetch),
+            // summed over the rows that actually route: dead bucket rows
+            // are the §6 padding garbage and must not steer paging.
+            // Gated on an actual consumer so LRU/LFU-no-prefetch configs
+            // pay nothing here.
+            if self.backend.residency_wants_scores() {
+                let n = c.n_experts;
+                let mut agg = vec![0.0f32; n];
+                for (i, row) in scores.scores.chunks_exact(n).enumerate() {
+                    if !mask_padding || live[i] {
+                        for (a, &v) in agg.iter_mut().zip(row.iter()) {
+                            *a += v;
+                        }
+                    }
+                }
+                self.backend.residency_observe(l, &agg);
+            }
+            // cache-aware policies bias selection toward the backend's
+            // resident experts; every other policy ignores the view, so
+            // the (locked) backend query is skipped for them
+            let resview = match pol {
+                Policy::CacheAware { .. } => self.backend.residency_view(l),
+                _ => None,
+            };
+            let input = RoutingInput {
+                scores: &scores,
+                live,
+                mask_padding,
+                resident: resview.as_deref(),
+            };
             let d = policy::route(pol, &input);
             let t_bucket = c.t_bucket_for(d.t())?;
             let ids = pad_active_list(&d.active, t_bucket, c.n_experts);
             let route_us = t0.elapsed().as_secs_f64() * 1e6;
 
             // grouped-dispatch work-list from the decision; building it is
-            // part of the MoE stage cost, so it runs inside the timer
+            // part of the MoE stage cost, so it runs inside the timer.
+            // Residency counters are monotone, so the snapshot pair
+            // attributes this layer-step's demand misses exactly.
+            let res0 = self.backend.residency_counters(l);
             let t0 = Instant::now();
             let groups = ExpertGroups::from_decision(&d);
             let load = groups.routed_tokens();
             let step = RoutedStep { groups: &groups, combine: &d.combine, ids: &ids };
             hidden = self.backend.moe_apply_routed(l, &pre.h, &step)?;
             let moe_us = t0.elapsed().as_secs_f64() * 1e6;
+            let misses = match (res0, self.backend.residency_counters(l)) {
+                (Some(before), Some(after)) => after.delta_from(&before).misses as usize,
+                _ => 0,
+            };
 
-            layers.push(LayerStep { t: d.t(), t_bucket, load, moe_us, route_us });
+            layers.push(LayerStep { t: d.t(), t_bucket, load, misses, moe_us, route_us });
         }
 
         let logits = self.backend.logits(&hidden)?;

@@ -223,7 +223,7 @@ mod tests {
         let live = vec![true; 4];
         route(
             Policy::Vanilla { k: 2 },
-            &RoutingInput { scores: &s, live: &live, mask_padding: true },
+            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
         )
     }
 
@@ -292,7 +292,7 @@ mod tests {
         let live = vec![true, false, false, true];
         let d = route(
             Policy::Vanilla { k: 2 },
-            &RoutingInput { scores: &s, live: &live, mask_padding: true },
+            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
         );
         let g = ExpertGroups::from_decision(&d);
         assert_eq!(g.routed_tokens(), 4);

@@ -177,7 +177,7 @@ mod tests {
     fn per_rank_counts_sum_to_t() {
         let s = random_scores(16, 32, 0);
         let live = vec![true; 16];
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
         let d = route_ep(&input, 3, 8, 4, 0);
         assert_eq!(d.per_rank_t.iter().sum::<usize>(), d.inner.t());
         assert!(d.max_rank_t() >= d.inner.t() / 4);
@@ -187,7 +187,7 @@ mod tests {
     fn topup_never_shrinks_quality() {
         let s = random_scores(16, 32, 1);
         let live = vec![true; 16];
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
         let base = route_ep(&input, 2, 8, 4, 0);
         let topped = route_ep(&input, 2, 8, 4, 2);
         // top-up can only add experts
@@ -201,7 +201,7 @@ mod tests {
     fn sets_within_union() {
         let s = random_scores(8, 32, 2);
         let live = vec![true; 8];
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true };
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
         let d = route_ep(&input, 3, 8, 4, 1);
         for set in &d.inner.sets {
             for e in set {

@@ -33,13 +33,24 @@ pub enum Policy {
     /// Expert-choice routing (Zhou et al.): each expert takes its top
     /// `capacity` tokens.
     ExpertChoice { capacity: usize },
+    /// Residency-aware OEA: Algorithm 1's two phases run over *boosted*
+    /// selection scores `s'(i,e) = s(i,e) · (1 + alpha·resident(e))`, so
+    /// baselines (and therefore the batch union — the quantity that
+    /// drives page-ins) prefer experts whose weights are already loaded
+    /// across steps. Combine weights still use the raw scores (Eq. 1), so
+    /// quality semantics match OEA on identical sets. With no residency
+    /// view (`RoutingInput::resident == None` — no cache configured, or
+    /// an unbounded one) or `alpha == 0` this is exactly
+    /// [`Policy::OeaSimplified`]`{ k0, k }`.
+    CacheAware { k0: usize, k: usize, alpha: f64 },
 }
 
 impl Policy {
     /// Parse a CLI policy spec. Examples:
     /// `vanilla`, `pruned:k0=3`, `pruned:k0=4,p=0.7`, `oea:k0=3`,
     /// `oea-full:k0=3,p=0.7,kmax=9,maxp=32`, `lynx:t=16`,
-    /// `dynskip:tau=0.3`, `expert-choice:cap=2`.
+    /// `dynskip:tau=0.3`, `expert-choice:cap=2`,
+    /// `cache-aware:k0=4,k=8,alpha=0.5`.
     /// `k` defaults to the model's top_k. Unknown keys are rejected (a
     /// typo like `oea:kmx=9` must not silently run with the default).
     pub fn from_cli(
@@ -64,10 +75,11 @@ impl Policy {
             "lynx" => &["k", "t"],
             "dynskip" => &["k", "tau"],
             "expert-choice" => &["cap"],
+            "cache-aware" => &["k0", "k", "alpha"],
             other => {
                 return Err(Error::Config(format!(
                     "unknown policy {other:?} \
-                     (vanilla|pruned|oea|oea-full|lynx|dynskip|expert-choice)"
+                     (vanilla|pruned|oea|oea-full|lynx|dynskip|expert-choice|cache-aware)"
                 )))
             }
         };
@@ -122,8 +134,23 @@ impl Policy {
             "expert-choice" => Ok(Policy::ExpertChoice {
                 capacity: get_usize("cap", 2)?,
             }),
+            "cache-aware" => {
+                let alpha = get_f64("alpha", 1.0)?;
+                if alpha < 0.0 {
+                    // a sign typo must not silently run as plain OEA
+                    return Err(Error::Config(format!(
+                        "--policy cache-aware: alpha={alpha} must be >= 0"
+                    )));
+                }
+                Ok(Policy::CacheAware {
+                    k0: get_usize("k0", model_k)?,
+                    k: get_usize("k", model_k)?,
+                    alpha,
+                })
+            }
             other => Err(Error::Config(format!(
-                "unknown policy {other:?} (vanilla|pruned|oea|oea-full|lynx|dynskip|expert-choice)"
+                "unknown policy {other:?} \
+                 (vanilla|pruned|oea|oea-full|lynx|dynskip|expert-choice|cache-aware)"
             ))),
         }
     }
@@ -141,6 +168,9 @@ impl Policy {
             Policy::Lynx { k, target_t } => format!("lynx(k={k},t={target_t})"),
             Policy::DynSkip { k, tau } => format!("dynskip(k={k},tau={tau})"),
             Policy::ExpertChoice { capacity } => format!("expert-choice(cap={capacity})"),
+            Policy::CacheAware { k0, k, alpha } => {
+                format!("cache-aware(k0={k0},k={k},alpha={alpha})")
+            }
         }
     }
 }
@@ -152,6 +182,19 @@ pub struct RoutingInput<'a> {
     pub live: &'a [bool],
     /// apply the §6 padding fix (zero padding rows' choices)
     pub mask_padding: bool,
+    /// Residency view: per-expert "weights already loaded" flags for this
+    /// layer, supplied by a backend that manages a bounded expert cache
+    /// (`None` = no cache, or an unbounded one). Only
+    /// [`Policy::CacheAware`] reads it.
+    pub resident: Option<&'a [bool]>,
+}
+
+impl<'a> RoutingInput<'a> {
+    /// Routing input with no residency view (call sites with no bounded
+    /// expert cache; cache-aware policies degrade to base OEA under it).
+    pub fn new(scores: &'a ScoreMatrix, live: &'a [bool], mask_padding: bool) -> RoutingInput<'a> {
+        RoutingInput { scores, live, mask_padding, resident: None }
+    }
 }
 
 /// What the policy decided for one (layer, step).
@@ -286,7 +329,58 @@ pub fn route(policy: Policy, input: &RoutingInput) -> RoutingDecision {
         Policy::Lynx { k, target_t } => route_lynx(input, k, target_t),
         Policy::DynSkip { k, tau } => route_dynskip(input, k, tau),
         Policy::ExpertChoice { capacity } => route_expert_choice(input, capacity),
+        Policy::CacheAware { k0, k, alpha } => match input.resident {
+            Some(mask) if alpha != 0.0 => route_cache_aware(input, mask, k0, k, alpha),
+            // no residency view (or an inert bias): exactly base OEA
+            _ => route(Policy::OeaSimplified { k0, k }, input),
+        },
     }
+}
+
+/// Residency-aware OEA: run both OEA phases over boosted *selection*
+/// scores `s'(i,e) = s(i,e) · (1 + alpha)` for resident experts (raw
+/// scores otherwise), then compute combine weights from the RAW scores
+/// over the selected sets. The boost is a rank bias only — it steers the
+/// batch union toward already-loaded experts without touching Eq. 1.
+/// A uniform residency mask (all resident or none) scales every score by
+/// the same factor, so the boosted ranking equals the raw ranking and the
+/// decision is identical to base OEA.
+fn route_cache_aware(
+    input: &RoutingInput,
+    resident: &[bool],
+    k0: usize,
+    k: usize,
+    alpha: f64,
+) -> RoutingDecision {
+    let s = input.scores;
+    debug_assert_eq!(resident.len(), s.n);
+    // uniform masks (all resident / all cold — e.g. a freshly started
+    // cache) scale every score identically, so boosting provably cannot
+    // change any ranking: skip the matrix clone + re-rank entirely
+    let n_res = resident.iter().filter(|&&r| r).count();
+    if n_res == 0 || n_res == s.n {
+        return route(Policy::OeaSimplified { k0, k }, input);
+    }
+    let boost = 1.0 + alpha.max(0.0) as f32;
+    let mut sel = s.scores.clone();
+    for row in sel.chunks_exact_mut(s.n) {
+        for (e, v) in row.iter_mut().enumerate() {
+            if resident[e] {
+                *v *= boost;
+            }
+        }
+    }
+    let boosted = ScoreMatrix::new(s.b, s.n, sel);
+    let binput = RoutingInput {
+        scores: &boosted,
+        live: input.live,
+        mask_padding: input.mask_padding,
+        resident: input.resident,
+    };
+    let (mut per, union) = phase1_masks(&binput, k0, 1.0);
+    phase2_piggyback(&binput, &mut per, &union, k, s.n);
+    // combine from the ORIGINAL scores (Eq. 1 over each selected set)
+    RoutingDecision::from_masks(input, &per, &union)
 }
 
 /// Lynx (subtractive): start from the vanilla top-k union, drop the
@@ -415,7 +509,7 @@ mod tests {
     }
 
     fn input<'a>(s: &'a ScoreMatrix, live: &'a [bool]) -> RoutingInput<'a> {
-        RoutingInput { scores: s, live, mask_padding: true }
+        RoutingInput::new(s, live, true)
     }
 
     #[test]
@@ -536,7 +630,7 @@ mod tests {
         let live = vec![true, true, false, false];
         let d = route(
             Policy::Vanilla { k: 2 },
-            &RoutingInput { scores: &s, live: &live, mask_padding: false },
+            &RoutingInput { scores: &s, live: &live, mask_padding: false, resident: None },
         );
         // pad tokens route freely and enlarge the union (the §6 bug)
         assert_eq!(d.active, vec![0, 1, 2, 4, 5, 6]);
@@ -588,6 +682,11 @@ mod tests {
         assert_eq!(p("lynx:t=16"), Policy::Lynx { k: 8, target_t: 16 });
         assert_eq!(p("dynskip:tau=0.3"), Policy::DynSkip { k: 8, tau: 0.3 });
         assert_eq!(p("expert-choice:cap=2"), Policy::ExpertChoice { capacity: 2 });
+        assert_eq!(
+            p("cache-aware:k0=4,k=8,alpha=0.5"),
+            Policy::CacheAware { k0: 4, k: 8, alpha: 0.5 }
+        );
+        assert_eq!(p("cache-aware"), Policy::CacheAware { k0: 8, k: 8, alpha: 1.0 });
     }
 
     #[test]
@@ -603,6 +702,7 @@ mod tests {
             "lynx:target=16",
             "dynskip:thau=0.3",
             "expert-choice:capacity=2",
+            "cache-aware:beta=0.5",
             "oea-full:k0=3,maxP=32", // keys are case-sensitive
         ] {
             let err = Policy::from_cli(spec, 8, 128).unwrap_err();
@@ -623,6 +723,8 @@ mod tests {
         assert!(Policy::from_cli("oea:k0", 8, 128).is_err()); // missing '='
         assert!(Policy::from_cli("oea:k0=x", 8, 128).is_err()); // not an int
         assert!(Policy::from_cli("dynskip:tau=abc", 8, 128).is_err());
+        // a negative boost would silently run as plain OEA — reject it
+        assert!(Policy::from_cli("cache-aware:alpha=-0.5", 8, 128).is_err());
     }
 
     #[test]
@@ -642,11 +744,123 @@ mod tests {
             Policy::Lynx { k: 2, target_t: 3 },
             Policy::DynSkip { k: 2, tau: 0.5 },
             Policy::ExpertChoice { capacity: 2 },
+            Policy::CacheAware { k0: 1, k: 3, alpha: 0.7 },
         ] {
-            let d = route(pol, &input(&s, &live));
+            let resident = vec![true, false, true, false, true, false, true, false];
+            let d = route(
+                pol,
+                &RoutingInput {
+                    scores: &s,
+                    live: &live,
+                    mask_padding: true,
+                    resident: Some(&resident),
+                },
+            );
             // whatever the NaN rows produced, the outputs stay well-formed
             assert_eq!(d.sets.len(), 4);
             assert_eq!(d.combine.len(), 4 * 8);
+        }
+    }
+
+    #[test]
+    fn cache_aware_without_view_is_base_oea() {
+        let s = fixture();
+        let live = live4();
+        let oea = route(Policy::OeaSimplified { k0: 1, k: 3 }, &input(&s, &live));
+        let ca = route(
+            Policy::CacheAware { k0: 1, k: 3, alpha: 0.8 },
+            &input(&s, &live),
+        );
+        assert_eq!(ca.sets, oea.sets);
+        assert_eq!(ca.active, oea.active);
+        assert_eq!(ca.combine, oea.combine);
+    }
+
+    #[test]
+    fn cache_aware_alpha_zero_ignores_view() {
+        let s = fixture();
+        let live = live4();
+        let resident = vec![false, false, true, true, false, true, false, false];
+        let oea = route(Policy::OeaSimplified { k0: 1, k: 3 }, &input(&s, &live));
+        let ca = route(
+            Policy::CacheAware { k0: 1, k: 3, alpha: 0.0 },
+            &RoutingInput {
+                scores: &s,
+                live: &live,
+                mask_padding: true,
+                resident: Some(&resident),
+            },
+        );
+        assert_eq!(ca.sets, oea.sets);
+        assert_eq!(ca.active, oea.active);
+    }
+
+    #[test]
+    fn cache_aware_uniform_view_is_base_oea() {
+        // all-resident (or all-cold) boosts every score by the same
+        // factor: ranking unchanged, decision identical to OEA
+        let s = fixture();
+        let live = live4();
+        let oea = route(Policy::OeaSimplified { k0: 2, k: 3 }, &input(&s, &live));
+        for uniform in [vec![true; 8], vec![false; 8]] {
+            let ca = route(
+                Policy::CacheAware { k0: 2, k: 3, alpha: 1.5 },
+                &RoutingInput {
+                    scores: &s,
+                    live: &live,
+                    mask_padding: true,
+                    resident: Some(&uniform),
+                },
+            );
+            assert_eq!(ca.sets, oea.sets);
+            assert_eq!(ca.active, oea.active);
+            assert_eq!(ca.combine, oea.combine);
+        }
+    }
+
+    #[test]
+    fn cache_aware_steers_baseline_toward_residents() {
+        let s = fixture();
+        let live = live4();
+        // token 0 scores: e0=0.40, e1=0.30. With only e1 resident and a
+        // strong boost, the k0=1 baseline flips from e0 to e1.
+        let resident = vec![false, true, false, false, false, false, false, false];
+        let ca = route(
+            Policy::CacheAware { k0: 1, k: 1, alpha: 1.0 },
+            &RoutingInput {
+                scores: &s,
+                live: &live,
+                mask_padding: true,
+                resident: Some(&resident),
+            },
+        );
+        assert_eq!(ca.sets[0], vec![1], "boosted 0.30*2 > 0.40 must win");
+        // combine still renormalizes RAW scores over the chosen set
+        assert!((ca.combine[1] - 1.0).abs() < 1e-6);
+        // a resident expert never outranks a much stronger cold one:
+        // token 2 (e4=0.40 vs resident e1=0.03) keeps e4
+        assert_eq!(ca.sets[2], vec![4]);
+    }
+
+    #[test]
+    fn cache_aware_union_never_grows_past_phase1() {
+        // piggybacking (phase 2) must not add experts outside the union
+        let s = fixture();
+        let live = live4();
+        let resident = vec![true, false, true, false, true, false, true, false];
+        let ca = route(
+            Policy::CacheAware { k0: 1, k: 4, alpha: 0.5 },
+            &RoutingInput {
+                scores: &s,
+                live: &live,
+                mask_padding: true,
+                resident: Some(&resident),
+            },
+        );
+        for set in &ca.sets {
+            for e in set {
+                assert!(ca.active.contains(e), "piggyback grew the union");
+            }
         }
     }
 

@@ -1,0 +1,79 @@
+//! The load-event ledger: every page-in, hit, and eviction, in counters
+//! cheap enough to sit on the dispatch hot path.
+
+/// Cumulative residency counters (per layer in the backend; summed for
+/// the `/metrics` surface). Monotone, so a reader can snapshot before and
+/// after a step and diff ([`ResidencyCounters::delta_from`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResidencyCounters {
+    /// demand accesses that found the expert loaded
+    pub hits: u64,
+    /// demand accesses that paged the expert in
+    pub misses: u64,
+    /// residents dropped to make room (resident-set churn)
+    pub evictions: u64,
+    /// bytes of packed panels paged in (demand misses + prefetches)
+    pub bytes_paged: u64,
+    /// lookahead page-ins (not counted as hits or misses)
+    pub prefetches: u64,
+}
+
+impl ResidencyCounters {
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit fraction of demand accesses; 0 when nothing was accessed.
+    pub fn hit_rate(&self) -> f64 {
+        let acc = self.accesses();
+        if acc == 0 {
+            0.0
+        } else {
+            self.hits as f64 / acc as f64
+        }
+    }
+
+    pub fn add(&mut self, other: &ResidencyCounters) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.bytes_paged += other.bytes_paged;
+        self.prefetches += other.prefetches;
+    }
+
+    /// Counter increments since `earlier` (a previous snapshot of the
+    /// same monotone counters).
+    pub fn delta_from(&self, earlier: &ResidencyCounters) -> ResidencyCounters {
+        ResidencyCounters {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            evictions: self.evictions - earlier.evictions,
+            bytes_paged: self.bytes_paged - earlier.bytes_paged,
+            prefetches: self.prefetches - earlier.prefetches,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_handles_empty_and_counts() {
+        assert_eq!(ResidencyCounters::default().hit_rate(), 0.0);
+        let c = ResidencyCounters { hits: 3, misses: 1, ..Default::default() };
+        assert_eq!(c.accesses(), 4);
+        assert!((c.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_and_delta_are_inverse() {
+        let a = ResidencyCounters { hits: 5, misses: 2, evictions: 1, bytes_paged: 100, prefetches: 3 };
+        let d = ResidencyCounters { hits: 2, misses: 1, evictions: 0, bytes_paged: 40, prefetches: 1 };
+        let mut b = a;
+        b.add(&d);
+        assert_eq!(b.delta_from(&a), d);
+        assert_eq!(b.hits, 7);
+        assert_eq!(b.bytes_paged, 140);
+    }
+}

@@ -1,0 +1,80 @@
+//! Expert residency: cross-step expert-weight paging.
+//!
+//! The paper's cost model treats every activated expert as a fresh weight
+//! fetch, which is right for a single step but wrong across steps: decode
+//! traffic is temporally correlated, so the experts a batch activated at
+//! step `s` are disproportionately the ones it activates at `s+1`
+//! (ExpertFlow makes the same observation for offloaded serving). This
+//! module models expert weights as an explicitly managed per-layer cache:
+//!
+//! - [`set::ResidencySet`] — which experts' packed panels are "loaded"
+//!   under a capacity `C` (experts per layer), with pluggable eviction
+//!   ([`set::EvictPolicy`]: LRU, LFU, or router-score-aware);
+//! - [`ledger::ResidencyCounters`] — the load-event ledger (hits, misses,
+//!   evictions, bytes paged, prefetch page-ins);
+//! - [`prefetch::Prefetcher`] — an optional lookahead that pages in the
+//!   next step's predicted-hot experts from the *previous* step's router
+//!   scores, ahead of the routing decision.
+//!
+//! The backend consults the set in grouped dispatch (a miss packs the
+//! expert's panels lazily — the simulated page-in), the routing layer can
+//! bias expert selection toward residents ([`crate::moe::policy::Policy::
+//! CacheAware`]), and [`crate::latency::CostModel`] charges misses a
+//! page-in term so the simulated H100 latency reflects the paging tier.
+
+pub mod ledger;
+pub mod prefetch;
+pub mod set;
+
+pub use ledger::ResidencyCounters;
+pub use prefetch::Prefetcher;
+pub use set::{EvictPolicy, ResidencySet, Touch};
+
+/// Residency configuration for one backend (applied to every layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResidencyConfig {
+    /// Resident experts per layer. `capacity >= n_experts` is the
+    /// unbounded regime: nothing is ever evicted, every miss is a
+    /// compulsory first touch, and cache-aware routing bias is inert
+    /// (see [`set::ResidencySet::unbounded`]).
+    pub capacity: usize,
+    pub evict: EvictPolicy,
+    /// Lookahead page-ins per (layer, step) from the previous step's
+    /// router scores; 0 disables the prefetcher.
+    pub prefetch: usize,
+}
+
+impl ResidencyConfig {
+    pub fn new(capacity: usize, evict: EvictPolicy, prefetch: usize) -> ResidencyConfig {
+        ResidencyConfig { capacity, evict, prefetch }
+    }
+}
+
+/// Aggregated residency telemetry of one backend — the `/metrics` and
+/// bench JSON surface.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResidencyStats {
+    /// configured capacity (experts per layer)
+    pub capacity: usize,
+    pub n_experts: usize,
+    pub evict: EvictPolicy,
+    pub prefetch: usize,
+    /// counters summed over layers
+    pub counters: ResidencyCounters,
+    /// currently resident experts summed over layers
+    pub resident: usize,
+    pub layers: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_roundtrip() {
+        let c = ResidencyConfig::new(8, EvictPolicy::Lru, 2);
+        assert_eq!(c.capacity, 8);
+        assert_eq!(c.evict, EvictPolicy::Lru);
+        assert_eq!(c.prefetch, 2);
+    }
+}

@@ -1,0 +1,79 @@
+//! Lookahead prefetcher: decode traffic is temporally correlated, so the
+//! previous step's router scores predict the next step's hot experts.
+//!
+//! Per layer, at each step the backend (1) applies the predictions
+//! recorded at the previous step — paging those experts in *before* the
+//! routing decision and expert execution, where the copy can overlap the
+//! attention sub-block — and then (2) records this step's top-scoring
+//! experts as the next step's predictions (fed by the model runner via
+//! `Backend::residency_observe`, which aggregates router mass over the
+//! rows that actually route — dead bucket rows must not steer paging).
+//! Prefetched page-ins are
+//! ledgered separately from demand misses: they model an async copy off
+//! the critical path, so the cost model does not charge them a page-in
+//! term, but bytes-paged telemetry stays honest.
+
+/// One layer's prediction buffer.
+#[derive(Debug, Clone, Default)]
+pub struct Prefetcher {
+    /// top-m experts to page in at the start of the next step
+    pending: Vec<u16>,
+    lookahead: usize,
+}
+
+impl Prefetcher {
+    pub fn new(lookahead: usize) -> Prefetcher {
+        Prefetcher { pending: Vec::new(), lookahead }
+    }
+
+    pub fn lookahead(&self) -> usize {
+        self.lookahead
+    }
+
+    /// Drain the predictions recorded at the previous step.
+    pub fn take_pending(&mut self) -> Vec<u16> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Record next-step predictions: the `lookahead` experts with the
+    /// highest batch-aggregated router mass this step.
+    pub fn observe(&mut self, agg_scores: &[f32]) {
+        if self.lookahead == 0 {
+            return;
+        }
+        let mut idx: Vec<u16> = (0..agg_scores.len() as u16).collect();
+        // descending mass; ties by lower id (deterministic, NaN-total)
+        idx.sort_by(|&a, &b| agg_scores[b as usize].total_cmp(&agg_scores[a as usize]));
+        idx.truncate(self.lookahead);
+        self.pending = idx;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_then_take_roundtrip() {
+        let mut p = Prefetcher::new(2);
+        p.observe(&[0.1, 0.9, 0.3, 0.7]);
+        assert_eq!(p.take_pending(), vec![1, 3]);
+        // drained: a second take is empty until the next observe
+        assert!(p.take_pending().is_empty());
+    }
+
+    #[test]
+    fn zero_lookahead_is_inert() {
+        let mut p = Prefetcher::new(0);
+        p.observe(&[0.5, 0.5]);
+        assert!(p.take_pending().is_empty());
+    }
+
+    #[test]
+    fn newer_observation_replaces_older() {
+        let mut p = Prefetcher::new(1);
+        p.observe(&[1.0, 0.0]);
+        p.observe(&[0.0, 1.0]);
+        assert_eq!(p.take_pending(), vec![1]);
+    }
+}

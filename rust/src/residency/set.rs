@@ -1,0 +1,322 @@
+//! The per-layer resident-expert set and its eviction policies.
+
+use crate::util::error::{Error, Result};
+
+/// Which resident expert to evict when the set is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Least-recently-used (ties by lower expert id).
+    Lru,
+    /// Least-frequently-used (ties by LRU, then lower id).
+    Lfu,
+    /// Lowest router-score EWMA (fed by [`ResidencySet::note_scores`];
+    /// ties by LRU, then lower id). Evicts the expert the router has
+    /// stopped scoring highly, even if it was touched recently.
+    ScoreAware,
+}
+
+impl EvictPolicy {
+    /// Parse a CLI spec: `lru` | `lfu` | `score`.
+    pub fn from_cli(spec: &str) -> Result<EvictPolicy> {
+        match spec.trim().to_ascii_lowercase().as_str() {
+            "lru" => Ok(EvictPolicy::Lru),
+            "lfu" => Ok(EvictPolicy::Lfu),
+            "score" => Ok(EvictPolicy::ScoreAware),
+            other => Err(Error::Config(format!(
+                "unknown eviction policy {other:?} (lru|lfu|score)"
+            ))),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvictPolicy::Lru => "lru",
+            EvictPolicy::Lfu => "lfu",
+            EvictPolicy::ScoreAware => "score",
+        }
+    }
+}
+
+/// Outcome of one demand access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Touch {
+    /// The expert's panels were already loaded.
+    Hit,
+    /// The expert had to be paged in, evicting `evicted` if the set was
+    /// at capacity.
+    Miss { evicted: Option<usize> },
+}
+
+/// EWMA smoothing for score-aware eviction: new mass weighs 1/4, so an
+/// expert's standing decays over ~a dozen steps of silence.
+const SCORE_EWMA: f64 = 0.25;
+
+/// Which experts of one layer are "loaded" under a capacity bound, with
+/// the recency/frequency/score state the eviction policies rank by. All
+/// tie-breaking is deterministic (recency tick, then expert id), so a
+/// trace replays identically.
+#[derive(Debug, Clone)]
+pub struct ResidencySet {
+    n_experts: usize,
+    capacity: usize,
+    evict: EvictPolicy,
+    resident: Vec<bool>,
+    n_resident: usize,
+    /// monotone access clock (ticks on every demand access)
+    tick: u64,
+    last_used: Vec<u64>,
+    freq: Vec<u64>,
+    /// router-mass EWMA per expert (score-aware eviction)
+    score: Vec<f64>,
+}
+
+impl ResidencySet {
+    /// `capacity` is clamped to at least 1 (an empty cache cannot serve).
+    pub fn new(n_experts: usize, capacity: usize, evict: EvictPolicy) -> ResidencySet {
+        ResidencySet {
+            n_experts,
+            capacity: capacity.max(1),
+            evict,
+            resident: vec![false; n_experts],
+            n_resident: 0,
+            tick: 0,
+            last_used: vec![0; n_experts],
+            freq: vec![0; n_experts],
+            score: vec![0.0; n_experts],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Unbounded regime: every expert fits, so no eviction ever happens
+    /// and every miss is a compulsory first touch. Routing bias toward
+    /// residents is disabled here (see `CacheAware` in `moe::policy`) —
+    /// with nothing to evict there are no capacity misses to avoid, which
+    /// is what makes cache-aware routing at `C >= N` decision-identical
+    /// to base OEA.
+    pub fn unbounded(&self) -> bool {
+        self.capacity >= self.n_experts
+    }
+
+    #[inline]
+    pub fn contains(&self, e: usize) -> bool {
+        self.resident[e]
+    }
+
+    pub fn n_resident(&self) -> usize {
+        self.n_resident
+    }
+
+    /// Per-expert resident flags (the routing view).
+    pub fn resident_mask(&self) -> &[bool] {
+        &self.resident
+    }
+
+    /// One demand access of expert `e`: updates recency/frequency and
+    /// pages `e` in on a miss (evicting if at capacity).
+    pub fn touch(&mut self, e: usize) -> Touch {
+        debug_assert!(e < self.n_experts);
+        self.tick += 1;
+        self.last_used[e] = self.tick;
+        self.freq[e] += 1;
+        if self.resident[e] {
+            Touch::Hit
+        } else {
+            Touch::Miss { evicted: self.insert(e) }
+        }
+    }
+
+    /// Page `e` in without counting a demand access (the prefetch path).
+    /// No-op (outer `None`) if already resident; otherwise pages in and
+    /// returns the evicted expert, if any. Recency is NOT bumped — a
+    /// prefetched-but-never-touched expert must stay first in line for
+    /// eviction. `protect` lists experts that must not be chosen as the
+    /// victim — the rest of the same prefetch wave, which (all
+    /// recency-silent, so maximally stale to the policies) would
+    /// otherwise evict each other: at a full cache, admitting the
+    /// 2nd-best prediction would throw out the best one just paged in.
+    /// Declines the admit (outer `None`) if every resident is protected.
+    pub fn admit_protecting(&mut self, e: usize, protect: &[usize]) -> Option<Option<usize>> {
+        debug_assert!(e < self.n_experts);
+        if self.resident[e] {
+            return None;
+        }
+        if self.n_resident >= self.capacity {
+            let v = self.victim_excluding(protect)?;
+            self.resident[v] = false;
+            self.n_resident -= 1;
+            self.resident[e] = true;
+            self.n_resident += 1;
+            Some(Some(v))
+        } else {
+            self.resident[e] = true;
+            self.n_resident += 1;
+            Some(None)
+        }
+    }
+
+    fn insert(&mut self, e: usize) -> Option<usize> {
+        let evicted = if self.n_resident >= self.capacity {
+            let v = self
+                .victim_excluding(&[])
+                .expect("a full unprotected set always has a victim");
+            self.resident[v] = false;
+            self.n_resident -= 1;
+            Some(v)
+        } else {
+            None
+        };
+        self.resident[e] = true;
+        self.n_resident += 1;
+        evicted
+    }
+
+    /// The resident expert the active policy ranks lowest, skipping
+    /// `protect`; `None` when every resident is protected.
+    fn victim_excluding(&self, protect: &[usize]) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for e in 0..self.n_experts {
+            if !self.resident[e] || protect.contains(&e) {
+                continue;
+            }
+            let b = match best {
+                Some(b) => b,
+                None => {
+                    best = Some(e);
+                    continue;
+                }
+            };
+            let worse = match self.evict {
+                EvictPolicy::Lru => self.last_used[e] < self.last_used[b],
+                EvictPolicy::Lfu => {
+                    self.freq[e].cmp(&self.freq[b]).then(self.last_used[e].cmp(&self.last_used[b]))
+                        == std::cmp::Ordering::Less
+                }
+                EvictPolicy::ScoreAware => {
+                    self.score[e]
+                        .total_cmp(&self.score[b])
+                        .then(self.last_used[e].cmp(&self.last_used[b]))
+                        == std::cmp::Ordering::Less
+                }
+            };
+            if worse {
+                best = Some(e);
+            }
+        }
+        best
+    }
+
+    /// Feed one step's batch-aggregated router mass per expert (the
+    /// score-aware eviction signal; cheap to maintain under any policy).
+    pub fn note_scores(&mut self, agg: &[f32]) {
+        debug_assert_eq!(agg.len(), self.n_experts);
+        for (s, &a) in self.score.iter_mut().zip(agg.iter()) {
+            *s = (1.0 - SCORE_EWMA) * *s + SCORE_EWMA * a as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_cli_parses_and_rejects() {
+        assert_eq!(EvictPolicy::from_cli("lru").unwrap(), EvictPolicy::Lru);
+        assert_eq!(EvictPolicy::from_cli(" LFU ").unwrap(), EvictPolicy::Lfu);
+        assert_eq!(EvictPolicy::from_cli("score").unwrap(), EvictPolicy::ScoreAware);
+        assert!(EvictPolicy::from_cli("mru").is_err());
+        assert_eq!(EvictPolicy::ScoreAware.label(), "score");
+    }
+
+    #[test]
+    fn misses_then_hits_within_capacity() {
+        let mut s = ResidencySet::new(8, 4, EvictPolicy::Lru);
+        for e in 0..4 {
+            assert_eq!(s.touch(e), Touch::Miss { evicted: None });
+        }
+        for e in 0..4 {
+            assert_eq!(s.touch(e), Touch::Hit);
+        }
+        assert_eq!(s.n_resident(), 4);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut s = ResidencySet::new(8, 2, EvictPolicy::Lru);
+        s.touch(0);
+        s.touch(1);
+        s.touch(0); // 1 is now LRU
+        assert_eq!(s.touch(2), Touch::Miss { evicted: Some(1) });
+        assert!(s.contains(0) && s.contains(2) && !s.contains(1));
+    }
+
+    #[test]
+    fn lfu_evicts_least_frequent() {
+        let mut s = ResidencySet::new(8, 2, EvictPolicy::Lfu);
+        s.touch(0);
+        s.touch(0);
+        s.touch(1); // freq: e0=2, e1=1
+        assert_eq!(s.touch(2), Touch::Miss { evicted: Some(1) });
+    }
+
+    #[test]
+    fn score_aware_evicts_lowest_ewma() {
+        let mut s = ResidencySet::new(4, 2, EvictPolicy::ScoreAware);
+        s.touch(0);
+        s.touch(1);
+        // expert 1 scores high, expert 0 has gone quiet
+        s.note_scores(&[0.01, 0.9, 0.05, 0.04]);
+        assert_eq!(s.touch(2), Touch::Miss { evicted: Some(0) });
+    }
+
+    #[test]
+    fn admit_is_silent_and_evictable_first() {
+        let mut s = ResidencySet::new(8, 2, EvictPolicy::Lru);
+        s.touch(0);
+        assert_eq!(s.admit_protecting(5, &[]), Some(None)); // paged in, no eviction
+        assert_eq!(s.admit_protecting(5, &[]), None); // already resident
+        assert!(s.contains(5));
+        // 5 was never *touched* — it is the LRU victim, not 0
+        assert_eq!(s.touch(3), Touch::Miss { evicted: Some(5) });
+    }
+
+    #[test]
+    fn prefetch_wave_mates_do_not_evict_each_other() {
+        let mut s = ResidencySet::new(8, 2, EvictPolicy::Lru);
+        s.touch(0);
+        s.touch(1); // full: {0, 1}, LRU = 0
+        // one prefetch wave of two predictions onto a full cache
+        assert_eq!(s.admit_protecting(6, &[]), Some(Some(0)));
+        // without protection the 2nd admit would victimize recency-silent 6
+        assert_eq!(s.admit_protecting(7, &[6]), Some(Some(1)));
+        assert!(s.contains(6) && s.contains(7), "both predictions resident");
+        // every resident protected: the admit is declined, nothing changes
+        assert_eq!(s.admit_protecting(2, &[6, 7]), None);
+        assert!(!s.contains(2) && s.n_resident() == 2);
+    }
+
+    #[test]
+    fn unbounded_never_evicts() {
+        let mut s = ResidencySet::new(4, 4, EvictPolicy::Lru);
+        assert!(s.unbounded());
+        for e in 0..4 {
+            assert_eq!(s.touch(e), Touch::Miss { evicted: None });
+        }
+        for e in (0..4).rev() {
+            assert_eq!(s.touch(e), Touch::Hit);
+        }
+        assert!(ResidencySet::new(4, 9, EvictPolicy::Lru).unbounded());
+        assert!(!ResidencySet::new(4, 3, EvictPolicy::Lru).unbounded());
+    }
+
+    #[test]
+    fn capacity_clamped_to_one() {
+        let mut s = ResidencySet::new(4, 0, EvictPolicy::Lru);
+        assert_eq!(s.capacity(), 1);
+        s.touch(0);
+        assert_eq!(s.touch(1), Touch::Miss { evicted: Some(0) });
+    }
+}

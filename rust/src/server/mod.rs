@@ -72,6 +72,9 @@ enum EngineMsg {
     /// lets the engine thread skip per-token channel sends for the
     /// non-streaming majority — their tokens arrive inside `Done`.
     Generate(GenRequest, bool, mpsc::Sender<GenEvent>),
+    /// Client went away mid-generation: retire the sequence (free its
+    /// decode slot) instead of decoding to completion.
+    Cancel(u64),
     Metrics(mpsc::Sender<Json>),
     Shutdown,
 }
@@ -163,6 +166,14 @@ where
                             }
                         }
                     }
+                    Ok(EngineMsg::Cancel(id)) => {
+                        streams.remove(&id);
+                        if engine.cancel(id).is_some() {
+                            // a cancelled generation is a finished one
+                            // (max_requests and /metrics agree)
+                            engine_served.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
                     Ok(EngineMsg::Metrics(reply)) => {
                         let _ = reply.send(metrics_json(&engine));
                     }
@@ -184,10 +195,13 @@ where
             }
             match engine.step_events() {
                 Ok(ev) => {
+                    // a failed token send means the handler (and its
+                    // client) is gone — retire those sequences below
+                    let mut dead: Vec<u64> = Vec::new();
                     for t in ev.tokens {
                         if let Some((stream, wants_tokens)) = streams.get(&t.id) {
-                            if *wants_tokens {
-                                let _ = stream.send(GenEvent::Token(t));
+                            if *wants_tokens && stream.send(GenEvent::Token(t)).is_err() {
+                                dead.push(t.id);
                             }
                         }
                     }
@@ -196,6 +210,13 @@ where
                             let _ = stream.send(GenEvent::Done(Box::new(f)));
                         }
                         engine_served.fetch_add(1, Ordering::SeqCst);
+                    }
+                    for id in dead {
+                        streams.remove(&id);
+                        // None if the request already finished this step
+                        if engine.cancel(id).is_some() {
+                            engine_served.fetch_add(1, Ordering::SeqCst);
+                        }
                     }
                 }
                 Err(e) => {
@@ -350,7 +371,11 @@ fn handle_generate(
                 if writer.is_none() {
                     match begin_stream(&stream) {
                         Some(w) => writer = Some(w),
-                        None => return, // client went away
+                        None => {
+                            // client went away before the first byte
+                            let _ = tx.send(EngineMsg::Cancel(ev.id));
+                            return;
+                        }
                     }
                 }
                 let mut line = Json::obj(vec![
@@ -363,9 +388,11 @@ fn handle_generate(
                 line.push('\n');
                 if let Some(w) = writer.as_mut() {
                     if w.chunk(&line).is_err() {
-                        // client disconnected mid-stream; the engine keeps
-                        // decoding (no cancellation propagation yet) but
-                        // nothing more can be written
+                        // client disconnected mid-stream: retire the
+                        // sequence so its slot frees immediately (the
+                        // engine also self-detects via the dropped event
+                        // channel; this message just makes it prompt)
+                        let _ = tx.send(EngineMsg::Cancel(ev.id));
                         return;
                     }
                 }
@@ -463,6 +490,7 @@ fn finished_json(f: &FinishedRequest, text: &str) -> Json {
                 FinishReason::Length => "length",
                 FinishReason::Eos => "eos",
                 FinishReason::KvExhausted => "kv_exhausted",
+                FinishReason::Cancelled => "cancelled",
             }),
         ),
         ("queue_wait_ms", Json::num(f.queue_wait_us / 1e3)),
@@ -483,7 +511,8 @@ fn err_json(msg: &str) -> String {
 
 fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
     let fit = engine.moe.linear_fit(true);
-    Json::obj(vec![
+    let mut pairs = vec![
+        ("policy", Json::str(&engine.cfg.policy.label())),
         ("n_records", Json::num(engine.moe.len() as f64)),
         ("avg_active_experts", Json::num(engine.moe.avg_t())),
         ("avg_moe_us_simulated", Json::num(engine.moe.avg_latency_us(true))),
@@ -494,6 +523,7 @@ fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
         ),
         ("n_finished", Json::num(engine.requests.n_finished as f64)),
         ("n_rejected", Json::num(engine.requests.n_rejected as f64)),
+        ("n_cancelled", Json::num(engine.requests.n_cancelled as f64)),
         (
             "generated_tokens",
             Json::num(engine.requests.total_generated_tokens as f64),
@@ -501,5 +531,48 @@ fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
         ("n_running", Json::num(engine.n_running() as f64)),
         ("n_queued", Json::num(engine.n_queued() as f64)),
         ("slo", engine.requests.slo_json()),
+    ];
+    // per-policy routed-load histogram: how the served traffic actually
+    // spread over experts (the denominator residency hit rates live over)
+    if let Some(loads) = engine.runner.backend.expert_loads() {
+        let total: u64 = loads.iter().sum();
+        let max = loads.iter().copied().max().unwrap_or(0);
+        pairs.push((
+            "expert_load",
+            Json::obj(vec![
+                ("total", Json::num(total as f64)),
+                (
+                    "max_share",
+                    Json::num(if total > 0 { max as f64 / total as f64 } else { 0.0 }),
+                ),
+                (
+                    "per_expert",
+                    Json::arr(loads.iter().map(|&x| Json::num(x as f64)).collect()),
+                ),
+            ]),
+        ));
+    }
+    if let Some(rs) = engine.runner.backend.residency_stats() {
+        pairs.push(("residency", residency_json(&rs)));
+    }
+    Json::obj(pairs)
+}
+
+/// The `/metrics` residency block: configuration, hit rate, bytes paged,
+/// and resident-set churn.
+fn residency_json(rs: &crate::residency::ResidencyStats) -> Json {
+    Json::obj(vec![
+        ("capacity", Json::num(rs.capacity as f64)),
+        ("n_experts", Json::num(rs.n_experts as f64)),
+        ("evict", Json::str(rs.evict.label())),
+        ("prefetch", Json::num(rs.prefetch as f64)),
+        ("hit_rate", Json::num(rs.counters.hit_rate())),
+        ("hits", Json::num(rs.counters.hits as f64)),
+        ("misses", Json::num(rs.counters.misses as f64)),
+        ("evictions", Json::num(rs.counters.evictions as f64)),
+        ("bytes_paged", Json::num(rs.counters.bytes_paged as f64)),
+        ("prefetches", Json::num(rs.counters.prefetches as f64)),
+        ("resident", Json::num(rs.resident as f64)),
+        ("layers", Json::num(rs.layers as f64)),
     ])
 }

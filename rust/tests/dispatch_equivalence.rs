@@ -47,12 +47,12 @@ fn backends(cfg: &ModelConfig, threads: usize) -> (CpuBackend, CpuBackend) {
     let grouped = CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads },
+        CpuOptions { dispatch: DispatchMode::Grouped, threads, residency: None },
     );
     let gather = CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Gather, threads: 1 },
+        CpuOptions { dispatch: DispatchMode::Gather, threads: 1, residency: None },
     );
     (grouped, gather)
 }
@@ -71,7 +71,7 @@ fn grouped_ffn_matches_gather_oracle_under_random_routing() {
         let pol = random_policy(rng, cfg.top_k, n);
         let dec = route(
             pol,
-            &RoutingInput { scores: &s, live: &live, mask_padding: true },
+            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
         );
         let t_bucket = cfg.t_bucket_for(dec.t()).unwrap();
         let ids = pad_active_list(&dec.active, t_bucket, n);
@@ -102,7 +102,7 @@ fn load_telemetry_counts_only_routed_tokens_under_both_paths() {
         let pol = random_policy(rng, cfg.top_k, n);
         let dec = route(
             pol,
-            &RoutingInput { scores: &s, live: &live, mask_padding: true },
+            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
         );
         let t_bucket = cfg.t_bucket_for(dec.t()).unwrap();
         let ids = pad_active_list(&dec.active, t_bucket, n);
@@ -186,7 +186,7 @@ fn grouped_threaded_is_deterministic() {
         let be = CpuBackend::synthetic_with(
             cfg.clone(),
             0,
-            CpuOptions { dispatch: DispatchMode::Grouped, threads },
+            CpuOptions { dispatch: DispatchMode::Grouped, threads, residency: None },
         );
         let runner = ModelRunner::new(be);
         let b = 4usize;
@@ -224,12 +224,12 @@ fn logits_parallel_matches_serial() {
     let serial = CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1 },
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, residency: None },
     );
     let parallel = CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 4 },
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 4, residency: None },
     );
     let mut rng = Rng::new(7);
     // the paper's operating point (B=16) plus odd sizes that exercise the

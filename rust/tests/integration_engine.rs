@@ -142,7 +142,7 @@ fn oea_engine_activates_fewer_experts() {
 
 #[test]
 fn every_policy_serves_through_the_engine() {
-    // the seven routing policies all drive the full admission -> prefill
+    // the eight routing policies all drive the full admission -> prefill
     // -> lockstep decode -> sample -> retire pipeline on the CPU backend
     let policies = [
         Policy::Vanilla { k: 2 },
@@ -152,6 +152,7 @@ fn every_policy_serves_through_the_engine() {
         Policy::Lynx { k: 2, target_t: 4 },
         Policy::DynSkip { k: 2, tau: 0.3 },
         Policy::ExpertChoice { capacity: 2 },
+        Policy::CacheAware { k0: 1, k: 2, alpha: 0.5 },
     ];
     for pol in policies {
         with_engine(
@@ -308,6 +309,60 @@ fn continuous_admission_joins_mid_flight() {
             for f in done {
                 assert_eq!(f.tokens.len(), 12);
             }
+        },
+    );
+}
+
+#[test]
+fn cancel_running_request_frees_slot_early() {
+    with_engine(
+        |c| c.max_running = 2,
+        |engine| {
+            engine.submit(req(800, 5, 64));
+            engine.submit(req(801, 5, 64));
+            for _ in 0..3 {
+                engine.step().unwrap();
+            }
+            assert_eq!(engine.n_running(), 2);
+            let f = engine.cancel(800).expect("request 800 is running");
+            assert_eq!(f.id, 800);
+            assert_eq!(f.reason, FinishReason::Cancelled);
+            assert!(!f.tokens.is_empty(), "partial output is reported");
+            assert!(f.tokens.len() < 64, "cancelled well before completion");
+            // the slot freed immediately — long before 64 decode steps
+            assert_eq!(engine.n_running(), 1);
+            assert_eq!(engine.requests.n_cancelled, 1);
+            assert_eq!(engine.requests.n_finished, 1);
+            // unknown / already-cancelled ids are a no-op
+            assert!(engine.cancel(800).is_none());
+            assert!(engine.cancel(9999).is_none());
+            // the surviving request still decodes to completion
+            let done = engine.run_to_completion().unwrap();
+            assert_eq!(done.len(), 1);
+            assert_eq!(done[0].id, 801);
+            assert_eq!(done[0].tokens.len(), 64);
+            assert_eq!(engine.requests.n_finished, 2);
+        },
+    );
+}
+
+#[test]
+fn cancel_queued_request_never_runs() {
+    with_engine(
+        |c| c.max_running = 1,
+        |engine| {
+            engine.submit(req(810, 5, 8));
+            engine.step().unwrap(); // 810 admitted into the only slot
+            engine.submit(req(811, 5, 8)); // waits in the queue
+            assert_eq!(engine.n_queued(), 1);
+            let f = engine.cancel(811).expect("request 811 is queued");
+            assert_eq!(f.reason, FinishReason::Cancelled);
+            assert!(f.tokens.is_empty());
+            assert_eq!(engine.n_queued(), 0);
+            assert_eq!(engine.requests.n_cancelled, 1);
+            let done = engine.run_to_completion().unwrap();
+            assert_eq!(done.len(), 1, "only the admitted request decodes");
+            assert_eq!(done[0].id, 810);
         },
     );
 }

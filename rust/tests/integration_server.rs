@@ -4,17 +4,18 @@
 //! drives one server through every phase (phases share engine state, and
 //! a single listener avoids port races under parallel test threads).
 
-use std::io::Write;
+use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::mpsc;
 use std::time::Duration;
 
-use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::backend::cpu::{CpuBackend, CpuOptions};
 use oea_serve::config::ModelConfig;
 use oea_serve::coordinator::{Engine, EngineConfig};
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::Policy;
+use oea_serve::residency::{EvictPolicy, ResidencyConfig};
 use oea_serve::server::http::{read_response, HttpResponse};
 use oea_serve::server::{self, ServeOptions};
 use oea_serve::util::bpe::Tokenizer;
@@ -165,6 +166,111 @@ fn server_streams_backpressures_reports_and_drains() {
     }
 
     // -- graceful drain --------------------------------------------------
+    let s = post(&addr, "/shutdown", "");
+    assert_eq!(s.code, 200);
+    handle
+        .join()
+        .expect("server thread panicked")
+        .expect("serve() returned an error");
+}
+
+/// A client that disconnects mid-stream must cancel its generation: the
+/// decode slot frees early (instead of decoding the full token budget)
+/// and `n_cancelled` shows on /metrics. The server runs with an expert
+/// residency cache and cache-aware routing, so the /metrics residency
+/// and expert-load blocks are asserted end to end as well.
+#[test]
+fn client_disconnect_cancels_and_metrics_report_residency() {
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let cost = H100Presets::for_config(&cfg.name);
+        server::serve(
+            move || {
+                let opts = CpuOptions {
+                    residency: Some(ResidencyConfig::new(4, EvictPolicy::Lru, 1)),
+                    ..CpuOptions::default()
+                };
+                Engine::new(
+                    ModelRunner::new(CpuBackend::synthetic_with(cfg, 0, opts)),
+                    EngineConfig {
+                        policy: Policy::CacheAware { k0: 1, k: 2, alpha: 0.5 },
+                        mask_padding: true,
+                        max_running: 2,
+                        max_queue: 4,
+                        eos_token: None,
+                        cost_model: cost,
+                    },
+                )
+            },
+            Tokenizer::byte_level(),
+            "127.0.0.1:0",
+            ServeOptions { max_requests: None, http_workers: 4, ready: Some(ready_tx) },
+        )
+    });
+    let addr = ready_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("server never bound");
+
+    // open a streaming generation with a large token budget, read the
+    // first bytes so the stream is demonstrably live, then DROP the
+    // connection with the generation still in flight
+    {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let body = gen_body("abandon!", 110, true);
+        s.write_all(
+            format!(
+                "POST /generate HTTP/1.1\r\nContent-Type: application/json\r\n\
+                 Content-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut buf = [0u8; 64];
+        let n = s.read(&mut buf).expect("first stream bytes");
+        assert!(n > 0, "stream never started");
+    }
+
+    // the engine notices within a few steps: the slot frees and the
+    // cancellation is counted, long before 110 tokens could decode
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let metrics = loop {
+        let m = get(&addr, "/metrics");
+        assert_eq!(m.code, 200);
+        let v = Json::parse(&m.body).unwrap();
+        let cancelled = v.get("n_cancelled").unwrap().as_usize().unwrap();
+        let running = v.get("n_running").unwrap().as_usize().unwrap();
+        if cancelled >= 1 && running == 0 {
+            break v;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "cancellation never observed: {}",
+            m.body
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    };
+
+    // residency block: configured shape, well-formed counters
+    let res = metrics.get("residency").unwrap();
+    assert_eq!(res.get("capacity").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(res.get("evict").unwrap().as_str().unwrap(), "lru");
+    let hit_rate = res.get("hit_rate").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&hit_rate), "hit_rate {hit_rate}");
+    assert!(res.get("misses").unwrap().as_usize().unwrap() > 0, "cold start misses");
+    assert!(res.get("bytes_paged").unwrap().as_usize().unwrap() > 0);
+    // tiny config: 2 layers x capacity 4
+    assert!(res.get("resident").unwrap().as_usize().unwrap() <= 8);
+
+    // per-policy expert-load histogram
+    assert_eq!(metrics.get("policy").unwrap().as_str().unwrap(), "cache-aware(k0=1,k=2,alpha=0.5)");
+    let load = metrics.get("expert_load").unwrap();
+    assert!(load.get("total").unwrap().as_usize().unwrap() > 0);
+    let per: usize = load.get("per_expert").unwrap().as_arr().unwrap().len();
+    assert_eq!(per, 8, "tiny config has 8 experts");
+
     let s = post(&addr, "/shutdown", "");
     assert_eq!(s.code, 200);
     handle

@@ -1,0 +1,379 @@
+//! Property suites over the expert residency subsystem: eviction
+//! invariants against reference models, bitwise-transparency of residency
+//! bookkeeping in grouped dispatch, routing-level cache-aware laws, and
+//! the end-to-end infinite-capacity equivalence (cache-aware at
+//! `C = n_experts` is decision-identical to base OEA through the full
+//! decode stack).
+
+use std::collections::HashMap;
+
+use oea_serve::backend::cpu::{CpuBackend, CpuOptions, DispatchMode};
+use oea_serve::backend::Backend;
+use oea_serve::config::ModelConfig;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::{route, Policy, RoutingInput};
+use oea_serve::moe::ScoreMatrix;
+use oea_serve::residency::{EvictPolicy, ResidencyConfig, ResidencySet, Touch};
+use oea_serve::util::proptest::check;
+use oea_serve::util::rng::Rng;
+
+// ---- eviction invariants (reference-model checked) ---------------------
+
+/// Reference model shared by the LRU/LFU checks: per-expert lifetime
+/// frequency and last-touch tick (exactly the state the real set ranks
+/// victims by), plus the resident set.
+struct RefModel {
+    resident: Vec<bool>,
+    n_resident: usize,
+    capacity: usize,
+    tick: u64,
+    last: HashMap<usize, u64>,
+    freq: HashMap<usize, u64>,
+}
+
+impl RefModel {
+    fn new(n: usize, capacity: usize) -> RefModel {
+        RefModel {
+            resident: vec![false; n],
+            n_resident: 0,
+            capacity,
+            tick: 0,
+            last: HashMap::new(),
+            freq: HashMap::new(),
+        }
+    }
+
+    /// Expected victim: minimum by the policy's key over residents,
+    /// ties by (last touch, id) — mirrors the documented contract.
+    fn victim(&self, evict: EvictPolicy) -> usize {
+        let mut best: Option<usize> = None;
+        for e in 0..self.resident.len() {
+            if !self.resident[e] {
+                continue;
+            }
+            let key = |x: usize| -> (u64, u64, usize) {
+                let l = *self.last.get(&x).unwrap_or(&0);
+                match evict {
+                    EvictPolicy::Lru => (l, 0, x),
+                    EvictPolicy::Lfu => (*self.freq.get(&x).unwrap_or(&0), l, x),
+                    EvictPolicy::ScoreAware => unreachable!("not modelled here"),
+                }
+            };
+            best = Some(match best {
+                None => e,
+                Some(b) if key(e) < key(b) => e,
+                Some(b) => b,
+            });
+        }
+        best.unwrap()
+    }
+
+    fn touch(&mut self, e: usize, evict: EvictPolicy) -> (bool, Option<usize>) {
+        self.tick += 1;
+        self.last.insert(e, self.tick);
+        *self.freq.entry(e).or_insert(0) += 1;
+        if self.resident[e] {
+            return (true, None);
+        }
+        let evicted = if self.n_resident >= self.capacity {
+            let v = self.victim(evict);
+            self.resident[v] = false;
+            self.n_resident -= 1;
+            Some(v)
+        } else {
+            None
+        };
+        self.resident[e] = true;
+        self.n_resident += 1;
+        (false, evicted)
+    }
+}
+
+fn eviction_invariants(evict: EvictPolicy, name: &str) {
+    check(name, 120, |rng| {
+        let n = [4, 8, 16, 32][rng.below(4)];
+        let capacity = 1 + rng.below(n);
+        let mut set = ResidencySet::new(n, capacity, evict);
+        let mut model = RefModel::new(n, capacity);
+        for _ in 0..300 {
+            // skewed trace: low ids are hot, like a real router
+            let e = if rng.bool(0.7) { rng.below(1 + n / 2) } else { rng.below(n) };
+            let (want_hit, want_evicted) = model.touch(e, evict);
+            match set.touch(e) {
+                Touch::Hit => {
+                    assert!(want_hit, "set hit on {e} but model says miss");
+                }
+                Touch::Miss { evicted } => {
+                    assert!(!want_hit, "set miss on {e} but model says hit");
+                    assert_eq!(evicted, want_evicted, "wrong victim for {e}");
+                }
+            }
+            assert!(set.contains(e), "touched expert must be resident");
+            assert!(
+                set.n_resident() <= capacity,
+                "resident {} exceeds capacity {capacity}",
+                set.n_resident()
+            );
+            for x in 0..n {
+                assert_eq!(set.contains(x), model.resident[x], "residency diverged at {x}");
+            }
+        }
+    });
+}
+
+#[test]
+fn lru_matches_reference_model_under_random_traces() {
+    eviction_invariants(EvictPolicy::Lru, "residency-lru");
+}
+
+#[test]
+fn lfu_matches_reference_model_under_random_traces() {
+    eviction_invariants(EvictPolicy::Lfu, "residency-lfu");
+}
+
+// ---- routing-level cache-aware laws ------------------------------------
+
+fn random_scores(rng: &mut Rng, b: usize, n: usize) -> ScoreMatrix {
+    let mut scores = vec![0.0f32; b * n];
+    for i in 0..b {
+        let row = &mut scores[i * n..(i + 1) * n];
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (2.0 * rng.gaussian()).exp() as f32;
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    ScoreMatrix::new(b, n, scores)
+}
+
+#[test]
+fn cache_aware_no_view_equals_oea_on_random_scores() {
+    check("cache-aware-no-view", 120, |rng| {
+        let b = 1 + rng.below(16);
+        let n = [8, 16, 32][rng.below(3)];
+        let s = random_scores(rng, b, n);
+        let live: Vec<bool> = (0..b).map(|_| rng.bool(0.85)).collect();
+        let k0 = 1 + rng.below(4);
+        let k = k0 + rng.below(4);
+        let alpha = rng.below(3) as f64 * 0.5;
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let oea = route(Policy::OeaSimplified { k0, k }, &input);
+        let ca = route(Policy::CacheAware { k0, k, alpha }, &input);
+        assert_eq!(ca.sets, oea.sets);
+        assert_eq!(ca.active, oea.active);
+        assert_eq!(ca.combine, oea.combine);
+    });
+}
+
+#[test]
+fn cache_aware_never_grows_union_and_respects_k() {
+    check("cache-aware-union", 120, |rng| {
+        let b = 1 + rng.below(16);
+        let n = [8, 16, 32][rng.below(3)];
+        let s = random_scores(rng, b, n);
+        let live: Vec<bool> = (0..b).map(|_| rng.bool(0.85)).collect();
+        let resident: Vec<bool> = (0..n).map(|_| rng.bool(0.4)).collect();
+        let k0 = 1 + rng.below(4);
+        let k = k0 + rng.below(4);
+        let input = RoutingInput {
+            scores: &s,
+            live: &live,
+            mask_padding: true,
+            resident: Some(&resident),
+        };
+        let d = route(Policy::CacheAware { k0, k, alpha: 0.75 }, &input);
+        for (i, set) in d.sets.iter().enumerate() {
+            if !live[i] {
+                assert!(set.is_empty(), "padding row routed");
+                continue;
+            }
+            assert!(set.len() <= k, "row {i} exceeds k: {set:?}");
+            for e in set {
+                assert!(d.active.contains(e), "row {i} left the union");
+            }
+        }
+        // combine rows renormalize the RAW scores over each set
+        for i in 0..b {
+            let sum: f32 = d.combine[i * n..(i + 1) * n].iter().sum();
+            if live[i] {
+                assert!((sum - 1.0).abs() < 1e-5, "row {i} combine sums to {sum}");
+            } else {
+                assert_eq!(sum, 0.0);
+            }
+        }
+    });
+}
+
+// ---- dispatch bitwise transparency -------------------------------------
+
+#[test]
+fn grouped_dispatch_bitwise_unchanged_by_residency_bookkeeping() {
+    // the same moe_apply inputs through (a) eager whole-layer packing and
+    // (b) a bounded residency cache (forced eviction churn) must produce
+    // bit-identical outputs under every eviction policy
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let plain = CpuBackend::synthetic_with(
+        cfg.clone(),
+        0,
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, residency: None },
+    );
+    let cached: Vec<CpuBackend> = [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::ScoreAware]
+        .into_iter()
+        .map(|evict| {
+            CpuBackend::synthetic_with(
+                cfg.clone(),
+                0,
+                CpuOptions {
+                    dispatch: DispatchMode::Grouped,
+                    threads: 1,
+                    residency: Some(ResidencyConfig::new(2, evict, 0)),
+                },
+            )
+        })
+        .collect();
+    let (n, d) = (cfg.n_experts, cfg.d_model);
+    check("residency-bitwise", 40, |rng| {
+        let b = 1 + rng.below(6);
+        let hidden: Vec<f32> = (0..b * d).map(|_| rng.gaussian() as f32 * 0.4).collect();
+        let mut combine = vec![0.0f32; b * n];
+        let mut active = vec![false; n];
+        for i in 0..b {
+            // up to 3 experts per row with random weights (renormalized)
+            let mut sum = 0.0f32;
+            for _ in 0..1 + rng.below(3) {
+                let e = rng.below(n);
+                let w = 0.1 + rng.below(9) as f32 * 0.1;
+                combine[i * n + e] = w;
+                active[e] = true;
+                sum += w;
+            }
+            for e in 0..n {
+                combine[i * n + e] /= sum.max(1e-6);
+            }
+        }
+        let ids: Vec<i32> = (0..n).filter(|&e| active[e]).map(|e| e as i32).collect();
+        let l = rng.below(cfg.n_layers);
+        let want = plain.moe_apply(l, &hidden, &combine, &ids).unwrap();
+        for be in &cached {
+            let got = be.moe_apply(l, &hidden, &combine, &ids).unwrap();
+            assert_eq!(want, got, "residency changed dispatch output");
+        }
+    });
+    // the capacity-2 caches really did churn (the property is not vacuous)
+    for be in &cached {
+        let s = Backend::residency_stats(be).unwrap();
+        assert!(s.counters.evictions > 0, "trace never evicted — weak test");
+        assert!(s.counters.hit_rate() < 1.0);
+    }
+}
+
+// ---- end-to-end infinite-capacity equivalence --------------------------
+
+/// Drive `steps` greedy decode steps and return (per-step logits,
+/// per-step (t, load) telemetry).
+fn drive<B: Backend>(
+    runner: &ModelRunner<B>,
+    pol: Policy,
+    bucket: usize,
+    steps: usize,
+) -> (Vec<Vec<f32>>, Vec<(usize, usize)>) {
+    let c = runner.cfg().clone();
+    let mut batch = runner.new_batch(bucket).unwrap();
+    let live = vec![true; bucket];
+    let mut tokens: Vec<i32> = (0..bucket).map(|i| 3 + (i as i32 * 97) % 500).collect();
+    let mut logits_per_step = Vec::new();
+    let mut telemetry = Vec::new();
+    for step in 0..steps {
+        let pos: Vec<i32> = vec![step as i32; bucket];
+        let out = runner
+            .decode_step(&mut batch, &tokens, &pos, &live, pol, true)
+            .unwrap();
+        for ls in &out.layers {
+            telemetry.push((ls.t, ls.load));
+        }
+        // greedy argmax keeps the trace deterministic
+        for (i, t) in tokens.iter_mut().enumerate() {
+            let row = &out.logits[i * c.vocab..(i + 1) * c.vocab];
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            *t = best as i32;
+        }
+        logits_per_step.push(out.logits);
+    }
+    (logits_per_step, telemetry)
+}
+
+#[test]
+fn infinite_capacity_cache_aware_is_decision_identical_to_oea() {
+    // ISSUE acceptance: with C = n_experts the residency view is
+    // withheld (nothing can be evicted, so there are no capacity misses
+    // for routing to avoid) and cache-aware must match base OEA exactly —
+    // same routing decisions, same telemetry, bitwise-same logits —
+    // through prefill-free full-stack decode.
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let oea_backend = CpuBackend::synthetic_with(
+        cfg.clone(),
+        0,
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, residency: None },
+    );
+    let ca_backend = CpuBackend::synthetic_with(
+        cfg.clone(),
+        0,
+        CpuOptions {
+            dispatch: DispatchMode::Grouped,
+            threads: 1,
+            residency: Some(ResidencyConfig::new(cfg.n_experts, EvictPolicy::Lru, 0)),
+        },
+    );
+    let oea = ModelRunner::new(oea_backend);
+    let ca = ModelRunner::new(ca_backend);
+    let (logits_a, tel_a) = drive(&oea, Policy::OeaSimplified { k0: 1, k: 2 }, 4, 16);
+    let (logits_b, tel_b) =
+        drive(&ca, Policy::CacheAware { k0: 1, k: 2, alpha: 1.0 }, 4, 16);
+    assert_eq!(tel_a, tel_b, "per-layer T/load diverged");
+    for (step, (a, b)) in logits_a.iter().zip(logits_b.iter()).enumerate() {
+        assert_eq!(a, b, "logits diverged at step {step}");
+    }
+    // sanity: the cached run really was exercising residency (compulsory
+    // misses were counted), it just couldn't change any decision
+    let s = Backend::residency_stats(&ca.backend).unwrap();
+    assert!(s.counters.misses > 0);
+    assert_eq!(s.counters.evictions, 0, "unbounded capacity must never evict");
+}
+
+#[test]
+fn bounded_cache_aware_beats_vanilla_hit_rate_end_to_end() {
+    // the steering property the bench sweeps: at capacity < n_experts,
+    // cache-aware routing achieves a strictly higher hit rate than
+    // vanilla top-k on the same traffic
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let mk = |policy_residency: ResidencyConfig| {
+        CpuBackend::synthetic_with(
+            cfg.clone(),
+            0,
+            CpuOptions {
+                dispatch: DispatchMode::Grouped,
+                threads: 1,
+                residency: Some(policy_residency),
+            },
+        )
+    };
+    let rc = ResidencyConfig::new(cfg.n_experts / 2, EvictPolicy::Lru, 0);
+    let vanilla = ModelRunner::new(mk(rc));
+    let cache_aware = ModelRunner::new(mk(rc));
+    drive(&vanilla, Policy::Vanilla { k: 2 }, 4, 24);
+    drive(&cache_aware, Policy::CacheAware { k0: 1, k: 2, alpha: 1.0 }, 4, 24);
+    let hr_v = Backend::residency_stats(&vanilla.backend).unwrap().counters.hit_rate();
+    let hr_c = Backend::residency_stats(&cache_aware.backend).unwrap().counters.hit_rate();
+    assert!(
+        hr_c > hr_v,
+        "cache-aware hit rate {hr_c:.3} must beat vanilla {hr_v:.3} at C = N/2"
+    );
+}
