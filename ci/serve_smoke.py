@@ -12,7 +12,11 @@ backend and exercise the serving contract end to end:
      expert_load histogram, and the n_cancelled counter — the server runs
      with --expert-cache, so every cache metrics field must be present and
      well-formed;
-  4. POST /shutdown drains and the process exits 0 (graceful shutdown).
+  4. POST /shutdown drains and the process exits 0 (graceful shutdown);
+  5. a second boot with --ep-ranks 4 + an expert cache and the ep: policy
+     asserts the per-rank metrics surface: the ep block's rank count,
+     per-rank expert_load partition, the rank-imbalance gauge, per-rank
+     residency counters, and the max-rank-T gauge.
 
 Usage: python3 ci/serve_smoke.py <path-to-oea-serve-binary>
 """
@@ -24,12 +28,15 @@ import sys
 import threading
 import time
 
-PORT = 18077
+PORT = 18077  # phase 1-4; phase 5 uses PORT+1 (no SO_REUSEADDR on the listener)
 HOST = "127.0.0.1"
 
 
+ACTIVE_PORT = PORT
+
+
 def conn():
-    return http.client.HTTPConnection(HOST, PORT, timeout=120)
+    return http.client.HTTPConnection(HOST, ACTIVE_PORT, timeout=120)
 
 
 def post_json(path, payload):
@@ -64,6 +71,72 @@ def main():
     except BaseException:
         proc.kill()
         raise
+
+    # -- phase 5: expert-parallel metrics surface ------------------------
+    # fresh port: the drained first server can leave TIME_WAIT entries on
+    # PORT and the listener does not set SO_REUSEADDR
+    global ACTIVE_PORT
+    ACTIVE_PORT = PORT + 1
+    proc = subprocess.Popen([
+        binary, "serve", "--config", "smoke",
+        "--policy", "ep:k0=2,ranks=4,topup=1,alpha=0.5",
+        "--ep-ranks", "4",
+        "--expert-cache", "8", "--evict", "lru",
+        "--max-running", "2", "--max-queue", "8", "--http-workers", "8",
+        "--port", str(ACTIVE_PORT),
+    ])
+    try:
+        run_ep_checks(proc)
+    except BaseException:
+        proc.kill()
+        raise
+
+
+def run_ep_checks(proc):
+    wait_healthy(proc)
+    for i in range(2):
+        status, _, body = post_json("/generate", {
+            "prompt": f"expert parallel decode number {i}", "max_tokens": 16,
+        })
+        check(status == 200 and json.loads(body)["n_tokens"] > 0,
+              f"ep: generation {i} succeeded")
+
+    c = conn()
+    c.request("GET", "/metrics")
+    r = c.getresponse()
+    m = json.loads(r.read().decode())
+    c.close()
+    check(r.status == 200, "ep: metrics served")
+    check(m["policy"] == "ep(k0=2,k=4,ranks=4,topup=1,alpha=0.5)",
+          f"ep: metrics report the ep policy ({m.get('policy')})")
+    ep = m["ep"]
+    check(ep["ranks"] == 4, f"ep.ranks reports the sharding ({ep['ranks']})")
+    check(ep["avg_max_rank_t"] > 0,
+          f"ep.avg_max_rank_t present ({ep['avg_max_rank_t']:.2f})")
+    load = m["expert_load"]
+    check(len(ep["rank_load"]) == 4, "ep.rank_load has one entry per rank")
+    check(abs(sum(ep["rank_load"]) - load["total"]) < 0.5,
+          "ep.rank_load partitions expert_load.total")
+    check(1.0 <= ep["imbalance"] <= 4.0,
+          f"ep.imbalance gauge in [1, ranks] ({ep['imbalance']:.2f})")
+    rres = ep["rank_residency"]
+    check(len(rres) == 4, "ep.rank_residency has one entry per rank")
+    total_misses = 0
+    for i, rr in enumerate(rres):
+        check(0.0 <= rr["hit_rate"] <= 1.0 and rr["misses"] >= 0
+              and rr["bytes_paged"] >= 0 and rr["evictions"] >= 0,
+              f"ep.rank_residency[{i}] well-formed (hit_rate={rr['hit_rate']:.3f})")
+        total_misses += rr["misses"]
+    res = m["residency"]
+    check(abs(total_misses - res["misses"]) < 0.5,
+          "per-rank residency misses sum to the aggregate")
+
+    status, _, body = post_json("/shutdown", {})
+    check(status == 200 and json.loads(body)["status"] == "draining",
+          "ep: shutdown acknowledged")
+    rc = proc.wait(timeout=120)
+    check(rc == 0, f"ep: server exited cleanly (rc={rc})")
+    print("serve-smoke: all EP checks passed")
 
 
 def wait_healthy(proc, deadline_s=120):

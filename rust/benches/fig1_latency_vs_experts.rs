@@ -44,7 +44,7 @@ fn run_sweep(
     let runner = ModelRunner::new(CpuBackend::synthetic_with(
         c.clone(),
         0,
-        CpuOptions { dispatch: mode, threads: 0, residency: None },
+        CpuOptions { dispatch: mode, threads: 0, residency: None, ep_ranks: 1 },
     ));
     // Vary T at FIXED batch size via k0 and batch composition (the paper
     // gets the variation naturally from serving GPQA at B<=16). B must be
@@ -96,11 +96,14 @@ fn run_sweep(
                         t: ls.t as u16,
                         load: ls.load as u32,
                         misses: ls.misses as u32,
+                        ranks: ls.rank_t.len() as u16,
+                        max_rank_t: ls.max_rank_t() as u16,
+                        rank_load: ls.rank_load.iter().map(|&x| x as u32).collect(),
                         measured_us: ls.moe_us,
                         simulated_us: cost.layer_us(ls.t, ls.load, ls.misses),
                     };
+                    metrics_bucket.record(StepRecord { t: ls.t_bucket as u16, ..rec.clone() });
                     metrics.record(rec);
-                    metrics_bucket.record(StepRecord { t: ls.t_bucket as u16, ..rec });
                 }
             }
         }

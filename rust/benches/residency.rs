@@ -77,7 +77,12 @@ fn run_policy(
     let backend = CpuBackend::synthetic_with(
         c.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 0, residency: Some(rc) },
+        CpuOptions {
+            dispatch: DispatchMode::Grouped,
+            threads: 0,
+            residency: Some(rc),
+            ep_ranks: 1,
+        },
     );
     let runner = ModelRunner::new(backend);
     let bucket = c.bucket_for(B).unwrap();
@@ -105,7 +110,7 @@ fn run_policy(
     // steady state: drop compulsory cold misses (and the warmup's routed
     // load) so the counters describe cross-step behaviour only
     runner.backend.reset_residency_counters();
-    let load0 = runner.backend.expert_loads().unwrap_or_default();
+    let load0 = runner.backend.expert_loads();
     let mut trace = Vec::new();
     let mut miss_us = Vec::new();
     let mut sim_sum = 0.0;
@@ -124,7 +129,7 @@ fn run_policy(
     }
     let secs = t0.elapsed().as_secs_f64();
     let stats = runner.backend.residency_stats().expect("residency configured");
-    let loads = runner.backend.expert_loads().unwrap_or_default();
+    let loads = runner.backend.expert_loads();
     let diff: Vec<u64> = loads
         .iter()
         .zip(load0.iter().chain(std::iter::repeat(&0)))

@@ -452,11 +452,18 @@ pub fn moe_ffn_group_rows(
 /// `T · B`. Groups must be processed in ascending-expert order for the
 /// per-token sums to match the gather oracle bitwise; `ExpertGroups`
 /// guarantees that order and disjoint `g0..g1` ranges preserve it.
+///
+/// `e_base` is the first expert id of the panel shard: the packed mats
+/// may hold a contiguous sub-range of the expert axis (an EP rank's
+/// shard), indexed by `expert - e_base`. A whole-layer pack passes 0.
+/// Per-expert panel rows are byte-identical however the shard was cut,
+/// so sharded execution is bitwise-equal to whole-layer execution.
 pub fn moe_ffn_groups(
     x: &[f32],
     wg: &PackedMat,
     wu: &PackedMat,
     wd: &PackedMat,
+    e_base: usize,
     groups: &ExpertGroups,
     g0: usize,
     g1: usize,
@@ -474,7 +481,8 @@ pub fn moe_ffn_groups(
     debug_assert_eq!(acc.len() % d, 0);
     for gi in g0..g1 {
         let grp = groups.group(gi);
-        let e = grp.expert;
+        debug_assert!(grp.expert >= e_base, "group expert outside the panel shard");
+        let e = grp.expert - e_base;
         moe_ffn_group_rows(
             x,
             wg.expert(e),
@@ -692,15 +700,15 @@ mod tests {
         let groups = ExpertGroups::from_combine(&comb, &ids, b, n);
         let mut acc = vec![0.0f32; b * d];
         let mut arena = Arena::new();
-        moe_ffn_groups(&x, &pg, &pu, &pd, &groups, 0, groups.len(), &mut acc, &mut arena);
+        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, 0, groups.len(), &mut acc, &mut arena);
         for (i, (g, w)) in acc.iter().zip(want.iter()).enumerate() {
             assert!((g - w).abs() < 1e-5, "[{i}] grouped {g} vs gather {w}");
         }
         // split ranges (the parallel chunking) must also agree
         let mut acc2 = vec![0.0f32; b * d];
         let mid = groups.len() / 2;
-        moe_ffn_groups(&x, &pg, &pu, &pd, &groups, 0, mid, &mut acc2, &mut arena);
-        moe_ffn_groups(&x, &pg, &pu, &pd, &groups, mid, groups.len(), &mut acc2, &mut arena);
+        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, 0, mid, &mut acc2, &mut arena);
+        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, mid, groups.len(), &mut acc2, &mut arena);
         assert_eq!(acc, acc2);
     }
 
@@ -721,7 +729,7 @@ mod tests {
         assert_eq!(groups.routed_tokens(), 1);
         let mut acc = vec![0.0f32; b * d];
         let mut arena = Arena::new();
-        moe_ffn_groups(&x, &pg, &pu, &pd, &groups, 0, groups.len(), &mut acc, &mut arena);
+        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, 0, groups.len(), &mut acc, &mut arena);
         assert!(acc[..d].iter().all(|&v| v != 0.0));
         assert!(acc[d..].iter().all(|&v| v == 0.0), "unrouted rows touched");
     }
@@ -754,7 +762,7 @@ mod tests {
         let pd = PackedMat::pack(&wd, n, h, d);
         let mut acc = vec![0.0f32; b * d];
         let mut arena = Arena::new();
-        moe_ffn_groups(&x, &pg, &pu, &pd, &groups, 0, groups.len(), &mut acc, &mut arena);
+        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, 0, groups.len(), &mut acc, &mut arena);
         for (g, w) in acc.iter().zip(want.iter()) {
             assert!((g - w).abs() < 1e-5);
         }

@@ -38,6 +38,7 @@ use std::sync::{Arc, Mutex};
 use crate::backend::{Backend, LayerPre, Prefilled};
 use crate::config::ModelConfig;
 use crate::moe::dispatch::{ExpertGroups, RoutedStep};
+use crate::moe::ep::{rank_of, rank_span};
 use crate::moe::policy::{self, Policy, RoutingInput};
 use crate::moe::ScoreMatrix;
 use crate::residency::{
@@ -72,12 +73,27 @@ pub struct CpuOptions {
     /// cache (capacity `C` experts, pluggable eviction, optional
     /// lookahead prefetch). `None` = every expert pre-packed at
     /// construction, the pre-residency behaviour. Grouped dispatch only.
+    /// Under `ep_ranks > 1` the capacity splits evenly across ranks
+    /// (`ceil(C / R)` per rank) and each rank evicts/prefetches within
+    /// its own shard.
     pub residency: Option<ResidencyConfig>,
+    /// Expert-parallel rank shards: packed expert panels split into
+    /// `ep_ranks` contiguous blocks ([`crate::moe::ep::rank_of`]),
+    /// grouped dispatch runs per-rank work lists (chunks never straddle
+    /// a rank), and residency becomes per-rank. `1` = the single-rank
+    /// path, bitwise-identical to the pre-EP backend. Grouped dispatch
+    /// only.
+    pub ep_ranks: usize,
 }
 
 impl Default for CpuOptions {
     fn default() -> Self {
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 0, residency: None }
+        CpuOptions {
+            dispatch: DispatchMode::Grouped,
+            threads: 0,
+            residency: None,
+            ep_ranks: 1,
+        }
     }
 }
 
@@ -129,8 +145,16 @@ pub struct LayerWeights {
     pub wd: Vec<f32>,
 }
 
-/// Pre-packed expert panels of one layer (grouped mode only).
-struct PackedLayer {
+/// One EP rank's contiguous expert-panel shard of one layer (grouped
+/// mode without residency): experts `[e0, e0 + wg.experts)` packed
+/// together. `ep_ranks = 1` is a single shard covering the whole layer —
+/// the exact pre-EP pack. Per-expert panel rows are byte-identical
+/// however the shard was cut, so sharded execution is bitwise-equal to
+/// whole-layer execution (same guarantee `ExpertPanels::pack` documents
+/// for residency paging).
+struct PackedShard {
+    /// first expert id of the shard
+    e0: usize,
     wg: PackedMat,
     wu: PackedMat,
     wd: PackedMat,
@@ -164,37 +188,61 @@ impl ExpertPanels {
     }
 }
 
-/// One layer's residency state: the bounded set, the lookahead
-/// prefetcher, the load-event counters, and the lazily-paged panels
-/// (`Some` iff resident, so cold-start memory is only what was touched).
-struct LayerResidency {
+/// One (layer, rank) residency state: the rank's bounded set over its
+/// expert shard (shard-local ids), its own lookahead prefetcher and
+/// load-event counters, and the lazily-paged panels (`Some` iff resident,
+/// so cold-start memory is only what was touched). Per-rank ownership is
+/// what balances eviction and page-in traffic across ranks instead of
+/// pooling it globally. At `ep_ranks = 1` a layer holds exactly one of
+/// these covering every expert — the pre-EP behaviour, state for state.
+struct RankResidency {
+    /// first expert id of this rank's shard
+    e0: usize,
     set: ResidencySet,
     prefetch: Prefetcher,
     counters: ResidencyCounters,
+    /// shard-local: `panels[e - e0]`
     panels: Vec<Option<Arc<ExpertPanels>>>,
 }
 
-impl LayerResidency {
-    fn new(n_experts: usize, cfg: &ResidencyConfig) -> LayerResidency {
-        LayerResidency {
-            set: ResidencySet::new(n_experts, cfg.capacity, cfg.evict),
-            prefetch: Prefetcher::new(cfg.prefetch),
-            counters: ResidencyCounters::default(),
-            panels: (0..n_experts).map(|_| None).collect(),
-        }
-    }
-
-    /// Page expert `e`'s panels in (packing them if absent) and charge
-    /// the ledger.
-    fn page_in(&mut self, lw: &LayerWeights, e: usize, d: usize, h: usize) {
-        let p = Arc::new(ExpertPanels::pack(lw, e, d, h));
+impl RankResidency {
+    /// Page shard-local expert `le`'s panels in (packing them if absent)
+    /// and charge this rank's ledger.
+    fn page_in(&mut self, lw: &LayerWeights, le: usize, d: usize, h: usize) {
+        let p = Arc::new(ExpertPanels::pack(lw, self.e0 + le, d, h));
         self.counters.bytes_paged += p.bytes() as u64;
-        self.panels[e] = Some(p);
+        self.panels[le] = Some(p);
     }
 
-    fn drop_panel(&mut self, e: usize) {
+    fn drop_panel(&mut self, le: usize) {
         self.counters.evictions += 1;
-        self.panels[e] = None;
+        self.panels[le] = None;
+    }
+}
+
+/// One layer's residency: one [`RankResidency`] per EP rank.
+struct LayerResidency {
+    ranks: Vec<RankResidency>,
+}
+
+impl LayerResidency {
+    fn new(n_experts: usize, cfg: &ResidencyConfig, ep_ranks: usize) -> LayerResidency {
+        // capacity splits evenly across ranks; at ep_ranks = 1 this is
+        // exactly the configured capacity
+        let cap_r = cfg.capacity.div_ceil(ep_ranks);
+        let ranks = (0..ep_ranks)
+            .map(|r| {
+                let (e0, e1) = rank_span(r, n_experts, ep_ranks);
+                RankResidency {
+                    e0,
+                    set: ResidencySet::new(e1 - e0, cap_r, cfg.evict),
+                    prefetch: Prefetcher::new(cfg.prefetch),
+                    counters: ResidencyCounters::default(),
+                    panels: (e0..e1).map(|_| None).collect(),
+                }
+            })
+            .collect();
+        LayerResidency { ranks }
     }
 }
 
@@ -221,12 +269,16 @@ pub struct CpuBackend {
     /// `[D]`
     pub final_norm: Vec<f32>,
     pub layers: Vec<LayerWeights>,
-    /// pre-transposed/padded expert panels, one per layer (grouped mode
-    /// without residency; empty when residency pages panels lazily)
-    packed: Vec<PackedLayer>,
-    /// per-layer expert residency (None = all panels pre-packed above)
+    /// pre-transposed/padded expert panels, per layer × per EP rank
+    /// shard (grouped mode without residency; empty when residency pages
+    /// panels lazily). One shard per layer at `ep_ranks = 1`.
+    packed: Vec<Vec<PackedShard>>,
+    /// per-(layer, rank) expert residency (None = all panels pre-packed
+    /// above)
     residency: Option<Mutex<Vec<LayerResidency>>>,
     res_cfg: Option<ResidencyConfig>,
+    /// EP rank shards the MoE stage executes over (1 = single-rank)
+    ep_ranks: usize,
     mode: DispatchMode,
     /// worker pool for expert groups / attention rows (None = inline)
     pool: Option<ThreadPool>,
@@ -247,22 +299,35 @@ fn scaled(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.gaussian() as f32 * scale).collect()
 }
 
-/// Contiguous group ranges balanced by routed-row count, preserving the
-/// ascending-expert order (so chunked execution sums in the same order
-/// as serial).
-fn chunk_groups(groups: &ExpertGroups, workers: usize) -> Vec<(usize, usize)> {
-    let ngroups = groups.len();
-    let nchunks = workers.min(ngroups).max(1);
-    let target = groups.routed_tokens().div_ceil(nchunks).max(1);
-    let mut out = Vec::with_capacity(nchunks);
-    let mut start = 0;
-    let mut acc = 0;
-    for gi in 0..ngroups {
-        acc += groups.group(gi).rows.len();
-        if acc >= target || gi == ngroups - 1 {
-            out.push((start, gi + 1));
-            start = gi + 1;
-            acc = 0;
+/// Contiguous `(rank, g0, g1)` group ranges balanced by routed-row count
+/// *within each rank's work list* — chunks never straddle a rank
+/// boundary, so every chunk executes against exactly one panel shard and
+/// per-rank work stays attributable. Ascending-expert order is preserved
+/// (ranks are ascending id blocks), so chunked execution sums in the
+/// same order as serial. At `ranks = 1` the boundaries are exactly the
+/// pre-EP whole-list chunking.
+fn chunk_groups(
+    groups: &ExpertGroups,
+    workers: usize,
+    ranges: &[(usize, usize)],
+) -> Vec<(usize, usize, usize)> {
+    let mut out = Vec::with_capacity(workers.max(ranges.len()));
+    for (r, &(r0, r1)) in ranges.iter().enumerate() {
+        if r1 == r0 {
+            continue;
+        }
+        let rows: usize = (r0..r1).map(|gi| groups.group(gi).rows.len()).sum();
+        let nchunks = workers.min(r1 - r0).max(1);
+        let target = rows.div_ceil(nchunks).max(1);
+        let mut start = r0;
+        let mut acc = 0;
+        for gi in r0..r1 {
+            acc += groups.group(gi).rows.len();
+            if acc >= target || gi == r1 - 1 {
+                out.push((r, start, gi + 1));
+                start = gi + 1;
+                acc = 0;
+            }
         }
     }
     out
@@ -359,22 +424,46 @@ impl CpuBackend {
             // nothing
             panic!("expert residency requires grouped dispatch (OEA_DISPATCH=grouped)");
         }
+        let ep_ranks = opts.ep_ranks;
+        if ep_ranks == 0 || ep_ranks > n {
+            panic!("ep_ranks={ep_ranks} must be in 1..={n} (n_experts)");
+        }
+        if ep_ranks > 1 && opts.dispatch == DispatchMode::Gather {
+            // same rationale: the gather oracle runs whole-batch GEMMs out
+            // of the raw weights — there is no per-rank work list to shard
+            panic!("expert-parallel sharding requires grouped dispatch (OEA_DISPATCH=grouped)");
+        }
         let packed = match (opts.dispatch, opts.residency) {
             // residency: panels page in lazily on first touch, so nothing
             // is packed up front (the cold-start memory win)
             (DispatchMode::Grouped, Some(_)) => Vec::new(),
+            // one contiguous panel shard per EP rank (a single whole-layer
+            // shard at ep_ranks = 1 — the exact pre-EP pack)
             (DispatchMode::Grouped, None) => layers
                 .iter()
-                .map(|lw| PackedLayer {
-                    wg: PackedMat::pack(&lw.wg, n, d, h),
-                    wu: PackedMat::pack(&lw.wu, n, d, h),
-                    wd: PackedMat::pack(&lw.wd, n, h, d),
+                .map(|lw| {
+                    (0..ep_ranks)
+                        .map(|r| {
+                            let (e0, e1) = rank_span(r, n, ep_ranks);
+                            let ne = e1 - e0;
+                            PackedShard {
+                                e0,
+                                wg: PackedMat::pack(&lw.wg[e0 * d * h..e1 * d * h], ne, d, h),
+                                wu: PackedMat::pack(&lw.wu[e0 * d * h..e1 * d * h], ne, d, h),
+                                wd: PackedMat::pack(&lw.wd[e0 * h * d..e1 * h * d], ne, h, d),
+                            }
+                        })
+                        .collect()
                 })
                 .collect(),
             (DispatchMode::Gather, _) => Vec::new(),
         };
         let residency = opts.residency.map(|rc| {
-            Mutex::new((0..cfg.n_layers).map(|_| LayerResidency::new(n, &rc)).collect())
+            Mutex::new(
+                (0..cfg.n_layers)
+                    .map(|_| LayerResidency::new(n, &rc, ep_ranks))
+                    .collect(),
+            )
         });
 
         let workers = match opts.threads {
@@ -393,6 +482,7 @@ impl CpuBackend {
             packed,
             residency,
             res_cfg: opts.residency,
+            ep_ranks,
             mode: opts.dispatch,
             pool,
             scratch: ScratchPool::new(),
@@ -420,7 +510,9 @@ impl CpuBackend {
     pub fn reset_residency_counters(&self) {
         if let Some(res) = &self.residency {
             for lr in res.lock().unwrap().iter_mut() {
-                lr.counters = ResidencyCounters::default();
+                for rr in lr.ranks.iter_mut() {
+                    rr.counters = ResidencyCounters::default();
+                }
             }
         }
     }
@@ -498,14 +590,25 @@ impl CpuBackend {
                 )));
             }
         }
+        if groups.ranks > 1 && groups.ranks != self.ep_ranks {
+            // a routing decision sharded for R ranks executing on a
+            // backend sharded differently would silently mis-attribute
+            // every per-rank number — fail loudly instead
+            return Err(Error::Engine(format!(
+                "routing decision sharded for {} ranks on a backend with ep_ranks={}",
+                groups.ranks, self.ep_ranks
+            )));
+        }
         let lw = &self.layers[l];
         let h = c.d_expert;
         // Residency bookkeeping first, under one lock: touch every
         // group's expert (ascending order — the access trace the eviction
-        // policies see), page misses in by lazily packing their panels
-        // (the simulated page-in cost is that real packing work), and
-        // collect panel handles so a later group's eviction cannot pull
-        // weights out from under this step's execution.
+        // policies see) in its OWN RANK's residency set, page misses in by
+        // lazily packing their panels (the simulated page-in cost is that
+        // real packing work), and collect panel handles so a later group's
+        // eviction cannot pull weights out from under this step's
+        // execution. Per-rank sets partition the expert axis, so at
+        // ep_ranks = 1 this is exactly the old single-set trace.
         let panels: Option<Vec<Arc<ExpertPanels>>> = self.residency.as_ref().map(|res| {
             let mut res = res.lock().unwrap();
             let lr = &mut res[l];
@@ -513,68 +616,80 @@ impl CpuBackend {
                 .iter()
                 .map(|grp| {
                     let e = grp.expert;
-                    match lr.set.touch(e) {
-                        Touch::Hit => lr.counters.hits += 1,
+                    let rr = &mut lr.ranks[rank_of(e, n, self.ep_ranks)];
+                    let le = e - rr.e0;
+                    match rr.set.touch(le) {
+                        Touch::Hit => rr.counters.hits += 1,
                         Touch::Miss { evicted } => {
-                            lr.counters.misses += 1;
+                            rr.counters.misses += 1;
                             if let Some(v) = evicted {
-                                lr.drop_panel(v);
+                                rr.drop_panel(v);
                             }
-                            lr.page_in(lw, e, d, h);
+                            rr.page_in(lw, le, d, h);
                         }
                     }
-                    Arc::clone(lr.panels[e].as_ref().expect("resident expert has panels"))
+                    Arc::clone(rr.panels[le].as_ref().expect("resident expert has panels"))
                 })
                 .collect()
         });
-        let pk = if panels.is_none() { Some(&self.packed[l]) } else { None };
+        let shards = if panels.is_none() { Some(&self.packed[l]) } else { None };
         let mut hn = self.scratch.take(b * d);
         kernels::rmsnorm_into(hidden, &lw.n2, d, c.rms_eps, &mut hn);
         let mut acc = self.scratch.take(b * d);
         let ngroups = groups.len();
         let workers = self.pool.as_ref().map(|p| p.size()).unwrap_or(1);
+        // per-rank work lists: each chunk of groups belongs to exactly one
+        // rank (and therefore one panel shard)
+        let ranges = groups.rank_ranges(self.ep_ranks);
         // One executor for both panel sources: residency panels hold the
-        // same packed bytes as the whole-layer pack, and both run through
+        // same packed bytes as the shard pack, and both run through
         // kernels::moe_ffn_group_rows, so outputs are bitwise-identical
         // with or without residency bookkeeping.
         let hn_ref = &hn;
-        let run_range = |g0: usize, g1: usize, out: &mut [f32], arena: &mut Arena| match (
-            &panels, pk,
-        ) {
-            (Some(ps), _) => {
-                for gi in g0..g1 {
-                    let grp = groups.group(gi);
-                    let p = &ps[gi];
-                    kernels::moe_ffn_group_rows(
-                        hn_ref,
-                        p.wg.expert(0),
-                        p.wu.expert(0),
-                        p.wd.expert(0),
-                        d,
-                        h,
-                        p.wg.n_pad,
-                        p.wd.n_pad,
-                        grp.rows,
-                        grp.weights,
-                        out,
-                        arena,
-                    );
+        let run_range = |rank: usize, g0: usize, g1: usize, out: &mut [f32], arena: &mut Arena| {
+            match (&panels, shards) {
+                (Some(ps), _) => {
+                    for gi in g0..g1 {
+                        let grp = groups.group(gi);
+                        let p = &ps[gi];
+                        kernels::moe_ffn_group_rows(
+                            hn_ref,
+                            p.wg.expert(0),
+                            p.wu.expert(0),
+                            p.wd.expert(0),
+                            d,
+                            h,
+                            p.wg.n_pad,
+                            p.wd.n_pad,
+                            grp.rows,
+                            grp.weights,
+                            out,
+                            arena,
+                        );
+                    }
                 }
+                (None, Some(shards)) => {
+                    let pk = &shards[rank];
+                    kernels::moe_ffn_groups(
+                        hn_ref, &pk.wg, &pk.wu, &pk.wd, pk.e0, groups, g0, g1, out, arena,
+                    )
+                }
+                (None, None) => unreachable!("no packed panels and no residency"),
             }
-            (None, Some(pk)) => {
-                kernels::moe_ffn_groups(hn_ref, &pk.wg, &pk.wu, &pk.wd, groups, g0, g1, out, arena)
-            }
-            (None, None) => unreachable!("no packed panels and no residency"),
         };
         if workers <= 1 || ngroups <= 1 {
-            with_thread_arena(|arena| run_range(0, ngroups, &mut acc, arena));
+            with_thread_arena(|arena| {
+                for (rank, &(g0, g1)) in ranges.iter().enumerate() {
+                    run_range(rank, g0, g1, &mut acc, arena);
+                }
+            });
         } else {
-            let chunks = chunk_groups(groups, workers);
+            let chunks = chunk_groups(groups, workers, &ranges);
             let scratch = &self.scratch;
             let pool = self.pool.as_ref().unwrap();
-            let partials = pool.scoped_map(chunks, |(g0, g1): (usize, usize)| {
+            let partials = pool.scoped_map(chunks, |(rank, g0, g1): (usize, usize, usize)| {
                 let mut part = scratch.take(b * d);
-                with_thread_arena(|arena| run_range(g0, g1, &mut part, arena));
+                with_thread_arena(|arena| run_range(rank, g0, g1, &mut part, arena));
                 part
             });
             // reduce in chunk order == ascending-expert order (see
@@ -661,20 +776,23 @@ impl Backend for CpuBackend {
             let (d, h) = (c.d_model, c.d_expert);
             let mut res = res.lock().unwrap();
             let lr = &mut res[l];
-            let pending = lr.prefetch.take_pending();
-            // wave protection: this step's predictions must not evict
-            // each other (admits are recency-silent, so wave-mates would
-            // otherwise be each other's "stalest" victims)
-            let mut wave: Vec<usize> = Vec::with_capacity(pending.len());
-            for e in pending {
-                let e = e as usize;
-                if let Some(evicted) = lr.set.admit_protecting(e, &wave) {
-                    if let Some(v) = evicted {
-                        lr.drop_panel(v);
+            // each rank applies its own prediction wave within its shard
+            for rr in lr.ranks.iter_mut() {
+                let pending = rr.prefetch.take_pending();
+                // wave protection: this step's predictions must not evict
+                // each other (admits are recency-silent, so wave-mates
+                // would otherwise be each other's "stalest" victims)
+                let mut wave: Vec<usize> = Vec::with_capacity(pending.len());
+                for le in pending {
+                    let le = le as usize;
+                    if let Some(evicted) = rr.set.admit_protecting(le, &wave) {
+                        if let Some(v) = evicted {
+                            rr.drop_panel(v);
+                        }
+                        rr.counters.prefetches += 1;
+                        rr.page_in(lw, le, d, h);
+                        wave.push(le);
                     }
-                    lr.counters.prefetches += 1;
-                    lr.page_in(lw, e, d, h);
-                    wave.push(e);
                 }
             }
         }
@@ -948,6 +1066,10 @@ impl Backend for CpuBackend {
         Ok(out)
     }
 
+    fn ep_ranks(&self) -> usize {
+        self.ep_ranks
+    }
+
     fn expert_loads(&self) -> Option<Vec<u64>> {
         Some(self.expert_load.lock().unwrap().clone())
     }
@@ -956,18 +1078,36 @@ impl Backend for CpuBackend {
         let res = self.residency.as_ref()?;
         let res = res.lock().unwrap();
         let lr = &res[l];
-        if lr.set.unbounded() {
-            // unbounded: no eviction, so no capacity misses for routing to
-            // avoid — the view is withheld and cache-aware == base OEA
+        if lr.ranks.iter().all(|rr| rr.set.unbounded()) {
+            // unbounded everywhere: no eviction, so no capacity misses for
+            // routing to avoid — the view is withheld and cache-aware ==
+            // base OEA (resp. cache-aware EP == plain EP)
             None
         } else {
-            Some(lr.set.resident_mask().to_vec())
+            // concatenation of the per-rank resident masks: the shards
+            // partition the expert axis, so each expert's flag comes from
+            // its own rank's set (the rank-local boost)
+            let mut mask = vec![false; self.cfg.n_experts];
+            for rr in &lr.ranks {
+                mask[rr.e0..rr.e0 + rr.panels.len()].copy_from_slice(rr.set.resident_mask());
+            }
+            Some(mask)
         }
     }
 
     fn residency_counters(&self, l: usize) -> Option<ResidencyCounters> {
         let res = self.residency.as_ref()?;
-        Some(res.lock().unwrap()[l].counters)
+        let res = res.lock().unwrap();
+        let mut counters = ResidencyCounters::default();
+        for rr in &res[l].ranks {
+            counters.add(&rr.counters);
+        }
+        Some(counters)
+    }
+
+    fn residency_rank_counters(&self, l: usize) -> Option<Vec<ResidencyCounters>> {
+        let res = self.residency.as_ref()?;
+        Some(res.lock().unwrap()[l].ranks.iter().map(|rr| rr.counters).collect())
     }
 
     fn residency_stats(&self) -> Option<ResidencyStats> {
@@ -977,11 +1117,28 @@ impl Backend for CpuBackend {
         let mut counters = ResidencyCounters::default();
         let mut resident = 0;
         for lr in res.iter() {
-            counters.add(&lr.counters);
-            resident += lr.set.n_resident();
+            for rr in &lr.ranks {
+                counters.add(&rr.counters);
+                resident += rr.set.n_resident();
+            }
         }
+        // effective per-layer capacity: the rank split rounds up
+        // (`ceil(C/R)` per rank, bounded by each shard's size), so the
+        // enforceable bound can exceed the configured C when R does not
+        // divide it — report what the sets actually hold, keeping
+        // `resident <= capacity * layers` true. Reduces to the old
+        // `C.clamp(1, n_experts)` at one rank.
+        let capacity = res
+            .first()
+            .map(|lr| {
+                lr.ranks
+                    .iter()
+                    .map(|rr| rr.set.capacity().min(rr.panels.len()))
+                    .sum()
+            })
+            .unwrap_or_else(|| rc.capacity.clamp(1, self.cfg.n_experts));
         Some(ResidencyStats {
-            capacity: rc.capacity.clamp(1, self.cfg.n_experts),
+            capacity,
             n_experts: self.cfg.n_experts,
             evict: rc.evict,
             prefetch: rc.prefetch,
@@ -1001,8 +1158,14 @@ impl Backend for CpuBackend {
             debug_assert_eq!(agg.len(), self.cfg.n_experts);
             let mut res = res.lock().unwrap();
             let lr = &mut res[l];
-            lr.set.note_scores(agg);
-            lr.prefetch.observe(agg);
+            // each rank sees its own shard's slice of the router mass, so
+            // score-aware eviction and the prefetcher rank experts
+            // rank-locally
+            for rr in lr.ranks.iter_mut() {
+                let slice = &agg[rr.e0..rr.e0 + rr.panels.len()];
+                rr.set.note_scores(slice);
+                rr.prefetch.observe(slice);
+            }
         }
     }
 }
@@ -1019,7 +1182,7 @@ mod tests {
         CpuBackend::synthetic_with(
             ModelConfig::preset("tiny").unwrap(),
             0,
-            CpuOptions { dispatch, threads, residency: None },
+            CpuOptions { dispatch, threads, residency: None, ep_ranks: 1 },
         )
     }
 
@@ -1126,6 +1289,7 @@ mod tests {
                 dispatch: DispatchMode::Grouped,
                 threads: 1,
                 residency: Some(ResidencyConfig::new(capacity, evict, 0)),
+                ep_ranks: 1,
             },
         )
     }
@@ -1228,6 +1392,7 @@ mod tests {
                 dispatch: DispatchMode::Grouped,
                 threads: 1,
                 residency: Some(ResidencyConfig::new(4, EvictPolicy::Lru, 2)),
+                ep_ranks: 1,
             },
         );
         let mut cache = be.new_cache(2).unwrap();
@@ -1264,6 +1429,145 @@ mod tests {
                 dispatch: DispatchMode::Gather,
                 threads: 1,
                 residency: Some(ResidencyConfig::new(4, EvictPolicy::Lru, 0)),
+                ep_ranks: 1,
+            },
+        );
+    }
+
+    fn backend_ep(ep_ranks: usize, threads: usize) -> CpuBackend {
+        CpuBackend::synthetic_with(
+            ModelConfig::preset("tiny").unwrap(),
+            0,
+            CpuOptions { dispatch: DispatchMode::Grouped, threads, residency: None, ep_ranks },
+        )
+    }
+
+    #[test]
+    fn rank_sharded_dispatch_is_bitwise_identical() {
+        // each shard's packed rows are byte-identical to the whole-layer
+        // pack and groups execute in the same ascending order, so at a
+        // fixed worker count every sharding produces bit-identical output
+        let base = backend_ep(1, 1);
+        let c = base.config().clone();
+        let (b, n) = (4usize, c.n_experts);
+        let hidden: Vec<f32> =
+            (0..b * c.d_model).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let mut combine = vec![0.0f32; b * n];
+        combine[0] = 0.7;
+        combine[1] = 0.3;
+        combine[n + 1] = 0.5;
+        combine[n + 4] = 0.5;
+        combine[2 * n + 4] = 1.0;
+        combine[3 * n + 7] = 1.0;
+        let ids = [0i32, 1, 4, 7];
+        for l in 0..c.n_layers {
+            let want = base.moe_apply(l, &hidden, &combine, &ids).unwrap();
+            for ranks in [2usize, 4, 8] {
+                let be = backend_ep(ranks, 1);
+                let got = be.moe_apply(l, &hidden, &combine, &ids).unwrap();
+                assert_eq!(want, got, "layer {l}: ep_ranks={ranks} changed the math");
+            }
+        }
+    }
+
+    #[test]
+    fn per_rank_residency_counters_partition_and_balance() {
+        use crate::residency::EvictPolicy;
+        // ep_ranks=4 over tiny's 8 experts: 2-expert shards, capacity
+        // 4 splits to 1 resident per rank
+        let be = CpuBackend::synthetic_with(
+            ModelConfig::preset("tiny").unwrap(),
+            0,
+            CpuOptions {
+                dispatch: DispatchMode::Grouped,
+                threads: 1,
+                residency: Some(ResidencyConfig::new(4, EvictPolicy::Lru, 0)),
+                ep_ranks: 4,
+            },
+        );
+        touch_experts(&be, &[0, 2, 4, 6]); // one expert per rank
+        let rcs = Backend::residency_rank_counters(&be, 0).unwrap();
+        assert_eq!(rcs.len(), 4);
+        for rc in &rcs {
+            assert_eq!(rc.misses, 1, "each rank pages in exactly its own expert");
+        }
+        // expert 1 shares rank 0 with expert 0: the eviction stays inside
+        // rank 0's shard instead of victimizing another rank's resident
+        touch_experts(&be, &[1]);
+        let rcs = Backend::residency_rank_counters(&be, 0).unwrap();
+        assert_eq!(rcs[0].misses, 2);
+        assert_eq!(rcs[0].evictions, 1);
+        for rc in rcs.iter().skip(1) {
+            assert_eq!(rc.evictions, 0, "eviction leaked across ranks");
+        }
+        // the aggregate is the sum of the rank ledgers
+        let agg = Backend::residency_counters(&be, 0).unwrap();
+        assert_eq!(agg.misses, rcs.iter().map(|c| c.misses).sum::<u64>());
+        assert_eq!(agg.evictions, 1);
+        // the routing view concatenates per-rank resident masks
+        let view = Backend::residency_view(&be, 0).unwrap();
+        assert!(view[1] && !view[0], "rank 0 holds expert 1 after the eviction");
+        assert!(view[2] && view[4] && view[6]);
+        // per-rank residency executes bitwise like the eager pack
+        let plain = backend_ep(4, 1);
+        let c = plain.config().clone();
+        let hidden = vec![0.1f32; c.d_model];
+        let mut combine = vec![0.0f32; c.n_experts];
+        combine[3] = 1.0;
+        let a = plain.moe_apply(0, &hidden, &combine, &[3]).unwrap();
+        let r = be.moe_apply(0, &hidden, &combine, &[3]).unwrap();
+        assert_eq!(a, r, "per-rank residency changed the math");
+    }
+
+    #[test]
+    fn mismatched_rank_partition_is_rejected() {
+        use crate::moe::policy::route;
+        let be = backend_ep(4, 1);
+        let c = be.config().clone();
+        let scores =
+            ScoreMatrix::new(2, c.n_experts, vec![1.0 / c.n_experts as f32; 2 * c.n_experts]);
+        let live = vec![true; 2];
+        let d = route(
+            Policy::Ep { k0: 1, k: 2, ranks: 2, topup: 0, alpha: 0.0 },
+            &RoutingInput::new(&scores, &live, true),
+        );
+        let groups = ExpertGroups::from_decision(&d);
+        let ids: Vec<i32> = d.active.iter().map(|&e| e as i32).collect();
+        let hidden = vec![0.1f32; 2 * c.d_model];
+        let step = RoutedStep { groups: &groups, combine: &d.combine, ids: &ids };
+        let err = be.moe_apply_routed(0, &hidden, &step).unwrap_err();
+        assert!(
+            err.to_string().contains("ranks"),
+            "mismatched sharding must fail loudly, got {err}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "requires grouped dispatch")]
+    fn ep_rejects_gather_mode() {
+        CpuBackend::synthetic_with(
+            ModelConfig::preset("tiny").unwrap(),
+            0,
+            CpuOptions {
+                dispatch: DispatchMode::Gather,
+                threads: 1,
+                residency: None,
+                ep_ranks: 2,
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "ep_ranks=0")]
+    fn ep_rejects_zero_ranks() {
+        CpuBackend::synthetic_with(
+            ModelConfig::preset("tiny").unwrap(),
+            0,
+            CpuOptions {
+                dispatch: DispatchMode::Grouped,
+                threads: 1,
+                residency: None,
+                ep_ranks: 0,
             },
         );
     }

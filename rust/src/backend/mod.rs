@@ -123,6 +123,15 @@ pub trait Backend {
         mapping: &[Option<usize>],
     ) -> Result<Self::Cache>;
 
+    /// Expert-parallel rank shards this backend executes the MoE stage
+    /// over (contiguous block sharding via [`crate::moe::ep::rank_of`]).
+    /// `1` = single-rank, the default for every backend without an EP
+    /// execution axis. Per-rank telemetry (`/metrics` `ep` block, per-rank
+    /// `LayerStep` accounting) keys off this.
+    fn ep_ranks(&self) -> usize {
+        1
+    }
+
     // ---- telemetry (optional; default = backend doesn't track it) ------
 
     /// Cumulative routed (nonzero-combine) token-expert assignments per
@@ -144,6 +153,16 @@ pub trait Backend {
     /// runner diffs them around the MoE stage to attribute per-step
     /// misses).
     fn residency_counters(&self, _l: usize) -> Option<ResidencyCounters> {
+        None
+    }
+
+    /// Layer `l`'s cumulative residency counters split per EP rank
+    /// (length = [`Backend::ep_ranks`]), when the backend pages each
+    /// rank's expert shard independently. Monotone like
+    /// [`Backend::residency_counters`]; drives per-rank miss attribution
+    /// for the max-rank cost model and the `/metrics` per-rank residency
+    /// block.
+    fn residency_rank_counters(&self, _l: usize) -> Option<Vec<ResidencyCounters>> {
         None
     }
 

@@ -272,6 +272,8 @@ impl<B: Backend> Engine<B> {
 
         let n_live = self.slots.n_used();
         for (l, ls) in out.layers.iter().enumerate() {
+            // simulated latency is the max-rank EP cost — identical to
+            // layer_us(t, load, misses) on a single-rank backend
             self.moe.record(StepRecord {
                 layer: l as u16,
                 step: self.step_no,
@@ -280,8 +282,11 @@ impl<B: Backend> Engine<B> {
                 t: ls.t as u16,
                 load: ls.load as u32,
                 misses: ls.misses as u32,
+                ranks: ls.rank_t.len() as u16,
+                max_rank_t: ls.max_rank_t() as u16,
+                rank_load: ls.rank_load.iter().map(|&x| x as u32).collect(),
                 measured_us: ls.moe_us,
-                simulated_us: self.cfg.cost_model.layer_us(ls.t, ls.load, ls.misses),
+                simulated_us: self.cfg.cost_model.step_us_ep(&ls.rank_loads()),
             });
         }
         self.step_no += 1;

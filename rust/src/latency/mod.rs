@@ -15,4 +15,4 @@
 
 pub mod roofline;
 
-pub use roofline::{CostModel, H100Presets};
+pub use roofline::{CostModel, H100Presets, RankLoad};

@@ -7,6 +7,19 @@
 
 use crate::util::stats;
 
+/// One EP rank's share of a layer-step: the unique experts it activated,
+/// its routed token-expert assignments, and its residency demand misses —
+/// the inputs to [`CostModel::step_us_ep`]'s per-rank cost.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RankLoad {
+    /// unique active experts on this rank
+    pub t: usize,
+    /// routed (nonzero-combine) token-expert assignments on this rank
+    pub load: usize,
+    /// residency demand misses paid by this rank
+    pub misses: usize,
+}
+
 /// Eq. 2 cost model for one MoE layer's decode step.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CostModel {
@@ -36,6 +49,19 @@ impl CostModel {
             + self.fetch_us * t as f64
             + self.compute_us * load as f64
             + self.page_in_us * misses as f64
+    }
+
+    /// Latency of one MoE layer step under expert parallelism (paper §7):
+    /// ranks execute their shards concurrently, so the step costs the
+    /// *maximum* per-rank latency — `max_r layer_us(t_r, load_r,
+    /// misses_r)`. Reduces exactly to [`CostModel::layer_us`] at one rank
+    /// (and to `layer_us(0, 0, 0)` for an empty slice: an idle step still
+    /// pays the per-layer overhead).
+    pub fn step_us_ep(&self, per_rank: &[RankLoad]) -> f64 {
+        per_rank
+            .iter()
+            .map(|r| self.layer_us(r.t, r.load, r.misses))
+            .fold(self.layer_us(0, 0, 0), f64::max)
     }
 
     /// Fit (fetch, overhead) by OLS on measured (t, µs) samples, leaving
@@ -142,6 +168,39 @@ mod tests {
             assert!(us > prev);
             prev = us;
         }
+    }
+
+    #[test]
+    fn step_us_ep_is_max_over_ranks_and_reduces_at_one_rank() {
+        let m = H100Presets::qwen3_30b();
+        // one rank: exactly layer_us, for every shape incl. misses
+        for (t, load, misses) in [(0usize, 0usize, 0usize), (8, 32, 0), (51, 128, 3)] {
+            let one = [RankLoad { t, load, misses }];
+            assert_eq!(m.step_us_ep(&one), m.layer_us(t, load, misses));
+        }
+        // several ranks: the max rank sets the step
+        let ranks = [
+            RankLoad { t: 4, load: 16, misses: 0 },
+            RankLoad { t: 9, load: 30, misses: 1 },
+            RankLoad { t: 2, load: 64, misses: 0 },
+        ];
+        let want = ranks
+            .iter()
+            .map(|r| m.layer_us(r.t, r.load, r.misses))
+            .fold(f64::MIN, f64::max);
+        assert_eq!(m.step_us_ep(&ranks), want);
+        // balancing the same totals never costs more than concentrating
+        let concentrated = [
+            RankLoad { t: 12, load: 96, misses: 0 },
+            RankLoad::default(),
+        ];
+        let balanced = [
+            RankLoad { t: 6, load: 48, misses: 0 },
+            RankLoad { t: 6, load: 48, misses: 0 },
+        ];
+        assert!(m.step_us_ep(&balanced) < m.step_us_ep(&concentrated));
+        // empty slice: an idle step still pays the layer overhead
+        assert_eq!(m.step_us_ep(&[]), m.overhead_us);
     }
 
     #[test]

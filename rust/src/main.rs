@@ -51,7 +51,10 @@ fn spec() -> Spec {
             ("weight-seed", true, "cpu: synthetic-weight seed (default 0)"),
             ("policy", true, "routing policy, e.g. vanilla, pruned:k0=3, oea:k0=3, \
                               oea-full:k0=3,p=0.7,kmax=9,maxp=32, lynx:t=16, dynskip:tau=0.3, \
-                              cache-aware:k0=4,alpha=0.5"),
+                              cache-aware:k0=4,alpha=0.5, ep:k0=4,ranks=4,topup=1"),
+            ("ep-ranks", true, "cpu: expert-parallel rank shards executing the MoE stage \
+                              (default: the policy's ranks, or 1). Must match an ep: \
+                              policy's ranks when both are given"),
             ("expert-cache", true, "cpu: expert residency capacity (experts per layer); \
                               misses page packed panels in lazily (default: off, all \
                               experts pre-packed)"),
@@ -245,6 +248,28 @@ fn cpu_runner(args: &Args) -> Result<ModelRunner<CpuBackend>> {
     let cfg = ModelConfig::preset(&args.str_or("config", "small"))?;
     let seed = args.usize_or("weight-seed", 0)? as u64;
     let mut opts = CpuOptions::from_env();
+    // EP sharding: --ep-ranks, defaulting to the policy's ranks so
+    // `--policy ep:ranks=4` alone shards the backend to match. A mismatch
+    // between the two is a loud error — executed sharding and routed
+    // sharding disagreeing would corrupt every per-rank number.
+    let pol_ranks = parse_policy(args, &cfg)?.ranks();
+    opts.ep_ranks = match args.usize_opt("ep-ranks")? {
+        Some(r) => {
+            if r == 0 || r > cfg.n_experts {
+                return Err(oea_serve::Error::Config(format!(
+                    "--ep-ranks {r} must be in 1..={} (n_experts)",
+                    cfg.n_experts
+                )));
+            }
+            if pol_ranks > 1 && r != pol_ranks {
+                return Err(oea_serve::Error::Config(format!(
+                    "--ep-ranks {r} conflicts with the policy's ranks={pol_ranks}"
+                )));
+            }
+            r
+        }
+        None => pol_ranks,
+    };
     match args.usize_opt("expert-cache")? {
         Some(capacity) => {
             if capacity == 0 {

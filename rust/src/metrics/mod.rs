@@ -9,7 +9,7 @@ use crate::util::json::Json;
 use crate::util::stats::{self, LinFit};
 
 /// One MoE layer execution during decode.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StepRecord {
     pub layer: u16,
     pub step: u32,
@@ -23,9 +23,17 @@ pub struct StepRecord {
     pub load: u32,
     /// expert residency demand misses (0 without a residency layer)
     pub misses: u32,
+    /// EP rank shards the step executed over (1 = single-rank)
+    pub ranks: u16,
+    /// max per-rank active experts — the EP latency driver (== `t` at
+    /// `ranks == 1`)
+    pub max_rank_t: u16,
+    /// routed assignments per rank (length = `ranks`; partitions `load`)
+    pub rank_load: Vec<u32>,
     /// wall-clock µs measured on this machine (moe stage execution)
     pub measured_us: f64,
-    /// simulated H100 µs from the roofline model
+    /// simulated H100 µs from the roofline model (the max-rank EP cost
+    /// when `ranks > 1`)
     pub simulated_us: f64,
 }
 
@@ -69,6 +77,18 @@ impl MoeMetrics {
     /// Average number of activated experts (Tables 4/10).
     pub fn avg_t(&self) -> f64 {
         stats::mean(&self.records.iter().map(|r| r.t as f64).collect::<Vec<_>>())
+    }
+
+    /// Average max-per-rank activated experts — the quantity EP step
+    /// latency follows (== [`MoeMetrics::avg_t`] on single-rank records).
+    pub fn avg_max_rank_t(&self) -> f64 {
+        stats::mean(
+            &self
+                .records
+                .iter()
+                .map(|r| r.max_rank_t as f64)
+                .collect::<Vec<_>>(),
+        )
     }
 
     /// Average MoE latency (Tables 3/5), simulated or measured.
@@ -118,12 +138,23 @@ impl MoeMetrics {
             .collect()
     }
 
+    /// CSV export. `rank_load` is `|`-joined inside one field (CSV cells
+    /// must not grow commas), so per-rank loads survive into offline
+    /// analysis at any rank count.
     pub fn to_csv(&self) -> String {
-        let mut s =
-            String::from("layer,step,bucket,live,t,load,misses,measured_us,simulated_us\n");
+        let mut s = String::from(
+            "layer,step,bucket,live,t,load,misses,ranks,max_rank_t,rank_load,\
+             measured_us,simulated_us\n",
+        );
         for r in &self.records {
+            let rank_load = r
+                .rank_load
+                .iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join("|");
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{:.3},{:.3}\n",
+                "{},{},{},{},{},{},{},{},{},{},{:.3},{:.3}\n",
                 r.layer,
                 r.step,
                 r.bucket,
@@ -131,6 +162,9 @@ impl MoeMetrics {
                 r.t,
                 r.load,
                 r.misses,
+                r.ranks,
+                r.max_rank_t,
+                rank_load,
                 r.measured_us,
                 r.simulated_us
             ));
@@ -223,6 +257,9 @@ mod tests {
             t,
             load: t as u32 * 2,
             misses: t as u32 / 4,
+            ranks: 1,
+            max_rank_t: t,
+            rank_load: vec![t as u32 * 2],
             measured_us: us,
             simulated_us: 30.0 + 3.0 * t as f64,
         }
@@ -274,7 +311,26 @@ mod tests {
         m.record(rec(0, 10, 1.5));
         let csv = m.to_csv();
         assert_eq!(csv.lines().count(), 2);
-        assert!(csv.contains("0,0,16,16,10,20,2,1.500"));
+        assert!(csv.contains("0,0,16,16,10,20,2,1,10,20,1.500"));
+        // per-rank loads survive the export as one |-joined field
+        let mut r = rec(1, 8, 2.0);
+        r.ranks = 4;
+        r.max_rank_t = 3;
+        r.rank_load = vec![4, 6, 2, 4];
+        m.record(r);
+        assert!(m.to_csv().contains(",4,3,4|6|2|4,"));
+    }
+
+    #[test]
+    fn avg_max_rank_t_tracks_rank_partition() {
+        let mut m = MoeMetrics::default();
+        m.record(rec(0, 10, 0.0)); // single-rank: max_rank_t == t
+        let mut r = rec(0, 10, 0.0);
+        r.ranks = 2;
+        r.max_rank_t = 6;
+        m.record(r);
+        assert_eq!(m.avg_max_rank_t(), 8.0);
+        assert_eq!(m.avg_t(), 10.0);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use std::time::Instant;
 use crate::backend::{Backend, Prefilled};
 use crate::config::ModelConfig;
 use crate::moe::dispatch::{ExpertGroups, RoutedStep};
+use crate::moe::ep::rank_of;
 use crate::moe::policy::{self, Policy, RoutingInput};
 use crate::moe::ScoreMatrix;
 use crate::util::error::{Error, Result};
@@ -37,7 +38,7 @@ pub struct DecodeBatch<B: Backend> {
 pub type PrefilledSeq<B> = Prefilled<<B as Backend>::Rows>;
 
 /// Per-layer routing/latency info from one decode step.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct LayerStep {
     pub t: usize,
     pub t_bucket: usize,
@@ -47,10 +48,37 @@ pub struct LayerStep {
     /// residency misses this step (experts paged in on demand); 0 when
     /// the backend runs without an expert residency layer
     pub misses: usize,
+    /// Per-rank accounting under the backend's EP sharding (length =
+    /// `Backend::ep_ranks()`; single-entry vectors at one rank, where
+    /// `rank_t == [t]` etc.). EP step latency follows `max(rank_t)` —
+    /// [`crate::latency::CostModel::step_us_ep`] consumes exactly these.
+    pub rank_t: Vec<usize>,
+    /// routed assignments per rank (partitions `load`)
+    pub rank_load: Vec<usize>,
+    /// residency demand misses per rank (partitions `misses`)
+    pub rank_misses: Vec<usize>,
     /// measured wall µs of the MoE stage execution only
     pub moe_us: f64,
     /// µs spent in the rust routing decision
     pub route_us: f64,
+}
+
+impl LayerStep {
+    /// Max per-rank activated experts — the EP latency driver (== `t` at
+    /// one rank).
+    pub fn max_rank_t(&self) -> usize {
+        self.rank_t.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Per-rank [`RankLoad`]s for the max-rank cost model.
+    pub fn rank_loads(&self) -> Vec<crate::latency::RankLoad> {
+        self.rank_t
+            .iter()
+            .zip(self.rank_load.iter())
+            .zip(self.rank_misses.iter())
+            .map(|((&t, &load), &misses)| crate::latency::RankLoad { t, load, misses })
+            .collect()
+    }
 }
 
 /// Output of one decode step.
@@ -128,11 +156,13 @@ impl<B: Backend> ModelRunner<B> {
                 }
                 self.backend.residency_observe(l, &agg);
             }
-            // cache-aware policies bias selection toward the backend's
-            // resident experts; every other policy ignores the view, so
-            // the (locked) backend query is skipped for them
+            // cache-aware policies (and EP with a residency boost) bias
+            // selection toward the backend's resident experts; every
+            // other policy ignores the view, so the (locked) backend
+            // query is skipped for them
             let resview = match pol {
                 Policy::CacheAware { .. } => self.backend.residency_view(l),
+                Policy::Ep { alpha, .. } if alpha != 0.0 => self.backend.residency_view(l),
                 _ => None,
             };
             let input = RoutingInput {
@@ -150,7 +180,10 @@ impl<B: Backend> ModelRunner<B> {
             // part of the MoE stage cost, so it runs inside the timer.
             // Residency counters are monotone, so the snapshot pair
             // attributes this layer-step's demand misses exactly.
+            let ranks = self.backend.ep_ranks().max(1);
             let res0 = self.backend.residency_counters(l);
+            let rres0 =
+                if ranks > 1 { self.backend.residency_rank_counters(l) } else { None };
             let t0 = Instant::now();
             let groups = ExpertGroups::from_decision(&d);
             let load = groups.routed_tokens();
@@ -162,7 +195,40 @@ impl<B: Backend> ModelRunner<B> {
                 _ => 0,
             };
 
-            layers.push(LayerStep { t: d.t(), t_bucket, load, misses, moe_us, route_us });
+            // per-rank accounting under the BACKEND's sharding (any
+            // policy on a rank-sharded backend gets per-rank numbers —
+            // vanilla routing on R ranks is the EP baseline)
+            let mut rank_t = vec![0usize; ranks];
+            for &e in &d.active {
+                rank_t[rank_of(e as usize, c.n_experts, ranks)] += 1;
+            }
+            let rank_load = groups.rank_loads(ranks);
+            let rank_misses = match (rres0, self.backend.residency_rank_counters(l)) {
+                (Some(before), Some(after)) => after
+                    .iter()
+                    .zip(before.iter())
+                    .map(|(a, b)| a.delta_from(b).misses as usize)
+                    .collect(),
+                _ => {
+                    // no per-rank residency: all misses on rank 0 (the
+                    // only rank when ranks == 1; 0 everywhere otherwise)
+                    let mut v = vec![0usize; ranks];
+                    v[0] = misses;
+                    v
+                }
+            };
+
+            layers.push(LayerStep {
+                t: d.t(),
+                t_bucket,
+                load,
+                misses,
+                rank_t,
+                rank_load,
+                rank_misses,
+                moe_us,
+                route_us,
+            });
         }
 
         let logits = self.backend.logits(&hidden)?;

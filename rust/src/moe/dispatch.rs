@@ -18,18 +18,26 @@
 //! so padding ids and §6-style zero-weight assignments dispatch nothing
 //! and per-expert load telemetry stays honest under either constructor.
 
+use crate::moe::ep::rank_of;
 use crate::moe::policy::RoutingDecision;
 
 /// Per-expert token groups of one (layer, step), CSR over
 /// `(rows, weights)`; experts appear in ascending id order so grouped
 /// execution applies each token's experts in the same order as the
 /// gather kernel's ascending active list (bitwise-reproducible sums).
+///
+/// Because experts are ascending and EP rank sharding is contiguous
+/// ([`rank_of`]), each rank's work list is a contiguous range of groups —
+/// [`ExpertGroups::rank_ranges`] exposes that partition so a rank-sharded
+/// backend can execute and account per rank without re-sorting.
 #[derive(Debug, Clone)]
 pub struct ExpertGroups {
     /// token rows in the step's batch (`B`)
     pub b: usize,
     /// expert-axis width the combine rows were laid out with
     pub n_experts: usize,
+    /// rank partition inherited from the routing decision (1 = unsharded)
+    pub ranks: usize,
     experts: Vec<u16>,
     offsets: Vec<u32>,
     rows: Vec<u32>,
@@ -64,6 +72,7 @@ impl ExpertGroups {
         let g = ExpertGroups {
             b,
             n_experts: n,
+            ranks: 1,
             experts,
             offsets,
             rows: vec![0u32; total as usize],
@@ -87,6 +96,7 @@ impl ExpertGroups {
             }
         }
         let (mut g, mut cursor) = Self::shell(b, n, &count);
+        g.ranks = d.ranks.max(1);
         for (i, set) in d.sets.iter().enumerate() {
             for &e in set {
                 let w = d.combine[i * n + e as usize];
@@ -188,6 +198,36 @@ impl ExpertGroups {
         }
         hist
     }
+
+    /// Contiguous group-index ranges per rank under `ranks`-way block
+    /// sharding: `out[r] = (g0, g1)` such that groups `g0..g1` are exactly
+    /// rank `r`'s work list (possibly empty). Experts are ascending and
+    /// shards are contiguous id blocks, so this is a single walk — rank
+    /// `r`'s range at `ranks = 1` is the whole list.
+    pub fn rank_ranges(&self, ranks: usize) -> Vec<(usize, usize)> {
+        let ranks = ranks.max(1);
+        let mut out = Vec::with_capacity(ranks);
+        let mut gi = 0;
+        for r in 0..ranks {
+            let start = gi;
+            while gi < self.len() && rank_of(self.experts[gi] as usize, self.n_experts, ranks) == r
+            {
+                gi += 1;
+            }
+            out.push((start, gi));
+        }
+        debug_assert_eq!(gi, self.len(), "ranges must cover every group");
+        out
+    }
+
+    /// Routed (nonzero-combine) token-expert assignments per rank — the
+    /// per-rank compute load the EP cost model's `a` term scales with.
+    pub fn rank_loads(&self, ranks: usize) -> Vec<usize> {
+        self.rank_ranges(ranks)
+            .into_iter()
+            .map(|(g0, g1)| (self.offsets[g1] - self.offsets[g0]) as usize)
+            .collect()
+    }
 }
 
 /// One decode step's routing artifacts in every representation a backend
@@ -284,6 +324,51 @@ mod tests {
         assert_eq!(g.group(0).rows, &[0, 1]);
         assert_eq!(g.group(1).rows, &[0]);
         assert_eq!(g.routed_tokens(), 3);
+    }
+
+    #[test]
+    fn rank_ranges_partition_groups() {
+        let d = decision(); // active = {0,1,2,4,5,6} over n=8
+        let g = ExpertGroups::from_decision(&d);
+        assert_eq!(g.ranks, 1, "non-EP decisions carry the single-rank partition");
+        // ranks=1: one range covering everything
+        assert_eq!(g.rank_ranges(1), vec![(0, g.len())]);
+        assert_eq!(g.rank_loads(1), vec![g.routed_tokens()]);
+        // ranks=4 over 8 experts: shards {0,1},{2,3},{4,5},{6,7}
+        let ranges = g.rank_ranges(4);
+        assert_eq!(ranges.len(), 4);
+        let experts: Vec<usize> = g.iter().map(|grp| grp.expert).collect();
+        for (r, &(g0, g1)) in ranges.iter().enumerate() {
+            for gi in g0..g1 {
+                assert_eq!(
+                    crate::moe::ep::rank_of(experts[gi], 8, 4),
+                    r,
+                    "group {gi} (expert {}) landed on rank {r}",
+                    experts[gi]
+                );
+            }
+        }
+        // ranges tile the group list in order
+        assert_eq!(ranges[0].0, 0);
+        assert_eq!(ranges[3].1, g.len());
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+        // loads partition the routed total
+        assert_eq!(g.rank_loads(4).iter().sum::<usize>(), g.routed_tokens());
+    }
+
+    #[test]
+    fn from_decision_propagates_rank_partition() {
+        let s = fixture();
+        let live = vec![true; 4];
+        let d = route(
+            Policy::Ep { k0: 1, k: 2, ranks: 4, topup: 0, alpha: 0.0 },
+            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
+        );
+        assert_eq!(d.ranks, 4);
+        let g = ExpertGroups::from_decision(&d);
+        assert_eq!(g.ranks, 4);
     }
 
     #[test]

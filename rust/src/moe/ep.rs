@@ -1,74 +1,137 @@
 //! Expert-parallel OEA (paper §7 "Extension to expert parallelism").
 //!
-//! Under expert parallelism experts are sharded across R ranks and step
-//! latency is driven by the *maximum* per-rank number of activated experts.
-//! The extension runs OEA per rank: Phase-1 baselines are global (quality
-//! must not depend on the sharding), Phase-2 piggybacking only onto experts
-//! of the same rank's union, optionally topping up `k0` on underloaded
-//! ranks (the paper's suggestion of a bigger k0 where `S_base` is small).
+//! Under expert parallelism experts are block-sharded across R ranks and
+//! step latency is driven by the *maximum* per-rank number of activated
+//! experts. The extension runs OEA with a per-rank view: Phase-1 baselines
+//! are global (quality must not depend on the sharding — property-tested
+//! in `tests/ep_properties.rs`), Phase-2 piggybacking only onto experts of
+//! the union (which partitions by rank, so every piggyback is rank-local),
+//! optionally topping up `k0` on underloaded ranks (the paper's suggestion
+//! of a bigger k0 where `S_base` is small).
+//!
+//! Both phases are the *same functions* the single-rank policies run
+//! ([`policy::phase1_masks`] / [`policy::phase2_piggyback`]), which is
+//! what pins `ranks = 1` bitwise-identical to
+//! [`Policy::OeaSimplified`](crate::moe::policy::Policy::OeaSimplified):
+//! there is no duplicated phase code to drift.
+//!
+//! [`route_ep_cache_aware`] composes the residency boost on top: selection
+//! runs over boosted scores exactly like `cache-aware`, and because
+//! per-rank residency sets partition the expert axis (each expert can only
+//! be resident in its own rank's set), the boost an expert receives always
+//! comes from its own rank — the rank-local bias that balances page-in
+//! traffic across ranks.
 
-use crate::moe::masks::ExpertMask;
-use crate::moe::policy::{RoutingDecision, RoutingInput};
+use crate::moe::policy::{self, RoutingDecision, RoutingInput};
 
-/// Contiguous block sharding: expert e lives on rank e / (n/ranks).
+/// Contiguous block sharding: expert e lives on rank e / ceil(n/ranks).
 pub fn rank_of(e: usize, n: usize, ranks: usize) -> usize {
     let per = n.div_ceil(ranks);
     (e / per).min(ranks - 1)
 }
 
-#[derive(Debug, Clone)]
-pub struct EpDecision {
-    pub inner: RoutingDecision,
-    /// active experts per rank; step latency ~ max of these
-    pub per_rank_t: Vec<usize>,
-}
-
-impl EpDecision {
-    pub fn max_rank_t(&self) -> usize {
-        self.per_rank_t.iter().copied().max().unwrap_or(0)
-    }
+/// Shard bounds of `rank`: the half-open expert-id range `[e0, e1)` it
+/// owns under contiguous block sharding (empty for degenerate trailing
+/// ranks when `ranks` does not divide `n` evenly).
+pub fn rank_span(rank: usize, n: usize, ranks: usize) -> (usize, usize) {
+    let per = n.div_ceil(ranks);
+    let e0 = (rank * per).min(n);
+    let e1 = if rank == ranks - 1 { n } else { ((rank + 1) * per).min(n) };
+    (e0, e1)
 }
 
 /// OEA with per-rank piggybacking.
 ///
 /// `k0`: global Phase-1 baseline; `k_max`: per-token cap; `topup`: extra
 /// baseline experts taken on ranks whose union is smaller than the average
-/// (0 disables).
+/// (0 disables). The returned decision carries the rank partition
+/// (`ranks`), so [`RoutingDecision::per_rank_t`] /
+/// [`RoutingDecision::max_rank_t`] report the EP latency driver.
 pub fn route_ep(
     input: &RoutingInput,
     k0: usize,
     k_max: usize,
     ranks: usize,
     topup: usize,
-) -> EpDecision {
+) -> RoutingDecision {
+    let (per, union) = ep_masks(input, k0, k_max, ranks, topup);
+    let mut d = RoutingDecision::from_masks(input, &per, &union);
+    d.ranks = ranks;
+    d
+}
+
+/// EP routing with the cache-aware residency boost composed on top:
+/// both phases (and the top-up) select over boosted scores
+/// `s'(i,e) = s(i,e) · (1 + alpha·resident(e))`, combine weights come
+/// from the RAW scores (Eq. 1 semantics, same contract as
+/// [`Policy::CacheAware`](crate::moe::policy::Policy::CacheAware)).
+/// `resident` is the concatenation of the per-rank residency sets, which
+/// partition the expert axis — so each expert's boost is decided by its
+/// own rank's set and the bias steers every rank toward its own loaded
+/// panels. A uniform mask (all resident / all cold) or no view reduces
+/// exactly to [`route_ep`].
+pub fn route_ep_cache_aware(
+    input: &RoutingInput,
+    resident: &[bool],
+    k0: usize,
+    k_max: usize,
+    ranks: usize,
+    topup: usize,
+    alpha: f64,
+) -> RoutingDecision {
     let s = input.scores;
-    let live = |i: usize| !input.mask_padding || input.live[i];
-
-    // Phase 1 (global, batch independent)
-    let mut per_token: Vec<ExpertMask> = Vec::with_capacity(s.b);
-    let mut union = ExpertMask::new(s.n);
-    for i in 0..s.b {
-        let mut m = ExpertMask::new(s.n);
-        if live(i) {
-            for j in 0..k0.min(s.n) {
-                m.set(s.ranked(i, j));
-            }
-            union.union_with(&m);
-        }
-        per_token.push(m);
+    debug_assert_eq!(resident.len(), s.n);
+    // uniform masks scale every score identically: ranking unchanged,
+    // decision provably identical to unboosted EP (same shortcut as
+    // route_cache_aware)
+    let n_res = resident.iter().filter(|&&r| r).count();
+    if n_res == 0 || n_res == s.n {
+        return route_ep(input, k0, k_max, ranks, topup);
     }
+    let boosted = policy::boosted_scores(s, resident, alpha);
+    let binput = RoutingInput {
+        scores: &boosted,
+        live: input.live,
+        mask_padding: input.mask_padding,
+        resident: input.resident,
+    };
+    let (per, union) = ep_masks(&binput, k0, k_max, ranks, topup);
+    // combine from the ORIGINAL scores (Eq. 1 over each selected set)
+    let mut d = RoutingDecision::from_masks(input, &per, &union);
+    d.ranks = ranks;
+    d
+}
 
-    // per-rank unions
-    let mut rank_unions = vec![ExpertMask::new(s.n); ranks];
+/// The EP selection pipeline over `sel` (the selection-score input —
+/// raw scores for [`route_ep`], boosted ones for the cache-aware
+/// wrapper): global Phase 1, per-rank top-up, Phase 2 piggyback onto the
+/// union.
+fn ep_masks(
+    sel: &RoutingInput,
+    k0: usize,
+    k_max: usize,
+    ranks: usize,
+    topup: usize,
+) -> (
+    Vec<crate::moe::masks::ExpertMask>,
+    crate::moe::masks::ExpertMask,
+) {
+    let s = sel.scores;
+    // Phase 1 (global, batch independent) — the shared implementation
+    let (mut per_token, mut union) = policy::phase1_masks(sel, k0, 1.0);
+
+    // per-rank union sizes (the quantity EP latency follows)
+    let mut rank_t = vec![0usize; ranks];
     for e in union.iter_ids() {
-        rank_unions[rank_of(e, s.n, ranks)].set(e);
+        rank_t[rank_of(e, s.n, ranks)] += 1;
     }
 
-    // top-up: ranks with below-average unions accept extra baseline experts
+    // top-up: ranks with below-average unions accept extra baseline
+    // experts — a bigger k0 exactly where it is latency-free (paper §7)
     if topup > 0 {
         let avg = union.count() as f64 / ranks as f64;
         for i in 0..s.b {
-            if !live(i) {
+            if !policy::is_live(sel, i) {
                 continue;
             }
             let mut added = 0;
@@ -78,73 +141,26 @@ pub fn route_ep(
                 }
                 let e = s.ranked(i, j);
                 let r = rank_of(e, s.n, ranks);
-                if (rank_unions[r].count() as f64) < avg && !union.contains(e) {
+                if (rank_t[r] as f64) < avg && !union.contains(e) {
                     per_token[i].set(e);
                     union.set(e);
-                    rank_unions[r].set(e);
+                    rank_t[r] += 1;
                     added += 1;
                 }
             }
         }
     }
 
-    // Phase 2: piggyback within each expert's own rank union (equivalent to
-    // the global union here since unions partition by rank, but the cap is
-    // enforced per token overall)
-    for i in 0..s.b {
-        if !live(i) {
-            continue;
-        }
-        let mut size = per_token[i].count();
-        if size >= k_max {
-            continue;
-        }
-        for j in 0..s.n {
-            let e = s.ranked(i, j);
-            if per_token[i].contains(e) {
-                continue;
-            }
-            if union.contains(e) {
-                per_token[i].set(e);
-                size += 1;
-                if size >= k_max {
-                    break;
-                }
-            }
-        }
-    }
-
-    // combine + realized decision
-    let (b, n) = (s.b, s.n);
-    let mut combine = vec![0.0f32; b * n];
-    let mut sets = Vec::with_capacity(b);
-    for i in 0..b {
-        let m = &per_token[i];
-        let mut sum = 0.0f32;
-        for e in m.iter_ids() {
-            sum += s.score(i, e);
-        }
-        if sum > 0.0 {
-            for e in m.iter_ids() {
-                combine[i * n + e] = s.score(i, e) / sum;
-            }
-        }
-        sets.push(m.to_vec());
-    }
-    let active = union.to_vec();
-    let mut per_rank_t = vec![0usize; ranks];
-    for &e in &active {
-        per_rank_t[rank_of(e as usize, n, ranks)] += 1;
-    }
-    EpDecision {
-        inner: RoutingDecision { b, n, sets, combine, active },
-        per_rank_t,
-    }
+    // Phase 2: piggyback within the union — equivalent to piggybacking
+    // within each expert's own rank union, since unions partition by rank
+    policy::phase2_piggyback(sel, &mut per_token, &union, k_max, s.n);
+    (per_token, union)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::moe::policy::{route, Policy};
     use crate::moe::scores::ScoreMatrix;
     use crate::util::rng::Rng;
 
@@ -171,6 +187,19 @@ mod tests {
         assert_eq!(rank_of(7, 32, 4), 0);
         assert_eq!(rank_of(8, 32, 4), 1);
         assert_eq!(rank_of(31, 32, 4), 3);
+        // spans tile the expert axis and agree with rank_of
+        for (n, ranks) in [(32usize, 4usize), (16, 8), (10, 4), (10, 7), (8, 1)] {
+            let mut covered = 0;
+            for r in 0..ranks {
+                let (e0, e1) = rank_span(r, n, ranks);
+                assert_eq!(e0, covered, "spans must be contiguous");
+                for e in e0..e1 {
+                    assert_eq!(rank_of(e, n, ranks), r);
+                }
+                covered = e1;
+            }
+            assert_eq!(covered, n, "spans must cover all experts");
+        }
     }
 
     #[test]
@@ -179,8 +208,9 @@ mod tests {
         let live = vec![true; 16];
         let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
         let d = route_ep(&input, 3, 8, 4, 0);
-        assert_eq!(d.per_rank_t.iter().sum::<usize>(), d.inner.t());
-        assert!(d.max_rank_t() >= d.inner.t() / 4);
+        assert_eq!(d.ranks, 4);
+        assert_eq!(d.per_rank_t().iter().sum::<usize>(), d.t());
+        assert!(d.max_rank_t() >= d.t() / 4);
     }
 
     #[test]
@@ -191,9 +221,9 @@ mod tests {
         let base = route_ep(&input, 2, 8, 4, 0);
         let topped = route_ep(&input, 2, 8, 4, 2);
         // top-up can only add experts
-        assert!(topped.inner.t() >= base.inner.t());
+        assert!(topped.t() >= base.t());
         for i in 0..16 {
-            assert!(topped.inner.sets[i].len() >= base.inner.sets[i].len());
+            assert!(topped.sets[i].len() >= base.sets[i].len());
         }
     }
 
@@ -203,10 +233,56 @@ mod tests {
         let live = vec![true; 8];
         let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
         let d = route_ep(&input, 3, 8, 4, 1);
-        for set in &d.inner.sets {
+        for set in &d.sets {
             for e in set {
-                assert!(d.inner.active.contains(e));
+                assert!(d.active.contains(e));
             }
         }
+    }
+
+    #[test]
+    fn ranks_one_is_oea_bitwise() {
+        // shared-phase refactor guarantee: ranks=1 (any topup) IS
+        // OeaSimplified, bitwise across sets/active/combine
+        let s = random_scores(16, 32, 3);
+        let live: Vec<bool> = (0..16).map(|i| i % 5 != 0).collect();
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let oea = route(Policy::OeaSimplified { k0: 3, k: 8 }, &input);
+        for topup in [0, 2] {
+            let ep = route_ep(&input, 3, 8, 1, topup);
+            assert_eq!(ep.sets, oea.sets);
+            assert_eq!(ep.active, oea.active);
+            assert_eq!(ep.combine, oea.combine);
+        }
+    }
+
+    #[test]
+    fn cache_aware_ep_reduces_without_view_and_boosts_with_one() {
+        let s = random_scores(16, 32, 4);
+        let live = vec![true; 16];
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let base = route_ep(&input, 3, 8, 4, 1);
+        // uniform masks: identical decision
+        for uniform in [vec![true; 32], vec![false; 32]] {
+            let ca = route_ep_cache_aware(&input, &uniform, 3, 8, 4, 1, 1.0);
+            assert_eq!(ca.sets, base.sets);
+            assert_eq!(ca.combine, base.combine);
+        }
+        // policy dispatch: Ep with alpha routes through the boost iff a
+        // view is present
+        let resident: Vec<bool> = (0..32).map(|e| e % 2 == 0).collect();
+        let via_policy = route(
+            Policy::Ep { k0: 3, k: 8, ranks: 4, topup: 1, alpha: 1.0 },
+            &RoutingInput {
+                scores: &s,
+                live: &live,
+                mask_padding: true,
+                resident: Some(&resident),
+            },
+        );
+        let direct = route_ep_cache_aware(&input, &resident, 3, 8, 4, 1, 1.0);
+        assert_eq!(via_policy.sets, direct.sets);
+        assert_eq!(via_policy.combine, direct.combine);
+        assert_eq!(via_policy.ranks, 4);
     }
 }

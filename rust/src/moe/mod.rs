@@ -12,9 +12,14 @@
 //! - `Oea` general (Algorithm 2: k0, p, k_max, maxP),
 //! - `Lynx` (Gupta et al. 2024 — the subtractive batch-aware baseline),
 //! - `DynSkip` (Lu et al. 2024 — per-token score-ratio skipping),
-//! - `ExpertChoice` (Zhou et al. 2022).
+//! - `ExpertChoice` (Zhou et al. 2022),
+//! - `CacheAware` (residency-boosted OEA, ISSUE 4),
+//! - `Ep` (the §7 expert-parallel extension in [`ep`]: per-rank
+//!   piggybacking + top-up, optionally composed with the residency boost
+//!   rank-locally — routed decisions carry their rank partition so the
+//!   backend executes per-rank work lists),
 //!
-//! plus the §7 expert-parallel extension in [`ep`] and, in [`dispatch`],
+//! plus, in [`dispatch`],
 //! the token-grouped per-expert work-list ([`ExpertGroups`]) that the CPU
 //! backend's grouped dispatch path executes so per-step MoE cost scales
 //! with the routed load `Σ_e |tokens(e)|` rather than `T · B`.

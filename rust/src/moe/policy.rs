@@ -43,14 +43,32 @@ pub enum Policy {
     /// an unbounded one) or `alpha == 0` this is exactly
     /// [`Policy::OeaSimplified`]`{ k0, k }`.
     CacheAware { k0: usize, k: usize, alpha: f64 },
+    /// Expert-parallel OEA (paper §7): experts are block-sharded over
+    /// `ranks` execution ranks ([`crate::moe::ep::rank_of`]) and step
+    /// latency follows the *maximum* per-rank activated-expert count, so
+    /// Phase 2 piggybacks per rank and `topup` grants extra baseline
+    /// experts to underloaded ranks. `alpha > 0` composes the cache-aware
+    /// residency boost on top, restricted by construction to each
+    /// candidate expert's own rank's residency set (per-rank residency
+    /// partitions the expert axis). `ranks = 1` (and `alpha = 0` or no
+    /// residency view) is exactly [`Policy::OeaSimplified`]`{ k0, k }`.
+    Ep { k0: usize, k: usize, ranks: usize, topup: usize, alpha: f64 },
 }
+
+/// Every valid `--policy` spec, for loud top-level errors: a typo'd
+/// policy NAME must enumerate what would have parsed, exactly like a
+/// typo'd key enumerates the allowed keys.
+pub const POLICY_SPECS: &str = "vanilla[:k=K] | pruned:k0=K0[,p=P] | oea:k0=K0[,k=K] | \
+     oea-full:k0=K0,p=P,kmax=KM,maxp=MP | lynx:t=T[,k=K] | dynskip:tau=TAU[,k=K] | \
+     expert-choice:cap=C | cache-aware:k0=K0[,k=K,alpha=A] | \
+     ep:k0=K0,ranks=R[,k=K,topup=T,alpha=A]";
 
 impl Policy {
     /// Parse a CLI policy spec. Examples:
     /// `vanilla`, `pruned:k0=3`, `pruned:k0=4,p=0.7`, `oea:k0=3`,
     /// `oea-full:k0=3,p=0.7,kmax=9,maxp=32`, `lynx:t=16`,
     /// `dynskip:tau=0.3`, `expert-choice:cap=2`,
-    /// `cache-aware:k0=4,k=8,alpha=0.5`.
+    /// `cache-aware:k0=4,k=8,alpha=0.5`, `ep:k0=4,ranks=4,topup=1`.
     /// `k` defaults to the model's top_k. Unknown keys are rejected (a
     /// typo like `oea:kmx=9` must not silently run with the default).
     pub fn from_cli(
@@ -76,10 +94,10 @@ impl Policy {
             "dynskip" => &["k", "tau"],
             "expert-choice" => &["cap"],
             "cache-aware" => &["k0", "k", "alpha"],
+            "ep" => &["k0", "k", "ranks", "topup", "alpha"],
             other => {
                 return Err(Error::Config(format!(
-                    "unknown policy {other:?} \
-                     (vanilla|pruned|oea|oea-full|lynx|dynskip|expert-choice|cache-aware)"
+                    "unknown policy {other:?}; valid specs: {POLICY_SPECS}"
                 )))
             }
         };
@@ -148,10 +166,41 @@ impl Policy {
                     alpha,
                 })
             }
+            "ep" => {
+                let ranks = get_usize("ranks", 1)?;
+                if ranks == 0 || ranks > n_experts {
+                    return Err(Error::Config(format!(
+                        "--policy ep: ranks={ranks} must be in 1..={n_experts} (n_experts)"
+                    )));
+                }
+                let alpha = get_f64("alpha", 0.0)?;
+                if alpha < 0.0 {
+                    // same guard as cache-aware: a sign typo must not
+                    // silently run as plain EP-OEA
+                    return Err(Error::Config(format!(
+                        "--policy ep: alpha={alpha} must be >= 0"
+                    )));
+                }
+                Ok(Policy::Ep {
+                    k0: get_usize("k0", model_k)?,
+                    k: get_usize("k", model_k)?,
+                    ranks,
+                    topup: get_usize("topup", 0)?,
+                    alpha,
+                })
+            }
             other => Err(Error::Config(format!(
-                "unknown policy {other:?} \
-                 (vanilla|pruned|oea|oea-full|lynx|dynskip|expert-choice|cache-aware)"
+                "unknown policy {other:?}; valid specs: {POLICY_SPECS}"
             ))),
+        }
+    }
+
+    /// Rank count this policy routes over (1 for every non-EP policy) —
+    /// the value the backend's execution sharding must agree with.
+    pub fn ranks(&self) -> usize {
+        match self {
+            Policy::Ep { ranks, .. } => *ranks,
+            _ => 1,
         }
     }
 
@@ -170,6 +219,9 @@ impl Policy {
             Policy::ExpertChoice { capacity } => format!("expert-choice(cap={capacity})"),
             Policy::CacheAware { k0, k, alpha } => {
                 format!("cache-aware(k0={k0},k={k},alpha={alpha})")
+            }
+            Policy::Ep { k0, k, ranks, topup, alpha } => {
+                format!("ep(k0={k0},k={k},ranks={ranks},topup={topup},alpha={alpha})")
             }
         }
     }
@@ -208,6 +260,11 @@ pub struct RoutingDecision {
     pub combine: Vec<f32>,
     /// ascending unique active experts over live rows — `T = active.len()`
     pub active: Vec<u16>,
+    /// Rank partition this decision was routed under: experts are
+    /// block-sharded over `ranks` execution ranks via
+    /// [`crate::moe::ep::rank_of`]. `1` for every non-EP policy — the
+    /// single-rank regime where [`RoutingDecision::max_rank_t`]` == t()`.
+    pub ranks: usize,
 }
 
 impl RoutingDecision {
@@ -215,7 +272,23 @@ impl RoutingDecision {
         self.active.len()
     }
 
-    fn from_masks(
+    /// Active experts per rank under this decision's partition (paper §7:
+    /// EP step latency follows the max of these). Length = `ranks`.
+    pub fn per_rank_t(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.ranks.max(1)];
+        for &e in &self.active {
+            out[crate::moe::ep::rank_of(e as usize, self.n, self.ranks.max(1))] += 1;
+        }
+        out
+    }
+
+    /// Max per-rank activated experts — the EP latency driver. Equals
+    /// `t()` at `ranks = 1`.
+    pub fn max_rank_t(&self) -> usize {
+        self.per_rank_t().into_iter().max().unwrap_or(0)
+    }
+
+    pub(crate) fn from_masks(
         input: &RoutingInput,
         per_token: &[ExpertMask],
         union: &ExpertMask,
@@ -237,17 +310,23 @@ impl RoutingDecision {
             }
             sets.push(mask.to_vec());
         }
-        RoutingDecision { b, n, sets, combine, active: union.to_vec() }
+        RoutingDecision { b, n, sets, combine, active: union.to_vec(), ranks: 1 }
     }
 }
 
-fn is_live(input: &RoutingInput, i: usize) -> bool {
+pub(crate) fn is_live(input: &RoutingInput, i: usize) -> bool {
     !input.mask_padding || input.live[i]
 }
 
 /// Phase 1 of OEA: per-token baseline masks (batch independent).
 /// `n_i = min(k0, t_i)` where `t_i` is the top-p cutoff.
-fn phase1_masks(input: &RoutingInput, k0: usize, p: f64) -> (Vec<ExpertMask>, ExpertMask) {
+/// `pub(crate)` so the EP router (`moe::ep`) runs the *same* phase code —
+/// the structural guarantee behind its ranks=1 bitwise-identity pin.
+pub(crate) fn phase1_masks(
+    input: &RoutingInput,
+    k0: usize,
+    p: f64,
+) -> (Vec<ExpertMask>, ExpertMask) {
     let s = input.scores;
     let mut union = ExpertMask::new(s.n);
     let mut per_token = Vec::with_capacity(s.b);
@@ -269,8 +348,9 @@ fn phase1_masks(input: &RoutingInput, k0: usize, p: f64) -> (Vec<ExpertMask>, Ex
 /// Phase 2 of OEA: piggyback onto the baseline union. Walks each live
 /// token's preference list past its baseline, adding experts already in
 /// `S_base`, until the token holds `k_max` experts or rank `max_p` is
-/// reached. Never grows the union.
-fn phase2_piggyback(
+/// reached. Never grows the union. Shared with `moe::ep` (see
+/// [`phase1_masks`]).
+pub(crate) fn phase2_piggyback(
     input: &RoutingInput,
     per_token: &mut [ExpertMask],
     union: &ExpertMask,
@@ -334,6 +414,12 @@ pub fn route(policy: Policy, input: &RoutingInput) -> RoutingDecision {
             // no residency view (or an inert bias): exactly base OEA
             _ => route(Policy::OeaSimplified { k0, k }, input),
         },
+        Policy::Ep { k0, k, ranks, topup, alpha } => match input.resident {
+            Some(mask) if alpha != 0.0 => {
+                crate::moe::ep::route_ep_cache_aware(input, mask, k0, k, ranks, topup, alpha)
+            }
+            _ => crate::moe::ep::route_ep(input, k0, k, ranks, topup),
+        },
     }
 }
 
@@ -361,16 +447,7 @@ fn route_cache_aware(
     if n_res == 0 || n_res == s.n {
         return route(Policy::OeaSimplified { k0, k }, input);
     }
-    let boost = 1.0 + alpha.max(0.0) as f32;
-    let mut sel = s.scores.clone();
-    for row in sel.chunks_exact_mut(s.n) {
-        for (e, v) in row.iter_mut().enumerate() {
-            if resident[e] {
-                *v *= boost;
-            }
-        }
-    }
-    let boosted = ScoreMatrix::new(s.b, s.n, sel);
+    let boosted = boosted_scores(s, resident, alpha);
     let binput = RoutingInput {
         scores: &boosted,
         live: input.live,
@@ -381,6 +458,22 @@ fn route_cache_aware(
     phase2_piggyback(&binput, &mut per, &union, k, s.n);
     // combine from the ORIGINAL scores (Eq. 1 over each selected set)
     RoutingDecision::from_masks(input, &per, &union)
+}
+
+/// Selection scores with the residency boost applied:
+/// `s'(i,e) = s(i,e) · (1 + alpha)` for resident experts, raw otherwise.
+/// Shared by cache-aware OEA and cache-aware EP routing.
+pub(crate) fn boosted_scores(s: &ScoreMatrix, resident: &[bool], alpha: f64) -> ScoreMatrix {
+    let boost = 1.0 + alpha.max(0.0) as f32;
+    let mut sel = s.scores.clone();
+    for row in sel.chunks_exact_mut(s.n) {
+        for (e, v) in row.iter_mut().enumerate() {
+            if resident[e] {
+                *v *= boost;
+            }
+        }
+    }
+    ScoreMatrix::new(s.b, s.n, sel)
 }
 
 /// Lynx (subtractive): start from the vanilla top-k union, drop the
@@ -687,6 +780,51 @@ mod tests {
             Policy::CacheAware { k0: 4, k: 8, alpha: 0.5 }
         );
         assert_eq!(p("cache-aware"), Policy::CacheAware { k0: 8, k: 8, alpha: 1.0 });
+        assert_eq!(
+            p("ep:k0=4,ranks=4,topup=1"),
+            Policy::Ep { k0: 4, k: 8, ranks: 4, topup: 1, alpha: 0.0 }
+        );
+        assert_eq!(
+            p("ep:k0=4,ranks=8,alpha=0.5"),
+            Policy::Ep { k0: 4, k: 8, ranks: 8, topup: 0, alpha: 0.5 }
+        );
+        assert_eq!(p("ep"), Policy::Ep { k0: 8, k: 8, ranks: 1, topup: 0, alpha: 0.0 });
+    }
+
+    #[test]
+    fn from_cli_unknown_name_enumerates_valid_specs() {
+        // regression (ISSUE 5 satellite): the top-level name error must be
+        // as loud as the unknown-key error — it enumerates every valid
+        // policy spec, not just the bare names
+        for spec in ["nope", "EP:k0=4", "oae:k0=3"] {
+            let err = Policy::from_cli(spec, 8, 128).unwrap_err().to_string();
+            for expected in [
+                "vanilla[:k=K]",
+                "pruned:k0=K0[,p=P]",
+                "oea:k0=K0[,k=K]",
+                "oea-full:k0=K0,p=P,kmax=KM,maxp=MP",
+                "lynx:t=T[,k=K]",
+                "dynskip:tau=TAU[,k=K]",
+                "expert-choice:cap=C",
+                "cache-aware:k0=K0[,k=K,alpha=A]",
+                "ep:k0=K0,ranks=R[,k=K,topup=T,alpha=A]",
+            ] {
+                assert!(
+                    err.contains(expected),
+                    "{spec}: error must list {expected:?}, got {err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_cli_ep_validates_ranks_and_alpha() {
+        assert!(Policy::from_cli("ep:ranks=0", 8, 128).is_err());
+        assert!(Policy::from_cli("ep:ranks=129", 8, 128).is_err());
+        assert!(Policy::from_cli("ep:alpha=-1", 8, 128).is_err());
+        assert!(Policy::from_cli("ep:rank=4", 8, 128).is_err()); // typo'd key
+        assert_eq!(Policy::from_cli("ep:ranks=4", 8, 128).unwrap().ranks(), 4);
+        assert_eq!(Policy::from_cli("vanilla", 8, 128).unwrap().ranks(), 1);
     }
 
     #[test]
@@ -745,6 +883,7 @@ mod tests {
             Policy::DynSkip { k: 2, tau: 0.5 },
             Policy::ExpertChoice { capacity: 2 },
             Policy::CacheAware { k0: 1, k: 3, alpha: 0.7 },
+            Policy::Ep { k0: 1, k: 3, ranks: 4, topup: 1, alpha: 0.7 },
         ] {
             let resident = vec![true, false, true, false, true, false, true, false];
             let d = route(

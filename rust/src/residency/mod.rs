@@ -54,7 +54,12 @@ impl ResidencyConfig {
 /// bench JSON surface.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ResidencyStats {
-    /// configured capacity (experts per layer)
+    /// Effective capacity (experts per layer): the bound the sets
+    /// actually enforce, so `resident <= capacity * layers` always
+    /// holds. Equals the configured capacity clamped to `[1, n_experts]`
+    /// on a single-rank backend; under EP sharding the per-rank split
+    /// rounds up (`ceil(C/R)` each, bounded by shard size), which can
+    /// exceed the configured C when R does not divide it.
     pub capacity: usize,
     pub n_experts: usize,
     pub evict: EvictPolicy,

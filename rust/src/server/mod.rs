@@ -555,6 +555,69 @@ fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
     if let Some(rs) = engine.runner.backend.residency_stats() {
         pairs.push(("residency", residency_json(&rs)));
     }
+    // expert parallelism: per-rank load shares, the max-rank latency
+    // driver, a rank-imbalance gauge, and (with an expert cache) each
+    // rank's own residency counters
+    if engine.runner.backend.ep_ranks() > 1 {
+        pairs.push(("ep", ep_json(engine)));
+    }
+    Json::obj(pairs)
+}
+
+/// The `/metrics` expert-parallelism block (backends with `ep_ranks > 1`).
+///
+/// `imbalance` is max-rank load over mean-rank load (1.0 = perfectly
+/// balanced; 0 before any traffic) — the gauge an operator watches to see
+/// whether routing keeps the rank shards evenly busy, since EP step
+/// latency follows the busiest rank.
+fn ep_json<B: Backend>(engine: &Engine<B>) -> Json {
+    let ranks = engine.runner.backend.ep_ranks();
+    let n = engine.runner.cfg().n_experts;
+    let n_layers = engine.runner.cfg().n_layers;
+    let mut pairs = vec![
+        ("ranks", Json::num(ranks as f64)),
+        ("avg_max_rank_t", Json::num(engine.moe.avg_max_rank_t())),
+    ];
+    if let Some(loads) = engine.runner.backend.expert_loads() {
+        let mut rank_load = vec![0u64; ranks];
+        for (e, &x) in loads.iter().enumerate() {
+            rank_load[crate::moe::ep::rank_of(e, n, ranks)] += x;
+        }
+        pairs.push((
+            "rank_load",
+            Json::arr(rank_load.iter().map(|&x| Json::num(x as f64)).collect()),
+        ));
+        pairs.push(("imbalance", Json::num(crate::util::stats::imbalance(&rank_load))));
+    }
+    // per-rank residency: counters summed over layers, one entry per rank
+    if engine.runner.backend.residency_rank_counters(0).is_some() {
+        let mut per_rank = vec![crate::residency::ResidencyCounters::default(); ranks];
+        for l in 0..n_layers {
+            if let Some(rcs) = engine.runner.backend.residency_rank_counters(l) {
+                for (acc, c) in per_rank.iter_mut().zip(rcs.iter()) {
+                    acc.add(c);
+                }
+            }
+        }
+        pairs.push((
+            "rank_residency",
+            Json::arr(
+                per_rank
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("hits", Json::num(c.hits as f64)),
+                            ("misses", Json::num(c.misses as f64)),
+                            ("hit_rate", Json::num(c.hit_rate())),
+                            ("evictions", Json::num(c.evictions as f64)),
+                            ("bytes_paged", Json::num(c.bytes_paged as f64)),
+                            ("prefetches", Json::num(c.prefetches as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
     Json::obj(pairs)
 }
 

@@ -36,6 +36,20 @@ pub fn se_adjusted_worse(mu: f64, se: f64, mu_ref: f64, se_ref: f64) -> bool {
     mu + se < mu_ref - se_ref
 }
 
+/// Max-over-mean imbalance of per-bucket counts (the EP rank-balance
+/// gauge): 1.0 = perfectly even, up to `len` when one bucket holds
+/// everything, 0.0 for an empty or all-zero slice (no traffic yet). One
+/// shared definition so `/metrics`, the EP bench JSON, and the example
+/// can never drift.
+pub fn imbalance(per_bucket: &[u64]) -> f64 {
+    let total: u64 = per_bucket.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let max = per_bucket.iter().copied().max().unwrap_or(0);
+    max as f64 / (total as f64 / per_bucket.len() as f64)
+}
+
 /// Percentile via linear interpolation (p in [0, 100]); xs need not be sorted.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
@@ -274,5 +288,15 @@ mod tests {
         }
         assert!((w.mean() - mean(&xs)).abs() < 1e-12);
         assert!((w.variance() - variance(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_gauge() {
+        assert_eq!(imbalance(&[]), 0.0);
+        assert_eq!(imbalance(&[0, 0]), 0.0);
+        assert_eq!(imbalance(&[5, 5, 5, 5]), 1.0);
+        // one bucket holds everything: max/mean = len
+        assert_eq!(imbalance(&[12, 0, 0, 0]), 4.0);
+        assert!((imbalance(&[3, 1]) - 1.5).abs() < 1e-12);
     }
 }

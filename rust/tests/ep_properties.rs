@@ -1,0 +1,312 @@
+//! Property suites for the §7 expert-parallel extension: the `route_ep`
+//! algorithmic invariants (ISSUE 5 satellite — previously untested beyond
+//! one example) and the executed EP path's end-to-end equivalences
+//! (rank-sharded execution and `ranks = 1` pinned bitwise-identical to
+//! the single-rank grouped-dispatch path, including logits).
+
+use oea_serve::backend::cpu::{CpuBackend, CpuOptions, DispatchMode};
+use oea_serve::backend::Backend;
+use oea_serve::config::ModelConfig;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::ep::{rank_of, rank_span, route_ep};
+use oea_serve::moe::policy::{route, Policy, RoutingInput};
+use oea_serve::moe::ScoreMatrix;
+use oea_serve::residency::{EvictPolicy, ResidencyConfig};
+use oea_serve::util::proptest::check;
+use oea_serve::util::rng::Rng;
+
+/// Random softmax-ish score matrix with concentration like a real router.
+fn random_scores(rng: &mut Rng, b: usize, n: usize) -> ScoreMatrix {
+    let mut scores = vec![0.0f32; b * n];
+    for i in 0..b {
+        let row = &mut scores[i * n..(i + 1) * n];
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (2.0 * rng.gaussian()).exp() as f32;
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    ScoreMatrix::new(b, n, scores)
+}
+
+fn random_input(rng: &mut Rng) -> (ScoreMatrix, Vec<bool>) {
+    let b = 1 + rng.below(24);
+    let n = [8, 16, 32, 64, 128][rng.below(5)];
+    let s = random_scores(rng, b, n);
+    let live: Vec<bool> = (0..b).map(|_| rng.bool(0.85)).collect();
+    (s, live)
+}
+
+// ---- route_ep algorithmic invariants -----------------------------------
+
+#[test]
+fn phase1_baseline_is_sharding_invariant() {
+    // quality must not depend on how experts are sharded: with no top-up,
+    // the active set (== the Phase-1 union; piggybacking never grows it)
+    // is identical across every rank count and equals global OEA's.
+    check("ep-sharding-invariant", 100, |rng| {
+        let (s, live) = random_input(rng);
+        let k0 = 1 + rng.below(4);
+        let k = k0 + rng.below(6);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let oea = route(Policy::OeaSimplified { k0, k }, &input);
+        for ranks in [1usize, 2, 4, 8] {
+            let d = route_ep(&input, k0, k, ranks, 0);
+            assert_eq!(
+                d.active, oea.active,
+                "ranks={ranks}: the Phase-1 baseline union moved with the sharding"
+            );
+        }
+    });
+}
+
+#[test]
+fn rank_unions_stay_within_rank_expert_sets() {
+    // the per-rank decomposition is a true partition: every expert of
+    // rank r's slice of the union lives in rank r's shard, per-token sets
+    // stay inside the union, and the per-rank counts sum to T
+    check("ep-rank-partition", 100, |rng| {
+        let (s, live) = random_input(rng);
+        let ranks = [2usize, 4, 8][rng.below(3)];
+        let topup = rng.below(3);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let d = route_ep(&input, 2, 6, ranks, topup);
+        assert_eq!(d.ranks, ranks);
+        let per_rank = d.per_rank_t();
+        assert_eq!(per_rank.iter().sum::<usize>(), d.t(), "rank counts must partition T");
+        // reconstruct each rank's union from the token sets: it must fall
+        // inside the rank's expert-id span
+        for r in 0..ranks {
+            let (e0, e1) = rank_span(r, s.n, ranks);
+            let mut union_r: Vec<u16> = Vec::new();
+            for set in &d.sets {
+                for &e in set {
+                    if rank_of(e as usize, s.n, ranks) == r && !union_r.contains(&e) {
+                        union_r.push(e);
+                    }
+                }
+            }
+            for &e in &union_r {
+                assert!(
+                    (e0..e1).contains(&(e as usize)),
+                    "rank {r} union holds expert {e} outside its shard [{e0}, {e1})"
+                );
+                assert!(d.active.contains(&e), "piggyback grew the union");
+            }
+            assert!(union_r.len() <= per_rank[r]);
+        }
+    });
+}
+
+#[test]
+fn max_rank_t_never_exceeds_vanilla() {
+    // k0 < k: every token's Phase-1 baseline is a prefix of its vanilla
+    // top-k, so the union (and each rank's slice of it) is a subset of
+    // vanilla's — max-rank active experts can only shrink
+    check("ep-max-rank-vs-vanilla", 100, |rng| {
+        let (s, live) = random_input(rng);
+        let k = 2 + rng.below(7);
+        let k0 = 1 + rng.below(k - 1);
+        let ranks = [2usize, 4, 8][rng.below(3)];
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let mut vanilla = route(Policy::Vanilla { k }, &input);
+        vanilla.ranks = ranks; // impose the same partition for comparison
+        let ep = route_ep(&input, k0, k, ranks, 0);
+        assert!(
+            ep.max_rank_t() <= vanilla.max_rank_t(),
+            "max-rank T {} exceeded vanilla's {} (ranks={ranks}, k0={k0}, k={k})",
+            ep.max_rank_t(),
+            vanilla.max_rank_t()
+        );
+        assert!(ep.max_rank_t() <= vanilla.t(), "max-rank T exceeded vanilla's total T");
+    });
+}
+
+#[test]
+fn topup_only_grows_underloaded_ranks() {
+    check("ep-topup-underloaded", 100, |rng| {
+        let (s, live) = random_input(rng);
+        let k0 = 1 + rng.below(3);
+        let k = k0 + 2 + rng.below(4);
+        let ranks = [2usize, 4, 8][rng.below(3)];
+        let topup = 1 + rng.below(3);
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let base = route_ep(&input, k0, k, ranks, 0);
+        let topped = route_ep(&input, k0, k, ranks, topup);
+        let base_t = base.per_rank_t();
+        let top_t = topped.per_rank_t();
+        // the base union is exactly the Phase-1 union, so its per-rank
+        // average is the threshold the top-up loop compared against
+        let avg = base.t() as f64 / ranks as f64;
+        for r in 0..ranks {
+            assert!(top_t[r] >= base_t[r], "top-up shrank rank {r}");
+            if top_t[r] > base_t[r] {
+                assert!(
+                    (base_t[r] as f64) < avg,
+                    "rank {r} grew ({} -> {}) despite being at/above the average {avg:.2}",
+                    base_t[r],
+                    top_t[r]
+                );
+            }
+        }
+        // the union only ever gains experts
+        for e in &base.active {
+            assert!(topped.active.contains(e), "top-up dropped expert {e}");
+        }
+    });
+}
+
+// ---- executed EP path: end-to-end equivalences --------------------------
+
+/// Drive `steps` greedy decode steps and return (per-step logits,
+/// per-step per-rank telemetry `(t, load, rank_t, rank_load)`).
+type DriveTelemetry = Vec<(usize, usize, Vec<usize>, Vec<usize>)>;
+
+fn drive<B: Backend>(
+    runner: &ModelRunner<B>,
+    pol: Policy,
+    bucket: usize,
+    steps: usize,
+) -> (Vec<Vec<f32>>, DriveTelemetry) {
+    let c = runner.cfg().clone();
+    let mut batch = runner.new_batch(bucket).unwrap();
+    let live = vec![true; bucket];
+    let mut tokens: Vec<i32> = (0..bucket).map(|i| 3 + (i as i32 * 97) % 500).collect();
+    let mut logits_per_step = Vec::new();
+    let mut telemetry = Vec::new();
+    for step in 0..steps {
+        let pos: Vec<i32> = vec![step as i32; bucket];
+        let out = runner
+            .decode_step(&mut batch, &tokens, &pos, &live, pol, true)
+            .unwrap();
+        for ls in &out.layers {
+            telemetry.push((ls.t, ls.load, ls.rank_t.clone(), ls.rank_load.clone()));
+        }
+        // greedy argmax keeps the trace deterministic
+        for (i, t) in tokens.iter_mut().enumerate() {
+            let row = &out.logits[i * c.vocab..(i + 1) * c.vocab];
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            *t = best as i32;
+        }
+        logits_per_step.push(out.logits);
+    }
+    (logits_per_step, telemetry)
+}
+
+fn backend_ep(cfg: &ModelConfig, ep_ranks: usize) -> CpuBackend {
+    CpuBackend::synthetic_with(
+        cfg.clone(),
+        0,
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, residency: None, ep_ranks },
+    )
+}
+
+#[test]
+fn ranks_one_is_bitwise_identical_to_single_rank_path() {
+    // ISSUE acceptance: `ranks = 1` pins bitwise to the existing
+    // single-rank grouped-dispatch path end to end, logits included —
+    // same weights, same traffic, OEA vs Ep{ranks: 1} (any topup: at one
+    // rank the union is never below its own average, so top-up is inert)
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let oea = ModelRunner::new(backend_ep(&cfg, 1));
+    let (logits_a, tel_a) = drive(&oea, Policy::OeaSimplified { k0: 1, k: 2 }, 4, 12);
+    for topup in [0usize, 2] {
+        let ep = ModelRunner::new(backend_ep(&cfg, 1));
+        let (logits_b, tel_b) = drive(
+            &ep,
+            Policy::Ep { k0: 1, k: 2, ranks: 1, topup, alpha: 0.0 },
+            4,
+            12,
+        );
+        assert_eq!(tel_a, tel_b, "topup={topup}: telemetry diverged");
+        assert_eq!(logits_a, logits_b, "topup={topup}: logits diverged bitwise");
+    }
+    // and the single-rank accounting degenerates correctly
+    for (t, load, rank_t, rank_load) in tel_a {
+        assert_eq!(rank_t, vec![t]);
+        assert_eq!(rank_load, vec![load]);
+    }
+}
+
+#[test]
+fn rank_sharded_execution_is_transparent() {
+    // with topup=0 the Ep decision equals OEA's regardless of rank count,
+    // so executing it over 4 panel shards must reproduce the single-rank
+    // backend's logits bitwise (threads=1: same ascending-expert order)
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let single = ModelRunner::new(backend_ep(&cfg, 1));
+    let (logits_a, tel_a) = drive(&single, Policy::OeaSimplified { k0: 1, k: 2 }, 4, 12);
+    let sharded = ModelRunner::new(backend_ep(&cfg, 4));
+    let (logits_b, tel_b) = drive(
+        &sharded,
+        Policy::Ep { k0: 1, k: 2, ranks: 4, topup: 0, alpha: 0.0 },
+        4,
+        12,
+    );
+    assert_eq!(logits_a, logits_b, "rank-sharded execution changed the logits");
+    // per-rank accounting partitions the single-rank totals
+    assert_eq!(tel_a.len(), tel_b.len());
+    for ((t, load, _, _), (t4, load4, rank_t, rank_load)) in
+        tel_a.iter().zip(tel_b.iter())
+    {
+        assert_eq!(t, t4);
+        assert_eq!(load, load4);
+        assert_eq!(rank_t.len(), 4);
+        assert_eq!(rank_t.iter().sum::<usize>(), *t);
+        assert_eq!(rank_load.iter().sum::<usize>(), *load);
+    }
+}
+
+#[test]
+fn ep_with_unbounded_residency_is_bitwise_identical() {
+    // ISSUE acceptance: `ep` + unbounded residency == the plain EP path,
+    // bitwise including logits — per-rank capacity covers every shard, so
+    // the view is withheld (routing identical) and lazily-paged panels
+    // hold the same bytes as the eager shard pack (execution identical)
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let plain = ModelRunner::new(backend_ep(&cfg, 4));
+    let pol = Policy::Ep { k0: 1, k: 2, ranks: 4, topup: 1, alpha: 1.0 };
+    let (logits_a, tel_a) = drive(&plain, pol, 4, 12);
+    let cached = ModelRunner::new(CpuBackend::synthetic_with(
+        cfg.clone(),
+        0,
+        CpuOptions {
+            dispatch: DispatchMode::Grouped,
+            threads: 1,
+            residency: Some(ResidencyConfig::new(cfg.n_experts, EvictPolicy::Lru, 0)),
+            ep_ranks: 4,
+        },
+    ));
+    let (logits_b, tel_b) = drive(&cached, pol, 4, 12);
+    assert_eq!(tel_a, tel_b, "unbounded residency changed EP routing");
+    assert_eq!(logits_a, logits_b, "unbounded residency changed EP logits");
+    // non-vacuity: the cached run really paged panels in
+    let stats = Backend::residency_stats(&cached.backend).unwrap();
+    assert!(stats.counters.misses > 0, "no panel was ever paged — weak test");
+    assert_eq!(stats.counters.evictions, 0, "unbounded caches must never evict");
+}
+
+#[test]
+fn vanilla_on_sharded_backend_reports_per_rank_accounting() {
+    // per-rank telemetry is an execution-axis property, not a policy
+    // property: vanilla routing on a rank-sharded backend still accounts
+    // per rank (the EP bench's baseline arm)
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let runner = ModelRunner::new(backend_ep(&cfg, 4));
+    let (_, tel) = drive(&runner, Policy::Vanilla { k: 2 }, 4, 6);
+    assert!(!tel.is_empty());
+    for (t, load, rank_t, rank_load) in tel {
+        assert_eq!(rank_t.len(), 4);
+        assert_eq!(rank_load.len(), 4);
+        assert_eq!(rank_t.iter().sum::<usize>(), t);
+        assert_eq!(rank_load.iter().sum::<usize>(), load);
+    }
+}

@@ -218,7 +218,7 @@ fn grouped_dispatch_bitwise_unchanged_by_residency_bookkeeping() {
     let plain = CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, residency: None },
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, residency: None, ep_ranks: 1 },
     );
     let cached: Vec<CpuBackend> = [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::ScoreAware]
         .into_iter()
@@ -230,6 +230,7 @@ fn grouped_dispatch_bitwise_unchanged_by_residency_bookkeeping() {
                     dispatch: DispatchMode::Grouped,
                     threads: 1,
                     residency: Some(ResidencyConfig::new(2, evict, 0)),
+                    ep_ranks: 1,
                 },
             )
         })
@@ -321,7 +322,7 @@ fn infinite_capacity_cache_aware_is_decision_identical_to_oea() {
     let oea_backend = CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, residency: None },
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, residency: None, ep_ranks: 1 },
     );
     let ca_backend = CpuBackend::synthetic_with(
         cfg.clone(),
@@ -330,6 +331,7 @@ fn infinite_capacity_cache_aware_is_decision_identical_to_oea() {
             dispatch: DispatchMode::Grouped,
             threads: 1,
             residency: Some(ResidencyConfig::new(cfg.n_experts, EvictPolicy::Lru, 0)),
+            ep_ranks: 1,
         },
     );
     let oea = ModelRunner::new(oea_backend);
@@ -362,6 +364,7 @@ fn bounded_cache_aware_beats_vanilla_hit_rate_end_to_end() {
                 dispatch: DispatchMode::Grouped,
                 threads: 1,
                 residency: Some(policy_residency),
+                ep_ranks: 1,
             },
         )
     };

@@ -304,11 +304,11 @@ fn ep_routing_union_consistency() {
         let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
         let d = oea_serve::moe::ep::route_ep(&input, 2, 6, ranks, 0);
         assert_eq!(
-            d.per_rank_t.iter().sum::<usize>(),
-            d.inner.t(),
+            d.per_rank_t().iter().sum::<usize>(),
+            d.t(),
             "per-rank counts must partition T"
         );
-        assert!(d.max_rank_t() * ranks >= d.inner.t());
+        assert!(d.max_rank_t() * ranks >= d.t());
     });
 }
 
@@ -323,6 +323,9 @@ fn policy_cli_roundtrip() {
         "lynx:t=16",
         "dynskip:tau=0.3",
         "expert-choice:cap=2",
+        "cache-aware:k0=4,alpha=0.5",
+        "ep:k0=4,ranks=4,topup=1",
+        "ep:k0=4,ranks=8,alpha=0.5",
     ] {
         let p = Policy::from_cli(spec, 8, 128).unwrap();
         let _ = p.label();
