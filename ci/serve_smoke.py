@@ -16,7 +16,14 @@ backend and exercise the serving contract end to end:
   5. a second boot with --ep-ranks 4 + an expert cache and the ep: policy
      asserts the per-rank metrics surface: the ep block's rank count,
      per-rank expert_load partition, the rank-imbalance gauge, per-rank
-     residency counters, and the max-rank-T gauge.
+     residency counters, and the max-rank-T gauge;
+  6. a third boot (default continuous scheduler) driven past capacity
+     with mixed short/long prompts: long prompts need several prefill
+     chunks, the running set recomposes every few steps, and the checks
+     assert streaming token order survives recomposition, the /metrics
+     scheduler block reports it (mode=continuous, recompositions > 0,
+     prefill_chunks > 0), the v1 schema rejects unknown fields with a
+     400 naming the field, and the drain still exits 0.
 
 Usage: python3 ci/serve_smoke.py <path-to-oea-serve-binary>
 """
@@ -90,6 +97,112 @@ def main():
     except BaseException:
         proc.kill()
         raise
+
+    # -- phase 6: continuous batching under mixed-length overflow --------
+    ACTIVE_PORT = PORT + 2
+    proc = subprocess.Popen([
+        binary, "serve", "--config", "smoke",
+        "--policy", "oea:k0=2",
+        "--max-running", "2", "--max-queue", "4", "--http-workers", "12",
+        "--port", str(ACTIVE_PORT),
+    ])
+    try:
+        run_continuous_checks(proc)
+    except BaseException:
+        proc.kill()
+        raise
+
+
+def run_continuous_checks(proc):
+    wait_healthy(proc)
+
+    # schema guard first: an unknown field must 400 and name the field
+    status, _, body = post_json("/generate", {
+        "prompt": "typo'd payload", "max_token": 4,
+    })
+    check(status == 400 and "max_token" in body,
+          f"continuous: unknown field rejected with 400 naming it ({status})")
+
+    # overflow burst: every 3rd prompt is long enough to need several
+    # prefill chunks (smoke prefill_chunk=16, byte-level tokenizer), the
+    # rest are short — so admissions, mid-prefill parking, and retirement
+    # keep recomposing the running set while the tiny queue overflows
+    n_burst = 12
+    results = [None] * n_burst
+    barrier = threading.Barrier(n_burst)
+
+    def fire(i):
+        if i % 3 == 0:
+            prompt = ("the river wound through the valley " * 3)[:40]
+            max_tokens = 12
+        else:
+            prompt = f"short ask {i}"
+            max_tokens = 6
+        barrier.wait()
+        results[i] = post_json("/generate", {
+            "prompt": prompt, "max_tokens": max_tokens,
+        })
+
+    threads = [threading.Thread(target=fire, args=(i,)) for i in range(n_burst)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    ok = [r for r in results if r[0] == 200]
+    rejected = [r for r in results if r[0] == 429]
+    check(len(ok) >= 3, f"continuous: {len(ok)} mixed requests succeeded")
+    check(len(ok) + len(rejected) == n_burst,
+          f"continuous: only 200/429 statuses (got {[r[0] for r in results]})")
+
+    # streaming order survives recomposition: interleave a streaming
+    # client with one more long request so the stream's sequence gets
+    # parked and resumed around the other's prefill chunks
+    bg = threading.Thread(target=lambda: post_json("/generate", {
+        "prompt": ("chunked prefill rides along while a stream decodes "
+                   "tokens")[:40], "max_tokens": 8,
+    }))
+    c = conn()
+    c.request("POST", "/generate", body=json.dumps({
+        "prompt": "stream across recompositions", "max_tokens": 10,
+        "stream": True,
+    }), headers={"Content-Type": "application/json"})
+    bg.start()
+    r = c.getresponse()
+    check(r.status == 200, "continuous: streaming request accepted")
+    lines = [json.loads(l) for l in r.read().decode().splitlines() if l.strip()]
+    c.close()
+    bg.join()
+    token_lines = [l for l in lines if "done" not in l]
+    check([l["index"] for l in token_lines] == list(range(len(token_lines)))
+          and len(token_lines) == 10,
+          f"continuous: stream indexes ordered across recomposition "
+          f"({len(token_lines)} tokens)")
+
+    # the scheduler block must prove continuous batching actually ran
+    c = conn()
+    c.request("GET", "/metrics")
+    r = c.getresponse()
+    m = json.loads(r.read().decode())
+    c.close()
+    sched = m["scheduler"]
+    check(sched["mode"] == "continuous",
+          f"scheduler.mode is continuous ({sched['mode']})")
+    check(sched["recompositions"] > 0,
+          f"scheduler recomposed the batch ({sched['recompositions']}x)")
+    check(sched["prefill_chunks"] > 0 and sched["prefill_tokens"] > 0,
+          f"scheduler ran chunked prefill ({sched['prefill_chunks']} chunks, "
+          f"{sched['prefill_tokens']} tokens)")
+    check(sched["decode_steps"] > 0 and 0 < sched["avg_live_b"] <= sched["max_live_b"],
+          f"scheduler live-B telemetry well-formed (avg {sched['avg_live_b']:.2f}, "
+          f"max {sched['max_live_b']})")
+
+    status, _, body = post_json("/shutdown", {})
+    check(status == 200 and json.loads(body)["status"] == "draining",
+          "continuous: shutdown acknowledged")
+    rc = proc.wait(timeout=120)
+    check(rc == 0, f"continuous: server exited cleanly (rc={rc})")
+    print("serve-smoke: all continuous-batching checks passed")
 
 
 def run_ep_checks(proc):

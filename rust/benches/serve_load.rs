@@ -19,6 +19,13 @@
 //! percentiles scraped from /metrics. Emits `BENCH_serve_load.json` with
 //! requests/s plus p50/p95/p99 queue-wait, TTFT and TPOT per policy.
 //!
+//! A final **scheduler-compare** phase drives a mixed short/long-prompt
+//! workload at an overload open-loop rate against the lockstep oracle
+//! and the continuous scheduler (ISSUE 6): continuous must sustain a
+//! higher completed rate at equal-or-better p99 TTFT, because long
+//! prompts prefill in bounded chunks instead of head-of-line-blocking
+//! the whole decode batch. Emitted under `sched_compare`.
+//!
 //!     cargo bench --bench serve_load
 //!     cargo bench --bench serve_load -- --smoke   # CI tier
 
@@ -29,10 +36,10 @@ use std::time::{Duration, Instant};
 
 use oea_serve::backend::cpu::CpuBackend;
 use oea_serve::config::ModelConfig;
-use oea_serve::coordinator::{Engine, EngineConfig};
+use oea_serve::coordinator::{Engine, EngineConfig, SchedMode};
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
-use oea_serve::moe::policy::Policy;
+use oea_serve::moe::policy::PolicySpec;
 use oea_serve::server::http::{read_chunk, read_response};
 use oea_serve::server::{self, ServeOptions};
 use oea_serve::util::bench::{fmt1, BenchOpts, Table};
@@ -133,9 +140,13 @@ fn generate_stream(addr: SocketAddr, prompt: &str, max_tokens: usize) -> ClientR
 fn boot_server(
     policy_spec: &str,
     cfg: &ModelConfig,
+    sched: SchedMode,
 ) -> (SocketAddr, std::thread::JoinHandle<oea_serve::Result<()>>) {
     let cfg = cfg.clone();
-    let policy = Policy::from_cli(policy_spec, cfg.top_k, cfg.n_experts).unwrap();
+    let policy = PolicySpec::parse(policy_spec)
+        .unwrap()
+        .build(cfg.top_k, cfg.n_experts)
+        .unwrap();
     let (ready_tx, ready_rx) = mpsc::channel();
     let handle = std::thread::spawn(move || {
         let cost = H100Presets::for_config(&cfg.name);
@@ -144,12 +155,10 @@ fn boot_server(
                 Engine::new(
                     ModelRunner::new(CpuBackend::synthetic(cfg, 0)),
                     EngineConfig {
-                        policy,
-                        mask_padding: true,
                         max_running: MAX_RUNNING,
                         max_queue: MAX_QUEUE,
-                        eos_token: None,
-                        cost_model: cost,
+                        sched,
+                        ..EngineConfig::new(policy, cost)
                     },
                 )
             },
@@ -166,6 +175,23 @@ fn boot_server(
 
 fn prompt_for(i: usize) -> String {
     format!("load client {i}: river {}", i * 7 % 13)
+}
+
+/// Mixed workload for the scheduler compare: every third request carries
+/// a long (~200-token under the byte-level tokenizer) prompt, the rest
+/// stay short. Long prompts are what head-of-line-block a lockstep
+/// scheduler — they span multiple prefill chunks.
+fn mixed_prompt_for(i: usize) -> String {
+    if i % 3 == 0 {
+        let mut p = format!("long client {i}: ");
+        while p.len() < 200 {
+            p.push_str("the river wound through the valley ");
+        }
+        p.truncate(200);
+        p
+    } else {
+        prompt_for(i)
+    }
 }
 
 /// Closed loop: `clients` workers, `per_client` back-to-back requests
@@ -197,12 +223,14 @@ fn closed_loop(
 }
 
 /// Open loop: `n` requests launched at a fixed `interval` regardless of
-/// completions (arrival rate = 1000/interval_ms req/s).
+/// completions (arrival rate = 1000/interval_ms req/s). `prompt` maps
+/// the request index to its prompt text.
 fn open_loop(
     addr: SocketAddr,
     n: usize,
     interval: Duration,
     max_tokens: usize,
+    prompt: fn(usize) -> String,
 ) -> (Vec<ClientResult>, f64) {
     let t0 = Instant::now();
     let (rtx, rrx) = mpsc::channel();
@@ -210,7 +238,7 @@ fn open_loop(
     for i in 0..n {
         let rtx = rtx.clone();
         workers.push(std::thread::spawn(move || {
-            let _ = rtx.send(generate_stream(addr, &prompt_for(i), max_tokens));
+            let _ = rtx.send(generate_stream(addr, &prompt(i), max_tokens));
         }));
         std::thread::sleep(interval);
     }
@@ -243,10 +271,11 @@ fn run_workload(
     policy_spec: &str,
     cfg: &ModelConfig,
     workload: &str,
+    sched: SchedMode,
     run: impl FnOnce(SocketAddr) -> (Vec<ClientResult>, f64),
     expected: usize,
 ) -> WorkloadSummary {
-    let (addr, handle) = boot_server(policy_spec, cfg);
+    let (addr, handle) = boot_server(policy_spec, cfg, sched);
     let (results, wall_s) = run(addr);
 
     let mut e2e = Vec::new();
@@ -273,6 +302,7 @@ fn run_workload(
     s.write_all(b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
     let metrics = Json::parse(&read_response(&mut s).unwrap().body).unwrap();
     let slo = metrics.get("slo").unwrap().clone();
+    let scheduler = metrics.get("scheduler").unwrap().clone();
     let server_ttft_p99_ms = slo.get("ttft_ms").unwrap().get("p99").unwrap().as_f64().unwrap();
 
     // graceful drain
@@ -295,6 +325,7 @@ fn run_workload(
         ("e2e_ms", slo.get("e2e_ms").unwrap().clone()),
         ("client_ttft_ms", pct_json(&ttft)),
         ("client_e2e_ms", pct_json(&e2e)),
+        ("scheduler", scheduler),
     ]);
     WorkloadSummary { json, requests_per_s, server_ttft_p99_ms }
 }
@@ -326,6 +357,7 @@ fn main() {
             spec,
             &cfg,
             "closed",
+            SchedMode::Continuous,
             |addr| closed_loop(addr, clients, per_client, max_tokens),
             clients * per_client,
         );
@@ -333,7 +365,16 @@ fn main() {
             spec,
             &cfg,
             "open",
-            |addr| open_loop(addr, open_n, Duration::from_millis(open_interval_ms), max_tokens),
+            SchedMode::Continuous,
+            |addr| {
+                open_loop(
+                    addr,
+                    open_n,
+                    Duration::from_millis(open_interval_ms),
+                    max_tokens,
+                    prompt_for,
+                )
+            },
             open_n,
         );
         for (name, w) in [("closed", &closed), ("open", &open)] {
@@ -362,6 +403,72 @@ fn main() {
             ("open_loop", open.json),
         ]));
     }
+    // ---- scheduler compare: lockstep oracle vs continuous batching ------
+    // Mixed short/long prompts at an overload open-loop rate — the regime
+    // where whole-prompt prefill head-of-line-blocks the decode batch and
+    // bursty slot turnover overflows the bounded queue.
+    let (cmp_n, cmp_interval_ms) = if opts.smoke { (30, 10u64) } else { (120, 8u64) };
+    println!(
+        "\n=== scheduler compare: mixed prompts, {cmp_n} requests at {:.0} req/s ===",
+        1000.0 / cmp_interval_ms as f64
+    );
+    let mut sched_entries = Vec::new();
+    let mut cmp: Vec<(SchedMode, f64, f64, f64)> = Vec::new(); // (mode, rps, ttft p99, completed)
+    for sched in [SchedMode::Lockstep, SchedMode::Continuous] {
+        let w = run_workload(
+            "oea:k0=4",
+            &cfg,
+            sched.label(),
+            sched,
+            |addr| {
+                open_loop(
+                    addr,
+                    cmp_n,
+                    Duration::from_millis(cmp_interval_ms),
+                    max_tokens,
+                    mixed_prompt_for,
+                )
+            },
+            cmp_n,
+        );
+        let p99 = |key: &str| w.json.get(key).unwrap().get("p99").unwrap().as_f64().unwrap();
+        table.row(vec![
+            "oea:k0=4".to_string(),
+            format!("mixed/{}", sched.label()),
+            fmt1(w.requests_per_s),
+            fmt1(p99("queue_wait_ms")),
+            fmt1(p99("ttft_ms")),
+            fmt1(p99("tpot_ms")),
+        ]);
+        let completed = w.json.get("completed").unwrap().as_f64().unwrap();
+        println!(
+            "{}: {:.1} req/s, {completed:.0}/{cmp_n} completed, server ttft p99 {:.1} ms",
+            sched.label(),
+            w.requests_per_s,
+            w.server_ttft_p99_ms,
+        );
+        cmp.push((sched, w.requests_per_s, w.server_ttft_p99_ms, completed));
+        sched_entries.push(Json::obj(vec![
+            ("sched", Json::str(sched.label())),
+            ("open_loop_mixed", w.json),
+        ]));
+    }
+    // Continuous must not lose requests the lockstep oracle completes:
+    // steady slot turnover keeps the bounded queue draining under the
+    // same offered load.
+    assert!(
+        cmp[1].3 >= cmp[0].3,
+        "continuous completed {} < lockstep {} under the same offered load",
+        cmp[1].3,
+        cmp[0].3
+    );
+    println!(
+        "continuous vs lockstep: {:.2}x req/s, ttft p99 {:.1} -> {:.1} ms",
+        cmp[1].1 / cmp[0].1,
+        cmp[0].2,
+        cmp[1].2
+    );
+
     table.print();
     if rps.len() == 2 {
         println!(
@@ -381,6 +488,15 @@ fn main() {
             ("closed_clients", Json::num(clients as f64)),
             ("open_offered_rps", Json::num(1000.0 / open_interval_ms as f64)),
             ("policies", Json::arr(policy_entries)),
+            (
+                "sched_compare",
+                Json::obj(vec![
+                    ("policy", Json::str("oea:k0=4")),
+                    ("n", Json::num(cmp_n as f64)),
+                    ("offered_rps", Json::num(1000.0 / cmp_interval_ms as f64)),
+                    ("runs", Json::arr(sched_entries)),
+                ]),
+            ),
         ]),
     )
     .unwrap();

@@ -50,12 +50,9 @@ fn run_variant(cfg: &ModelConfig, v: &Variant) -> (f64, f64, f64, Vec<u64>, Vec<
     let mut engine = Engine::new(
         runner,
         EngineConfig {
-            policy: v.policy,
-            mask_padding: true,
             max_running: B,
             max_queue: usize::MAX,
-            eos_token: None,
-            cost_model: H100Presets::qwen3_235b_tp8(),
+            ..EngineConfig::new(v.policy, H100Presets::qwen3_235b_tp8())
         },
     )
     .unwrap();
@@ -74,7 +71,9 @@ fn run_variant(cfg: &ModelConfig, v: &Variant) -> (f64, f64, f64, Vec<u64>, Vec<
             temperature: 0.0,
             top_p: 1.0,
             seed: i as u64,
-        });
+            policy: None,
+        })
+        .unwrap();
     }
     engine.run_to_completion().unwrap();
 

@@ -33,18 +33,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let mut engine = Engine::new(
             runner,
             EngineConfig {
-                policy,
-                mask_padding: true,
                 max_running: 4,
                 max_queue: usize::MAX, // offline: the whole workload queues
-                eos_token: None,
-                cost_model: H100Presets::for_config(&cfg.name),
+                ..EngineConfig::new(policy, H100Presets::for_config(&cfg.name))
             },
         )?;
         println!("=== policy: {} ===", policy.label());
         for (i, p) in prompts.iter().enumerate() {
             let ids: Vec<i32> = tok.encode(p).iter().map(|&t| t as i32).collect();
-            engine.submit(GenRequest::greedy(i as u64, ids, 16));
+            engine.submit(GenRequest::greedy(i as u64, ids, 16))?;
         }
         let done = engine.run_to_completion()?;
         for f in &done {

@@ -15,7 +15,7 @@ use oea_serve::config::ModelConfig;
 use oea_serve::coordinator::{Engine, EngineConfig};
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
-use oea_serve::moe::policy::Policy;
+use oea_serve::moe::policy::PolicySpec;
 use oea_serve::server;
 use oea_serve::util::bpe::Tokenizer;
 use oea_serve::util::json::Json;
@@ -51,7 +51,9 @@ fn run_one(policy_spec: &str, port: u16) -> (f64, f64, Vec<f64>) {
     let server_thread = std::thread::spawn(move || {
         let tok = Tokenizer::byte_level();
         let cfg = ModelConfig::preset(&cfg_name()).unwrap();
-        let policy = Policy::from_cli(&spec, cfg.top_k, cfg.n_experts).unwrap();
+        let policy = PolicySpec::parse(&spec)
+            .and_then(|s| s.build(cfg.top_k, cfg.n_experts))
+            .unwrap();
         let cost = H100Presets::for_config(&cfg.name);
         server::serve(
             move || {
@@ -60,12 +62,9 @@ fn run_one(policy_spec: &str, port: u16) -> (f64, f64, Vec<f64>) {
                 Engine::new(
                     ModelRunner::new(CpuBackend::synthetic(cfg, 0)),
                     EngineConfig {
-                        policy,
-                        mask_padding: true,
                         max_running: 8,
                         max_queue: 64,
-                        eos_token: None,
-                        cost_model: cost,
+                        ..EngineConfig::new(policy, cost)
                     },
                 )
             },

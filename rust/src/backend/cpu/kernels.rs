@@ -313,6 +313,59 @@ pub fn decode_attention(
     out
 }
 
+/// Causal attention for a chunk of `C` consecutive prompt tokens that all
+/// live in ONE sequence slot (the chunked-prefill primitive): query row
+/// `j` holds position `pos0 + j` and attends the slot's cache prefix
+/// `0 ..= pos0 + j`. `k_slot`/`v_slot` are that slot's `[S, Hkv, hd]`
+/// cache slices (the chunk's own K/V must already be written). The
+/// per-(row, head) inner math — dot, scale, softmax over the visible
+/// prefix, weighted V sum — is copied from [`decode_attention_rows`]
+/// verbatim so a chunked prefill is bitwise-identical per row to the
+/// token-by-token decode-path prefill.
+pub fn chunk_attention_rows(
+    q: &[f32],
+    k_slot: &[f32],
+    v_slot: &[f32],
+    s_max: usize,
+    hq: usize,
+    hkv: usize,
+    hd: usize,
+    pos0: usize,
+    out: &mut [f32],
+    logits: &mut [f32],
+) {
+    let n_rep = hq / hkv;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let rows = out.len() / (hq * hd);
+    debug_assert!(logits.len() >= s_max);
+    debug_assert_eq!(k_slot.len(), s_max * hkv * hd);
+    debug_assert!(pos0 + rows <= s_max);
+    out.fill(0.0);
+    for j in 0..rows {
+        let visible = (pos0 + j + 1).min(s_max);
+        for h in 0..hq {
+            let kvh = h / n_rep;
+            let qrow = &q[(j * hq + h) * hd..(j * hq + h + 1) * hd];
+            for (s, l) in logits[..visible].iter_mut().enumerate() {
+                let krow = &k_slot[(s * hkv + kvh) * hd..][..hd];
+                let mut dot = 0.0f32;
+                for (qv, kv) in qrow.iter().zip(krow.iter()) {
+                    dot += qv * kv;
+                }
+                *l = dot * scale;
+            }
+            softmax_rows(&mut logits[..visible], visible);
+            let orow = &mut out[(j * hq + h) * hd..(j * hq + h + 1) * hd];
+            for (s, &p) in logits[..visible].iter().enumerate() {
+                let vrow = &v_slot[(s * hkv + kvh) * hd..][..hd];
+                for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                    *o += p * vv;
+                }
+            }
+        }
+    }
+}
+
 /// Gather-based grouped expert FFN (ref.moe_ffn_gathered), the
 /// correctness oracle for grouped dispatch: iterate the padded active
 /// list, `out += comb[:, e] * (silu(x@wg[e]) * (x@wu[e])) @ wd[e]`.

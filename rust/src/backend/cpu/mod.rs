@@ -529,6 +529,41 @@ impl CpuBackend {
         self.cfg.s_max * self.cfg.n_kv_heads * self.cfg.head_dim
     }
 
+    /// Residency: apply the lookahead predictions recorded at the
+    /// PREVIOUS step (see residency::prefetch) before this step's routing
+    /// decision and expert execution — the paged-in experts are resident
+    /// by the time routing and dispatch look. Shared by the decode path
+    /// (`layer_pre`) and chunked prefill; paging order never changes
+    /// panel bytes, so applying the wave per chunk instead of per token
+    /// cannot change any output.
+    fn apply_prefetch_wave(&self, l: usize) {
+        let Some(res) = &self.residency else { return };
+        let c = &self.cfg;
+        let lw = &self.layers[l];
+        let (d, h) = (c.d_model, c.d_expert);
+        let mut res = res.lock().unwrap();
+        let lr = &mut res[l];
+        // each rank applies its own prediction wave within its shard
+        for rr in lr.ranks.iter_mut() {
+            let pending = rr.prefetch.take_pending();
+            // wave protection: this step's predictions must not evict
+            // each other (admits are recency-silent, so wave-mates
+            // would otherwise be each other's "stalest" victims)
+            let mut wave: Vec<usize> = Vec::with_capacity(pending.len());
+            for le in pending {
+                let le = le as usize;
+                if let Some(evicted) = rr.set.admit_protecting(le, &wave) {
+                    if let Some(v) = evicted {
+                        rr.drop_panel(v);
+                    }
+                    rr.counters.prefetches += 1;
+                    rr.page_in(lw, le, d, h);
+                    wave.push(le);
+                }
+            }
+        }
+    }
+
     /// Decode attention over the updated cache, expert rows fanned out
     /// over the pool (per-row math is chunk-invariant, so any split is
     /// bitwise-identical to serial).
@@ -767,35 +802,7 @@ impl Backend for CpuBackend {
                 cache.bucket
             )));
         }
-        // residency: apply the lookahead predictions recorded at the
-        // PREVIOUS step (see residency::prefetch) before this step's
-        // routing decision and expert execution — the paged-in experts
-        // are resident by the time routing and dispatch look
-        if let Some(res) = &self.residency {
-            let lw = &self.layers[l];
-            let (d, h) = (c.d_model, c.d_expert);
-            let mut res = res.lock().unwrap();
-            let lr = &mut res[l];
-            // each rank applies its own prediction wave within its shard
-            for rr in lr.ranks.iter_mut() {
-                let pending = rr.prefetch.take_pending();
-                // wave protection: this step's predictions must not evict
-                // each other (admits are recency-silent, so wave-mates
-                // would otherwise be each other's "stalest" victims)
-                let mut wave: Vec<usize> = Vec::with_capacity(pending.len());
-                for le in pending {
-                    let le = le as usize;
-                    if let Some(evicted) = rr.set.admit_protecting(le, &wave) {
-                        if let Some(v) = evicted {
-                            rr.drop_panel(v);
-                        }
-                        rr.counters.prefetches += 1;
-                        rr.page_in(lw, le, d, h);
-                        wave.push(le);
-                    }
-                }
-            }
-        }
+        self.apply_prefetch_wave(l);
         let lw = &self.layers[l];
         let (d, qd, kvd) = (c.d_model, c.q_dim(), c.kv_dim());
         let (hq, hkv, hd) = (c.n_q_heads, c.n_kv_heads, c.head_dim);
@@ -1003,6 +1010,109 @@ impl Backend for CpuBackend {
             n_tokens: prompt.len(),
             last_logits,
         })
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    /// Chunked prefill straight into the decode cache: the whole chunk
+    /// runs each stage as ONE batched pass (`m = chunk` GEMMs instead of
+    /// `chunk` sequential `m = 1` passes — the continuous scheduler's
+    /// prefill win), with causal attention over the slot's cache prefix.
+    /// Every kernel accumulates per output row in the same order at any
+    /// `m`, so each row's result is bitwise-identical to the
+    /// token-by-token [`Backend::prefill`] path (the lockstep oracle).
+    fn prefill_chunk(
+        &self,
+        cache: &mut CpuKvCache,
+        slot: usize,
+        tokens: &[i32],
+        pos0: usize,
+    ) -> Result<Vec<f32>> {
+        let c = self.cfg.clone();
+        let b = cache.bucket;
+        let cn = tokens.len();
+        if slot >= b {
+            return Err(Error::Engine(format!("slot {slot} out of bucket {b}")));
+        }
+        if cn == 0 {
+            return Err(Error::Engine("empty prefill chunk".into()));
+        }
+        if pos0 + cn > c.s_max - 1 {
+            return Err(Error::Engine(format!(
+                "prefill chunk [{pos0}, {}) exceeds s_max-1 = {}",
+                pos0 + cn,
+                c.s_max - 1
+            )));
+        }
+        let (d, qd, kvd) = (c.d_model, c.q_dim(), c.kv_dim());
+        let (hq, hkv, hd) = (c.n_q_heads, c.n_kv_heads, c.head_dim);
+        let pos: Vec<i32> = (0..cn).map(|j| (pos0 + j) as i32).collect();
+        let row = self.row_len();
+        let half = b * row;
+
+        let mut hidden = self.embed(tokens)?;
+        // a prefill chunk has no padding rows — every row routes
+        let live = vec![true; cn];
+        for l in 0..c.n_layers {
+            self.apply_prefetch_wave(l);
+            let lw = &self.layers[l];
+            let mut h1 = self.scratch.take(cn * d);
+            kernels::rmsnorm_into(&hidden, &lw.n1, d, c.rms_eps, &mut h1);
+            let mut q = self.scratch.take(cn * qd);
+            let mut k = self.scratch.take(cn * kvd);
+            let mut v = self.scratch.take(cn * kvd);
+            kernels::matmul_into(&h1, &lw.wq, cn, d, qd, &mut q);
+            kernels::matmul_into(&h1, &lw.wk, cn, d, kvd, &mut k);
+            kernels::matmul_into(&h1, &lw.wv, cn, d, kvd, &mut v);
+            self.scratch.put(h1);
+            kernels::rope(&mut q, hq, hd, &pos, c.rope_theta);
+            kernels::rope(&mut k, hkv, hd, &pos, c.rope_theta);
+
+            // the whole chunk's K/V lands in the slot's cache rows BEFORE
+            // attention reads (write-before-read, like the decode path)
+            let cl = &mut cache.layers[l];
+            for j in 0..cn {
+                let dst = slot * row + (pos0 + j) * kvd;
+                cl[dst..dst + kvd].copy_from_slice(&k[j * kvd..(j + 1) * kvd]);
+                cl[half + dst..half + dst + kvd]
+                    .copy_from_slice(&v[j * kvd..(j + 1) * kvd]);
+            }
+            self.scratch.put(k);
+            self.scratch.put(v);
+
+            // causal attention: chunk row j sees the slot prefix 0..=pos0+j
+            let (kc, vc) = cl.split_at(half);
+            let k_slot = &kc[slot * row..(slot + 1) * row];
+            let v_slot = &vc[slot * row..(slot + 1) * row];
+            let mut attn = self.scratch.take(cn * qd);
+            with_thread_arena(|arena| {
+                let mut logits = arena.take(c.s_max);
+                kernels::chunk_attention_rows(
+                    &q, k_slot, v_slot, c.s_max, hq, hkv, hd, pos0, &mut attn, &mut logits,
+                );
+                arena.put(logits);
+            });
+            self.scratch.put(q);
+            let mut ao = self.scratch.take(cn * d);
+            kernels::matmul_into(&attn, &lw.wo, cn, qd, d, &mut ao);
+            self.scratch.put(attn);
+            for (o, &a) in hidden.iter_mut().zip(ao.iter()) {
+                *o += a;
+            }
+            self.scratch.put(ao);
+            // vanilla routing, like prefill (paper: OEA is decode-only)
+            let scores = kernels::router_scores(
+                &hidden, &lw.n2, &lw.router, cn, d, c.n_experts, c.rms_eps,
+            );
+            let sm = ScoreMatrix::new(cn, c.n_experts, scores);
+            let dec =
+                policy::route(Policy::Vanilla { k: c.top_k }, &RoutingInput::new(&sm, &live, true));
+            let ids: Vec<i32> = dec.active.iter().map(|&e| e as i32).collect();
+            hidden = self.moe_apply(l, &hidden, &dec.combine, &ids)?;
+        }
+        Ok(hidden[(cn - 1) * d..cn * d].to_vec())
     }
 
     fn install_rows(&self, cache: &mut CpuKvCache, slot: usize, rows: &CpuKvRows) -> Result<()> {

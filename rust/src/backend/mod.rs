@@ -27,7 +27,7 @@ pub mod pjrt;
 use crate::config::ModelConfig;
 use crate::moe::dispatch::RoutedStep;
 use crate::residency::{ResidencyCounters, ResidencyStats};
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
 
 /// Output of one layer's pre-MoE work (attention sub-block + router).
 pub struct LayerPre {
@@ -108,6 +108,37 @@ pub trait Backend {
 
     /// Install a prefilled sequence's rows into `slot` of a decode cache.
     fn install_rows(&self, cache: &mut Self::Cache, slot: usize, rows: &Self::Rows) -> Result<()>;
+
+    /// Whether [`Backend::prefill_chunk`] is implemented — the continuous
+    /// scheduler refuses to start (loudly, at engine construction) on a
+    /// backend that would error at the first admission instead.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Chunked prefill: run prompt tokens `tokens` (cache positions
+    /// `pos0 .. pos0 + tokens.len()`) of the sequence living in `slot`
+    /// directly against the decode cache, under vanilla routing (prefill
+    /// is always vanilla — the paper applies OEA to decode only). Writes
+    /// the chunk's K/V into `slot`'s cache rows and returns the LAST
+    /// chunk token's post-stack hidden state `[d_model]` (the caller
+    /// samples the first output token from it via [`Backend::logits`]
+    /// once the final chunk lands). Chunks must arrive in order; per-row
+    /// math must match [`Backend::prefill`] bitwise so the continuous
+    /// scheduler stays equivalent to the lockstep oracle.
+    fn prefill_chunk(
+        &self,
+        _cache: &mut Self::Cache,
+        _slot: usize,
+        _tokens: &[i32],
+        _pos0: usize,
+    ) -> Result<Vec<f32>> {
+        Err(Error::Engine(
+            "backend does not support chunked prefill (continuous scheduling \
+             requires it; run --sched lockstep)"
+                .into(),
+        ))
+    }
 
     /// Zero `slot`'s cache rows (hygiene on retirement; correctness does
     /// not depend on it because pos masks attention).

@@ -2,23 +2,28 @@
 //!
 //! One [`Engine`] owns a slot-stable [`DecodeBatch`] sized by
 //! `max_running` (rounded up to a batch bucket — the padding regime of
-//! paper §6), admits queued requests into free slots after a chunked
-//! vanilla prefill, decodes all live slots in lockstep with the configured
-//! routing policy, samples, and retires finished sequences. MoE telemetry
-//! (T, load, measured µs, simulated H100 µs) is recorded per (layer, step).
+//! paper §6) and executes the [`Scheduler`]'s per-step plan: bind
+//! admissions to KV slots, run their prompt chunks (chunked prefill in
+//! continuous mode, whole-prompt in the lockstep oracle), then decode
+//! every prompt-complete slot as one batch under the configured routing
+//! policy — with optional per-request policy overrides and batch-adaptive
+//! k0/alpha tightening. Sequences retire mid-flight and their slots
+//! refill on the next plan. MoE telemetry (T, load, measured µs,
+//! simulated H100 µs) is recorded per (layer, step).
 
-use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::backend::Backend;
 use crate::config::ModelConfig;
-use crate::coordinator::request::{FinishReason, FinishedRequest, GenRequest, TokenEvent};
+use crate::coordinator::request::{
+    FinishReason, FinishedRequest, GenRequest, SubmitError, Ticket, TokenEvent,
+};
 use crate::coordinator::sampler;
-use crate::coordinator::slots::SlotAllocator;
+use crate::coordinator::scheduler::{SchedCounters, SchedMode, Scheduler};
 use crate::latency::CostModel;
 use crate::metrics::{push_sample, MoeMetrics, RequestMetrics, StepRecord};
-use crate::model::{DecodeBatch, ModelRunner};
-use crate::moe::policy::Policy;
+use crate::model::{DecodeBatch, ModelRunner, StepRouting};
+use crate::moe::policy::{AdaptiveRouting, Policy};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
@@ -30,16 +35,45 @@ pub struct EngineConfig {
     pub mask_padding: bool,
     /// SGLang's --max-running-requests
     pub max_running: usize,
-    /// Bound on requests *waiting* for a slot: [`Engine::try_submit`]
-    /// rejects once the system is at capacity (free decode slots +
-    /// `max_queue` — the serving backpressure signal, HTTP 429 at the
-    /// server edge), so at most `max_running + max_queue` requests are
-    /// ever held. Offline drivers that pre-load the whole workload use
-    /// `usize::MAX`.
+    /// Bound on requests *waiting* for a slot: [`Engine::submit`] rejects
+    /// with [`SubmitError::QueueFull`] once the system is at capacity
+    /// (free decode slots + `max_queue` — the serving backpressure
+    /// signal, HTTP 429 at the server edge), so at most `max_running +
+    /// max_queue` requests are ever held. Offline drivers that pre-load
+    /// the whole workload use `usize::MAX`.
     pub max_queue: usize,
     pub eos_token: Option<i32>,
     /// simulated-latency preset (H100 µs per Eq. 2)
     pub cost_model: CostModel,
+    /// Continuous (chunked prefill + per-step recomposition, the
+    /// default) or the fixed-batch lockstep oracle.
+    pub sched: SchedMode,
+    /// Prompt tokens prefilled per slot per step in continuous mode
+    /// (`None` = the model config's `prefill_chunk`).
+    pub prefill_chunk: Option<usize>,
+    /// Batch-adaptive routing: per layer-step, tighten the default
+    /// policy's k0/alpha toward the configured values as the live batch
+    /// fills (and relax toward vanilla quality when it empties). At a
+    /// constantly-full batch this is the identity — the oracle pin.
+    pub adaptive: bool,
+}
+
+impl EngineConfig {
+    /// Serving defaults (continuous scheduling, model-config chunk size,
+    /// fixed routing parameters); override fields via struct-update.
+    pub fn new(policy: Policy, cost_model: CostModel) -> EngineConfig {
+        EngineConfig {
+            policy,
+            mask_padding: true,
+            max_running: 8,
+            max_queue: 64,
+            eos_token: None,
+            cost_model,
+            sched: SchedMode::default(),
+            prefill_chunk: None,
+            adaptive: false,
+        }
+    }
 }
 
 struct SeqState {
@@ -48,12 +82,17 @@ struct SeqState {
     next_token: i32,
     /// cache position the next token writes
     pos: usize,
+    /// prompt tokens whose K/V are already in the slot (mid-prefill
+    /// bookkeeping; == prompt len once decoding)
+    prefilled: usize,
     generated: Vec<i32>,
     rng: Rng,
     t_submit: Instant,
     t_first_token: Option<Instant>,
     /// submit -> admission delay (the queue-wait SLO component)
     queue_wait_us: f64,
+    /// per-request routing override, built+validated at submit
+    policy: Option<Policy>,
 }
 
 /// Everything one engine iteration produced: per-token events the moment
@@ -68,13 +107,13 @@ pub struct Engine<B: Backend> {
     pub runner: ModelRunner<B>,
     pub cfg: EngineConfig,
     batch: DecodeBatch<B>,
-    slots: SlotAllocator,
+    sched: Scheduler,
     running: Vec<Option<SeqState>>,
-    queue: VecDeque<(GenRequest, Instant)>,
     pub moe: MoeMetrics,
     pub requests: RequestMetrics,
     step_no: u32,
     t_start: Instant,
+    draining: bool,
 }
 
 impl<B: Backend> Engine<B> {
@@ -83,20 +122,35 @@ impl<B: Backend> Engine<B> {
         if cfg.max_running == 0 {
             return Err(Error::Config("max_running must be > 0".into()));
         }
+        if cfg.sched == SchedMode::Continuous && !runner.supports_chunked_prefill() {
+            return Err(Error::Config(format!(
+                "backend '{}' does not support chunked prefill; continuous \
+                 scheduling requires it (run with the lockstep scheduler)",
+                runner.backend.label()
+            )));
+        }
         let bucket = mc.bucket_for(cfg.max_running)?;
-        let s_max = mc.s_max;
+        let chunk = cfg.prefill_chunk.unwrap_or(mc.prefill_chunk).max(1);
+        let sched = Scheduler::new(
+            cfg.sched,
+            chunk,
+            cfg.max_running,
+            cfg.max_queue,
+            bucket,
+            mc.s_max,
+        );
         let batch = runner.new_batch(bucket)?;
         Ok(Engine {
             runner,
             cfg,
             batch,
-            slots: SlotAllocator::new(bucket, s_max),
+            sched,
             running: (0..bucket).map(|_| None).collect(),
-            queue: VecDeque::new(),
             moe: MoeMetrics::default(),
             requests: RequestMetrics::default(),
             step_no: 0,
             t_start: Instant::now(),
+            draining: false,
         })
     }
 
@@ -105,133 +159,121 @@ impl<B: Backend> Engine<B> {
     }
 
     pub fn n_running(&self) -> usize {
-        self.slots.n_used()
+        self.sched.n_running()
     }
 
     pub fn n_queued(&self) -> usize {
-        self.queue.len()
+        self.sched.n_queued()
     }
 
     pub fn idle(&self) -> bool {
-        self.n_running() == 0 && self.queue.is_empty()
+        self.n_running() == 0 && self.n_queued() == 0
     }
 
-    /// Bounded admission: rejects (returning the request to the caller)
-    /// once the system is at capacity. Capacity counts free decode slots
-    /// as well as the `max_queue` wait bound — a burst arriving at an
-    /// idle engine must not be 429'd while slots sit empty just because
-    /// admission (which happens on the next step) hasn't drained the
-    /// queue yet. With all slots busy the bound degrades to `max_queue`,
-    /// so the system never holds more than `max_running + max_queue`.
-    pub fn try_submit(&mut self, req: GenRequest) -> std::result::Result<(), GenRequest> {
-        let free_slots = self.cfg.max_running.saturating_sub(self.slots.n_used());
-        let capacity = self.cfg.max_queue.saturating_add(free_slots);
-        if self.queue.len() >= capacity {
+    /// Scheduler telemetry (the `/metrics` `scheduler` block).
+    pub fn sched_counters(&self) -> &SchedCounters {
+        &self.sched.counters
+    }
+
+    pub fn sched_mode(&self) -> SchedMode {
+        self.sched.mode()
+    }
+
+    /// Slots still mid-prompt.
+    pub fn n_prefilling(&self) -> usize {
+        self.sched.n_prefilling()
+    }
+
+    /// Live-B of the most recent decode step.
+    pub fn last_decode_b(&self) -> usize {
+        self.sched.last_decode_b()
+    }
+
+    /// Stop admitting: every subsequent [`Engine::submit`] returns
+    /// [`SubmitError::Draining`]; in-flight and queued requests run to
+    /// completion. The graceful-shutdown half of the serving edge.
+    pub fn begin_drain(&mut self) {
+        self.draining = true;
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// THE admission call (ISSUE 6): every request enters here, and every
+    /// way the engine can refuse is a typed [`SubmitError`] — queue
+    /// backpressure, drain, or a request that can never be served
+    /// (empty/overlong prompt, invalid or batch-global policy override).
+    /// No panic path, no request-returned-by-value. On success the
+    /// request waits FIFO for a slot; the [`Ticket`] reports its queue
+    /// depth.
+    pub fn submit(&mut self, req: GenRequest) -> std::result::Result<Ticket, SubmitError> {
+        if self.draining {
+            return Err(SubmitError::Draining);
+        }
+        if req.prompt.is_empty() {
             self.requests.n_rejected += 1;
-            return Err(req);
+            return Err(SubmitError::NeverFits("empty prompt".into()));
         }
-        self.queue.push_back((req, Instant::now()));
-        Ok(())
-    }
-
-    /// Submit for offline drivers that sized `max_queue` to their
-    /// workload; panics on queue overflow (serving paths must use
-    /// [`Engine::try_submit`] and surface backpressure instead).
-    pub fn submit(&mut self, req: GenRequest) {
-        if let Err(r) = self.try_submit(req) {
-            panic!(
-                "engine queue full (max_queue={}) for request {}; use try_submit",
-                self.cfg.max_queue, r.id
-            );
+        if !self.sched.fits(req.prompt.len()) {
+            self.requests.n_rejected += 1;
+            return Err(SubmitError::NeverFits(format!(
+                "prompt of {} tokens can never fit the KV capacity (s_max = {}, \
+                 one position reserved for decode)",
+                req.prompt.len(),
+                self.runner.cfg().s_max
+            )));
         }
-    }
-
-    /// Admit queued requests into free slots (bounded by `max_running`),
-    /// running their prefill. Pushes the first sampled token of each
-    /// admission (the TTFT token) and requests rejected as too long to
-    /// ever fit the KV capacity into `ev`.
-    fn admit(&mut self, ev: &mut StepEvents) -> Result<()> {
-        while self.slots.n_used() < self.cfg.max_running && !self.queue.is_empty() {
-            let (req, t_submit) = self.queue.pop_front().unwrap();
-            let queue_wait_us = t_submit.elapsed().as_secs_f64() * 1e6;
-            push_sample(&mut self.requests.queue_wait_us, queue_wait_us);
-            // a request that can never fit is finished immediately (it
-            // still counts as finished — the serve exit counter and
-            // /metrics must agree on one definition)
-            if req.prompt.is_empty() || !self.slots.fits(req.prompt.len(), 1) {
-                let e2e_us = t_submit.elapsed().as_secs_f64() * 1e6;
-                self.requests.n_finished += 1;
-                push_sample(&mut self.requests.e2e_us, e2e_us);
-                ev.finished.push(FinishedRequest {
-                    id: req.id,
-                    prompt_len: req.prompt.len(),
-                    tokens: Vec::new(),
-                    reason: FinishReason::KvExhausted,
-                    queue_wait_us,
-                    ttft_us: 0.0,
-                    e2e_us,
-                });
-                continue;
-            }
-            let seq = self.runner.prefill(&req.prompt)?;
-            let mut rng = Rng::new(req.seed);
-            let first =
-                sampler::sample(&seq.last_logits, req.temperature, req.top_p, &mut rng) as i32;
-            let t_first = Instant::now();
-            self.requests.total_prompt_tokens += req.prompt.len();
-            // finish at admission when the prefill's sample already ends
-            // the generation: an EOS first token (terminates, not output),
-            // or a max_new_tokens <= 1 budget the sample satisfies (a
-            // decode step would overshoot by one token)
-            let eos_first = self.cfg.eos_token == Some(first);
-            if eos_first || req.max_new_tokens <= 1 {
-                let tokens = if eos_first || req.max_new_tokens == 0 {
-                    Vec::new()
-                } else {
-                    vec![first]
-                };
-                let reason = if eos_first { FinishReason::Eos } else { FinishReason::Length };
-                let mut ttft_us = 0.0;
-                if !tokens.is_empty() {
-                    ev.tokens.push(TokenEvent { id: req.id, index: 0, token: first });
-                    ttft_us = (t_first - t_submit).as_secs_f64() * 1e6;
-                    push_sample(&mut self.requests.ttft_us, ttft_us);
+        if let Some(spec) = &req.policy {
+            let mc = self.runner.cfg();
+            match spec.build(mc.top_k, mc.n_experts) {
+                Err(e) => {
+                    self.requests.n_rejected += 1;
+                    return Err(SubmitError::NeverFits(format!("policy override: {e}")));
                 }
-                self.requests.n_finished += 1;
-                self.requests.total_generated_tokens += tokens.len();
-                let e2e_us = t_submit.elapsed().as_secs_f64() * 1e6;
-                push_sample(&mut self.requests.e2e_us, e2e_us);
-                ev.finished.push(FinishedRequest {
-                    id: req.id,
-                    prompt_len: req.prompt.len(),
-                    tokens,
-                    reason,
-                    queue_wait_us,
-                    ttft_us,
-                    e2e_us,
-                });
-                continue;
+                Ok(p) => {
+                    if !p.per_row_capable() {
+                        self.requests.n_rejected += 1;
+                        return Err(SubmitError::NeverFits(format!(
+                            "policy override {} is batch-global and cannot be \
+                             mixed per-request",
+                            p.label()
+                        )));
+                    }
+                    if !self.cfg.policy.per_row_capable() {
+                        self.requests.n_rejected += 1;
+                        return Err(SubmitError::NeverFits(format!(
+                            "engine policy {} is batch-global; per-request \
+                             overrides are unsupported under it",
+                            self.cfg.policy.label()
+                        )));
+                    }
+                }
             }
-            let slot = self.slots.alloc(req.id)?;
-            self.runner.install_prefilled(&mut self.batch, slot, &seq)?;
-            ev.tokens.push(TokenEvent { id: req.id, index: 0, token: first });
-            let pos = req.prompt.len();
-            self.running[slot] = Some(SeqState {
-                req,
-                next_token: first,
-                pos,
-                generated: vec![first],
-                rng,
-                t_submit,
-                t_first_token: Some(t_first),
-                queue_wait_us,
-            });
         }
-        Ok(())
+        if !self.sched.has_queue_capacity() {
+            self.requests.n_rejected += 1;
+            return Err(SubmitError::QueueFull);
+        }
+        let ticket = Ticket { id: req.id, position: self.sched.n_queued() };
+        self.sched.enqueue(req, Instant::now());
+        Ok(ticket)
     }
 
-    /// One engine iteration: admit + one decode step over live slots.
-    /// Returns requests finished this step. Streaming callers use
+    /// Legacy bounded admission. Collapses every [`SubmitError`] into
+    /// `Err(request)` — callers that need to distinguish backpressure
+    /// from unservable requests must use [`Engine::submit`].
+    #[deprecated(note = "use Engine::submit, which returns Result<Ticket, SubmitError>")]
+    pub fn try_submit(&mut self, req: GenRequest) -> std::result::Result<(), GenRequest> {
+        match self.submit(req.clone()) {
+            Ok(_) => Ok(()),
+            Err(_) => Err(req),
+        }
+    }
+
+    /// One engine iteration: execute the scheduler's plan (admit, prefill
+    /// chunks, one decode step over prompt-complete slots). Returns
+    /// requests finished this step. Streaming callers use
     /// [`Engine::step_events`] to also observe per-token events.
     pub fn step(&mut self) -> Result<Vec<FinishedRequest>> {
         Ok(self.step_events()?.finished)
@@ -241,36 +283,124 @@ impl<B: Backend> Engine<B> {
     /// addition to retired requests) so the serving edge can stream them.
     pub fn step_events(&mut self) -> Result<StepEvents> {
         let mut events = StepEvents::default();
-        self.admit(&mut events)?;
-        let b = self.batch.bucket;
-        if self.slots.n_used() == 0 {
-            return Ok(events);
+        let plan = self.sched.plan();
+
+        // bind admissions to their slots
+        for adm in plan.admitted {
+            let queue_wait_us = adm.t_submit.elapsed().as_secs_f64() * 1e6;
+            push_sample(&mut self.requests.queue_wait_us, queue_wait_us);
+            self.requests.total_prompt_tokens += adm.req.prompt.len();
+            // validated at submit; a failure here would be a logic bug,
+            // so fall back to the engine default instead of crashing
+            let policy = adm.req.policy.as_ref().and_then(|s| {
+                let mc = self.runner.cfg();
+                s.build(mc.top_k, mc.n_experts).ok()
+            });
+            let rng = Rng::new(adm.req.seed);
+            self.running[adm.slot] = Some(SeqState {
+                req: adm.req,
+                next_token: 0,
+                pos: 0,
+                prefilled: 0,
+                generated: Vec::new(),
+                rng,
+                t_submit: adm.t_submit,
+                t_first_token: None,
+                queue_wait_us,
+                policy,
+            });
         }
 
-        let mut tokens = vec![0i32; b];
-        let mut pos = vec![0i32; b];
-        let mut live = vec![false; b];
-        for (i, s) in self.running.iter().enumerate() {
-            if let Some(s) = s {
-                tokens[i] = s.next_token;
-                pos[i] = s.pos as i32;
-                live[i] = true;
+        // run this step's prompt chunks; a `last` chunk samples the
+        // sequence's first token (the TTFT token)
+        for ch in &plan.prefill {
+            let first_logits = match self.cfg.sched {
+                SchedMode::Lockstep => {
+                    // the oracle path: whole-prompt b=1 prefill + row install
+                    let prompt = {
+                        let s = self.running[ch.slot].as_ref().expect("prefill on empty slot");
+                        s.req.prompt.clone()
+                    };
+                    let seq = self.runner.prefill(&prompt)?;
+                    self.runner.install_prefilled(&mut self.batch, ch.slot, &seq)?;
+                    if let Some(s) = self.running[ch.slot].as_mut() {
+                        s.prefilled = prompt.len();
+                    }
+                    Some(seq.last_logits)
+                }
+                SchedMode::Continuous => {
+                    let chunk: Vec<i32> = {
+                        let s = self.running[ch.slot].as_ref().expect("prefill on empty slot");
+                        s.req.prompt[ch.start..ch.end].to_vec()
+                    };
+                    let hidden =
+                        self.runner.prefill_chunk(&mut self.batch, ch.slot, &chunk, ch.start)?;
+                    if let Some(s) = self.running[ch.slot].as_mut() {
+                        s.prefilled = ch.end;
+                    }
+                    if ch.last {
+                        Some(self.runner.logits_for(&hidden)?)
+                    } else {
+                        None
+                    }
+                }
+            };
+            if let Some(logits) = first_logits {
+                self.sample_first_token(ch.slot, &logits, &mut events)?;
             }
         }
 
+        // decode every prompt-complete slot that still holds a sequence
+        // (a first sample can finish a request before its first decode)
+        let decode: Vec<usize> =
+            plan.decode.iter().copied().filter(|&i| self.running[i].is_some()).collect();
+        self.sched.note_decode_set(&decode);
+        if decode.is_empty() {
+            return Ok(events);
+        }
+        let b = self.batch.bucket;
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut live = vec![false; b];
+        for &i in &decode {
+            let s = self.running[i].as_ref().expect("decode slot holds a sequence");
+            tokens[i] = s.next_token;
+            pos[i] = s.pos as i32;
+            live[i] = true;
+        }
+        // Mid-prefill slots sitting this step out: layer_pre writes K/V
+        // for EVERY bucket row at its pos, so park theirs on the slot's
+        // next unwritten prompt position — the next chunk overwrites it
+        // before anything reads it (write-before-read). Free slots stay
+        // at pos 0 like any dead row.
+        for (i, s) in self.running.iter().enumerate() {
+            if !live[i] {
+                if let Some(s) = s {
+                    pos[i] = s.prefilled as i32;
+                }
+            }
+        }
+
+        let overrides: Vec<Option<Policy>> = (0..b)
+            .map(|i| if live[i] { self.running[i].as_ref().unwrap().policy } else { None })
+            .collect();
+        let any_override = overrides.iter().any(|o| o.is_some());
+        let routing = StepRouting {
+            policy: self.cfg.policy,
+            mask_padding: self.cfg.mask_padding,
+            overrides: if any_override { Some(&overrides) } else { None },
+            adaptive: if self.cfg.adaptive {
+                Some(AdaptiveRouting { target_b: self.cfg.max_running })
+            } else {
+                None
+            },
+        };
         let t0 = Instant::now();
-        let out = self.runner.decode_step(
-            &mut self.batch,
-            &tokens,
-            &pos,
-            &live,
-            self.cfg.policy,
-            self.cfg.mask_padding,
-        )?;
+        let out = self.runner.decode_step_routed(&mut self.batch, &tokens, &pos, &live, &routing)?;
         let step_us = t0.elapsed().as_secs_f64() * 1e6;
         push_sample(&mut self.requests.decode_step_us, step_us);
 
-        let n_live = self.slots.n_used();
+        let n_live = decode.len();
         for (l, ls) in out.layers.iter().enumerate() {
             // simulated latency is the max-rank EP cost — identical to
             // layer_us(t, load, misses) on a single-rank backend
@@ -293,11 +423,10 @@ impl<B: Backend> Engine<B> {
 
         // sample next tokens and retire finished sequences
         let vocab = self.runner.cfg().vocab;
-        for i in 0..b {
+        for &i in &decode {
             let Some(mut s) = self.running[i].take() else { continue };
             let row = &out.logits[i * vocab..(i + 1) * vocab];
-            let next =
-                sampler::sample(row, s.req.temperature, s.req.top_p, &mut s.rng) as i32;
+            let next = sampler::sample(row, s.req.temperature, s.req.top_p, &mut s.rng) as i32;
             s.pos += 1;
             s.generated.push(next);
             s.next_token = next;
@@ -352,12 +481,71 @@ impl<B: Backend> Engine<B> {
                     push_sample(&mut self.requests.tpot_us, tpot);
                 }
                 events.finished.push(done);
-                self.slots.free(i)?;
+                self.sched.release(i)?;
             } else {
                 self.running[i] = Some(s);
             }
         }
         Ok(events)
+    }
+
+    /// Sample a just-prefilled sequence's first token. Finishes the
+    /// request on the spot when the sample already ends the generation:
+    /// an EOS first token (terminates, not output), or a
+    /// `max_new_tokens <= 1` budget the sample satisfies (a decode step
+    /// would overshoot by one token).
+    fn sample_first_token(
+        &mut self,
+        slot: usize,
+        logits: &[f32],
+        ev: &mut StepEvents,
+    ) -> Result<()> {
+        let (first, t_first, finish_now) = {
+            let s = self.running[slot].as_mut().expect("sequence in slot");
+            let first =
+                sampler::sample(logits, s.req.temperature, s.req.top_p, &mut s.rng) as i32;
+            let t_first = Instant::now();
+            let eos_first = self.cfg.eos_token == Some(first);
+            (first, t_first, eos_first || s.req.max_new_tokens <= 1)
+        };
+        if finish_now {
+            let s = self.running[slot].take().expect("sequence in slot");
+            let eos_first = self.cfg.eos_token == Some(first);
+            let tokens = if eos_first || s.req.max_new_tokens == 0 {
+                Vec::new()
+            } else {
+                vec![first]
+            };
+            let reason = if eos_first { FinishReason::Eos } else { FinishReason::Length };
+            let mut ttft_us = 0.0;
+            if !tokens.is_empty() {
+                ev.tokens.push(TokenEvent { id: s.req.id, index: 0, token: first });
+                ttft_us = (t_first - s.t_submit).as_secs_f64() * 1e6;
+                push_sample(&mut self.requests.ttft_us, ttft_us);
+            }
+            self.requests.n_finished += 1;
+            self.requests.total_generated_tokens += tokens.len();
+            let e2e_us = s.t_submit.elapsed().as_secs_f64() * 1e6;
+            push_sample(&mut self.requests.e2e_us, e2e_us);
+            ev.finished.push(FinishedRequest {
+                id: s.req.id,
+                prompt_len: s.req.prompt.len(),
+                tokens,
+                reason,
+                queue_wait_us: s.queue_wait_us,
+                ttft_us,
+                e2e_us,
+            });
+            self.sched.release(slot)?;
+            return Ok(());
+        }
+        let s = self.running[slot].as_mut().expect("sequence in slot");
+        ev.tokens.push(TokenEvent { id: s.req.id, index: 0, token: first });
+        s.next_token = first;
+        s.pos = s.req.prompt.len();
+        s.generated = vec![first];
+        s.t_first_token = Some(t_first);
+        Ok(())
     }
 
     /// Retire request `id` early (the client went away): a queued request
@@ -366,8 +554,7 @@ impl<B: Backend> Engine<B> {
     /// (one definition of "finished" everywhere) *and* cancelled. Returns
     /// the retired request's record, or `None` if `id` is not held.
     pub fn cancel(&mut self, id: u64) -> Option<FinishedRequest> {
-        if let Some(qi) = self.queue.iter().position(|(r, _)| r.id == id) {
-            let (req, t_submit) = self.queue.remove(qi).unwrap();
+        if let Some((req, t_submit)) = self.sched.remove_queued(id) {
             let e2e_us = t_submit.elapsed().as_secs_f64() * 1e6;
             self.requests.n_finished += 1;
             self.requests.n_cancelled += 1;
@@ -388,8 +575,8 @@ impl<B: Backend> Engine<B> {
         }
         let slot = (0..self.running.len())
             .find(|&i| self.running[i].as_ref().is_some_and(|s| s.req.id == id))?;
-        let s = self.running[slot].take().unwrap();
-        self.slots.free(slot).ok();
+        let s = self.running[slot].take().expect("found above");
+        self.sched.release(slot).ok();
         let e2e_us = s.t_submit.elapsed().as_secs_f64() * 1e6;
         self.requests.n_finished += 1;
         self.requests.n_cancelled += 1;

@@ -2,15 +2,23 @@
 //!
 //! Mirrors the slice of SGLang the paper's experiments used: a request
 //! queue, `--max-running-requests`-bounded continuous batching with
-//! slot-stable decode batches, chunked prefill on admission, per-step
-//! sampling, and per-(layer, step) MoE telemetry. OEA (or any baseline
-//! policy) runs on the decode path only — prefill stays vanilla, exactly as
-//! in the paper (§4.2).
+//! slot-stable decode batches, chunked prefill interleaved with decode
+//! steps, per-step batch recomposition as sequences finish, per-step
+//! sampling, and per-(layer, step) MoE telemetry. The [`Scheduler`]
+//! emits an explicit per-step plan (admissions, prompt chunks, decode
+//! set) that the [`Engine`] executes; the fixed-batch lockstep mode is
+//! retained as a bitwise oracle. OEA (or any baseline policy) runs on
+//! the decode path only — prefill stays vanilla, exactly as in the
+//! paper (§4.2).
 
 pub mod engine;
 pub mod request;
 pub mod sampler;
+pub mod scheduler;
 pub mod slots;
 
 pub use engine::{Engine, EngineConfig, StepEvents};
-pub use request::{FinishReason, FinishedRequest, GenRequest, TokenEvent};
+pub use request::{
+    FinishReason, FinishedRequest, GenRequest, SubmitError, Ticket, TokenEvent,
+};
+pub use scheduler::{SchedCounters, SchedMode, Scheduler};

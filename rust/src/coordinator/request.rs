@@ -1,5 +1,7 @@
 //! Request types for the serving engine.
 
+use crate::moe::policy::PolicySpec;
+
 /// A generation request (the engine's unit of admission).
 #[derive(Debug, Clone)]
 pub struct GenRequest {
@@ -11,6 +13,13 @@ pub struct GenRequest {
     /// nucleus threshold; 1.0 disables
     pub top_p: f32,
     pub seed: u64,
+    /// Per-request routing-policy override (the `/generate` `policy`
+    /// field): this sequence's decode rows route under the override
+    /// while the rest of the batch keeps the engine default. `None` =
+    /// engine default. Validated at submit — batch-global policies
+    /// (lynx / expert-choice / ep) are rejected with
+    /// [`SubmitError::NeverFits`].
+    pub policy: Option<PolicySpec>,
 }
 
 impl GenRequest {
@@ -22,8 +31,47 @@ impl GenRequest {
             temperature: 0.0,
             top_p: 1.0,
             seed: id,
+            policy: None,
         }
     }
+}
+
+/// Why [`crate::coordinator::Engine::submit`] refused a request. The
+/// three cases demand different client behavior, which is the point of
+/// the typed split: QueueFull is retryable after backoff (HTTP 429),
+/// Draining means find another replica (503), NeverFits means the
+/// request can NEVER be served by this engine and retrying is useless
+/// (400).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// admission queue at capacity — back off and retry
+    QueueFull,
+    /// engine is shutting down and admits nothing new
+    Draining,
+    /// the request itself is unservable (empty prompt, prompt that can
+    /// never fit a KV slot, invalid policy override); the payload says
+    /// why, verbatim enough for a 400 body
+    NeverFits(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "admission queue full"),
+            SubmitError::Draining => write!(f, "engine draining"),
+            SubmitError::NeverFits(why) => write!(f, "request can never be served: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Proof of admission from [`crate::coordinator::Engine::submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    pub id: u64,
+    /// 0-based queue depth at admission (0 = next to be scheduled)
+    pub position: usize,
 }
 
 /// One sampled token, emitted by the engine the moment it exists — the

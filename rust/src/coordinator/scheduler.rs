@@ -1,0 +1,360 @@
+//! Per-step scheduling for the serving engine (ISSUE 6 tentpole).
+//!
+//! The scheduler owns admission (queue + KV slots) and emits an explicit
+//! [`StepPlan`] each step: which requests enter which slots, which
+//! prompt chunks prefill, and which slots decode. The engine EXECUTES
+//! the plan; all composition policy lives here. Two modes:
+//!
+//! - [`SchedMode::Continuous`] (default): prompts prefill in bounded
+//!   chunks interleaved with decode steps, and the decode batch
+//!   recomposes every step as sequences finish — slots refill mid-flight
+//!   instead of waiting for a lockstep drain. A long prompt therefore
+//!   costs each in-flight decode a bounded stall (one chunk) rather than
+//!   a whole-prompt head-of-line block.
+//! - [`SchedMode::Lockstep`]: whole-prompt prefill at admission — the
+//!   pre-ISSUE-6 behavior, kept as the equivalence oracle (identical
+//!   arrivals at constant B must produce bitwise-identical tokens).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::coordinator::request::GenRequest;
+use crate::coordinator::slots::SlotAllocator;
+use crate::util::error::Result;
+
+/// How the scheduler composes each step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedMode {
+    /// whole-prompt prefill at admission (the fixed-batch oracle)
+    Lockstep,
+    /// chunked prefill interleaved with decode, per-step recomposition
+    #[default]
+    Continuous,
+}
+
+impl SchedMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedMode::Lockstep => "lockstep",
+            SchedMode::Continuous => "continuous",
+        }
+    }
+
+    /// Parse the `--sched` flag.
+    pub fn from_cli(s: &str) -> crate::util::error::Result<SchedMode> {
+        match s {
+            "lockstep" => Ok(SchedMode::Lockstep),
+            "continuous" => Ok(SchedMode::Continuous),
+            other => Err(crate::util::error::Error::Config(format!(
+                "unknown scheduler {other:?} (continuous | lockstep)"
+            ))),
+        }
+    }
+}
+
+/// One prompt-chunk prefill in a step plan: run prompt tokens
+/// `[start, end)` of the sequence living in `slot`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillChunk {
+    pub slot: usize,
+    pub start: usize,
+    pub end: usize,
+    /// this chunk completes the prompt — the engine samples the
+    /// sequence's first token from its last hidden row
+    pub last: bool,
+}
+
+/// A request leaving the queue for a slot this step.
+#[derive(Debug)]
+pub struct Admission {
+    pub slot: usize,
+    pub req: GenRequest,
+    pub t_submit: Instant,
+}
+
+/// What one engine step executes, in order: bind admissions to slots,
+/// run prefill chunks, decode the listed slots as one batch.
+#[derive(Debug, Default)]
+pub struct StepPlan {
+    pub admitted: Vec<Admission>,
+    pub prefill: Vec<PrefillChunk>,
+    /// slots decoding this step (sorted ascending — slot-stable batch
+    /// composition is what keeps continuous bitwise-equal to lockstep
+    /// at constant B)
+    pub decode: Vec<usize>,
+}
+
+/// Scheduler telemetry (the `/metrics` `scheduler` block).
+#[derive(Debug, Default, Clone)]
+pub struct SchedCounters {
+    /// plans emitted
+    pub steps: u64,
+    /// requests moved from queue to slot
+    pub admitted: u64,
+    /// steps whose decode-set membership differed from the previous
+    /// step's — how often continuous batching actually recomposes
+    pub recompositions: u64,
+    pub prefill_chunks: u64,
+    pub prefill_tokens: u64,
+    /// steps that decoded at least one row
+    pub decode_steps: u64,
+    /// Σ live-B over decode steps (avg live-B = sum_live / decode_steps)
+    pub sum_live: u64,
+    pub max_live: usize,
+}
+
+impl SchedCounters {
+    /// Mean decode-batch occupancy — the quantity batch-adaptive routing
+    /// keys off and the serve bench reports.
+    pub fn avg_live(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.sum_live as f64 / self.decode_steps as f64
+        }
+    }
+}
+
+/// Where a slot's resident sequence is in its lifecycle.
+#[derive(Debug, Clone, Copy)]
+enum Phase {
+    /// `done` prompt tokens prefilled so far (also the slot's next
+    /// unwritten KV position — the engine's write-before-read anchor
+    /// for decode steps this slot sits out)
+    Prefilling { done: usize, total: usize },
+    Decoding,
+}
+
+/// Admission queue + slot occupancy + per-slot lifecycle; emits one
+/// [`StepPlan`] per engine step.
+pub struct Scheduler {
+    mode: SchedMode,
+    /// max prompt tokens prefilled per slot per step (continuous mode)
+    chunk: usize,
+    max_running: usize,
+    max_queue: usize,
+    queue: VecDeque<(GenRequest, Instant)>,
+    slots: SlotAllocator,
+    phase: Vec<Option<Phase>>,
+    prev_decode: Vec<usize>,
+    pub counters: SchedCounters,
+}
+
+impl Scheduler {
+    pub fn new(
+        mode: SchedMode,
+        chunk: usize,
+        max_running: usize,
+        max_queue: usize,
+        bucket: usize,
+        s_max: usize,
+    ) -> Scheduler {
+        assert!(chunk >= 1, "prefill chunk must be >= 1");
+        Scheduler {
+            mode,
+            chunk,
+            max_running,
+            max_queue,
+            queue: VecDeque::new(),
+            slots: SlotAllocator::new(bucket, s_max),
+            phase: vec![None; bucket],
+            prev_decode: Vec::new(),
+            counters: SchedCounters::default(),
+        }
+    }
+
+    pub fn mode(&self) -> SchedMode {
+        self.mode
+    }
+
+    pub fn n_queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.slots.n_used()
+    }
+
+    /// Slots still mid-prompt (continuous mode's prefill backlog).
+    pub fn n_prefilling(&self) -> usize {
+        self.phase
+            .iter()
+            .filter(|p| matches!(p, Some(Phase::Prefilling { .. })))
+            .count()
+    }
+
+    /// Live-B of the most recent decode step.
+    pub fn last_decode_b(&self) -> usize {
+        self.prev_decode.len()
+    }
+
+    /// Whether one more request fits the admission queue. Queue capacity
+    /// grows by the number of free slots so a burst can always fill the
+    /// batch: capacity = max_queue + (max_running - n_used).
+    pub fn has_queue_capacity(&self) -> bool {
+        let free = self.max_running.saturating_sub(self.slots.n_used());
+        self.queue.len() < self.max_queue.saturating_add(free)
+    }
+
+    /// Whether a prompt of this length can EVER hold a slot (one KV
+    /// position must remain for the first decode step).
+    pub fn fits(&self, prompt_len: usize) -> bool {
+        prompt_len > 0 && self.slots.fits(prompt_len, 1)
+    }
+
+    pub fn enqueue(&mut self, req: GenRequest, t_submit: Instant) {
+        self.queue.push_back((req, t_submit));
+    }
+
+    /// Pull a not-yet-admitted request back out (client cancel).
+    pub fn remove_queued(&mut self, id: u64) -> Option<(GenRequest, Instant)> {
+        let idx = self.queue.iter().position(|(r, _)| r.id == id)?;
+        self.queue.remove(idx)
+    }
+
+    /// Release a slot (sequence finished, cancelled, or rejected at
+    /// first-token time). The next plan can re-fill it immediately —
+    /// this is the recomposition point.
+    pub fn release(&mut self, slot: usize) -> Result<u64> {
+        self.phase[slot] = None;
+        self.slots.free(slot)
+    }
+
+    /// Next unwritten KV position of a mid-prefill slot (None once the
+    /// slot decodes or is free). Decode steps the slot sits out must
+    /// park its pos here so the batch-wide K/V write lands on a position
+    /// the next chunk overwrites before any read.
+    pub fn prefill_progress(&self, slot: usize) -> Option<usize> {
+        match self.phase[slot] {
+            Some(Phase::Prefilling { done, .. }) => Some(done),
+            _ => None,
+        }
+    }
+
+    /// Compose one step: admit FIFO into free slots, emit one prompt
+    /// chunk per prefilling slot (the whole remainder in lockstep mode),
+    /// and decode every slot whose prompt is complete — including slots
+    /// whose final chunk lands this very step.
+    pub fn plan(&mut self) -> StepPlan {
+        let mut plan = StepPlan::default();
+        while self.slots.n_used() < self.max_running && !self.queue.is_empty() {
+            let (req, t_submit) = self.queue.pop_front().expect("non-empty queue");
+            let slot = self.slots.alloc(req.id).expect("free slot under max_running");
+            self.phase[slot] = Some(Phase::Prefilling { done: 0, total: req.prompt.len() });
+            self.counters.admitted += 1;
+            plan.admitted.push(Admission { slot, req, t_submit });
+        }
+        for slot in 0..self.phase.len() {
+            if let Some(Phase::Prefilling { done, total }) = self.phase[slot] {
+                let end = match self.mode {
+                    SchedMode::Lockstep => total,
+                    SchedMode::Continuous => (done + self.chunk).min(total),
+                };
+                plan.prefill.push(PrefillChunk { slot, start: done, end, last: end == total });
+                self.counters.prefill_chunks += 1;
+                self.counters.prefill_tokens += (end - done) as u64;
+                self.phase[slot] = Some(if end == total {
+                    Phase::Decoding
+                } else {
+                    Phase::Prefilling { done: end, total }
+                });
+            }
+        }
+        for slot in 0..self.phase.len() {
+            if matches!(self.phase[slot], Some(Phase::Decoding)) {
+                plan.decode.push(slot);
+            }
+        }
+        self.counters.steps += 1;
+        plan
+    }
+
+    /// Record the decode set the engine ACTUALLY ran (planned slots drop
+    /// out when their first sampled token already finished the request).
+    /// Membership change vs. the previous step is one recomposition.
+    pub fn note_decode_set(&mut self, set: &[usize]) {
+        if !set.is_empty() {
+            self.counters.decode_steps += 1;
+            self.counters.sum_live += set.len() as u64;
+            self.counters.max_live = self.counters.max_live.max(set.len());
+        }
+        if set != self.prev_decode.as_slice() && !(set.is_empty() && self.prev_decode.is_empty())
+        {
+            self.counters.recompositions += 1;
+        }
+        self.prev_decode = set.to_vec();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, len: usize) -> GenRequest {
+        GenRequest::greedy(id, vec![1; len], 8)
+    }
+
+    #[test]
+    fn continuous_chunks_long_prompts_and_interleaves() {
+        let mut s = Scheduler::new(SchedMode::Continuous, 4, 2, 8, 2, 64);
+        s.enqueue(req(1, 10), Instant::now());
+        s.enqueue(req(2, 3), Instant::now());
+        let p = s.plan();
+        assert_eq!(p.admitted.len(), 2);
+        // slot 0: first chunk of 4/10; slot 1: whole 3-token prompt
+        assert_eq!(p.prefill[0], PrefillChunk { slot: 0, start: 0, end: 4, last: false });
+        assert_eq!(p.prefill[1], PrefillChunk { slot: 1, start: 0, end: 3, last: true });
+        // short prompt decodes immediately; long one sits the step out
+        assert_eq!(p.decode, vec![1]);
+        assert_eq!(s.prefill_progress(0), Some(4));
+        let p = s.plan();
+        assert_eq!(p.prefill[0], PrefillChunk { slot: 0, start: 4, end: 8, last: false });
+        let p = s.plan();
+        assert_eq!(p.prefill[0], PrefillChunk { slot: 0, start: 8, end: 10, last: true });
+        assert_eq!(p.decode, vec![0, 1]);
+        assert_eq!(s.n_prefilling(), 0);
+    }
+
+    #[test]
+    fn lockstep_prefills_whole_prompt_at_admission() {
+        let mut s = Scheduler::new(SchedMode::Lockstep, 4, 2, 8, 2, 64);
+        s.enqueue(req(1, 10), Instant::now());
+        let p = s.plan();
+        assert_eq!(p.prefill, vec![PrefillChunk { slot: 0, start: 0, end: 10, last: true }]);
+        assert_eq!(p.decode, vec![0]);
+    }
+
+    #[test]
+    fn released_slot_refills_next_plan() {
+        let mut s = Scheduler::new(SchedMode::Continuous, 16, 2, 8, 2, 64);
+        s.enqueue(req(1, 2), Instant::now());
+        s.enqueue(req(2, 2), Instant::now());
+        s.enqueue(req(3, 2), Instant::now());
+        let p = s.plan();
+        assert_eq!(p.decode, vec![0, 1]);
+        assert_eq!(s.n_queued(), 1);
+        s.note_decode_set(&p.decode);
+        s.release(0).unwrap();
+        let p = s.plan();
+        // slot 0 re-admitted request 3 mid-flight
+        assert_eq!(p.admitted.len(), 1);
+        assert_eq!(p.admitted[0].req.id, 3);
+        assert_eq!(p.decode, vec![0, 1]);
+        s.note_decode_set(&p.decode);
+        // same membership indices but a recomposition happened on the
+        // first note; counters reflect both decode steps
+        assert_eq!(s.counters.decode_steps, 2);
+        assert!(s.counters.recompositions >= 1);
+    }
+
+    #[test]
+    fn queue_capacity_includes_free_slots() {
+        let mut s = Scheduler::new(SchedMode::Continuous, 16, 2, 1, 2, 64);
+        // capacity = 1 + 2 free slots
+        for id in 0..3 {
+            assert!(s.has_queue_capacity(), "id={id}");
+            s.enqueue(req(id, 2), Instant::now());
+        }
+        assert!(!s.has_queue_capacity());
+    }
+}

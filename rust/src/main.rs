@@ -26,11 +26,11 @@ use oea_serve::backend::cpu::{CpuBackend, CpuOptions};
 use oea_serve::backend::Backend;
 use oea_serve::residency::{EvictPolicy, ResidencyConfig};
 use oea_serve::config::ModelConfig;
-use oea_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use oea_serve::coordinator::{Engine, EngineConfig, GenRequest, SchedMode};
 use oea_serve::eval;
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
-use oea_serve::moe::policy::Policy;
+use oea_serve::moe::policy::{Policy, PolicySpec};
 use oea_serve::server;
 use oea_serve::util::bpe::Tokenizer;
 use oea_serve::util::cli::{Args, Spec};
@@ -64,6 +64,14 @@ fn spec() -> Spec {
                               the previous step's router scores (default 0; requires \
                               --expert-cache)"),
             ("max-running", true, "max concurrent requests (default 8)"),
+            ("sched", true, "scheduler: continuous (default; chunked prefill + per-step \
+                              batch recomposition) | lockstep (whole-prompt prefill at \
+                              admission — the fixed-batch oracle)"),
+            ("prefill-chunk", true, "continuous: prompt tokens prefilled per slot per \
+                              step (default: the model config's prefill_chunk)"),
+            ("adaptive", false, "batch-adaptive routing: relax k0/alpha toward vanilla \
+                              quality when the live decode batch empties (identity at \
+                              a full batch)"),
             ("max-queue", true, "serve: waiting-request bound before 429 backpressure \
                               (default 64)"),
             ("http-workers", true, "serve: connection worker threads (default \
@@ -115,17 +123,18 @@ fn run(argv: &[String]) -> Result<()> {
 // ---- shared, backend-generic command bodies ------------------------------
 
 fn parse_policy(args: &Args, c: &ModelConfig) -> Result<Policy> {
-    Policy::from_cli(&args.str_or("policy", "vanilla"), c.top_k, c.n_experts)
+    PolicySpec::parse(&args.str_or("policy", "vanilla"))?.build(c.top_k, c.n_experts)
 }
 
 fn engine_config(args: &Args, c: &ModelConfig) -> Result<EngineConfig> {
     Ok(EngineConfig {
-        policy: parse_policy(args, c)?,
         mask_padding: !args.flag("no-mask-padding"),
         max_running: args.usize_or("max-running", 8)?,
         max_queue: args.usize_or("max-queue", 64)?,
-        eos_token: None,
-        cost_model: H100Presets::for_config(&c.name),
+        sched: SchedMode::from_cli(&args.str_or("sched", "continuous"))?,
+        prefill_chunk: args.usize_opt("prefill-chunk")?,
+        adaptive: args.flag("adaptive"),
+        ..EngineConfig::new(parse_policy(args, c)?, H100Presets::for_config(&c.name))
     })
 }
 
@@ -150,14 +159,17 @@ fn cmd_generate<B: Backend>(args: &Args, runner: ModelRunner<B>, tok: Tokenizer)
     let prompt: Vec<i32> = tok.encode(&prompt_text).iter().map(|&t| t as i32).collect();
     let ecfg = engine_config(args, runner.cfg())?;
     let mut engine = Engine::new(runner, ecfg)?;
-    engine.submit(GenRequest {
-        id: 1,
-        prompt,
-        max_new_tokens: args.usize_or("max-tokens", 32)?,
-        temperature: args.f64_or("temperature", 0.0)? as f32,
-        top_p: args.f64_or("top-p", 1.0)? as f32,
-        seed: args.usize_or("seed", 0)? as u64,
-    });
+    engine
+        .submit(GenRequest {
+            id: 1,
+            prompt,
+            max_new_tokens: args.usize_or("max-tokens", 32)?,
+            temperature: args.f64_or("temperature", 0.0)? as f32,
+            top_p: args.f64_or("top-p", 1.0)? as f32,
+            seed: args.usize_or("seed", 0)? as u64,
+            policy: None,
+        })
+        .map_err(|e| oea_serve::Error::Config(format!("submit: {e}")))?;
     let done = engine.run_to_completion()?;
     for f in done {
         let text = tok.decode(&f.tokens.iter().map(|&t| t as u32).collect::<Vec<_>>());
@@ -232,10 +244,11 @@ fn serve_preamble(
         ready: None,
     };
     println!(
-        "serving backend={backend} config={} policy={} max_running={max_running} \
-         max_queue={} workers={} on 127.0.0.1:{port}",
+        "serving backend={backend} config={} policy={} sched={} \
+         max_running={max_running} max_queue={} workers={} on 127.0.0.1:{port}",
         c.name,
         policy.label(),
+        SchedMode::from_cli(&args.str_or("sched", "continuous"))?.label(),
         args.usize_or("max-queue", 64)?,
         opts.http_workers,
     );

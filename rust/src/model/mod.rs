@@ -24,7 +24,7 @@ use crate::backend::{Backend, Prefilled};
 use crate::config::ModelConfig;
 use crate::moe::dispatch::{ExpertGroups, RoutedStep};
 use crate::moe::ep::rank_of;
-use crate::moe::policy::{self, Policy, RoutingInput};
+use crate::moe::policy::{self, AdaptiveRouting, Policy, RoutingInput};
 use crate::moe::ScoreMatrix;
 use crate::util::error::{Error, Result};
 
@@ -88,6 +88,22 @@ pub struct StepOutput {
     pub layers: Vec<LayerStep>,
 }
 
+/// Full routing configuration of one decode step (the engine-facing
+/// surface of [`ModelRunner::decode_step_routed`]).
+pub struct StepRouting<'a> {
+    /// the engine's default policy
+    pub policy: Policy,
+    /// apply the §6 padding fix (zero padding rows' choices)
+    pub mask_padding: bool,
+    /// per-slot policy overrides (`len == bucket`; `None` rows use
+    /// `policy`) — the server's per-request `policy` field. All-`None`
+    /// or absent takes the single-policy fast path.
+    pub overrides: Option<&'a [Option<Policy>]>,
+    /// batch-adaptive tightening of `policy` from live-B + router-mass
+    /// concentration (`None` = fixed parameters)
+    pub adaptive: Option<AdaptiveRouting>,
+}
+
 pub struct ModelRunner<B: Backend> {
     pub backend: B,
 }
@@ -126,9 +142,36 @@ impl<B: Backend> ModelRunner<B> {
         pol: Policy,
         mask_padding: bool,
     ) -> Result<StepOutput> {
+        let routing =
+            StepRouting { policy: pol, mask_padding, overrides: None, adaptive: None };
+        self.decode_step_routed(batch, tokens, pos, live, &routing)
+    }
+
+    /// One decode step under the full routing configuration: the engine's
+    /// default policy, optional per-slot overrides (the server's
+    /// per-request `policy` field), and optional batch-adaptive
+    /// tightening. [`ModelRunner::decode_step`] is the
+    /// overrides-off/adaptive-off shorthand every fixed-batch call site
+    /// uses — both run this body, so the continuous engine and the
+    /// lockstep oracle share one decode path.
+    pub fn decode_step_routed(
+        &self,
+        batch: &mut DecodeBatch<B>,
+        tokens: &[i32],
+        pos: &[i32],
+        live: &[bool],
+        routing: &StepRouting,
+    ) -> Result<StepOutput> {
         let c = self.cfg().clone();
         let b = batch.bucket;
         assert!(tokens.len() == b && pos.len() == b && live.len() == b);
+        let pol = routing.policy;
+        let mask_padding = routing.mask_padding;
+        let overrides = routing.overrides.filter(|ov| {
+            assert_eq!(ov.len(), b, "one override entry per bucket row");
+            ov.iter().any(|o| o.is_some())
+        });
+        let n_live = live.iter().filter(|&&x| x).count();
 
         let mut hidden = self.backend.embed(tokens)?;
         let mut layers = Vec::with_capacity(c.n_layers);
@@ -160,10 +203,19 @@ impl<B: Backend> ModelRunner<B> {
             // selection toward the backend's resident experts; every
             // other policy ignores the view, so the (locked) backend
             // query is skipped for them
-            let resview = match pol {
-                Policy::CacheAware { .. } => self.backend.residency_view(l),
-                Policy::Ep { alpha, .. } if alpha != 0.0 => self.backend.residency_view(l),
-                _ => None,
+            let wants_view = |p: &Policy| match p {
+                Policy::CacheAware { .. } => true,
+                Policy::Ep { alpha, .. } => *alpha != 0.0,
+                _ => false,
+            };
+            let resview = if wants_view(&pol)
+                || overrides
+                    .map(|ov| ov.iter().flatten().any(wants_view))
+                    .unwrap_or(false)
+            {
+                self.backend.residency_view(l)
+            } else {
+                None
             };
             let input = RoutingInput {
                 scores: &scores,
@@ -171,7 +223,25 @@ impl<B: Backend> ModelRunner<B> {
                 mask_padding,
                 resident: resview.as_deref(),
             };
-            let d = policy::route(pol, &input);
+            // batch-adaptive tightening of the DEFAULT policy, from this
+            // layer's live scores (per-request overrides stay verbatim —
+            // the caller pinned them). tight = 1 is the identity, so a
+            // full batch routes exactly like the non-adaptive config.
+            let pol_eff = match routing.adaptive {
+                Some(a) => policy::adapt(
+                    pol,
+                    policy::tightness(n_live, a.target_b, policy::concentration(&input)),
+                ),
+                None => pol,
+            };
+            let d = match overrides {
+                Some(ov) => {
+                    let pols: Vec<Policy> =
+                        ov.iter().map(|o| o.unwrap_or(pol_eff)).collect();
+                    policy::route_per_row(&pols, &input)?
+                }
+                None => policy::route(pol_eff, &input),
+            };
             let t_bucket = c.t_bucket_for(d.t())?;
             let ids = pad_active_list(&d.active, t_bucket, c.n_experts);
             let route_us = t0.elapsed().as_secs_f64() * 1e6;
@@ -239,6 +309,33 @@ impl<B: Backend> ModelRunner<B> {
     /// decode only). Returns backend KV rows + the last-token logits.
     pub fn prefill(&self, prompt: &[i32]) -> Result<PrefilledSeq<B>> {
         self.backend.prefill(prompt)
+    }
+
+    /// Whether the backend can run [`ModelRunner::prefill_chunk`] — the
+    /// continuous scheduler requires it and refuses to start otherwise.
+    pub fn supports_chunked_prefill(&self) -> bool {
+        self.backend.supports_chunked_prefill()
+    }
+
+    /// Run one prompt chunk (`tokens` at cache positions `pos0..`)
+    /// directly against `slot` of the decode batch, returning the last
+    /// chunk token's post-stack hidden state (`[d_model]`). The final
+    /// chunk's hidden row goes through [`ModelRunner::logits_for`] to
+    /// sample the sequence's first output token.
+    pub fn prefill_chunk(
+        &self,
+        batch: &mut DecodeBatch<B>,
+        slot: usize,
+        tokens: &[i32],
+        pos0: usize,
+    ) -> Result<Vec<f32>> {
+        assert!(slot < batch.bucket);
+        self.backend.prefill_chunk(&mut batch.cache, slot, tokens, pos0)
+    }
+
+    /// Final norm + unembedding over arbitrary hidden rows.
+    pub fn logits_for(&self, hidden: &[f32]) -> Result<Vec<f32>> {
+        self.backend.logits(hidden)
     }
 
     /// Install a prefilled sequence's KV rows into `slot` of a decode

@@ -10,6 +10,7 @@
 
 use crate::moe::masks::ExpertMask;
 use crate::moe::scores::ScoreMatrix;
+use crate::util::error::{Error, Result};
 
 /// Which routing algorithm to run. See module docs.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -58,10 +59,319 @@ pub enum Policy {
 /// Every valid `--policy` spec, for loud top-level errors: a typo'd
 /// policy NAME must enumerate what would have parsed, exactly like a
 /// typo'd key enumerates the allowed keys.
+#[deprecated(note = "derive the listing from SPEC_TABLE via policy_specs()")]
 pub const POLICY_SPECS: &str = "vanilla[:k=K] | pruned:k0=K0[,p=P] | oea:k0=K0[,k=K] | \
      oea-full:k0=K0,p=P,kmax=KM,maxp=MP | lynx:t=T[,k=K] | dynskip:tau=TAU[,k=K] | \
      expert-choice:cap=C | cache-aware:k0=K0[,k=K,alpha=A] | \
      ep:k0=K0,ranks=R[,k=K,topup=T,alpha=A]";
+
+/// One row of [`SPEC_TABLE`]: the grammar of one policy name.
+#[derive(Debug, Clone, Copy)]
+pub struct SpecTemplate {
+    pub name: &'static str,
+    /// `(key, help placeholder, required)` in canonical order. "Required"
+    /// is the canonical way to WRITE the spec (what the help listing
+    /// shows outside brackets); parsing stays lenient — every key has a
+    /// model-derived default applied at [`PolicySpec::build`] time, so
+    /// e.g. a bare `cache-aware` still parses (back-compat with the old
+    /// stringly `from_cli`).
+    pub keys: &'static [(&'static str, &'static str, bool)],
+}
+
+/// The single registry every policy-spec surface derives from: parsing
+/// (allowed keys), the `--policy` help/error listing
+/// ([`policy_specs`]), and [`PolicySpec::canonical`] key order. The
+/// legacy [`POLICY_SPECS`] constant is pinned equal to the derivation by
+/// a regression test.
+pub const SPEC_TABLE: &[SpecTemplate] = &[
+    SpecTemplate { name: "vanilla", keys: &[("k", "K", false)] },
+    SpecTemplate { name: "pruned", keys: &[("k0", "K0", true), ("p", "P", false)] },
+    SpecTemplate { name: "oea", keys: &[("k0", "K0", true), ("k", "K", false)] },
+    SpecTemplate {
+        name: "oea-full",
+        keys: &[("k0", "K0", true), ("p", "P", true), ("kmax", "KM", true), ("maxp", "MP", true)],
+    },
+    SpecTemplate { name: "lynx", keys: &[("t", "T", true), ("k", "K", false)] },
+    SpecTemplate { name: "dynskip", keys: &[("tau", "TAU", true), ("k", "K", false)] },
+    SpecTemplate { name: "expert-choice", keys: &[("cap", "C", true)] },
+    SpecTemplate {
+        name: "cache-aware",
+        keys: &[("k0", "K0", true), ("k", "K", false), ("alpha", "A", false)],
+    },
+    SpecTemplate {
+        name: "ep",
+        keys: &[
+            ("k0", "K0", true),
+            ("ranks", "R", true),
+            ("k", "K", false),
+            ("topup", "T", false),
+            ("alpha", "A", false),
+        ],
+    },
+];
+
+/// The `--policy` help/error listing, derived from [`SPEC_TABLE`]:
+/// `name:req1=V[,opt1=V]` per row, `|`-joined. Replaces the hand-kept
+/// [`POLICY_SPECS`] constant (a regression test pins them equal).
+pub fn policy_specs() -> String {
+    SPEC_TABLE
+        .iter()
+        .map(|t| {
+            let join = |req: bool| {
+                t.keys
+                    .iter()
+                    .filter(|(_, _, r)| *r == req)
+                    .map(|(k, ph, _)| format!("{k}={ph}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            let (req, opt) = (join(true), join(false));
+            match (req.is_empty(), opt.is_empty()) {
+                (true, true) => t.name.to_string(),
+                (true, false) => format!("{}[:{opt}]", t.name),
+                (false, true) => format!("{}:{req}", t.name),
+                (false, false) => format!("{}:{req}[,{opt}]", t.name),
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+/// A parsed, typed `--policy` spec — the single constructor behind the
+/// CLI, the server's per-request `policy` override, and every bench.
+/// Lifecycle: [`PolicySpec::parse`] (syntax: name, keys, value types) →
+/// [`PolicySpec::build`] (model-aware defaults + range validation) →
+/// [`Policy`]. Round-trips through [`PolicySpec::canonical`]: only
+/// explicitly-set keys are stored (`None` = "use the model default"),
+/// so what you parse is what re-prints.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicySpec {
+    Vanilla { k: Option<usize> },
+    Pruned { k0: Option<usize>, p: Option<f64> },
+    Oea { k0: Option<usize>, k: Option<usize> },
+    OeaFull { k0: Option<usize>, p: Option<f64>, kmax: Option<usize>, maxp: Option<usize> },
+    Lynx { t: Option<usize>, k: Option<usize> },
+    DynSkip { tau: Option<f64>, k: Option<usize> },
+    ExpertChoice { cap: Option<usize> },
+    CacheAware { k0: Option<usize>, k: Option<usize>, alpha: Option<f64> },
+    Ep {
+        k0: Option<usize>,
+        ranks: Option<usize>,
+        k: Option<usize>,
+        topup: Option<usize>,
+        alpha: Option<f64>,
+    },
+}
+
+impl PolicySpec {
+    /// The [`SPEC_TABLE`] name this spec prints under.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicySpec::Vanilla { .. } => "vanilla",
+            PolicySpec::Pruned { .. } => "pruned",
+            PolicySpec::Oea { .. } => "oea",
+            PolicySpec::OeaFull { .. } => "oea-full",
+            PolicySpec::Lynx { .. } => "lynx",
+            PolicySpec::DynSkip { .. } => "dynskip",
+            PolicySpec::ExpertChoice { .. } => "expert-choice",
+            PolicySpec::CacheAware { .. } => "cache-aware",
+            PolicySpec::Ep { .. } => "ep",
+        }
+    }
+
+    /// Parse `name[:k1=v1,k2=v2,...]`. Unknown names enumerate
+    /// [`policy_specs`]; unknown keys enumerate the name's allowed keys
+    /// (a typo like `oea:kmx=9` must not silently run with the default);
+    /// malformed values fail with the key and offending text.
+    pub fn parse(spec: &str) -> Result<PolicySpec> {
+        let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
+        let mut kv = std::collections::BTreeMap::new();
+        for part in rest.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("bad policy arg {part:?}")))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let tpl = SPEC_TABLE.iter().find(|t| t.name == name).ok_or_else(|| {
+            Error::Config(format!("unknown policy {name:?}; valid specs: {}", policy_specs()))
+        })?;
+        for key in kv.keys() {
+            if !tpl.keys.iter().any(|(k, _, _)| k == key) {
+                return Err(Error::Config(format!(
+                    "--policy {name}: unknown key {key:?} (allowed: {})",
+                    tpl.keys.iter().map(|(k, _, _)| *k).collect::<Vec<_>>().join(", ")
+                )));
+            }
+        }
+        let get_usize = |k: &str| -> Result<Option<usize>> {
+            kv.get(k)
+                .map(|v| {
+                    v.parse()
+                        .map_err(|_| Error::Config(format!("--policy {k}={v}: not an integer")))
+                })
+                .transpose()
+        };
+        let get_f64 = |k: &str| -> Result<Option<f64>> {
+            kv.get(k)
+                .map(|v| {
+                    v.parse()
+                        .map_err(|_| Error::Config(format!("--policy {k}={v}: not a number")))
+                })
+                .transpose()
+        };
+        Ok(match name {
+            "vanilla" => PolicySpec::Vanilla { k: get_usize("k")? },
+            "pruned" => PolicySpec::Pruned { k0: get_usize("k0")?, p: get_f64("p")? },
+            "oea" => PolicySpec::Oea { k0: get_usize("k0")?, k: get_usize("k")? },
+            "oea-full" => PolicySpec::OeaFull {
+                k0: get_usize("k0")?,
+                p: get_f64("p")?,
+                kmax: get_usize("kmax")?,
+                maxp: get_usize("maxp")?,
+            },
+            "lynx" => PolicySpec::Lynx { t: get_usize("t")?, k: get_usize("k")? },
+            "dynskip" => PolicySpec::DynSkip { tau: get_f64("tau")?, k: get_usize("k")? },
+            "expert-choice" => PolicySpec::ExpertChoice { cap: get_usize("cap")? },
+            "cache-aware" => PolicySpec::CacheAware {
+                k0: get_usize("k0")?,
+                k: get_usize("k")?,
+                alpha: get_f64("alpha")?,
+            },
+            "ep" => PolicySpec::Ep {
+                k0: get_usize("k0")?,
+                ranks: get_usize("ranks")?,
+                k: get_usize("k")?,
+                topup: get_usize("topup")?,
+                alpha: get_f64("alpha")?,
+            },
+            _ => unreachable!("name was found in SPEC_TABLE"),
+        })
+    }
+
+    /// Canonical spec string: the name plus every explicitly-set key, in
+    /// [`SPEC_TABLE`] order. `parse(s.canonical())? == s` for every spec.
+    pub fn canonical(&self) -> String {
+        fn u(pairs: &mut Vec<String>, k: &str, v: Option<usize>) {
+            if let Some(v) = v {
+                pairs.push(format!("{k}={v}"));
+            }
+        }
+        fn f(pairs: &mut Vec<String>, k: &str, v: Option<f64>) {
+            if let Some(v) = v {
+                pairs.push(format!("{k}={v}"));
+            }
+        }
+        let mut pairs = Vec::new();
+        match *self {
+            PolicySpec::Vanilla { k } => u(&mut pairs, "k", k),
+            PolicySpec::Pruned { k0, p } => {
+                u(&mut pairs, "k0", k0);
+                f(&mut pairs, "p", p);
+            }
+            PolicySpec::Oea { k0, k } => {
+                u(&mut pairs, "k0", k0);
+                u(&mut pairs, "k", k);
+            }
+            PolicySpec::OeaFull { k0, p, kmax, maxp } => {
+                u(&mut pairs, "k0", k0);
+                f(&mut pairs, "p", p);
+                u(&mut pairs, "kmax", kmax);
+                u(&mut pairs, "maxp", maxp);
+            }
+            PolicySpec::Lynx { t, k } => {
+                u(&mut pairs, "t", t);
+                u(&mut pairs, "k", k);
+            }
+            PolicySpec::DynSkip { tau, k } => {
+                f(&mut pairs, "tau", tau);
+                u(&mut pairs, "k", k);
+            }
+            PolicySpec::ExpertChoice { cap } => u(&mut pairs, "cap", cap),
+            PolicySpec::CacheAware { k0, k, alpha } => {
+                u(&mut pairs, "k0", k0);
+                u(&mut pairs, "k", k);
+                f(&mut pairs, "alpha", alpha);
+            }
+            PolicySpec::Ep { k0, ranks, k, topup, alpha } => {
+                u(&mut pairs, "k0", k0);
+                u(&mut pairs, "ranks", ranks);
+                u(&mut pairs, "k", k);
+                u(&mut pairs, "topup", topup);
+                f(&mut pairs, "alpha", alpha);
+            }
+        }
+        if pairs.is_empty() {
+            self.name().to_string()
+        } else {
+            format!("{}:{}", self.name(), pairs.join(","))
+        }
+    }
+
+    /// Resolve unset keys against the model (`k` family defaults to the
+    /// model's top_k, `maxp`/`t` scale with `n_experts`), validate
+    /// ranges, and build the runnable [`Policy`].
+    pub fn build(&self, model_k: usize, n_experts: usize) -> Result<Policy> {
+        Ok(match *self {
+            PolicySpec::Vanilla { k } => Policy::Vanilla { k: k.unwrap_or(model_k) },
+            PolicySpec::Pruned { k0, p } => {
+                Policy::Pruned { k0: k0.unwrap_or(model_k), p: p.unwrap_or(1.0) }
+            }
+            PolicySpec::Oea { k0, k } => Policy::OeaSimplified {
+                k0: k0.unwrap_or(model_k),
+                k: k.unwrap_or(model_k),
+            },
+            PolicySpec::OeaFull { k0, p, kmax, maxp } => Policy::Oea {
+                k0: k0.unwrap_or(model_k),
+                p: p.unwrap_or(1.0),
+                k_max: kmax.unwrap_or(model_k),
+                max_p: maxp.unwrap_or(n_experts),
+            },
+            PolicySpec::Lynx { t, k } => Policy::Lynx {
+                k: k.unwrap_or(model_k),
+                target_t: t.unwrap_or(n_experts / 2),
+            },
+            PolicySpec::DynSkip { tau, k } => {
+                Policy::DynSkip { k: k.unwrap_or(model_k), tau: tau.unwrap_or(0.2) }
+            }
+            PolicySpec::ExpertChoice { cap } => {
+                Policy::ExpertChoice { capacity: cap.unwrap_or(2) }
+            }
+            PolicySpec::CacheAware { k0, k, alpha } => {
+                let alpha = alpha.unwrap_or(1.0);
+                if alpha < 0.0 {
+                    // a sign typo must not silently run as plain OEA
+                    return Err(Error::Config(format!(
+                        "--policy cache-aware: alpha={alpha} must be >= 0"
+                    )));
+                }
+                Policy::CacheAware { k0: k0.unwrap_or(model_k), k: k.unwrap_or(model_k), alpha }
+            }
+            PolicySpec::Ep { k0, ranks, k, topup, alpha } => {
+                let ranks = ranks.unwrap_or(1);
+                if ranks == 0 || ranks > n_experts {
+                    return Err(Error::Config(format!(
+                        "--policy ep: ranks={ranks} must be in 1..={n_experts} (n_experts)"
+                    )));
+                }
+                let alpha = alpha.unwrap_or(0.0);
+                if alpha < 0.0 {
+                    // same guard as cache-aware: a sign typo must not
+                    // silently run as plain EP-OEA
+                    return Err(Error::Config(format!(
+                        "--policy ep: alpha={alpha} must be >= 0"
+                    )));
+                }
+                Policy::Ep {
+                    k0: k0.unwrap_or(model_k),
+                    k: k.unwrap_or(model_k),
+                    ranks,
+                    topup: topup.unwrap_or(0),
+                    alpha,
+                }
+            }
+        })
+    }
+}
 
 impl Policy {
     /// Parse a CLI policy spec. Examples:
@@ -71,128 +381,20 @@ impl Policy {
     /// `cache-aware:k0=4,k=8,alpha=0.5`, `ep:k0=4,ranks=4,topup=1`.
     /// `k` defaults to the model's top_k. Unknown keys are rejected (a
     /// typo like `oea:kmx=9` must not silently run with the default).
-    pub fn from_cli(
-        spec: &str,
-        model_k: usize,
-        n_experts: usize,
-    ) -> crate::util::error::Result<Policy> {
-        use crate::util::error::Error;
-        let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
-        let mut kv = std::collections::BTreeMap::new();
-        for part in rest.split(',').filter(|p| !p.is_empty()) {
-            let (k, v) = part
-                .split_once('=')
-                .ok_or_else(|| Error::Config(format!("bad policy arg {part:?}")))?;
-            kv.insert(k.trim().to_string(), v.trim().to_string());
-        }
-        let allowed: &[&str] = match name {
-            "vanilla" => &["k"],
-            "pruned" => &["k0", "p"],
-            "oea" => &["k0", "k"],
-            "oea-full" => &["k0", "p", "kmax", "maxp"],
-            "lynx" => &["k", "t"],
-            "dynskip" => &["k", "tau"],
-            "expert-choice" => &["cap"],
-            "cache-aware" => &["k0", "k", "alpha"],
-            "ep" => &["k0", "k", "ranks", "topup", "alpha"],
-            other => {
-                return Err(Error::Config(format!(
-                    "unknown policy {other:?}; valid specs: {POLICY_SPECS}"
-                )))
-            }
-        };
-        for key in kv.keys() {
-            if !allowed.contains(&key.as_str()) {
-                return Err(Error::Config(format!(
-                    "--policy {name}: unknown key {key:?} (allowed: {})",
-                    allowed.join(", ")
-                )));
-            }
-        }
-        let get_usize = |k: &str, d: usize| -> crate::util::error::Result<usize> {
-            kv.get(k)
-                .map(|v| {
-                    v.parse()
-                        .map_err(|_| Error::Config(format!("--policy {k}={v}: not an integer")))
-                })
-                .unwrap_or(Ok(d))
-        };
-        let get_f64 = |k: &str, d: f64| -> crate::util::error::Result<f64> {
-            kv.get(k)
-                .map(|v| {
-                    v.parse()
-                        .map_err(|_| Error::Config(format!("--policy {k}={v}: not a number")))
-                })
-                .unwrap_or(Ok(d))
-        };
-        match name {
-            "vanilla" => Ok(Policy::Vanilla { k: get_usize("k", model_k)? }),
-            "pruned" => Ok(Policy::Pruned {
-                k0: get_usize("k0", model_k)?,
-                p: get_f64("p", 1.0)?,
-            }),
-            "oea" => Ok(Policy::OeaSimplified {
-                k0: get_usize("k0", model_k)?,
-                k: get_usize("k", model_k)?,
-            }),
-            "oea-full" => Ok(Policy::Oea {
-                k0: get_usize("k0", model_k)?,
-                p: get_f64("p", 1.0)?,
-                k_max: get_usize("kmax", model_k)?,
-                max_p: get_usize("maxp", n_experts)?,
-            }),
-            "lynx" => Ok(Policy::Lynx {
-                k: get_usize("k", model_k)?,
-                target_t: get_usize("t", n_experts / 2)?,
-            }),
-            "dynskip" => Ok(Policy::DynSkip {
-                k: get_usize("k", model_k)?,
-                tau: get_f64("tau", 0.2)?,
-            }),
-            "expert-choice" => Ok(Policy::ExpertChoice {
-                capacity: get_usize("cap", 2)?,
-            }),
-            "cache-aware" => {
-                let alpha = get_f64("alpha", 1.0)?;
-                if alpha < 0.0 {
-                    // a sign typo must not silently run as plain OEA
-                    return Err(Error::Config(format!(
-                        "--policy cache-aware: alpha={alpha} must be >= 0"
-                    )));
-                }
-                Ok(Policy::CacheAware {
-                    k0: get_usize("k0", model_k)?,
-                    k: get_usize("k", model_k)?,
-                    alpha,
-                })
-            }
-            "ep" => {
-                let ranks = get_usize("ranks", 1)?;
-                if ranks == 0 || ranks > n_experts {
-                    return Err(Error::Config(format!(
-                        "--policy ep: ranks={ranks} must be in 1..={n_experts} (n_experts)"
-                    )));
-                }
-                let alpha = get_f64("alpha", 0.0)?;
-                if alpha < 0.0 {
-                    // same guard as cache-aware: a sign typo must not
-                    // silently run as plain EP-OEA
-                    return Err(Error::Config(format!(
-                        "--policy ep: alpha={alpha} must be >= 0"
-                    )));
-                }
-                Ok(Policy::Ep {
-                    k0: get_usize("k0", model_k)?,
-                    k: get_usize("k", model_k)?,
-                    ranks,
-                    topup: get_usize("topup", 0)?,
-                    alpha,
-                })
-            }
-            other => Err(Error::Config(format!(
-                "unknown policy {other:?}; valid specs: {POLICY_SPECS}"
-            ))),
-        }
+    #[deprecated(note = "use PolicySpec::parse(spec)?.build(model_k, n_experts)")]
+    pub fn from_cli(spec: &str, model_k: usize, n_experts: usize) -> Result<Policy> {
+        PolicySpec::parse(spec)?.build(model_k, n_experts)
+    }
+
+    /// Whether this policy can route one row in isolation — the family
+    /// [`route_per_row`] (per-request policy overrides) accepts. Lynx,
+    /// expert-choice, and EP shape the whole batch's expert sets at once
+    /// and cannot be mixed per-request.
+    pub fn per_row_capable(&self) -> bool {
+        !matches!(
+            self,
+            Policy::Lynx { .. } | Policy::ExpertChoice { .. } | Policy::Ep { .. }
+        )
     }
 
     /// Rank count this policy routes over (1 for every non-EP policy) —
@@ -561,6 +763,231 @@ fn route_dynskip(input: &RoutingInput, k: usize, tau: f64) -> RoutingDecision {
     RoutingDecision::from_masks(input, &per, &union)
 }
 
+/// Batch-adaptive routing knobs (ISSUE 6 tentpole): how aggressively a
+/// policy's opportunistic parameters tighten with the LIVE batch. The
+/// paper's piggyback win grows with live B (more tokens to share a
+/// union), so a half-empty batch should route closer to vanilla quality
+/// and a full one should lean hard on the configured k0/alpha.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveRouting {
+    /// live-B at (or above) which the configured policy applies
+    /// unchanged; typically the engine's max_running.
+    pub target_b: usize,
+}
+
+/// Router-mass concentration of one step's scores: the mean top-1
+/// softmax score over live rows, normalized from its attainable range
+/// `[1/N, 1]` to `[0, 1]`. High concentration means routing is decisive
+/// — dropping low-rank experts (small k0) costs little quality even in
+/// a small batch; diffuse scores argue for staying near vanilla.
+pub fn concentration(input: &RoutingInput) -> f64 {
+    let s = input.scores;
+    if s.n <= 1 {
+        return 0.0;
+    }
+    let (mut sum, mut n) = (0.0f64, 0usize);
+    for i in 0..s.b {
+        if is_live(input, i) {
+            sum += s.score(i, s.ranked(i, 0)) as f64;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        return 0.0;
+    }
+    let floor = 1.0 / s.n as f64;
+    let c = ((sum / n as f64) - floor) / (1.0 - floor);
+    // NaN leakage upstream (overflow, hand-built tests) degrades to
+    // "not concentrated" rather than poisoning the adapted policy
+    if c.is_finite() {
+        c.clamp(0.0, 1.0)
+    } else {
+        0.0
+    }
+}
+
+/// Tightness in `[0, 1]`: how far from vanilla the adapted policy sits.
+/// `max(fill, concentration)` — a full batch tightens because piggyback
+/// amortizes across rows; a decisive router tightens even when the batch
+/// is small because the dropped experts carried little mass.
+pub fn tightness(n_live: usize, target_b: usize, concentration: f64) -> f64 {
+    let fill = if target_b == 0 {
+        1.0
+    } else {
+        (n_live as f64 / target_b as f64).min(1.0)
+    };
+    fill.max(concentration.clamp(0.0, 1.0))
+}
+
+/// Interpolate `pol` between vanilla quality (`tight = 0`) and its
+/// configured aggressiveness (`tight = 1`): `k0_eff = k - round((k -
+/// k0) * tight)` and `alpha_eff = alpha * tight`. `tight = 1` is the
+/// identity, so a constantly-full batch routes bitwise-identically to
+/// the non-adaptive configuration (the lockstep-oracle pin). Policies
+/// without opportunistic knobs pass through unchanged.
+pub fn adapt(pol: Policy, tight: f64) -> Policy {
+    let t = if tight.is_finite() { tight.clamp(0.0, 1.0) } else { 1.0 };
+    let lerp_k0 = |k0: usize, k: usize| -> usize {
+        if k0 >= k {
+            k0
+        } else {
+            k - (((k - k0) as f64) * t).round() as usize
+        }
+    };
+    match pol {
+        Policy::OeaSimplified { k0, k } => Policy::OeaSimplified { k0: lerp_k0(k0, k), k },
+        Policy::Oea { k0, p, k_max, max_p } => {
+            Policy::Oea { k0: lerp_k0(k0, k_max), p, k_max, max_p }
+        }
+        Policy::CacheAware { k0, k, alpha } => {
+            Policy::CacheAware { k0: lerp_k0(k0, k), k, alpha: alpha * t }
+        }
+        Policy::Ep { k0, k, ranks, topup, alpha } => {
+            Policy::Ep { k0: lerp_k0(k0, k), k, ranks, topup, alpha: alpha * t }
+        }
+        other => other,
+    }
+}
+
+/// Route one step where each row may carry its OWN policy (the server's
+/// per-request `policy` override). A uniform batch takes the plain
+/// [`route`] path — bitwise parity with the single-policy engine. Mixed
+/// batches run the shared two-phase structure with per-row parameters:
+/// every live row contributes its own baseline mask (its policy's
+/// phase-1 rule) to ONE batch union, then OEA-family rows piggyback onto
+/// that union under their own `k_max`/`max_p`. Batch-global policies
+/// (Lynx, expert-choice, EP — see [`Policy::per_row_capable`]) cannot be
+/// mixed and error loudly; the engine rejects them at submit so this is
+/// a backstop, not a request-visible path.
+pub fn route_per_row(policies: &[Policy], input: &RoutingInput) -> Result<RoutingDecision> {
+    let s = input.scores;
+    assert_eq!(policies.len(), s.b, "one policy per batch row");
+    assert_eq!(input.live.len(), s.b, "live mask must have B entries");
+    if let Some(&first) = policies.first() {
+        if policies.iter().all(|&p| p == first) {
+            if !first.per_row_capable() {
+                // uniform batch-global batches belong on the plain path,
+                // but only via route() directly — reaching here means a
+                // caller built overrides it shouldn't have
+                return Err(Error::Engine(format!(
+                    "policy {} is batch-global and cannot route per-row",
+                    first.label()
+                )));
+            }
+            return Ok(route(first, input));
+        }
+    }
+    for p in policies {
+        if !p.per_row_capable() {
+            return Err(Error::Engine(format!(
+                "policy {} is batch-global and cannot be mixed per-request",
+                p.label()
+            )));
+        }
+    }
+    // cache-aware rows rank by boosted selection scores; build one
+    // boosted matrix per distinct alpha (combine still uses raw scores)
+    let resident_nonuniform = match input.resident {
+        Some(r) => {
+            let n_res = r.iter().filter(|&&x| x).count();
+            n_res > 0 && n_res < s.n
+        }
+        None => false,
+    };
+    let mut boosted: Vec<(u64, ScoreMatrix)> = Vec::new();
+    if resident_nonuniform {
+        for p in policies {
+            if let Policy::CacheAware { alpha, .. } = p {
+                if *alpha != 0.0 && !boosted.iter().any(|(bits, _)| *bits == alpha.to_bits()) {
+                    boosted.push((
+                        alpha.to_bits(),
+                        boosted_scores(s, input.resident.unwrap(), *alpha),
+                    ));
+                }
+            }
+        }
+    }
+    let sel_for = |pol: &Policy| -> &ScoreMatrix {
+        if let Policy::CacheAware { alpha, .. } = pol {
+            if *alpha != 0.0 && resident_nonuniform {
+                return &boosted.iter().find(|(bits, _)| *bits == alpha.to_bits()).unwrap().1;
+            }
+        }
+        s
+    };
+    // phase 1: per-row baseline masks under each row's own rule
+    let mut union = ExpertMask::new(s.n);
+    let mut per: Vec<ExpertMask> = Vec::with_capacity(s.b);
+    for i in 0..s.b {
+        let mut m = ExpertMask::new(s.n);
+        if is_live(input, i) {
+            let top_prefix = |sel: &ScoreMatrix, k0: usize, p: f64, m: &mut ExpertMask| {
+                let t_i = sel.top_p_cutoff(i, p);
+                let n_i = k0.min(t_i).min(sel.n);
+                for j in 0..n_i {
+                    m.set(sel.ranked(i, j));
+                }
+            };
+            match policies[i] {
+                Policy::Vanilla { k } => top_prefix(s, k, 1.0, &mut m),
+                Policy::Pruned { k0, p } => top_prefix(s, k0, p, &mut m),
+                Policy::OeaSimplified { k0, .. } => top_prefix(s, k0, 1.0, &mut m),
+                Policy::Oea { k0, p, .. } => top_prefix(s, k0, p, &mut m),
+                Policy::CacheAware { k0, .. } => {
+                    top_prefix(sel_for(&policies[i]), k0, 1.0, &mut m)
+                }
+                Policy::DynSkip { k, tau } => {
+                    // mirror route_dynskip's per-row body
+                    let top1 = s.score(i, s.ranked(i, 0)) as f64;
+                    m.set(s.ranked(i, 0));
+                    for j in 1..k.min(s.n) {
+                        let e = s.ranked(i, j);
+                        if (s.score(i, e) as f64) >= tau * top1 {
+                            m.set(e);
+                        }
+                    }
+                }
+                _ => unreachable!("batch-global policies rejected above"),
+            }
+            union.union_with(&m);
+        }
+        per.push(m);
+    }
+    // phase 2: OEA-family rows piggyback onto the mixed union under
+    // their own limits (vanilla/pruned/dynskip rows never grow)
+    for i in 0..s.b {
+        if !is_live(input, i) {
+            continue;
+        }
+        let (k_max, max_p) = match policies[i] {
+            Policy::OeaSimplified { k, .. } => (k, s.n),
+            Policy::Oea { k_max, max_p, .. } => (k_max, max_p),
+            Policy::CacheAware { k, .. } => (k, s.n),
+            _ => continue,
+        };
+        let sel = sel_for(&policies[i]);
+        let mut size = per[i].count();
+        if size >= k_max {
+            continue;
+        }
+        for j in 0..max_p.min(s.n) {
+            let e = sel.ranked(i, j);
+            if per[i].contains(e) {
+                continue;
+            }
+            if union.contains(e) {
+                per[i].set(e);
+                size += 1;
+                if size >= k_max {
+                    break;
+                }
+            }
+        }
+    }
+    // combine weights from the RAW scores (Eq. 1), like every other path
+    Ok(RoutingDecision::from_masks(input, &per, &union))
+}
+
 /// Zhou et al. 2022: each expert selects its top-`capacity` live tokens.
 fn route_expert_choice(input: &RoutingInput, capacity: usize) -> RoutingDecision {
     let s = input.scores;
@@ -582,6 +1009,9 @@ fn route_expert_choice(input: &RoutingInput, capacity: usize) -> RoutingDecision
 
 #[cfg(test)]
 mod tests {
+    // the legacy from_cli / POLICY_SPECS surface stays covered while the
+    // deprecated shims exist (one PR)
+    #![allow(deprecated)]
     use super::*;
 
     /// 4 tokens, 8 experts, hand-built scores.
@@ -1016,5 +1446,200 @@ mod tests {
             }
         }
         assert!(per_expert.iter().all(|&c| c <= 1));
+    }
+
+    // ---- PolicySpec (ISSUE 6: typed parse -> validate -> build) --------
+
+    #[test]
+    fn policy_specs_derivation_matches_legacy_constant() {
+        // the hand-kept help constant and the SPEC_TABLE derivation must
+        // agree character-for-character while the deprecated const lives
+        assert_eq!(policy_specs(), POLICY_SPECS);
+    }
+
+    #[test]
+    fn every_spec_in_the_table_round_trips() {
+        // a fully-keyed canonical example per SPEC_TABLE row: parse ->
+        // canonical must re-print the input, and parse(canonical) == spec
+        let examples = [
+            "vanilla:k=4",
+            "pruned:k0=3,p=0.7",
+            "oea:k0=3,k=8",
+            "oea-full:k0=3,p=0.7,kmax=9,maxp=32",
+            "lynx:t=16,k=8",
+            "dynskip:tau=0.3,k=8",
+            "expert-choice:cap=2",
+            "cache-aware:k0=4,k=8,alpha=0.5",
+            "ep:k0=4,ranks=4,k=8,topup=1,alpha=0.5",
+        ];
+        assert_eq!(examples.len(), SPEC_TABLE.len(), "one example per table row");
+        for (ex, tpl) in examples.iter().zip(SPEC_TABLE) {
+            let spec = PolicySpec::parse(ex).unwrap();
+            assert_eq!(spec.name(), tpl.name);
+            assert_eq!(spec.canonical(), *ex, "canonical() must re-print the input");
+            assert_eq!(PolicySpec::parse(&spec.canonical()).unwrap(), spec);
+            spec.build(8, 32).unwrap();
+        }
+        // bare names round-trip too (every key is defaultable at build)
+        for tpl in SPEC_TABLE {
+            let spec = PolicySpec::parse(tpl.name).unwrap();
+            assert_eq!(spec.canonical(), tpl.name);
+        }
+    }
+
+    #[test]
+    fn spec_build_agrees_with_legacy_from_cli() {
+        for spec in [
+            "vanilla",
+            "pruned:k0=3",
+            "oea:k0=3",
+            "oea-full:k0=3,p=0.7,kmax=9,maxp=32",
+            "lynx:t=16",
+            "dynskip:tau=0.3",
+            "expert-choice:cap=2",
+            "cache-aware",
+            "cache-aware:k0=4,k=8,alpha=0.5",
+            "ep",
+            "ep:k0=4,ranks=4,topup=1,alpha=0.5",
+        ] {
+            let new = PolicySpec::parse(spec).unwrap().build(8, 32).unwrap();
+            let old = Policy::from_cli(spec, 8, 32).unwrap();
+            assert_eq!(new, old, "{spec}");
+        }
+    }
+
+    #[test]
+    fn spec_parse_rejects_like_from_cli() {
+        // error surfaces must stay as loud as the stringly path's
+        let e = PolicySpec::parse("oae:k0=3").unwrap_err().to_string();
+        assert!(e.contains("unknown policy"), "{e}");
+        assert!(e.contains("cache-aware:k0=K0[,k=K,alpha=A]"), "{e}");
+        let e = PolicySpec::parse("oea:kmx=9").unwrap_err().to_string();
+        assert!(e.contains("unknown key"), "{e}");
+        assert!(e.contains("allowed"), "{e}");
+        let e = PolicySpec::parse("oea:k0").unwrap_err().to_string();
+        assert!(e.contains("bad policy arg"), "{e}");
+        let e = PolicySpec::parse("oea:k0=x").unwrap_err().to_string();
+        assert!(e.contains("not an integer"), "{e}");
+        // range validation lives in build, not parse
+        let spec = PolicySpec::parse("ep:ranks=0").unwrap();
+        assert!(spec.build(8, 32).unwrap_err().to_string().contains("ranks=0"));
+        let spec = PolicySpec::parse("cache-aware:alpha=-1").unwrap();
+        assert!(spec.build(8, 32).unwrap_err().to_string().contains("alpha=-1"));
+    }
+
+    // ---- batch-adaptive routing (ISSUE 6 tentpole) ---------------------
+
+    #[test]
+    fn adapt_is_identity_at_full_tightness() {
+        // tight = 1 must reproduce the configured policy exactly — the
+        // pin that keeps adaptive mode bitwise-equal to the oracle when
+        // the batch stays full
+        for pol in [
+            Policy::OeaSimplified { k0: 2, k: 8 },
+            Policy::Oea { k0: 2, p: 0.9, k_max: 6, max_p: 16 },
+            Policy::CacheAware { k0: 2, k: 8, alpha: 0.5 },
+            Policy::Ep { k0: 2, k: 8, ranks: 4, topup: 1, alpha: 0.5 },
+            Policy::Vanilla { k: 8 },
+        ] {
+            assert_eq!(adapt(pol, 1.0), pol);
+        }
+    }
+
+    #[test]
+    fn adapt_relaxes_to_vanilla_when_loose() {
+        // tight = 0: k0 widens to k and the residency bias vanishes
+        assert_eq!(
+            adapt(Policy::OeaSimplified { k0: 2, k: 8 }, 0.0),
+            Policy::OeaSimplified { k0: 8, k: 8 }
+        );
+        assert_eq!(
+            adapt(Policy::CacheAware { k0: 2, k: 8, alpha: 0.5 }, 0.0),
+            Policy::CacheAware { k0: 8, k: 8, alpha: 0.0 }
+        );
+        // half tightness lands between (k0 = 8 - round(6*0.5) = 5)
+        assert_eq!(
+            adapt(Policy::OeaSimplified { k0: 2, k: 8 }, 0.5),
+            Policy::OeaSimplified { k0: 5, k: 8 }
+        );
+        // non-opportunistic policies pass through at any tightness
+        assert_eq!(adapt(Policy::Vanilla { k: 4 }, 0.3), Policy::Vanilla { k: 4 });
+    }
+
+    #[test]
+    fn tightness_tracks_fill_and_concentration() {
+        assert_eq!(tightness(8, 8, 0.0), 1.0);
+        assert_eq!(tightness(2, 8, 0.0), 0.25);
+        // a decisive router tightens even a near-empty batch
+        assert_eq!(tightness(2, 8, 0.9), 0.9);
+        // degenerate target: always tight
+        assert_eq!(tightness(0, 0, 0.0), 1.0);
+        let s = fixture();
+        let live = live4();
+        let c = concentration(&input(&s, &live));
+        assert!((0.0..=1.0).contains(&c), "c={c}");
+        // fixture rows are decisive (top-1 ~0.4-0.9 over 8 experts)
+        assert!(c > 0.2, "c={c}");
+    }
+
+    // ---- per-row routing (per-request policy overrides) ----------------
+
+    #[test]
+    fn route_per_row_uniform_matches_route() {
+        let s = fixture();
+        let live = live4();
+        let inp = input(&s, &live);
+        for pol in [
+            Policy::Vanilla { k: 2 },
+            Policy::OeaSimplified { k0: 1, k: 3 },
+            Policy::DynSkip { k: 3, tau: 0.2 },
+        ] {
+            let a = route(pol, &inp);
+            let b = route_per_row(&vec![pol; 4], &inp).unwrap();
+            assert_eq!(a.sets, b.sets);
+            assert_eq!(a.combine, b.combine);
+            assert_eq!(a.active, b.active);
+        }
+    }
+
+    #[test]
+    fn route_per_row_mixes_families_through_one_union() {
+        let s = fixture();
+        let live = live4();
+        let inp = input(&s, &live);
+        let pols = [
+            Policy::Vanilla { k: 2 },
+            Policy::OeaSimplified { k0: 1, k: 4 },
+            Policy::Pruned { k0: 1, p: 1.0 },
+            Policy::OeaSimplified { k0: 1, k: 4 },
+        ];
+        let d = route_per_row(&pols, &inp).unwrap();
+        // vanilla row keeps exactly its top-2 (never piggybacks)
+        assert_eq!(d.sets[0].len(), 2);
+        // pruned row keeps exactly its top-1
+        assert_eq!(d.sets[2].len(), 1);
+        // OEA rows only ever add union members
+        for (i, set) in d.sets.iter().enumerate() {
+            for e in set {
+                assert!(d.active.contains(e), "row {i} routed outside the union");
+            }
+        }
+        // combine still normalizes to 1 per live row
+        for i in 0..4 {
+            let sum: f32 = d.combine[i * 8..(i + 1) * 8].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {i} sum={sum}");
+        }
+    }
+
+    #[test]
+    fn route_per_row_rejects_batch_global_policies() {
+        let s = fixture();
+        let live = live4();
+        let inp = input(&s, &live);
+        let mut pols = vec![Policy::Vanilla { k: 2 }; 4];
+        pols[1] = Policy::Lynx { k: 2, target_t: 4 };
+        assert!(route_per_row(&pols, &inp).is_err());
+        pols[1] = Policy::Ep { k0: 1, k: 2, ranks: 2, topup: 0, alpha: 0.0 };
+        assert!(route_per_row(&pols, &inp).is_err());
     }
 }

@@ -11,8 +11,17 @@
 //!
 //! Endpoints:
 //!
-//!   POST /generate   {"prompt": str, "max_tokens": n, "temperature": x,
-//!                     "top_p": x, "stream": bool}
+//!   POST /generate   versioned request schema (v1): {"version": 1,
+//!                     "prompt": str, "max_tokens": n, "temperature": x,
+//!                     "top_p": x, "stream": bool, "seed": n,
+//!                     "policy": "spec"}. Only "prompt" is required;
+//!                    "version" defaults to 1 (the only version). Unknown
+//!                    fields are REJECTED with a 400 naming the field —
+//!                    a typo'd "max_token" must not silently become the
+//!                    default. "policy" selects a routing-policy spec
+//!                    (same grammar as --policy) for THIS request's
+//!                    decode rows; batch-global specs (lynx /
+//!                    expert-choice / ep) are a 400.
 //!                    stream=false -> one JSON object (text + telemetry)
 //!                    stream=true  -> chunked NDJSON: one line per token
 //!                    ({"id","index","token","text"} — per-token text is
@@ -20,8 +29,12 @@
 //!                    characters), then a final {"done":true, "text":
 //!                    <authoritative full text>, ...telemetry} line
 //!                    queue full   -> 429 + Retry-After (backpressure)
+//!                    unservable   -> 400 (empty/overlong prompt, bad
+//!                    policy override — retrying is useless)
 //!   GET  /metrics    -> MoE + request telemetry + SLO percentiles
-//!                    (queue wait / TTFT / TPOT / e2e, p50/p95/p99)
+//!                    (queue wait / TTFT / TPOT / e2e, p50/p95/p99) +
+//!                    scheduler block (mode, live-B, recompositions,
+//!                    prefill chunks)
 //!   GET  /healthz    -> ok
 //!   POST /shutdown   -> stop accepting, drain running requests, exit
 
@@ -35,7 +48,10 @@ use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use crate::backend::Backend;
-use crate::coordinator::{Engine, FinishReason, FinishedRequest, GenRequest, TokenEvent};
+use crate::coordinator::{
+    Engine, FinishReason, FinishedRequest, GenRequest, SubmitError, TokenEvent,
+};
+use crate::moe::policy::PolicySpec;
 use crate::util::bpe::Tokenizer;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
@@ -85,6 +101,9 @@ enum GenEvent {
     Rejected,
     /// server draining, no new work accepted -> HTTP 503
     Draining,
+    /// the request can never be served (empty/overlong prompt, invalid
+    /// policy override) -> HTTP 400 with the reason
+    Unservable(String),
     Token(TokenEvent),
     Done(Box<FinishedRequest>),
 }
@@ -150,19 +169,21 @@ where
             loop {
                 match rx.try_recv() {
                     Ok(EngineMsg::Generate(mut req, wants_tokens, reply)) => {
-                        if draining {
-                            let _ = reply.send(GenEvent::Draining);
-                            continue;
-                        }
                         req.id = next_id;
                         next_id += 1;
                         let id = req.id;
-                        match engine.try_submit(req) {
-                            Ok(()) => {
+                        match engine.submit(req) {
+                            Ok(_ticket) => {
                                 streams.insert(id, (reply, wants_tokens));
                             }
-                            Err(_) => {
+                            Err(SubmitError::QueueFull) => {
                                 let _ = reply.send(GenEvent::Rejected);
+                            }
+                            Err(SubmitError::Draining) => {
+                                let _ = reply.send(GenEvent::Draining);
+                            }
+                            Err(SubmitError::NeverFits(why)) => {
+                                let _ = reply.send(GenEvent::Unservable(why));
                             }
                         }
                     }
@@ -177,9 +198,13 @@ where
                     Ok(EngineMsg::Metrics(reply)) => {
                         let _ = reply.send(metrics_json(&engine));
                     }
-                    Ok(EngineMsg::Shutdown) => draining = true,
+                    Ok(EngineMsg::Shutdown) => {
+                        engine.begin_drain();
+                        draining = true;
+                    }
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
+                        engine.begin_drain();
                         draining = true;
                         break;
                     }
@@ -364,6 +389,10 @@ fn handle_generate(
                 let _ = write_response(&mut stream, 503, &err_json("server draining"));
                 return;
             }
+            Ok(GenEvent::Unservable(why)) => {
+                let _ = write_response(&mut stream, 400, &err_json(&why));
+                return;
+            }
             Ok(GenEvent::Token(ev)) => {
                 if !stream_mode {
                     continue; // tokens arrive again inside Done
@@ -436,8 +465,41 @@ fn begin_stream(stream: &TcpStream) -> Option<ChunkedWriter> {
     ChunkedWriter::begin(clone, 200, "application/x-ndjson").ok()
 }
 
+/// The complete v1 `/generate` schema. A request naming any field outside
+/// this list is rejected with a 400 carrying the offending name — a
+/// typo'd `"max_token"` must fail loudly, not silently become the
+/// default.
+const GENERATE_FIELDS_V1: &[&str] = &[
+    "version",
+    "prompt",
+    "max_tokens",
+    "temperature",
+    "top_p",
+    "stream",
+    "seed",
+    "policy",
+];
+
 fn parse_generate(req: &HttpRequest, tok: &Tokenizer) -> Result<(GenRequest, bool)> {
     let body = Json::parse(&req.body)?;
+    for key in body.as_obj()?.keys() {
+        if !GENERATE_FIELDS_V1.contains(&key.as_str()) {
+            return Err(Error::Json(format!(
+                "unknown field {key:?} (v1 fields: {})",
+                GENERATE_FIELDS_V1.join(", ")
+            )));
+        }
+    }
+    let version = body
+        .get_opt("version")
+        .map(|v| v.as_usize())
+        .transpose()?
+        .unwrap_or(1);
+    if version != 1 {
+        return Err(Error::Json(format!(
+            "unsupported schema version {version} (this server speaks version 1)"
+        )));
+    }
     let prompt_text = body.get("prompt")?.as_str()?;
     let max_tokens = body
         .get_opt("max_tokens")
@@ -459,6 +521,21 @@ fn parse_generate(req: &HttpRequest, tok: &Tokenizer) -> Result<(GenRequest, boo
         .map(|v| v.as_bool())
         .transpose()?
         .unwrap_or(false);
+    let seed = body
+        .get_opt("seed")
+        .map(|v| v.as_f64())
+        .transpose()?
+        .map(|s| s as u64)
+        .unwrap_or(0xC0FFEE);
+    // parse the override spec at the edge (400 on a typo'd spec before
+    // the request ever reaches the engine); the engine validates the
+    // BUILT policy — model-shape bounds, batch-global rejection — at
+    // submit
+    let policy = body
+        .get_opt("policy")
+        .map(|v| Ok::<_, Error>(PolicySpec::parse(v.as_str()?)?))
+        .transpose()
+        .map_err(|e| Error::Json(format!("policy: {e}")))?;
     let prompt: Vec<i32> = tok.encode(prompt_text).iter().map(|&t| t as i32).collect();
     Ok((
         GenRequest {
@@ -467,7 +544,8 @@ fn parse_generate(req: &HttpRequest, tok: &Tokenizer) -> Result<(GenRequest, boo
             max_new_tokens: max_tokens,
             temperature,
             top_p,
-            seed: 0xC0FFEE,
+            seed,
+            policy,
         },
         stream_mode,
     ))
@@ -530,6 +608,7 @@ fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
         ),
         ("n_running", Json::num(engine.n_running() as f64)),
         ("n_queued", Json::num(engine.n_queued() as f64)),
+        ("scheduler", scheduler_json(engine)),
         ("slo", engine.requests.slo_json()),
     ];
     // per-policy routed-load histogram: how the served traffic actually
@@ -562,6 +641,28 @@ fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
         pairs.push(("ep", ep_json(engine)));
     }
     Json::obj(pairs)
+}
+
+/// The `/metrics` scheduler block: which scheduling mode is live, the
+/// instantaneous and average decode batch size (live-B — the quantity
+/// batch-adaptive routing keys off), and the continuous-batching
+/// counters (recompositions = decode-set membership changes between
+/// consecutive steps; prefill chunks/tokens = chunked-prefill volume).
+fn scheduler_json<B: Backend>(engine: &Engine<B>) -> Json {
+    let c = engine.sched_counters();
+    Json::obj(vec![
+        ("mode", Json::str(engine.sched_mode().label())),
+        ("live_b", Json::num(engine.last_decode_b() as f64)),
+        ("prefilling", Json::num(engine.n_prefilling() as f64)),
+        ("avg_live_b", Json::num(c.avg_live())),
+        ("max_live_b", Json::num(c.max_live as f64)),
+        ("steps", Json::num(c.steps as f64)),
+        ("decode_steps", Json::num(c.decode_steps as f64)),
+        ("admitted", Json::num(c.admitted as f64)),
+        ("recompositions", Json::num(c.recompositions as f64)),
+        ("prefill_chunks", Json::num(c.prefill_chunks as f64)),
+        ("prefill_tokens", Json::num(c.prefill_tokens as f64)),
+    ])
 }
 
 /// The `/metrics` expert-parallelism block (backends with `ep_ranks > 1`).

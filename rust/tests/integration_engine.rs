@@ -5,10 +5,10 @@
 
 use oea_serve::backend::cpu::CpuBackend;
 use oea_serve::config::ModelConfig;
-use oea_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest};
+use oea_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest, SubmitError};
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
-use oea_serve::moe::policy::Policy;
+use oea_serve::moe::policy::{Policy, PolicySpec};
 
 fn runner() -> ModelRunner<CpuBackend> {
     ModelRunner::new(CpuBackend::synthetic(ModelConfig::preset("tiny").unwrap(), 0))
@@ -20,12 +20,9 @@ where
     F: FnOnce(&mut Engine<CpuBackend>) -> R,
 {
     let mut cfg = EngineConfig {
-        policy: Policy::Vanilla { k: 2 },
-        mask_padding: true,
         max_running: 4,
         max_queue: usize::MAX,
-        eos_token: None,
-        cost_model: H100Presets::qwen3_30b(),
+        ..EngineConfig::new(Policy::Vanilla { k: 2 }, H100Presets::qwen3_30b())
     };
     cfg_mod(&mut cfg);
     let mut engine = Engine::new(runner(), cfg).unwrap();
@@ -40,6 +37,7 @@ fn req(id: u64, len: usize, gen: usize) -> GenRequest {
         temperature: 0.0,
         top_p: 1.0,
         seed: id,
+        policy: None,
     }
 }
 
@@ -47,7 +45,7 @@ fn req(id: u64, len: usize, gen: usize) -> GenRequest {
 fn serves_batch_to_completion() {
     with_engine(|_| {}, |engine| {
         for i in 0..6 {
-            engine.submit(req(i, 5 + i as usize, 8));
+            engine.submit(req(i, 5 + i as usize, 8)).unwrap();
         }
         let done = engine.run_to_completion().unwrap();
         assert_eq!(done.len(), 6);
@@ -67,7 +65,7 @@ fn respects_max_running() {
         |c| c.max_running = 2,
         |engine| {
             for i in 0..5 {
-                engine.submit(req(100 + i, 4, 4));
+                engine.submit(req(100 + i, 4, 4)).unwrap();
             }
             while !engine.idle() {
                 engine.step().unwrap();
@@ -81,7 +79,7 @@ fn respects_max_running() {
 fn greedy_generation_is_deterministic() {
     let run = || {
         with_engine(|_| {}, |engine| {
-            engine.submit(req(7, 6, 10));
+            engine.submit(req(7, 6, 10)).unwrap();
             let done = engine.run_to_completion().unwrap();
             done[0].tokens.clone()
         })
@@ -95,7 +93,7 @@ fn batched_greedy_matches_solo_greedy() {
     let solo = with_engine(
         |c| c.max_running = 1,
         |engine| {
-            engine.submit(req(42, 7, 8));
+            engine.submit(req(42, 7, 8)).unwrap();
             engine.run_to_completion().unwrap()[0].tokens.clone()
         },
     );
@@ -103,7 +101,7 @@ fn batched_greedy_matches_solo_greedy() {
         |c| c.max_running = 4,
         |engine| {
             for i in 0..4 {
-                engine.submit(req(if i == 0 { 42 } else { 200 + i }, 7, 8));
+                engine.submit(req(if i == 0 { 42 } else { 200 + i }, 7, 8)).unwrap();
             }
             let done = engine.run_to_completion().unwrap();
             done.iter().find(|f| f.id == 42).unwrap().tokens.clone()
@@ -118,7 +116,7 @@ fn oea_engine_activates_fewer_experts() {
         |c| c.policy = Policy::Vanilla { k: 2 },
         |engine| {
             for i in 0..4 {
-                engine.submit(req(300 + i, 6, 6));
+                engine.submit(req(300 + i, 6, 6)).unwrap();
             }
             engine.run_to_completion().unwrap();
             engine.moe.avg_t()
@@ -128,7 +126,7 @@ fn oea_engine_activates_fewer_experts() {
         |c| c.policy = Policy::OeaSimplified { k0: 1, k: 2 },
         |engine| {
             for i in 0..4 {
-                engine.submit(req(300 + i, 6, 6));
+                engine.submit(req(300 + i, 6, 6)).unwrap();
             }
             engine.run_to_completion().unwrap();
             engine.moe.avg_t()
@@ -143,7 +141,7 @@ fn oea_engine_activates_fewer_experts() {
 #[test]
 fn every_policy_serves_through_the_engine() {
     // the eight routing policies all drive the full admission -> prefill
-    // -> lockstep decode -> sample -> retire pipeline on the CPU backend
+    // -> decode -> sample -> retire pipeline on the CPU backend
     let policies = [
         Policy::Vanilla { k: 2 },
         Policy::Pruned { k0: 1, p: 0.8 },
@@ -159,7 +157,7 @@ fn every_policy_serves_through_the_engine() {
             |c| c.policy = pol,
             |engine| {
                 for i in 0..3 {
-                    engine.submit(req(700 + i, 5, 4));
+                    engine.submit(req(700 + i, 5, 4)).unwrap();
                 }
                 let done = engine.run_to_completion().unwrap();
                 assert_eq!(done.len(), 3, "policy {} lost requests", pol.label());
@@ -182,17 +180,21 @@ fn bounded_queue_rejects_and_counts() {
         },
         |engine| {
             // idle capacity = free slots + max_queue = 1 + 2
-            assert!(engine.try_submit(req(1, 4, 4)).is_ok());
-            assert!(engine.try_submit(req(2, 4, 4)).is_ok());
-            assert!(engine.try_submit(req(3, 4, 4)).is_ok());
-            let back = engine.try_submit(req(4, 4, 4));
-            assert_eq!(back.unwrap_err().id, 4, "rejected request returns to caller");
+            let t = engine.submit(req(1, 4, 4)).unwrap();
+            assert_eq!((t.id, t.position), (1, 0), "first ticket heads the queue");
+            assert_eq!(engine.submit(req(2, 4, 4)).unwrap().position, 1);
+            assert_eq!(engine.submit(req(3, 4, 4)).unwrap().position, 2);
+            assert_eq!(engine.submit(req(4, 4, 4)), Err(SubmitError::QueueFull));
             assert_eq!(engine.requests.n_rejected, 1);
             // a step admits one into the running slot: 1 running + 2
             // queued is the steady-state bound, so the system stays full
             engine.step().unwrap();
             assert_eq!(engine.n_running(), 1);
-            assert!(engine.try_submit(req(5, 4, 4)).is_err(), "slots busy + queue full");
+            assert_eq!(
+                engine.submit(req(5, 4, 4)),
+                Err(SubmitError::QueueFull),
+                "slots busy + queue full"
+            );
             let done = engine.run_to_completion().unwrap();
             assert_eq!(done.len(), 3, "accepted requests all finish");
             // queue-wait telemetry recorded per admission
@@ -206,19 +208,112 @@ fn bounded_queue_rejects_and_counts() {
 }
 
 #[test]
-#[should_panic(expected = "queue full")]
-fn submit_panics_on_overflow() {
+fn submit_overflow_is_a_typed_error_not_a_panic() {
+    // the old API panicked here; ISSUE 6 makes overflow a value the
+    // caller handles (HTTP 429 at the server edge)
     with_engine(
         |c| {
             c.max_running = 1;
             c.max_queue = 1;
         },
         |engine| {
-            engine.submit(req(1, 4, 4));
-            engine.submit(req(2, 4, 4));
-            engine.submit(req(3, 4, 4)); // beyond free slot + queue bound
+            engine.submit(req(1, 4, 4)).unwrap();
+            engine.submit(req(2, 4, 4)).unwrap();
+            // beyond free slot + queue bound
+            let err = engine.submit(req(3, 4, 4)).unwrap_err();
+            assert_eq!(err, SubmitError::QueueFull);
+            assert!(err.to_string().contains("queue full"));
         },
     );
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_try_submit_still_bounds_the_queue() {
+    // the one-PR compatibility shim: Ok on admission, Err(request) back
+    // on any refusal
+    with_engine(
+        |c| {
+            c.max_running = 1;
+            c.max_queue = 1;
+        },
+        |engine| {
+            assert!(engine.try_submit(req(1, 4, 4)).is_ok());
+            assert!(engine.try_submit(req(2, 4, 4)).is_ok());
+            let back = engine.try_submit(req(3, 4, 4));
+            assert_eq!(back.unwrap_err().id, 3, "rejected request returns to caller");
+        },
+    );
+}
+
+#[test]
+fn per_request_policy_override_is_validated_at_submit() {
+    with_engine(|_| {}, |engine| {
+        // a per-row-capable override is admitted and serves normally
+        let mut r = req(950, 5, 4);
+        r.policy = Some(PolicySpec::parse("oea:k0=1").unwrap());
+        engine.submit(r).unwrap();
+        // a batch-global override can never mix into a shared batch
+        let mut r = req(951, 5, 4);
+        r.policy = Some(PolicySpec::parse("expert-choice:cap=2").unwrap());
+        match engine.submit(r) {
+            Err(SubmitError::NeverFits(why)) => {
+                assert!(why.contains("batch-global"), "why = {why}")
+            }
+            other => panic!("expected NeverFits, got {other:?}"),
+        }
+        // an override exceeding the model's expert count fails the build
+        let mut r = req(952, 5, 4);
+        r.policy = Some(PolicySpec::parse("oea:k0=1,k=999").unwrap());
+        assert!(matches!(engine.submit(r), Err(SubmitError::NeverFits(_))));
+        let done = engine.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1, "only the valid override served");
+        assert_eq!(done[0].id, 950);
+        assert_eq!(done[0].tokens.len(), 4);
+    });
+}
+
+#[test]
+fn mixed_policy_batch_serves_every_request() {
+    // rows under different per-request policies decode in ONE batch
+    with_engine(|_| {}, |engine| {
+        for (i, spec) in [None, Some("vanilla:k=1"), Some("cache-aware:k0=1,alpha=0.5"), None]
+            .iter()
+            .enumerate()
+        {
+            let mut r = req(960 + i as u64, 5, 6);
+            r.policy = spec.map(|s| PolicySpec::parse(s).unwrap());
+            engine.submit(r).unwrap();
+        }
+        let done = engine.run_to_completion().unwrap();
+        assert_eq!(done.len(), 4);
+        for f in &done {
+            assert_eq!(f.tokens.len(), 6, "request {}", f.id);
+        }
+    });
+}
+
+#[test]
+fn policy_override_output_matches_engine_default_of_same_policy() {
+    // a solo request overriding to vanilla:k=1 must produce the same
+    // tokens as an engine whose DEFAULT policy is vanilla k=1
+    let via_default = with_engine(
+        |c| c.policy = Policy::Vanilla { k: 1 },
+        |engine| {
+            engine.submit(req(970, 6, 8)).unwrap();
+            engine.run_to_completion().unwrap()[0].tokens.clone()
+        },
+    );
+    let via_override = with_engine(
+        |c| c.policy = Policy::Vanilla { k: 2 },
+        |engine| {
+            let mut r = req(970, 6, 8);
+            r.policy = Some(PolicySpec::parse("vanilla:k=1").unwrap());
+            engine.submit(r).unwrap();
+            engine.run_to_completion().unwrap()[0].tokens.clone()
+        },
+    );
+    assert_eq!(via_default, via_override);
 }
 
 #[test]
@@ -226,7 +321,7 @@ fn single_token_budget_is_respected() {
     // max_new_tokens=1 must yield exactly one token (the prefill sample),
     // and max_new_tokens=0 none — not the decode-step overshoot
     with_engine(|_| {}, |engine| {
-        engine.submit(req(21, 5, 1));
+        engine.submit(req(21, 5, 1)).unwrap();
         let done = engine.run_to_completion().unwrap();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].tokens.len(), 1);
@@ -236,7 +331,7 @@ fn single_token_budget_is_respected() {
         assert_eq!(engine.requests.total_generated_tokens, 1);
     });
     with_engine(|_| {}, |engine| {
-        engine.submit(req(22, 5, 0));
+        engine.submit(req(22, 5, 0)).unwrap();
         let done = engine.run_to_completion().unwrap();
         assert_eq!(done.len(), 1);
         assert!(done[0].tokens.is_empty());
@@ -246,7 +341,7 @@ fn single_token_budget_is_respected() {
 #[test]
 fn token_events_cover_every_generated_token() {
     with_engine(|_| {}, |engine| {
-        engine.submit(req(11, 5, 6));
+        engine.submit(req(11, 5, 6)).unwrap();
         let mut tokens = Vec::new();
         let mut finished = Vec::new();
         while !engine.idle() {
@@ -270,13 +365,18 @@ fn token_events_cover_every_generated_token() {
 }
 
 #[test]
-fn rejects_overlong_prompts() {
+fn rejects_overlong_prompts_at_submit() {
+    // a prompt that can NEVER fit a KV slot is refused up front with a
+    // typed error (the server's 400), not admitted and killed later
     with_engine(|_| {}, |engine| {
-        engine.submit(req(900, 4096, 4)); // greatly exceeds s_max
-        let done = engine.run_to_completion().unwrap();
-        assert_eq!(done.len(), 1);
-        assert_eq!(done[0].reason, FinishReason::KvExhausted);
-        assert!(done[0].tokens.is_empty());
+        match engine.submit(req(900, 4096, 4)) {
+            Err(SubmitError::NeverFits(why)) => assert!(why.contains("4096"), "why = {why}"),
+            other => panic!("expected NeverFits, got {other:?}"),
+        }
+        assert_eq!(engine.requests.n_rejected, 1);
+        assert!(engine.idle(), "nothing was admitted");
+        // empty prompts are equally unservable
+        assert!(matches!(engine.submit(req(905, 0, 4)), Err(SubmitError::NeverFits(_))));
     });
 }
 
@@ -284,7 +384,7 @@ fn rejects_overlong_prompts() {
 fn kv_exhaustion_terminates_generation() {
     // tiny s_max = 128; ask for more tokens than fit
     with_engine(|_| {}, |engine| {
-        engine.submit(req(901, 100, 1000));
+        engine.submit(req(901, 100, 1000)).unwrap();
         let done = engine.run_to_completion().unwrap();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].reason, FinishReason::KvExhausted);
@@ -298,12 +398,12 @@ fn continuous_admission_joins_mid_flight() {
     with_engine(
         |c| c.max_running = 2,
         |engine| {
-            engine.submit(req(500, 5, 12));
+            engine.submit(req(500, 5, 12)).unwrap();
             // run a few steps before the second arrives
             for _ in 0..4 {
                 engine.step().unwrap();
             }
-            engine.submit(req(501, 5, 12));
+            engine.submit(req(501, 5, 12)).unwrap();
             let done = engine.run_to_completion().unwrap();
             assert_eq!(done.len(), 2);
             for f in done {
@@ -318,8 +418,8 @@ fn cancel_running_request_frees_slot_early() {
     with_engine(
         |c| c.max_running = 2,
         |engine| {
-            engine.submit(req(800, 5, 64));
-            engine.submit(req(801, 5, 64));
+            engine.submit(req(800, 5, 64)).unwrap();
+            engine.submit(req(801, 5, 64)).unwrap();
             for _ in 0..3 {
                 engine.step().unwrap();
             }
@@ -351,9 +451,9 @@ fn cancel_queued_request_never_runs() {
     with_engine(
         |c| c.max_running = 1,
         |engine| {
-            engine.submit(req(810, 5, 8));
+            engine.submit(req(810, 5, 8)).unwrap();
             engine.step().unwrap(); // 810 admitted into the only slot
-            engine.submit(req(811, 5, 8)); // waits in the queue
+            engine.submit(req(811, 5, 8)).unwrap(); // waits in the queue
             assert_eq!(engine.n_queued(), 1);
             let f = engine.cancel(811).expect("request 811 is queued");
             assert_eq!(f.reason, FinishReason::Cancelled);
@@ -374,7 +474,7 @@ fn metrics_fit_is_linearish() {
         |c| c.policy = Policy::OeaSimplified { k0: 1, k: 2 },
         |engine| {
             for i in 0..6 {
-                engine.submit(req(600 + i, 4 + i as usize, 10));
+                engine.submit(req(600 + i, 4 + i as usize, 10)).unwrap();
             }
             engine.run_to_completion().unwrap();
             let curve = engine.moe.latency_vs_t(false);

@@ -63,12 +63,9 @@ fn server_streams_backpressures_reports_and_drains() {
                 Engine::new(
                     ModelRunner::new(CpuBackend::synthetic(cfg, 0)),
                     EngineConfig {
-                        policy: Policy::OeaSimplified { k0: 1, k: 2 },
-                        mask_padding: true,
                         max_running: 2,
                         max_queue: 1,
-                        eos_token: None,
-                        cost_model: cost,
+                        ..EngineConfig::new(Policy::OeaSimplified { k0: 1, k: 2 }, cost)
                     },
                 )
             },
@@ -147,6 +144,58 @@ fn server_streams_backpressures_reports_and_drains() {
     assert!(done.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
     assert!(done.get("tpot_ms").unwrap().as_f64().unwrap() >= 0.0);
 
+    // -- v1 schema: unknown fields are a 400 naming the field ------------
+    let r = post(
+        &addr,
+        "/generate",
+        r#"{"prompt":"typo'd field","max_token":4}"#,
+    );
+    assert_eq!(r.code, 400, "unknown field must be rejected: {}", r.body);
+    let e = Json::parse(&r.body).unwrap();
+    assert!(
+        e.get("error").unwrap().as_str().unwrap().contains("max_token"),
+        "error names the offending field: {}",
+        r.body
+    );
+    // explicit version 1 is accepted; any other version is a 400
+    let r = post(&addr, "/generate", r#"{"version":1,"prompt":"v1 ok","max_tokens":2}"#);
+    assert_eq!(r.code, 200, "{}", r.body);
+    let r = post(&addr, "/generate", r#"{"version":2,"prompt":"v2 nope"}"#);
+    assert_eq!(r.code, 400);
+    assert!(Json::parse(&r.body).unwrap().get("error").unwrap().as_str().unwrap().contains("2"));
+
+    // -- per-request policy override -------------------------------------
+    let r = post(
+        &addr,
+        "/generate",
+        r#"{"prompt":"override me","max_tokens":3,"policy":"vanilla:k=1"}"#,
+    );
+    assert_eq!(r.code, 200, "{}", r.body);
+    assert_eq!(
+        Json::parse(&r.body).unwrap().get("n_tokens").unwrap().as_usize().unwrap(),
+        3
+    );
+    // a typo'd spec fails at the edge
+    let r = post(
+        &addr,
+        "/generate",
+        r#"{"prompt":"bad spec","policy":"oea:k0=lots"}"#,
+    );
+    assert_eq!(r.code, 400);
+    // a batch-global spec parses but can never mix into a shared batch
+    let r = post(
+        &addr,
+        "/generate",
+        r#"{"prompt":"global spec","policy":"expert-choice:cap=2"}"#,
+    );
+    assert_eq!(r.code, 400, "{}", r.body);
+    assert!(
+        Json::parse(&r.body).unwrap().get("error").unwrap().as_str().unwrap()
+            .contains("batch-global"),
+        "{}",
+        r.body
+    );
+
     // -- SLO metrics -----------------------------------------------------
     let m = get(&addr, "/metrics");
     assert_eq!(m.code, 200);
@@ -164,6 +213,22 @@ fn server_streams_backpressures_reports_and_drains() {
         );
         assert!(p50 <= p95 && p95 <= p99, "{key}: {p50} {p95} {p99}");
     }
+
+    // -- scheduler block: continuous mode live, counters well-formed -----
+    let sched = v.get("scheduler").unwrap();
+    assert_eq!(sched.get("mode").unwrap().as_str().unwrap(), "continuous");
+    assert!(sched.get("steps").unwrap().as_usize().unwrap() > 0);
+    assert!(sched.get("decode_steps").unwrap().as_usize().unwrap() > 0);
+    assert!(sched.get("admitted").unwrap().as_usize().unwrap() >= ok.len());
+    assert!(sched.get("prefill_chunks").unwrap().as_usize().unwrap() > 0);
+    assert!(sched.get("prefill_tokens").unwrap().as_usize().unwrap() > 0);
+    // the burst retired sequences mid-flight, so the decode batch must
+    // have recomposed at least once
+    assert!(sched.get("recompositions").unwrap().as_usize().unwrap() > 0);
+    let avg_b = sched.get("avg_live_b").unwrap().as_f64().unwrap();
+    let max_b = sched.get("max_live_b").unwrap().as_usize().unwrap();
+    assert!(avg_b > 0.0 && avg_b <= max_b as f64, "avg {avg_b} max {max_b}");
+    assert!(max_b <= 2, "live-B bounded by max_running");
 
     // -- graceful drain --------------------------------------------------
     let s = post(&addr, "/shutdown", "");
@@ -194,12 +259,9 @@ fn client_disconnect_cancels_and_metrics_report_residency() {
                 Engine::new(
                     ModelRunner::new(CpuBackend::synthetic_with(cfg, 0, opts)),
                     EngineConfig {
-                        policy: Policy::CacheAware { k0: 1, k: 2, alpha: 0.5 },
-                        mask_padding: true,
                         max_running: 2,
                         max_queue: 4,
-                        eos_token: None,
-                        cost_model: cost,
+                        ..EngineConfig::new(Policy::CacheAware { k0: 1, k: 2, alpha: 0.5 }, cost)
                     },
                 )
             },

@@ -313,7 +313,9 @@ fn ep_routing_union_consistency() {
 }
 
 #[test]
+#[allow(deprecated)] // intentionally exercises the legacy shim against PolicySpec
 fn policy_cli_roundtrip() {
+    use oea_serve::moe::policy::PolicySpec;
     for spec in [
         "vanilla",
         "pruned:k0=3",
@@ -329,6 +331,12 @@ fn policy_cli_roundtrip() {
     ] {
         let p = Policy::from_cli(spec, 8, 128).unwrap();
         let _ = p.label();
+        // the deprecated shim and the typed path must build the same policy
+        let typed = PolicySpec::parse(spec).unwrap().build(8, 128).unwrap();
+        assert_eq!(p, typed, "from_cli and PolicySpec disagree on {spec:?}");
+        // parse . canonical . parse is a fixpoint
+        let s = PolicySpec::parse(spec).unwrap();
+        assert_eq!(PolicySpec::parse(&s.canonical()).unwrap(), s);
     }
     assert!(Policy::from_cli("nope", 8, 128).is_err());
     assert!(Policy::from_cli("oea:k0=x", 8, 128).is_err());

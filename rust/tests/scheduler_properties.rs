@@ -1,0 +1,205 @@
+//! Scheduler correctness properties (ISSUE 6 satellite): the continuous
+//! scheduler is an *optimization*, not a semantic change, and these
+//! tests pin that down.
+//!
+//! 1. Chunked prefill is bitwise-identical to whole-prompt prefill
+//!    (same last-token logits).
+//! 2. At constant batch size, continuous scheduling produces bitwise
+//!    the same token streams as the lockstep oracle.
+//! 3. No token is lost or duplicated across batch recomposition:
+//!    streamed `TokenEvent`s reassemble exactly into each request's
+//!    final token vector, with contiguous indexes, under staggered
+//!    admission and multi-chunk prefill.
+//!
+//! Everything runs single-threaded (`CpuOptions { threads: 1 }`) so
+//! float reductions are deterministic and "bitwise" means bitwise.
+
+use oea_serve::backend::cpu::{CpuBackend, CpuOptions};
+use oea_serve::config::ModelConfig;
+use oea_serve::coordinator::{Engine, EngineConfig, GenRequest, SchedMode};
+use oea_serve::latency::H100Presets;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+
+fn runner(cfg: &ModelConfig, seed: u64) -> ModelRunner<CpuBackend> {
+    ModelRunner::new(CpuBackend::synthetic_with(
+        cfg.clone(),
+        seed,
+        CpuOptions { threads: 1, ..CpuOptions::default() },
+    ))
+}
+
+fn engine(cfg: &ModelConfig, sched: SchedMode, max_running: usize) -> Engine<CpuBackend> {
+    let k = cfg.top_k;
+    Engine::new(
+        runner(cfg, 0),
+        EngineConfig {
+            max_running,
+            max_queue: usize::MAX,
+            sched,
+            ..EngineConfig::new(
+                Policy::OeaSimplified { k0: (k / 2).max(1), k },
+                H100Presets::qwen3_30b(),
+            )
+        },
+    )
+    .unwrap()
+}
+
+fn prompt(len: usize, salt: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 7 + salt * 13 + 3) % 50) as i32).collect()
+}
+
+/// Whole-prompt prefill and chunked prefill must produce bitwise the
+/// same last-token logits — the continuous scheduler samples every
+/// first token from the chunked path, so any drift here would change
+/// outputs versus lockstep.
+#[test]
+fn chunked_prefill_matches_whole_prompt_logits() {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let chunk = cfg.prefill_chunk; // 16 on tiny
+    for (len, salt) in [(chunk - 3, 0), (chunk, 1), (2 * chunk + 5, 2), (3 * chunk, 3)] {
+        let p = prompt(len, salt);
+        let r = runner(&cfg, 0);
+
+        let whole = r.prefill(&p).unwrap().last_logits;
+
+        let mut batch = r.new_batch(1).unwrap();
+        let mut last_hidden = Vec::new();
+        let mut pos0 = 0usize;
+        while pos0 < p.len() {
+            let end = (pos0 + chunk).min(p.len());
+            last_hidden = r.prefill_chunk(&mut batch, 0, &p[pos0..end], pos0).unwrap();
+            pos0 = end;
+        }
+        let chunked = r.logits_for(&last_hidden).unwrap();
+
+        assert_eq!(whole.len(), chunked.len());
+        for (i, (a, b)) in whole.iter().zip(&chunked).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "len={len}: logit {i} differs: whole={a} chunked={b}"
+            );
+        }
+    }
+}
+
+fn run_all(mut e: Engine<CpuBackend>, reqs: &[GenRequest]) -> Vec<(u64, Vec<i32>)> {
+    for r in reqs {
+        e.submit(r.clone()).unwrap();
+    }
+    let mut done: Vec<(u64, Vec<i32>)> = e
+        .run_to_completion()
+        .unwrap()
+        .into_iter()
+        .map(|f| (f.id, f.tokens))
+        .collect();
+    done.sort_by_key(|(id, _)| *id);
+    done
+}
+
+/// At constant B (all prompts fit one prefill chunk, all submitted
+/// upfront, equal generation lengths) the continuous scheduler and the
+/// lockstep oracle see identical batch compositions every step — so
+/// their outputs must be bitwise equal, greedy and sampled alike.
+#[test]
+fn continuous_bitwise_equals_lockstep_at_constant_b() {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let chunk = cfg.prefill_chunk;
+    for temperature in [0.0f32, 0.8] {
+        let reqs: Vec<GenRequest> = (0..4)
+            .map(|i| GenRequest {
+                id: i as u64 + 1,
+                prompt: prompt(chunk - 2 * i, i),
+                max_new_tokens: 10,
+                temperature,
+                top_p: 0.95,
+                seed: 0xBEEF + i as u64,
+                policy: None,
+            })
+            .collect();
+        let lock = run_all(engine(&cfg, SchedMode::Lockstep, 4), &reqs);
+        let cont = run_all(engine(&cfg, SchedMode::Continuous, 4), &reqs);
+        assert_eq!(
+            lock, cont,
+            "temperature={temperature}: continuous diverged from the lockstep oracle"
+        );
+        assert!(lock.iter().all(|(_, t)| t.len() == 10));
+    }
+}
+
+/// Under staggered admission, mixed prompt lengths (some needing
+/// several prefill chunks), and continual batch recomposition, the
+/// streamed token events must reassemble exactly into each request's
+/// finished token vector: contiguous indexes starting at 0, no token
+/// lost, none duplicated, every request finishing exactly once.
+#[test]
+fn no_token_lost_or_duplicated_across_recomposition() {
+    use std::collections::BTreeMap;
+
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let mut e = engine(&cfg, SchedMode::Continuous, 3);
+
+    // id -> (prompt_len, max_new_tokens, submit-after-step)
+    let plan: &[(u64, usize, usize, usize)] = &[
+        (1, 8, 6, 0),
+        (2, 40, 4, 0), // 3 prefill chunks on tiny
+        (3, 12, 9, 1),
+        (4, 25, 5, 2), // 2 chunks, admitted while others decode
+        (5, 5, 12, 4),
+        (6, 33, 7, 6),
+    ];
+
+    let mut streamed: BTreeMap<u64, Vec<(usize, i32)>> = BTreeMap::new();
+    let mut finished: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+    let mut pending: Vec<&(u64, usize, usize, usize)> = plan.iter().collect();
+    let mut step = 0usize;
+    while !pending.is_empty() || !e.idle() {
+        pending.retain(|&&(id, plen, max_new, after)| {
+            if step < after {
+                return true;
+            }
+            let mut r = GenRequest::greedy(id, prompt(plen, id as usize), max_new);
+            r.temperature = if id % 2 == 0 { 0.7 } else { 0.0 };
+            r.seed = id * 31;
+            e.submit(r).unwrap();
+            false
+        });
+        let ev = e.step_events().unwrap();
+        for t in ev.tokens {
+            streamed.entry(t.id).or_default().push((t.index, t.token));
+        }
+        for f in ev.finished {
+            assert!(
+                finished.insert(f.id, f.tokens).is_none(),
+                "request {} finished twice",
+                f.id
+            );
+        }
+        step += 1;
+        assert!(step < 10_000, "engine failed to drain");
+    }
+
+    assert_eq!(finished.len(), plan.len(), "every request must finish exactly once");
+    for &(id, _plen, max_new, _after) in plan {
+        let toks = &finished[&id];
+        assert_eq!(toks.len(), max_new, "request {id} token count");
+        let ev = &streamed[&id];
+        // indexes contiguous from 0, tokens matching the final vector
+        assert_eq!(ev.len(), toks.len(), "request {id}: streamed/finished mismatch");
+        for (i, &(idx, tok)) in ev.iter().enumerate() {
+            assert_eq!(idx, i, "request {id}: non-contiguous stream index");
+            assert_eq!(tok, toks[i], "request {id}: streamed token {i} diverges");
+        }
+    }
+
+    // the workload genuinely exercised what it claims to
+    let c = e.sched_counters();
+    assert!(c.recompositions > 0, "batch composition never changed");
+    assert!(
+        c.prefill_chunks > plan.len() as u64,
+        "no multi-chunk prefill happened (chunks={})",
+        c.prefill_chunks
+    );
+    assert_eq!(c.admitted, plan.len() as u64);
+}
