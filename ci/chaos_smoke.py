@@ -1,0 +1,196 @@
+#!/usr/bin/env python3
+"""CI chaos-smoke: boot the release `oea-serve serve` binary with a
+seeded `--faults` plan and prove the fault-tolerance contract end to end:
+
+  1. the server becomes healthy (/healthz -> ok) with the fault plane
+     armed — page-in failures at rate 1.0 mean every expert-cache miss
+     exhausts its retry budget and trips the expert unhealthy, so the
+     warmup traffic forces degraded (health-masked) routing;
+  2. >= 95% of the measured requests complete HTTP 200 with tokens —
+     a flaky weight-transport degrades quality, never availability
+     (the page-in still lands after the failed attempts);
+  3. /metrics exposes the full observability surface: the `health`
+     block (no panics, no non-finite rows), the `faults` block (plan
+     echo + injection counters), and the `degradation` block (tripped
+     experts, masked-routing token counts, auditable event log);
+  4. `deadline_ms: 0` is rejected 400 at the edge (never admitted);
+  5. POST /shutdown drains and the process exits 0 — injected faults
+     don't break the drain path.
+
+Usage: python3 ci/chaos_smoke.py <path-to-oea-serve-binary>
+"""
+
+import http.client
+import json
+import subprocess
+import sys
+import threading
+import time
+
+PORT = 18177
+HOST = "127.0.0.1"
+
+FAULT_PLAN = "pagein-fail:rate=1.0,seed=7;pagein-delay:us=200,rate=0.5"
+
+N_WARMUP = 4    # sacrificial: force cache misses so experts trip early
+N_MEASURED = 30
+N_CLIENTS = 6   # measured requests fired from 6 threads, 5 each
+
+
+def conn():
+    return http.client.HTTPConnection(HOST, PORT, timeout=120)
+
+
+def post_json(path, payload):
+    c = conn()
+    c.request("POST", path, body=json.dumps(payload),
+              headers={"Content-Type": "application/json"})
+    r = c.getresponse()
+    body = r.read().decode()
+    c.close()
+    return r.status, body
+
+
+def check(cond, msg):
+    if not cond:
+        print(f"FAIL: {msg}", file=sys.stderr)
+        sys.exit(1)
+    print(f"ok: {msg}")
+
+
+def wait_healthy(proc, deadline_s=120):
+    t0 = time.time()
+    while time.time() - t0 < deadline_s:
+        check(proc.poll() is None, "server process is alive")
+        try:
+            c = conn()
+            c.request("GET", "/healthz")
+            r = c.getresponse()
+            body = json.loads(r.read().decode())
+            c.close()
+            if r.status == 200 and body.get("status") == "ok":
+                return
+        except OSError:
+            time.sleep(0.2)
+    print("FAIL: server never became healthy", file=sys.stderr)
+    sys.exit(1)
+
+
+def get_metrics():
+    c = conn()
+    c.request("GET", "/metrics")
+    r = c.getresponse()
+    m = json.loads(r.read().decode())
+    c.close()
+    check(r.status == 200, "metrics served")
+    return m
+
+
+def run_checks(proc):
+    wait_healthy(proc)
+
+    # -- warmup: force page-in misses so the fault plane trips experts ---
+    for i in range(N_WARMUP):
+        status, body = post_json("/generate", {
+            "prompt": f"warmup {i} pages experts through a flaky transport",
+            "max_tokens": 8,
+        })
+        check(status == 200, f"warmup {i} completed despite page-in chaos ({status})")
+
+    # -- measured traffic: availability under sustained injection --------
+    results = [None] * N_MEASURED
+    per_client = N_MEASURED // N_CLIENTS
+
+    def fire(c):
+        for r in range(per_client):
+            i = c * per_client + r
+            results[i] = post_json("/generate", {
+                "prompt": f"measured client {c} request {r} rides the mask",
+                "max_tokens": 12,
+            })
+
+    threads = [threading.Thread(target=fire, args=(c,)) for c in range(N_CLIENTS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    ok = [r for r in results if r[0] == 200]
+    check(len(ok) >= int(0.95 * N_MEASURED),
+          f"completion under chaos: {len(ok)}/{N_MEASURED} >= 95%")
+    for status, body in ok:
+        v = json.loads(body)
+        check(v["n_tokens"] > 0, f"degraded completion still produced tokens "
+                                 f"(n_tokens={v['n_tokens']})")
+        break  # one detailed check is enough to log
+
+    # -- observability: health / faults / degradation blocks -------------
+    m = get_metrics()
+    h = m["health"]
+    check(h["panics_caught"] == 0 and h["nonfinite_rows"] == 0,
+          "health: page-in chaos caused no panics or NaNs")
+    check(h["unhealthy_experts"] > 0,
+          f"health: experts tripped unhealthy ({h['unhealthy_experts']})")
+
+    f = m["faults"]
+    check("pagein-fail" in f["plan"],
+          f"faults: plan echoed on /metrics ({f['plan']})")
+    check(f["steps"] > 0, f"faults: forward-pass clock advanced ({f['steps']})")
+    check(f["pagein_failures"] > 0 and f["pagein_retries"] > 0,
+          f"faults: injection counted ({f['pagein_failures']} failures, "
+          f"{f['pagein_retries']} retries)")
+    check(f["pagein_gave_up"] > 0 and f["tripped_experts"] > 0,
+          f"faults: exhausted retry budgets tripped experts "
+          f"({f['tripped_experts']} trips)")
+    check(f["pagein_delays"] > 0 and f["injected_sleep_us"] > 0,
+          f"faults: latency injection counted ({f['pagein_delays']} delays)")
+
+    d = m["degradation"]
+    check(d["unhealthy_experts"] > 0,
+          f"degradation: mask active ({d['unhealthy_experts']} experts)")
+    check(d["routed_tokens_masked"] > 0,
+          f"degradation: tokens routed under the mask "
+          f"({d['routed_tokens_masked']:.0f})")
+    check(0.0 <= d["degraded_share"] <= 1.0,
+          f"degradation: degraded share well-formed ({d['degraded_share']:.3f})")
+    check(len(d["events"]) >= 1,
+          f"degradation: auditable event log non-empty ({len(d['events'])} events)")
+    ev = d["events"][0]
+    check("class" in ev and "step" in ev and "detail" in ev,
+          f"degradation: events carry class/step/detail ({ev.get('class')})")
+
+    # -- deadlines at the edge -------------------------------------------
+    status, body = post_json("/generate", {
+        "prompt": "an already-dead request", "max_tokens": 4, "deadline_ms": 0,
+    })
+    check(status == 400 and "deadline" in body,
+          f"deadline_ms=0 rejected 400 at submit ({status})")
+
+    # -- graceful drain with faults still armed --------------------------
+    status, body = post_json("/shutdown", {})
+    check(status == 200 and json.loads(body)["status"] == "draining",
+          "shutdown acknowledged")
+    rc = proc.wait(timeout=120)
+    check(rc == 0, f"server exited cleanly under chaos (rc={rc})")
+    print("chaos-smoke: all checks passed")
+
+
+def main():
+    binary = sys.argv[1]
+    proc = subprocess.Popen([
+        binary, "serve", "--config", "smoke",
+        "--policy", "cache-aware:k0=2,alpha=0.5",
+        "--expert-cache", "8", "--evict", "lru",
+        "--faults", FAULT_PLAN,
+        "--max-running", "4", "--max-queue", "64", "--http-workers", "8",
+        "--port", str(PORT),
+    ])
+    try:
+        run_checks(proc)
+    except BaseException:
+        proc.kill()
+        raise
+
+
+if __name__ == "__main__":
+    main()

@@ -35,7 +35,7 @@ import sys
 import threading
 import time
 
-PORT = 18077  # phase 1-4; phase 5 uses PORT+1 (no SO_REUSEADDR on the listener)
+PORT = 18077  # phase 1-4; later phases use PORT+1 / PORT+2
 HOST = "127.0.0.1"
 
 
@@ -80,8 +80,9 @@ def main():
         raise
 
     # -- phase 5: expert-parallel metrics surface ------------------------
-    # fresh port: the drained first server can leave TIME_WAIT entries on
-    # PORT and the listener does not set SO_REUSEADDR
+    # fresh port per phase: the listener binds with SO_REUSEADDR so an
+    # immediate rebind of PORT would work, but distinct ports keep a
+    # wedged earlier phase from masquerading as the next server
     global ACTIVE_PORT
     ACTIVE_PORT = PORT + 1
     proc = subprocess.Popen([

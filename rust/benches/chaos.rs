@@ -1,0 +1,212 @@
+//! chaos: fault-injection bench (ISSUE 7) — how does the engine degrade
+//! under each seeded fault class, and what does degradation cost?
+//!
+//! Runs the same greedy workload through a fresh engine per fault class
+//! (clean baseline first) on the hermetic CPU backend with a small
+//! residency cache, so page-in faults have real misses to inject into.
+//! Per class it reports:
+//!
+//! - **completion rate** — requests finishing `Length`/`Eos` over
+//!   submitted (typed failures like `Error` are counted, never lost);
+//! - **degraded-token share** — rerouted top-1 tokens over tokens routed
+//!   while a health mask was active (from the backend's FaultStats);
+//! - **p99 TTFT** — the latency cost of retries/stalls/backoff.
+//!
+//! Accounting is lossless by assertion (every submitted request comes
+//! back), inert classes must complete 100%, and the suite-wide
+//! completion rate must stay >= 0.90 even with the lethal classes
+//! (step-panic retires a whole decode set; expert-poison fails the rows
+//! that routed through the NaN expert before its health trips).
+//!
+//!     cargo bench --bench chaos
+//!     cargo bench --bench chaos -- --smoke   # CI tier
+//!
+//! Emits `BENCH_chaos.json` with the per-class table.
+
+use oea_serve::backend::cpu::{CpuBackend, CpuOptions};
+use oea_serve::backend::Backend;
+use oea_serve::config::ModelConfig;
+use oea_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest};
+use oea_serve::faults::FaultPlan;
+use oea_serve::latency::H100Presets;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::residency::{EvictPolicy, ResidencyConfig};
+use oea_serve::util::bench::{fmt1, BenchOpts, Table};
+use oea_serve::util::json::Json;
+use oea_serve::util::stats;
+
+/// (class label, --faults plan, lethal?) — lethal classes are allowed to
+/// fail requests typed; inert classes must complete every request.
+const CLASSES: &[(&str, &str, bool)] = &[
+    ("clean", "", false),
+    ("pagein-fail", "pagein-fail:rate=0.25,seed=11", false),
+    ("pagein-delay", "pagein-delay:us=300,rate=0.5", false),
+    ("rank-stall", "rank-stall:rank=0,after_steps=4,us=2000", false),
+    ("expert-poison", "expert-poison:layer=0,expert=3", true),
+    ("step-panic", "step-panic:layer=1,after_steps=8", true),
+];
+
+fn prompt(len: usize, salt: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 7 + salt * 13 + 3) % 50) as i32).collect()
+}
+
+struct ClassResult {
+    json: Json,
+    submitted: usize,
+    completed: usize,
+}
+
+fn run_class(plan: &str, n_requests: usize, max_new: usize, max_running: usize) -> ClassResult {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let cost = H100Presets::for_config(&cfg.name);
+    let opts = CpuOptions {
+        residency: Some(ResidencyConfig::new(4, EvictPolicy::Lru, 0)),
+        ..CpuOptions::default()
+    };
+    let mut backend = CpuBackend::synthetic_with(cfg, 0, opts);
+    backend.install_faults(FaultPlan::parse(plan).unwrap());
+    let mut e = Engine::new(
+        ModelRunner::new(backend),
+        EngineConfig {
+            max_running,
+            max_queue: usize::MAX,
+            step_budget_us: Some(1_000),
+            ..EngineConfig::new(Policy::OeaSimplified { k0: 1, k: 2 }, cost)
+        },
+    )
+    .unwrap();
+
+    for i in 0..n_requests {
+        let p = prompt(8 + i % 5, i);
+        e.submit(GenRequest::greedy(i as u64 + 1, p, max_new)).unwrap();
+    }
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), n_requests, "{plan:?}: lost requests");
+
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    let mut tokens_out = 0usize;
+    let mut ttft_ms = Vec::new();
+    for f in &done {
+        tokens_out += f.tokens.len();
+        match f.reason {
+            FinishReason::Length | FinishReason::Eos => {
+                completed += 1;
+                ttft_ms.push(f.ttft_us / 1e3);
+            }
+            _ => failed += 1,
+        }
+    }
+
+    let fs = e.runner.backend.fault_stats();
+    let (degraded, masked, unhealthy, trips) = match &fs {
+        Some(s) => (
+            s.counters.degraded_tokens,
+            s.counters.routed_tokens_masked,
+            s.unhealthy_experts,
+            s.counters.tripped_experts,
+        ),
+        None => (0, 0, 0, 0),
+    };
+    let degraded_share = if masked > 0 { degraded as f64 / masked as f64 } else { 0.0 };
+    let injected_sleep_us = fs
+        .as_ref()
+        .map(|s| s.counters.injected_sleep_us + s.counters.stall_us_total)
+        .unwrap_or(0);
+
+    let json = Json::obj(vec![
+        ("plan", Json::str(plan)),
+        ("submitted", Json::num(n_requests as f64)),
+        ("completed", Json::num(completed as f64)),
+        ("failed_typed", Json::num(failed as f64)),
+        ("completion_rate", Json::num(completed as f64 / n_requests as f64)),
+        ("tokens_out", Json::num(tokens_out as f64)),
+        ("degraded_tokens", Json::num(degraded as f64)),
+        ("routed_tokens_masked", Json::num(masked as f64)),
+        ("degraded_share", Json::num(degraded_share)),
+        ("tripped_experts", Json::num(trips as f64)),
+        ("unhealthy_experts", Json::num(unhealthy as f64)),
+        ("injected_sleep_us", Json::num(injected_sleep_us as f64)),
+        ("ttft_p99_ms", Json::num(stats::percentile(&ttft_ms, 99.0))),
+        ("panics_caught", Json::num(e.health.panics_caught as f64)),
+        ("nonfinite_rows", Json::num(e.health.nonfinite_rows as f64)),
+        ("wedged_steps", Json::num(e.health.wedged_steps as f64)),
+    ]);
+    ClassResult { json, submitted: n_requests, completed }
+}
+
+fn main() {
+    let opts = BenchOpts::from_args();
+    let (n_requests, max_new, max_running) = if opts.smoke { (12, 8, 4) } else { (48, 16, 8) };
+
+    println!(
+        "=== chaos: tiny cfg, {n_requests} requests x {max_new} tokens per fault class, \
+         max_running={max_running} ==="
+    );
+
+    let mut table = Table::new(
+        "Fault-class degradation (fresh engine per class, seeded plans)",
+        &["class", "completed", "degraded share", "ttft p99 ms", "trips", "wedged"],
+    );
+    let mut entries = Vec::new();
+    let mut submitted_total = 0usize;
+    let mut completed_total = 0usize;
+    for (label, plan, lethal) in CLASSES {
+        let r = run_class(plan, n_requests, max_new, max_running);
+        let g = |key: &str| r.json.get(key).unwrap().as_f64().unwrap();
+        println!(
+            "{label}: {}/{} completed, degraded share {:.3}, ttft p99 {:.1} ms",
+            r.completed,
+            r.submitted,
+            g("degraded_share"),
+            g("ttft_p99_ms"),
+        );
+        table.row(vec![
+            label.to_string(),
+            format!("{}/{}", r.completed, r.submitted),
+            fmt1(g("degraded_share") * 100.0) + "%",
+            fmt1(g("ttft_p99_ms")),
+            fmt1(g("tripped_experts")),
+            fmt1(g("wedged_steps")),
+        ]);
+        if !lethal {
+            assert_eq!(
+                r.completed, r.submitted,
+                "{label}: an inert fault class failed requests"
+            );
+        }
+        submitted_total += r.submitted;
+        completed_total += r.completed;
+        let mut entry = r.json;
+        if let Json::Obj(ref mut m) = entry {
+            m.insert("class".to_string(), Json::str(label));
+        }
+        entries.push(entry);
+    }
+    let rate = completed_total as f64 / submitted_total as f64;
+    assert!(
+        rate >= 0.90,
+        "suite-wide completion {completed_total}/{submitted_total} fell below 0.90"
+    );
+
+    table.print();
+    println!(
+        "\nsuite-wide completion: {completed_total}/{submitted_total} ({:.1}%)",
+        rate * 100.0
+    );
+
+    opts.emit(
+        "chaos",
+        Json::obj(vec![
+            ("smoke", Json::Bool(opts.smoke)),
+            ("config", Json::str("tiny")),
+            ("requests_per_class", Json::num(n_requests as f64)),
+            ("max_new_tokens", Json::num(max_new as f64)),
+            ("max_running", Json::num(max_running as f64)),
+            ("completion_rate", Json::num(rate)),
+            ("classes", Json::arr(entries)),
+        ]),
+    )
+    .unwrap();
+}

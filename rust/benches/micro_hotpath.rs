@@ -60,7 +60,7 @@ fn main() {
     results.push(r);
 
     let sm = ScoreMatrix::new(b, n, raw.clone());
-    let input = RoutingInput { scores: &sm, live: &live, mask_padding: true, resident: None };
+    let input = RoutingInput::new(&sm, &live, true);
 
     let r_van = bench("route vanilla(k=8)  B=16 N=128", 50, iters(5000), || {
         std::hint::black_box(route(Policy::Vanilla { k: 8 }, &input));
@@ -141,7 +141,7 @@ fn main() {
     let raw_m = random_scores(&mut rng, bm, cfg.n_experts);
     let sm_m = ScoreMatrix::new(bm, cfg.n_experts, raw_m);
     let live_m = vec![true; bm];
-    let input_m = RoutingInput { scores: &sm_m, live: &live_m, mask_padding: true, resident: None };
+    let input_m = RoutingInput::new(&sm_m, &live_m, true);
     let hidden: Vec<f32> = (0..bm * cfg.d_model)
         .map(|_| rng.gaussian() as f32 * 0.3)
         .collect();

@@ -72,6 +72,7 @@ fn run_variant(cfg: &ModelConfig, v: &Variant) -> (f64, f64, f64, Vec<u64>, Vec<
             top_p: 1.0,
             seed: i as u64,
             policy: None,
+            deadline_ms: None,
         })
         .unwrap();
     }

@@ -94,7 +94,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     for mask in [true, false] {
         let d = route(
             Policy::Vanilla { k: c.top_k },
-            &RoutingInput { scores: &sm, live: &live, mask_padding: mask, resident: None },
+            &RoutingInput::new(&sm, &live, mask),
         );
         println!("single-step routing with 7 live rows, mask={mask}: T = {}", d.t());
     }

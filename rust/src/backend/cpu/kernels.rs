@@ -798,7 +798,7 @@ mod tests {
         let live = vec![true; 2];
         let d_route = route(
             Policy::Vanilla { k: 2 },
-            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
+            &RoutingInput::new(&s, &live, true),
         );
         let groups = ExpertGroups::from_decision(&d_route);
         assert_eq!(groups.routed_tokens(), 4);

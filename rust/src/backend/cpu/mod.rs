@@ -33,10 +33,12 @@
 
 pub mod kernels;
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
 
 use crate::backend::{Backend, LayerPre, Prefilled};
 use crate::config::ModelConfig;
+use crate::faults::{FaultPlan, FaultState, FaultStats};
 use crate::moe::dispatch::{ExpertGroups, RoutedStep};
 use crate::moe::ep::{rank_of, rank_span};
 use crate::moe::policy::{self, Policy, RoutingInput};
@@ -289,6 +291,21 @@ pub struct CpuBackend {
     /// expert id (telemetry for load-balance analysis; counts decode and
     /// prefill work alike).
     expert_load: Mutex<Vec<u64>>,
+    /// Deterministic fault-injection plane ([`crate::faults`]): installed
+    /// post-construction via [`CpuBackend::install_faults`] (CpuOptions is
+    /// `Copy`; a plan holds vectors), `None` = no faults, zero overhead on
+    /// every hot path.
+    faults: Option<Mutex<FaultState>>,
+}
+
+/// Lock that survives a mutex poisoned by an (injected or organic) panic:
+/// the engine's `catch_unwind` recovery keeps serving after a step dies
+/// mid-flight, and the state under these locks — counters, residency
+/// ledgers, fault bookkeeping — stays internally consistent at every
+/// point a panic can interrupt, so recovering the guard is safe where
+/// propagating the poison would wedge every later request.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 fn gauss(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -486,7 +503,29 @@ impl CpuBackend {
             mode: opts.dispatch,
             pool,
             scratch: ScratchPool::new(),
+            faults: None,
         }
+    }
+
+    /// Install a deterministic fault-injection plan (`--faults`). Like
+    /// residency, the plane hooks grouped dispatch only — the gather
+    /// oracle runs whole-batch GEMMs with no page-in or per-rank work
+    /// list to fail, so a "chaos" gather run would silently inject
+    /// nothing. An empty plan installs nothing at all, keeping the
+    /// no-faults path bitwise-identical (property-tested).
+    pub fn install_faults(&mut self, plan: FaultPlan) {
+        if plan.is_empty() {
+            return;
+        }
+        if self.mode == DispatchMode::Gather {
+            panic!("fault injection requires grouped dispatch (OEA_DISPATCH=grouped)");
+        }
+        self.faults = Some(Mutex::new(FaultState::new(
+            plan,
+            self.cfg.n_layers,
+            self.cfg.n_experts,
+            self.ep_ranks,
+        )));
     }
 
     pub fn dispatch_mode(&self) -> DispatchMode {
@@ -634,6 +673,28 @@ impl CpuBackend {
                 groups.ranks, self.ep_ranks
             )));
         }
+        // Fault plane (one lock, before any other is held): layer 0 marks
+        // a new forward pass (the step clock every after_steps clause
+        // counts), the one-shot step panic fires while NO lock is held so
+        // the engine's catch_unwind recovery never meets a poisoned mutex,
+        // and the per-rank stall schedule + this layer's poison targets
+        // are snapshotted so the parallel section below never touches the
+        // fault mutex.
+        let mut stall_us: Vec<u64> = Vec::new();
+        let mut poison: Vec<usize> = Vec::new();
+        if let Some(fs) = &self.faults {
+            let mut st = lock_clean(fs);
+            if l == 0 {
+                st.begin_forward_pass();
+            }
+            let fire = st.should_panic(l);
+            stall_us = (0..self.ep_ranks).map(|r| st.stall_us(r)).collect();
+            poison = st.poison_targets(l);
+            drop(st);
+            if fire {
+                panic!("injected fault: step-panic at layer {l}");
+            }
+        }
         let lw = &self.layers[l];
         let h = c.d_expert;
         // Residency bookkeeping first, under one lock: touch every
@@ -644,8 +705,9 @@ impl CpuBackend {
         // eviction cannot pull weights out from under this step's
         // execution. Per-rank sets partition the expert axis, so at
         // ep_ranks = 1 this is exactly the old single-set trace.
+        let mut fault_sleep_us: u64 = 0;
         let panels: Option<Vec<Arc<ExpertPanels>>> = self.residency.as_ref().map(|res| {
-            let mut res = res.lock().unwrap();
+            let mut res = lock_clean(res);
             let lr = &mut res[l];
             groups
                 .iter()
@@ -660,6 +722,18 @@ impl CpuBackend {
                             if let Some(v) = evicted {
                                 rr.drop_panel(v);
                             }
+                            // injected page-in failures/delays: the fault
+                            // state plans the whole retry schedule in one
+                            // lock (trips health on an exhausted budget);
+                            // the sleeps run AFTER both locks drop, and
+                            // the final page-in always succeeds — weights
+                            // are local, so a flaky transport degrades
+                            // routing but can never wedge execution
+                            if let Some(fs) = &self.faults {
+                                let out = lock_clean(fs).pagein_plan(l, e);
+                                fault_sleep_us += out.delay_us;
+                                fault_sleep_us += out.backoff_us.iter().sum::<u64>();
+                            }
                             rr.page_in(lw, le, d, h);
                         }
                     }
@@ -667,6 +741,9 @@ impl CpuBackend {
                 })
                 .collect()
         });
+        if fault_sleep_us > 0 {
+            std::thread::sleep(Duration::from_micros(fault_sleep_us));
+        }
         let shards = if panels.is_none() { Some(&self.packed[l]) } else { None };
         let mut hn = self.scratch.take(b * d);
         kernels::rmsnorm_into(hidden, &lw.n2, d, c.rms_eps, &mut hn);
@@ -681,7 +758,20 @@ impl CpuBackend {
         // kernels::moe_ffn_group_rows, so outputs are bitwise-identical
         // with or without residency bookkeeping.
         let hn_ref = &hn;
+        let stall_ref = &stall_us;
         let run_range = |rank: usize, g0: usize, g1: usize, out: &mut [f32], arena: &mut Arena| {
+            // injected rank stall: charged once per layer execution, on
+            // the rank's FIRST chunk (so worker-count splits don't
+            // multiply the stall), delaying exactly the work that rank
+            // owns — the EP max-rank latency driver the paper's §7 cost
+            // model keys on
+            if g1 > g0 && g0 == ranges[rank].0 {
+                if let Some(&us) = stall_ref.get(rank) {
+                    if us > 0 {
+                        std::thread::sleep(Duration::from_micros(us));
+                    }
+                }
+            }
             match (&panels, shards) {
                 (Some(ps), _) => {
                     for gi in g0..g1 {
@@ -740,7 +830,7 @@ impl CpuBackend {
             }
         }
         {
-            let mut load = self.expert_load.lock().unwrap();
+            let mut load = lock_clean(&self.expert_load);
             for grp in groups.iter() {
                 load[grp.expert] += grp.rows.len() as u64;
             }
@@ -748,6 +838,26 @@ impl CpuBackend {
         let mut out = hidden.to_vec();
         for (o, &yv) in out.iter_mut().zip(acc.iter()) {
             *o += yv;
+        }
+        // injected expert poisoning: overwrite the poisoned expert's
+        // routed rows with NaN — exactly what a corrupted FFN panel would
+        // produce post-residual. Detection (first NaN emission trips the
+        // expert unhealthy) happens here, outside the parallel section;
+        // the NaN still flows to this step's logits, where the engine's
+        // non-finite guard retires the affected request, and from the
+        // NEXT step on the tripped expert is health-masked out of routing.
+        if !poison.is_empty() {
+            for grp in groups.iter() {
+                if poison.contains(&grp.expert) {
+                    for &row in grp.rows {
+                        let r = row as usize;
+                        out[r * d..(r + 1) * d].fill(f32::NAN);
+                    }
+                    if let Some(fs) = &self.faults {
+                        lock_clean(fs).note_poisoned(l, grp.expert, grp.rows.len() as u64);
+                    }
+                }
+            }
         }
         self.scratch.put(acc);
         self.scratch.put(hn);
@@ -988,9 +1098,18 @@ impl Backend for CpuBackend {
                 let pre = self.layer_pre(l, &hidden, &mut cache, &[t as i32])?;
                 let scores = ScoreMatrix::new(1, c.n_experts, pre.scores);
                 let live = [true];
+                // prefill honors the health mask too: a prompt routed
+                // through a poisoned expert would NaN its whole KV trail
+                let healthy = self.faults.as_ref().and_then(|fs| lock_clean(fs).healthy_for(l));
                 let d = policy::route(
                     Policy::Vanilla { k: c.top_k },
-                    &RoutingInput::new(&scores, &live, true),
+                    &RoutingInput {
+                        scores: &scores,
+                        live: &live,
+                        mask_padding: true,
+                        resident: None,
+                        healthy: healthy.as_deref(),
+                    },
                 );
                 let ids: Vec<i32> = d.active.iter().map(|&e| e as i32).collect();
                 hidden = self.moe_apply(l, &pre.h, &d.combine, &ids)?;
@@ -1107,8 +1226,19 @@ impl Backend for CpuBackend {
                 &hidden, &lw.n2, &lw.router, cn, d, c.n_experts, c.rms_eps,
             );
             let sm = ScoreMatrix::new(cn, c.n_experts, scores);
-            let dec =
-                policy::route(Policy::Vanilla { k: c.top_k }, &RoutingInput::new(&sm, &live, true));
+            // prefill honors the health mask too: a prompt routed
+            // through a poisoned expert would NaN its whole KV trail
+            let healthy = self.faults.as_ref().and_then(|fs| lock_clean(fs).healthy_for(l));
+            let dec = policy::route(
+                Policy::Vanilla { k: c.top_k },
+                &RoutingInput {
+                    scores: &sm,
+                    live: &live,
+                    mask_padding: true,
+                    resident: None,
+                    healthy: healthy.as_deref(),
+                },
+            );
             let ids: Vec<i32> = dec.active.iter().map(|&e| e as i32).collect();
             hidden = self.moe_apply(l, &hidden, &dec.combine, &ids)?;
         }
@@ -1277,6 +1407,22 @@ impl Backend for CpuBackend {
                 rr.prefetch.observe(slice);
             }
         }
+    }
+
+    fn health_view(&self, l: usize) -> Option<Vec<bool>> {
+        let fs = self.faults.as_ref()?;
+        lock_clean(fs).healthy_for(l)
+    }
+
+    fn note_degraded_tokens(&self, l: usize, degraded: u64, routed: u64) {
+        if let Some(fs) = &self.faults {
+            lock_clean(fs).note_degraded(l, degraded, routed);
+        }
+    }
+
+    fn fault_stats(&self) -> Option<FaultStats> {
+        let fs = self.faults.as_ref()?;
+        Some(lock_clean(fs).stats())
     }
 }
 

@@ -218,4 +218,31 @@ pub trait Backend {
     /// bucket rows — their router scores are the §6 padding garbage, and
     /// feeding them would page in experts no live token wants.
     fn residency_observe(&self, _l: usize, _agg: &[f32]) {}
+
+    // ---- fault tolerance (optional; default = backend has no fault plane)
+
+    /// Per-expert health flags for layer `l`, threaded into routing next
+    /// to [`Backend::residency_view`]: unhealthy experts are masked out
+    /// of phase-1 selection (their tokens piggyback onto healthy experts
+    /// and combine weights renormalize over the surviving set). `None`
+    /// when the backend has no fault-injection plane or every expert on
+    /// the layer is healthy — the mask-free path must stay bitwise
+    /// identical to a backend without health tracking.
+    fn health_view(&self, _l: usize) -> Option<Vec<bool>> {
+        None
+    }
+
+    /// Record one layer-step's degraded-routing accounting: `degraded`
+    /// live tokens whose top-1 expert was health-masked (and therefore
+    /// rerouted), out of `routed` live tokens routed under an active
+    /// mask. No-op for backends without a fault plane.
+    fn note_degraded_tokens(&self, _l: usize, _degraded: u64, _routed: u64) {}
+
+    /// Snapshot of the backend's fault-injection plane (injected-fault
+    /// counters, current health, recent degradation events) for
+    /// `/metrics` and the chaos bench. `None` when no fault plan is
+    /// installed.
+    fn fault_stats(&self) -> Option<crate::faults::FaultStats> {
+        None
+    }
 }

@@ -11,6 +11,7 @@
 //! refill on the next plan. MoE telemetry (T, load, measured µs,
 //! simulated H100 µs) is recorded per (layer, step).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
 use crate::backend::Backend;
@@ -56,6 +57,11 @@ pub struct EngineConfig {
     /// fills (and relax toward vanilla quality when it empties). At a
     /// constantly-full batch this is the identity — the oracle pin.
     pub adaptive: bool,
+    /// Watchdog budget for one decode step, in µs: a step that measures
+    /// over budget increments [`EngineHealth::wedged_steps`] (injected
+    /// rank stalls and real scheduler wedges both surface here). `None`
+    /// disables the watchdog.
+    pub step_budget_us: Option<u64>,
 }
 
 impl EngineConfig {
@@ -72,8 +78,25 @@ impl EngineConfig {
             sched: SchedMode::default(),
             prefill_chunk: None,
             adaptive: false,
+            step_budget_us: None,
         }
     }
+}
+
+/// Engine-survival counters (the `/metrics` `health` block): each one
+/// records a failure the engine absorbed at request granularity instead
+/// of dying — the observable half of the fault-tolerance contract.
+#[derive(Debug, Default, Clone)]
+pub struct EngineHealth {
+    /// decode-step panics caught; the step's requests retired with
+    /// [`FinishReason::Error`], the engine kept serving
+    pub panics_caught: u64,
+    /// logits rows rejected by the non-finite guard before sampling
+    pub nonfinite_rows: u64,
+    /// requests retired with [`FinishReason::DeadlineExceeded`]
+    pub deadline_expired: u64,
+    /// decode steps that overran `step_budget_us` (watchdog hits)
+    pub wedged_steps: u64,
 }
 
 struct SeqState {
@@ -95,6 +118,15 @@ struct SeqState {
     policy: Option<Policy>,
 }
 
+impl SeqState {
+    /// Has this request's end-to-end `deadline_ms` budget elapsed?
+    fn past_deadline(&self) -> bool {
+        self.req
+            .deadline_ms
+            .is_some_and(|ms| self.t_submit.elapsed().as_millis() as u64 >= ms)
+    }
+}
+
 /// Everything one engine iteration produced: per-token events the moment
 /// each token is sampled (the streaming feed) plus retired requests.
 #[derive(Debug, Default)]
@@ -111,6 +143,9 @@ pub struct Engine<B: Backend> {
     running: Vec<Option<SeqState>>,
     pub moe: MoeMetrics,
     pub requests: RequestMetrics,
+    /// absorbed-failure counters (panics caught, non-finite rows,
+    /// expired deadlines, watchdog hits)
+    pub health: EngineHealth,
     step_no: u32,
     t_start: Instant,
     draining: bool,
@@ -148,6 +183,7 @@ impl<B: Backend> Engine<B> {
             running: (0..bucket).map(|_| None).collect(),
             moe: MoeMetrics::default(),
             requests: RequestMetrics::default(),
+            health: EngineHealth::default(),
             step_no: 0,
             t_start: Instant::now(),
             draining: false,
@@ -251,6 +287,12 @@ impl<B: Backend> Engine<B> {
                 }
             }
         }
+        if req.deadline_ms == Some(0) {
+            self.requests.n_rejected += 1;
+            return Err(SubmitError::NeverFits(
+                "deadline_ms of 0 expires before any token can be produced".into(),
+            ));
+        }
         if !self.sched.has_queue_capacity() {
             self.requests.n_rejected += 1;
             return Err(SubmitError::QueueFull);
@@ -258,17 +300,6 @@ impl<B: Backend> Engine<B> {
         let ticket = Ticket { id: req.id, position: self.sched.n_queued() };
         self.sched.enqueue(req, Instant::now());
         Ok(ticket)
-    }
-
-    /// Legacy bounded admission. Collapses every [`SubmitError`] into
-    /// `Err(request)` — callers that need to distinguish backpressure
-    /// from unservable requests must use [`Engine::submit`].
-    #[deprecated(note = "use Engine::submit, which returns Result<Ticket, SubmitError>")]
-    pub fn try_submit(&mut self, req: GenRequest) -> std::result::Result<(), GenRequest> {
-        match self.submit(req.clone()) {
-            Ok(_) => Ok(()),
-            Err(_) => Err(req),
-        }
     }
 
     /// One engine iteration: execute the scheduler's plan (admit, prefill
@@ -289,6 +320,27 @@ impl<B: Backend> Engine<B> {
         for adm in plan.admitted {
             let queue_wait_us = adm.t_submit.elapsed().as_secs_f64() * 1e6;
             push_sample(&mut self.requests.queue_wait_us, queue_wait_us);
+            // queue wait can eat the whole deadline budget: retire the
+            // request before spending a single prefill FLOP on it (its
+            // planned prompt chunk is skipped by the empty-slot guard)
+            if adm.req.deadline_ms.is_some_and(|ms| adm.t_submit.elapsed().as_millis() as u64 >= ms)
+            {
+                self.health.deadline_expired += 1;
+                self.requests.n_finished += 1;
+                let e2e_us = adm.t_submit.elapsed().as_secs_f64() * 1e6;
+                push_sample(&mut self.requests.e2e_us, e2e_us);
+                events.finished.push(FinishedRequest {
+                    id: adm.req.id,
+                    prompt_len: adm.req.prompt.len(),
+                    tokens: Vec::new(),
+                    reason: FinishReason::DeadlineExceeded,
+                    queue_wait_us,
+                    ttft_us: 0.0,
+                    e2e_us,
+                });
+                self.sched.release(adm.slot)?;
+                continue;
+            }
             self.requests.total_prompt_tokens += adm.req.prompt.len();
             // validated at submit; a failure here would be a logic bug,
             // so fall back to the engine default instead of crashing
@@ -312,8 +364,18 @@ impl<B: Backend> Engine<B> {
         }
 
         // run this step's prompt chunks; a `last` chunk samples the
-        // sequence's first token (the TTFT token)
+        // sequence's first token (the TTFT token). Empty slots are
+        // skipped, not a panic: a planned chunk's request can retire
+        // first (deadline expiry at admission or mid-prefill).
         for ch in &plan.prefill {
+            if self.running[ch.slot].is_none() {
+                continue;
+            }
+            if self.running[ch.slot].as_ref().is_some_and(|s| s.past_deadline()) {
+                self.health.deadline_expired += 1;
+                self.retire_slot(ch.slot, FinishReason::DeadlineExceeded, &mut events)?;
+                continue;
+            }
             let first_logits = match self.cfg.sched {
                 SchedMode::Lockstep => {
                     // the oracle path: whole-prompt b=1 prefill + row install
@@ -351,9 +413,21 @@ impl<B: Backend> Engine<B> {
         }
 
         // decode every prompt-complete slot that still holds a sequence
-        // (a first sample can finish a request before its first decode)
-        let decode: Vec<usize> =
-            plan.decode.iter().copied().filter(|&i| self.running[i].is_some()).collect();
+        // (a first sample can finish a request before its first decode);
+        // a sequence past its deadline retires here instead of buying
+        // another step
+        let mut decode: Vec<usize> = Vec::with_capacity(plan.decode.len());
+        for &i in &plan.decode {
+            if self.running[i].is_none() {
+                continue;
+            }
+            if self.running[i].as_ref().is_some_and(|s| s.past_deadline()) {
+                self.health.deadline_expired += 1;
+                self.retire_slot(i, FinishReason::DeadlineExceeded, &mut events)?;
+                continue;
+            }
+            decode.push(i);
+        }
         self.sched.note_decode_set(&decode);
         if decode.is_empty() {
             return Ok(events);
@@ -396,9 +470,43 @@ impl<B: Backend> Engine<B> {
             },
         };
         let t0 = Instant::now();
-        let out = self.runner.decode_step_routed(&mut self.batch, &tokens, &pos, &live, &routing)?;
+        // Step isolation: a panic inside the model stack (an injected
+        // step-panic fault, or a real kernel bug) retires this step's
+        // requests with FinishReason::Error and scrubs their KV slots —
+        // it must NOT unwind through the engine thread and take every
+        // other in-flight request down with it. Backend-internal locks
+        // recover from the poisoned state on the next acquire.
+        let stepped = catch_unwind(AssertUnwindSafe(|| {
+            self.runner.decode_step_routed(&mut self.batch, &tokens, &pos, &live, &routing)
+        }));
+        let out = match stepped {
+            Ok(r) => r?,
+            Err(payload) => {
+                self.health.panics_caught += 1;
+                let what = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                eprintln!(
+                    "engine: decode step {} panicked ({what}); retiring {} request(s)",
+                    self.step_no,
+                    decode.len()
+                );
+                for &i in &decode {
+                    self.runner.clear_slot(&mut self.batch, i).ok();
+                    self.retire_slot(i, FinishReason::Error, &mut events)?;
+                }
+                return Ok(events);
+            }
+        };
         let step_us = t0.elapsed().as_secs_f64() * 1e6;
         push_sample(&mut self.requests.decode_step_us, step_us);
+        if let Some(budget) = self.cfg.step_budget_us {
+            if step_us > budget as f64 {
+                self.health.wedged_steps += 1;
+            }
+        }
 
         let n_live = decode.len();
         for (l, ls) in out.layers.iter().enumerate() {
@@ -426,6 +534,15 @@ impl<B: Backend> Engine<B> {
         for &i in &decode {
             let Some(mut s) = self.running[i].take() else { continue };
             let row = &out.logits[i * vocab..(i + 1) * vocab];
+            // non-finite guard: a poisoned expert output propagates NaN
+            // to this row; sampling it would panic (argmax partial_cmp)
+            // or emit garbage, so the request fails typed instead
+            if sampler::check_finite(row).is_err() {
+                self.health.nonfinite_rows += 1;
+                self.runner.clear_slot(&mut self.batch, i).ok();
+                self.retire_seq(i, s, FinishReason::Error, &mut events)?;
+                continue;
+            }
             let next = sampler::sample(row, s.req.temperature, s.req.top_p, &mut s.rng) as i32;
             s.pos += 1;
             s.generated.push(next);
@@ -489,6 +606,57 @@ impl<B: Backend> Engine<B> {
         Ok(events)
     }
 
+    /// Retire whatever sequence holds `slot` (no-op when empty) with
+    /// `reason`, emitting its finished record and freeing the slot.
+    fn retire_slot(
+        &mut self,
+        slot: usize,
+        reason: FinishReason,
+        ev: &mut StepEvents,
+    ) -> Result<()> {
+        let Some(s) = self.running[slot].take() else { return Ok(()) };
+        self.retire_seq(slot, s, reason, ev)
+    }
+
+    /// Finish a sequence off the happy path (deadline expiry, caught
+    /// panic, non-finite logits): tokens generated so far are returned —
+    /// they were real (and possibly already streamed) — and the slot
+    /// frees for the next plan.
+    fn retire_seq(
+        &mut self,
+        slot: usize,
+        s: SeqState,
+        reason: FinishReason,
+        ev: &mut StepEvents,
+    ) -> Result<()> {
+        self.requests.n_finished += 1;
+        self.requests.total_generated_tokens += s.generated.len();
+        let ttft_us = s
+            .t_first_token
+            .map(|tf| (tf - s.t_submit).as_secs_f64() * 1e6)
+            .unwrap_or(0.0);
+        if s.t_first_token.is_some() {
+            push_sample(&mut self.requests.ttft_us, ttft_us);
+        }
+        let e2e_us = s.t_submit.elapsed().as_secs_f64() * 1e6;
+        push_sample(&mut self.requests.e2e_us, e2e_us);
+        let done = FinishedRequest {
+            id: s.req.id,
+            prompt_len: s.req.prompt.len(),
+            tokens: s.generated,
+            reason,
+            queue_wait_us: s.queue_wait_us,
+            ttft_us,
+            e2e_us,
+        };
+        if let Some(tpot) = done.tpot_us() {
+            push_sample(&mut self.requests.tpot_us, tpot);
+        }
+        ev.finished.push(done);
+        self.sched.release(slot)?;
+        Ok(())
+    }
+
     /// Sample a just-prefilled sequence's first token. Finishes the
     /// request on the spot when the sample already ends the generation:
     /// an EOS first token (terminates, not output), or a
@@ -500,6 +668,14 @@ impl<B: Backend> Engine<B> {
         logits: &[f32],
         ev: &mut StepEvents,
     ) -> Result<()> {
+        // a poisoned expert can corrupt the prefill path too — same
+        // typed per-request failure as the decode-loop guard
+        if sampler::check_finite(logits).is_err() {
+            self.health.nonfinite_rows += 1;
+            self.runner.clear_slot(&mut self.batch, slot).ok();
+            self.retire_slot(slot, FinishReason::Error, ev)?;
+            return Ok(());
+        }
         let (first, t_first, finish_now) = {
             let s = self.running[slot].as_mut().expect("sequence in slot");
             let first =

@@ -17,7 +17,7 @@ pub mod sampler;
 pub mod scheduler;
 pub mod slots;
 
-pub use engine::{Engine, EngineConfig, StepEvents};
+pub use engine::{Engine, EngineConfig, EngineHealth, StepEvents};
 pub use request::{
     FinishReason, FinishedRequest, GenRequest, SubmitError, Ticket, TokenEvent,
 };

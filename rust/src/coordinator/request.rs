@@ -20,6 +20,13 @@ pub struct GenRequest {
     /// (lynx / expert-choice / ep) are rejected with
     /// [`SubmitError::NeverFits`].
     pub policy: Option<PolicySpec>,
+    /// End-to-end budget measured from submit (the `/generate`
+    /// `deadline_ms` field): once it elapses the engine retires the
+    /// request with [`FinishReason::DeadlineExceeded`] instead of
+    /// spending more steps on an answer the client stopped waiting for —
+    /// checked at admission (queue wait can eat the whole budget), per
+    /// prefill chunk, and per decode step. `None` = no deadline.
+    pub deadline_ms: Option<u64>,
 }
 
 impl GenRequest {
@@ -32,6 +39,7 @@ impl GenRequest {
             top_p: 1.0,
             seed: id,
             policy: None,
+            deadline_ms: None,
         }
     }
 }
@@ -96,6 +104,13 @@ pub enum FinishReason {
     /// client went away (disconnect / explicit cancel): the sequence was
     /// retired early and its slot freed instead of decoding to completion
     Cancelled,
+    /// the request's `deadline_ms` budget elapsed (queue wait included)
+    /// before generation finished; partial tokens are returned
+    DeadlineExceeded,
+    /// the request failed mid-flight — its decode step panicked or its
+    /// logits went non-finite — and was retired so the engine (and the
+    /// rest of the batch) could keep serving
+    Error,
 }
 
 /// A completed request with telemetry.

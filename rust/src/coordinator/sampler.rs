@@ -32,6 +32,24 @@ pub fn sample(logits: &[f32], temperature: f32, top_p: f32, rng: &mut Rng) -> us
     argmax(logits)
 }
 
+/// Reject a logits row containing NaN/Inf before sampling touches it.
+/// Non-finite logits are what a poisoned expert output (injected or a
+/// real numerical blowup) propagates to the unembedding; [`argmax`]'s
+/// `partial_cmp().unwrap()` would panic on NaN and nucleus sampling
+/// would silently misbehave, so the engine converts a non-finite row
+/// into a typed per-request failure instead of dying.
+pub fn check_finite(logits: &[f32]) -> crate::util::error::Result<()> {
+    for (i, &x) in logits.iter().enumerate() {
+        if !x.is_finite() {
+            return Err(crate::util::error::Error::Engine(format!(
+                "non-finite logit {x} at vocab index {i}: upstream expert \
+                 output is corrupt"
+            )));
+        }
+    }
+    Ok(())
+}
+
 pub fn argmax(xs: &[f32]) -> usize {
     xs.iter()
         .enumerate()
@@ -145,5 +163,19 @@ mod tests {
         let p = [2.0f32, 0.0, 0.0];
         let q = [0.0f32, 2.0, 0.0];
         assert!(kl_divergence(&p, &q) > 0.1);
+    }
+
+    #[test]
+    fn check_finite_accepts_ordinary_rows() {
+        assert!(check_finite(&[0.0, -3.5, f32::MAX, f32::MIN]).is_ok());
+    }
+
+    #[test]
+    fn check_finite_rejects_nan_and_inf_with_the_offending_index() {
+        let e = check_finite(&[1.0, f32::NAN, 0.0]).unwrap_err();
+        assert!(e.to_string().contains("index 1"), "{e}");
+        let e = check_finite(&[f32::INFINITY]).unwrap_err();
+        assert!(e.to_string().contains("index 0"), "{e}");
+        assert!(check_finite(&[0.0, f32::NEG_INFINITY]).is_err());
     }
 }

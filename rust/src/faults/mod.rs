@@ -1,0 +1,844 @@
+//! Deterministic fault injection and expert-health tracking.
+//!
+//! A [`FaultPlan`] (CLI `--faults`) describes a seeded chaos scenario as
+//! `;`-separated clauses, e.g.
+//!
+//! ```text
+//! pagein-fail:rate=0.05,seed=7;rank-stall:rank=2,after_steps=50,us=20000;expert-poison:layer=3,expert=11
+//! ```
+//!
+//! The backend injects these at its existing hook points — page-in
+//! failures and latency spikes in the residency layer, per-rank stalls
+//! and outages in the EP dispatch path, NaN-poisoned expert outputs in
+//! the grouped MoE FFN, and a one-shot panic for exercising the engine's
+//! `catch_unwind` isolation. Every random draw comes from one seeded
+//! [`Rng`], so a chaos run is replayable bit for bit.
+//!
+//! [`FaultState`] is the injection-time bookkeeping: it owns the plan,
+//! the per-`(layer, expert)` health flags that feed
+//! `Backend::health_view` (and from there the routing mask next to
+//! `residency_view`), the bounded-jittered-retry schedule for failed
+//! page-ins, injected-fault counters, and a bounded log of auditable
+//! [`DegradationEvent`]s. An *empty* plan installs no state at all, so
+//! the fault-free path stays bitwise-identical to a build that never
+//! heard of faults (property-tested in `tests/chaos_properties.rs`).
+
+use std::fmt;
+
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Bernoulli page-in failure: each panel page-in attempt fails with
+/// probability `rate`, drawn from a stream seeded by `seed`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PageinFail {
+    pub rate: f64,
+    pub seed: u64,
+}
+
+/// Page-in latency spike: each page-in sleeps `us` with probability
+/// `rate` (a slow storage tier, not a failure — health never trips).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PageinDelay {
+    pub us: u64,
+    pub rate: f64,
+}
+
+/// Per-rank stall: once `after_steps` forward passes have run, every MoE
+/// layer execution sleeps `us` inside rank `rank`'s work list (the other
+/// ranks proceed; the step waits on the straggler, exactly EP semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankStall {
+    pub rank: usize,
+    pub after_steps: u64,
+    pub us: u64,
+}
+
+/// Rank outage: once `after_steps` forward passes have run, every expert
+/// homed on `rank` trips unhealthy on every layer — routing masks the
+/// whole shard out and tokens piggyback onto surviving ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankDown {
+    pub rank: usize,
+    pub after_steps: u64,
+}
+
+/// Poisoned expert: expert `expert`'s FFN output on layer `layer` is
+/// overwritten with NaN. The backend detects it, trips the expert's
+/// health, and lets the NaN flow — the engine's non-finite logits guard
+/// must retire the affected request without killing the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExpertPoison {
+    pub layer: usize,
+    pub expert: usize,
+}
+
+/// One-shot injected panic at the entry of layer `layer`'s MoE stage
+/// once `after_steps` forward passes have run — the chaos probe for the
+/// engine's per-step `catch_unwind` isolation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepPanic {
+    pub layer: usize,
+    pub after_steps: u64,
+}
+
+/// A parsed, seeded chaos scenario. `Default`/empty means "no faults" —
+/// and the backend must treat that as bitwise-identical to having no
+/// plan at all.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub pagein_fail: Option<PageinFail>,
+    pub pagein_delay: Option<PageinDelay>,
+    pub rank_stall: Vec<RankStall>,
+    pub rank_down: Vec<RankDown>,
+    pub expert_poison: Vec<ExpertPoison>,
+    pub step_panic: Option<StepPanic>,
+}
+
+fn parse_kvs<'a>(clause: &'a str, body: &'a str) -> Result<Vec<(&'a str, &'a str)>> {
+    let mut kvs = Vec::new();
+    for part in body.split(',').filter(|p| !p.trim().is_empty()) {
+        match part.split_once('=') {
+            Some((k, v)) => kvs.push((k.trim(), v.trim())),
+            None => {
+                return Err(Error::Config(format!(
+                    "fault clause {clause:?}: expected key=value, got {part:?}"
+                )))
+            }
+        }
+    }
+    Ok(kvs)
+}
+
+fn kv_f64(clause: &str, kvs: &[(&str, &str)], key: &str) -> Result<Option<f64>> {
+    match kvs.iter().find(|(k, _)| *k == key) {
+        Some((_, v)) => v
+            .parse::<f64>()
+            .map(Some)
+            .map_err(|_| Error::Config(format!("fault clause {clause:?}: {key}={v:?} not a number"))),
+        None => Ok(None),
+    }
+}
+
+fn kv_u64(clause: &str, kvs: &[(&str, &str)], key: &str) -> Result<Option<u64>> {
+    match kvs.iter().find(|(k, _)| *k == key) {
+        Some((_, v)) => v
+            .parse::<u64>()
+            .map(Some)
+            .map_err(|_| {
+                Error::Config(format!("fault clause {clause:?}: {key}={v:?} not an integer"))
+            }),
+        None => Ok(None),
+    }
+}
+
+fn require<T>(clause: &str, key: &str, v: Option<T>) -> Result<T> {
+    v.ok_or_else(|| Error::Config(format!("fault clause {clause:?}: missing required {key}=")))
+}
+
+fn check_keys(clause: &str, kvs: &[(&str, &str)], allowed: &[&str]) -> Result<()> {
+    for (k, _) in kvs {
+        if !allowed.contains(k) {
+            return Err(Error::Config(format!(
+                "fault clause {clause:?}: unknown key {k:?} (allowed: {})",
+                allowed.join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
+impl FaultPlan {
+    /// Parse a `--faults` spec. The grammar is `;`-separated clauses of
+    /// `name:key=val,key=val`; an empty spec is the empty plan. Unknown
+    /// clause names, unknown keys, and malformed values are loud
+    /// [`Error::Config`]s — a typo'd chaos plan must never silently run
+    /// a clean baseline.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let (name, body) = clause.split_once(':').unwrap_or((clause, ""));
+            let kvs = parse_kvs(clause, body)?;
+            match name.trim() {
+                "pagein-fail" => {
+                    check_keys(clause, &kvs, &["rate", "seed"])?;
+                    let rate = require(clause, "rate", kv_f64(clause, &kvs, "rate")?)?;
+                    if !(0.0..=1.0).contains(&rate) {
+                        return Err(Error::Config(format!(
+                            "fault clause {clause:?}: rate={rate} must be in [0, 1]"
+                        )));
+                    }
+                    plan.pagein_fail = Some(PageinFail {
+                        rate,
+                        seed: kv_u64(clause, &kvs, "seed")?.unwrap_or(0),
+                    });
+                }
+                "pagein-delay" => {
+                    check_keys(clause, &kvs, &["us", "rate"])?;
+                    plan.pagein_delay = Some(PageinDelay {
+                        us: require(clause, "us", kv_u64(clause, &kvs, "us")?)?,
+                        rate: kv_f64(clause, &kvs, "rate")?.unwrap_or(1.0),
+                    });
+                }
+                "rank-stall" => {
+                    check_keys(clause, &kvs, &["rank", "after_steps", "us"])?;
+                    plan.rank_stall.push(RankStall {
+                        rank: require(clause, "rank", kv_u64(clause, &kvs, "rank")?)? as usize,
+                        after_steps: kv_u64(clause, &kvs, "after_steps")?.unwrap_or(0),
+                        us: require(clause, "us", kv_u64(clause, &kvs, "us")?)?,
+                    });
+                }
+                "rank-down" => {
+                    check_keys(clause, &kvs, &["rank", "after_steps"])?;
+                    plan.rank_down.push(RankDown {
+                        rank: require(clause, "rank", kv_u64(clause, &kvs, "rank")?)? as usize,
+                        after_steps: kv_u64(clause, &kvs, "after_steps")?.unwrap_or(0),
+                    });
+                }
+                "expert-poison" => {
+                    check_keys(clause, &kvs, &["layer", "expert"])?;
+                    plan.expert_poison.push(ExpertPoison {
+                        layer: require(clause, "layer", kv_u64(clause, &kvs, "layer")?)? as usize,
+                        expert: require(clause, "expert", kv_u64(clause, &kvs, "expert")?)?
+                            as usize,
+                    });
+                }
+                "step-panic" => {
+                    check_keys(clause, &kvs, &["layer", "after_steps"])?;
+                    plan.step_panic = Some(StepPanic {
+                        layer: require(clause, "layer", kv_u64(clause, &kvs, "layer")?)? as usize,
+                        after_steps: kv_u64(clause, &kvs, "after_steps")?.unwrap_or(0),
+                    });
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown fault clause {other:?} (pagein-fail | pagein-delay | \
+                         rank-stall | rank-down | expert-poison | step-panic)"
+                    )))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+
+    /// Canonical re-rendering of the plan (the `/metrics` `faults.plan`
+    /// field) — parse(label()) round-trips.
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(p) = &self.pagein_fail {
+            parts.push(format!("pagein-fail:rate={},seed={}", p.rate, p.seed));
+        }
+        if let Some(p) = &self.pagein_delay {
+            parts.push(format!("pagein-delay:us={},rate={}", p.us, p.rate));
+        }
+        for s in &self.rank_stall {
+            parts.push(format!(
+                "rank-stall:rank={},after_steps={},us={}",
+                s.rank, s.after_steps, s.us
+            ));
+        }
+        for d in &self.rank_down {
+            parts.push(format!("rank-down:rank={},after_steps={}", d.rank, d.after_steps));
+        }
+        for p in &self.expert_poison {
+            parts.push(format!("expert-poison:layer={},expert={}", p.layer, p.expert));
+        }
+        if let Some(p) = &self.step_panic {
+            parts.push(format!("step-panic:layer={},after_steps={}", p.layer, p.after_steps));
+        }
+        parts.join(";")
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// Bounded jittered retry schedule for failed page-ins: attempt `a`
+/// backs off `base_us << a` capped at `cap_us`, jittered into
+/// `[backoff/2, backoff]` so retry storms decorrelate. After
+/// `max_attempts` total attempts the expert trips unhealthy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    pub max_attempts: usize,
+    pub base_us: u64,
+    pub cap_us: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, base_us: 50, cap_us: 2_000 }
+    }
+}
+
+/// Jittered backoff before retry attempt `attempt` (0-based: the wait
+/// after the first failure is `attempt = 0`). Always in
+/// `[cap/2 .. cap]`-bounded range: `backoff_us(a) <= cap_us` for every
+/// `a`, and `>= base_us / 2` — the bounds `tests/chaos_properties.rs`
+/// pins.
+pub fn backoff_us(rng: &mut Rng, attempt: usize, pol: &RetryPolicy) -> u64 {
+    let exp = pol
+        .base_us
+        .saturating_mul(1u64 << attempt.min(32))
+        .min(pol.cap_us)
+        .max(1);
+    let half = exp / 2;
+    half + (rng.f64() * (exp - half + 1) as f64) as u64
+}
+
+/// Which injected-fault mechanism caused a degradation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    PageinFail,
+    PageinDelay,
+    RankStall,
+    RankDown,
+    ExpertPoison,
+    StepPanic,
+    Reroute,
+}
+
+impl FaultClass {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultClass::PageinFail => "pagein-fail",
+            FaultClass::PageinDelay => "pagein-delay",
+            FaultClass::RankStall => "rank-stall",
+            FaultClass::RankDown => "rank-down",
+            FaultClass::ExpertPoison => "expert-poison",
+            FaultClass::StepPanic => "step-panic",
+            FaultClass::Reroute => "reroute",
+        }
+    }
+}
+
+/// One auditable degradation decision — why routing (or serving) shifted.
+#[derive(Debug, Clone)]
+pub struct DegradationEvent {
+    /// forward-pass count when the event fired
+    pub step: u64,
+    pub class: FaultClass,
+    pub layer: Option<usize>,
+    pub expert: Option<usize>,
+    pub rank: Option<usize>,
+    pub detail: String,
+}
+
+/// Injected-fault and degradation counters (cumulative).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// page-in attempts that drew a failure
+    pub pagein_failures: u64,
+    /// bounded retries issued after a failed attempt
+    pub pagein_retries: u64,
+    /// page-ins whose whole retry budget failed (trips health)
+    pub pagein_gave_up: u64,
+    /// injected page-in latency spikes
+    pub pagein_delays: u64,
+    /// total injected backoff + delay sleep time
+    pub injected_sleep_us: u64,
+    /// rank-stall injections (one per stalled rank per layer execution)
+    pub stalls: u64,
+    pub stall_us_total: u64,
+    /// expert outputs overwritten with NaN
+    pub poisoned_outputs: u64,
+    /// injected panics thrown
+    pub panics: u64,
+    /// (layer, expert) health trips
+    pub tripped_experts: u64,
+    /// live tokens whose top-1 expert was masked unhealthy (rerouted)
+    pub degraded_tokens: u64,
+    /// live tokens routed while any health mask was active on the layer
+    pub routed_tokens_masked: u64,
+}
+
+/// Bound on the degradation event log: older events drop first.
+pub const EVENT_LOG_BOUND: usize = 128;
+
+/// Point-in-time snapshot for `/metrics` and benches.
+#[derive(Debug, Clone)]
+pub struct FaultStats {
+    pub plan: String,
+    /// forward passes observed (layer-0 MoE executions)
+    pub steps: u64,
+    pub counters: FaultCounters,
+    /// currently-unhealthy (layer, expert) pairs
+    pub unhealthy_experts: usize,
+    pub events: Vec<DegradationEvent>,
+}
+
+/// Injection-time state owned by the backend (wrapped in its own lock).
+/// All methods are deterministic given the construction seed and the
+/// call sequence.
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    retry: RetryPolicy,
+    n_experts: usize,
+    ep_ranks: usize,
+    rng: Rng,
+    /// forward passes: incremented each time layer 0's MoE stage runs
+    steps: u64,
+    /// `healthy[layer][expert]`
+    healthy: Vec<Vec<bool>>,
+    /// unhealthy count per layer (0 = mask-free fast path)
+    unhealthy_per_layer: Vec<usize>,
+    rank_down_fired: Vec<bool>,
+    poison_tripped: Vec<bool>,
+    panic_fired: bool,
+    counters: FaultCounters,
+    events: Vec<DegradationEvent>,
+}
+
+/// The page-in retry schedule [`FaultState::pagein_plan`] hands back:
+/// the caller performs the sleeps *outside* the fault-state lock.
+#[derive(Debug, Clone, Default)]
+pub struct PageinOutcome {
+    /// backoff sleeps to perform between attempts, in order
+    pub backoff_us: Vec<u64>,
+    /// injected latency spike before the first attempt (pagein-delay)
+    pub delay_us: u64,
+    /// the whole retry budget failed — the expert tripped unhealthy
+    pub gave_up: bool,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan, n_layers: usize, n_experts: usize, ep_ranks: usize) -> FaultState {
+        let seed = plan.pagein_fail.map(|p| p.seed).unwrap_or(0);
+        let n_down = plan.rank_down.len();
+        let n_poison = plan.expert_poison.len();
+        FaultState {
+            plan,
+            retry: RetryPolicy::default(),
+            n_experts,
+            ep_ranks,
+            rng: Rng::new(seed ^ 0xFA_17_5EED),
+            steps: 0,
+            healthy: (0..n_layers).map(|_| vec![true; n_experts]).collect(),
+            unhealthy_per_layer: vec![0; n_layers],
+            rank_down_fired: vec![false; n_down],
+            poison_tripped: vec![false; n_poison],
+            panic_fired: false,
+            counters: FaultCounters::default(),
+            events: Vec::new(),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry
+    }
+
+    fn push_event(&mut self, ev: DegradationEvent) {
+        if self.events.len() >= EVENT_LOG_BOUND {
+            self.events.remove(0);
+        }
+        self.events.push(ev);
+    }
+
+    /// Trip `(layer, expert)` unhealthy and log the event. Idempotent.
+    pub fn trip(&mut self, layer: usize, expert: usize, class: FaultClass, detail: String) {
+        if !self.healthy[layer][expert] {
+            return;
+        }
+        self.healthy[layer][expert] = false;
+        self.unhealthy_per_layer[layer] += 1;
+        self.counters.tripped_experts += 1;
+        self.push_event(DegradationEvent {
+            step: self.steps,
+            class,
+            layer: Some(layer),
+            expert: Some(expert),
+            rank: None,
+            detail,
+        });
+    }
+
+    /// Advance the forward-pass clock (call when layer 0's MoE stage
+    /// starts) and fire any `rank-down` clauses whose time has come.
+    pub fn begin_forward_pass(&mut self) {
+        self.steps += 1;
+        let downs: Vec<(usize, RankDown)> = self
+            .plan
+            .rank_down
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|&(i, d)| !self.rank_down_fired[i] && self.steps > d.after_steps)
+            .collect();
+        for (i, d) in downs {
+            self.rank_down_fired[i] = true;
+            if d.rank >= self.ep_ranks {
+                continue; // plan names a rank the backend doesn't shard to
+            }
+            let (e0, e1) = crate::moe::ep::rank_span(d.rank, self.n_experts, self.ep_ranks);
+            for layer in 0..self.healthy.len() {
+                for e in e0..e1 {
+                    if self.healthy[layer][e] {
+                        self.healthy[layer][e] = false;
+                        self.unhealthy_per_layer[layer] += 1;
+                        self.counters.tripped_experts += 1;
+                    }
+                }
+            }
+            let step = self.steps;
+            self.push_event(DegradationEvent {
+                step,
+                class: FaultClass::RankDown,
+                layer: None,
+                expert: None,
+                rank: Some(d.rank),
+                detail: format!("rank {} down: experts {e0}..{e1} masked on every layer", d.rank),
+            });
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Draw the full page-in outcome for `(layer, expert)` in one call:
+    /// injected delay, the bounded jittered retry schedule, and whether
+    /// the retry budget was exhausted (which trips the expert). The
+    /// caller sleeps outside the lock, then pages the panel in anyway —
+    /// the weights are local in this simulation, so an exhausted budget
+    /// degrades routing rather than wedging the step.
+    pub fn pagein_plan(&mut self, layer: usize, expert: usize) -> PageinOutcome {
+        let mut out = PageinOutcome::default();
+        if let Some(d) = self.plan.pagein_delay {
+            if self.rng.bool(d.rate) {
+                out.delay_us = d.us;
+                self.counters.pagein_delays += 1;
+                self.counters.injected_sleep_us += d.us;
+            }
+        }
+        if let Some(p) = self.plan.pagein_fail {
+            let mut failed_all = true;
+            for attempt in 0..self.retry.max_attempts {
+                if !self.rng.bool(p.rate) {
+                    failed_all = false;
+                    break;
+                }
+                self.counters.pagein_failures += 1;
+                if attempt + 1 < self.retry.max_attempts {
+                    self.counters.pagein_retries += 1;
+                    let us = backoff_us(&mut self.rng, attempt, &self.retry);
+                    self.counters.injected_sleep_us += us;
+                    out.backoff_us.push(us);
+                }
+            }
+            if failed_all {
+                out.gave_up = true;
+                self.counters.pagein_gave_up += 1;
+                self.trip(
+                    layer,
+                    expert,
+                    FaultClass::PageinFail,
+                    format!(
+                        "page-in failed {} times for layer {layer} expert {expert}; \
+                         masking out of routing",
+                        self.retry.max_attempts
+                    ),
+                );
+            }
+        }
+        out
+    }
+
+    /// Total injected stall for `rank` on one layer execution (0 = no
+    /// active stall clause for this rank).
+    pub fn stall_us(&mut self, rank: usize) -> u64 {
+        let mut total = 0;
+        for s in &self.plan.rank_stall {
+            if s.rank == rank && self.steps > s.after_steps {
+                total += s.us;
+            }
+        }
+        if total > 0 {
+            self.counters.stalls += 1;
+            self.counters.stall_us_total += total;
+        }
+        total
+    }
+
+    /// Experts whose output must be poisoned on `layer` this execution.
+    pub fn poison_targets(&self, layer: usize) -> Vec<usize> {
+        self.plan
+            .expert_poison
+            .iter()
+            .filter(|p| p.layer == layer)
+            .map(|p| p.expert)
+            .collect()
+    }
+
+    /// Record that `expert`'s output on `layer` was poisoned across
+    /// `rows` routed rows; first detection trips the expert's health.
+    pub fn note_poisoned(&mut self, layer: usize, expert: usize, rows: u64) {
+        self.counters.poisoned_outputs += rows;
+        let idx = self
+            .plan
+            .expert_poison
+            .iter()
+            .position(|p| p.layer == layer && p.expert == expert);
+        if let Some(i) = idx {
+            if !self.poison_tripped[i] {
+                self.poison_tripped[i] = true;
+                self.trip(
+                    layer,
+                    expert,
+                    FaultClass::ExpertPoison,
+                    format!(
+                        "non-finite output detected from layer {layer} expert {expert} \
+                         ({rows} rows); masking out of routing"
+                    ),
+                );
+            }
+        }
+    }
+
+    /// One-shot injected panic check for `layer`'s MoE stage entry.
+    /// Marks the panic fired *before* returning true so the engine's
+    /// `catch_unwind` recovery never re-triggers it.
+    pub fn should_panic(&mut self, layer: usize) -> bool {
+        match self.plan.step_panic {
+            Some(p) if !self.panic_fired && p.layer == layer && self.steps > p.after_steps => {
+                self.panic_fired = true;
+                self.counters.panics += 1;
+                let step = self.steps;
+                self.push_event(DegradationEvent {
+                    step,
+                    class: FaultClass::StepPanic,
+                    layer: Some(layer),
+                    expert: None,
+                    rank: None,
+                    detail: format!("injected panic at layer {layer} MoE entry"),
+                });
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// The routing health mask for `layer`: `None` when every expert is
+    /// healthy (the mask-free fast path that keeps clean runs bitwise
+    /// identical) and — deliberately — when *every* expert is unhealthy:
+    /// with nothing left to route to, serving degraded-but-routed beats
+    /// emitting zero vectors, so total loss falls back to the unmasked
+    /// decision.
+    pub fn healthy_for(&self, layer: usize) -> Option<Vec<bool>> {
+        let u = self.unhealthy_per_layer[layer];
+        if u == 0 || u == self.n_experts {
+            return None;
+        }
+        Some(self.healthy[layer].clone())
+    }
+
+    pub fn is_healthy(&self, layer: usize, expert: usize) -> bool {
+        self.healthy[layer][expert]
+    }
+
+    /// Record per-layer-step reroute accounting: `degraded` live tokens
+    /// whose top-1 expert was masked, out of `routed` live tokens routed
+    /// under an active mask. Logs one auditable event per layer-step
+    /// that actually rerouted tokens.
+    pub fn note_degraded(&mut self, layer: usize, degraded: u64, routed: u64) {
+        self.counters.degraded_tokens += degraded;
+        self.counters.routed_tokens_masked += routed;
+        if degraded > 0 {
+            let step = self.steps;
+            self.push_event(DegradationEvent {
+                step,
+                class: FaultClass::Reroute,
+                layer: Some(layer),
+                expert: None,
+                rank: None,
+                detail: format!(
+                    "{degraded}/{routed} tokens rerouted off unhealthy experts on layer {layer}"
+                ),
+            });
+        }
+    }
+
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            plan: self.plan.label(),
+            steps: self.steps,
+            counters: self.counters.clone(),
+            unhealthy_experts: self.unhealthy_per_layer.iter().sum(),
+            events: self.events.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let plan = FaultPlan::parse(
+            "pagein-fail:rate=0.05,seed=7;rank-stall:rank=2,after_steps=50,us=20000;\
+             expert-poison:layer=3,expert=11",
+        )
+        .unwrap();
+        assert_eq!(plan.pagein_fail, Some(PageinFail { rate: 0.05, seed: 7 }));
+        assert_eq!(
+            plan.rank_stall,
+            vec![RankStall { rank: 2, after_steps: 50, us: 20000 }]
+        );
+        assert_eq!(plan.expert_poison, vec![ExpertPoison { layer: 3, expert: 11 }]);
+        assert!(plan.rank_down.is_empty() && plan.step_panic.is_none());
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn label_round_trips() {
+        let spec = "pagein-fail:rate=0.5,seed=3;pagein-delay:us=100,rate=0.25;\
+                    rank-stall:rank=1,after_steps=2,us=300;rank-down:rank=0,after_steps=4;\
+                    expert-poison:layer=1,expert=5;step-panic:layer=0,after_steps=9";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(FaultPlan::parse(&plan.label()).unwrap(), plan);
+    }
+
+    #[test]
+    fn empty_spec_is_the_empty_plan() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ;  ").unwrap().is_empty());
+        assert_eq!(FaultPlan::default().label(), "");
+    }
+
+    #[test]
+    fn unknown_clause_and_key_are_loud() {
+        assert!(FaultPlan::parse("gpu-on-fire:rate=1").is_err());
+        assert!(FaultPlan::parse("pagein-fail:rate=0.1,sed=7").is_err());
+        assert!(FaultPlan::parse("pagein-fail:seed=7").is_err(), "rate is required");
+        assert!(FaultPlan::parse("pagein-fail:rate=1.5").is_err(), "rate bounded");
+        assert!(FaultPlan::parse("rank-stall:rank=0").is_err(), "us is required");
+        assert!(FaultPlan::parse("pagein-fail:rate").is_err(), "key without value");
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_jittered() {
+        let pol = RetryPolicy::default();
+        let mut rng = Rng::new(42);
+        for attempt in 0..40 {
+            let us = backoff_us(&mut rng, attempt, &pol);
+            assert!(us <= pol.cap_us, "attempt {attempt}: {us} > cap {}", pol.cap_us);
+            assert!(us >= pol.base_us / 2, "attempt {attempt}: {us} below jitter floor");
+        }
+        // deep attempts saturate at the cap's jitter band, never overflow
+        let us = backoff_us(&mut rng, 1000, &pol);
+        assert!(us >= pol.cap_us / 2 && us <= pol.cap_us);
+    }
+
+    #[test]
+    fn pagein_gave_up_trips_health_deterministically() {
+        let plan = FaultPlan::parse("pagein-fail:rate=1.0,seed=9").unwrap();
+        let mut a = FaultState::new(plan.clone(), 2, 8, 1);
+        let mut b = FaultState::new(plan, 2, 8, 1);
+        let oa = a.pagein_plan(0, 3);
+        let ob = b.pagein_plan(0, 3);
+        assert!(oa.gave_up && ob.gave_up);
+        assert_eq!(oa.backoff_us, ob.backoff_us, "seeded runs replay identically");
+        assert_eq!(oa.backoff_us.len(), a.retry_policy().max_attempts - 1);
+        assert!(!a.is_healthy(0, 3));
+        assert!(a.is_healthy(1, 3), "health is per-layer");
+        assert_eq!(a.stats().counters.pagein_gave_up, 1);
+        assert_eq!(a.stats().unhealthy_experts, 1);
+        assert!(!a.stats().events.is_empty());
+    }
+
+    #[test]
+    fn rate_zero_never_fails() {
+        let plan = FaultPlan::parse("pagein-fail:rate=0.0,seed=1").unwrap();
+        let mut s = FaultState::new(plan, 1, 4, 1);
+        for e in 0..4 {
+            let o = s.pagein_plan(0, e);
+            assert!(!o.gave_up && o.backoff_us.is_empty());
+        }
+        assert_eq!(s.stats().counters.pagein_failures, 0);
+    }
+
+    #[test]
+    fn rank_down_masks_the_shard_after_its_step() {
+        let plan = FaultPlan::parse("rank-down:rank=1,after_steps=2").unwrap();
+        let mut s = FaultState::new(plan, 2, 8, 2); // rank 1 owns experts 4..8
+        s.begin_forward_pass();
+        s.begin_forward_pass();
+        assert!(s.healthy_for(0).is_none(), "not yet fired");
+        s.begin_forward_pass();
+        let h = s.healthy_for(0).expect("mask active");
+        assert_eq!(h, vec![true, true, true, true, false, false, false, false]);
+        assert!(s.healthy_for(1).is_some(), "all layers masked");
+        assert_eq!(s.stats().counters.tripped_experts, 8);
+    }
+
+    #[test]
+    fn total_loss_falls_back_to_unmasked() {
+        let plan = FaultPlan::parse("rank-down:rank=0").unwrap();
+        let mut s = FaultState::new(plan, 1, 4, 1); // rank 0 owns everything
+        s.begin_forward_pass();
+        assert_eq!(s.stats().unhealthy_experts, 4);
+        assert!(s.healthy_for(0).is_none(), "all-down layer routes unmasked");
+    }
+
+    #[test]
+    fn stall_activates_after_steps() {
+        let plan = FaultPlan::parse("rank-stall:rank=0,after_steps=1,us=500").unwrap();
+        let mut s = FaultState::new(plan, 1, 4, 2);
+        s.begin_forward_pass();
+        assert_eq!(s.stall_us(0), 0, "inactive before after_steps");
+        s.begin_forward_pass();
+        assert_eq!(s.stall_us(0), 500);
+        assert_eq!(s.stall_us(1), 0, "other ranks unaffected");
+        assert_eq!(s.stats().counters.stall_us_total, 500);
+    }
+
+    #[test]
+    fn poison_trips_once_and_counts_rows() {
+        let plan = FaultPlan::parse("expert-poison:layer=0,expert=2").unwrap();
+        let mut s = FaultState::new(plan, 2, 4, 1);
+        assert_eq!(s.poison_targets(0), vec![2]);
+        assert!(s.poison_targets(1).is_empty());
+        s.note_poisoned(0, 2, 5);
+        s.note_poisoned(0, 2, 3);
+        assert_eq!(s.stats().counters.poisoned_outputs, 8);
+        assert_eq!(s.stats().counters.tripped_experts, 1, "trip is idempotent");
+        assert!(!s.is_healthy(0, 2));
+    }
+
+    #[test]
+    fn step_panic_fires_exactly_once() {
+        let plan = FaultPlan::parse("step-panic:layer=1,after_steps=1").unwrap();
+        let mut s = FaultState::new(plan, 2, 4, 1);
+        s.begin_forward_pass();
+        assert!(!s.should_panic(1), "before after_steps");
+        s.begin_forward_pass();
+        assert!(!s.should_panic(0), "wrong layer");
+        assert!(s.should_panic(1));
+        assert!(!s.should_panic(1), "one-shot");
+        assert_eq!(s.stats().counters.panics, 1);
+    }
+
+    #[test]
+    fn event_log_is_bounded() {
+        let plan = FaultPlan::parse("pagein-fail:rate=1.0,seed=1").unwrap();
+        let mut s = FaultState::new(plan, 1, 4, 1);
+        for i in 0..(EVENT_LOG_BOUND + 50) {
+            s.note_degraded(0, 1 + (i as u64 % 3), 4);
+        }
+        let st = s.stats();
+        assert_eq!(st.events.len(), EVENT_LOG_BOUND);
+        assert_eq!(st.events.last().unwrap().step, 0);
+        assert!(st.counters.degraded_tokens > EVENT_LOG_BOUND as u64);
+    }
+}

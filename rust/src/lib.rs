@@ -27,6 +27,7 @@ pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
+pub mod faults;
 pub mod latency;
 pub mod metrics;
 pub mod model;

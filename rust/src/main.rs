@@ -81,6 +81,12 @@ fn spec() -> Spec {
             ("max-requests", true, "serve: drain and exit after N generations \
                               (default: run until POST /shutdown)"),
             ("no-mask-padding", false, "disable the padding-token routing fix (paper §6)"),
+            ("faults", true, "cpu: deterministic fault-injection plan, e.g. \
+                              'pagein-fail:rate=0.05,seed=7;rank-stall:rank=2,\
+                              after_steps=50,us=20000;expert-poison:layer=3,expert=11' \
+                              (requires grouped dispatch; empty plan = no hooks)"),
+            ("step-budget-us", true, "watchdog: decode steps slower than this budget \
+                              count as wedged in /metrics health (default: off)"),
             ("prompt", true, "generate: prompt text"),
             ("max-tokens", true, "generate: tokens to generate (default 32)"),
             ("temperature", true, "sampling temperature (default 0)"),
@@ -134,6 +140,7 @@ fn engine_config(args: &Args, c: &ModelConfig) -> Result<EngineConfig> {
         sched: SchedMode::from_cli(&args.str_or("sched", "continuous"))?,
         prefill_chunk: args.usize_opt("prefill-chunk")?,
         adaptive: args.flag("adaptive"),
+        step_budget_us: args.usize_opt("step-budget-us")?.map(|v| v as u64),
         ..EngineConfig::new(parse_policy(args, c)?, H100Presets::for_config(&c.name))
     })
 }
@@ -168,6 +175,7 @@ fn cmd_generate<B: Backend>(args: &Args, runner: ModelRunner<B>, tok: Tokenizer)
             top_p: args.f64_or("top-p", 1.0)? as f32,
             seed: args.usize_or("seed", 0)? as u64,
             policy: None,
+            deadline_ms: None,
         })
         .map_err(|e| oea_serve::Error::Config(format!("submit: {e}")))?;
     let done = engine.run_to_completion()?;
@@ -252,6 +260,9 @@ fn serve_preamble(
         args.usize_or("max-queue", 64)?,
         opts.http_workers,
     );
+    if let Some(plan) = args.str_opt("faults") {
+        println!("fault plan armed: {plan}");
+    }
     Ok((format!("127.0.0.1:{port}"), opts))
 }
 
@@ -305,7 +316,18 @@ fn cpu_runner(args: &Args) -> Result<ModelRunner<CpuBackend>> {
             }
         }
     }
-    Ok(ModelRunner::new(CpuBackend::synthetic_with(cfg, seed, opts)))
+    let mut backend = CpuBackend::synthetic_with(cfg, seed, opts);
+    if let Some(spec) = args.str_opt("faults") {
+        if backend.dispatch_mode() != oea_serve::backend::cpu::DispatchMode::Grouped {
+            return Err(oea_serve::Error::Config(
+                "--faults requires grouped dispatch (OEA_DISPATCH=grouped); the gather \
+                 oracle has no per-expert work list to inject into"
+                    .into(),
+            ));
+        }
+        backend.install_faults(oea_serve::faults::FaultPlan::parse(spec)?);
+    }
+    Ok(ModelRunner::new(backend))
 }
 
 fn run_cpu(args: &Args) -> Result<()> {

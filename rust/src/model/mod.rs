@@ -217,11 +217,17 @@ impl<B: Backend> ModelRunner<B> {
             } else {
                 None
             };
+            // the health view is a constraint every policy honors (unlike
+            // the residency *preference* above); backends without a fault
+            // plane — or with a fully healthy layer — return None, which
+            // is the bitwise-identity fast path through routing
+            let healthview = self.backend.health_view(l);
             let input = RoutingInput {
                 scores: &scores,
                 live,
                 mask_padding,
                 resident: resview.as_deref(),
+                healthy: healthview.as_deref(),
             };
             // batch-adaptive tightening of the DEFAULT policy, from this
             // layer's live scores (per-request overrides stay verbatim —
@@ -242,6 +248,20 @@ impl<B: Backend> ModelRunner<B> {
                 }
                 None => policy::route(pol_eff, &input),
             };
+            // degraded-token accounting: a live token whose raw top-1
+            // expert is health-masked was rerouted onto survivors
+            if let Some(h) = healthview.as_deref() {
+                let (mut degraded, mut routed) = (0u64, 0u64);
+                for i in 0..b {
+                    if !mask_padding || live[i] {
+                        routed += 1;
+                        if !h[scores.ranked(i, 0)] {
+                            degraded += 1;
+                        }
+                    }
+                }
+                self.backend.note_degraded_tokens(l, degraded, routed);
+            }
             let t_bucket = c.t_bucket_for(d.t())?;
             let ids = pad_active_list(&d.active, t_bucket, c.n_experts);
             let route_us = t0.elapsed().as_secs_f64() * 1e6;

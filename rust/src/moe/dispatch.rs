@@ -263,7 +263,7 @@ mod tests {
         let live = vec![true; 4];
         route(
             Policy::Vanilla { k: 2 },
-            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
+            &RoutingInput::new(&s, &live, true),
         )
     }
 
@@ -364,7 +364,7 @@ mod tests {
         let live = vec![true; 4];
         let d = route(
             Policy::Ep { k0: 1, k: 2, ranks: 4, topup: 0, alpha: 0.0 },
-            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
+            &RoutingInput::new(&s, &live, true),
         );
         assert_eq!(d.ranks, 4);
         let g = ExpertGroups::from_decision(&d);
@@ -377,7 +377,7 @@ mod tests {
         let live = vec![true, false, false, true];
         let d = route(
             Policy::Vanilla { k: 2 },
-            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
+            &RoutingInput::new(&s, &live, true),
         );
         let g = ExpertGroups::from_decision(&d);
         assert_eq!(g.routed_tokens(), 4);

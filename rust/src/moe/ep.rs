@@ -94,6 +94,7 @@ pub fn route_ep_cache_aware(
         live: input.live,
         mask_padding: input.mask_padding,
         resident: input.resident,
+        healthy: input.healthy,
     };
     let (per, union) = ep_masks(&binput, k0, k_max, ranks, topup);
     // combine from the ORIGINAL scores (Eq. 1 over each selected set)
@@ -140,6 +141,13 @@ fn ep_masks(
                     break;
                 }
                 let e = s.ranked(i, j);
+                // phase 1 already excluded unhealthy experts from the
+                // union; the top-up must not re-introduce them
+                if let Some(h) = sel.healthy {
+                    if !h[e] {
+                        continue;
+                    }
+                }
                 let r = rank_of(e, s.n, ranks);
                 if (rank_t[r] as f64) < avg && !union.contains(e) {
                     per_token[i].set(e);
@@ -206,7 +214,7 @@ mod tests {
     fn per_rank_counts_sum_to_t() {
         let s = random_scores(16, 32, 0);
         let live = vec![true; 16];
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None, healthy: None };
         let d = route_ep(&input, 3, 8, 4, 0);
         assert_eq!(d.ranks, 4);
         assert_eq!(d.per_rank_t().iter().sum::<usize>(), d.t());
@@ -217,7 +225,7 @@ mod tests {
     fn topup_never_shrinks_quality() {
         let s = random_scores(16, 32, 1);
         let live = vec![true; 16];
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None, healthy: None };
         let base = route_ep(&input, 2, 8, 4, 0);
         let topped = route_ep(&input, 2, 8, 4, 2);
         // top-up can only add experts
@@ -231,7 +239,7 @@ mod tests {
     fn sets_within_union() {
         let s = random_scores(8, 32, 2);
         let live = vec![true; 8];
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None, healthy: None };
         let d = route_ep(&input, 3, 8, 4, 1);
         for set in &d.sets {
             for e in set {
@@ -246,7 +254,7 @@ mod tests {
         // OeaSimplified, bitwise across sets/active/combine
         let s = random_scores(16, 32, 3);
         let live: Vec<bool> = (0..16).map(|i| i % 5 != 0).collect();
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None, healthy: None };
         let oea = route(Policy::OeaSimplified { k0: 3, k: 8 }, &input);
         for topup in [0, 2] {
             let ep = route_ep(&input, 3, 8, 1, topup);
@@ -260,7 +268,7 @@ mod tests {
     fn cache_aware_ep_reduces_without_view_and_boosts_with_one() {
         let s = random_scores(16, 32, 4);
         let live = vec![true; 16];
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None, healthy: None };
         let base = route_ep(&input, 3, 8, 4, 1);
         // uniform masks: identical decision
         for uniform in [vec![true; 32], vec![false; 32]] {
@@ -278,11 +286,38 @@ mod tests {
                 live: &live,
                 mask_padding: true,
                 resident: Some(&resident),
+                healthy: None,
             },
         );
         let direct = route_ep_cache_aware(&input, &resident, 3, 8, 4, 1, 1.0);
         assert_eq!(via_policy.sets, direct.sets);
         assert_eq!(via_policy.combine, direct.combine);
         assert_eq!(via_policy.ranks, 4);
+    }
+
+    #[test]
+    fn topup_never_reintroduces_unhealthy_experts() {
+        // the top-up walks preference lists PAST the phase-1 prefix, so
+        // without its own health check it would re-add masked experts
+        let s = random_scores(16, 32, 5);
+        let live = vec![true; 16];
+        let healthy: Vec<bool> = (0..32).map(|e| e % 3 != 0).collect();
+        let input = RoutingInput {
+            scores: &s,
+            live: &live,
+            mask_padding: true,
+            resident: None,
+            healthy: Some(&healthy),
+        };
+        let d = route_ep(&input, 2, 8, 4, 3);
+        for e in &d.active {
+            assert!(healthy[*e as usize], "unhealthy e{e} in EP union");
+        }
+        for (i, set) in d.sets.iter().enumerate() {
+            for e in set {
+                assert!(healthy[*e as usize], "unhealthy e{e} in row {i}");
+            }
+            assert!(!set.is_empty(), "row {i} starved");
+        }
     }
 }

@@ -76,6 +76,18 @@ impl ExpertMask {
     pub fn to_vec(&self) -> Vec<u16> {
         self.iter_ids().map(|e| e as u16).collect()
     }
+
+    /// Mask with bit `e` set iff `flags[e]` — the bridge from per-expert
+    /// boolean views (residency, health) into set arithmetic.
+    pub fn from_flags(flags: &[bool]) -> Self {
+        let mut m = ExpertMask::new(flags.len());
+        for (e, &on) in flags.iter().enumerate() {
+            if on {
+                m.set(e);
+            }
+        }
+        m
+    }
 }
 
 #[cfg(test)]
@@ -121,6 +133,14 @@ mod tests {
         }
         a.intersect_with(&b);
         assert_eq!(a.to_vec(), vec![5, 9]);
+    }
+
+    #[test]
+    fn from_flags_matches_set_bits() {
+        let flags = [true, false, true, true, false];
+        let m = ExpertMask::from_flags(&flags);
+        assert_eq!(m.to_vec(), vec![0, 2, 3]);
+        assert_eq!(m.count(), 3);
     }
 
     #[test]

@@ -56,15 +56,6 @@ pub enum Policy {
     Ep { k0: usize, k: usize, ranks: usize, topup: usize, alpha: f64 },
 }
 
-/// Every valid `--policy` spec, for loud top-level errors: a typo'd
-/// policy NAME must enumerate what would have parsed, exactly like a
-/// typo'd key enumerates the allowed keys.
-#[deprecated(note = "derive the listing from SPEC_TABLE via policy_specs()")]
-pub const POLICY_SPECS: &str = "vanilla[:k=K] | pruned:k0=K0[,p=P] | oea:k0=K0[,k=K] | \
-     oea-full:k0=K0,p=P,kmax=KM,maxp=MP | lynx:t=T[,k=K] | dynskip:tau=TAU[,k=K] | \
-     expert-choice:cap=C | cache-aware:k0=K0[,k=K,alpha=A] | \
-     ep:k0=K0,ranks=R[,k=K,topup=T,alpha=A]";
-
 /// One row of [`SPEC_TABLE`]: the grammar of one policy name.
 #[derive(Debug, Clone, Copy)]
 pub struct SpecTemplate {
@@ -73,16 +64,13 @@ pub struct SpecTemplate {
     /// is the canonical way to WRITE the spec (what the help listing
     /// shows outside brackets); parsing stays lenient — every key has a
     /// model-derived default applied at [`PolicySpec::build`] time, so
-    /// e.g. a bare `cache-aware` still parses (back-compat with the old
-    /// stringly `from_cli`).
+    /// e.g. a bare `cache-aware` still parses.
     pub keys: &'static [(&'static str, &'static str, bool)],
 }
 
 /// The single registry every policy-spec surface derives from: parsing
 /// (allowed keys), the `--policy` help/error listing
-/// ([`policy_specs`]), and [`PolicySpec::canonical`] key order. The
-/// legacy [`POLICY_SPECS`] constant is pinned equal to the derivation by
-/// a regression test.
+/// ([`policy_specs`]), and [`PolicySpec::canonical`] key order.
 pub const SPEC_TABLE: &[SpecTemplate] = &[
     SpecTemplate { name: "vanilla", keys: &[("k", "K", false)] },
     SpecTemplate { name: "pruned", keys: &[("k0", "K0", true), ("p", "P", false)] },
@@ -111,8 +99,7 @@ pub const SPEC_TABLE: &[SpecTemplate] = &[
 ];
 
 /// The `--policy` help/error listing, derived from [`SPEC_TABLE`]:
-/// `name:req1=V[,opt1=V]` per row, `|`-joined. Replaces the hand-kept
-/// [`POLICY_SPECS`] constant (a regression test pins them equal).
+/// `name:req1=V[,opt1=V]` per row, `|`-joined.
 pub fn policy_specs() -> String {
     SPEC_TABLE
         .iter()
@@ -374,18 +361,6 @@ impl PolicySpec {
 }
 
 impl Policy {
-    /// Parse a CLI policy spec. Examples:
-    /// `vanilla`, `pruned:k0=3`, `pruned:k0=4,p=0.7`, `oea:k0=3`,
-    /// `oea-full:k0=3,p=0.7,kmax=9,maxp=32`, `lynx:t=16`,
-    /// `dynskip:tau=0.3`, `expert-choice:cap=2`,
-    /// `cache-aware:k0=4,k=8,alpha=0.5`, `ep:k0=4,ranks=4,topup=1`.
-    /// `k` defaults to the model's top_k. Unknown keys are rejected (a
-    /// typo like `oea:kmx=9` must not silently run with the default).
-    #[deprecated(note = "use PolicySpec::parse(spec)?.build(model_k, n_experts)")]
-    pub fn from_cli(spec: &str, model_k: usize, n_experts: usize) -> Result<Policy> {
-        PolicySpec::parse(spec)?.build(model_k, n_experts)
-    }
-
     /// Whether this policy can route one row in isolation — the family
     /// [`route_per_row`] (per-request policy overrides) accepts. Lynx,
     /// expert-choice, and EP shape the whole batch's expert sets at once
@@ -441,13 +416,24 @@ pub struct RoutingInput<'a> {
     /// (`None` = no cache, or an unbounded one). Only
     /// [`Policy::CacheAware`] reads it.
     pub resident: Option<&'a [bool]>,
+    /// Health view: per-expert "safe to route to" flags for this layer,
+    /// supplied by a backend with a fault-injection plane
+    /// ([`crate::faults`]). Unlike `resident` (a *preference* only
+    /// cache-aware policies read), this is a *constraint* every policy
+    /// honors: unhealthy experts are excluded from phase-1 selection and
+    /// the batch union, so tokens piggyback onto healthy experts and
+    /// combine weights renormalize over the surviving set. `None` = every
+    /// expert healthy — that path must stay bitwise-identical to a build
+    /// without health tracking.
+    pub healthy: Option<&'a [bool]>,
 }
 
 impl<'a> RoutingInput<'a> {
-    /// Routing input with no residency view (call sites with no bounded
-    /// expert cache; cache-aware policies degrade to base OEA under it).
+    /// Routing input with no residency or health view (call sites with no
+    /// bounded expert cache and no fault plane; cache-aware policies
+    /// degrade to base OEA under it).
     pub fn new(scores: &'a ScoreMatrix, live: &'a [bool], mask_padding: bool) -> RoutingInput<'a> {
-        RoutingInput { scores, live, mask_padding, resident: None }
+        RoutingInput { scores, live, mask_padding, resident: None, healthy: None }
     }
 }
 
@@ -520,8 +506,46 @@ pub(crate) fn is_live(input: &RoutingInput, i: usize) -> bool {
     !input.mask_padding || input.live[i]
 }
 
+/// Set the first `n_i` *routable* experts of row `i`'s preference order
+/// into `m`: a plain ranked prefix when no health mask is active (the
+/// bitwise-identity fast path — this MUST stay the exact pre-fault-plane
+/// loop), a skip-and-extend walk otherwise — unhealthy experts are passed
+/// over and the prefix reaches deeper into the preference list so the
+/// token still gets `n_i` baseline experts (capped by the healthy count).
+pub(crate) fn top_prefix_masked(
+    sel: &ScoreMatrix,
+    healthy: Option<&[bool]>,
+    i: usize,
+    n_i: usize,
+    m: &mut ExpertMask,
+) {
+    match healthy {
+        None => {
+            for j in 0..n_i {
+                m.set(sel.ranked(i, j));
+            }
+        }
+        Some(h) => {
+            let mut taken = 0;
+            for j in 0..sel.n {
+                if taken == n_i {
+                    break;
+                }
+                let e = sel.ranked(i, j);
+                if h[e] {
+                    m.set(e);
+                    taken += 1;
+                }
+            }
+        }
+    }
+}
+
 /// Phase 1 of OEA: per-token baseline masks (batch independent).
-/// `n_i = min(k0, t_i)` where `t_i` is the top-p cutoff.
+/// `n_i = min(k0, t_i)` where `t_i` is the top-p cutoff. Health-masked
+/// experts ([`RoutingInput::healthy`]) are skipped, which also keeps them
+/// out of the union — and therefore out of phase 2, which only ever adds
+/// union members.
 /// `pub(crate)` so the EP router (`moe::ep`) runs the *same* phase code —
 /// the structural guarantee behind its ranks=1 bitwise-identity pin.
 pub(crate) fn phase1_masks(
@@ -537,9 +561,7 @@ pub(crate) fn phase1_masks(
         if is_live(input, i) {
             let t_i = s.top_p_cutoff(i, p);
             let n_i = k0.min(t_i).min(s.n);
-            for j in 0..n_i {
-                m.set(s.ranked(i, j));
-            }
+            top_prefix_masked(s, input.healthy, i, n_i, &mut m);
             union.union_with(&m);
         }
         per_token.push(m);
@@ -655,6 +677,7 @@ fn route_cache_aware(
         live: input.live,
         mask_padding: input.mask_padding,
         resident: input.resident,
+        healthy: input.healthy,
     };
     let (mut per, union) = phase1_masks(&binput, k0, 1.0);
     phase2_piggyback(&binput, &mut per, &union, k, s.n);
@@ -739,6 +762,57 @@ fn route_lynx(input: &RoutingInput, k: usize, target_t: usize) -> RoutingDecisio
     RoutingDecision::from_masks(input, &out, &realized)
 }
 
+/// One dynskip row, shared by [`route_dynskip`] and [`route_per_row`]:
+/// anchor on the token's best routable expert (always kept), then keep
+/// top-k candidates whose score is at least `tau` × the anchor score.
+/// With no health mask this is exactly the pre-fault-plane loop; under
+/// one, the candidate window slides past unhealthy experts (the anchor
+/// and threshold re-base on the best *healthy* expert) so degraded
+/// layers keep comparable per-token set sizes.
+pub(crate) fn dynskip_row(
+    s: &ScoreMatrix,
+    healthy: Option<&[bool]>,
+    i: usize,
+    k: usize,
+    tau: f64,
+    m: &mut ExpertMask,
+) {
+    match healthy {
+        None => {
+            let top1 = s.score(i, s.ranked(i, 0)) as f64;
+            m.set(s.ranked(i, 0));
+            for j in 1..k.min(s.n) {
+                let e = s.ranked(i, j);
+                if (s.score(i, e) as f64) >= tau * top1 {
+                    m.set(e);
+                }
+            }
+        }
+        Some(h) => {
+            let kk = k.min(s.n).max(1);
+            let mut cand = Vec::with_capacity(kk);
+            for j in 0..s.n {
+                let e = s.ranked(i, j);
+                if h[e] {
+                    cand.push(e);
+                    if cand.len() == kk {
+                        break;
+                    }
+                }
+            }
+            if let Some(&e0) = cand.first() {
+                let top1 = s.score(i, e0) as f64;
+                m.set(e0);
+                for &e in &cand[1..] {
+                    if (s.score(i, e) as f64) >= tau * top1 {
+                        m.set(e);
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Lu et al. 2024: token-centric skipping — within the top-k, keep expert
 /// ranked j iff score >= tau * top-1 score. Not batch-aware.
 fn route_dynskip(input: &RoutingInput, k: usize, tau: f64) -> RoutingDecision {
@@ -748,14 +822,7 @@ fn route_dynskip(input: &RoutingInput, k: usize, tau: f64) -> RoutingDecision {
     for i in 0..s.b {
         let mut m = ExpertMask::new(s.n);
         if is_live(input, i) {
-            let top1 = s.score(i, s.ranked(i, 0)) as f64;
-            m.set(s.ranked(i, 0));
-            for j in 1..k.min(s.n) {
-                let e = s.ranked(i, j);
-                if (s.score(i, e) as f64) >= tau * top1 {
-                    m.set(e);
-                }
-            }
+            dynskip_row(s, input.healthy, i, k, tau, &mut m);
             union.union_with(&m);
         }
         per.push(m);
@@ -924,9 +991,7 @@ pub fn route_per_row(policies: &[Policy], input: &RoutingInput) -> Result<Routin
             let top_prefix = |sel: &ScoreMatrix, k0: usize, p: f64, m: &mut ExpertMask| {
                 let t_i = sel.top_p_cutoff(i, p);
                 let n_i = k0.min(t_i).min(sel.n);
-                for j in 0..n_i {
-                    m.set(sel.ranked(i, j));
-                }
+                top_prefix_masked(sel, input.healthy, i, n_i, m);
             };
             match policies[i] {
                 Policy::Vanilla { k } => top_prefix(s, k, 1.0, &mut m),
@@ -936,17 +1001,7 @@ pub fn route_per_row(policies: &[Policy], input: &RoutingInput) -> Result<Routin
                 Policy::CacheAware { k0, .. } => {
                     top_prefix(sel_for(&policies[i]), k0, 1.0, &mut m)
                 }
-                Policy::DynSkip { k, tau } => {
-                    // mirror route_dynskip's per-row body
-                    let top1 = s.score(i, s.ranked(i, 0)) as f64;
-                    m.set(s.ranked(i, 0));
-                    for j in 1..k.min(s.n) {
-                        let e = s.ranked(i, j);
-                        if (s.score(i, e) as f64) >= tau * top1 {
-                            m.set(e);
-                        }
-                    }
-                }
+                Policy::DynSkip { k, tau } => dynskip_row(s, input.healthy, i, k, tau, &mut m),
                 _ => unreachable!("batch-global policies rejected above"),
             }
             union.union_with(&m);
@@ -995,6 +1050,13 @@ fn route_expert_choice(input: &RoutingInput, capacity: usize) -> RoutingDecision
     let mut union = ExpertMask::new(s.n);
     let mut col: Vec<usize> = Vec::with_capacity(s.b);
     for e in 0..s.n {
+        // health-masked experts select no tokens at all (expert-choice is
+        // expert-centric, so masking is a column skip, not a row walk)
+        if let Some(h) = input.healthy {
+            if !h[e] {
+                continue;
+            }
+        }
         col.clear();
         col.extend((0..s.b).filter(|&i| is_live(input, i)));
         // NaN-safe (see route_lynx): total_cmp instead of partial_cmp
@@ -1009,9 +1071,6 @@ fn route_expert_choice(input: &RoutingInput, capacity: usize) -> RoutingDecision
 
 #[cfg(test)]
 mod tests {
-    // the legacy from_cli / POLICY_SPECS surface stays covered while the
-    // deprecated shims exist (one PR)
-    #![allow(deprecated)]
     use super::*;
 
     /// 4 tokens, 8 experts, hand-built scores.
@@ -1153,7 +1212,13 @@ mod tests {
         let live = vec![true, true, false, false];
         let d = route(
             Policy::Vanilla { k: 2 },
-            &RoutingInput { scores: &s, live: &live, mask_padding: false, resident: None },
+            &RoutingInput {
+                scores: &s,
+                live: &live,
+                mask_padding: false,
+                resident: None,
+                healthy: None,
+            },
         );
         // pad tokens route freely and enlarge the union (the §6 bug)
         assert_eq!(d.active, vec![0, 1, 2, 4, 5, 6]);
@@ -1191,9 +1256,10 @@ mod tests {
     }
 
     #[test]
-    fn from_cli_parses_every_doc_example() {
-        // one assertion per example in the from_cli doc comment
-        let p = |s: &str| Policy::from_cli(s, 8, 128).unwrap();
+    fn spec_build_resolves_model_defaults() {
+        // one assertion per canonical spec example: unset keys resolve
+        // against the model (k family -> top_k, t/maxp scale w/ n_experts)
+        let p = |s: &str| PolicySpec::parse(s).unwrap().build(8, 128).unwrap();
         assert_eq!(p("vanilla"), Policy::Vanilla { k: 8 });
         assert_eq!(p("pruned:k0=3"), Policy::Pruned { k0: 3, p: 1.0 });
         assert_eq!(p("pruned:k0=4,p=0.7"), Policy::Pruned { k0: 4, p: 0.7 });
@@ -1222,12 +1288,12 @@ mod tests {
     }
 
     #[test]
-    fn from_cli_unknown_name_enumerates_valid_specs() {
+    fn unknown_name_enumerates_valid_specs() {
         // regression (ISSUE 5 satellite): the top-level name error must be
         // as loud as the unknown-key error — it enumerates every valid
         // policy spec, not just the bare names
         for spec in ["nope", "EP:k0=4", "oae:k0=3"] {
-            let err = Policy::from_cli(spec, 8, 128).unwrap_err().to_string();
+            let err = PolicySpec::parse(spec).unwrap_err().to_string();
             for expected in [
                 "vanilla[:k=K]",
                 "pruned:k0=K0[,p=P]",
@@ -1248,17 +1314,18 @@ mod tests {
     }
 
     #[test]
-    fn from_cli_ep_validates_ranks_and_alpha() {
-        assert!(Policy::from_cli("ep:ranks=0", 8, 128).is_err());
-        assert!(Policy::from_cli("ep:ranks=129", 8, 128).is_err());
-        assert!(Policy::from_cli("ep:alpha=-1", 8, 128).is_err());
-        assert!(Policy::from_cli("ep:rank=4", 8, 128).is_err()); // typo'd key
-        assert_eq!(Policy::from_cli("ep:ranks=4", 8, 128).unwrap().ranks(), 4);
-        assert_eq!(Policy::from_cli("vanilla", 8, 128).unwrap().ranks(), 1);
+    fn spec_build_validates_ep_ranks_and_alpha() {
+        let build = |s: &str| PolicySpec::parse(s).and_then(|sp| sp.build(8, 128));
+        assert!(build("ep:ranks=0").is_err());
+        assert!(build("ep:ranks=129").is_err());
+        assert!(build("ep:alpha=-1").is_err());
+        assert!(build("ep:rank=4").is_err()); // typo'd key
+        assert_eq!(build("ep:ranks=4").unwrap().ranks(), 4);
+        assert_eq!(build("vanilla").unwrap().ranks(), 1);
     }
 
     #[test]
-    fn from_cli_rejects_unknown_keys() {
+    fn spec_parse_rejects_unknown_keys() {
         use crate::util::error::Error;
         // the motivating typo: `kmx` instead of `kmax` must not silently
         // run with the default
@@ -1273,7 +1340,7 @@ mod tests {
             "cache-aware:beta=0.5",
             "oea-full:k0=3,maxP=32", // keys are case-sensitive
         ] {
-            let err = Policy::from_cli(spec, 8, 128).unwrap_err();
+            let err = PolicySpec::parse(spec).unwrap_err();
             assert!(
                 matches!(err, Error::Config(_)),
                 "{spec} must fail with Error::Config, got {err}"
@@ -1286,13 +1353,14 @@ mod tests {
     }
 
     #[test]
-    fn from_cli_rejects_malformed_and_unknown_names() {
-        assert!(Policy::from_cli("nope", 8, 128).is_err());
-        assert!(Policy::from_cli("oea:k0", 8, 128).is_err()); // missing '='
-        assert!(Policy::from_cli("oea:k0=x", 8, 128).is_err()); // not an int
-        assert!(Policy::from_cli("dynskip:tau=abc", 8, 128).is_err());
+    fn spec_rejects_malformed_and_unknown_names() {
+        let build = |s: &str| PolicySpec::parse(s).and_then(|sp| sp.build(8, 128));
+        assert!(build("nope").is_err());
+        assert!(build("oea:k0").is_err()); // missing '='
+        assert!(build("oea:k0=x").is_err()); // not an int
+        assert!(build("dynskip:tau=abc").is_err());
         // a negative boost would silently run as plain OEA — reject it
-        assert!(Policy::from_cli("cache-aware:alpha=-0.5", 8, 128).is_err());
+        assert!(build("cache-aware:alpha=-0.5").is_err());
     }
 
     #[test]
@@ -1323,6 +1391,7 @@ mod tests {
                     live: &live,
                     mask_padding: true,
                     resident: Some(&resident),
+                    healthy: None,
                 },
             );
             // whatever the NaN rows produced, the outputs stay well-formed
@@ -1358,6 +1427,7 @@ mod tests {
                 live: &live,
                 mask_padding: true,
                 resident: Some(&resident),
+                healthy: None,
             },
         );
         assert_eq!(ca.sets, oea.sets);
@@ -1379,6 +1449,7 @@ mod tests {
                     live: &live,
                     mask_padding: true,
                     resident: Some(&uniform),
+                    healthy: None,
                 },
             );
             assert_eq!(ca.sets, oea.sets);
@@ -1401,6 +1472,7 @@ mod tests {
                 live: &live,
                 mask_padding: true,
                 resident: Some(&resident),
+                healthy: None,
             },
         );
         assert_eq!(ca.sets[0], vec![1], "boosted 0.30*2 > 0.40 must win");
@@ -1424,6 +1496,7 @@ mod tests {
                 live: &live,
                 mask_padding: true,
                 resident: Some(&resident),
+                healthy: None,
             },
         );
         for set in &ca.sets {
@@ -1449,13 +1522,6 @@ mod tests {
     }
 
     // ---- PolicySpec (ISSUE 6: typed parse -> validate -> build) --------
-
-    #[test]
-    fn policy_specs_derivation_matches_legacy_constant() {
-        // the hand-kept help constant and the SPEC_TABLE derivation must
-        // agree character-for-character while the deprecated const lives
-        assert_eq!(policy_specs(), POLICY_SPECS);
-    }
 
     #[test]
     fn every_spec_in_the_table_round_trips() {
@@ -1488,28 +1554,7 @@ mod tests {
     }
 
     #[test]
-    fn spec_build_agrees_with_legacy_from_cli() {
-        for spec in [
-            "vanilla",
-            "pruned:k0=3",
-            "oea:k0=3",
-            "oea-full:k0=3,p=0.7,kmax=9,maxp=32",
-            "lynx:t=16",
-            "dynskip:tau=0.3",
-            "expert-choice:cap=2",
-            "cache-aware",
-            "cache-aware:k0=4,k=8,alpha=0.5",
-            "ep",
-            "ep:k0=4,ranks=4,topup=1,alpha=0.5",
-        ] {
-            let new = PolicySpec::parse(spec).unwrap().build(8, 32).unwrap();
-            let old = Policy::from_cli(spec, 8, 32).unwrap();
-            assert_eq!(new, old, "{spec}");
-        }
-    }
-
-    #[test]
-    fn spec_parse_rejects_like_from_cli() {
+    fn spec_parse_rejects_loudly() {
         // error surfaces must stay as loud as the stringly path's
         let e = PolicySpec::parse("oae:k0=3").unwrap_err().to_string();
         assert!(e.contains("unknown policy"), "{e}");
@@ -1641,5 +1686,165 @@ mod tests {
         assert!(route_per_row(&pols, &inp).is_err());
         pols[1] = Policy::Ep { k0: 1, k: 2, ranks: 2, topup: 0, alpha: 0.0 };
         assert!(route_per_row(&pols, &inp).is_err());
+    }
+
+    // ---- health masking (ISSUE 7: degraded routing under faults) -------
+
+    fn every_policy() -> Vec<Policy> {
+        vec![
+            Policy::Vanilla { k: 2 },
+            Policy::Pruned { k0: 2, p: 0.7 },
+            Policy::OeaSimplified { k0: 1, k: 3 },
+            Policy::Oea { k0: 1, p: 0.9, k_max: 3, max_p: 8 },
+            Policy::Lynx { k: 2, target_t: 4 },
+            Policy::DynSkip { k: 3, tau: 0.2 },
+            Policy::ExpertChoice { capacity: 2 },
+            Policy::CacheAware { k0: 1, k: 3, alpha: 0.7 },
+            Policy::Ep { k0: 1, k: 3, ranks: 4, topup: 1, alpha: 0.0 },
+        ]
+    }
+
+    #[test]
+    fn all_healthy_mask_is_bitwise_identical_to_none() {
+        // the law behind the empty-FaultPlan identity pin: a Some(all
+        // true) view must route exactly like the mask-free path
+        let s = fixture();
+        let live = live4();
+        let resident = vec![false, true, false, true, true, false, true, false];
+        let healthy = vec![true; 8];
+        for pol in every_policy() {
+            let base = route(
+                pol,
+                &RoutingInput {
+                    scores: &s,
+                    live: &live,
+                    mask_padding: true,
+                    resident: Some(&resident),
+                    healthy: None,
+                },
+            );
+            let masked = route(
+                pol,
+                &RoutingInput {
+                    scores: &s,
+                    live: &live,
+                    mask_padding: true,
+                    resident: Some(&resident),
+                    healthy: Some(&healthy),
+                },
+            );
+            assert_eq!(base.sets, masked.sets, "{}", pol.label());
+            assert_eq!(base.active, masked.active, "{}", pol.label());
+            assert_eq!(base.combine, masked.combine, "{}", pol.label());
+        }
+    }
+
+    #[test]
+    fn unhealthy_experts_never_route_under_any_policy() {
+        let s = fixture();
+        let live = live4();
+        // kill each token's top choice at least once: e0 (t0, t1), e4 (t2)
+        let mut healthy = vec![true; 8];
+        healthy[0] = false;
+        healthy[4] = false;
+        for pol in every_policy() {
+            let d = route(
+                pol,
+                &RoutingInput {
+                    scores: &s,
+                    live: &live,
+                    mask_padding: true,
+                    resident: None,
+                    healthy: Some(&healthy),
+                },
+            );
+            assert!(!d.active.contains(&0), "{}: e0 in union", pol.label());
+            assert!(!d.active.contains(&4), "{}: e4 in union", pol.label());
+            for (i, set) in d.sets.iter().enumerate() {
+                assert!(!set.contains(&0) && !set.contains(&4), "{} row {i}", pol.label());
+                // every live row still routes somewhere, and its combine
+                // weights renormalize to 1 over the surviving set
+                assert!(!set.is_empty(), "{} row {i} starved", pol.label());
+                let sum: f32 = d.combine[i * 8..(i + 1) * 8].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5, "{} row {i} sum={sum}", pol.label());
+            }
+        }
+    }
+
+    #[test]
+    fn health_mask_extends_the_baseline_prefix() {
+        // t0 prefers 0,1,2: with e0 down, k=2 takes the next-best healthy
+        // pair {1,2} — the prefix slides, it does not shrink
+        let s = fixture();
+        let live = live4();
+        let mut healthy = vec![true; 8];
+        healthy[0] = false;
+        let d = route(
+            Policy::Vanilla { k: 2 },
+            &RoutingInput {
+                scores: &s,
+                live: &live,
+                mask_padding: true,
+                resident: None,
+                healthy: Some(&healthy),
+            },
+        );
+        assert_eq!(d.sets[0], vec![1, 2]);
+        assert_eq!(d.sets[1], vec![2, 3]); // t1 prefers 0,2,3
+    }
+
+    #[test]
+    fn health_mask_dynskip_rebases_its_anchor() {
+        // dynskip thresholds against the best HEALTHY expert, so a token
+        // whose top-1 died still keeps a set (anchored on its runner-up)
+        let s = fixture();
+        let live = live4();
+        let mut healthy = vec![true; 8];
+        healthy[0] = false; // t0/t1's top-1
+        let d = route(
+            Policy::DynSkip { k: 2, tau: 0.9 },
+            &RoutingInput {
+                scores: &s,
+                live: &live,
+                mask_padding: true,
+                resident: None,
+                healthy: Some(&healthy),
+            },
+        );
+        // t0: anchor e1 (0.30); next healthy candidate e2 (0.10) < 0.27
+        assert_eq!(d.sets[0], vec![1]);
+        // t1: anchor e2 (0.30); next healthy candidate e3 (0.15) < 0.27
+        assert_eq!(d.sets[1], vec![2]);
+    }
+
+    #[test]
+    fn route_per_row_respects_health() {
+        let s = fixture();
+        let live = live4();
+        let mut healthy = vec![true; 8];
+        healthy[0] = false;
+        healthy[4] = false;
+        let pols = [
+            Policy::Vanilla { k: 2 },
+            Policy::OeaSimplified { k0: 1, k: 4 },
+            Policy::DynSkip { k: 2, tau: 0.2 },
+            Policy::Pruned { k0: 1, p: 1.0 },
+        ];
+        let d = route_per_row(
+            &pols,
+            &RoutingInput {
+                scores: &s,
+                live: &live,
+                mask_padding: true,
+                resident: None,
+                healthy: Some(&healthy),
+            },
+        )
+        .unwrap();
+        assert!(!d.active.contains(&0) && !d.active.contains(&4));
+        for (i, set) in d.sets.iter().enumerate() {
+            assert!(!set.contains(&0) && !set.contains(&4), "row {i}");
+            assert!(!set.is_empty(), "row {i} starved");
+        }
     }
 }

@@ -133,6 +133,7 @@ pub fn status_text(code: u16) -> &'static str {
         404 => "Not Found",
         429 => "Too Many Requests",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Internal Server Error",
     }
 }

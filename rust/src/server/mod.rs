@@ -14,14 +14,17 @@
 //!   POST /generate   versioned request schema (v1): {"version": 1,
 //!                     "prompt": str, "max_tokens": n, "temperature": x,
 //!                     "top_p": x, "stream": bool, "seed": n,
-//!                     "policy": "spec"}. Only "prompt" is required;
-//!                    "version" defaults to 1 (the only version). Unknown
-//!                    fields are REJECTED with a 400 naming the field —
-//!                    a typo'd "max_token" must not silently become the
-//!                    default. "policy" selects a routing-policy spec
-//!                    (same grammar as --policy) for THIS request's
-//!                    decode rows; batch-global specs (lynx /
-//!                    expert-choice / ep) are a 400.
+//!                     "policy": "spec", "deadline_ms": n}. Only
+//!                    "prompt" is required; "version" defaults to 1 (the
+//!                    only version). Unknown fields are REJECTED with a
+//!                    400 naming the field — a typo'd "max_token" must
+//!                    not silently become the default. "policy" selects
+//!                    a routing-policy spec (same grammar as --policy)
+//!                    for THIS request's decode rows; batch-global specs
+//!                    (lynx / expert-choice / ep) are a 400.
+//!                    "deadline_ms" bounds the request end-to-end
+//!                    (queue wait included); an expired request returns
+//!                    its partial tokens with a 504.
 //!                    stream=false -> one JSON object (text + telemetry)
 //!                    stream=true  -> chunked NDJSON: one line per token
 //!                    ({"id","index","token","text"} — per-token text is
@@ -31,11 +34,20 @@
 //!                    queue full   -> 429 + Retry-After (backpressure)
 //!                    unservable   -> 400 (empty/overlong prompt, bad
 //!                    policy override — retrying is useless)
+//!                    failed       -> 500 (step panic / corrupt logits;
+//!                    the engine survived, only this request died)
 //!   GET  /metrics    -> MoE + request telemetry + SLO percentiles
 //!                    (queue wait / TTFT / TPOT / e2e, p50/p95/p99) +
 //!                    scheduler block (mode, live-B, recompositions,
-//!                    prefill chunks)
-//!   GET  /healthz    -> ok
+//!                    prefill chunks) + health block (absorbed failures)
+//!                    + faults/degradation blocks when a fault plan is
+//!                    installed
+//!   GET  /healthz    -> readiness, not liveness: 200 {"status":"ok"}
+//!                    only once the engine thread has booted; 503 with
+//!                    "starting" before that, "draining" during
+//!                    shutdown, "failed" after an engine crash — a load
+//!                    balancer must not route to a replica that cannot
+//!                    serve yet (or ever again)
 //!   POST /shutdown   -> stop accepting, drain running requests, exit
 
 pub mod http;
@@ -60,6 +72,91 @@ use http::{read_request, write_response, write_response_with, ChunkedWriter, Htt
 
 /// Hint clients send with a 429 (seconds).
 const RETRY_AFTER_S: &str = "1";
+
+/// Bind a TCP listener with `SO_REUSEADDR` set *before* `bind` — a
+/// restarted server must rebind its port immediately instead of losing
+/// the kernel's TIME_WAIT holddown (up to a minute of refused deploys
+/// after every restart). `std::net::TcpListener::bind` exposes no
+/// pre-bind socket-option hook and the crate takes no libc dependency,
+/// so the Linux path issues the raw syscalls itself; other platforms
+/// fall back to the plain std bind (CI runs Linux).
+#[cfg(target_os = "linux")]
+pub fn bind_reusable(addr: &str) -> Result<TcpListener> {
+    use std::net::ToSocketAddrs;
+    use std::os::fd::FromRawFd;
+
+    // only IPv4 is dialed here (the CLI binds 127.0.0.1 / 0.0.0.0);
+    // anything else takes the std path and keeps working, minus reuse
+    let first_v4 = addr
+        .to_socket_addrs()
+        .map_err(|e| Error::Io(format!("resolve {addr}: {e}")))?
+        .find_map(|a| match a {
+            SocketAddr::V4(v4) => Some(v4),
+            SocketAddr::V6(_) => None,
+        });
+    let Some(v4) = first_v4 else {
+        return TcpListener::bind(addr).map_err(|e| Error::Io(format!("bind {addr}: {e}")));
+    };
+
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(fd: i32, level: i32, name: i32, value: *const i32, len: u32) -> i32;
+        fn bind(fd: i32, addr: *const SockaddrIn, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+    /// `struct sockaddr_in` (linux, AF_INET); port and address are
+    /// network byte order.
+    #[repr(C)]
+    struct SockaddrIn {
+        sin_family: u16,
+        sin_port: u16,
+        sin_addr: u32,
+        sin_zero: [u8; 8],
+    }
+    const AF_INET: i32 = 2;
+    const SOCK_STREAM: i32 = 1;
+    const SOL_SOCKET: i32 = 1;
+    const SO_REUSEADDR: i32 = 2;
+
+    unsafe {
+        let fd = socket(AF_INET, SOCK_STREAM, 0);
+        if fd < 0 {
+            return Err(Error::Io(format!(
+                "socket for {addr}: {}",
+                std::io::Error::last_os_error()
+            )));
+        }
+        let one: i32 = 1;
+        if setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, &one, 4) != 0 {
+            let e = std::io::Error::last_os_error();
+            close(fd);
+            return Err(Error::Io(format!("setsockopt SO_REUSEADDR for {addr}: {e}")));
+        }
+        let sa = SockaddrIn {
+            sin_family: AF_INET as u16,
+            sin_port: v4.port().to_be(),
+            sin_addr: u32::from(*v4.ip()).to_be(),
+            sin_zero: [0; 8],
+        };
+        if bind(fd, &sa, std::mem::size_of::<SockaddrIn>() as u32) != 0 {
+            let e = std::io::Error::last_os_error();
+            close(fd);
+            return Err(Error::Io(format!("bind {addr}: {e}")));
+        }
+        if listen(fd, 128) != 0 {
+            let e = std::io::Error::last_os_error();
+            close(fd);
+            return Err(Error::Io(format!("listen {addr}: {e}")));
+        }
+        Ok(TcpListener::from_raw_fd(fd))
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn bind_reusable(addr: &str) -> Result<TcpListener> {
+    TcpListener::bind(addr).map_err(|e| Error::Io(format!("bind {addr}: {e}")))
+}
 
 /// Server-edge options for [`serve`] (the engine-side knobs — policy,
 /// `max_running`, `max_queue` — live in
@@ -123,7 +220,7 @@ where
     B: Backend + 'static,
     F: FnOnce() -> Result<Engine<B>> + Send + 'static,
 {
-    let listener = TcpListener::bind(addr).map_err(|e| Error::Io(format!("bind {addr}: {e}")))?;
+    let listener = bind_reusable(addr)?;
     let local = listener
         .local_addr()
         .map_err(|e| Error::Io(format!("local_addr: {e}")))?;
@@ -139,11 +236,16 @@ where
     // a crash must be distinguishable from a graceful drain: supervisors
     // and the CI smoke check the process exit status
     let engine_failed = Arc::new(AtomicBool::new(false));
+    // readiness (the /healthz contract): false until the engine thread
+    // has actually built its engine — the listener accepting connections
+    // does not mean the replica can serve
+    let engine_ready = Arc::new(AtomicBool::new(false));
 
     // engine thread: owns the backend stack, streams per-token events out
     let engine_shutdown = Arc::clone(&shutdown);
     let engine_served = Arc::clone(&served);
     let failed = Arc::clone(&engine_failed);
+    let ready_flag = Arc::clone(&engine_ready);
     let engine_thread = std::thread::spawn(move || {
         let mut engine = match engine_builder() {
             Ok(e) => e,
@@ -159,6 +261,7 @@ where
                 return;
             }
         };
+        ready_flag.store(true, Ordering::SeqCst);
         let mut next_id = 1u64;
         // open per-request event streams, keyed by engine request id;
         // the bool records whether the client wants per-token events
@@ -284,10 +387,12 @@ where
         let tx = tx.clone();
         let tok = Arc::clone(&tok);
         let shutdown = Arc::clone(&shutdown);
+        let ready = Arc::clone(&engine_ready);
+        let failed = Arc::clone(&engine_failed);
         pool.execute(move || {
             // a panicking handler must not kill its pool worker
             let _ = catch_unwind(AssertUnwindSafe(|| {
-                handle_connection(stream, &tx, &tok, &shutdown);
+                handle_connection(stream, &tx, &tok, &shutdown, &ready, &failed);
             }));
         });
     }
@@ -310,6 +415,8 @@ fn handle_connection(
     tx: &mpsc::Sender<EngineMsg>,
     tok: &Tokenizer,
     shutdown: &AtomicBool,
+    ready: &AtomicBool,
+    failed: &AtomicBool,
 ) {
     stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
     // a client that stops reading mid-stream must not pin a pool worker
@@ -325,7 +432,19 @@ fn handle_connection(
     };
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
-            let _ = write_response(&mut stream, 200, "{\"status\":\"ok\"}");
+            // readiness: only "ok" routes traffic. Order matters —
+            // failed trumps draining trumps starting.
+            let (code, status) = if failed.load(Ordering::SeqCst) {
+                (503, "failed")
+            } else if shutdown.load(Ordering::SeqCst) {
+                (503, "draining")
+            } else if !ready.load(Ordering::SeqCst) {
+                (503, "starting")
+            } else {
+                (200, "ok")
+            };
+            let body = Json::obj(vec![("status", Json::str(status))]).write();
+            let _ = write_response(&mut stream, code, &body);
         }
         ("GET", "/metrics") => {
             let (rtx, rrx) = mpsc::channel();
@@ -443,7 +562,15 @@ fn handle_generate(
                         let _ = w.finish();
                     }
                 } else {
-                    let _ = write_response(&mut stream, 200, &fin.write());
+                    // a stream already committed its 200 status line, so
+                    // these only apply to non-streaming replies: the
+                    // done-line finish_reason is the streaming signal
+                    let code = match f.reason {
+                        FinishReason::DeadlineExceeded => 504,
+                        FinishReason::Error => 500,
+                        _ => 200,
+                    };
+                    let _ = write_response(&mut stream, code, &fin.write());
                 }
                 return;
             }
@@ -478,6 +605,7 @@ const GENERATE_FIELDS_V1: &[&str] = &[
     "stream",
     "seed",
     "policy",
+    "deadline_ms",
 ];
 
 fn parse_generate(req: &HttpRequest, tok: &Tokenizer) -> Result<(GenRequest, bool)> {
@@ -536,6 +664,12 @@ fn parse_generate(req: &HttpRequest, tok: &Tokenizer) -> Result<(GenRequest, boo
         .map(|v| Ok::<_, Error>(PolicySpec::parse(v.as_str()?)?))
         .transpose()
         .map_err(|e| Error::Json(format!("policy: {e}")))?;
+    let deadline_ms = body
+        .get_opt("deadline_ms")
+        .map(|v| v.as_usize())
+        .transpose()
+        .map_err(|e| Error::Json(format!("deadline_ms: {e}")))?
+        .map(|ms| ms as u64);
     let prompt: Vec<i32> = tok.encode(prompt_text).iter().map(|&t| t as i32).collect();
     Ok((
         GenRequest {
@@ -546,6 +680,7 @@ fn parse_generate(req: &HttpRequest, tok: &Tokenizer) -> Result<(GenRequest, boo
             top_p,
             seed,
             policy,
+            deadline_ms,
         },
         stream_mode,
     ))
@@ -569,6 +704,8 @@ fn finished_json(f: &FinishedRequest, text: &str) -> Json {
                 FinishReason::Eos => "eos",
                 FinishReason::KvExhausted => "kv_exhausted",
                 FinishReason::Cancelled => "cancelled",
+                FinishReason::DeadlineExceeded => "deadline_exceeded",
+                FinishReason::Error => "error",
             }),
         ),
         ("queue_wait_ms", Json::num(f.queue_wait_us / 1e3)),
@@ -610,7 +747,15 @@ fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
         ("n_queued", Json::num(engine.n_queued() as f64)),
         ("scheduler", scheduler_json(engine)),
         ("slo", engine.requests.slo_json()),
+        ("health", health_json(engine)),
     ];
+    // fault-injection plane (only when a --faults plan is installed):
+    // injected-fault counters plus the degradation ledger — how much
+    // traffic routed around unhealthy experts, and the recent events
+    if let Some(fs) = engine.runner.backend.fault_stats() {
+        pairs.push(("faults", faults_json(&fs)));
+        pairs.push(("degradation", degradation_json(&fs)));
+    }
     // per-policy routed-load histogram: how the served traffic actually
     // spread over experts (the denominator residency hit rates live over)
     if let Some(loads) = engine.runner.backend.expert_loads() {
@@ -641,6 +786,76 @@ fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
         pairs.push(("ep", ep_json(engine)));
     }
     Json::obj(pairs)
+}
+
+/// The `/metrics` health block: failures the engine absorbed at request
+/// granularity instead of dying (the observable fault-tolerance
+/// contract), plus the backend's current unhealthy-expert count when a
+/// fault plane exists.
+fn health_json<B: Backend>(engine: &Engine<B>) -> Json {
+    let h = &engine.health;
+    let mut pairs = vec![
+        ("panics_caught", Json::num(h.panics_caught as f64)),
+        ("nonfinite_rows", Json::num(h.nonfinite_rows as f64)),
+        ("deadline_expired", Json::num(h.deadline_expired as f64)),
+        ("wedged_steps", Json::num(h.wedged_steps as f64)),
+    ];
+    if let Some(fs) = engine.runner.backend.fault_stats() {
+        pairs.push(("unhealthy_experts", Json::num(fs.unhealthy_experts as f64)));
+    }
+    Json::obj(pairs)
+}
+
+/// The `/metrics` faults block: the installed plan and every injected
+/// fault, by class.
+fn faults_json(fs: &crate::faults::FaultStats) -> Json {
+    let c = &fs.counters;
+    Json::obj(vec![
+        ("plan", Json::str(&fs.plan)),
+        ("steps", Json::num(fs.steps as f64)),
+        ("pagein_failures", Json::num(c.pagein_failures as f64)),
+        ("pagein_retries", Json::num(c.pagein_retries as f64)),
+        ("pagein_gave_up", Json::num(c.pagein_gave_up as f64)),
+        ("pagein_delays", Json::num(c.pagein_delays as f64)),
+        ("injected_sleep_us", Json::num(c.injected_sleep_us as f64)),
+        ("stalls", Json::num(c.stalls as f64)),
+        ("stall_us_total", Json::num(c.stall_us_total as f64)),
+        ("poisoned_outputs", Json::num(c.poisoned_outputs as f64)),
+        ("panics", Json::num(c.panics as f64)),
+        ("tripped_experts", Json::num(c.tripped_experts as f64)),
+    ])
+}
+
+/// The `/metrics` degradation block: how much live traffic is routing
+/// around unhealthy experts (degraded share = rerouted top-1 tokens /
+/// tokens routed under an active mask) and the most recent degradation
+/// events, newest first.
+fn degradation_json(fs: &crate::faults::FaultStats) -> Json {
+    let c = &fs.counters;
+    let share = if c.routed_tokens_masked > 0 {
+        c.degraded_tokens as f64 / c.routed_tokens_masked as f64
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("degraded_tokens", Json::num(c.degraded_tokens as f64)),
+        ("routed_tokens_masked", Json::num(c.routed_tokens_masked as f64)),
+        ("degraded_share", Json::num(share)),
+        ("unhealthy_experts", Json::num(fs.unhealthy_experts as f64)),
+        ("events", Json::arr(fs.events.iter().rev().take(16).map(degradation_event_json))),
+    ])
+}
+
+fn degradation_event_json(ev: &crate::faults::DegradationEvent) -> Json {
+    let opt = |v: Option<usize>| v.map(|x| Json::num(x as f64)).unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("step", Json::num(ev.step as f64)),
+        ("class", Json::str(ev.class.label())),
+        ("layer", opt(ev.layer)),
+        ("expert", opt(ev.expert)),
+        ("rank", opt(ev.rank)),
+        ("detail", Json::str(&ev.detail)),
+    ])
 }
 
 /// The `/metrics` scheduler block: which scheduling mode is live, the

@@ -1,0 +1,299 @@
+//! Chaos properties (ISSUE 7): the engine survives every injected fault
+//! class at *request* granularity — a fault degrades or fails the
+//! requests it touches and nothing else — and the fault plane itself is
+//! invisible when inert.
+//!
+//! 1. An installed-but-inert fault plane is bitwise-identical to no
+//!    plane at all (the empty-plan identity the faults module promises).
+//! 2. Deadlines: `deadline_ms = 0` is rejected at submit; an expired
+//!    budget retires the request typed (`DeadlineExceeded`, partial
+//!    tokens) whether it expires in the queue or mid-decode, and the
+//!    engine keeps serving.
+//! 3. Page-in chaos at rate 1.0 trips experts unhealthy and reroutes
+//!    traffic, but every request still completes.
+//! 4. A poisoned (NaN) expert fails exactly the requests that routed
+//!    through it, trips its health, and the same workload then runs
+//!    clean under the mask.
+//! 5. An injected step panic is contained by the engine's catch_unwind:
+//!    that step's requests fail typed, fresh work serves normally.
+//! 6. Injected rank stalls overrun the step watchdog budget and surface
+//!    as `wedged_steps`.
+//! 7. `bind_reusable` lets a just-closed listener address rebind
+//!    immediately (the serve-restart regression).
+
+use std::time::{Duration, Instant};
+
+use oea_serve::backend::cpu::{CpuBackend, CpuOptions};
+use oea_serve::backend::Backend;
+use oea_serve::config::ModelConfig;
+use oea_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest, SubmitError};
+use oea_serve::faults::FaultPlan;
+use oea_serve::latency::H100Presets;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::residency::{EvictPolicy, ResidencyConfig};
+
+fn prompt(len: usize, salt: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 7 + salt * 13 + 3) % 50) as i32).collect()
+}
+
+fn engine_with(
+    policy: Policy,
+    opts: CpuOptions,
+    faults: &str,
+    max_running: usize,
+) -> Engine<CpuBackend> {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let cost = H100Presets::for_config(&cfg.name);
+    let mut backend = CpuBackend::synthetic_with(cfg, 0, opts);
+    backend.install_faults(FaultPlan::parse(faults).unwrap());
+    Engine::new(
+        ModelRunner::new(backend),
+        EngineConfig {
+            max_running,
+            max_queue: usize::MAX,
+            ..EngineConfig::new(policy, cost)
+        },
+    )
+    .unwrap()
+}
+
+fn oea() -> Policy {
+    Policy::OeaSimplified { k0: 1, k: 2 }
+}
+
+/// The empty-plan / inert-plan identity: an armed fault plane whose
+/// every draw is inert (rate 0) must produce bitwise the same token
+/// streams as no plane at all. Single-threaded so "bitwise" is bitwise.
+#[test]
+fn inert_fault_plane_is_bitwise_identical() {
+    let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt(12 + i, i)).collect();
+    let run = |faults: &str| -> Vec<(u64, Vec<i32>)> {
+        let opts = CpuOptions {
+            threads: 1,
+            residency: Some(ResidencyConfig::new(4, EvictPolicy::Lru, 0)),
+            ..CpuOptions::default()
+        };
+        let mut e = engine_with(oea(), opts, faults, 4);
+        for (i, p) in prompts.iter().enumerate() {
+            e.submit(GenRequest::greedy(i as u64 + 1, p.clone(), 8)).unwrap();
+        }
+        let mut done: Vec<(u64, Vec<i32>)> = e
+            .run_to_completion()
+            .unwrap()
+            .into_iter()
+            .map(|f| (f.id, f.tokens))
+            .collect();
+        done.sort_by_key(|(id, _)| *id);
+        done
+    };
+    let clean = run("");
+    let armed = run("pagein-fail:rate=0.0,seed=9");
+    assert_eq!(clean, armed, "inert fault plane changed the token streams");
+}
+
+#[test]
+fn deadline_zero_is_rejected_at_submit() {
+    let mut e = engine_with(oea(), CpuOptions::default(), "", 2);
+    let mut r = GenRequest::greedy(1, prompt(6, 0), 4);
+    r.deadline_ms = Some(0);
+    match e.submit(r) {
+        Err(SubmitError::NeverFits(why)) => {
+            assert!(why.contains("deadline_ms"), "why = {why}")
+        }
+        other => panic!("expected NeverFits, got {other:?}"),
+    }
+}
+
+/// A deadline that expires before the request ever reaches a slot
+/// retires it at admission binding: zero tokens, zero prefill FLOPs,
+/// typed reason — and the engine serves the next request normally.
+#[test]
+fn deadline_expired_in_queue_retires_without_prefill() {
+    let mut e = engine_with(oea(), CpuOptions::default(), "", 2);
+    let mut r = GenRequest::greedy(1, prompt(10, 1), 8);
+    r.deadline_ms = Some(20);
+    e.submit(r).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].reason, FinishReason::DeadlineExceeded);
+    assert!(done[0].tokens.is_empty(), "no step was spent on a dead request");
+    assert_eq!(e.health.deadline_expired, 1);
+
+    e.submit(GenRequest::greedy(2, prompt(8, 2), 4)).unwrap();
+    let after = e.run_to_completion().unwrap();
+    assert_eq!(after.len(), 1);
+    assert_eq!(after[0].reason, FinishReason::Length);
+    assert_eq!(after[0].tokens.len(), 4);
+}
+
+/// A deadline that expires mid-generation returns the partial tokens
+/// decoded inside the budget with the typed reason.
+#[test]
+fn deadline_expired_mid_decode_returns_partial_tokens() {
+    let mut e = engine_with(oea(), CpuOptions::default(), "", 2);
+    let max_new = 4000;
+    let mut r = GenRequest::greedy(1, prompt(10, 3), max_new);
+    r.deadline_ms = Some(40);
+    e.submit(r).unwrap();
+    // let admission + prefill (and possibly a few decode steps) run
+    // inside the budget, then burn the rest of it
+    let mut done = e.step().unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    let t0 = Instant::now();
+    while done.is_empty() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "engine failed to drain");
+        done = e.step().unwrap();
+    }
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].reason, FinishReason::DeadlineExceeded);
+    assert!(done[0].tokens.len() < max_new, "a 40ms budget cannot decode {max_new} tokens");
+    assert_eq!(e.health.deadline_expired, 1);
+}
+
+/// Page-in chaos at rate 1.0: every cache miss exhausts its retry
+/// budget and trips the expert unhealthy, routing reroutes around the
+/// masked experts — and every request still completes with its full
+/// token budget (the weights are local; a flaky transport degrades
+/// quality, never availability).
+#[test]
+fn pagein_chaos_degrades_routing_but_every_request_completes() {
+    let opts = CpuOptions {
+        residency: Some(ResidencyConfig::new(2, EvictPolicy::Lru, 0)),
+        ..CpuOptions::default()
+    };
+    let mut e = engine_with(oea(), opts, "pagein-fail:rate=1.0,seed=7", 4);
+    for i in 0u64..6 {
+        e.submit(GenRequest::greedy(i + 1, prompt(10 + i as usize, i as usize), 8)).unwrap();
+    }
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 6);
+    for f in &done {
+        assert_eq!(f.reason, FinishReason::Length, "request {} failed", f.id);
+        assert_eq!(f.tokens.len(), 8);
+    }
+    let fs = e.runner.backend.fault_stats().expect("fault plane installed");
+    assert!(fs.counters.pagein_failures > 0);
+    assert!(fs.counters.pagein_gave_up > 0, "rate 1.0 must exhaust retry budgets");
+    assert!(fs.counters.tripped_experts > 0);
+    assert!(fs.unhealthy_experts > 0);
+    // routed_tokens_masked is asserted in the poison test, where exactly
+    // one expert trips — here rate 1.0 can cascade every expert unhealthy
+    // within the first pass, which disables the mask (total-loss fallback)
+    assert!(!fs.events.is_empty());
+    assert_eq!(e.health.panics_caught, 0);
+}
+
+/// A poisoned expert NaNs exactly the rows routed through it: the first
+/// request (routing every expert) fails typed on the non-finite guard,
+/// detection trips the expert's health, and the identical follow-up
+/// request completes cleanly under the mask.
+#[test]
+fn poisoned_expert_fails_one_request_then_routing_heals() {
+    // vanilla k=8 routes every expert on tiny's 8, so the poisoned one
+    // is guaranteed to execute on the first request
+    let opts = CpuOptions { threads: 1, ..CpuOptions::default() };
+    let mut e = engine_with(Policy::Vanilla { k: 8 }, opts, "expert-poison:layer=0,expert=1", 2);
+    e.submit(GenRequest::greedy(1, prompt(8, 3), 6)).unwrap();
+    let first = e.run_to_completion().unwrap();
+    assert_eq!(first.len(), 1);
+    assert_eq!(
+        first[0].reason,
+        FinishReason::Error,
+        "NaN output must fail the request, not the engine"
+    );
+    assert!(e.health.nonfinite_rows >= 1);
+
+    e.submit(GenRequest::greedy(2, prompt(8, 3), 6)).unwrap();
+    let second = e.run_to_completion().unwrap();
+    assert_eq!(second.len(), 1);
+    assert_eq!(second[0].reason, FinishReason::Length, "masked rerun must be clean");
+    assert_eq!(second[0].tokens.len(), 6);
+
+    let fs = e.runner.backend.fault_stats().unwrap();
+    assert!(fs.counters.poisoned_outputs > 0);
+    assert_eq!(fs.counters.tripped_experts, 1);
+    assert_eq!(fs.unhealthy_experts, 1);
+    assert!(fs.counters.routed_tokens_masked > 0, "the healed run routed under the mask");
+}
+
+/// The injected one-shot panic fires inside a decode step; catch_unwind
+/// retires that step's requests with `Error` and the engine — same
+/// thread, same batch, same backend locks — keeps serving fresh work.
+#[test]
+fn injected_step_panic_is_contained_to_the_step() {
+    // both prompts fit one prefill chunk, so forward passes 1-2 are the
+    // two prefills and every pass from 3 on is a decode step;
+    // after_steps=3 puts the panic safely inside a decode pass
+    let mut e = engine_with(oea(), CpuOptions::default(), "step-panic:layer=1,after_steps=3", 2);
+    e.submit(GenRequest::greedy(1, prompt(8, 0), 8)).unwrap();
+    e.submit(GenRequest::greedy(2, prompt(9, 1), 8)).unwrap();
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    for f in &done {
+        assert_eq!(f.reason, FinishReason::Error, "request {} outlived the panic", f.id);
+        assert!(!f.tokens.is_empty(), "tokens decoded before the panic are returned");
+    }
+    assert_eq!(e.health.panics_caught, 1);
+
+    e.submit(GenRequest::greedy(3, prompt(7, 2), 5)).unwrap();
+    let after = e.run_to_completion().unwrap();
+    assert_eq!(after.len(), 1);
+    assert_eq!(after[0].reason, FinishReason::Length);
+    assert_eq!(after[0].tokens.len(), 5);
+    let fs = e.runner.backend.fault_stats().unwrap();
+    assert_eq!(fs.counters.panics, 1, "the panic is one-shot");
+}
+
+/// Injected rank stalls slow real wall-clock decode steps past the
+/// watchdog budget — `wedged_steps` is how an operator sees a straggler
+/// rank (or a genuinely wedged scheduler) on /metrics.
+#[test]
+fn rank_stall_trips_the_step_watchdog() {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let cost = H100Presets::for_config(&cfg.name);
+    let mut backend = CpuBackend::synthetic_with(cfg, 0, CpuOptions::default());
+    backend.install_faults(FaultPlan::parse("rank-stall:rank=0,after_steps=2,us=4000").unwrap());
+    let mut e = Engine::new(
+        ModelRunner::new(backend),
+        EngineConfig {
+            max_running: 2,
+            max_queue: usize::MAX,
+            step_budget_us: Some(1_000),
+            ..EngineConfig::new(oea(), cost)
+        },
+    )
+    .unwrap();
+    e.submit(GenRequest::greedy(1, prompt(8, 0), 6)).unwrap();
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].reason, FinishReason::Length, "stalls delay, never fail");
+    assert!(e.health.wedged_steps > 0, "4ms/layer stalls must overrun a 1ms step budget");
+    let fs = e.runner.backend.fault_stats().unwrap();
+    assert!(fs.counters.stalls > 0);
+    assert!(fs.counters.stall_us_total >= 4000);
+}
+
+/// SO_REUSEADDR regression: a listener address with a just-closed
+/// connection in it must rebind immediately (the serve-restart path;
+/// without the socket option this intermittently fails EADDRINUSE).
+#[test]
+fn rebinding_a_just_closed_listener_address_succeeds() {
+    use std::io::{Read, Write};
+
+    let l1 = oea_serve::server::bind_reusable("127.0.0.1:0").unwrap();
+    let addr = l1.local_addr().unwrap();
+    let mut client = std::net::TcpStream::connect(addr).unwrap();
+    let (mut served, _) = l1.accept().unwrap();
+    client.write_all(b"ping").unwrap();
+    let mut buf = [0u8; 4];
+    served.read_exact(&mut buf).unwrap();
+    assert_eq!(&buf, b"ping");
+    drop(served);
+    drop(client);
+    drop(l1);
+
+    let l2 = oea_serve::server::bind_reusable(&addr.to_string()).unwrap();
+    assert_eq!(l2.local_addr().unwrap().port(), addr.port());
+}

@@ -71,7 +71,7 @@ fn grouped_ffn_matches_gather_oracle_under_random_routing() {
         let pol = random_policy(rng, cfg.top_k, n);
         let dec = route(
             pol,
-            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
+            &RoutingInput::new(&s, &live, true),
         );
         let t_bucket = cfg.t_bucket_for(dec.t()).unwrap();
         let ids = pad_active_list(&dec.active, t_bucket, n);
@@ -102,7 +102,7 @@ fn load_telemetry_counts_only_routed_tokens_under_both_paths() {
         let pol = random_policy(rng, cfg.top_k, n);
         let dec = route(
             pol,
-            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
+            &RoutingInput::new(&s, &live, true),
         );
         let t_bucket = cfg.t_bucket_for(dec.t()).unwrap();
         let ids = pad_active_list(&dec.active, t_bucket, n);

@@ -51,7 +51,7 @@ fn phase1_baseline_is_sharding_invariant() {
         let (s, live) = random_input(rng);
         let k0 = 1 + rng.below(4);
         let k = k0 + rng.below(6);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let oea = route(Policy::OeaSimplified { k0, k }, &input);
         for ranks in [1usize, 2, 4, 8] {
             let d = route_ep(&input, k0, k, ranks, 0);
@@ -72,7 +72,7 @@ fn rank_unions_stay_within_rank_expert_sets() {
         let (s, live) = random_input(rng);
         let ranks = [2usize, 4, 8][rng.below(3)];
         let topup = rng.below(3);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let d = route_ep(&input, 2, 6, ranks, topup);
         assert_eq!(d.ranks, ranks);
         let per_rank = d.per_rank_t();
@@ -111,7 +111,7 @@ fn max_rank_t_never_exceeds_vanilla() {
         let k = 2 + rng.below(7);
         let k0 = 1 + rng.below(k - 1);
         let ranks = [2usize, 4, 8][rng.below(3)];
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let mut vanilla = route(Policy::Vanilla { k }, &input);
         vanilla.ranks = ranks; // impose the same partition for comparison
         let ep = route_ep(&input, k0, k, ranks, 0);
@@ -133,7 +133,7 @@ fn topup_only_grows_underloaded_ranks() {
         let k = k0 + 2 + rng.below(4);
         let ranks = [2usize, 4, 8][rng.below(3)];
         let topup = 1 + rng.below(3);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let base = route_ep(&input, k0, k, ranks, 0);
         let topped = route_ep(&input, k0, k, ranks, topup);
         let base_t = base.per_rank_t();

@@ -38,6 +38,7 @@ fn req(id: u64, len: usize, gen: usize) -> GenRequest {
         top_p: 1.0,
         seed: id,
         policy: None,
+        deadline_ms: None,
     }
 }
 
@@ -223,25 +224,6 @@ fn submit_overflow_is_a_typed_error_not_a_panic() {
             let err = engine.submit(req(3, 4, 4)).unwrap_err();
             assert_eq!(err, SubmitError::QueueFull);
             assert!(err.to_string().contains("queue full"));
-        },
-    );
-}
-
-#[test]
-#[allow(deprecated)]
-fn deprecated_try_submit_still_bounds_the_queue() {
-    // the one-PR compatibility shim: Ok on admission, Err(request) back
-    // on any refusal
-    with_engine(
-        |c| {
-            c.max_running = 1;
-            c.max_queue = 1;
-        },
-        |engine| {
-            assert!(engine.try_submit(req(1, 4, 4)).is_ok());
-            assert!(engine.try_submit(req(2, 4, 4)).is_ok());
-            let back = engine.try_submit(req(3, 4, 4));
-            assert_eq!(back.unwrap_err().id, 3, "rejected request returns to caller");
         },
     );
 }

@@ -78,10 +78,31 @@ fn server_streams_backpressures_reports_and_drains() {
         .recv_timeout(Duration::from_secs(30))
         .expect("server never bound");
 
-    // -- health ----------------------------------------------------------
-    let h = get(&addr, "/healthz");
-    assert_eq!(h.code, 200);
-    assert_eq!(Json::parse(&h.body).unwrap().get("status").unwrap().as_str().unwrap(), "ok");
+    // -- health: the listener binds before the engine boots, so /healthz
+    // may briefly answer 503 "starting"; it must converge to 200 "ok"
+    // and never report anything else on the way up
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let h = get(&addr, "/healthz");
+        let status = Json::parse(&h.body)
+            .unwrap()
+            .get("status")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        if h.code == 200 {
+            assert_eq!(status, "ok");
+            break;
+        }
+        assert_eq!(h.code, 503, "unexpected /healthz code during boot");
+        assert_eq!(status, "starting", "unexpected /healthz status during boot");
+        assert!(
+            std::time::Instant::now() < deadline,
+            "engine never became ready"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
 
     // -- backpressure: burst > max_running + max_queue -> mixed 200/429 --
     // a barrier releases every client at once so all requests reach the
@@ -164,6 +185,31 @@ fn server_streams_backpressures_reports_and_drains() {
     assert_eq!(r.code, 400);
     assert!(Json::parse(&r.body).unwrap().get("error").unwrap().as_str().unwrap().contains("2"));
 
+    // -- deadlines: a zero budget can never be met and fails up front ----
+    let r = post(
+        &addr,
+        "/generate",
+        r#"{"prompt":"never in time","max_tokens":4,"deadline_ms":0}"#,
+    );
+    assert_eq!(r.code, 400, "{}", r.body);
+    assert!(
+        Json::parse(&r.body).unwrap().get("error").unwrap().as_str().unwrap()
+            .contains("deadline"),
+        "{}",
+        r.body
+    );
+    // a generous deadline changes nothing
+    let r = post(
+        &addr,
+        "/generate",
+        r#"{"prompt":"plenty of time","max_tokens":3,"deadline_ms":60000}"#,
+    );
+    assert_eq!(r.code, 200, "{}", r.body);
+    assert_eq!(
+        Json::parse(&r.body).unwrap().get("finish_reason").unwrap().as_str().unwrap(),
+        "length"
+    );
+
     // -- per-request policy override -------------------------------------
     let r = post(
         &addr,
@@ -229,6 +275,15 @@ fn server_streams_backpressures_reports_and_drains() {
     let max_b = sched.get("max_live_b").unwrap().as_usize().unwrap();
     assert!(avg_b > 0.0 && avg_b <= max_b as f64, "avg {avg_b} max {max_b}");
     assert!(max_b <= 2, "live-B bounded by max_running");
+
+    // -- health block: hardening counters present, zero on a clean run ---
+    let health = v.get("health").unwrap();
+    for key in ["panics_caught", "nonfinite_rows", "deadline_expired", "wedged_steps"] {
+        assert_eq!(health.get(key).unwrap().as_usize().unwrap(), 0, "{key} nonzero");
+    }
+    // no fault plan installed, so no faults/degradation blocks appear
+    assert!(v.get("faults").is_err(), "faults block without a fault plan");
+    assert!(v.get("degradation").is_err(), "degradation block without a fault plan");
 
     // -- graceful drain --------------------------------------------------
     let s = post(&addr, "/shutdown", "");

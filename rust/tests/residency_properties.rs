@@ -159,7 +159,7 @@ fn cache_aware_no_view_equals_oea_on_random_scores() {
         let k0 = 1 + rng.below(4);
         let k = k0 + rng.below(4);
         let alpha = rng.below(3) as f64 * 0.5;
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let oea = route(Policy::OeaSimplified { k0, k }, &input);
         let ca = route(Policy::CacheAware { k0, k, alpha }, &input);
         assert_eq!(ca.sets, oea.sets);
@@ -183,6 +183,7 @@ fn cache_aware_never_grows_union_and_respects_k() {
             live: &live,
             mask_padding: true,
             resident: Some(&resident),
+            healthy: None,
         };
         let d = route(Policy::CacheAware { k0, k, alpha: 0.75 }, &input);
         for (i, set) in d.sets.iter().enumerate() {

@@ -38,7 +38,7 @@ fn oea_union_equals_pruned_union() {
         let (s, live) = random_input(rng);
         let k0 = 1 + rng.below(6);
         let k_max = k0 + rng.below(6);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let pruned = route(Policy::Pruned { k0, p: 1.0 }, &input);
         let oea = route(Policy::Oea { k0, p: 1.0, k_max, max_p: s.n }, &input);
         assert_eq!(oea.active, pruned.active, "piggybacking must be free");
@@ -51,7 +51,7 @@ fn oea_sets_contain_baseline_and_stay_in_union() {
         let (s, live) = random_input(rng);
         let k0 = 1 + rng.below(4);
         let k_max = k0 + 1 + rng.below(6);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let d = route(Policy::Oea { k0, p: 1.0, k_max, max_p: s.n }, &input);
         for i in 0..s.b {
             if !live[i] {
@@ -75,7 +75,7 @@ fn oea_k0_equals_k_recovers_vanilla() {
     check("oea-vanilla", 100, |rng| {
         let (s, live) = random_input(rng);
         let k = 1 + rng.below(8);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let v = route(Policy::Vanilla { k }, &input);
         let o = route(Policy::OeaSimplified { k0: k, k }, &input);
         assert_eq!(v.sets, o.sets);
@@ -90,13 +90,13 @@ fn phase1_is_batch_independent() {
         let (s, _) = random_input(rng);
         let k0 = 1 + rng.below(4);
         let live_all = vec![true; s.b];
-        let input = RoutingInput { scores: &s, live: &live_all, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live_all, true);
         let full = route(Policy::Pruned { k0, p: 0.8 }, &input);
 
         let i = rng.below(s.b);
         let solo = ScoreMatrix::new(1, s.n, s.row(i).to_vec());
         let live1 = vec![true];
-        let input1 = RoutingInput { scores: &solo, live: &live1, mask_padding: true, resident: None };
+        let input1 = RoutingInput::new(&solo, &live1, true);
         let alone = route(Policy::Pruned { k0, p: 0.8 }, &input1);
         assert_eq!(full.sets[i], alone.sets[0]);
     });
@@ -113,7 +113,7 @@ fn combine_matrix_is_valid_distribution() {
             3 => Policy::Lynx { k: 1 + rng.below(6), target_t: 1 + rng.below(s.n) },
             _ => Policy::DynSkip { k: 1 + rng.below(6), tau: rng.f64() },
         };
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let d = route(pol, &input);
         for i in 0..s.b {
             let row = &d.combine[i * s.n..(i + 1) * s.n];
@@ -144,7 +144,7 @@ fn unfull_sets_exhaust_the_union() {
         let (s, live) = random_input(rng);
         let k0 = 1 + rng.below(3);
         let k_max = k0 + 1 + rng.below(4);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let d = route(Policy::Oea { k0, p: 1.0, k_max, max_p: s.n }, &input);
         for i in 0..s.b {
             if !live[i] || d.sets[i].len() >= k_max {
@@ -165,7 +165,7 @@ fn unfull_sets_exhaust_the_union() {
 fn t_monotone_in_k0() {
     check("t-monotone-k0", 80, |rng| {
         let (s, live) = random_input(rng);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let mut prev_t = 0;
         for k0 in 1..=6.min(s.n) {
             let d = route(Policy::Pruned { k0, p: 1.0 }, &input);
@@ -181,7 +181,7 @@ fn lynx_never_exceeds_vanilla_and_no_starvation() {
         let (s, live) = random_input(rng);
         let k = 1 + rng.below(6);
         let target = 1 + rng.below(s.n);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let v = route(Policy::Vanilla { k }, &input);
         let l = route(Policy::Lynx { k, target_t: target }, &input);
         assert!(l.t() <= v.t());
@@ -197,7 +197,7 @@ fn lynx_never_exceeds_vanilla_and_no_starvation() {
 fn padding_masked_rows_contribute_nothing() {
     check("padding-masked", 80, |rng| {
         let (s, live) = random_input(rng);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let d = route(Policy::OeaSimplified { k0: 2, k: 4 }, &input);
         let mut expect: Vec<u16> = Vec::new();
         for i in 0..s.b {
@@ -222,11 +222,11 @@ fn unmasked_padding_can_only_grow_t() {
         let (s, live) = random_input(rng);
         let masked = route(
             Policy::Vanilla { k: 2 },
-            &RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None },
+            &RoutingInput::new(&s, &live, true),
         );
         let unmasked = route(
             Policy::Vanilla { k: 2 },
-            &RoutingInput { scores: &s, live: &live, mask_padding: false, resident: None },
+            &RoutingInput::new(&s, &live, false),
         );
         assert!(unmasked.t() >= masked.t());
     });
@@ -238,7 +238,7 @@ fn dynskip_subset_of_vanilla() {
         let (s, live) = random_input(rng);
         let k = 1 + rng.below(6);
         let tau = rng.f64();
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let v = route(Policy::Vanilla { k }, &input);
         let d = route(Policy::DynSkip { k, tau }, &input);
         for i in 0..s.b {
@@ -257,7 +257,7 @@ fn expert_choice_respects_capacity() {
     check("ec-capacity", 60, |rng| {
         let (s, live) = random_input(rng);
         let cap = 1 + rng.below(4);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let d = route(Policy::ExpertChoice { capacity: cap }, &input);
         let mut counts = vec![0usize; s.n];
         for set in &d.sets {
@@ -274,7 +274,7 @@ fn top_p_cutoff_reduces_baseline() {
     check("top-p-cutoff", 80, |rng| {
         let (s, live) = random_input(rng);
         let k0 = 2 + rng.below(5);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let with_p = route(Policy::Pruned { k0, p: 0.5 }, &input);
         let without = route(Policy::Pruned { k0, p: 1.0 }, &input);
         for i in 0..s.b {
@@ -288,7 +288,7 @@ fn max_p_truncates_piggybacking() {
     check("max-p", 80, |rng| {
         let (s, live) = random_input(rng);
         let k0 = 1 + rng.below(3);
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         // max_p = k0 -> no rank past the baseline may be piggybacked
         let d = route(Policy::Oea { k0, p: 1.0, k_max: s.n, max_p: k0 }, &input);
         let pruned = route(Policy::Pruned { k0, p: 1.0 }, &input);
@@ -301,7 +301,7 @@ fn ep_routing_union_consistency() {
     check("ep-union", 60, |rng| {
         let (s, live) = random_input(rng);
         let ranks = [2, 4, 8][rng.below(3)];
-        let input = RoutingInput { scores: &s, live: &live, mask_padding: true, resident: None };
+        let input = RoutingInput::new(&s, &live, true);
         let d = oea_serve::moe::ep::route_ep(&input, 2, 6, ranks, 0);
         assert_eq!(
             d.per_rank_t().iter().sum::<usize>(),
@@ -313,7 +313,6 @@ fn ep_routing_union_consistency() {
 }
 
 #[test]
-#[allow(deprecated)] // intentionally exercises the legacy shim against PolicySpec
 fn policy_cli_roundtrip() {
     use oea_serve::moe::policy::PolicySpec;
     for spec in [
@@ -329,15 +328,15 @@ fn policy_cli_roundtrip() {
         "ep:k0=4,ranks=4,topup=1",
         "ep:k0=4,ranks=8,alpha=0.5",
     ] {
-        let p = Policy::from_cli(spec, 8, 128).unwrap();
+        let p = PolicySpec::parse(spec).unwrap().build(8, 128).unwrap();
         let _ = p.label();
-        // the deprecated shim and the typed path must build the same policy
-        let typed = PolicySpec::parse(spec).unwrap().build(8, 128).unwrap();
-        assert_eq!(p, typed, "from_cli and PolicySpec disagree on {spec:?}");
         // parse . canonical . parse is a fixpoint
         let s = PolicySpec::parse(spec).unwrap();
         assert_eq!(PolicySpec::parse(&s.canonical()).unwrap(), s);
     }
-    assert!(Policy::from_cli("nope", 8, 128).is_err());
-    assert!(Policy::from_cli("oea:k0=x", 8, 128).is_err());
+    assert!(PolicySpec::parse("nope").is_err());
+    assert!(
+        PolicySpec::parse("oea:k0=x").and_then(|s| s.build(8, 128)).is_err(),
+        "non-numeric k0 must fail"
+    );
 }

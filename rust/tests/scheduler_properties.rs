@@ -116,6 +116,7 @@ fn continuous_bitwise_equals_lockstep_at_constant_b() {
                 top_p: 0.95,
                 seed: 0xBEEF + i as u64,
                 policy: None,
+                deadline_ms: None,
             })
             .collect();
         let lock = run_all(engine(&cfg, SchedMode::Lockstep, 4), &reqs);
