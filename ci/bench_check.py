@@ -1,0 +1,208 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate: compare the smoke-tier `BENCH_*.json`
+artifacts against the committed baselines in `ci/baselines/` and fail
+the build when serving throughput or completion regress.
+
+Rules (per metric kind):
+
+  throughput  current must be >= 75% of baseline (a -25% drop on an
+              already-noisy shared runner is a real regression, not
+              scheduler jitter — the smoke baselines are deliberately
+              conservative floors);
+  rate        current must be >= baseline - 0.05 (completion rates
+              may wobble by a few requests, never collapse).
+
+Every metric is printed in a current-vs-baseline diff table whether the
+gate passes or not. Metrics found in an artifact but absent from the
+baseline are reported as `new` and never fail; a baseline metric that
+the artifact no longer produces fails the gate (silent coverage loss
+reads as "no regression" when nothing was measured).
+
+The committed baselines are bootstrap floors: aggregate (min-over-runs)
+metrics with values set well below any healthy run, so the gate catches
+collapses (a wedged scheduler, a 10x dispatch regression) without
+flaking on runner variance. To tighten them to a reference runner's
+actuals, regenerate with:
+
+  python3 ci/bench_check.py ci/baselines bench-artifacts --update
+
+which rewrites each baseline from the current artifacts, including the
+per-run metrics the smoke emits.
+
+Usage: python3 ci/bench_check.py <baseline-dir> <artifact-dir> [--update]
+"""
+
+import json
+import os
+import sys
+
+THROUGHPUT_FLOOR = 0.75  # current >= baseline * 0.75
+RATE_SLACK = 0.05        # current >= baseline - 0.05
+
+
+def completion(entry):
+    done = entry.get("completed", 0)
+    total = done + entry.get("rejected", 0)
+    return done / total if total else 0.0
+
+
+def with_min(metrics, name, kind):
+    """Append an aggregate min over every metric of `kind` collected so
+    far — aggregates have stable names regardless of run composition,
+    so they are safe to pin in a hand-written bootstrap baseline."""
+    vals = [v for (_, (k, v)) in metrics.items() if k == kind]
+    if vals:
+        metrics[name] = (kind, min(vals))
+
+
+def extract_serve_load(doc):
+    m = {}
+    for p in doc.get("policies", []):
+        for wl in ("closed_loop", "open_loop"):
+            w = p.get(wl)
+            if not w:
+                continue
+            m[f"{p['policy']}/{wl} tokens/s"] = ("throughput", w["tokens_per_s"])
+            if wl == "closed_loop":
+                m[f"{p['policy']}/{wl} completion"] = ("rate", completion(w))
+    with_min(m, "policies min tokens/s", "throughput")
+    with_min(m, "closed_loop min completion", "rate")
+    return m
+
+
+def extract_micro_hotpath(doc):
+    m = {}
+    for r in doc.get("moe_dispatch", []):
+        m[f"moe_apply {r['dispatch']} {r['case']} tokens/s"] = (
+            "throughput", r["tokens_per_s"])
+    with_min(m, "moe_apply min tokens/s", "throughput")
+    return m
+
+
+def extract_ep_balance(doc):
+    m = {}
+    for r in doc.get("runs", []):
+        m[f"{r['policy']} ranks={r['ranks']:.0f} tokens/s"] = (
+            "throughput", r["tokens_per_s"])
+    with_min(m, "runs min tokens/s", "throughput")
+    return m
+
+
+def extract_residency(doc):
+    m = {}
+    for r in doc.get("runs", []):
+        name = (f"{r['policy']} C={r['capacity']:.0f} "
+                f"evict={r['evict']} pf={r['prefetch']:.0f} tokens/s")
+        m[name] = ("throughput", r["tokens_per_s"])
+    with_min(m, "runs min tokens/s", "throughput")
+    return m
+
+
+def extract_chaos(doc):
+    m = {"completion_rate": ("rate", doc.get("completion_rate", 0.0))}
+    for c in doc.get("classes", []):
+        m[f"{c['class']} completion_rate"] = ("rate", c["completion_rate"])
+    return m
+
+
+EXTRACTORS = {
+    "serve_load": extract_serve_load,
+    "micro_hotpath": extract_micro_hotpath,
+    "ep_balance": extract_ep_balance,
+    "residency": extract_residency,
+    "chaos": extract_chaos,
+}
+
+
+def threshold(kind, base):
+    return base * THROUGHPUT_FLOOR if kind == "throughput" else base - RATE_SLACK
+
+
+def check_bench(name, baseline, current):
+    """Returns a list of (metric, kind, base, cur, floor, status) rows;
+    status is 'ok' | 'FAIL' | 'new' | 'MISSING'."""
+    rows = []
+    base_metrics = baseline.get("metrics", {})
+    for metric, spec in sorted(base_metrics.items()):
+        kind, base = spec["kind"], spec["value"]
+        floor = threshold(kind, base)
+        if metric not in current:
+            rows.append((metric, kind, base, None, floor, "MISSING"))
+        else:
+            cur = current[metric][1]
+            rows.append((metric, kind, base, cur, floor,
+                         "ok" if cur >= floor else "FAIL"))
+    for metric, (kind, cur) in sorted(current.items()):
+        if metric not in base_metrics:
+            rows.append((metric, kind, None, cur, None, "new"))
+    return rows
+
+
+def print_table(name, rows):
+    print(f"\n== {name} ==")
+    hdr = f"{'metric':<52} {'kind':<10} {'baseline':>10} {'current':>10} {'floor':>10}  status"
+    print(hdr)
+    print("-" * len(hdr))
+    for metric, kind, base, cur, floor, status in rows:
+        fmt = lambda v: "-" if v is None else f"{v:.3f}"
+        print(f"{metric:<52} {kind:<10} {fmt(base):>10} {fmt(cur):>10} "
+              f"{fmt(floor):>10}  {status}")
+
+
+def main():
+    args = [a for a in sys.argv[1:] if a != "--update"]
+    update = "--update" in sys.argv[1:]
+    if len(args) != 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    baseline_dir, artifact_dir = args
+
+    failures = []
+    for name, extract in sorted(EXTRACTORS.items()):
+        art_path = os.path.join(artifact_dir, f"BENCH_{name}.json")
+        base_path = os.path.join(baseline_dir, f"{name}.json")
+        if not os.path.exists(art_path):
+            failures.append(f"{name}: artifact {art_path} missing")
+            continue
+        current = extract(json.load(open(art_path)))
+
+        if update:
+            payload = {
+                "bench": name,
+                "note": "regenerated by ci/bench_check.py --update",
+                "metrics": {k: {"kind": kind, "value": v}
+                            for k, (kind, v) in sorted(current.items())},
+            }
+            with open(base_path, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"updated {base_path} ({len(current)} metrics)")
+            continue
+
+        if not os.path.exists(base_path):
+            failures.append(f"{name}: baseline {base_path} missing")
+            continue
+        rows = check_bench(name, json.load(open(base_path)), current)
+        print_table(name, rows)
+        for metric, kind, base, cur, floor, status in rows:
+            if status == "FAIL":
+                failures.append(
+                    f"{name}/{metric}: {cur:.3f} below floor {floor:.3f} "
+                    f"(baseline {base:.3f}, {kind})")
+            elif status == "MISSING":
+                failures.append(
+                    f"{name}/{metric}: baseline metric no longer emitted")
+
+    if update:
+        return
+    print()
+    if failures:
+        print(f"bench_check: {len(failures)} regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL {f}", file=sys.stderr)
+        sys.exit(1)
+    print("bench_check: all benches within regression budget")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+#!/usr/bin/env python3
+"""CI control-smoke: boot the release `oea-serve serve` binary with an
+aggressive TTFT SLO budget and prove the adaptive control plane end to
+end:
+
+  1. light sequential traffic leaves tail headroom, so the controller
+     RELAXES the routing policy toward vanilla-k (quality) — `relaxes`
+     counts up and `tight` drops below 1.0;
+  2. a seeded burst of concurrent best-effort traffic blows the p99
+     TTFT budget (queue wait is part of TTFT), so the controller
+     TIGHTENS back toward the configured aggressive policy —
+     `tightens` counts up, and every shift lands in the auditable
+     `slo-control` event ledger on `GET /metrics`;
+  3. premium requests fired into the standing burst jump the queue:
+     per-class ledgers show premium p99 queue-wait strictly below
+     best-effort's;
+  4. an unknown priority label is rejected 400 at the edge;
+  5. POST /shutdown drains and the process exits 0 with the controller
+     armed.
+
+Usage: python3 ci/control_smoke.py <path-to-oea-serve-binary>
+"""
+
+import http.client
+import json
+import subprocess
+import sys
+import threading
+import time
+
+PORT = 18191
+HOST = "127.0.0.1"
+
+N_WARMUP = 8        # sacrificial: slide cold-start TTFT out of the window
+N_LIGHT = 12        # sequential, leaves headroom -> relax
+N_BURST = 32        # concurrent best-effort flood -> tighten
+N_BURST_CLIENTS = 8
+N_PREMIUM = 6       # fired into the standing burst queue
+
+
+def conn():
+    return http.client.HTTPConnection(HOST, PORT, timeout=240)
+
+
+def post_json(path, payload):
+    c = conn()
+    c.request("POST", path, body=json.dumps(payload),
+              headers={"Content-Type": "application/json"})
+    r = c.getresponse()
+    body = r.read().decode()
+    c.close()
+    return r.status, body
+
+
+def check(cond, msg):
+    if not cond:
+        print(f"FAIL: {msg}", file=sys.stderr)
+        sys.exit(1)
+    print(f"ok: {msg}")
+
+
+def wait_healthy(proc, deadline_s=120):
+    t0 = time.time()
+    while time.time() - t0 < deadline_s:
+        check(proc.poll() is None, "server process is alive")
+        try:
+            c = conn()
+            c.request("GET", "/healthz")
+            r = c.getresponse()
+            body = json.loads(r.read().decode())
+            c.close()
+            if r.status == 200 and body.get("status") == "ok":
+                return
+        except OSError:
+            time.sleep(0.2)
+    print("FAIL: server never became healthy", file=sys.stderr)
+    sys.exit(1)
+
+
+def get_metrics():
+    c = conn()
+    c.request("GET", "/metrics")
+    r = c.getresponse()
+    m = json.loads(r.read().decode())
+    c.close()
+    check(r.status == 200, "metrics served")
+    return m
+
+
+def run_checks(proc):
+    wait_healthy(proc)
+
+    # -- warmup: slide any cold-start TTFT sample out of the rolling
+    # window (the controller judges the last --slo-window samples; one
+    # slow first prefill must not veto the headroom condition) ----------
+    for i in range(N_WARMUP):
+        status, _ = post_json("/generate", {
+            "prompt": f"warmup {i} pages the model into steady state",
+            "max_tokens": 8,
+        })
+        check(status == 200, f"warmup {i} completed ({status})")
+
+    # -- light phase: sequential traffic leaves headroom -> relax --------
+    for i in range(N_LIGHT):
+        status, body = post_json("/generate", {
+            "prompt": f"light request {i} leaves the tail plenty of headroom",
+            "max_tokens": 16,
+        })
+        check(status == 200, f"light {i} completed ({status})")
+
+    m = get_metrics()
+    check("controller" in m, "controller block exposed on /metrics")
+    ctl = m["controller"]
+    check(ctl["slo_ttft_ms"] is not None, "TTFT budget echoed on /metrics")
+    check(ctl["evals"] > 0, f"controller evaluated windows ({ctl['evals']} evals)")
+    check(ctl["relaxes"] >= 1,
+          f"headroom relaxed the policy toward vanilla-k ({ctl['relaxes']} relaxes)")
+    check(ctl["tight"] < 1.0,
+          f"tightness dropped below the aggressive base ({ctl['tight']:.2f})")
+
+    # -- burst phase: concurrent flood breaches p99 TTFT -> tighten ------
+    results = [None] * N_BURST
+    per_client = N_BURST // N_BURST_CLIENTS
+
+    def fire(c):
+        for r in range(per_client):
+            i = c * per_client + r
+            results[i] = post_json("/generate", {
+                "prompt": f"burst client {c} request {r} piles onto the queue",
+                "max_tokens": 12,
+                "priority": "best_effort",
+            })
+
+    threads = [threading.Thread(target=fire, args=(c,))
+               for c in range(N_BURST_CLIENTS)]
+    for t in threads:
+        t.start()
+
+    # premium requests fired into the standing queue: they jump it
+    time.sleep(0.3)
+    prem = [None] * N_PREMIUM
+
+    def fire_premium(i):
+        prem[i] = post_json("/generate", {
+            "prompt": f"premium request {i} jumps the burst queue",
+            "max_tokens": 12,
+            "priority": "premium",
+        })
+
+    pthreads = [threading.Thread(target=fire_premium, args=(i,))
+                for i in range(N_PREMIUM)]
+    for t in pthreads:
+        t.start()
+    for t in threads + pthreads:
+        t.join()
+
+    ok = [r for r in results if r and r[0] == 200]
+    check(len(ok) >= int(0.9 * N_BURST),
+          f"burst completion: {len(ok)}/{N_BURST} >= 90%")
+    pok = [r for r in prem if r and r[0] == 200]
+    check(len(pok) == N_PREMIUM, f"all premium completed ({len(pok)}/{N_PREMIUM})")
+
+    # -- controller: the breach tightened the policy back ----------------
+    m = get_metrics()
+    ctl = m["controller"]
+    check(ctl["tightens"] >= 1,
+          f"p99 TTFT breach tightened the policy ({ctl['tightens']} tightens)")
+    check(ctl["relaxes"] >= 1,
+          f"relax events survived the burst ({ctl['relaxes']} relaxes)")
+    check(0.0 <= ctl["tight"] <= 1.0,
+          f"tightness stays in [0,1] ({ctl['tight']:.2f})")
+    check(ctl["last_p99_ttft_ms"] is not None and ctl["last_p99_ttft_ms"] > 0,
+          f"controller tracked p99 TTFT ({ctl['last_p99_ttft_ms']:.1f} ms)")
+    check(len(ctl["events"]) >= 2,
+          f"degradation ledger recorded the shifts ({len(ctl['events'])} events)")
+    ev = ctl["events"][0]
+    check(ev["class"] == "slo-control" and "detail" in ev and "step" in ev,
+          f"events carry class/step/detail ({ev['class']}: {ev['detail']})")
+
+    # -- per-class fairness: premium jumps the queue ---------------------
+    cls = m["classes"]
+    p99_prem = cls["premium"]["queue_wait_ms"]["p99"]
+    p99_be = cls["best_effort"]["queue_wait_ms"]["p99"]
+    check(cls["premium"]["n_finished"] >= N_PREMIUM,
+          f"premium ledger counted completions ({cls['premium']['n_finished']})")
+    check(p99_prem < p99_be,
+          f"premium p99 queue-wait {p99_prem:.1f} ms < "
+          f"best-effort {p99_be:.1f} ms")
+
+    # -- priority validation at the edge ---------------------------------
+    status, body = post_json("/generate", {
+        "prompt": "nonsense class", "max_tokens": 4, "priority": "platinum",
+    })
+    check(status == 400 and "priority" in body,
+          f"unknown priority rejected 400 at submit ({status})")
+
+    # -- graceful drain with the controller armed ------------------------
+    status, body = post_json("/shutdown", {})
+    check(status == 200 and json.loads(body)["status"] == "draining",
+          "shutdown acknowledged")
+    rc = proc.wait(timeout=120)
+    check(rc == 0, f"server exited cleanly with controller armed (rc={rc})")
+    print("control-smoke: all checks passed")
+
+
+def main():
+    binary = sys.argv[1]
+    proc = subprocess.Popen([
+        binary, "serve", "--config", "smoke",
+        "--policy", "oea:k0=4",
+        "--slo-ttft-ms", "400",
+        "--slo-interval-steps", "4", "--slo-min-samples", "4",
+        "--slo-window", "16",
+        "--max-running", "2", "--max-queue", "96", "--http-workers", "8",
+        "--port", str(PORT),
+    ])
+    try:
+        run_checks(proc)
+    except BaseException:
+        proc.kill()
+        raise
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+if __name__ == "__main__":
+    main()

@@ -19,12 +19,19 @@
 //! percentiles scraped from /metrics. Emits `BENCH_serve_load.json` with
 //! requests/s plus p50/p95/p99 queue-wait, TTFT and TPOT per policy.
 //!
-//! A final **scheduler-compare** phase drives a mixed short/long-prompt
+//! A **scheduler-compare** phase drives a mixed short/long-prompt
 //! workload at an overload open-loop rate against the lockstep oracle
 //! and the continuous scheduler (ISSUE 6): continuous must sustain a
 //! higher completed rate at equal-or-better p99 TTFT, because long
 //! prompts prefill in bounded chunks instead of head-of-line-blocking
 //! the whole decode batch. Emitted under `sched_compare`.
+//!
+//! A final **multi-tenant** phase replays a seeded synthetic trace
+//! (`util::trace`): a steady premium tenant plus a bursty best-effort
+//! tenant with mixed length distributions, replayed twice — vanilla
+//! routing uncontrolled, then OEA under an armed SLO controller — with
+//! per-class client percentiles, the server's per-class ledgers, and
+//! the controller block emitted under `multi_tenant`.
 //!
 //!     cargo bench --bench serve_load
 //!     cargo bench --bench serve_load -- --smoke   # CI tier
@@ -36,7 +43,7 @@ use std::time::{Duration, Instant};
 
 use oea_serve::backend::cpu::CpuBackend;
 use oea_serve::config::ModelConfig;
-use oea_serve::coordinator::{Engine, EngineConfig, SchedMode};
+use oea_serve::coordinator::{ControllerConfig, Engine, EngineConfig, Priority, SchedMode};
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::PolicySpec;
@@ -46,6 +53,7 @@ use oea_serve::util::bench::{fmt1, BenchOpts, Table};
 use oea_serve::util::bpe::Tokenizer;
 use oea_serve::util::json::Json;
 use oea_serve::util::stats;
+use oea_serve::util::trace::{self, TenantConfig, TraceConfig};
 
 const MAX_RUNNING: usize = 16; // the paper's B=16 decode bucket
 const MAX_QUEUE: usize = 64;
@@ -54,24 +62,39 @@ const MAX_QUEUE: usize = 64;
 enum ClientResult {
     Ok { e2e_ms: f64, ttft_ms: f64, tokens: usize },
     Rejected,
+    Preempted,
     Failed(String),
 }
 
 /// One streaming generation over raw TCP, timestamping the first token
 /// chunk (client-observed TTFT).
 fn generate_stream(addr: SocketAddr, prompt: &str, max_tokens: usize) -> ClientResult {
+    generate_stream_pri(addr, prompt, max_tokens, None)
+}
+
+/// [`generate_stream`] with an explicit priority class (`None` = omit
+/// the field, i.e. the server-side default of best_effort).
+fn generate_stream_pri(
+    addr: SocketAddr,
+    prompt: &str,
+    max_tokens: usize,
+    priority: Option<Priority>,
+) -> ClientResult {
     let t0 = Instant::now();
     let stream = match TcpStream::connect(addr) {
         Ok(s) => s,
         Err(e) => return ClientResult::Failed(format!("connect: {e}")),
     };
     stream.set_read_timeout(Some(Duration::from_secs(300))).ok();
-    let body = Json::obj(vec![
+    let mut fields = vec![
         ("prompt", Json::str(prompt)),
         ("max_tokens", Json::num(max_tokens as f64)),
         ("stream", Json::Bool(true)),
-    ])
-    .write();
+    ];
+    if let Some(p) = priority {
+        fields.push(("priority", Json::str(p.label())));
+    }
+    let body = Json::obj(fields).write();
     let req = format!(
         "POST /generate HTTP/1.1\r\nContent-Type: application/json\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
@@ -121,6 +144,16 @@ fn generate_stream(addr: SocketAddr, prompt: &str, max_tokens: usize) -> ClientR
                         Err(e) => return ClientResult::Failed(format!("bad line: {e}")),
                     };
                     if v.get_opt("done").is_some() {
+                        // a queued victim of premium preemption streams
+                        // nothing but its done line — retryable, like a
+                        // queue-full 429
+                        let fin = v
+                            .get_opt("finish_reason")
+                            .and_then(|r| r.as_str().ok())
+                            .unwrap_or_default();
+                        if fin == "preempted" {
+                            return ClientResult::Preempted;
+                        }
                         continue;
                     }
                     if ttft_ms.is_none() {
@@ -142,6 +175,16 @@ fn boot_server(
     cfg: &ModelConfig,
     sched: SchedMode,
 ) -> (SocketAddr, std::thread::JoinHandle<oea_serve::Result<()>>) {
+    boot_server_ctl(policy_spec, cfg, sched, None)
+}
+
+/// [`boot_server`] with an optional armed SLO controller.
+fn boot_server_ctl(
+    policy_spec: &str,
+    cfg: &ModelConfig,
+    sched: SchedMode,
+    controller: Option<ControllerConfig>,
+) -> (SocketAddr, std::thread::JoinHandle<oea_serve::Result<()>>) {
     let cfg = cfg.clone();
     let policy = PolicySpec::parse(policy_spec)
         .unwrap()
@@ -158,6 +201,7 @@ fn boot_server(
                         max_running: MAX_RUNNING,
                         max_queue: MAX_QUEUE,
                         sched,
+                        controller,
                         ..EngineConfig::new(policy, cost)
                     },
                 )
@@ -250,6 +294,131 @@ fn open_loop(
     (results, t0.elapsed().as_secs_f64())
 }
 
+/// Deterministic filler prompt of exactly `n_bytes` bytes (one token per
+/// byte under the byte-level tokenizer, so trace prompt lengths are
+/// honored exactly).
+fn trace_prompt(i: usize, n_bytes: usize) -> String {
+    let mut p = format!("t{i} ");
+    while p.len() < n_bytes {
+        p.push_str("river flows ");
+    }
+    p.truncate(n_bytes.max(1));
+    p
+}
+
+/// Replay a synthesized arrival trace in real time: each event fires at
+/// its `at_s` offset on its tenant's priority class. Returns
+/// `(tenant, result)` pairs + wall seconds.
+fn replay_trace(
+    addr: SocketAddr,
+    events: &[trace::TraceEvent],
+) -> (Vec<(usize, ClientResult)>, f64) {
+    let t0 = Instant::now();
+    let (rtx, rrx) = mpsc::channel();
+    let mut workers = Vec::with_capacity(events.len());
+    for (i, e) in events.iter().enumerate() {
+        let due = Duration::from_secs_f64(e.at_s);
+        let now = t0.elapsed();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let rtx = rtx.clone();
+        let prompt = trace_prompt(i, e.prompt_tokens);
+        let max_tokens = e.output_tokens.max(1);
+        let (pri, tenant) = (e.priority, e.tenant);
+        workers.push(std::thread::spawn(move || {
+            let _ =
+                rtx.send((tenant, generate_stream_pri(addr, &prompt, max_tokens, Some(pri))));
+        }));
+    }
+    drop(rtx);
+    let results: Vec<(usize, ClientResult)> = rrx.iter().collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    (results, t0.elapsed().as_secs_f64())
+}
+
+/// Client-observed per-tenant summary of one trace replay.
+fn tenant_json(results: &[(usize, ClientResult)], tenant: usize, tc: &TenantConfig) -> Json {
+    let mut e2e = Vec::new();
+    let mut ttft = Vec::new();
+    let (mut rejected, mut preempted) = (0usize, 0usize);
+    for (_, r) in results.iter().filter(|(t, _)| *t == tenant) {
+        match r {
+            ClientResult::Ok { e2e_ms, ttft_ms, .. } => {
+                e2e.push(*e2e_ms);
+                ttft.push(*ttft_ms);
+            }
+            ClientResult::Rejected => rejected += 1,
+            ClientResult::Preempted => preempted += 1,
+            ClientResult::Failed(e) => panic!("trace tenant {tenant}: client failed: {e}"),
+        }
+    }
+    Json::obj(vec![
+        ("name", Json::str(&tc.name)),
+        ("priority", Json::str(tc.priority.label())),
+        ("completed", Json::num(e2e.len() as f64)),
+        ("rejected", Json::num(rejected as f64)),
+        ("preempted", Json::num(preempted as f64)),
+        ("client_ttft_ms", pct_json(&ttft)),
+        ("client_e2e_ms", pct_json(&e2e)),
+    ])
+}
+
+/// Boot a server (optionally with an armed SLO controller), replay the
+/// trace against it, and report per-tenant client stats + the server's
+/// slo/classes/controller blocks.
+fn run_multi_tenant(
+    label: &str,
+    policy_spec: &str,
+    cfg: &ModelConfig,
+    controller: Option<ControllerConfig>,
+    tcfg: &TraceConfig,
+    seed: u64,
+) -> Json {
+    let (addr, handle) = boot_server_ctl(policy_spec, cfg, SchedMode::Continuous, controller);
+    let events = trace::generate(tcfg, seed);
+    let (results, wall_s) = replay_trace(addr, &events);
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+    let metrics = Json::parse(&read_response(&mut s).unwrap().body).unwrap();
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"POST /shutdown HTTP/1.1\r\nContent-Length: 0\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let _ = read_response(&mut s);
+    handle.join().unwrap().unwrap();
+
+    let completed =
+        results.iter().filter(|(_, r)| matches!(r, ClientResult::Ok { .. })).count();
+    let mut pairs = vec![
+        ("label", Json::str(label)),
+        ("policy", Json::str(policy_spec)),
+        ("offered", Json::num(events.len() as f64)),
+        ("completed", Json::num(completed as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("requests_per_s", Json::num(completed as f64 / wall_s)),
+        (
+            "tenants",
+            Json::arr(
+                tcfg.tenants
+                    .iter()
+                    .enumerate()
+                    .map(|(ti, tc)| tenant_json(&results, ti, tc))
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+        ("slo", metrics.get("slo").unwrap().clone()),
+        ("classes", metrics.get("classes").unwrap().clone()),
+    ];
+    if controller.is_some() {
+        pairs.push(("controller", metrics.get("controller").unwrap().clone()));
+    }
+    Json::obj(pairs)
+}
+
 fn pct_json(xs: &[f64]) -> Json {
     Json::obj(vec![
         ("p50", Json::num(stats::percentile(xs, 50.0))),
@@ -289,7 +458,9 @@ fn run_workload(
                 ttft.push(*ttft_ms);
                 total_tokens += tokens;
             }
-            ClientResult::Rejected => rejected += 1,
+            // single-class workloads never preempt, but count it with
+            // rejections (same retryable 429 contract) if it happens
+            ClientResult::Rejected | ClientResult::Preempted => rejected += 1,
             ClientResult::Failed(e) => panic!("{policy_spec}/{workload}: client failed: {e}"),
         }
     }
@@ -469,6 +640,64 @@ fn main() {
         cmp[1].2
     );
 
+    // ---- multi-tenant trace replay: SLO controller on vs off ------------
+    // One steady premium tenant + one bursty best-effort tenant sharing
+    // the server, replayed from a seeded trace (bit-for-bit reproducible):
+    // first vanilla routing with no controller, then OEA under an armed
+    // aggressive-budget controller — the quality<->latency dial the
+    // control plane actuates, with per-class fairness visible in both
+    // the client stats and the server's classes ledgers.
+    let trace_seed = 42u64;
+    let (dur_s, prem_rps, be_rps, burst_mult) =
+        if opts.smoke { (6.0, 2.0, 6.0, 6.0) } else { (20.0, 3.0, 8.0, 6.0) };
+    let tcfg = TraceConfig {
+        duration_s: dur_s,
+        tenants: vec![
+            TenantConfig::steady("interactive", Priority::Premium, prem_rps),
+            TenantConfig::bursty("batch", Priority::BestEffort, be_rps, burst_mult),
+        ],
+    };
+    let ctl = ControllerConfig {
+        slo_ttft_ms: Some(80.0),
+        slo_tpot_ms: Some(10.0),
+        interval_steps: 8,
+        window: 128,
+        min_samples: 8,
+        ..ControllerConfig::new()
+    };
+    println!(
+        "\n=== multi-tenant trace: {dur_s:.0}s, premium {prem_rps:.0} rps steady + \
+         best-effort {be_rps:.0} rps bursty x{burst_mult:.0} (seed {trace_seed}) ==="
+    );
+    let mut mt_runs = Vec::new();
+    for (label, spec, ctl) in [
+        ("uncontrolled", "vanilla", None),
+        ("controlled", "oea:k0=4", Some(ctl)),
+    ] {
+        let run = run_multi_tenant(label, spec, &cfg, ctl, &tcfg, trace_seed);
+        let tpot_p99 = run
+            .get("slo")
+            .ok()
+            .and_then(|s| s.get("tpot_ms").ok())
+            .and_then(|t| t.get("p99").ok())
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0);
+        println!(
+            "{label} ({spec}): {:.0}/{:.0} completed, server tpot p99 {tpot_p99:.2} ms",
+            run.get("completed").unwrap().as_f64().unwrap(),
+            run.get("offered").unwrap().as_f64().unwrap(),
+        );
+        table.row(vec![
+            spec.to_string(),
+            format!("trace/{label}"),
+            fmt1(run.get("requests_per_s").unwrap().as_f64().unwrap()),
+            "-".to_string(),
+            "-".to_string(),
+            fmt1(tpot_p99),
+        ]);
+        mt_runs.push(run);
+    }
+
     table.print();
     if rps.len() == 2 {
         println!(
@@ -495,6 +724,14 @@ fn main() {
                     ("n", Json::num(cmp_n as f64)),
                     ("offered_rps", Json::num(1000.0 / cmp_interval_ms as f64)),
                     ("runs", Json::arr(sched_entries)),
+                ]),
+            ),
+            (
+                "multi_tenant",
+                Json::obj(vec![
+                    ("seed", Json::num(trace_seed as f64)),
+                    ("duration_s", Json::num(dur_s)),
+                    ("runs", Json::arr(mt_runs)),
                 ]),
             ),
         ]),

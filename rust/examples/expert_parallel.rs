@@ -14,7 +14,7 @@
 use oea_serve::backend::cpu::{CpuBackend, CpuOptions, DispatchMode};
 use oea_serve::backend::Backend;
 use oea_serve::config::ModelConfig;
-use oea_serve::coordinator::{Engine, EngineConfig, GenRequest};
+use oea_serve::coordinator::{Engine, EngineConfig, GenRequest, Priority};
 use oea_serve::eval;
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
@@ -73,6 +73,7 @@ fn run_variant(cfg: &ModelConfig, v: &Variant) -> (f64, f64, f64, Vec<u64>, Vec<
             seed: i as u64,
             policy: None,
             deadline_ms: None,
+            priority: Priority::default(),
         })
         .unwrap();
     }

@@ -859,6 +859,22 @@ impl CpuBackend {
                 }
             }
         }
+        // probation re-admission: every group that executed this layer
+        // without being poisoned counts as a clean trial for a half-open
+        // expert (an exhausted page-in budget already re-tripped it in
+        // pagein_plan above, clearing half-open, so it no-ops here). The
+        // has_half_open() fast check keeps the common no-probation path
+        // at one lock acquisition and zero per-group work.
+        if let Some(fs) = &self.faults {
+            let mut st = lock_clean(fs);
+            if st.has_half_open() {
+                for grp in groups.iter() {
+                    if !poison.contains(&grp.expert) {
+                        st.note_probation_success(l, grp.expert);
+                    }
+                }
+            }
+        }
         self.scratch.put(acc);
         self.scratch.put(hn);
         Ok(out)

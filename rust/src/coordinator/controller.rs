@@ -1,0 +1,430 @@
+//! SLO-driven adaptive routing control plane (ISSUE 8 tentpole).
+//!
+//! Everything before this was open-loop: policy, k0 and alpha were fixed
+//! at boot while `/metrics` already computed the windowed p99 TTFT/TPOT
+//! an operator would watch to turn exactly those knobs. The
+//! [`Controller`] closes the loop: every `interval_steps` decode steps
+//! it compares the windowed tails against the configured latency budgets
+//! (`--slo-ttft-ms` / `--slo-tpot-ms`) and shifts a single scalar —
+//! routing *tightness* in `[0, 1]` — that
+//! [`crate::moe::policy::adapt`] maps onto the configured policy:
+//!
+//! - **breach** (any armed tail over budget): tighten one `step` toward
+//!   `1.0`, the configured aggressive k0/alpha — fewer activated
+//!   experts, faster decode, bounded quality cost (the paper's dial);
+//! - **headroom** (every armed tail under `headroom × budget`): relax
+//!   one `step` toward `0.0` — vanilla-k quality while latency is cheap;
+//! - otherwise hold.
+//!
+//! Tightness starts at `1.0`, where `adapt` is the *identity* on the
+//! configured policy — so a controller that is armed but never shifts
+//! (or never accumulates `min_samples`) routes bitwise-identically to no
+//! controller at all, the same inertness contract the fault plane pins.
+//! Every shift is appended to a bounded ledger of
+//! [`DegradationEvent`]s (class `slo-control`) — the PR 7 audit shape —
+//! and surfaced in the `controller` block on `GET /metrics`.
+
+use crate::faults::{DegradationEvent, FaultClass, EVENT_LOG_BOUND};
+use crate::metrics::RequestMetrics;
+use crate::moe::policy::{self, Policy};
+use crate::util::stats;
+
+/// Controller tuning (CLI `--slo-*`). At least one budget must be set
+/// for the engine to install a controller; the rest have serving
+/// defaults and exist so the control-smoke harness can force fast
+/// reactions on tiny workloads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControllerConfig {
+    /// p99 TTFT budget in ms (`None` = TTFT not a control signal)
+    pub slo_ttft_ms: Option<f64>,
+    /// p99 TPOT budget in ms (`None` = TPOT not a control signal)
+    pub slo_tpot_ms: Option<f64>,
+    /// decode steps between evaluations
+    pub interval_steps: u32,
+    /// tail window: percentiles are computed over at most this many of
+    /// the most recent samples
+    pub window: usize,
+    /// minimum samples an armed signal needs before it participates —
+    /// below this the controller holds rather than react to noise
+    pub min_samples: usize,
+    /// tightness shift per decision, in `[0, 1]`
+    pub step: f64,
+    /// relax only when every armed tail sits under `headroom × budget`
+    /// (the hysteresis band that keeps breach/relax from oscillating)
+    pub headroom: f64,
+}
+
+impl ControllerConfig {
+    /// Defaults with no budgets armed; set at least one `slo_*_ms` (and
+    /// override tuning fields via struct-update) before use.
+    pub fn new() -> ControllerConfig {
+        ControllerConfig {
+            slo_ttft_ms: None,
+            slo_tpot_ms: None,
+            interval_steps: 32,
+            window: 256,
+            min_samples: 16,
+            step: 0.25,
+            headroom: 0.7,
+        }
+    }
+
+    /// Whether any latency budget is set — the engine installs a
+    /// controller only when this is true.
+    pub fn is_armed(&self) -> bool {
+        self.slo_ttft_ms.is_some() || self.slo_tpot_ms.is_some()
+    }
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig::new()
+    }
+}
+
+/// What one evaluation decided (also the event-ledger vocabulary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlDecision {
+    /// a tail breached its budget and tightness moved toward 1.0
+    Tighten,
+    /// every armed tail had headroom and tightness moved toward 0.0
+    Relax,
+    /// in the hysteresis band, at a bound already, or not enough samples
+    Hold,
+}
+
+/// Point-in-time controller snapshot (the `/metrics` `controller` block).
+#[derive(Debug, Clone)]
+pub struct ControllerStats {
+    pub cfg: ControllerConfig,
+    pub tight: f64,
+    pub evals: u64,
+    pub tightens: u64,
+    pub relaxes: u64,
+    pub holds: u64,
+    /// last evaluated windowed p99s, ms (None = signal unarmed or under
+    /// min_samples at the last evaluation)
+    pub last_p99_ttft_ms: Option<f64>,
+    pub last_p99_tpot_ms: Option<f64>,
+    pub events: Vec<DegradationEvent>,
+}
+
+/// The feedback controller. Owned by the engine; pure bookkeeping — it
+/// never touches the model, only the tightness scalar the routing path
+/// reads through [`Controller::effective_policy`].
+#[derive(Debug)]
+pub struct Controller {
+    cfg: ControllerConfig,
+    /// current routing tightness; 1.0 (the adapt identity) at boot
+    tight: f64,
+    next_eval_step: u64,
+    evals: u64,
+    tightens: u64,
+    relaxes: u64,
+    holds: u64,
+    last_p99_ttft_ms: Option<f64>,
+    last_p99_tpot_ms: Option<f64>,
+    events: Vec<DegradationEvent>,
+}
+
+/// Windowed p99 of a µs sample vector, in ms, with the sample count the
+/// `min_samples` gate checks.
+fn tail_p99_ms(xs: &[f64], window: usize) -> (f64, usize) {
+    let tail = &xs[xs.len().saturating_sub(window.max(1))..];
+    (stats::percentile(tail, 99.0) / 1e3, tail.len())
+}
+
+impl Controller {
+    pub fn new(cfg: ControllerConfig) -> Controller {
+        Controller {
+            cfg,
+            tight: 1.0,
+            next_eval_step: cfg.interval_steps.max(1) as u64,
+            evals: 0,
+            tightens: 0,
+            relaxes: 0,
+            holds: 0,
+            last_p99_ttft_ms: None,
+            last_p99_tpot_ms: None,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &ControllerConfig {
+        &self.cfg
+    }
+
+    /// Current routing tightness in `[0, 1]` (1.0 = configured policy
+    /// unchanged, 0.0 = vanilla-k quality).
+    pub fn tight(&self) -> f64 {
+        self.tight
+    }
+
+    /// The policy the next decode step routes under: the configured
+    /// policy interpolated by the current tightness. At `tight == 1.0`
+    /// this IS `base` (the adapt identity — the inertness pin).
+    pub fn effective_policy(&self, base: Policy) -> Policy {
+        policy::adapt(base, self.tight)
+    }
+
+    fn push_event(&mut self, ev: DegradationEvent) {
+        if self.events.len() >= EVENT_LOG_BOUND {
+            self.events.remove(0);
+        }
+        self.events.push(ev);
+    }
+
+    /// Evaluate at most once per `interval_steps` decode steps: compare
+    /// the windowed p99 of each armed signal against its budget and
+    /// shift tightness. Returns the decision when an evaluation ran.
+    pub fn maybe_eval(&mut self, step: u64, m: &RequestMetrics) -> Option<ControlDecision> {
+        if step < self.next_eval_step {
+            return None;
+        }
+        self.next_eval_step = step + self.cfg.interval_steps.max(1) as u64;
+        Some(self.eval(step, m))
+    }
+
+    /// One unconditional evaluation (the cadence-free core, also the
+    /// unit-test entry point).
+    pub fn eval(&mut self, step: u64, m: &RequestMetrics) -> ControlDecision {
+        let signal = |budget: Option<f64>, xs: &[f64]| -> Option<(f64, f64)> {
+            let budget = budget?;
+            let (p99, n) = tail_p99_ms(xs, self.cfg.window);
+            if n < self.cfg.min_samples.max(1) {
+                return None;
+            }
+            Some((p99, budget))
+        };
+        let ttft = signal(self.cfg.slo_ttft_ms, &m.ttft_us);
+        let tpot = signal(self.cfg.slo_tpot_ms, &m.tpot_us);
+        self.last_p99_ttft_ms = ttft.map(|(p, _)| p);
+        self.last_p99_tpot_ms = tpot.map(|(p, _)| p);
+        let signals: Vec<(&str, f64, f64)> = [("ttft", ttft), ("tpot", tpot)]
+            .into_iter()
+            .filter_map(|(name, s)| s.map(|(p99, b)| (name, p99, b)))
+            .collect();
+        if signals.is_empty() {
+            // armed but not yet measurable: not an evaluation, and — by
+            // construction — tightness never moves, so an armed-but-idle
+            // controller stays bitwise inert
+            return ControlDecision::Hold;
+        }
+        self.evals += 1;
+        let breach = signals.iter().find(|&&(_, p99, b)| p99 > b);
+        let all_headroom = signals.iter().all(|&(_, p99, b)| p99 < self.cfg.headroom * b);
+        let step_sz = self.cfg.step.clamp(0.0, 1.0);
+        if let Some(&(name, p99, budget)) = breach {
+            let next = (self.tight + step_sz).min(1.0);
+            if next > self.tight {
+                let detail = format!(
+                    "tighten: p99_{name} {p99:.2}ms > budget {budget:.2}ms; \
+                     tight {:.2} -> {next:.2}",
+                    self.tight
+                );
+                self.tight = next;
+                self.tightens += 1;
+                self.push_event(DegradationEvent {
+                    step,
+                    class: FaultClass::SloControl,
+                    layer: None,
+                    expert: None,
+                    rank: None,
+                    detail,
+                });
+                return ControlDecision::Tighten;
+            }
+            self.holds += 1;
+            return ControlDecision::Hold;
+        }
+        if all_headroom {
+            let next = (self.tight - step_sz).max(0.0);
+            if next < self.tight {
+                let worst = signals
+                    .iter()
+                    .map(|&(_, p99, b)| p99 / b)
+                    .fold(0.0f64, f64::max);
+                let detail = format!(
+                    "relax: every armed tail under {:.0}% of budget (worst {:.0}%); \
+                     tight {:.2} -> {next:.2}",
+                    self.cfg.headroom * 100.0,
+                    worst * 100.0,
+                    self.tight
+                );
+                self.tight = next;
+                self.relaxes += 1;
+                self.push_event(DegradationEvent {
+                    step,
+                    class: FaultClass::SloControl,
+                    layer: None,
+                    expert: None,
+                    rank: None,
+                    detail,
+                });
+                return ControlDecision::Relax;
+            }
+        }
+        self.holds += 1;
+        ControlDecision::Hold
+    }
+
+    pub fn stats(&self) -> ControllerStats {
+        ControllerStats {
+            cfg: self.cfg,
+            tight: self.tight,
+            evals: self.evals,
+            tightens: self.tightens,
+            relaxes: self.relaxes,
+            holds: self.holds,
+            last_p99_ttft_ms: self.last_p99_ttft_ms,
+            last_p99_tpot_ms: self.last_p99_tpot_ms,
+            events: self.events.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_tpot(budget_ms: f64) -> ControllerConfig {
+        ControllerConfig {
+            slo_tpot_ms: Some(budget_ms),
+            min_samples: 2,
+            interval_steps: 4,
+            ..ControllerConfig::new()
+        }
+    }
+
+    fn metrics_with_tpot_ms(ms: f64, n: usize) -> RequestMetrics {
+        RequestMetrics {
+            tpot_us: vec![ms * 1e3; n],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn breach_tightens_toward_one_and_logs() {
+        let mut c = Controller::new(cfg_tpot(5.0));
+        c.tight = 0.5;
+        let m = metrics_with_tpot_ms(20.0, 8);
+        assert_eq!(c.eval(10, &m), ControlDecision::Tighten);
+        assert_eq!(c.tight(), 0.75);
+        assert_eq!(c.eval(20, &m), ControlDecision::Tighten);
+        assert_eq!(c.tight(), 1.0);
+        // at the bound a breach holds instead of re-logging forever
+        assert_eq!(c.eval(30, &m), ControlDecision::Hold);
+        assert_eq!(c.tight(), 1.0);
+        let st = c.stats();
+        assert_eq!((st.tightens, st.relaxes, st.holds), (2, 0, 1));
+        assert_eq!(st.events.len(), 2);
+        assert_eq!(st.events[0].class, FaultClass::SloControl);
+        assert!(st.events[0].detail.contains("tighten"));
+        assert_eq!(st.last_p99_tpot_ms, Some(20.0));
+    }
+
+    #[test]
+    fn headroom_relaxes_toward_vanilla() {
+        let mut c = Controller::new(cfg_tpot(100.0));
+        let m = metrics_with_tpot_ms(1.0, 8); // 1ms << 0.7 * 100ms
+        assert_eq!(c.eval(1, &m), ControlDecision::Relax);
+        assert_eq!(c.tight(), 0.75);
+        for s in 2..=4 {
+            c.eval(s, &m);
+        }
+        assert_eq!(c.tight(), 0.0, "relaxes clamp at vanilla quality");
+        // at the floor further headroom holds
+        assert_eq!(c.eval(5, &m), ControlDecision::Hold);
+        assert!(c.stats().events.iter().all(|e| e.detail.contains("relax")));
+    }
+
+    #[test]
+    fn hysteresis_band_holds() {
+        let mut c = Controller::new(cfg_tpot(10.0));
+        c.tight = 0.5;
+        // 8ms: under budget but over 0.7 * 10ms = 7ms headroom line
+        let m = metrics_with_tpot_ms(8.0, 8);
+        assert_eq!(c.eval(1, &m), ControlDecision::Hold);
+        assert_eq!(c.tight(), 0.5);
+        assert_eq!(c.stats().holds, 1);
+    }
+
+    #[test]
+    fn min_samples_gates_and_keeps_the_controller_inert() {
+        let mut c = Controller::new(ControllerConfig {
+            slo_tpot_ms: Some(0.001), // absurdly breached budget...
+            min_samples: 100,         // ...but never enough samples
+            ..ControllerConfig::new()
+        });
+        let m = metrics_with_tpot_ms(50.0, 99);
+        assert_eq!(c.eval(1, &m), ControlDecision::Hold);
+        assert_eq!(c.tight(), 1.0, "tightness never moved");
+        assert_eq!(c.stats().evals, 0, "under-sampled checks are not evaluations");
+        assert!(c.stats().events.is_empty());
+    }
+
+    #[test]
+    fn maybe_eval_respects_the_cadence() {
+        let mut c = Controller::new(cfg_tpot(5.0));
+        let m = metrics_with_tpot_ms(20.0, 8);
+        assert!(c.maybe_eval(1, &m).is_none());
+        assert!(c.maybe_eval(3, &m).is_none());
+        assert_eq!(c.maybe_eval(4, &m), Some(ControlDecision::Tighten));
+        assert!(c.maybe_eval(5, &m).is_none(), "next eval waits a full interval");
+        assert_eq!(c.maybe_eval(8, &m), Some(ControlDecision::Hold), "already at 1.0");
+    }
+
+    #[test]
+    fn ttft_and_tpot_both_participate() {
+        let mut c = Controller::new(ControllerConfig {
+            slo_ttft_ms: Some(1000.0),
+            slo_tpot_ms: Some(5.0),
+            min_samples: 2,
+            ..ControllerConfig::new()
+        });
+        c.tight = 0.5;
+        // TTFT has headroom but TPOT breaches -> breach wins
+        let m = RequestMetrics {
+            ttft_us: vec![10_000.0; 4], // 10ms << 700ms
+            tpot_us: vec![20_000.0; 4], // 20ms > 5ms
+            ..Default::default()
+        };
+        assert_eq!(c.eval(1, &m), ControlDecision::Tighten);
+        assert_eq!(c.stats().last_p99_ttft_ms, Some(10.0));
+        assert_eq!(c.stats().last_p99_tpot_ms, Some(20.0));
+        // relax requires EVERY armed tail under its headroom line
+        let m = RequestMetrics {
+            ttft_us: vec![10_000.0; 4],
+            tpot_us: vec![4_000.0; 4], // under budget, over 0.7*5 = 3.5ms
+            ..Default::default()
+        };
+        assert_eq!(c.eval(2, &m), ControlDecision::Hold);
+    }
+
+    #[test]
+    fn effective_policy_is_identity_at_boot() {
+        let c = Controller::new(cfg_tpot(5.0));
+        let p = Policy::OeaSimplified { k0: 2, k: 8 };
+        assert_eq!(c.effective_policy(p), p);
+        let mut c = c;
+        c.tight = 0.0;
+        assert_eq!(
+            c.effective_policy(p),
+            Policy::OeaSimplified { k0: 8, k: 8 },
+            "fully relaxed routes at vanilla k"
+        );
+    }
+
+    #[test]
+    fn event_ledger_is_bounded() {
+        let mut c = Controller::new(cfg_tpot(5.0));
+        let breach = metrics_with_tpot_ms(20.0, 8);
+        let calm = metrics_with_tpot_ms(0.1, 8);
+        for s in 0..(2 * EVENT_LOG_BOUND as u64 + 10) {
+            // alternate breach/calm so every eval shifts and logs
+            c.eval(s, if s % 2 == 0 { &breach } else { &calm });
+        }
+        assert!(c.stats().events.len() <= EVENT_LOG_BOUND);
+        assert!(c.stats().tightens > EVENT_LOG_BOUND as u64 / 2);
+    }
+}

@@ -16,8 +16,9 @@ use std::time::Instant;
 
 use crate::backend::Backend;
 use crate::config::ModelConfig;
+use crate::coordinator::controller::{Controller, ControllerConfig, ControllerStats};
 use crate::coordinator::request::{
-    FinishReason, FinishedRequest, GenRequest, SubmitError, Ticket, TokenEvent,
+    FinishReason, FinishedRequest, GenRequest, Priority, SubmitError, Ticket, TokenEvent,
 };
 use crate::coordinator::sampler;
 use crate::coordinator::scheduler::{SchedCounters, SchedMode, Scheduler};
@@ -62,6 +63,12 @@ pub struct EngineConfig {
     /// rank stalls and real scheduler wedges both surface here). `None`
     /// disables the watchdog.
     pub step_budget_us: Option<u64>,
+    /// SLO control plane (`--slo-ttft-ms` / `--slo-tpot-ms`): a feedback
+    /// controller that shifts routing tightness from the windowed tail
+    /// latencies. `None` (or a config with no budget armed) installs no
+    /// controller and routing is bitwise-identical to pre-controller
+    /// behavior.
+    pub controller: Option<ControllerConfig>,
 }
 
 impl EngineConfig {
@@ -79,6 +86,7 @@ impl EngineConfig {
             prefill_chunk: None,
             adaptive: false,
             step_budget_us: None,
+            controller: None,
         }
     }
 }
@@ -146,6 +154,11 @@ pub struct Engine<B: Backend> {
     /// absorbed-failure counters (panics caught, non-finite rows,
     /// expired deadlines, watchdog hits)
     pub health: EngineHealth,
+    /// SLO feedback controller (None = open-loop, the pre-PR behavior)
+    controller: Option<Controller>,
+    /// requests retired outside a step (queue preemption) whose finished
+    /// records the next [`Engine::step_events`] call delivers
+    pending_finished: Vec<FinishedRequest>,
     step_no: u32,
     t_start: Instant,
     draining: bool,
@@ -175,6 +188,7 @@ impl<B: Backend> Engine<B> {
             mc.s_max,
         );
         let batch = runner.new_batch(bucket)?;
+        let controller = cfg.controller.filter(|c| c.is_armed()).map(Controller::new);
         Ok(Engine {
             runner,
             cfg,
@@ -184,6 +198,8 @@ impl<B: Backend> Engine<B> {
             moe: MoeMetrics::default(),
             requests: RequestMetrics::default(),
             health: EngineHealth::default(),
+            controller,
+            pending_finished: Vec::new(),
             step_no: 0,
             t_start: Instant::now(),
             draining: false,
@@ -203,7 +219,23 @@ impl<B: Backend> Engine<B> {
     }
 
     pub fn idle(&self) -> bool {
-        self.n_running() == 0 && self.n_queued() == 0
+        self.n_running() == 0 && self.n_queued() == 0 && self.pending_finished.is_empty()
+    }
+
+    /// Controller telemetry (the `/metrics` `controller` block); `None`
+    /// when no SLO budget is armed.
+    pub fn controller_stats(&self) -> Option<ControllerStats> {
+        self.controller.as_ref().map(|c| c.stats())
+    }
+
+    /// The policy the next decode step routes under: the configured
+    /// policy shifted by the controller's current tightness (identical
+    /// to `cfg.policy` without a controller, or at tightness 1.0).
+    pub fn effective_policy(&self) -> Policy {
+        match &self.controller {
+            Some(c) => c.effective_policy(self.cfg.policy),
+            None => self.cfg.policy,
+        }
     }
 
     /// Scheduler telemetry (the `/metrics` `scheduler` block).
@@ -248,11 +280,11 @@ impl<B: Backend> Engine<B> {
             return Err(SubmitError::Draining);
         }
         if req.prompt.is_empty() {
-            self.requests.n_rejected += 1;
+            self.reject(req.priority);
             return Err(SubmitError::NeverFits("empty prompt".into()));
         }
         if !self.sched.fits(req.prompt.len()) {
-            self.requests.n_rejected += 1;
+            self.reject(req.priority);
             return Err(SubmitError::NeverFits(format!(
                 "prompt of {} tokens can never fit the KV capacity (s_max = {}, \
                  one position reserved for decode)",
@@ -264,12 +296,12 @@ impl<B: Backend> Engine<B> {
             let mc = self.runner.cfg();
             match spec.build(mc.top_k, mc.n_experts) {
                 Err(e) => {
-                    self.requests.n_rejected += 1;
+                    self.reject(req.priority);
                     return Err(SubmitError::NeverFits(format!("policy override: {e}")));
                 }
                 Ok(p) => {
                     if !p.per_row_capable() {
-                        self.requests.n_rejected += 1;
+                        self.reject(req.priority);
                         return Err(SubmitError::NeverFits(format!(
                             "policy override {} is batch-global and cannot be \
                              mixed per-request",
@@ -277,7 +309,7 @@ impl<B: Backend> Engine<B> {
                         )));
                     }
                     if !self.cfg.policy.per_row_capable() {
-                        self.requests.n_rejected += 1;
+                        self.reject(req.priority);
                         return Err(SubmitError::NeverFits(format!(
                             "engine policy {} is batch-global; per-request \
                              overrides are unsupported under it",
@@ -288,18 +320,58 @@ impl<B: Backend> Engine<B> {
             }
         }
         if req.deadline_ms == Some(0) {
-            self.requests.n_rejected += 1;
+            self.reject(req.priority);
             return Err(SubmitError::NeverFits(
                 "deadline_ms of 0 expires before any token can be produced".into(),
             ));
         }
         if !self.sched.has_queue_capacity() {
-            self.requests.n_rejected += 1;
+            // the 429-boundary preemption: a premium request facing a
+            // full queue evicts the newest-queued best-effort request
+            // (retired typed, its 429 delivered on the next step's
+            // events) instead of being rejected itself. No best-effort
+            // victim -> premium backpressures like everyone else.
+            if req.priority == Priority::Premium {
+                if let Some((victim, t_submit)) = self.sched.preempt_newest_best_effort() {
+                    let e2e_us = t_submit.elapsed().as_secs_f64() * 1e6;
+                    self.requests.n_finished += 1;
+                    self.requests.n_preempted += 1;
+                    let cl = self.requests.class_mut(victim.priority);
+                    cl.n_finished += 1;
+                    cl.n_preempted += 1;
+                    // its whole life was queue wait — same accounting
+                    // rationale as a queued cancel: the waiters that
+                    // lose must not vanish from the queue-wait SLO
+                    push_sample(&mut cl.queue_wait_us, e2e_us);
+                    push_sample(&mut self.requests.queue_wait_us, e2e_us);
+                    push_sample(&mut self.requests.e2e_us, e2e_us);
+                    self.pending_finished.push(FinishedRequest {
+                        id: victim.id,
+                        prompt_len: victim.prompt.len(),
+                        tokens: Vec::new(),
+                        reason: FinishReason::Preempted,
+                        queue_wait_us: e2e_us,
+                        ttft_us: 0.0,
+                        e2e_us,
+                    });
+                    let id = req.id;
+                    self.requests.class_mut(req.priority).n_submitted += 1;
+                    let position = self.sched.enqueue(req, Instant::now());
+                    return Ok(Ticket { id, position });
+                }
+            }
+            self.reject(req.priority);
             return Err(SubmitError::QueueFull);
         }
-        let ticket = Ticket { id: req.id, position: self.sched.n_queued() };
-        self.sched.enqueue(req, Instant::now());
-        Ok(ticket)
+        let id = req.id;
+        self.requests.class_mut(req.priority).n_submitted += 1;
+        let position = self.sched.enqueue(req, Instant::now());
+        Ok(Ticket { id, position })
+    }
+
+    fn reject(&mut self, priority: Priority) {
+        self.requests.n_rejected += 1;
+        self.requests.class_mut(priority).n_rejected += 1;
     }
 
     /// One engine iteration: execute the scheduler's plan (admit, prefill
@@ -314,12 +386,19 @@ impl<B: Backend> Engine<B> {
     /// addition to retired requests) so the serving edge can stream them.
     pub fn step_events(&mut self) -> Result<StepEvents> {
         let mut events = StepEvents::default();
+        // deliver retirements that happened between steps (preemption
+        // victims evicted at submit time)
+        events.finished.append(&mut self.pending_finished);
         let plan = self.sched.plan();
 
         // bind admissions to their slots
         for adm in plan.admitted {
             let queue_wait_us = adm.t_submit.elapsed().as_secs_f64() * 1e6;
             push_sample(&mut self.requests.queue_wait_us, queue_wait_us);
+            push_sample(
+                &mut self.requests.class_mut(adm.req.priority).queue_wait_us,
+                queue_wait_us,
+            );
             // queue wait can eat the whole deadline budget: retire the
             // request before spending a single prefill FLOP on it (its
             // planned prompt chunk is skipped by the empty-slot guard)
@@ -327,6 +406,7 @@ impl<B: Backend> Engine<B> {
             {
                 self.health.deadline_expired += 1;
                 self.requests.n_finished += 1;
+                self.requests.class_mut(adm.req.priority).n_finished += 1;
                 let e2e_us = adm.t_submit.elapsed().as_secs_f64() * 1e6;
                 push_sample(&mut self.requests.e2e_us, e2e_us);
                 events.finished.push(FinishedRequest {
@@ -460,7 +540,10 @@ impl<B: Backend> Engine<B> {
             .collect();
         let any_override = overrides.iter().any(|o| o.is_some());
         let routing = StepRouting {
-            policy: self.cfg.policy,
+            // the controller's current setpoint, not the static config:
+            // an armed controller lerps the base policy toward vanilla-k
+            // as tails breach or headroom opens
+            policy: self.effective_policy(),
             mask_padding: self.cfg.mask_padding,
             overrides: if any_override { Some(&overrides) } else { None },
             adaptive: if self.cfg.adaptive {
@@ -573,6 +656,7 @@ impl<B: Backend> Engine<B> {
                     toks.pop();
                 }
                 self.requests.n_finished += 1;
+                self.requests.class_mut(s.req.priority).n_finished += 1;
                 self.requests.total_generated_tokens += toks.len();
                 if let Some(tf) = s.t_first_token {
                     let us = (tf - s.t_submit).as_secs_f64() * 1e6;
@@ -603,6 +687,9 @@ impl<B: Backend> Engine<B> {
                 self.running[i] = Some(s);
             }
         }
+        if let Some(c) = self.controller.as_mut() {
+            c.maybe_eval(self.step_no as u64, &self.requests);
+        }
         Ok(events)
     }
 
@@ -630,6 +717,7 @@ impl<B: Backend> Engine<B> {
         ev: &mut StepEvents,
     ) -> Result<()> {
         self.requests.n_finished += 1;
+        self.requests.class_mut(s.req.priority).n_finished += 1;
         self.requests.total_generated_tokens += s.generated.len();
         let ttft_us = s
             .t_first_token
@@ -700,6 +788,7 @@ impl<B: Backend> Engine<B> {
                 push_sample(&mut self.requests.ttft_us, ttft_us);
             }
             self.requests.n_finished += 1;
+            self.requests.class_mut(s.req.priority).n_finished += 1;
             self.requests.total_generated_tokens += tokens.len();
             let e2e_us = s.t_submit.elapsed().as_secs_f64() * 1e6;
             push_sample(&mut self.requests.e2e_us, e2e_us);
@@ -734,10 +823,15 @@ impl<B: Backend> Engine<B> {
             let e2e_us = t_submit.elapsed().as_secs_f64() * 1e6;
             self.requests.n_finished += 1;
             self.requests.n_cancelled += 1;
+            self.requests.class_mut(req.priority).n_finished += 1;
             // its whole life was queue wait; admitted requests sample this
             // at admission, and the longest waiters are exactly the ones
             // that abandon — the queue-wait SLO must not exclude them
             push_sample(&mut self.requests.queue_wait_us, e2e_us);
+            push_sample(
+                &mut self.requests.class_mut(req.priority).queue_wait_us,
+                e2e_us,
+            );
             push_sample(&mut self.requests.e2e_us, e2e_us);
             return Some(FinishedRequest {
                 id,
@@ -756,6 +850,7 @@ impl<B: Backend> Engine<B> {
         let e2e_us = s.t_submit.elapsed().as_secs_f64() * 1e6;
         self.requests.n_finished += 1;
         self.requests.n_cancelled += 1;
+        self.requests.class_mut(s.req.priority).n_finished += 1;
         // the tokens were generated (and possibly streamed) — they count
         self.requests.total_generated_tokens += s.generated.len();
         if let Some(tf) = s.t_first_token {

@@ -11,14 +11,16 @@
 //! the decode path only — prefill stays vanilla, exactly as in the
 //! paper (§4.2).
 
+pub mod controller;
 pub mod engine;
 pub mod request;
 pub mod sampler;
 pub mod scheduler;
 pub mod slots;
 
+pub use controller::{ControlDecision, Controller, ControllerConfig, ControllerStats};
 pub use engine::{Engine, EngineConfig, EngineHealth, StepEvents};
 pub use request::{
-    FinishReason, FinishedRequest, GenRequest, SubmitError, Ticket, TokenEvent,
+    FinishReason, FinishedRequest, GenRequest, Priority, SubmitError, Ticket, TokenEvent,
 };
 pub use scheduler::{SchedCounters, SchedMode, Scheduler};

@@ -1,6 +1,40 @@
 //! Request types for the serving engine.
 
 use crate::moe::policy::PolicySpec;
+use crate::util::error::{Error, Result};
+
+/// Per-request priority class (the `/generate` `priority` field).
+/// Premium traffic queues ahead of best-effort and, when the admission
+/// queue is full, may preempt the newest-queued best-effort request at
+/// the 429 boundary instead of being rejected itself. Within a class,
+/// ordering stays FIFO — an all-best-effort workload is bitwise
+/// indistinguishable from the pre-priority queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    Premium,
+    #[default]
+    BestEffort,
+}
+
+impl Priority {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Priority::Premium => "premium",
+            Priority::BestEffort => "best_effort",
+        }
+    }
+
+    /// Parse the `/generate` `priority` field.
+    pub fn from_label(s: &str) -> Result<Priority> {
+        match s {
+            "premium" => Ok(Priority::Premium),
+            "best_effort" => Ok(Priority::BestEffort),
+            other => Err(Error::Config(format!(
+                "unknown priority {other:?} (premium | best_effort)"
+            ))),
+        }
+    }
+}
 
 /// A generation request (the engine's unit of admission).
 #[derive(Debug, Clone)]
@@ -27,6 +61,9 @@ pub struct GenRequest {
     /// checked at admission (queue wait can eat the whole budget), per
     /// prefill chunk, and per decode step. `None` = no deadline.
     pub deadline_ms: Option<u64>,
+    /// Admission-queue class; best-effort (the default) preserves
+    /// pre-priority behavior exactly.
+    pub priority: Priority,
 }
 
 impl GenRequest {
@@ -40,6 +77,7 @@ impl GenRequest {
             seed: id,
             policy: None,
             deadline_ms: None,
+            priority: Priority::default(),
         }
     }
 }
@@ -111,6 +149,10 @@ pub enum FinishReason {
     /// logits went non-finite — and was retired so the engine (and the
     /// rest of the batch) could keep serving
     Error,
+    /// a queued best-effort request was evicted to make room for a
+    /// premium submission at a full admission queue; retryable after
+    /// backoff exactly like a queue-full rejection (HTTP 429)
+    Preempted,
 }
 
 /// A completed request with telemetry.

@@ -18,7 +18,7 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use crate::coordinator::request::GenRequest;
+use crate::coordinator::request::{GenRequest, Priority};
 use crate::coordinator::slots::SlotAllocator;
 use crate::util::error::Result;
 
@@ -202,8 +202,33 @@ impl Scheduler {
         prompt_len > 0 && self.slots.fits(prompt_len, 1)
     }
 
-    pub fn enqueue(&mut self, req: GenRequest, t_submit: Instant) {
-        self.queue.push_back((req, t_submit));
+    /// Queue a request in class order: premium ahead of every queued
+    /// best-effort request, FIFO within each class (an all-best-effort
+    /// workload is exactly the old push_back queue). Returns the 0-based
+    /// queue position the request landed at.
+    pub fn enqueue(&mut self, req: GenRequest, t_submit: Instant) -> usize {
+        let pos = match req.priority {
+            Priority::BestEffort => self.queue.len(),
+            Priority::Premium => self
+                .queue
+                .iter()
+                .position(|(r, _)| r.priority == Priority::BestEffort)
+                .unwrap_or(self.queue.len()),
+        };
+        self.queue.insert(pos, (req, t_submit));
+        pos
+    }
+
+    /// Evict the newest-queued best-effort request to make room for a
+    /// premium one (the 429-boundary preemption). Newest-first keeps the
+    /// eviction fair in the class: the request that waited least loses
+    /// least. `None` when the queue holds no best-effort request.
+    pub fn preempt_newest_best_effort(&mut self) -> Option<(GenRequest, Instant)> {
+        let idx = self
+            .queue
+            .iter()
+            .rposition(|(r, _)| r.priority == Priority::BestEffort)?;
+        self.queue.remove(idx)
     }
 
     /// Pull a not-yet-admitted request back out (client cancel).
@@ -345,6 +370,43 @@ mod tests {
         // first note; counters reflect both decode steps
         assert_eq!(s.counters.decode_steps, 2);
         assert!(s.counters.recompositions >= 1);
+    }
+
+    #[test]
+    fn premium_queues_ahead_of_best_effort_fifo_within_class() {
+        let mut s = Scheduler::new(SchedMode::Continuous, 16, 0, 8, 2, 64);
+        let mut prem = |id| {
+            let mut r = req(id, 2);
+            r.priority = Priority::Premium;
+            r
+        };
+        assert_eq!(s.enqueue(req(1, 2), Instant::now()), 0);
+        assert_eq!(s.enqueue(req(2, 2), Instant::now()), 1);
+        // premium jumps every queued best-effort request...
+        assert_eq!(s.enqueue(prem(3), Instant::now()), 0);
+        // ...but stays FIFO behind earlier premium
+        assert_eq!(s.enqueue(prem(4), Instant::now()), 1);
+        assert_eq!(s.enqueue(req(5, 2), Instant::now()), 4);
+        let order: Vec<u64> = s.queue.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(order, vec![3, 4, 1, 2, 5]);
+    }
+
+    #[test]
+    fn preemption_evicts_the_newest_best_effort() {
+        let mut s = Scheduler::new(SchedMode::Continuous, 16, 0, 8, 2, 64);
+        s.enqueue(req(1, 2), Instant::now());
+        s.enqueue(req(2, 2), Instant::now());
+        let (victim, _) = s.preempt_newest_best_effort().unwrap();
+        assert_eq!(victim.id, 2, "newest best-effort loses first");
+        let (victim, _) = s.preempt_newest_best_effort().unwrap();
+        assert_eq!(victim.id, 1);
+        assert!(s.preempt_newest_best_effort().is_none(), "empty queue");
+        // a queue of only premium requests is never preempted
+        let mut r = req(3, 2);
+        r.priority = Priority::Premium;
+        s.enqueue(r, Instant::now());
+        assert!(s.preempt_newest_best_effort().is_none());
+        assert_eq!(s.n_queued(), 1);
     }
 
     #[test]

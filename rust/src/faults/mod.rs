@@ -82,6 +82,27 @@ pub struct StepPanic {
     pub after_steps: u64,
 }
 
+/// Rank recovery: once `after_steps` forward passes have run, every
+/// tripped expert homed on `rank` is restored healthy on every layer —
+/// the rolling-restart counterpart to [`RankDown`] (a replaced or
+/// rebooted rank rejoining the serving set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankUp {
+    pub rank: usize,
+    pub after_steps: u64,
+}
+
+/// Half-open probation for tripped experts: `steps` forward passes after
+/// an expert trips, routing is allowed back (the expert re-enters the
+/// health mask as HALF-OPEN). The first clean execution re-admits it
+/// fully; a re-trip while half-open restarts the probation clock. Opt-in
+/// via the `probation:steps=N` clause — without it, trips stay permanent
+/// (the pre-existing pessimistic default, bitwise-unchanged).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Probation {
+    pub steps: u64,
+}
+
 /// A parsed, seeded chaos scenario. `Default`/empty means "no faults" —
 /// and the backend must treat that as bitwise-identical to having no
 /// plan at all.
@@ -91,8 +112,10 @@ pub struct FaultPlan {
     pub pagein_delay: Option<PageinDelay>,
     pub rank_stall: Vec<RankStall>,
     pub rank_down: Vec<RankDown>,
+    pub rank_up: Vec<RankUp>,
     pub expert_poison: Vec<ExpertPoison>,
     pub step_panic: Option<StepPanic>,
+    pub probation: Option<Probation>,
 }
 
 fn parse_kvs<'a>(clause: &'a str, body: &'a str) -> Result<Vec<(&'a str, &'a str)>> {
@@ -195,6 +218,24 @@ impl FaultPlan {
                         after_steps: kv_u64(clause, &kvs, "after_steps")?.unwrap_or(0),
                     });
                 }
+                "rank-up" => {
+                    check_keys(clause, &kvs, &["rank", "after_steps"])?;
+                    plan.rank_up.push(RankUp {
+                        rank: require(clause, "rank", kv_u64(clause, &kvs, "rank")?)? as usize,
+                        after_steps: kv_u64(clause, &kvs, "after_steps")?.unwrap_or(0),
+                    });
+                }
+                "probation" => {
+                    check_keys(clause, &kvs, &["steps"])?;
+                    let steps = require(clause, "steps", kv_u64(clause, &kvs, "steps")?)?;
+                    if steps == 0 {
+                        return Err(Error::Config(format!(
+                            "fault clause {clause:?}: steps must be >= 1 (omit the \
+                             clause to keep trips permanent)"
+                        )));
+                    }
+                    plan.probation = Some(Probation { steps });
+                }
                 "expert-poison" => {
                     check_keys(clause, &kvs, &["layer", "expert"])?;
                     plan.expert_poison.push(ExpertPoison {
@@ -213,7 +254,8 @@ impl FaultPlan {
                 other => {
                     return Err(Error::Config(format!(
                         "unknown fault clause {other:?} (pagein-fail | pagein-delay | \
-                         rank-stall | rank-down | expert-poison | step-panic)"
+                         rank-stall | rank-down | rank-up | expert-poison | step-panic \
+                         | probation)"
                     )))
                 }
             }
@@ -244,11 +286,17 @@ impl FaultPlan {
         for d in &self.rank_down {
             parts.push(format!("rank-down:rank={},after_steps={}", d.rank, d.after_steps));
         }
+        for u in &self.rank_up {
+            parts.push(format!("rank-up:rank={},after_steps={}", u.rank, u.after_steps));
+        }
         for p in &self.expert_poison {
             parts.push(format!("expert-poison:layer={},expert={}", p.layer, p.expert));
         }
         if let Some(p) = &self.step_panic {
             parts.push(format!("step-panic:layer={},after_steps={}", p.layer, p.after_steps));
+        }
+        if let Some(p) = &self.probation {
+            parts.push(format!("probation:steps={}", p.steps));
         }
         parts.join(";")
     }
@@ -299,9 +347,14 @@ pub enum FaultClass {
     PageinDelay,
     RankStall,
     RankDown,
+    RankUp,
     ExpertPoison,
     StepPanic,
     Reroute,
+    Probation,
+    /// a routing-parameter shift decided by the SLO control plane (the
+    /// controller borrows this ledger shape for its own event log)
+    SloControl,
 }
 
 impl FaultClass {
@@ -311,9 +364,12 @@ impl FaultClass {
             FaultClass::PageinDelay => "pagein-delay",
             FaultClass::RankStall => "rank-stall",
             FaultClass::RankDown => "rank-down",
+            FaultClass::RankUp => "rank-up",
             FaultClass::ExpertPoison => "expert-poison",
             FaultClass::StepPanic => "step-panic",
             FaultClass::Reroute => "reroute",
+            FaultClass::Probation => "probation",
+            FaultClass::SloControl => "slo-control",
         }
     }
 }
@@ -356,6 +412,15 @@ pub struct FaultCounters {
     pub degraded_tokens: u64,
     /// live tokens routed while any health mask was active on the layer
     pub routed_tokens_masked: u64,
+    /// tripped experts moved to half-open probation (routing re-admitted
+    /// on trial)
+    pub probation_half_open: u64,
+    /// half-open experts whose first clean execution re-admitted them
+    pub probation_readmitted: u64,
+    /// half-open experts that failed probation and re-tripped
+    pub probation_retrips: u64,
+    /// tripped experts restored by a rank-up recovery clause
+    pub rank_up_recovered: u64,
 }
 
 /// Bound on the degradation event log: older events drop first.
@@ -370,6 +435,8 @@ pub struct FaultStats {
     pub counters: FaultCounters,
     /// currently-unhealthy (layer, expert) pairs
     pub unhealthy_experts: usize,
+    /// (layer, expert) pairs currently routed on half-open probation
+    pub half_open_experts: usize,
     pub events: Vec<DegradationEvent>,
 }
 
@@ -389,7 +456,15 @@ pub struct FaultState {
     healthy: Vec<Vec<bool>>,
     /// unhealthy count per layer (0 = mask-free fast path)
     unhealthy_per_layer: Vec<usize>,
+    /// forward-pass count at which `(layer, expert)` last tripped
+    /// (feeds the probation clock; `None` once fully healthy again)
+    tripped_at: Vec<Vec<Option<u64>>>,
+    /// `(layer, expert)` currently routed on probation: healthy in the
+    /// mask, but the next execution decides re-admission vs re-trip
+    half_open: Vec<Vec<bool>>,
+    n_half_open: usize,
     rank_down_fired: Vec<bool>,
+    rank_up_fired: Vec<bool>,
     poison_tripped: Vec<bool>,
     panic_fired: bool,
     counters: FaultCounters,
@@ -412,6 +487,7 @@ impl FaultState {
     pub fn new(plan: FaultPlan, n_layers: usize, n_experts: usize, ep_ranks: usize) -> FaultState {
         let seed = plan.pagein_fail.map(|p| p.seed).unwrap_or(0);
         let n_down = plan.rank_down.len();
+        let n_up = plan.rank_up.len();
         let n_poison = plan.expert_poison.len();
         FaultState {
             plan,
@@ -422,7 +498,11 @@ impl FaultState {
             steps: 0,
             healthy: (0..n_layers).map(|_| vec![true; n_experts]).collect(),
             unhealthy_per_layer: vec![0; n_layers],
+            tripped_at: (0..n_layers).map(|_| vec![None; n_experts]).collect(),
+            half_open: (0..n_layers).map(|_| vec![false; n_experts]).collect(),
+            n_half_open: 0,
             rank_down_fired: vec![false; n_down],
+            rank_up_fired: vec![false; n_up],
             poison_tripped: vec![false; n_poison],
             panic_fired: false,
             counters: FaultCounters::default(),
@@ -446,12 +526,20 @@ impl FaultState {
     }
 
     /// Trip `(layer, expert)` unhealthy and log the event. Idempotent.
+    /// A trip while the expert is half-open counts a probation failure
+    /// and restarts its probation clock.
     pub fn trip(&mut self, layer: usize, expert: usize, class: FaultClass, detail: String) {
         if !self.healthy[layer][expert] {
             return;
         }
+        if self.half_open[layer][expert] {
+            self.half_open[layer][expert] = false;
+            self.n_half_open -= 1;
+            self.counters.probation_retrips += 1;
+        }
         self.healthy[layer][expert] = false;
         self.unhealthy_per_layer[layer] += 1;
+        self.tripped_at[layer][expert] = Some(self.steps);
         self.counters.tripped_experts += 1;
         self.push_event(DegradationEvent {
             step: self.steps,
@@ -464,7 +552,9 @@ impl FaultState {
     }
 
     /// Advance the forward-pass clock (call when layer 0's MoE stage
-    /// starts) and fire any `rank-down` clauses whose time has come.
+    /// starts), fire any `rank-down`/`rank-up` clauses whose time has
+    /// come, and move trips whose probation clock has expired to
+    /// half-open.
     pub fn begin_forward_pass(&mut self) {
         self.steps += 1;
         let downs: Vec<(usize, RankDown)> = self
@@ -484,8 +574,14 @@ impl FaultState {
             for layer in 0..self.healthy.len() {
                 for e in e0..e1 {
                     if self.healthy[layer][e] {
+                        if self.half_open[layer][e] {
+                            self.half_open[layer][e] = false;
+                            self.n_half_open -= 1;
+                            self.counters.probation_retrips += 1;
+                        }
                         self.healthy[layer][e] = false;
                         self.unhealthy_per_layer[layer] += 1;
+                        self.tripped_at[layer][e] = Some(self.steps);
                         self.counters.tripped_experts += 1;
                     }
                 }
@@ -499,6 +595,90 @@ impl FaultState {
                 rank: Some(d.rank),
                 detail: format!("rank {} down: experts {e0}..{e1} masked on every layer", d.rank),
             });
+        }
+        let ups: Vec<(usize, RankUp)> = self
+            .plan
+            .rank_up
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|&(i, u)| !self.rank_up_fired[i] && self.steps > u.after_steps)
+            .collect();
+        for (i, u) in ups {
+            self.rank_up_fired[i] = true;
+            if u.rank >= self.ep_ranks {
+                continue;
+            }
+            let (e0, e1) = crate::moe::ep::rank_span(u.rank, self.n_experts, self.ep_ranks);
+            let mut restored = 0u64;
+            for layer in 0..self.healthy.len() {
+                for e in e0..e1 {
+                    if !self.healthy[layer][e] {
+                        self.healthy[layer][e] = true;
+                        self.unhealthy_per_layer[layer] -= 1;
+                        self.tripped_at[layer][e] = None;
+                        restored += 1;
+                    } else if self.half_open[layer][e] {
+                        // a rank restore supersedes probation: fully healthy
+                        self.half_open[layer][e] = false;
+                        self.n_half_open -= 1;
+                        self.tripped_at[layer][e] = None;
+                        restored += 1;
+                    }
+                }
+            }
+            self.counters.rank_up_recovered += restored;
+            let step = self.steps;
+            self.push_event(DegradationEvent {
+                step,
+                class: FaultClass::RankUp,
+                layer: None,
+                expert: None,
+                rank: Some(u.rank),
+                detail: format!(
+                    "rank {} up: {restored} tripped experts in {e0}..{e1} restored on every layer",
+                    u.rank
+                ),
+            });
+        }
+        if let Some(p) = self.plan.probation {
+            if self.unhealthy_per_layer.iter().any(|&u| u > 0) {
+                for layer in 0..self.healthy.len() {
+                    if self.unhealthy_per_layer[layer] == 0 {
+                        continue;
+                    }
+                    for e in 0..self.n_experts {
+                        if self.healthy[layer][e] {
+                            continue;
+                        }
+                        let expired = match self.tripped_at[layer][e] {
+                            Some(t) => self.steps.saturating_sub(t) >= p.steps,
+                            None => false,
+                        };
+                        if !expired {
+                            continue;
+                        }
+                        self.healthy[layer][e] = true;
+                        self.unhealthy_per_layer[layer] -= 1;
+                        self.half_open[layer][e] = true;
+                        self.n_half_open += 1;
+                        self.counters.probation_half_open += 1;
+                        let step = self.steps;
+                        self.push_event(DegradationEvent {
+                            step,
+                            class: FaultClass::Probation,
+                            layer: Some(layer),
+                            expert: Some(e),
+                            rank: None,
+                            detail: format!(
+                                "layer {layer} expert {e} half-open after {} clean steps; \
+                                 routing re-admitted on trial",
+                                p.steps
+                            ),
+                        });
+                    }
+                }
+            }
         }
     }
 
@@ -590,7 +770,11 @@ impl FaultState {
             .iter()
             .position(|p| p.layer == layer && p.expert == expert);
         if let Some(i) = idx {
-            if !self.poison_tripped[i] {
+            // first detection trips; a later detection only re-trips a
+            // probation re-admission (the poison is persistent, so a
+            // half-open expert that executes poisons again — its second
+            // strike must re-open the breaker, not linger half-open)
+            if !self.poison_tripped[i] || self.healthy[layer][expert] {
                 self.poison_tripped[i] = true;
                 self.trip(
                     layer,
@@ -646,6 +830,40 @@ impl FaultState {
         self.healthy[layer][expert]
     }
 
+    /// Whether any expert is currently half-open — the backend's cheap
+    /// guard before scanning an executed group for probation successes.
+    pub fn has_half_open(&self) -> bool {
+        self.n_half_open > 0
+    }
+
+    pub fn is_half_open(&self, layer: usize, expert: usize) -> bool {
+        self.half_open[layer][expert]
+    }
+
+    /// A half-open expert executed cleanly (finite output, successful
+    /// page-in): re-admit it fully. No-op unless `(layer, expert)` is
+    /// half-open.
+    pub fn note_probation_success(&mut self, layer: usize, expert: usize) {
+        if !self.half_open[layer][expert] {
+            return;
+        }
+        self.half_open[layer][expert] = false;
+        self.n_half_open -= 1;
+        self.tripped_at[layer][expert] = None;
+        self.counters.probation_readmitted += 1;
+        let step = self.steps;
+        self.push_event(DegradationEvent {
+            step,
+            class: FaultClass::Probation,
+            layer: Some(layer),
+            expert: Some(expert),
+            rank: None,
+            detail: format!(
+                "layer {layer} expert {expert} executed cleanly on probation; re-admitted"
+            ),
+        });
+    }
+
     /// Record per-layer-step reroute accounting: `degraded` live tokens
     /// whose top-1 expert was masked, out of `routed` live tokens routed
     /// under an active mask. Logs one auditable event per layer-step
@@ -674,6 +892,7 @@ impl FaultState {
             steps: self.steps,
             counters: self.counters.clone(),
             unhealthy_experts: self.unhealthy_per_layer.iter().sum(),
+            half_open_experts: self.n_half_open,
             events: self.events.clone(),
         }
     }
@@ -704,9 +923,16 @@ mod tests {
     fn label_round_trips() {
         let spec = "pagein-fail:rate=0.5,seed=3;pagein-delay:us=100,rate=0.25;\
                     rank-stall:rank=1,after_steps=2,us=300;rank-down:rank=0,after_steps=4;\
-                    expert-poison:layer=1,expert=5;step-panic:layer=0,after_steps=9";
+                    rank-up:rank=0,after_steps=8;expert-poison:layer=1,expert=5;\
+                    step-panic:layer=0,after_steps=9;probation:steps=6";
         let plan = FaultPlan::parse(spec).unwrap();
         assert_eq!(FaultPlan::parse(&plan.label()).unwrap(), plan);
+    }
+
+    #[test]
+    fn probation_steps_zero_is_loud() {
+        assert!(FaultPlan::parse("probation:steps=0").is_err());
+        assert!(FaultPlan::parse("probation").is_err(), "steps is required");
     }
 
     #[test]
@@ -827,6 +1053,85 @@ mod tests {
         assert!(s.should_panic(1));
         assert!(!s.should_panic(1), "one-shot");
         assert_eq!(s.stats().counters.panics, 1);
+    }
+
+    #[test]
+    fn rank_up_restores_the_shard_after_its_step() {
+        let plan = FaultPlan::parse("rank-down:rank=1;rank-up:rank=1,after_steps=3").unwrap();
+        let mut s = FaultState::new(plan, 2, 8, 2); // rank 1 owns experts 4..8
+        s.begin_forward_pass();
+        assert!(s.healthy_for(0).is_some(), "rank 1 down");
+        s.begin_forward_pass();
+        s.begin_forward_pass();
+        assert!(s.healthy_for(0).is_some(), "rank-up not yet fired");
+        s.begin_forward_pass();
+        assert!(s.healthy_for(0).is_none(), "rank 1 restored on every layer");
+        assert!(s.healthy_for(1).is_none());
+        let st = s.stats();
+        assert_eq!(st.counters.rank_up_recovered, 8);
+        assert_eq!(st.unhealthy_experts, 0);
+        assert!(st
+            .events
+            .iter()
+            .any(|e| e.class == FaultClass::RankUp && e.rank == Some(1)));
+    }
+
+    #[test]
+    fn probation_half_opens_then_readmits_on_success() {
+        let plan = FaultPlan::parse("probation:steps=2").unwrap();
+        let mut s = FaultState::new(plan, 1, 4, 1);
+        s.begin_forward_pass(); // step 1
+        s.trip(0, 2, FaultClass::PageinFail, "boom".into());
+        assert!(!s.is_healthy(0, 2));
+        s.begin_forward_pass(); // step 2: 1 step since trip — not yet
+        assert!(!s.is_healthy(0, 2) && !s.has_half_open());
+        s.begin_forward_pass(); // step 3: clock expired -> half-open
+        assert!(s.is_healthy(0, 2), "half-open experts route again");
+        assert!(s.is_half_open(0, 2) && s.has_half_open());
+        assert_eq!(s.stats().half_open_experts, 1);
+        assert_eq!(s.stats().counters.probation_half_open, 1);
+        s.note_probation_success(0, 2);
+        assert!(!s.has_half_open(), "clean execution re-admits fully");
+        assert_eq!(s.stats().counters.probation_readmitted, 1);
+        // fully healthy: later forward passes never re-open probation
+        s.begin_forward_pass();
+        assert!(!s.has_half_open());
+        // success on a non-half-open expert is a no-op
+        s.note_probation_success(0, 1);
+        assert_eq!(s.stats().counters.probation_readmitted, 1);
+    }
+
+    #[test]
+    fn probation_retrip_restarts_the_clock() {
+        let plan = FaultPlan::parse("probation:steps=2").unwrap();
+        let mut s = FaultState::new(plan, 1, 4, 1);
+        s.begin_forward_pass(); // step 1
+        s.trip(0, 0, FaultClass::ExpertPoison, "nan".into());
+        s.begin_forward_pass(); // 2
+        s.begin_forward_pass(); // 3 -> half-open
+        assert!(s.is_half_open(0, 0));
+        // probation failed: the expert misbehaves again while half-open
+        s.trip(0, 0, FaultClass::ExpertPoison, "nan again".into());
+        assert!(!s.is_healthy(0, 0) && !s.has_half_open());
+        assert_eq!(s.stats().counters.probation_retrips, 1);
+        s.begin_forward_pass(); // 4: 1 step since re-trip — stays tripped
+        assert!(!s.is_healthy(0, 0), "re-trip restarted the clock");
+        s.begin_forward_pass(); // 5 -> half-open again
+        assert!(s.is_half_open(0, 0));
+        assert_eq!(s.stats().counters.probation_half_open, 2);
+    }
+
+    #[test]
+    fn no_probation_clause_keeps_trips_permanent() {
+        let plan = FaultPlan::parse("pagein-fail:rate=1.0,seed=3").unwrap();
+        let mut s = FaultState::new(plan, 1, 4, 1);
+        s.begin_forward_pass();
+        s.trip(0, 1, FaultClass::PageinFail, "boom".into());
+        for _ in 0..50 {
+            s.begin_forward_pass();
+        }
+        assert!(!s.is_healthy(0, 1), "pessimistic default unchanged");
+        assert!(!s.has_half_open());
     }
 
     #[test]

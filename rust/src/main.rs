@@ -26,7 +26,9 @@ use oea_serve::backend::cpu::{CpuBackend, CpuOptions};
 use oea_serve::backend::Backend;
 use oea_serve::residency::{EvictPolicy, ResidencyConfig};
 use oea_serve::config::ModelConfig;
-use oea_serve::coordinator::{Engine, EngineConfig, GenRequest, SchedMode};
+use oea_serve::coordinator::{
+    ControllerConfig, Engine, EngineConfig, GenRequest, Priority, SchedMode,
+};
 use oea_serve::eval;
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
@@ -87,6 +89,21 @@ fn spec() -> Spec {
                               (requires grouped dispatch; empty plan = no hooks)"),
             ("step-budget-us", true, "watchdog: decode steps slower than this budget \
                               count as wedged in /metrics health (default: off)"),
+            ("slo-ttft-ms", true, "SLO controller: p99 TTFT budget in ms; breaches \
+                              tighten routing toward the configured policy, headroom \
+                              relaxes it toward vanilla quality (default: off)"),
+            ("slo-tpot-ms", true, "SLO controller: p99 TPOT budget in ms (default: off; \
+                              either --slo-* budget arms the controller)"),
+            ("slo-interval-steps", true, "SLO controller: decode steps between \
+                              evaluations (default 32)"),
+            ("slo-window", true, "SLO controller: tail window in samples for the \
+                              windowed p99 (default 256)"),
+            ("slo-min-samples", true, "SLO controller: samples a signal needs before it \
+                              participates in a decision (default 16)"),
+            ("slo-step", true, "SLO controller: tightness shift per decision in [0,1] \
+                              (default 0.25)"),
+            ("slo-headroom", true, "SLO controller: relax only when every armed tail is \
+                              under this fraction of its budget (default 0.7)"),
             ("prompt", true, "generate: prompt text"),
             ("max-tokens", true, "generate: tokens to generate (default 32)"),
             ("temperature", true, "sampling temperature (default 0)"),
@@ -132,6 +149,43 @@ fn parse_policy(args: &Args, c: &ModelConfig) -> Result<Policy> {
     PolicySpec::parse(&args.str_or("policy", "vanilla"))?.build(c.top_k, c.n_experts)
 }
 
+fn f64_opt(args: &Args, name: &str) -> Result<Option<f64>> {
+    match args.str_opt(name) {
+        None => Ok(None),
+        Some(s) => s.parse::<f64>().map(Some).map_err(|_| {
+            oea_serve::Error::Config(format!("--{name} {s:?} is not a number"))
+        }),
+    }
+}
+
+/// `--slo-*` flags -> controller tuning; `None` unless at least one
+/// latency budget is set (an unarmed controller is never installed, so
+/// flagless runs stay bitwise identical to pre-controller builds).
+fn controller_config(args: &Args) -> Result<Option<ControllerConfig>> {
+    let mut cc = ControllerConfig::new();
+    cc.slo_ttft_ms = f64_opt(args, "slo-ttft-ms")?;
+    cc.slo_tpot_ms = f64_opt(args, "slo-tpot-ms")?;
+    if !cc.is_armed() {
+        return Ok(None);
+    }
+    if let Some(v) = args.usize_opt("slo-interval-steps")? {
+        cc.interval_steps = v as u32;
+    }
+    if let Some(v) = args.usize_opt("slo-window")? {
+        cc.window = v;
+    }
+    if let Some(v) = args.usize_opt("slo-min-samples")? {
+        cc.min_samples = v;
+    }
+    if let Some(v) = f64_opt(args, "slo-step")? {
+        cc.step = v;
+    }
+    if let Some(v) = f64_opt(args, "slo-headroom")? {
+        cc.headroom = v;
+    }
+    Ok(Some(cc))
+}
+
 fn engine_config(args: &Args, c: &ModelConfig) -> Result<EngineConfig> {
     Ok(EngineConfig {
         mask_padding: !args.flag("no-mask-padding"),
@@ -141,6 +195,7 @@ fn engine_config(args: &Args, c: &ModelConfig) -> Result<EngineConfig> {
         prefill_chunk: args.usize_opt("prefill-chunk")?,
         adaptive: args.flag("adaptive"),
         step_budget_us: args.usize_opt("step-budget-us")?.map(|v| v as u64),
+        controller: controller_config(args)?,
         ..EngineConfig::new(parse_policy(args, c)?, H100Presets::for_config(&c.name))
     })
 }
@@ -176,6 +231,7 @@ fn cmd_generate<B: Backend>(args: &Args, runner: ModelRunner<B>, tok: Tokenizer)
             seed: args.usize_or("seed", 0)? as u64,
             policy: None,
             deadline_ms: None,
+            priority: Priority::default(),
         })
         .map_err(|e| oea_serve::Error::Config(format!("submit: {e}")))?;
     let done = engine.run_to_completion()?;

@@ -5,6 +5,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::coordinator::request::Priority;
 use crate::util::json::Json;
 use crate::util::stats::{self, LinFit};
 
@@ -194,6 +195,42 @@ pub struct RequestMetrics {
     pub tpot_us: Vec<f64>,
     pub e2e_us: Vec<f64>,
     pub decode_step_us: Vec<f64>,
+    /// best-effort requests evicted from the queue by premium
+    /// submissions (also counted per class below)
+    pub n_preempted: usize,
+    /// premium-class fairness ledger
+    pub premium: ClassMetrics,
+    /// best-effort-class fairness ledger
+    pub best_effort: ClassMetrics,
+}
+
+/// Per-priority-class fairness accounting: enough to prove (or disprove)
+/// that premium traffic actually sees shorter queues, and at whose
+/// expense. Queue-wait samples are windowed like every other store.
+#[derive(Debug, Default, Clone)]
+pub struct ClassMetrics {
+    /// requests accepted into the queue
+    pub n_submitted: usize,
+    pub n_finished: usize,
+    /// typed submit rejections (queue-full / never-fits)
+    pub n_rejected: usize,
+    /// queued requests evicted by premium preemption (best-effort only
+    /// by construction)
+    pub n_preempted: usize,
+    /// submit -> admission delay per admitted request of this class
+    pub queue_wait_us: Vec<f64>,
+}
+
+impl ClassMetrics {
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("n_submitted", Json::num(self.n_submitted as f64)),
+            ("n_finished", Json::num(self.n_finished as f64)),
+            ("n_rejected", Json::num(self.n_rejected as f64)),
+            ("n_preempted", Json::num(self.n_preempted as f64)),
+            ("queue_wait_ms", percentiles_ms(&self.queue_wait_us)),
+        ])
+    }
 }
 
 /// `{p50, p95, p99, n}` percentile summary of a µs sample vector,
@@ -226,6 +263,24 @@ impl RequestMetrics {
             ("n_finished", Json::num(self.n_finished as f64)),
             ("n_rejected", Json::num(self.n_rejected as f64)),
             ("n_cancelled", Json::num(self.n_cancelled as f64)),
+        ])
+    }
+
+    /// The per-class ledger for `priority`.
+    pub fn class_mut(&mut self, priority: Priority) -> &mut ClassMetrics {
+        match priority {
+            Priority::Premium => &mut self.premium,
+            Priority::BestEffort => &mut self.best_effort,
+        }
+    }
+
+    /// The `/metrics` `classes` block: per-priority fairness counters
+    /// and queue-wait percentiles.
+    pub fn classes_json(&self) -> Json {
+        Json::obj(vec![
+            ("premium", self.premium.json()),
+            ("best_effort", self.best_effort.json()),
+            ("n_preempted", Json::num(self.n_preempted as f64)),
         ])
     }
 
@@ -385,6 +440,46 @@ mod tests {
             m.record(rec(0, (i % 7) as u16, 1.0));
         }
         assert!(m.len() <= 2 * SAMPLE_WINDOW);
+    }
+
+    #[test]
+    fn classes_json_reports_both_ledgers() {
+        let mut m = RequestMetrics::default();
+        m.class_mut(Priority::Premium).n_submitted = 5;
+        m.class_mut(Priority::Premium).queue_wait_us = vec![1000.0, 3000.0];
+        m.class_mut(Priority::BestEffort).n_preempted = 2;
+        m.n_preempted = 2;
+        let c = m.classes_json();
+        let p = c.get("premium").unwrap();
+        assert_eq!(p.get("n_submitted").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(
+            p.get("queue_wait_ms").unwrap().get("n").unwrap().as_usize().unwrap(),
+            2
+        );
+        let be = c.get("best_effort").unwrap();
+        assert_eq!(be.get("n_preempted").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(c.get("n_preempted").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn slo_json_percentiles_match_known_vectors() {
+        // 100 equally-spaced µs samples 1000, 2000, .., 100_000: linear
+        // interpolation puts p50 at 50.5ms, p95 at 95.05ms, p99 at
+        // 99.01ms — the controller's input must be pinned exactly
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64 * 1000.0).collect();
+        let m = RequestMetrics { ttft_us: xs, ..Default::default() };
+        let p = m.slo_json();
+        let t = p.get("ttft_ms").unwrap();
+        assert!((t.get("p50").unwrap().as_f64().unwrap() - 50.5).abs() < 1e-9);
+        assert!((t.get("p95").unwrap().as_f64().unwrap() - 95.05).abs() < 1e-9);
+        assert!((t.get("p99").unwrap().as_f64().unwrap() - 99.01).abs() < 1e-9);
+        // a single sample is every percentile
+        let one = RequestMetrics { tpot_us: vec![7000.0], ..Default::default() };
+        let t = one.slo_json();
+        let t = t.get("tpot_ms").unwrap();
+        for k in ["p50", "p95", "p99"] {
+            assert_eq!(t.get(k).unwrap().as_f64().unwrap(), 7.0, "{k}");
+        }
     }
 
     #[test]

@@ -61,7 +61,7 @@ use std::time::Duration;
 
 use crate::backend::Backend;
 use crate::coordinator::{
-    Engine, FinishReason, FinishedRequest, GenRequest, SubmitError, TokenEvent,
+    Engine, FinishReason, FinishedRequest, GenRequest, Priority, SubmitError, TokenEvent,
 };
 use crate::moe::policy::PolicySpec;
 use crate::util::bpe::Tokenizer;
@@ -568,6 +568,9 @@ fn handle_generate(
                     let code = match f.reason {
                         FinishReason::DeadlineExceeded => 504,
                         FinishReason::Error => 500,
+                        // evicted by a premium submission at a full
+                        // queue — retryable exactly like queue-full
+                        FinishReason::Preempted => 429,
                         _ => 200,
                     };
                     let _ = write_response(&mut stream, code, &fin.write());
@@ -606,6 +609,7 @@ const GENERATE_FIELDS_V1: &[&str] = &[
     "seed",
     "policy",
     "deadline_ms",
+    "priority",
 ];
 
 fn parse_generate(req: &HttpRequest, tok: &Tokenizer) -> Result<(GenRequest, bool)> {
@@ -670,6 +674,12 @@ fn parse_generate(req: &HttpRequest, tok: &Tokenizer) -> Result<(GenRequest, boo
         .transpose()
         .map_err(|e| Error::Json(format!("deadline_ms: {e}")))?
         .map(|ms| ms as u64);
+    let priority = body
+        .get_opt("priority")
+        .map(|v| Ok::<_, Error>(Priority::from_label(v.as_str()?)?))
+        .transpose()
+        .map_err(|e| Error::Json(format!("priority: {e}")))?
+        .unwrap_or_default();
     let prompt: Vec<i32> = tok.encode(prompt_text).iter().map(|&t| t as i32).collect();
     Ok((
         GenRequest {
@@ -681,6 +691,7 @@ fn parse_generate(req: &HttpRequest, tok: &Tokenizer) -> Result<(GenRequest, boo
             seed,
             policy,
             deadline_ms,
+            priority,
         },
         stream_mode,
     ))
@@ -706,6 +717,7 @@ fn finished_json(f: &FinishedRequest, text: &str) -> Json {
                 FinishReason::Cancelled => "cancelled",
                 FinishReason::DeadlineExceeded => "deadline_exceeded",
                 FinishReason::Error => "error",
+                FinishReason::Preempted => "preempted",
             }),
         ),
         ("queue_wait_ms", Json::num(f.queue_wait_us / 1e3)),
@@ -747,8 +759,15 @@ fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
         ("n_queued", Json::num(engine.n_queued() as f64)),
         ("scheduler", scheduler_json(engine)),
         ("slo", engine.requests.slo_json()),
+        ("classes", engine.requests.classes_json()),
         ("health", health_json(engine)),
     ];
+    // SLO control plane (only when --slo-* budgets armed a controller):
+    // the current tightness setpoint, decision counters, last observed
+    // tails, and the shift ledger
+    if let Some(cs) = engine.controller_stats() {
+        pairs.push(("controller", controller_json(&cs)));
+    }
     // fault-injection plane (only when a --faults plan is installed):
     // injected-fault counters plus the degradation ledger — how much
     // traffic routed around unhealthy experts, and the recent events
@@ -823,6 +842,10 @@ fn faults_json(fs: &crate::faults::FaultStats) -> Json {
         ("poisoned_outputs", Json::num(c.poisoned_outputs as f64)),
         ("panics", Json::num(c.panics as f64)),
         ("tripped_experts", Json::num(c.tripped_experts as f64)),
+        ("probation_half_open", Json::num(c.probation_half_open as f64)),
+        ("probation_readmitted", Json::num(c.probation_readmitted as f64)),
+        ("probation_retrips", Json::num(c.probation_retrips as f64)),
+        ("rank_up_recovered", Json::num(c.rank_up_recovered as f64)),
     ])
 }
 
@@ -842,7 +865,29 @@ fn degradation_json(fs: &crate::faults::FaultStats) -> Json {
         ("routed_tokens_masked", Json::num(c.routed_tokens_masked as f64)),
         ("degraded_share", Json::num(share)),
         ("unhealthy_experts", Json::num(fs.unhealthy_experts as f64)),
+        ("half_open_experts", Json::num(fs.half_open_experts as f64)),
         ("events", Json::arr(fs.events.iter().rev().take(16).map(degradation_event_json))),
+    ])
+}
+
+/// The `/metrics` controller block: the SLO feedback loop's live state.
+/// `tight` is the policy-adaptation setpoint (1.0 = base policy as
+/// configured, 0.0 = fully relaxed toward vanilla-k quality); every
+/// tighten/relax shift lands in `events`, newest first, in the same
+/// shape as the degradation ledger.
+fn controller_json(cs: &crate::coordinator::ControllerStats) -> Json {
+    let budget = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("slo_ttft_ms", budget(cs.cfg.slo_ttft_ms)),
+        ("slo_tpot_ms", budget(cs.cfg.slo_tpot_ms)),
+        ("tight", Json::num(cs.tight)),
+        ("evals", Json::num(cs.evals as f64)),
+        ("tightens", Json::num(cs.tightens as f64)),
+        ("relaxes", Json::num(cs.relaxes as f64)),
+        ("holds", Json::num(cs.holds as f64)),
+        ("last_p99_ttft_ms", budget(cs.last_p99_ttft_ms)),
+        ("last_p99_tpot_ms", budget(cs.last_p99_tpot_ms)),
+        ("events", Json::arr(cs.events.iter().rev().take(16).map(degradation_event_json))),
     ])
 }
 

@@ -16,3 +16,4 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+pub mod trace;

@@ -1,0 +1,281 @@
+//! Trace-driven multi-tenant workload generation.
+//!
+//! Serving benchmarks that replay a constant-rate closed loop miss the
+//! two load shapes that actually stress an SLO controller: slow diurnal
+//! swings (capacity planning) and short bursts (tail amplification).
+//! This module synthesizes an arrival trace from a seeded generator —
+//! replayable bit-for-bit from `(TraceConfig, seed)` — as a sorted list
+//! of [`TraceEvent`]s: arrival offset, tenant class, prompt/output
+//! lengths. Arrivals follow a non-homogeneous Poisson process sampled by
+//! thinning (Lewis & Shedler): draw candidates at the peak rate
+//! `lambda_max`, keep each with probability `lambda(t) / lambda_max`.
+//!
+//! The harness that replays the trace (the `serve_load` bench, the
+//! control-smoke CI gate) owns the clock: events say *when* relative to
+//! trace start, the replayer sleeps or fires accordingly.
+
+use crate::coordinator::Priority;
+use crate::util::rng::Rng;
+
+/// Shape of one tenant class's arrival process and request mix.
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    /// tenant label (also the per-class report key)
+    pub name: String,
+    /// request priority class this tenant submits under
+    pub priority: Priority,
+    /// mean arrival rate in requests/second at the diurnal midpoint
+    pub base_rps: f64,
+    /// diurnal swing as a fraction of `base_rps` in `[0, 1)`:
+    /// `lambda(t) = base_rps * (1 + amp * sin(2*pi*t/period))`
+    pub diurnal_amp: f64,
+    /// diurnal period in seconds (one full sine cycle)
+    pub diurnal_period_s: f64,
+    /// probability an arrival opens a burst window
+    pub burst_prob: f64,
+    /// arrival-rate multiplier inside a burst window
+    pub burst_mult: f64,
+    /// burst window length in seconds
+    pub burst_len_s: f64,
+    /// prompt length range in tokens (uniform, inclusive lo, exclusive hi)
+    pub prompt_tokens: (usize, usize),
+    /// output budget range in tokens (uniform, inclusive lo, exclusive hi)
+    pub output_tokens: (usize, usize),
+}
+
+impl TenantConfig {
+    /// A steady tenant: no bursts, mild diurnal swing.
+    pub fn steady(name: &str, priority: Priority, base_rps: f64) -> TenantConfig {
+        TenantConfig {
+            name: name.to_string(),
+            priority,
+            base_rps,
+            diurnal_amp: 0.3,
+            diurnal_period_s: 60.0,
+            burst_prob: 0.0,
+            burst_mult: 1.0,
+            burst_len_s: 0.0,
+            prompt_tokens: (8, 32),
+            output_tokens: (8, 24),
+        }
+    }
+
+    /// A bursty tenant: flat base with multiplicative burst windows.
+    pub fn bursty(name: &str, priority: Priority, base_rps: f64, mult: f64) -> TenantConfig {
+        TenantConfig {
+            name: name.to_string(),
+            priority,
+            base_rps,
+            diurnal_amp: 0.0,
+            diurnal_period_s: 60.0,
+            burst_prob: 0.05,
+            burst_mult: mult,
+            burst_len_s: 2.0,
+            prompt_tokens: (4, 16),
+            output_tokens: (4, 16),
+        }
+    }
+}
+
+/// The whole trace: tenants sharing one wall clock for `duration_s`.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub duration_s: f64,
+    pub tenants: Vec<TenantConfig>,
+}
+
+/// One arrival in the synthesized trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// seconds after trace start
+    pub at_s: f64,
+    /// index into `TraceConfig::tenants`
+    pub tenant: usize,
+    pub priority: Priority,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// Instantaneous arrival rate for one tenant at trace time `t` seconds,
+/// ignoring bursts (those are sampled per-arrival, not per-instant).
+pub fn diurnal_rate(tc: &TenantConfig, t: f64) -> f64 {
+    let phase = if tc.diurnal_period_s > 0.0 {
+        (2.0 * std::f64::consts::PI * t / tc.diurnal_period_s).sin()
+    } else {
+        0.0
+    };
+    (tc.base_rps * (1.0 + tc.diurnal_amp * phase)).max(0.0)
+}
+
+/// Synthesize the full trace. Deterministic in `(cfg, seed)`: each
+/// tenant forks its own rng stream by index, so adding a tenant never
+/// perturbs the others' arrivals.
+pub fn generate(cfg: &TraceConfig, seed: u64) -> Vec<TraceEvent> {
+    let mut root = Rng::new(seed);
+    let mut events: Vec<TraceEvent> = Vec::new();
+    for (ti, tc) in cfg.tenants.iter().enumerate() {
+        let mut rng = root.fork(ti as u64);
+        // peak rate bounds the thinning proposal process: diurnal crest
+        // times the burst multiplier (a burst can open at any time)
+        let lambda_max =
+            (tc.base_rps * (1.0 + tc.diurnal_amp) * tc.burst_mult.max(1.0)).max(1e-9);
+        let mut t = 0.0f64;
+        let mut burst_until = -1.0f64;
+        loop {
+            // exponential inter-arrival at the proposal rate
+            let u = rng.f64().max(1e-12);
+            t += -u.ln() / lambda_max;
+            if t >= cfg.duration_s {
+                break;
+            }
+            let in_burst = t < burst_until;
+            let mult = if in_burst { tc.burst_mult.max(1.0) } else { 1.0 };
+            let lambda = diurnal_rate(tc, t) * mult;
+            // thinning: keep the candidate with probability lambda/max
+            if rng.f64() >= lambda / lambda_max {
+                continue;
+            }
+            if !in_burst && tc.burst_prob > 0.0 && rng.bool(tc.burst_prob) {
+                burst_until = t + tc.burst_len_s;
+            }
+            let prompt_tokens = sample_range(&mut rng, tc.prompt_tokens);
+            let output_tokens = sample_range(&mut rng, tc.output_tokens);
+            events.push(TraceEvent {
+                at_s: t,
+                tenant: ti,
+                priority: tc.priority,
+                prompt_tokens,
+                output_tokens,
+            });
+        }
+    }
+    // merge tenant streams into one arrival-ordered trace; ties broken
+    // by tenant index (stable, so replay order is deterministic too)
+    events.sort_by(|a, b| {
+        a.at_s.partial_cmp(&b.at_s).unwrap().then(a.tenant.cmp(&b.tenant))
+    });
+    events
+}
+
+fn sample_range(rng: &mut Rng, (lo, hi): (usize, usize)) -> usize {
+    if hi <= lo + 1 {
+        lo
+    } else {
+        rng.range(lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_tenant_cfg() -> TraceConfig {
+        TraceConfig {
+            duration_s: 30.0,
+            tenants: vec![
+                TenantConfig::steady("premium", Priority::Premium, 4.0),
+                TenantConfig::bursty("batch", Priority::BestEffort, 6.0, 4.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_bit_for_bit() {
+        let cfg = two_tenant_cfg();
+        let a = generate(&cfg, 42);
+        let b = generate(&cfg, 42);
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let cfg = two_tenant_cfg();
+        let a = generate(&cfg, 1);
+        let b = generate(&cfg, 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn adding_a_tenant_leaves_existing_streams_alone() {
+        let mut cfg = two_tenant_cfg();
+        let before = generate(&cfg, 7);
+        cfg.tenants.push(TenantConfig::steady("extra", Priority::BestEffort, 2.0));
+        let after = generate(&cfg, 7);
+        let only_old: Vec<_> =
+            after.iter().filter(|e| e.tenant < 2).cloned().collect();
+        assert_eq!(before, only_old);
+    }
+
+    #[test]
+    fn events_are_time_ordered_and_in_range() {
+        let cfg = two_tenant_cfg();
+        let ev = generate(&cfg, 3);
+        for w in ev.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+        for e in &ev {
+            assert!(e.at_s >= 0.0 && e.at_s < cfg.duration_s);
+            let tc = &cfg.tenants[e.tenant];
+            assert!(e.prompt_tokens >= tc.prompt_tokens.0);
+            assert!(e.prompt_tokens < tc.prompt_tokens.1.max(tc.prompt_tokens.0 + 1));
+            assert!(e.output_tokens >= tc.output_tokens.0);
+            assert_eq!(e.priority, tc.priority);
+        }
+    }
+
+    #[test]
+    fn mean_rate_tracks_base_rps() {
+        // a steady tenant with zero diurnal amp is plain Poisson: over a
+        // long window the empirical rate must sit near base_rps
+        let cfg = TraceConfig {
+            duration_s: 200.0,
+            tenants: vec![TenantConfig {
+                diurnal_amp: 0.0,
+                ..TenantConfig::steady("t", Priority::BestEffort, 5.0)
+            }],
+        };
+        let ev = generate(&cfg, 11);
+        let rate = ev.len() as f64 / cfg.duration_s;
+        assert!((rate - 5.0).abs() < 0.5, "empirical rate {rate} vs 5.0");
+    }
+
+    #[test]
+    fn bursty_tenant_shows_heavier_peaks_than_steady() {
+        // same base rate; the bursty stream's busiest second must beat
+        // the steady stream's busiest second (that is what bursts are)
+        let steady = TraceConfig {
+            duration_s: 120.0,
+            tenants: vec![TenantConfig {
+                diurnal_amp: 0.0,
+                ..TenantConfig::steady("s", Priority::BestEffort, 4.0)
+            }],
+        };
+        let bursty = TraceConfig {
+            duration_s: 120.0,
+            tenants: vec![TenantConfig {
+                burst_prob: 0.10,
+                ..TenantConfig::bursty("b", Priority::BestEffort, 4.0, 8.0)
+            }],
+        };
+        let peak = |ev: &[TraceEvent]| {
+            let mut per_sec = vec![0usize; 121];
+            for e in ev {
+                per_sec[e.at_s as usize] += 1;
+            }
+            per_sec.into_iter().max().unwrap_or(0)
+        };
+        let ps = peak(&generate(&steady, 5));
+        let pb = peak(&generate(&bursty, 5));
+        assert!(pb > ps, "bursty peak {pb} should exceed steady peak {ps}");
+    }
+
+    #[test]
+    fn diurnal_rate_swings_around_base() {
+        let tc = TenantConfig::steady("t", Priority::BestEffort, 10.0);
+        // amp 0.3, period 60s: crest at t=15, trough at t=45
+        assert!((diurnal_rate(&tc, 15.0) - 13.0).abs() < 1e-9);
+        assert!((diurnal_rate(&tc, 45.0) - 7.0).abs() < 1e-9);
+        assert!((diurnal_rate(&tc, 0.0) - 10.0).abs() < 1e-9);
+    }
+}

@@ -297,3 +297,106 @@ fn rebinding_a_just_closed_listener_address_succeeds() {
     let l2 = oea_serve::server::bind_reusable(&addr.to_string()).unwrap();
     assert_eq!(l2.local_addr().unwrap().port(), addr.port());
 }
+
+/// Probation (ISSUE 8): a rank-down outage trips its experts, the
+/// `probation:steps=N` clause half-opens them after N forward passes,
+/// and — because the experts themselves execute fine (the outage was
+/// the rank, not the weights) — the first clean group execution
+/// re-admits them to full health. The breaker heals without operator
+/// action.
+#[test]
+fn rank_down_trip_heals_through_probation() {
+    let opts = CpuOptions { threads: 1, ep_ranks: 2, ..CpuOptions::default() };
+    let mut e = engine_with(
+        Policy::Vanilla { k: 8 },
+        opts,
+        "rank-down:rank=0,after_steps=2;probation:steps=3",
+        2,
+    );
+    for i in 0u64..6 {
+        e.submit(GenRequest::greedy(i + 1, prompt(8 + i as usize, i as usize), 10)).unwrap();
+    }
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 6);
+    for f in &done {
+        assert_eq!(f.reason, FinishReason::Length, "request {} failed", f.id);
+    }
+    let fs = e.runner.backend.fault_stats().unwrap();
+    assert!(fs.counters.tripped_experts > 0, "the rank-down must trip its span");
+    assert!(fs.counters.probation_half_open > 0, "probation never half-opened");
+    assert!(
+        fs.counters.probation_readmitted > 0,
+        "clean executions must re-admit half-open experts"
+    );
+    assert_eq!(fs.unhealthy_experts, 0, "everything heals: the outage was transient");
+    assert_eq!(fs.half_open_experts, 0, "no expert stuck in probation");
+    assert_eq!(fs.counters.probation_retrips, 0, "clean experts never re-trip");
+}
+
+/// A *persistently* faulty expert must not ride probation back into
+/// service: the poisoned expert half-opens on schedule, NaNs the first
+/// request that routes through it again, and re-trips — the breaker
+/// re-opens instead of flapping half-open forever.
+#[test]
+fn persistent_poison_retrips_out_of_probation() {
+    let opts = CpuOptions { threads: 1, ..CpuOptions::default() };
+    // probation longer than one whole request (1 prefill + 6 decode
+    // passes), so a request started right after a trip finishes clean
+    // inside the masked window
+    let mut e = engine_with(
+        Policy::Vanilla { k: 8 },
+        opts,
+        "expert-poison:layer=0,expert=1;probation:steps=10",
+        1,
+    );
+    // serial requests: the first one through the poisoned expert fails,
+    // then probation re-admits it and the next victim re-trips it
+    let mut failed = 0usize;
+    let mut clean = 0usize;
+    for i in 0u64..8 {
+        e.submit(GenRequest::greedy(i + 1, prompt(8, 3), 6)).unwrap();
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        match done[0].reason {
+            FinishReason::Error => failed += 1,
+            FinishReason::Length => clean += 1,
+            other => panic!("unexpected finish: {other:?}"),
+        }
+    }
+    assert!(failed >= 2, "re-admission must have re-exposed the poison ({failed} failures)");
+    assert!(clean >= 1, "tripped windows must serve cleanly ({clean} clean)");
+    let fs = e.runner.backend.fault_stats().unwrap();
+    assert!(fs.counters.probation_half_open >= 1);
+    assert!(fs.counters.probation_retrips >= 1, "the second strike must re-open the breaker");
+    assert_eq!(e.health.panics_caught, 0);
+}
+
+/// `rank-up` (ISSUE 8): the rolling-restart counterpart to rank-down —
+/// a downed rank's experts return to service in one shot when the
+/// restore fires, without probation in the plan.
+#[test]
+fn rank_up_restores_a_downed_rank() {
+    let opts = CpuOptions { threads: 1, ep_ranks: 2, ..CpuOptions::default() };
+    let mut e = engine_with(
+        Policy::Vanilla { k: 8 },
+        opts,
+        "rank-down:rank=0,after_steps=2;rank-up:rank=0,after_steps=6",
+        2,
+    );
+    for i in 0u64..6 {
+        e.submit(GenRequest::greedy(i + 1, prompt(8 + i as usize, i as usize), 10)).unwrap();
+    }
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 6);
+    for f in &done {
+        assert_eq!(f.reason, FinishReason::Length, "request {} failed", f.id);
+    }
+    let fs = e.runner.backend.fault_stats().unwrap();
+    assert!(fs.counters.tripped_experts > 0);
+    assert!(fs.counters.rank_up_recovered > 0, "the rank-up must restore the span");
+    assert_eq!(fs.unhealthy_experts, 0, "the restored rank serves again");
+    assert!(
+        fs.events.iter().any(|ev| ev.class == oea_serve::faults::FaultClass::RankUp),
+        "the restore must land in the degradation ledger"
+    );
+}

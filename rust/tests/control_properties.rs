@@ -1,0 +1,317 @@
+//! Properties of the SLO control plane (ISSUE 8): the
+//! `policy::{concentration, tightness, adapt}` primitives the controller
+//! actuates, the inert-controller bitwise pin (armed budgets that never
+//! breach must not change engine output), and premium/best-effort
+//! priority behavior at the engine boundary.
+
+use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::config::ModelConfig;
+use oea_serve::coordinator::{
+    ControllerConfig, Engine, EngineConfig, FinishReason, GenRequest, Priority, SubmitError,
+};
+use oea_serve::latency::H100Presets;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::{adapt, concentration, tightness, Policy, RoutingInput};
+use oea_serve::moe::ScoreMatrix;
+use oea_serve::util::rng::Rng;
+
+// ---- concentration -------------------------------------------------------
+
+fn softmaxish(b: usize, n: usize, peak: f32) -> ScoreMatrix {
+    // every row: one expert at `peak`, the rest splitting the remainder
+    let rest = (1.0 - peak) / (n - 1) as f32;
+    let mut scores = vec![rest; b * n];
+    for i in 0..b {
+        scores[i * n + (i % n)] = peak;
+    }
+    ScoreMatrix::new(b, n, scores)
+}
+
+#[test]
+fn concentration_spans_zero_to_one() {
+    let n = 8;
+    // uniform scores: top-1 = 1/N, the attainable floor -> 0.0
+    let uni = ScoreMatrix::new(4, n, vec![1.0 / n as f32; 4 * n]);
+    let live = vec![true; 4];
+    assert_eq!(concentration(&RoutingInput::new(&uni, &live, true)), 0.0);
+    // fully decisive scores: top-1 = 1.0 -> 1.0
+    let hard = softmaxish(4, n, 1.0);
+    let c = concentration(&RoutingInput::new(&hard, &live, true));
+    assert!((c - 1.0).abs() < 1e-6, "decisive rows should give 1.0, got {c}");
+    // something in between stays in (0, 1)
+    let mid = softmaxish(4, n, 0.5);
+    let c = concentration(&RoutingInput::new(&mid, &live, true));
+    assert!(c > 0.0 && c < 1.0, "mid concentration out of range: {c}");
+}
+
+#[test]
+fn concentration_degenerate_inputs_are_zero() {
+    // single-expert model: [1/N, 1] collapses, defined as 0.0
+    let one = ScoreMatrix::new(2, 1, vec![1.0; 2]);
+    let live = vec![true; 2];
+    assert_eq!(concentration(&RoutingInput::new(&one, &live, true)), 0.0);
+    // no live rows: nothing to measure
+    let s = softmaxish(3, 4, 0.9);
+    let dead = vec![false; 3];
+    assert_eq!(concentration(&RoutingInput::new(&s, &dead, true)), 0.0);
+    // NaN scores degrade to "not concentrated", never poison the dial
+    let nan = ScoreMatrix::new(1, 4, vec![f32::NAN; 4]);
+    let live1 = vec![true];
+    assert_eq!(concentration(&RoutingInput::new(&nan, &live1, true)), 0.0);
+}
+
+#[test]
+fn concentration_ignores_dead_rows() {
+    // one decisive live row among dead diffuse rows: only the live row
+    // counts
+    let n = 8;
+    let mut scores = vec![1.0 / n as f32; 3 * n];
+    for e in 0..n {
+        scores[n + e] = if e == 2 { 1.0 } else { 0.0 };
+    }
+    let s = ScoreMatrix::new(3, n, scores);
+    let live = vec![false, true, false];
+    let c = concentration(&RoutingInput::new(&s, &live, true));
+    assert!((c - 1.0).abs() < 1e-6, "dead rows leaked into concentration: {c}");
+}
+
+// ---- tightness -----------------------------------------------------------
+
+#[test]
+fn tightness_is_max_of_fill_and_concentration() {
+    assert_eq!(tightness(8, 16, 0.0), 0.5);
+    assert_eq!(tightness(8, 16, 0.9), 0.9);
+    assert_eq!(tightness(16, 16, 0.0), 1.0);
+    // overfull batches clamp at 1.0
+    assert_eq!(tightness(32, 16, 0.0), 1.0);
+    // zero target: fill defined as 1.0 (nothing to scale against)
+    assert_eq!(tightness(0, 0, 0.0), 1.0);
+    // out-of-range concentration clamps instead of leaking
+    assert_eq!(tightness(0, 16, 7.5), 1.0);
+    assert_eq!(tightness(0, 16, -3.0), 0.0);
+}
+
+// ---- adapt ---------------------------------------------------------------
+
+#[test]
+fn adapt_is_identity_at_full_tightness() {
+    let pols = [
+        Policy::OeaSimplified { k0: 3, k: 8 },
+        Policy::Oea { k0: 3, p: 0.7, k_max: 9, max_p: 32 },
+        Policy::CacheAware { k0: 4, k: 8, alpha: 0.5 },
+        Policy::Vanilla { k: 8 },
+    ];
+    for p in pols {
+        assert_eq!(adapt(p, 1.0), p, "tight=1.0 must be the identity for {p:?}");
+    }
+}
+
+#[test]
+fn adapt_reaches_vanilla_k_at_zero_tightness() {
+    match adapt(Policy::OeaSimplified { k0: 3, k: 8 }, 0.0) {
+        Policy::OeaSimplified { k0, k } => {
+            assert_eq!((k0, k), (8, 8), "tight=0 must restore full k");
+        }
+        other => panic!("adapt changed the variant: {other:?}"),
+    }
+    match adapt(Policy::CacheAware { k0: 4, k: 8, alpha: 0.5 }, 0.0) {
+        Policy::CacheAware { k0, k, alpha } => {
+            assert_eq!((k0, k), (8, 8));
+            assert_eq!(alpha, 0.0, "alpha must fully relax at tight=0");
+        }
+        other => panic!("adapt changed the variant: {other:?}"),
+    }
+}
+
+#[test]
+fn adapt_is_monotone_in_tightness() {
+    // k0_eff must move monotonically from k down to k0 as tight rises
+    let mut last = 0usize;
+    for step in 0..=10 {
+        let t = step as f64 / 10.0;
+        let Policy::OeaSimplified { k0, .. } = adapt(Policy::OeaSimplified { k0: 2, k: 8 }, t)
+        else {
+            panic!("variant changed")
+        };
+        if step == 0 {
+            assert_eq!(k0, 8);
+        } else {
+            assert!(k0 <= last, "k0_eff rose from {last} to {k0} at t={t}");
+        }
+        assert!((2..=8).contains(&k0));
+        last = k0;
+    }
+    assert_eq!(last, 2);
+}
+
+#[test]
+fn adapt_edge_cases_hold() {
+    // non-finite tightness snaps to the identity, not to garbage
+    let base = Policy::OeaSimplified { k0: 3, k: 8 };
+    assert_eq!(adapt(base, f64::NAN), base);
+    assert_eq!(adapt(base, f64::INFINITY), base);
+    assert_eq!(adapt(base, -1.0), adapt(base, 0.0));
+    assert_eq!(adapt(base, 2.0), base);
+    // k0 >= k never underflows (vanilla-equivalent configs pass through)
+    let same = Policy::OeaSimplified { k0: 8, k: 8 };
+    assert_eq!(adapt(same, 0.3), same);
+    // policies without opportunistic knobs are untouched at any t
+    let lynx = Policy::Lynx { k: 8, target_t: 16 };
+    assert_eq!(adapt(lynx, 0.25), lynx);
+}
+
+// ---- engine: inert controller + priority classes -------------------------
+
+fn runner() -> ModelRunner<CpuBackend> {
+    ModelRunner::new(CpuBackend::synthetic(ModelConfig::preset("tiny").unwrap(), 0))
+}
+
+fn req(id: u64, len: usize, gen: usize, priority: Priority) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: (0..len).map(|i| 3 + ((id as usize * 31 + i * 7) % 500) as i32).collect(),
+        max_new_tokens: gen,
+        temperature: 0.0,
+        top_p: 1.0,
+        seed: id,
+        policy: None,
+        deadline_ms: None,
+        priority,
+    }
+}
+
+/// Run a small randomized workload to completion, returning every
+/// (id, tokens) pair sorted by id.
+fn run_workload(controller: Option<ControllerConfig>, seed: u64) -> Vec<(u64, Vec<i32>)> {
+    let cfg = EngineConfig {
+        max_running: 4,
+        max_queue: usize::MAX,
+        controller,
+        ..EngineConfig::new(Policy::OeaSimplified { k0: 1, k: 2 }, H100Presets::qwen3_30b())
+    };
+    let mut engine = Engine::new(runner(), cfg).unwrap();
+    let mut rng = Rng::new(seed);
+    for i in 0..10u64 {
+        let pri = if rng.bool(0.3) { Priority::Premium } else { Priority::BestEffort };
+        engine.submit(req(i, 3 + rng.below(6), 4 + rng.below(6), pri)).unwrap();
+    }
+    let mut done: Vec<(u64, Vec<i32>)> = engine
+        .run_to_completion()
+        .unwrap()
+        .into_iter()
+        .map(|f| (f.id, f.tokens))
+        .collect();
+    done.sort();
+    done
+}
+
+#[test]
+fn armed_but_unbreached_controller_is_bitwise_inert() {
+    // the property-test analogue of the inert fault plan: budgets so
+    // generous no tail ever breaches (and min_samples sized so short
+    // runs never even evaluate) must leave every generated token
+    // bitwise identical to a controller-free engine
+    for seed in [1u64, 7, 42] {
+        let without = run_workload(None, seed);
+        let with = run_workload(
+            Some(ControllerConfig {
+                slo_ttft_ms: Some(1e12),
+                slo_tpot_ms: Some(1e12),
+                ..ControllerConfig::new()
+            }),
+            seed,
+        );
+        assert_eq!(without, with, "armed idle controller changed output (seed {seed})");
+    }
+}
+
+#[test]
+fn premium_preempts_newest_best_effort_at_queue_full() {
+    let cfg = EngineConfig {
+        max_running: 1,
+        max_queue: 2,
+        ..EngineConfig::new(Policy::Vanilla { k: 2 }, H100Presets::qwen3_30b())
+    };
+    let mut engine = Engine::new(runner(), cfg).unwrap();
+    // fill the running slot + the whole queue with best-effort
+    engine.submit(req(1, 4, 8, Priority::BestEffort)).unwrap();
+    engine.submit(req(2, 4, 8, Priority::BestEffort)).unwrap();
+    engine.submit(req(3, 4, 8, Priority::BestEffort)).unwrap();
+    // best-effort at a full queue: plain rejection
+    assert_eq!(
+        engine.submit(req(4, 4, 8, Priority::BestEffort)),
+        Err(SubmitError::QueueFull)
+    );
+    // premium at a full queue: evicts the NEWEST queued best-effort (3)
+    let ticket = engine.submit(req(5, 4, 8, Priority::Premium)).unwrap();
+    assert_eq!(ticket.id, 5);
+    let done = engine.run_to_completion().unwrap();
+    let preempted: Vec<u64> = done
+        .iter()
+        .filter(|f| f.reason == FinishReason::Preempted)
+        .map(|f| f.id)
+        .collect();
+    assert_eq!(preempted, vec![3], "the newest-queued best-effort must be the victim");
+    // the victim's record carries no tokens and its wait as queue time
+    let victim = done.iter().find(|f| f.id == 3).unwrap();
+    assert!(victim.tokens.is_empty());
+    assert!(victim.queue_wait_us >= 0.0);
+    // everyone else completes
+    for id in [1u64, 2, 5] {
+        let f = done.iter().find(|f| f.id == id).unwrap();
+        assert_eq!(f.reason, FinishReason::Length, "request {id} should finish");
+    }
+    // ledger: one preemption, counted under best_effort, and the global
+    // finished count includes the victim
+    assert_eq!(engine.requests.n_preempted, 1);
+    assert_eq!(engine.requests.best_effort.n_preempted, 1);
+    assert_eq!(engine.requests.premium.n_preempted, 0);
+    assert_eq!(engine.requests.n_finished, 4);
+}
+
+#[test]
+fn premium_without_a_victim_still_backpressures() {
+    let cfg = EngineConfig {
+        max_running: 1,
+        max_queue: 1,
+        ..EngineConfig::new(Policy::Vanilla { k: 2 }, H100Presets::qwen3_30b())
+    };
+    let mut engine = Engine::new(runner(), cfg).unwrap();
+    engine.submit(req(1, 4, 4, Priority::Premium)).unwrap();
+    engine.submit(req(2, 4, 4, Priority::Premium)).unwrap();
+    // all queued work is premium: nothing to evict, so premium gets the
+    // same 429 contract as everyone else
+    assert_eq!(
+        engine.submit(req(3, 4, 4, Priority::Premium)),
+        Err(SubmitError::QueueFull)
+    );
+    assert_eq!(engine.requests.premium.n_rejected, 1);
+    assert_eq!(engine.requests.n_preempted, 0);
+    let done = engine.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+}
+
+#[test]
+fn per_class_ledgers_split_the_global_counts() {
+    let cfg = EngineConfig {
+        max_running: 4,
+        max_queue: usize::MAX,
+        ..EngineConfig::new(Policy::Vanilla { k: 2 }, H100Presets::qwen3_30b())
+    };
+    let mut engine = Engine::new(runner(), cfg).unwrap();
+    for i in 0..3u64 {
+        engine.submit(req(i, 4, 4, Priority::Premium)).unwrap();
+    }
+    for i in 3..8u64 {
+        engine.submit(req(i, 4, 4, Priority::BestEffort)).unwrap();
+    }
+    engine.run_to_completion().unwrap();
+    let m = &engine.requests;
+    assert_eq!(m.premium.n_submitted, 3);
+    assert_eq!(m.best_effort.n_submitted, 5);
+    assert_eq!(m.premium.n_finished, 3);
+    assert_eq!(m.best_effort.n_finished, 5);
+    assert_eq!(m.premium.n_finished + m.best_effort.n_finished, m.n_finished);
+    assert!(!m.premium.queue_wait_us.is_empty());
+    assert!(!m.best_effort.queue_wait_us.is_empty());
+}

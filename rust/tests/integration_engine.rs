@@ -5,7 +5,9 @@
 
 use oea_serve::backend::cpu::CpuBackend;
 use oea_serve::config::ModelConfig;
-use oea_serve::coordinator::{Engine, EngineConfig, FinishReason, GenRequest, SubmitError};
+use oea_serve::coordinator::{
+    Engine, EngineConfig, FinishReason, GenRequest, Priority, SubmitError,
+};
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::{Policy, PolicySpec};
@@ -39,6 +41,7 @@ fn req(id: u64, len: usize, gen: usize) -> GenRequest {
         seed: id,
         policy: None,
         deadline_ms: None,
+        priority: Priority::default(),
     }
 }
 

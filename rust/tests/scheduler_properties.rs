@@ -16,7 +16,7 @@
 
 use oea_serve::backend::cpu::{CpuBackend, CpuOptions};
 use oea_serve::config::ModelConfig;
-use oea_serve::coordinator::{Engine, EngineConfig, GenRequest, SchedMode};
+use oea_serve::coordinator::{Engine, EngineConfig, GenRequest, Priority, SchedMode};
 use oea_serve::latency::H100Presets;
 use oea_serve::model::ModelRunner;
 use oea_serve::moe::policy::Policy;
@@ -117,6 +117,7 @@ fn continuous_bitwise_equals_lockstep_at_constant_b() {
                 seed: 0xBEEF + i as u64,
                 policy: None,
                 deadline_ms: None,
+                priority: Priority::default(),
             })
             .collect();
         let lock = run_all(engine(&cfg, SchedMode::Lockstep, 4), &reqs);
