@@ -76,6 +76,13 @@ def extract_micro_hotpath(doc):
         m[f"moe_apply {r['dispatch']} {r['case']} tokens/s"] = (
             "throughput", r["tokens_per_s"])
     with_min(m, "moe_apply min tokens/s", "throughput")
+    tr = doc.get("tracing")
+    if tr and tr.get("on_p50_us"):
+        # relative decode throughput with the flight recorder armed
+        # (off/on p50, ~1.0 when tracing is cheap); the rate slack makes
+        # the floor 0.95, i.e. <= ~5% tracing overhead
+        m["tracing on/off throughput"] = (
+            "rate", tr["off_p50_us"] / tr["on_p50_us"])
     return m
 
 

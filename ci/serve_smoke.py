@@ -23,19 +23,34 @@ backend and exercise the serving contract end to end:
      assert streaming token order survives recomposition, the /metrics
      scheduler block reports it (mode=continuous, recompositions > 0,
      prefill_chunks > 0), the v1 schema rejects unknown fields with a
-     400 naming the field, and the drain still exits 0.
+     400 naming the field, and the drain still exits 0;
+  7. a fourth boot with the flight recorder armed (--trace), an expert
+     cache (so page-ins happen) and a huge TPOT budget on a fast SLO
+     evaluation cadence (so the controller relaxes and logs slo-control
+     events): GET /trace must return valid Chrome trace-event JSON with
+     monotone timestamps, stack-balanced B/E pairs per tid, the full
+     queue/prefill/decode/decode_step span taxonomy, page_in and
+     slo-control instants, and decode_step args carrying the OEA
+     per-step quantities; GET /metrics?format=prometheus must return a
+     parseable text exposition (# TYPE lines, no duplicate families,
+     well-formed samples, an oea_build_info gauge and SLO summary
+     quantiles); and, when a BENCH_micro_hotpath.json artifact is
+     present, the tracing-on/off p50 ratio it records must show <= 5%
+     throughput regression.
 
 Usage: python3 ci/serve_smoke.py <path-to-oea-serve-binary>
 """
 
 import http.client
 import json
+import os
+import re
 import subprocess
 import sys
 import threading
 import time
 
-PORT = 18077  # phase 1-4; later phases use PORT+1 / PORT+2
+PORT = 18077  # phase 1-4; later phases use PORT+1 .. PORT+3
 HOST = "127.0.0.1"
 
 
@@ -109,6 +124,26 @@ def main():
     ])
     try:
         run_continuous_checks(proc)
+    except BaseException:
+        proc.kill()
+        raise
+
+    # -- phase 7: flight recorder ----------------------------------------
+    ACTIVE_PORT = PORT + 3
+    proc = subprocess.Popen([
+        binary, "serve", "--config", "smoke",
+        "--policy", "oea:k0=2", "--trace",
+        "--expert-cache", "8", "--evict", "lru",
+        # a budget no smoke run can breach + a fast evaluation cadence:
+        # the controller relaxes from tight=1.0 and every relax logs an
+        # slo-control event the tracer mirrors as an instant
+        "--slo-tpot-ms", "100000",
+        "--slo-interval-steps", "2", "--slo-min-samples", "1",
+        "--max-running", "2", "--max-queue", "8", "--http-workers", "8",
+        "--port", str(ACTIVE_PORT),
+    ])
+    try:
+        run_trace_checks(proc)
     except BaseException:
         proc.kill()
         raise
@@ -204,6 +239,160 @@ def run_continuous_checks(proc):
     rc = proc.wait(timeout=120)
     check(rc == 0, f"continuous: server exited cleanly (rc={rc})")
     print("serve-smoke: all continuous-batching checks passed")
+
+
+def assert_chrome_trace(doc):
+    """Monotone timestamps, per-tid B/E stack discipline, instants
+    flagged with s=t. Returns the event list."""
+    ev = doc["traceEvents"]
+    check(isinstance(ev, list) and len(ev) > 0,
+          f"trace: {len(ev)} events exported")
+    check(doc.get("displayTimeUnit") == "ms", "trace: displayTimeUnit set")
+    check("droppedEvents" in doc, "trace: droppedEvents counter present")
+    last_ts = -1.0
+    stacks = {}
+    bad = []
+    for e in ev:
+        if e["ts"] < last_ts:
+            bad.append(f"ts went backwards at {e['name']}")
+        last_ts = e["ts"]
+        tid, name, ph = e["tid"], e["name"], e["ph"]
+        if ph == "B":
+            stacks.setdefault(tid, []).append(name)
+        elif ph == "E":
+            top = stacks.get(tid) or []
+            if not top or top[-1] != name:
+                bad.append(f"E {name} does not close innermost span on tid {tid}")
+            else:
+                top.pop()
+        elif ph == "i":
+            if e.get("s") != "t":
+                bad.append(f"instant {name} missing s=t scope")
+        else:
+            bad.append(f"unexpected ph {ph}")
+    for tid, open_spans in stacks.items():
+        if open_spans:
+            bad.append(f"unclosed spans on tid {tid}: {open_spans}")
+    check(not bad, f"trace: monotone + balanced ({bad[:3]})")
+    return ev
+
+
+def run_trace_checks(proc):
+    wait_healthy(proc)
+    for i in range(3):
+        status, _, body = post_json("/generate", {
+            "prompt": f"flight recorder request {i}", "max_tokens": 12,
+        })
+        check(status == 200 and json.loads(body)["n_tokens"] > 0,
+              f"trace: generation {i} succeeded")
+
+    c = conn()
+    c.request("GET", "/trace")
+    r = c.getresponse()
+    doc = json.loads(r.read().decode())
+    c.close()
+    check(r.status == 200, "trace: GET /trace served")
+    ev = assert_chrome_trace(doc)
+
+    names = {e["name"] for e in ev}
+    for want in ("queue", "prefill", "decode", "decode_step", "admit"):
+        check(want in names, f"trace: span '{want}' present")
+    check("page_in" in names,
+          "trace: page_in instants from the expert cache")
+    slo_events = [e for e in ev
+                  if e["name"] == "slo-control" and e["ph"] == "i"]
+    check(len(slo_events) >= 1,
+          f"trace: {len(slo_events)} slo-control instants (controller relaxed)")
+    ds = next(e for e in ev
+              if e["name"] == "decode_step" and e["ph"] == "B")
+    for k in ("step", "live_b", "load", "piggybacked", "misses",
+              "max_rank_t", "tight", "step_us"):
+        check(k in ds["args"], f"trace: decode_step carries arg '{k}'")
+    check(ds["args"]["load"] >= ds["args"]["piggybacked"],
+          "trace: piggybacked tokens bounded by routed load")
+
+    # -- Prometheus exposition -------------------------------------------
+    c = conn()
+    c.request("GET", "/metrics?format=prometheus")
+    r = c.getresponse()
+    text = r.read().decode()
+    ctype = r.getheader("Content-Type") or ""
+    c.close()
+    check(r.status == 200 and ctype.startswith("text/plain"),
+          f"prom: exposition served as text ({ctype})")
+    types = {}
+    n_samples = 0
+    bad = []
+    sample_re = re.compile(
+        r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})?\s+(-?[0-9.eE+]+|NaN|[+-]?Inf)$")
+    for line in text.splitlines():
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in (
+                    "counter", "gauge", "summary", "histogram", "untyped"):
+                bad.append(f"malformed TYPE line: {line!r}")
+                continue
+            name, typ = parts[2], parts[3]
+            if name in types:
+                bad.append(f"duplicate family: {name}")
+            types[name] = typ
+        elif line.startswith("#") or not line.strip():
+            continue
+        else:
+            m = sample_re.match(line)
+            if m is None:
+                bad.append(f"unparseable sample: {line!r}")
+                continue
+            base = m.group(1)
+            family = re.sub(r"_(count|sum|bucket)$", "", base)
+            if base not in types and family not in types:
+                bad.append(f"sample without TYPE declaration: {base}")
+            n_samples += 1
+    check(not bad, f"prom: exposition parses cleanly ({bad[:3]})")
+    check(len(types) > 20 and n_samples > len(types),
+          f"prom: {len(types)} families, {n_samples} samples")
+    check(types.get("oea_build_info") == "gauge"
+          and 'oea_build_info{' in text and 'version="' in text,
+          "prom: build_info gauge with version label")
+    check(types.get("oea_slo_tpot_ms") == "summary"
+          and 'oea_slo_tpot_ms{quantile="0.99"}' in text,
+          "prom: SLO summaries expose quantiles")
+    for fam in ("oea_n_finished", "oea_residency_misses",
+                "oea_scheduler_decode_steps"):
+        check(fam in types, f"prom: family '{fam}' round-tripped")
+
+    # the JSON surface still works on the same server, now with build_info
+    c = conn()
+    c.request("GET", "/metrics")
+    r = c.getresponse()
+    m = json.loads(r.read().decode())
+    c.close()
+    bi = m["build_info"]
+    check(bi["tracing"] is True and bi["uptime_s"] > 0 and "version" in bi,
+          f"trace: JSON build_info well-formed (v{bi.get('version')})")
+
+    status, _, body = post_json("/shutdown", {})
+    check(status == 200 and json.loads(body)["status"] == "draining",
+          "trace: shutdown acknowledged")
+    rc = proc.wait(timeout=120)
+    check(rc == 0, f"trace: server exited cleanly (rc={rc})")
+
+    # -- tracing overhead gate (when the bench artifact exists) ----------
+    for path in ("bench-artifacts/BENCH_micro_hotpath.json",
+                 "BENCH_micro_hotpath.json"):
+        if os.path.exists(path):
+            tr = json.load(open(path)).get("tracing")
+            check(tr is not None,
+                  f"trace: {path} records the tracing overhead block")
+            ratio = tr["ratio"]
+            check(ratio <= 1.05,
+                  f"trace: armed recorder costs <= 5% decode throughput "
+                  f"(on/off p50 ratio {ratio:.3f})")
+            break
+    else:
+        print("note: no BENCH_micro_hotpath.json artifact found; "
+              "overhead gate deferred to ci/bench_check.py")
+    print("serve-smoke: all flight-recorder checks passed")
 
 
 def run_ep_checks(proc):

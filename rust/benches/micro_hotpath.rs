@@ -11,13 +11,17 @@
 //!     cargo bench --bench micro_hotpath
 //!     cargo bench --bench micro_hotpath -- --smoke   # CI tier
 
+use std::sync::Arc;
+
 use oea_serve::backend::cpu::{CpuBackend, CpuOptions, DispatchMode};
 use oea_serve::backend::Backend;
 use oea_serve::config::ModelConfig;
-use oea_serve::coordinator::sampler;
-use oea_serve::model::pad_active_list;
+use oea_serve::coordinator::{sampler, Engine, EngineConfig, GenRequest, Priority};
+use oea_serve::latency::H100Presets;
+use oea_serve::model::{pad_active_list, ModelRunner};
 use oea_serve::moe::policy::{route, Policy, RoutingInput};
 use oea_serve::moe::ScoreMatrix;
+use oea_serve::obs::Tracer;
 use oea_serve::util::bench::{bench, BenchOpts, BenchResult};
 use oea_serve::util::bpe::Tokenizer;
 use oea_serve::util::json::Json;
@@ -183,6 +187,61 @@ fn main() {
         speedups.push((case.to_string(), speedup));
     }
 
+    // ---- flight-recorder overhead: tracing off vs on -------------------
+    // The same engine decode workload with the tracer disarmed vs armed.
+    // Armed adds two ring pushes + the per-step arg sums per decode step
+    // and a handful of per-request span events; the gate (enforced by
+    // ci/serve_smoke.py off the emitted JSON) is <= 5% throughput loss.
+    println!("\nflight recorder overhead (engine decode workload):");
+    let trace_iters = if opts.smoke { 4 } else { 12 };
+    let mut trace_pair: Vec<f64> = Vec::new();
+    for (mode, tracer) in
+        [("off", None), ("on", Some(Arc::new(Tracer::new())))]
+    {
+        let ecfg = EngineConfig {
+            max_running: 4,
+            max_queue: usize::MAX,
+            tracer,
+            ..EngineConfig::new(
+                Policy::OeaSimplified { k0: 1, k: 2 },
+                H100Presets::qwen3_30b(),
+            )
+        };
+        let tiny = ModelConfig::preset("tiny").unwrap();
+        let mut engine =
+            Engine::new(ModelRunner::new(CpuBackend::synthetic(tiny, 0)), ecfg).unwrap();
+        let mut next_id = 0u64;
+        let r = bench(&format!("engine decode, tracing {mode}"), 2, trace_iters, || {
+            for _ in 0..8 {
+                let id = next_id;
+                next_id += 1;
+                engine
+                    .submit(GenRequest {
+                        id,
+                        prompt: (0..6).map(|i| 3 + ((id as usize * 31 + i * 7) % 500) as i32).collect(),
+                        max_new_tokens: 16,
+                        temperature: 0.0,
+                        top_p: 1.0,
+                        seed: id,
+                        policy: None,
+                        deadline_ms: None,
+                        priority: Priority::default(),
+                    })
+                    .unwrap();
+            }
+            std::hint::black_box(engine.run_to_completion().unwrap());
+        });
+        r.print();
+        trace_pair.push(r.p50_us);
+    }
+    let trace_ratio = trace_pair[1] / trace_pair[0];
+    println!("  tracing on/off p50 ratio: {trace_ratio:.3}x");
+    let tracing_block = Json::obj(vec![
+        ("off_p50_us", Json::num(trace_pair[0])),
+        ("on_p50_us", Json::num(trace_pair[1])),
+        ("ratio", Json::num(trace_ratio)),
+    ]);
+
     let entries: Vec<Json> = results
         .iter()
         .map(|r| {
@@ -201,6 +260,7 @@ fn main() {
             ("smoke", Json::Bool(opts.smoke)),
             ("results", Json::arr(entries)),
             ("moe_dispatch", Json::arr(moe_entries)),
+            ("tracing", tracing_block),
         ]),
     )
     .unwrap();
@@ -215,4 +275,10 @@ fn main() {
             "grouped dispatch must beat the gather path at {case}: {speedup:.2}x"
         );
     }
+    // catastrophic-regression tripwire only; the tight 5% gate lives in
+    // ci/serve_smoke.py where the run is repeatable
+    assert!(
+        trace_ratio < 1.5,
+        "armed flight recorder halved decode throughput: {trace_ratio:.2}x"
+    );
 }

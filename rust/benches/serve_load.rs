@@ -208,7 +208,7 @@ fn boot_server_ctl(
             },
             Tokenizer::byte_level(),
             "127.0.0.1:0",
-            ServeOptions { max_requests: None, http_workers: 32, ready: Some(ready_tx) },
+            ServeOptions { max_requests: None, http_workers: 32, ready: Some(ready_tx), ..Default::default() },
         )
     });
     let addr = ready_rx

@@ -43,12 +43,14 @@ use crate::moe::dispatch::{ExpertGroups, RoutedStep};
 use crate::moe::ep::{rank_of, rank_span};
 use crate::moe::policy::{self, Policy, RoutingInput};
 use crate::moe::ScoreMatrix;
+use crate::obs::{Tracer, BACKEND_TID};
 use crate::residency::{
     EvictPolicy, Prefetcher, ResidencyConfig, ResidencyCounters, ResidencySet, ResidencyStats,
     Touch,
 };
 use crate::util::arena::{with_thread_arena, Arena, ScratchPool};
 use crate::util::error::{Error, Result};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
@@ -296,6 +298,10 @@ pub struct CpuBackend {
     /// `Copy`; a plan holds vectors), `None` = no faults, zero overhead on
     /// every hot path.
     faults: Option<Mutex<FaultState>>,
+    /// Flight recorder ([`crate::obs`]): page-in / prefetch instants on
+    /// the backend track. Installed post-construction via
+    /// [`CpuBackend::install_tracer`]; `None` = no tracing code runs.
+    tracer: Option<Arc<Tracer>>,
 }
 
 /// Lock that survives a mutex poisoned by an (injected or organic) panic:
@@ -504,6 +510,7 @@ impl CpuBackend {
             pool,
             scratch: ScratchPool::new(),
             faults: None,
+            tracer: None,
         }
     }
 
@@ -526,6 +533,23 @@ impl CpuBackend {
             self.cfg.n_experts,
             self.ep_ranks,
         )));
+        // a tracer installed first still sees fault-ledger instants
+        if let (Some(fs), Some(tr)) = (&self.faults, &self.tracer) {
+            lock_clean(fs).set_tracer(Some(Arc::clone(tr)));
+        }
+    }
+
+    /// Attach the flight recorder (`--trace`): residency page-in and
+    /// prefetch instants land on the backend track, and fault-ledger
+    /// pushes mirror onto the event track. Like [`install_faults`], not
+    /// installing one keeps every hot path free of tracing code.
+    ///
+    /// [`install_faults`]: CpuBackend::install_faults
+    pub fn install_tracer(&mut self, tracer: Arc<Tracer>) {
+        if let Some(fs) = &self.faults {
+            lock_clean(fs).set_tracer(Some(Arc::clone(&tracer)));
+        }
+        self.tracer = Some(tracer);
     }
 
     pub fn dispatch_mode(&self) -> DispatchMode {
@@ -596,6 +620,16 @@ impl CpuBackend {
                         rr.drop_panel(v);
                     }
                     rr.counters.prefetches += 1;
+                    if let Some(tr) = &self.tracer {
+                        tr.instant(
+                            "prefetch",
+                            BACKEND_TID,
+                            vec![
+                                ("layer", Json::num(l as f64)),
+                                ("expert", Json::num((rr.e0 + le) as f64)),
+                            ],
+                        );
+                    }
                     rr.page_in(lw, le, d, h);
                     wave.push(le);
                 }
@@ -733,6 +767,17 @@ impl CpuBackend {
                                 let out = lock_clean(fs).pagein_plan(l, e);
                                 fault_sleep_us += out.delay_us;
                                 fault_sleep_us += out.backoff_us.iter().sum::<u64>();
+                            }
+                            if let Some(tr) = &self.tracer {
+                                tr.instant(
+                                    "page_in",
+                                    BACKEND_TID,
+                                    vec![
+                                        ("layer", Json::num(l as f64)),
+                                        ("expert", Json::num(e as f64)),
+                                        ("evicted", Json::Bool(evicted.is_some())),
+                                    ],
+                                );
                             }
                             rr.page_in(lw, le, d, h);
                         }

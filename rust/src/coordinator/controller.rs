@@ -24,8 +24,9 @@
 //! [`DegradationEvent`]s (class `slo-control`) — the PR 7 audit shape —
 //! and surfaced in the `controller` block on `GET /metrics`.
 
-use crate::faults::{DegradationEvent, FaultClass, EVENT_LOG_BOUND};
+use crate::faults::{DegradationEvent, FaultClass};
 use crate::metrics::RequestMetrics;
+use crate::obs::EventLog;
 use crate::moe::policy::{self, Policy};
 use crate::util::stats;
 
@@ -124,7 +125,7 @@ pub struct Controller {
     holds: u64,
     last_p99_ttft_ms: Option<f64>,
     last_p99_tpot_ms: Option<f64>,
-    events: Vec<DegradationEvent>,
+    events: EventLog<DegradationEvent>,
 }
 
 /// Windowed p99 of a µs sample vector, in ms, with the sample count the
@@ -146,7 +147,7 @@ impl Controller {
             holds: 0,
             last_p99_ttft_ms: None,
             last_p99_tpot_ms: None,
-            events: Vec::new(),
+            events: EventLog::default(),
         }
     }
 
@@ -167,11 +168,10 @@ impl Controller {
         policy::adapt(base, self.tight)
     }
 
-    fn push_event(&mut self, ev: DegradationEvent) {
-        if self.events.len() >= EVENT_LOG_BOUND {
-            self.events.remove(0);
-        }
-        self.events.push(ev);
+    /// The most recent ledger entry (the engine mirrors it to the
+    /// flight recorder as a `slo-control` instant after each decision).
+    pub fn last_event(&self) -> Option<&DegradationEvent> {
+        self.events.last()
     }
 
     /// Evaluate at most once per `interval_steps` decode steps: compare
@@ -224,7 +224,7 @@ impl Controller {
                 );
                 self.tight = next;
                 self.tightens += 1;
-                self.push_event(DegradationEvent {
+                self.events.push(DegradationEvent {
                     step,
                     class: FaultClass::SloControl,
                     layer: None,
@@ -253,7 +253,7 @@ impl Controller {
                 );
                 self.tight = next;
                 self.relaxes += 1;
-                self.push_event(DegradationEvent {
+                self.events.push(DegradationEvent {
                     step,
                     class: FaultClass::SloControl,
                     layer: None,
@@ -278,7 +278,7 @@ impl Controller {
             holds: self.holds,
             last_p99_ttft_ms: self.last_p99_ttft_ms,
             last_p99_tpot_ms: self.last_p99_tpot_ms,
-            events: self.events.clone(),
+            events: self.events.to_vec(),
         }
     }
 }
@@ -286,6 +286,7 @@ impl Controller {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::EVENT_LOG_BOUND;
 
     fn cfg_tpot(budget_ms: f64) -> ControllerConfig {
         ControllerConfig {

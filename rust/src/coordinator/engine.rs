@@ -12,11 +12,14 @@
 //! simulated H100 µs) is recorded per (layer, step).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::backend::Backend;
 use crate::config::ModelConfig;
-use crate::coordinator::controller::{Controller, ControllerConfig, ControllerStats};
+use crate::coordinator::controller::{
+    ControlDecision, Controller, ControllerConfig, ControllerStats,
+};
 use crate::coordinator::request::{
     FinishReason, FinishedRequest, GenRequest, Priority, SubmitError, Ticket, TokenEvent,
 };
@@ -26,6 +29,9 @@ use crate::latency::CostModel;
 use crate::metrics::{push_sample, MoeMetrics, RequestMetrics, StepRecord};
 use crate::model::{DecodeBatch, ModelRunner, StepRouting};
 use crate::moe::policy::{AdaptiveRouting, Policy};
+use crate::obs::trace::REQ_TID_BASE;
+use crate::obs::{Tracer, ENGINE_TID, EVENTS_TID};
+use crate::util::json::Json;
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
@@ -69,6 +75,13 @@ pub struct EngineConfig {
     /// controller and routing is bitwise-identical to pre-controller
     /// behavior.
     pub controller: Option<ControllerConfig>,
+    /// Flight recorder (`--trace` / `--trace-out`): request-lifecycle
+    /// spans, decode-step spans with routing args, and control-plane
+    /// instants. `None` records nothing and executes no tracing code —
+    /// the engine's output is bitwise-identical (the same inertness
+    /// contract the fault plane and controller pin, property-tested in
+    /// `tests/obs_properties.rs`).
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 impl EngineConfig {
@@ -87,8 +100,15 @@ impl EngineConfig {
             adaptive: false,
             step_budget_us: None,
             controller: None,
+            tracer: None,
         }
     }
+}
+
+/// Trace track for a request's lifecycle spans (queue/prefill/decode):
+/// each request renders as its own row in Perfetto.
+fn req_tid(id: u64) -> u64 {
+    REQ_TID_BASE + id
 }
 
 /// Engine-survival counters (the `/metrics` `health` block): each one
@@ -333,6 +353,17 @@ impl<B: Backend> Engine<B> {
             // victim -> premium backpressures like everyone else.
             if req.priority == Priority::Premium {
                 if let Some((victim, t_submit)) = self.sched.preempt_newest_best_effort() {
+                    if let Some(tr) = &self.cfg.tracer {
+                        tr.end("queue", req_tid(victim.id));
+                        tr.instant(
+                            "preempt",
+                            EVENTS_TID,
+                            vec![
+                                ("victim", Json::num(victim.id as f64)),
+                                ("by", Json::num(req.id as f64)),
+                            ],
+                        );
+                    }
                     let e2e_us = t_submit.elapsed().as_secs_f64() * 1e6;
                     self.requests.n_finished += 1;
                     self.requests.n_preempted += 1;
@@ -356,6 +387,7 @@ impl<B: Backend> Engine<B> {
                     });
                     let id = req.id;
                     self.requests.class_mut(req.priority).n_submitted += 1;
+                    self.trace_enqueue(&req);
                     let position = self.sched.enqueue(req, Instant::now());
                     return Ok(Ticket { id, position });
                 }
@@ -365,8 +397,25 @@ impl<B: Backend> Engine<B> {
         }
         let id = req.id;
         self.requests.class_mut(req.priority).n_submitted += 1;
+        self.trace_enqueue(&req);
         let position = self.sched.enqueue(req, Instant::now());
         Ok(Ticket { id, position })
+    }
+
+    /// Open the request's queue span (submit -> admission) on its own
+    /// trace track.
+    fn trace_enqueue(&self, req: &GenRequest) {
+        if let Some(tr) = &self.cfg.tracer {
+            tr.begin(
+                "queue",
+                req_tid(req.id),
+                vec![
+                    ("id", Json::num(req.id as f64)),
+                    ("priority", Json::str(req.priority.label())),
+                    ("prompt_len", Json::num(req.prompt.len() as f64)),
+                ],
+            );
+        }
     }
 
     fn reject(&mut self, priority: Priority) {
@@ -394,6 +443,19 @@ impl<B: Backend> Engine<B> {
         // bind admissions to their slots
         for adm in plan.admitted {
             let queue_wait_us = adm.t_submit.elapsed().as_secs_f64() * 1e6;
+            if let Some(tr) = &self.cfg.tracer {
+                // close the submit->admission queue span and mark the
+                // slot binding on the request's track
+                tr.end("queue", req_tid(adm.req.id));
+                tr.instant(
+                    "admit",
+                    req_tid(adm.req.id),
+                    vec![
+                        ("slot", Json::num(adm.slot as f64)),
+                        ("queue_wait_us", Json::num(queue_wait_us)),
+                    ],
+                );
+            }
             push_sample(&mut self.requests.queue_wait_us, queue_wait_us);
             push_sample(
                 &mut self.requests.class_mut(adm.req.priority).queue_wait_us,
@@ -456,6 +518,20 @@ impl<B: Backend> Engine<B> {
                 self.retire_slot(ch.slot, FinishReason::DeadlineExceeded, &mut events)?;
                 continue;
             }
+            let chunk_tid = self.cfg.tracer.as_ref().map(|tr| {
+                let rid = self.running[ch.slot].as_ref().expect("checked above").req.id;
+                tr.begin(
+                    "prefill",
+                    req_tid(rid),
+                    vec![
+                        ("slot", Json::num(ch.slot as f64)),
+                        ("start", Json::num(ch.start as f64)),
+                        ("end", Json::num(ch.end as f64)),
+                        ("last", Json::Bool(ch.last)),
+                    ],
+                );
+                req_tid(rid)
+            });
             let first_logits = match self.cfg.sched {
                 SchedMode::Lockstep => {
                     // the oracle path: whole-prompt b=1 prefill + row install
@@ -487,6 +563,11 @@ impl<B: Backend> Engine<B> {
                     }
                 }
             };
+            if let Some(tid) = chunk_tid {
+                if let Some(tr) = &self.cfg.tracer {
+                    tr.end("prefill", tid);
+                }
+            }
             if let Some(logits) = first_logits {
                 self.sample_first_token(ch.slot, &logits, &mut events)?;
             }
@@ -552,6 +633,7 @@ impl<B: Backend> Engine<B> {
                 None
             },
         };
+        let trace_t0 = self.cfg.tracer.as_ref().map(|tr| tr.now_us());
         let t0 = Instant::now();
         // Step isolation: a panic inside the model stack (an injected
         // step-panic fault, or a real kernel bug) retires this step's
@@ -609,6 +691,38 @@ impl<B: Backend> Engine<B> {
                 measured_us: ls.moe_us,
                 simulated_us: self.cfg.cost_model.step_us_ep(&ls.rank_loads()),
             });
+        }
+        if let Some(tr) = &self.cfg.tracer {
+            // one backdated span per decode step on the engine track,
+            // carrying the paper's per-step quantities summed over
+            // layers: routed load Σ|tokens(e)|, piggybacked assignments
+            // (load − T: tokens that joined an already-open expert —
+            // the batch collapse OEA exploits), residency misses,
+            // per-rank max-T, and the controller's current tightness
+            let (mut load, mut t_total, mut misses, mut max_rank_t) = (0u64, 0u64, 0u64, 0u64);
+            for ls in &out.layers {
+                load += ls.load as u64;
+                t_total += ls.t as u64;
+                misses += ls.misses as u64;
+                max_rank_t = max_rank_t.max(ls.max_rank_t() as u64);
+            }
+            let tight = self.controller.as_ref().map(|c| c.tight()).unwrap_or(1.0);
+            tr.begin_at(
+                "decode_step",
+                ENGINE_TID,
+                trace_t0.expect("set when tracer is set"),
+                vec![
+                    ("step", Json::num(self.step_no as f64)),
+                    ("live_b", Json::num(n_live as f64)),
+                    ("load", Json::num(load as f64)),
+                    ("piggybacked", Json::num(load.saturating_sub(t_total) as f64)),
+                    ("misses", Json::num(misses as f64)),
+                    ("max_rank_t", Json::num(max_rank_t as f64)),
+                    ("tight", Json::num(tight)),
+                    ("step_us", Json::num(step_us)),
+                ],
+            );
+            tr.end("decode_step", ENGINE_TID);
         }
         self.step_no += 1;
 
@@ -682,13 +796,25 @@ impl<B: Backend> Engine<B> {
                     push_sample(&mut self.requests.tpot_us, tpot);
                 }
                 events.finished.push(done);
+                if let Some(tr) = &self.cfg.tracer {
+                    tr.end("decode", req_tid(s.req.id));
+                }
                 self.sched.release(i)?;
             } else {
                 self.running[i] = Some(s);
             }
         }
         if let Some(c) = self.controller.as_mut() {
-            c.maybe_eval(self.step_no as u64, &self.requests);
+            let decision = c.maybe_eval(self.step_no as u64, &self.requests);
+            // mirror the controller's ledger entry onto the trace
+            // timeline: every tighten/relax is a slo-control instant
+            if let Some(tr) = &self.cfg.tracer {
+                if matches!(decision, Some(ControlDecision::Tighten | ControlDecision::Relax)) {
+                    if let Some(ev) = c.last_event() {
+                        tr.instant(ev.class.label(), EVENTS_TID, ev.trace_args());
+                    }
+                }
+            }
         }
         Ok(events)
     }
@@ -739,6 +865,15 @@ impl<B: Backend> Engine<B> {
         };
         if let Some(tpot) = done.tpot_us() {
             push_sample(&mut self.requests.tpot_us, tpot);
+        }
+        if let Some(tr) = &self.cfg.tracer {
+            // only sequences that reached decode opened a decode span;
+            // a mid-prefill retirement closes its (open) prefill span
+            // implicitly by never reaching this step's end — the export
+            // filters the unmatched half
+            if s.t_first_token.is_some() {
+                tr.end("decode", req_tid(s.req.id));
+            }
         }
         ev.finished.push(done);
         self.sched.release(slot)?;
@@ -810,6 +945,10 @@ impl<B: Backend> Engine<B> {
         s.pos = s.req.prompt.len();
         s.generated = vec![first];
         s.t_first_token = Some(t_first);
+        // the request's decode phase: first token sampled -> retirement
+        if let Some(tr) = &self.cfg.tracer {
+            tr.begin("decode", req_tid(s.req.id), vec![("slot", Json::num(slot as f64))]);
+        }
         Ok(())
     }
 
@@ -820,6 +959,10 @@ impl<B: Backend> Engine<B> {
     /// the retired request's record, or `None` if `id` is not held.
     pub fn cancel(&mut self, id: u64) -> Option<FinishedRequest> {
         if let Some((req, t_submit)) = self.sched.remove_queued(id) {
+            if let Some(tr) = &self.cfg.tracer {
+                tr.end("queue", req_tid(id));
+                tr.instant("cancel", EVENTS_TID, vec![("id", Json::num(id as f64))]);
+            }
             let e2e_us = t_submit.elapsed().as_secs_f64() * 1e6;
             self.requests.n_finished += 1;
             self.requests.n_cancelled += 1;
@@ -846,6 +989,12 @@ impl<B: Backend> Engine<B> {
         let slot = (0..self.running.len())
             .find(|&i| self.running[i].as_ref().is_some_and(|s| s.req.id == id))?;
         let s = self.running[slot].take().expect("found above");
+        if let Some(tr) = &self.cfg.tracer {
+            if s.t_first_token.is_some() {
+                tr.end("decode", req_tid(id));
+            }
+            tr.instant("cancel", EVENTS_TID, vec![("id", Json::num(id as f64))]);
+        }
         self.sched.release(slot).ok();
         let e2e_us = s.t_submit.elapsed().as_secs_f64() * 1e6;
         self.requests.n_finished += 1;

@@ -24,8 +24,11 @@
 //! heard of faults (property-tested in `tests/chaos_properties.rs`).
 
 use std::fmt;
+use std::sync::Arc;
 
+use crate::obs::{EventLog, Tracer, EVENTS_TID};
 use crate::util::error::{Error, Result};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Bernoulli page-in failure: each panel page-in attempt fails with
@@ -386,6 +389,25 @@ pub struct DegradationEvent {
     pub detail: String,
 }
 
+impl DegradationEvent {
+    /// Args for the tracer's instant-event rendering of this ledger
+    /// entry (the `/trace` view of the event bus).
+    pub fn trace_args(&self) -> Vec<(&'static str, Json)> {
+        let mut args = vec![("step", Json::num(self.step as f64))];
+        if let Some(l) = self.layer {
+            args.push(("layer", Json::num(l as f64)));
+        }
+        if let Some(e) = self.expert {
+            args.push(("expert", Json::num(e as f64)));
+        }
+        if let Some(r) = self.rank {
+            args.push(("rank", Json::num(r as f64)));
+        }
+        args.push(("detail", Json::str(&self.detail)));
+        args
+    }
+}
+
 /// Injected-fault and degradation counters (cumulative).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FaultCounters {
@@ -423,8 +445,9 @@ pub struct FaultCounters {
     pub rank_up_recovered: u64,
 }
 
-/// Bound on the degradation event log: older events drop first.
-pub const EVENT_LOG_BOUND: usize = 128;
+// The bounded drop-oldest ledger lives in [`crate::obs`] now; re-export
+// the bound so existing callers (controller, tests) keep compiling.
+pub use crate::obs::EVENT_LOG_BOUND;
 
 /// Point-in-time snapshot for `/metrics` and benches.
 #[derive(Debug, Clone)]
@@ -468,7 +491,9 @@ pub struct FaultState {
     poison_tripped: Vec<bool>,
     panic_fired: bool,
     counters: FaultCounters,
-    events: Vec<DegradationEvent>,
+    events: EventLog<DegradationEvent>,
+    /// mirror ledger pushes as `/trace` instants when tracing is on
+    tracer: Option<Arc<Tracer>>,
 }
 
 /// The page-in retry schedule [`FaultState::pagein_plan`] hands back:
@@ -506,8 +531,15 @@ impl FaultState {
             poison_tripped: vec![false; n_poison],
             panic_fired: false,
             counters: FaultCounters::default(),
-            events: Vec::new(),
+            events: EventLog::default(),
+            tracer: None,
         }
+    }
+
+    /// Attach (or detach) the flight recorder; subsequent ledger pushes
+    /// also land as instant events on the trace timeline.
+    pub fn set_tracer(&mut self, tracer: Option<Arc<Tracer>>) {
+        self.tracer = tracer;
     }
 
     pub fn plan(&self) -> &FaultPlan {
@@ -519,8 +551,8 @@ impl FaultState {
     }
 
     fn push_event(&mut self, ev: DegradationEvent) {
-        if self.events.len() >= EVENT_LOG_BOUND {
-            self.events.remove(0);
+        if let Some(t) = &self.tracer {
+            t.instant(ev.class.label(), EVENTS_TID, ev.trace_args());
         }
         self.events.push(ev);
     }
@@ -893,7 +925,7 @@ impl FaultState {
             counters: self.counters.clone(),
             unhealthy_experts: self.unhealthy_per_layer.iter().sum(),
             half_open_experts: self.n_half_open,
-            events: self.events.clone(),
+            events: self.events.to_vec(),
         }
     }
 }

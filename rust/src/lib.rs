@@ -32,6 +32,7 @@ pub mod latency;
 pub mod metrics;
 pub mod model;
 pub mod moe;
+pub mod obs;
 pub mod residency;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

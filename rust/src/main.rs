@@ -82,6 +82,11 @@ fn spec() -> Spec {
             ("port", true, "serve: TCP port (default 8080)"),
             ("max-requests", true, "serve: drain and exit after N generations \
                               (default: run until POST /shutdown)"),
+            ("trace", false, "serve: arm the flight recorder — span/event timelines \
+                              for every request, served as Chrome trace JSON on \
+                              GET /trace (load in Perfetto / chrome://tracing)"),
+            ("trace-out", true, "serve: write the Chrome trace JSON to FILE after the \
+                              graceful drain (implies --trace)"),
             ("no-mask-padding", false, "disable the padding-token routing fix (paper §6)"),
             ("faults", true, "cpu: deterministic fault-injection plan, e.g. \
                               'pagein-fail:rate=0.05,seed=7;rank-stall:rank=2,\
@@ -184,6 +189,18 @@ fn controller_config(args: &Args) -> Result<Option<ControllerConfig>> {
         cc.headroom = v;
     }
     Ok(Some(cc))
+}
+
+/// `--trace` / `--trace-out` -> one shared flight recorder for the
+/// engine, the backend, and the `/trace` endpoint. `None` keeps the
+/// tracing hot paths compiled out of the run entirely (the disabled
+/// path is bitwise-identical to a build without tracing).
+fn tracer_from_args(args: &Args) -> Option<std::sync::Arc<oea_serve::obs::Tracer>> {
+    if args.flag("trace") || args.str_opt("trace-out").is_some() {
+        Some(std::sync::Arc::new(oea_serve::obs::Tracer::new()))
+    } else {
+        None
+    }
 }
 
 fn engine_config(args: &Args, c: &ModelConfig) -> Result<EngineConfig> {
@@ -389,11 +406,19 @@ fn cpu_runner(args: &Args) -> Result<ModelRunner<CpuBackend>> {
 fn run_cpu(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("serve") => {
-            let runner = cpu_runner(args)?;
+            let mut runner = cpu_runner(args)?;
             let cfg_name = runner.cfg().name.clone();
             let tok = cpu_tokenizer(args, &cfg_name);
-            let ecfg = engine_config(args, runner.cfg())?;
-            let (addr, opts) = serve_preamble(args, runner.cfg(), "cpu")?;
+            let tracer = tracer_from_args(args);
+            if let Some(tr) = &tracer {
+                runner.backend.install_tracer(std::sync::Arc::clone(tr));
+                println!("flight recorder armed (GET /trace)");
+            }
+            let mut ecfg = engine_config(args, runner.cfg())?;
+            ecfg.tracer = tracer.clone();
+            let (addr, mut opts) = serve_preamble(args, runner.cfg(), "cpu")?;
+            opts.tracer = tracer;
+            opts.trace_out = args.str_opt("trace-out").map(String::from);
             server::serve(move || Engine::new(runner, ecfg), tok, &addr, opts)
         }
         Some("generate") => {
@@ -429,12 +454,16 @@ fn run_pjrt(args: &Args) -> Result<()> {
             // engine thread makes one.
             let manifest = oea_serve::config::Manifest::load(&root, &cfg_name)?;
             let tok = Tokenizer::load(&manifest.dir.join(&manifest.vocab_file))?;
-            let (addr, opts) = serve_preamble(args, &manifest.config, "pjrt")?;
+            let tracer = tracer_from_args(args);
+            let (addr, mut opts) = serve_preamble(args, &manifest.config, "pjrt")?;
+            opts.tracer = tracer.clone();
+            opts.trace_out = args.str_opt("trace-out").map(String::from);
             let args2 = args.clone();
             server::serve(
                 move || {
                     let runner = ModelRunner::new(PjrtBackend::load(&root, &cfg_name)?);
-                    let ecfg = engine_config(&args2, runner.cfg())?;
+                    let mut ecfg = engine_config(&args2, runner.cfg())?;
+                    ecfg.tracer = tracer;
                     Engine::new(runner, ecfg)
                 },
                 tok,

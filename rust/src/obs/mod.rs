@@ -1,0 +1,133 @@
+//! Observability plane: flight-recorder tracing + metrics exposition.
+//!
+//! Three pieces, all dependency-free and offline:
+//!
+//! - [`Tracer`] / [`SpanGuard`] ([`trace`]): a lock-cheap bounded flight
+//!   recorder. Spans and instant events land in a drop-oldest ring with a
+//!   hard entry *and* byte cap, timestamped in microseconds off one
+//!   monotone clock, and export as Chrome trace-event JSON loadable in
+//!   Perfetto / `chrome://tracing` (`GET /trace`, `--trace-out`). The
+//!   disabled path is `Option<Arc<Tracer>> = None` everywhere — no ring,
+//!   no clock reads, bitwise-identical engine output (property-tested in
+//!   `tests/obs_properties.rs`).
+//! - [`EventLog`]: the one bounded drop-oldest event ledger. Both the
+//!   fault plane (`faults::FaultState`) and the SLO controller
+//!   (`coordinator::controller`) feed their `DegradationEvent`s through
+//!   it; the tracer renders the same events as instants so `/trace` and
+//!   `/metrics` tell one story.
+//! - [`prometheus_text`] ([`prom`]): renders the engine's metrics JSON
+//!   (every block: slo, classes, scheduler, ep, residency, health,
+//!   faults, controller, build_info) as Prometheus text exposition for
+//!   `GET /metrics?format=prometheus`.
+
+pub mod prom;
+pub mod trace;
+
+pub use prom::prometheus_text;
+pub use trace::{SpanGuard, Tracer, BACKEND_TID, ENGINE_TID, EVENTS_TID};
+
+/// Default bound for [`EventLog`]: large enough to audit a degradation
+/// cascade, small enough to never matter for memory.
+pub const EVENT_LOG_BOUND: usize = 128;
+
+/// A bounded, drop-oldest event ledger.
+///
+/// This is the single implementation behind the fault plane's
+/// `DegradationEvent` log and the SLO controller's decision log (both
+/// previously hand-rolled the same `push_event` + bound). Pushing past
+/// the bound silently drops the oldest entry; [`EventLog::dropped`]
+/// counts how many were lost so exports can say "…and N earlier events".
+#[derive(Debug, Clone)]
+pub struct EventLog<T> {
+    items: std::collections::VecDeque<T>,
+    bound: usize,
+    dropped: u64,
+}
+
+impl<T> Default for EventLog<T> {
+    fn default() -> Self {
+        Self::new(EVENT_LOG_BOUND)
+    }
+}
+
+impl<T> EventLog<T> {
+    pub fn new(bound: usize) -> Self {
+        assert!(bound >= 1, "event log bound must be >= 1");
+        EventLog { items: std::collections::VecDeque::with_capacity(bound.min(64)), bound, dropped: 0 }
+    }
+
+    /// Append, evicting the oldest entry when full.
+    pub fn push(&mut self, item: T) {
+        if self.items.len() >= self.bound {
+            self.items.pop_front();
+            self.dropped += 1;
+        }
+        self.items.push_back(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// How many entries were evicted to stay under the bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn bound(&self) -> usize {
+        self.bound
+    }
+
+    pub fn iter(&self) -> impl DoubleEndedIterator<Item = &T> + ExactSizeIterator {
+        self.items.iter()
+    }
+
+    pub fn last(&self) -> Option<&T> {
+        self.items.back()
+    }
+}
+
+impl<T: Clone> EventLog<T> {
+    /// Snapshot oldest-first (the shape the metrics serializers expect).
+    pub fn to_vec(&self) -> Vec<T> {
+        self.items.iter().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_log_drops_oldest_at_bound() {
+        let mut log = EventLog::new(3);
+        for i in 0..10 {
+            log.push(i);
+        }
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.to_vec(), vec![7, 8, 9]);
+        assert_eq!(log.dropped(), 7);
+        assert_eq!(log.last(), Some(&9));
+    }
+
+    #[test]
+    fn event_log_default_bound_matches_constant() {
+        let mut log: EventLog<u32> = EventLog::default();
+        assert_eq!(log.bound(), EVENT_LOG_BOUND);
+        for i in 0..(EVENT_LOG_BOUND as u32 * 2) {
+            log.push(i);
+        }
+        assert_eq!(log.len(), EVENT_LOG_BOUND);
+        assert_eq!(*log.iter().next().unwrap(), EVENT_LOG_BOUND as u32);
+    }
+
+    #[test]
+    #[should_panic(expected = "bound must be >= 1")]
+    fn event_log_rejects_zero_bound() {
+        let _ = EventLog::<u32>::new(0);
+    }
+}

@@ -1,0 +1,370 @@
+//! Prometheus text-exposition renderer for the metrics JSON.
+//!
+//! `GET /metrics` defaults to the JSON document; `?format=prometheus`
+//! (or `Accept: text/plain`) routes through [`prometheus_text`], which
+//! walks that same JSON generically so every block — top-level, slo,
+//! classes, scheduler, ep, residency, health, faults, controller,
+//! build_info, and anything a future PR adds — round-trips into
+//! well-formed exposition text without a per-field mapping to maintain:
+//!
+//! - numbers → `oea_<block>_<field>` gauge, or counter when the field
+//!   name is a known monotone ledger (`n_*`, `steps`, `hits`, …)
+//! - `{p50,p95,p99,n}` percentile objects → a summary with
+//!   `quantile` labels + `_count`
+//! - bools → 0/1 gauges
+//! - strings → `_info` gauges carrying the value as a label
+//!   (`oea_policy_info{policy="oea:k0=4,k=8"} 1`)
+//! - arrays of numbers → one series per element, labeled `index`
+//! - arrays of objects → labeled by their identity key
+//!   (`expert`/`rank`/`layer`), one metric per numeric field
+//! - event ledgers (objects carrying a `detail` string) are skipped —
+//!   they are timeline data and export via `/trace` instead
+//!
+//! `# TYPE` is emitted exactly once per metric name and all samples of
+//! a name are contiguous, as the exposition format requires.
+
+use std::collections::BTreeSet;
+
+use crate::util::json::Json;
+
+/// Monotone-ledger field names rendered as `counter` (everything else
+/// numeric is a `gauge`). `n_*` is handled by prefix.
+const COUNTER_KEYS: &[&str] = &[
+    "steps",
+    "decode_steps",
+    "admitted",
+    "recompositions",
+    "prefill_chunks",
+    "prefill_tokens",
+    "generated_tokens",
+    "evals",
+    "tightens",
+    "relaxes",
+    "holds",
+    "hits",
+    "misses",
+    "evictions",
+    "bytes_paged",
+    "prefetches",
+    "panics_caught",
+    "nonfinite_rows",
+    "deadline_expired",
+    "wedged_steps",
+    "degraded_tokens",
+    "routed_tokens_masked",
+    "pagein_failures",
+    "pagein_retries",
+    "pagein_gave_up",
+    "pagein_delays",
+    "injected_sleep_us",
+    "stalls",
+    "stall_us_total",
+    "poisoned_outputs",
+    "panics",
+    "tripped_experts",
+    "probation_readmitted",
+    "probation_retrips",
+    "rank_up_recovered",
+    "events_dropped",
+];
+
+fn is_counter(key: &str) -> bool {
+    key.starts_with("n_") || COUNTER_KEYS.contains(&key)
+}
+
+/// `{p50,p95,p99,n}` — the shape `metrics::percentiles_ms` emits.
+fn is_percentiles(v: &Json) -> bool {
+    matches!(v, Json::Obj(m)
+        if ["p50", "p95", "p99", "n"].iter().all(|k| matches!(m.get(*k), Some(Json::Num(_))))
+            && m.len() == 4)
+}
+
+/// Identity key labeling an array-of-objects series.
+fn label_key(m: &std::collections::BTreeMap<String, Json>) -> Option<&'static str> {
+    ["expert", "rank", "layer"].into_iter().find(|k| matches!(m.get(*k), Some(Json::Num(_))))
+}
+
+fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, c) in name.chars().enumerate() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            if i == 0 && c.is_ascii_digit() {
+                out.push('_');
+            }
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn fmt_num(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".to_string()
+    } else if x.is_infinite() {
+        // the exposition format spells infinities +Inf / -Inf
+        if x > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+struct Out {
+    text: String,
+    typed: BTreeSet<String>,
+}
+
+impl Out {
+    /// Emit the `# TYPE` header once per metric name. Returns false (and
+    /// emits nothing) if the name was already typed — callers skip the
+    /// sample rather than violate the exposition grammar.
+    fn typ(&mut self, name: &str, ty: &str) -> bool {
+        if !self.typed.insert(name.to_string()) {
+            return false;
+        }
+        self.text.push_str(&format!("# TYPE {name} {ty}\n"));
+        true
+    }
+
+    fn sample(&mut self, name: &str, labels: &str, value: f64) {
+        self.text.push_str(&format!("{name}{labels} {}\n", fmt_num(value)));
+    }
+}
+
+/// Render a metrics JSON document as Prometheus text exposition,
+/// namespaced under `oea_`.
+pub fn prometheus_text(metrics: &Json) -> String {
+    let mut out = Out { text: String::new(), typed: BTreeSet::new() };
+    emit_value(&mut out, "oea", metrics);
+    out.text
+}
+
+fn emit_value(out: &mut Out, prefix: &str, v: &Json) {
+    match v {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let name = format!("{prefix}_{}", sanitize(k));
+                match v {
+                    Json::Num(n) => {
+                        let ty = if is_counter(k) { "counter" } else { "gauge" };
+                        if out.typ(&name, ty) {
+                            out.sample(&name, "", *n);
+                        }
+                    }
+                    Json::Bool(b) => {
+                        if out.typ(&name, "gauge") {
+                            out.sample(&name, "", if *b { 1.0 } else { 0.0 });
+                        }
+                    }
+                    Json::Str(s) => {
+                        let iname = format!("{name}_info");
+                        if out.typ(&iname, "gauge") {
+                            let lbl = format!("{{{}=\"{}\"}}", sanitize(k), escape_label(s));
+                            out.sample(&iname, &lbl, 1.0);
+                        }
+                    }
+                    Json::Null => {}
+                    _ if is_percentiles(v) => emit_percentiles(out, &name, v),
+                    Json::Obj(inner) if k == "build_info" => emit_build_info(out, &name, inner),
+                    Json::Obj(_) => emit_value(out, &name, v),
+                    Json::Arr(items) => emit_array(out, &name, items),
+                }
+            }
+        }
+        Json::Arr(items) => emit_array(out, prefix, items),
+        _ => {}
+    }
+}
+
+fn emit_percentiles(out: &mut Out, name: &str, v: &Json) {
+    if !out.typ(name, "summary") {
+        return;
+    }
+    for (q, key) in [("0.5", "p50"), ("0.95", "p95"), ("0.99", "p99")] {
+        if let Some(Json::Num(x)) = v.get_opt(key) {
+            out.sample(name, &format!("{{quantile=\"{q}\"}}"), *x);
+        }
+    }
+    let count = format!("{name}_count");
+    if let Some(Json::Num(n)) = v.get_opt("n") {
+        if out.typ(&count, "counter") {
+            out.sample(&count, "", *n);
+        }
+    }
+}
+
+/// `build_info` gets the idiomatic Prometheus treatment: one `*_info`
+/// gauge whose string fields become labels, numeric fields as plain
+/// gauges beside it.
+fn emit_build_info(out: &mut Out, name: &str, m: &std::collections::BTreeMap<String, Json>) {
+    let labels: Vec<String> = m
+        .iter()
+        .filter_map(|(k, v)| match v {
+            Json::Str(s) => Some(format!("{}=\"{}\"", sanitize(k), escape_label(s))),
+            _ => None,
+        })
+        .collect();
+    if out.typ(name, "gauge") {
+        let lbl = if labels.is_empty() { String::new() } else { format!("{{{}}}", labels.join(",")) };
+        out.sample(name, &lbl, 1.0);
+    }
+    for (k, v) in m {
+        if let Json::Num(n) = v {
+            let fname = format!("{name}_{}", sanitize(k));
+            let ty = if is_counter(k) { "counter" } else { "gauge" };
+            if out.typ(&fname, ty) {
+                out.sample(&fname, "", *n);
+            }
+        }
+    }
+}
+
+fn emit_array(out: &mut Out, name: &str, items: &[Json]) {
+    if items.is_empty() {
+        return;
+    }
+    match &items[0] {
+        Json::Num(_) => {
+            if !out.typ(name, "gauge") {
+                return;
+            }
+            for (i, v) in items.iter().enumerate() {
+                if let Json::Num(n) = v {
+                    out.sample(name, &format!("{{index=\"{i}\"}}"), *n);
+                }
+            }
+        }
+        Json::Obj(first) => {
+            // event ledgers export via /trace, not as metrics
+            if first.contains_key("detail") {
+                return;
+            }
+            let label = match label_key(first) {
+                Some(l) => l,
+                None => return,
+            };
+            // fields outer, elements inner: all samples of one metric
+            // name must be contiguous in the exposition text
+            let fields: Vec<&String> = first
+                .iter()
+                .filter(|(k, v)| k.as_str() != label && matches!(v, Json::Num(_)))
+                .map(|(k, _)| k)
+                .collect();
+            for field in fields {
+                let fname = format!("{name}_{}", sanitize(field));
+                let ty = if is_counter(field) { "counter" } else { "gauge" };
+                if !out.typ(&fname, ty) {
+                    continue;
+                }
+                for item in items {
+                    let (Some(Json::Num(id)), Some(Json::Num(val))) =
+                        (item.get_opt(label), item.get_opt(field))
+                    else {
+                        continue;
+                    };
+                    out.sample(&fname, &format!("{{{label}=\"{}\"}}", fmt_num(*id)), *val);
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn render(src: &str) -> String {
+        prometheus_text(&Json::parse(src).unwrap())
+    }
+
+    #[test]
+    fn numbers_and_counters_typed() {
+        let text = render(r#"{"n_finished": 3, "avg_active_experts": 5.5, "scheduler": {"steps": 9, "live_b": 4}}"#);
+        assert!(text.contains("# TYPE oea_n_finished counter\noea_n_finished 3\n"));
+        assert!(text.contains("# TYPE oea_avg_active_experts gauge\noea_avg_active_experts 5.5\n"));
+        assert!(text.contains("# TYPE oea_scheduler_steps counter\noea_scheduler_steps 9\n"));
+        assert!(text.contains("# TYPE oea_scheduler_live_b gauge\n"));
+    }
+
+    #[test]
+    fn percentile_blocks_become_summaries() {
+        let text = render(r#"{"slo": {"ttft_ms": {"p50": 1.0, "p95": 2.0, "p99": 3.5, "n": 7}}}"#);
+        assert!(text.contains("# TYPE oea_slo_ttft_ms summary\n"));
+        assert!(text.contains("oea_slo_ttft_ms{quantile=\"0.5\"} 1\n"));
+        assert!(text.contains("oea_slo_ttft_ms{quantile=\"0.99\"} 3.5\n"));
+        assert!(text.contains("# TYPE oea_slo_ttft_ms_count counter\noea_slo_ttft_ms_count 7\n"));
+    }
+
+    #[test]
+    fn strings_become_info_gauges() {
+        let text = render(r#"{"policy": "oea:k0=4,k=8"}"#);
+        assert!(text.contains("# TYPE oea_policy_info gauge\n"));
+        assert!(text.contains("oea_policy_info{policy=\"oea:k0=4,k=8\"} 1\n"));
+    }
+
+    #[test]
+    fn arrays_are_labeled_series() {
+        let text = render(
+            r#"{"ep": {"rank_load": [4, 6]},
+                "expert_load": {"per_expert": [{"expert": 0, "tokens": 10, "share": 0.4},
+                                               {"expert": 1, "tokens": 15, "share": 0.6}]}}"#,
+        );
+        assert!(text.contains("oea_ep_rank_load{index=\"0\"} 4\n"));
+        assert!(text.contains("oea_ep_rank_load{index=\"1\"} 6\n"));
+        assert!(text.contains("oea_expert_load_per_expert_tokens{expert=\"1\"} 15\n"));
+        assert!(text.contains("oea_expert_load_per_expert_share{expert=\"0\"} 0.4\n"));
+    }
+
+    #[test]
+    fn event_ledgers_are_skipped() {
+        let text = render(
+            r#"{"controller": {"tight": 0.8,
+                 "events": [{"step": 4, "class": "slo-control", "detail": "tighten"}]}}"#,
+        );
+        assert!(text.contains("oea_controller_tight 0.8\n"));
+        assert!(!text.contains("detail"), "ledger leaked: {text}");
+        assert!(!text.contains("events"), "ledger leaked: {text}");
+    }
+
+    #[test]
+    fn build_info_is_one_labeled_gauge() {
+        let text = render(
+            r#"{"build_info": {"version": "0.1.0", "backend": "cpu", "features": "default",
+                               "uptime_s": 12.5, "steps": 42}}"#,
+        );
+        assert!(text.contains(
+            "oea_build_info{backend=\"cpu\",features=\"default\",version=\"0.1.0\"} 1\n"
+        ));
+        assert!(text.contains("# TYPE oea_build_info_uptime_s gauge\noea_build_info_uptime_s 12.5\n"));
+        assert!(text.contains("# TYPE oea_build_info_steps counter\noea_build_info_steps 42\n"));
+    }
+
+    #[test]
+    fn no_duplicate_type_lines() {
+        let text = render(
+            r#"{"a": {"hits": 1}, "b": {"hits": 2}, "slo": {"e2e_ms": {"p50":1,"p95":2,"p99":3,"n":4}}}"#,
+        );
+        let mut names = BTreeSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let name = rest.split_whitespace().next().unwrap();
+                assert!(names.insert(name.to_string()), "duplicate TYPE for {name}");
+            }
+        }
+        assert!(names.contains("oea_a_hits") && names.contains("oea_b_hits"));
+    }
+
+    #[test]
+    fn label_escaping() {
+        let text = render(r#"{"plan": "a\"b\\c"}"#);
+        assert!(text.contains(r#"oea_plan_info{plan="a\"b\\c"} 1"#));
+    }
+}

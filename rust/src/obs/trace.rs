@@ -1,0 +1,364 @@
+//! The flight recorder: bounded span/event ring + Chrome trace export.
+//!
+//! One [`Tracer`] is shared (behind `Arc`) by the engine thread, the HTTP
+//! workers, and the CPU backend. Recording is a single short mutex
+//! critical section per event — timestamps are drawn inside the lock so
+//! ring order is timestamp order for plain `begin`/`end`/`instant`
+//! (only `begin_at`, used to backdate a span around already-measured
+//! work, can land out of order; export sorts). The ring enforces a hard
+//! entry cap AND byte cap by dropping the oldest entries, so a tracer
+//! left on under production traffic holds the last N microseconds of
+//! history instead of growing without bound — a flight recorder, not a
+//! log.
+//!
+//! Export is the Chrome trace-event JSON format: `B`/`E` duration pairs
+//! matched per `tid`, `i` instants, microsecond `ts`. Spans whose
+//! opening half was evicted (or that are still open) are filtered out at
+//! export time so the emitted JSON always has balanced, nested pairs.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Track ids: Chrome groups B/E pairs per (pid, tid). Request-lifecycle
+/// spans (queue, prefill) use `REQ_TID_BASE + request id` so each request
+/// renders as its own row; these three host everything else.
+pub const ENGINE_TID: u64 = 0;
+pub const BACKEND_TID: u64 = 1;
+pub const EVENTS_TID: u64 = 2;
+/// Offset request-id tracks clear of the fixed tracks above.
+pub const REQ_TID_BASE: u64 = 10;
+
+/// Default caps: plenty for minutes of decode traffic, bounded at a few
+/// MiB of resident history.
+pub const DEFAULT_MAX_ENTRIES: usize = 65_536;
+pub const DEFAULT_MAX_BYTES: usize = 8 << 20;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Ph {
+    Begin,
+    End,
+    Instant,
+}
+
+impl Ph {
+    fn chrome(self) -> &'static str {
+        match self {
+            Ph::Begin => "B",
+            Ph::End => "E",
+            Ph::Instant => "i",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    name: &'static str,
+    ph: Ph,
+    ts_us: u64,
+    tid: u64,
+    args: Vec<(&'static str, Json)>,
+    bytes: usize,
+}
+
+/// Rough serialized size of one entry — what the byte cap meters.
+fn entry_bytes(name: &str, args: &[(&'static str, Json)]) -> usize {
+    let mut b = 48 + name.len();
+    for (k, v) in args {
+        b += k.len()
+            + 4
+            + match v {
+                Json::Num(_) => 12,
+                Json::Bool(_) => 5,
+                Json::Null => 4,
+                Json::Str(s) => s.len() + 2,
+                other => other.write().len(),
+            };
+    }
+    b
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    items: VecDeque<Entry>,
+    bytes: usize,
+    dropped: u64,
+}
+
+/// Thread-safe bounded flight recorder. Cheap enough to leave on: one
+/// mutex lock and a couple of small allocations per recorded event, and
+/// the fully-disabled path is simply not having a `Tracer` at all
+/// (`Option<Arc<Tracer>> = None`), which executes zero instructions.
+#[derive(Debug)]
+pub struct Tracer {
+    t0: Instant,
+    max_entries: usize,
+    max_bytes: usize,
+    ring: Mutex<Ring>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::with_caps(DEFAULT_MAX_ENTRIES, DEFAULT_MAX_BYTES)
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer::default()
+    }
+
+    pub fn with_caps(max_entries: usize, max_bytes: usize) -> Tracer {
+        assert!(max_entries >= 1 && max_bytes >= 1, "tracer caps must be >= 1");
+        Tracer { t0: Instant::now(), max_entries, max_bytes, ring: Mutex::new(Ring::default()) }
+    }
+
+    /// Microseconds since the tracer was created (the trace's epoch).
+    pub fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    fn push(&self, name: &'static str, ph: Ph, ts_us: Option<u64>, tid: u64, args: Vec<(&'static str, Json)>) {
+        let bytes = entry_bytes(name, &args);
+        let mut ring = match self.ring.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if bytes > self.max_bytes {
+            ring.dropped += 1;
+            return;
+        }
+        // draw ts inside the lock so ring order == timestamp order
+        let ts_us = ts_us.unwrap_or_else(|| self.now_us());
+        while !ring.items.is_empty()
+            && (ring.items.len() >= self.max_entries || ring.bytes + bytes > self.max_bytes)
+        {
+            let old = ring.items.pop_front().expect("non-empty ring");
+            ring.bytes -= old.bytes;
+            ring.dropped += 1;
+        }
+        ring.bytes += bytes;
+        ring.items.push_back(Entry { name, ph, ts_us, tid, args, bytes });
+    }
+
+    /// Open a span on track `tid`.
+    pub fn begin(&self, name: &'static str, tid: u64, args: Vec<(&'static str, Json)>) {
+        self.push(name, Ph::Begin, None, tid, args);
+    }
+
+    /// Open a span backdated to `ts_us` (from [`Tracer::now_us`]) — for
+    /// spans whose duration was measured before the args were known.
+    pub fn begin_at(&self, name: &'static str, tid: u64, ts_us: u64, args: Vec<(&'static str, Json)>) {
+        self.push(name, Ph::Begin, Some(ts_us), tid, args);
+    }
+
+    /// Close the innermost open span named `name` on track `tid`.
+    pub fn end(&self, name: &'static str, tid: u64) {
+        self.push(name, Ph::End, None, tid, Vec::new());
+    }
+
+    /// Record a zero-duration instant event.
+    pub fn instant(&self, name: &'static str, tid: u64, args: Vec<(&'static str, Json)>) {
+        self.push(name, Ph::Instant, None, tid, args);
+    }
+
+    /// RAII span: `B` now, `E` when the guard drops.
+    pub fn span(self: &Arc<Self>, name: &'static str, tid: u64, args: Vec<(&'static str, Json)>) -> SpanGuard {
+        self.begin(name, tid, args);
+        SpanGuard { tracer: Arc::clone(self), name, tid }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().items.is_empty()
+    }
+
+    /// Estimated bytes currently held by the ring.
+    pub fn bytes(&self) -> usize {
+        self.lock().bytes
+    }
+
+    /// Events evicted (or refused) to honor the caps.
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Ring> {
+        match self.ring.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Export as Chrome trace-event JSON (`{"traceEvents": [...]}`),
+    /// loadable in Perfetto / `chrome://tracing`. Events are sorted by
+    /// timestamp and unbalanced `B`/`E` halves (evicted or still-open
+    /// spans) are dropped so every emitted pair matches.
+    pub fn chrome_trace(&self) -> Json {
+        let (entries, dropped) = {
+            let ring = self.lock();
+            (ring.items.iter().cloned().collect::<Vec<_>>(), ring.dropped)
+        };
+        let mut order: Vec<usize> = (0..entries.len()).collect();
+        order.sort_by_key(|&i| entries[i].ts_us);
+        // match B/E pairs per tid; unmatched halves are filtered out
+        let mut keep = vec![false; entries.len()];
+        let mut stacks: HashMap<u64, Vec<usize>> = HashMap::new();
+        for &i in &order {
+            let e = &entries[i];
+            match e.ph {
+                Ph::Instant => keep[i] = true,
+                Ph::Begin => stacks.entry(e.tid).or_default().push(i),
+                Ph::End => {
+                    if let Some(stack) = stacks.get_mut(&e.tid) {
+                        if let Some(&j) = stack.last() {
+                            if entries[j].name == e.name {
+                                stack.pop();
+                                keep[i] = true;
+                                keep[j] = true;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let events: Vec<Json> = order
+            .iter()
+            .filter(|&&i| keep[i])
+            .map(|&i| {
+                let e = &entries[i];
+                let mut fields = vec![
+                    ("name", Json::str(e.name)),
+                    ("cat", Json::str("oea")),
+                    ("ph", Json::str(e.ph.chrome())),
+                    ("ts", Json::num(e.ts_us as f64)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(e.tid as f64)),
+                ];
+                if e.ph == Ph::Instant {
+                    fields.push(("s", Json::str("t")));
+                }
+                if !e.args.is_empty() {
+                    fields.push((
+                        "args",
+                        Json::obj(e.args.iter().map(|(k, v)| (*k, v.clone())).collect()),
+                    ));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            ("droppedEvents", Json::num(dropped as f64)),
+        ])
+    }
+}
+
+/// Closes its span when dropped (panic-safe: an unwinding scope still
+/// emits its `E`, keeping exports balanced).
+pub struct SpanGuard {
+    tracer: Arc<Tracer>,
+    name: &'static str,
+    tid: u64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        self.tracer.end(self.name, self.tid);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events(t: &Tracer) -> Vec<Json> {
+        t.chrome_trace().get("traceEvents").unwrap().as_arr().unwrap().to_vec()
+    }
+
+    #[test]
+    fn span_pairs_export_balanced_and_monotone() {
+        let t = Arc::new(Tracer::new());
+        {
+            let _g = t.span("decode_step", ENGINE_TID, vec![("live_b", Json::num(4.0))]);
+            t.instant("page_in", BACKEND_TID, vec![("expert", Json::num(3.0))]);
+        }
+        let ev = events(&t);
+        assert_eq!(ev.len(), 3);
+        let phs: Vec<&str> = ev.iter().map(|e| e.get("ph").unwrap().as_str().unwrap()).collect();
+        assert_eq!(phs.iter().filter(|p| **p == "B").count(), 1);
+        assert_eq!(phs.iter().filter(|p| **p == "E").count(), 1);
+        let ts: Vec<f64> = ev.iter().map(|e| e.get("ts").unwrap().as_f64().unwrap()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "ts must be monotone: {ts:?}");
+        assert_eq!(
+            ev[0].get("args").unwrap().get("live_b").unwrap().as_f64().unwrap(),
+            4.0
+        );
+    }
+
+    #[test]
+    fn open_span_is_filtered_from_export() {
+        let t = Tracer::new();
+        t.begin("queue", 7, vec![]);
+        t.instant("mark", EVENTS_TID, vec![]);
+        let ev = events(&t);
+        assert_eq!(ev.len(), 1, "dangling B must not export: {ev:?}");
+        assert_eq!(ev[0].get("name").unwrap().as_str().unwrap(), "mark");
+    }
+
+    #[test]
+    fn entry_cap_drops_oldest() {
+        let t = Tracer::with_caps(4, usize::MAX >> 1);
+        for _ in 0..10 {
+            t.instant("x", 0, vec![]);
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 6);
+    }
+
+    #[test]
+    fn byte_cap_is_enforced() {
+        let t = Tracer::with_caps(usize::MAX >> 1, 400);
+        for _ in 0..100 {
+            t.instant("some_event_name", 0, vec![("k", Json::num(1.0))]);
+        }
+        assert!(t.bytes() <= 400, "bytes {} over cap", t.bytes());
+        assert!(t.len() < 100);
+        // an entry alone larger than the cap is refused outright
+        let big = "x".repeat(1000);
+        t.instant("big", 0, vec![("v", Json::str(&big))]);
+        assert!(t.bytes() <= 400);
+    }
+
+    #[test]
+    fn truncated_end_is_dropped_not_mismatched() {
+        // evict the B of a pair; its E must not pair with a later span
+        let t = Tracer::with_caps(3, usize::MAX >> 1);
+        t.begin("a", 0, vec![]);
+        t.end("a", 0); // pair 1 complete
+        t.begin("b", 0, vec![]);
+        t.end("b", 0); // pushes "a"'s B out (cap 3)
+        let ev = events(&t);
+        let names: Vec<&str> = ev.iter().map(|e| e.get("name").unwrap().as_str().unwrap()).collect();
+        assert_eq!(names, vec!["b", "b"], "only the intact pair survives: {names:?}");
+    }
+
+    #[test]
+    fn backdated_begin_sorts_into_place() {
+        let t = Tracer::new();
+        let before = t.now_us();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.instant("early", 0, vec![]);
+        t.begin_at("work", 1, before, vec![("load", Json::num(9.0))]);
+        t.end("work", 1);
+        let ev = events(&t);
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].get("name").unwrap().as_str().unwrap(), "work");
+    }
+}

@@ -138,15 +138,19 @@ pub fn status_text(code: u16) -> &'static str {
     }
 }
 
-/// Fixed-length JSON response with extra headers (e.g. `Retry-After`).
-pub fn write_response_with(
+/// Fixed-length response with an explicit Content-Type and extra headers
+/// (e.g. `Retry-After`). The Prometheus exposition endpoint serves
+/// `text/plain`, everything else JSON, so the content type is a
+/// parameter here and the JSON wrappers below fix it.
+pub fn write_response_typed_with(
     stream: &mut TcpStream,
     code: u16,
+    content_type: &str,
     extra_headers: &[(&str, &str)],
     body: &str,
 ) -> Result<()> {
     let mut resp = format!(
-        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\n\
+        "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\nConnection: close\r\n",
         status_text(code),
         body.len()
@@ -159,6 +163,26 @@ pub fn write_response_with(
     stream.write_all(resp.as_bytes())?;
     stream.flush()?;
     Ok(())
+}
+
+/// Fixed-length response with an explicit Content-Type.
+pub fn write_response_typed(
+    stream: &mut TcpStream,
+    code: u16,
+    content_type: &str,
+    body: &str,
+) -> Result<()> {
+    write_response_typed_with(stream, code, content_type, &[], body)
+}
+
+/// Fixed-length JSON response with extra headers (e.g. `Retry-After`).
+pub fn write_response_with(
+    stream: &mut TcpStream,
+    code: u16,
+    extra_headers: &[(&str, &str)],
+    body: &str,
+) -> Result<()> {
+    write_response_typed_with(stream, code, "application/json", extra_headers, body)
 }
 
 pub fn write_response(stream: &mut TcpStream, code: u16, body: &str) -> Result<()> {
@@ -399,6 +423,20 @@ mod tests {
             },
             b"GET /h HTTP/1.1\r\nX-MiXeD-cAsE: yes\r\n\r\n",
         );
+    }
+
+    #[test]
+    fn typed_response_sets_content_type() {
+        let out = with_conn(
+            |s| {
+                let _ = read_request(s).unwrap();
+                write_response_typed(s, 200, "text/plain; charset=utf-8", "oea_up 1\n").unwrap();
+            },
+            b"GET /metrics HTTP/1.1\r\n\r\n",
+        );
+        assert!(out.starts_with("HTTP/1.1 200"));
+        assert!(out.contains("Content-Type: text/plain; charset=utf-8"));
+        assert!(out.ends_with("oea_up 1\n"));
     }
 
     #[test]

@@ -41,7 +41,15 @@
 //!                    scheduler block (mode, live-B, recompositions,
 //!                    prefill chunks) + health block (absorbed failures)
 //!                    + faults/degradation blocks when a fault plan is
-//!                    installed
+//!                    installed + build_info (version, backend, uptime).
+//!                    Content-negotiated: `?format=prometheus` or an
+//!                    `Accept: text/plain` header renders the same tree
+//!                    as Prometheus text exposition (typed counters /
+//!                    gauges / summaries) instead of JSON
+//!   GET  /trace      -> Chrome trace-event JSON from the flight
+//!                    recorder (load in Perfetto / chrome://tracing);
+//!                    404 unless the server was started with --trace or
+//!                    --trace-out
 //!   GET  /healthz    -> readiness, not liveness: 200 {"status":"ok"}
 //!                    only once the engine thread has booted; 503 with
 //!                    "starting" before that, "draining" during
@@ -64,11 +72,15 @@ use crate::coordinator::{
     Engine, FinishReason, FinishedRequest, GenRequest, Priority, SubmitError, TokenEvent,
 };
 use crate::moe::policy::PolicySpec;
+use crate::obs::{prometheus_text, Tracer};
 use crate::util::bpe::Tokenizer;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
-use http::{read_request, write_response, write_response_with, ChunkedWriter, HttpRequest};
+use http::{
+    read_request, write_response, write_response_typed, write_response_with, ChunkedWriter,
+    HttpRequest,
+};
 
 /// Hint clients send with a 429 (seconds).
 const RETRY_AFTER_S: &str = "1";
@@ -172,11 +184,22 @@ pub struct ServeOptions {
     /// receives the bound address once the listener is up (lets tests and
     /// benches serve on port 0)
     pub ready: Option<mpsc::Sender<SocketAddr>>,
+    /// flight recorder backing `GET /trace` (the same `Arc` the engine
+    /// and backend record into); `None` = tracing disabled, `/trace` 404s
+    pub tracer: Option<Arc<Tracer>>,
+    /// write the Chrome trace JSON to this file after the graceful drain
+    pub trace_out: Option<String>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { max_requests: None, http_workers: 8, ready: None }
+        ServeOptions {
+            max_requests: None,
+            http_workers: 8,
+            ready: None,
+            tracer: None,
+            trace_out: None,
+        }
     }
 }
 
@@ -246,6 +269,7 @@ where
     let engine_served = Arc::clone(&served);
     let failed = Arc::clone(&engine_failed);
     let ready_flag = Arc::clone(&engine_ready);
+    let build = BuildMeta::now();
     let engine_thread = std::thread::spawn(move || {
         let mut engine = match engine_builder() {
             Ok(e) => e,
@@ -299,7 +323,7 @@ where
                         }
                     }
                     Ok(EngineMsg::Metrics(reply)) => {
-                        let _ = reply.send(metrics_json(&engine));
+                        let _ = reply.send(metrics_json(&engine, &build));
                     }
                     Ok(EngineMsg::Shutdown) => {
                         engine.begin_drain();
@@ -389,10 +413,11 @@ where
         let shutdown = Arc::clone(&shutdown);
         let ready = Arc::clone(&engine_ready);
         let failed = Arc::clone(&engine_failed);
+        let tracer = opts.tracer.clone();
         pool.execute(move || {
             // a panicking handler must not kill its pool worker
             let _ = catch_unwind(AssertUnwindSafe(|| {
-                handle_connection(stream, &tx, &tok, &shutdown, &ready, &failed);
+                handle_connection(stream, &tx, &tok, &shutdown, &ready, &failed, &tracer);
             }));
         });
     }
@@ -404,6 +429,18 @@ where
     let _ = tx.send(EngineMsg::Shutdown);
     drop(tx);
     let _ = engine_thread.join();
+    // flush the flight recorder AFTER the drain so the file holds the
+    // complete timeline, including the final decode steps
+    if let (Some(tr), Some(path)) = (&opts.tracer, &opts.trace_out) {
+        match std::fs::write(path, tr.chrome_trace().write()) {
+            Ok(()) => crate::log_info!("server", "wrote Chrome trace to {path}"),
+            Err(e) => crate::util::logging::log(
+                crate::util::logging::ERROR,
+                "server",
+                &format!("failed to write trace to {path}: {e}"),
+            ),
+        }
+    }
     if engine_failed.load(Ordering::SeqCst) {
         return Err(Error::Engine("engine thread failed; see logs".into()));
     }
@@ -417,6 +454,7 @@ fn handle_connection(
     shutdown: &AtomicBool,
     ready: &AtomicBool,
     failed: &AtomicBool,
+    tracer: &Option<Arc<Tracer>>,
 ) {
     stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
     // a client that stops reading mid-stream must not pin a pool worker
@@ -430,7 +468,13 @@ fn handle_connection(
             return;
         }
     };
-    match (req.method.as_str(), req.path.as_str()) {
+    // route on the bare path; the query string only modulates rendering
+    // (`/metrics?format=prometheus` must still hit the /metrics route)
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    match (req.method.as_str(), path) {
         ("GET", "/healthz") => {
             // readiness: only "ok" routes traffic. Order matters —
             // failed trumps draining trumps starting.
@@ -454,13 +498,42 @@ fn handle_connection(
                 .and_then(|_| rrx.recv().ok());
             match body {
                 Some(m) => {
-                    let _ = write_response(&mut stream, 200, &m.write());
+                    // content negotiation: `?format=prometheus` wins, else
+                    // an Accept header asking for text/plain (a Prometheus
+                    // scraper) selects the exposition rendering
+                    let wants_prom = query.split('&').any(|kv| kv == "format=prometheus")
+                        || req
+                            .header("accept")
+                            .map(|a| a.contains("text/plain"))
+                            .unwrap_or(false);
+                    if wants_prom {
+                        let _ = write_response_typed(
+                            &mut stream,
+                            200,
+                            "text/plain; version=0.0.4; charset=utf-8",
+                            &prometheus_text(&m),
+                        );
+                    } else {
+                        let _ = write_response(&mut stream, 200, &m.write());
+                    }
                 }
                 None => {
                     let _ = write_response(&mut stream, 503, &err_json("engine unavailable"));
                 }
             }
         }
+        ("GET", "/trace") => match tracer {
+            Some(tr) => {
+                let _ = write_response(&mut stream, 200, &tr.chrome_trace().write());
+            }
+            None => {
+                let _ = write_response(
+                    &mut stream,
+                    404,
+                    &err_json("tracing disabled (start with --trace or --trace-out)"),
+                );
+            }
+        },
         ("POST", "/shutdown") => {
             shutdown.store(true, Ordering::SeqCst);
             let _ = write_response(&mut stream, 200, "{\"status\":\"draining\"}");
@@ -736,9 +809,49 @@ fn err_json(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).write()
 }
 
-fn metrics_json<B: Backend>(engine: &Engine<B>) -> Json {
+/// Process start facts captured once when [`serve`] boots, feeding the
+/// `build_info` metrics block (and its Prometheus `oea_build_info`
+/// rendering).
+struct BuildMeta {
+    start_unix: u64,
+    started: std::time::Instant,
+}
+
+impl BuildMeta {
+    fn now() -> BuildMeta {
+        BuildMeta {
+            start_unix: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+            started: std::time::Instant::now(),
+        }
+    }
+}
+
+/// The `/metrics` build_info block: immutable build/runtime identity
+/// (crate version, enabled features, backend) plus uptime and lifetime
+/// step count. String fields become labels on the Prometheus
+/// `oea_build_info` gauge; numeric fields become standalone series.
+fn build_info_json<B: Backend>(engine: &Engine<B>, build: &BuildMeta) -> Json {
+    Json::obj(vec![
+        ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+        (
+            "features",
+            Json::str(if cfg!(feature = "pjrt") { "pjrt" } else { "default" }),
+        ),
+        ("backend", Json::str(engine.runner.backend.label())),
+        ("tracing", Json::Bool(engine.cfg.tracer.is_some())),
+        ("start_unix", Json::num(build.start_unix as f64)),
+        ("uptime_s", Json::num(build.started.elapsed().as_secs_f64())),
+        ("steps", Json::num(engine.sched_counters().steps as f64)),
+    ])
+}
+
+fn metrics_json<B: Backend>(engine: &Engine<B>, build: &BuildMeta) -> Json {
     let fit = engine.moe.linear_fit(true);
     let mut pairs = vec![
+        ("build_info", build_info_json(engine, build)),
         ("policy", Json::str(&engine.cfg.policy.label())),
         ("n_records", Json::num(engine.moe.len() as f64)),
         ("avg_active_experts", Json::num(engine.moe.avg_t())),

@@ -71,7 +71,7 @@ fn server_streams_backpressures_reports_and_drains() {
             },
             Tokenizer::byte_level(),
             "127.0.0.1:0",
-            ServeOptions { max_requests: None, http_workers: 8, ready: Some(ready_tx) },
+            ServeOptions { max_requests: None, http_workers: 8, ready: Some(ready_tx), ..Default::default() },
         )
     });
     let addr = ready_rx
@@ -322,7 +322,7 @@ fn client_disconnect_cancels_and_metrics_report_residency() {
             },
             Tokenizer::byte_level(),
             "127.0.0.1:0",
-            ServeOptions { max_requests: None, http_workers: 4, ready: Some(ready_tx) },
+            ServeOptions { max_requests: None, http_workers: 4, ready: Some(ready_tx), ..Default::default() },
         )
     });
     let addr = ready_rx

@@ -1,0 +1,263 @@
+//! Flight-recorder (obs) properties:
+//!
+//! 1. The span ring NEVER exceeds its entry or byte cap, under any
+//!    interleaving of begins/ends/instants (random span storms).
+//! 2. Span open/close pairs nest and balance across threads — the
+//!    exported Chrome JSON has stack-disciplined B/E pairs per tid.
+//! 3. Tracing is inert: an engine with `tracer: None` and one with a
+//!    live tracer produce bitwise-identical output, and a backend with
+//!    an installed tracer produces bitwise-identical logits — the
+//!    observability plane is read-only (the same contract the fault
+//!    plane and the SLO controller pin).
+//! 4. A traced end-to-end run exports parseable Chrome trace JSON with
+//!    monotone `ts`, matched B/E pairs, and the full queue → prefill →
+//!    decode taxonomy, with decode-step spans carrying the OEA args.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::Arc;
+
+use oea_serve::backend::cpu::{CpuBackend, CpuOptions, DispatchMode};
+use oea_serve::config::ModelConfig;
+use oea_serve::coordinator::{Engine, EngineConfig, GenRequest, Priority};
+use oea_serve::latency::H100Presets;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::obs::Tracer;
+use oea_serve::util::json::Json;
+use oea_serve::util::rng::Rng;
+
+/// Walk an exported Chrome trace: `ts` monotone non-decreasing, per-tid
+/// B/E stack discipline (every E closes the innermost open B of the same
+/// name), nothing left open. Returns (n_begin, n_end, n_instant).
+fn assert_balanced(trace: &Json) -> (usize, usize, usize) {
+    let ev = trace.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut stacks: HashMap<u64, Vec<String>> = HashMap::new();
+    let (mut nb, mut ne, mut ni) = (0usize, 0usize, 0usize);
+    for e in ev {
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        assert!(ts >= last_ts, "ts went backwards: {ts} < {last_ts}");
+        last_ts = ts;
+        let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+        let name = e.get("name").unwrap().as_str().unwrap().to_string();
+        match e.get("ph").unwrap().as_str().unwrap() {
+            "B" => {
+                stacks.entry(tid).or_default().push(name);
+                nb += 1;
+            }
+            "E" => {
+                let top = stacks.get_mut(&tid).and_then(|s| s.pop());
+                assert_eq!(
+                    top.as_deref(),
+                    Some(name.as_str()),
+                    "E {name:?} does not close the innermost span on tid {tid}"
+                );
+                ne += 1;
+            }
+            "i" => {
+                assert_eq!(e.get("s").unwrap().as_str().unwrap(), "t");
+                ni += 1;
+            }
+            other => panic!("unexpected ph {other:?}"),
+        }
+    }
+    for (tid, s) in &stacks {
+        assert!(s.is_empty(), "unclosed spans on tid {tid}: {s:?}");
+    }
+    assert_eq!(nb, ne, "unbalanced B/E counts survived export");
+    (nb, ne, ni)
+}
+
+#[test]
+fn ring_never_exceeds_caps_under_random_span_storm() {
+    const NAMES: [&str; 4] = ["alpha", "beta", "gamma", "delta"];
+    const MAX_ENTRIES: usize = 128;
+    const MAX_BYTES: usize = 6_000;
+    for seed in [1u64, 7, 42] {
+        let t = Tracer::with_caps(MAX_ENTRIES, MAX_BYTES);
+        let mut rng = Rng::new(seed);
+        for i in 0..5_000u32 {
+            let name = NAMES[rng.below(NAMES.len())];
+            let tid = rng.below(4) as u64;
+            match rng.below(3) {
+                0 => t.begin(name, tid, vec![("i", Json::num(i as f64))]),
+                1 => t.end(name, tid),
+                _ => t.instant(name, tid, vec![("i", Json::num(i as f64))]),
+            }
+            assert!(t.len() <= MAX_ENTRIES, "entry cap breached: {}", t.len());
+            assert!(t.bytes() <= MAX_BYTES, "byte cap breached: {}", t.bytes());
+        }
+        assert!(t.dropped() > 0, "storm should have overflowed the ring");
+        // the truncated ring still exports balanced, parseable JSON
+        let parsed = Json::parse(&t.chrome_trace().write()).unwrap();
+        assert_balanced(&parsed);
+        assert!(parsed.get("droppedEvents").unwrap().as_f64().unwrap() > 0.0);
+    }
+}
+
+#[test]
+fn spans_nest_and_balance_across_threads() {
+    const THREADS: u64 = 4;
+    const ITERS: usize = 50;
+    let t = Arc::new(Tracer::new());
+    let mut handles = Vec::new();
+    for w in 0..THREADS {
+        let t = Arc::clone(&t);
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..ITERS {
+                let _outer = t.span("outer", 100 + w, vec![("w", Json::num(w as f64))]);
+                let _inner = t.span("inner", 100 + w, vec![]);
+                t.instant("tick", 100 + w, vec![]);
+                // guards drop in reverse order: inner closes before outer
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let parsed = Json::parse(&t.chrome_trace().write()).unwrap();
+    let (nb, ne, ni) = assert_balanced(&parsed);
+    // default caps dwarf this workload: every span must survive
+    let spans = THREADS as usize * ITERS * 2;
+    assert_eq!((nb, ne, ni), (spans, spans, THREADS as usize * ITERS));
+}
+
+// ---- inertness: tracing must be read-only --------------------------------
+
+fn runner() -> ModelRunner<CpuBackend> {
+    ModelRunner::new(CpuBackend::synthetic(ModelConfig::preset("tiny").unwrap(), 0))
+}
+
+fn req(id: u64, len: usize, gen: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: (0..len).map(|i| 3 + ((id as usize * 31 + i * 7) % 500) as i32).collect(),
+        max_new_tokens: gen,
+        temperature: 0.0,
+        top_p: 1.0,
+        seed: id,
+        policy: None,
+        deadline_ms: None,
+        priority: Priority::default(),
+    }
+}
+
+/// Run a randomized workload to completion, returning (id, tokens) pairs
+/// sorted by id.
+fn run_workload(tracer: Option<Arc<Tracer>>, seed: u64) -> Vec<(u64, Vec<i32>)> {
+    let cfg = EngineConfig {
+        max_running: 4,
+        max_queue: usize::MAX,
+        tracer,
+        ..EngineConfig::new(Policy::OeaSimplified { k0: 1, k: 2 }, H100Presets::qwen3_30b())
+    };
+    let mut engine = Engine::new(runner(), cfg).unwrap();
+    let mut rng = Rng::new(seed);
+    for i in 0..8u64 {
+        engine.submit(req(i, 3 + rng.below(6), 4 + rng.below(6))).unwrap();
+    }
+    let mut done: Vec<(u64, Vec<i32>)> = engine
+        .run_to_completion()
+        .unwrap()
+        .into_iter()
+        .map(|f| (f.id, f.tokens))
+        .collect();
+    done.sort();
+    done
+}
+
+#[test]
+fn live_tracer_leaves_engine_output_bitwise_identical() {
+    for seed in [3u64, 11, 29] {
+        let off = run_workload(None, seed);
+        let on = run_workload(Some(Arc::new(Tracer::new())), seed);
+        assert_eq!(off, on, "tracing changed generated tokens (seed {seed})");
+    }
+}
+
+/// Greedy-decode `steps` batch steps, returning per-step logits.
+fn drive_logits(r: &ModelRunner<CpuBackend>, bucket: usize, steps: usize) -> Vec<Vec<f32>> {
+    let vocab = r.cfg().vocab;
+    let mut batch = r.new_batch(bucket).unwrap();
+    let live = vec![true; bucket];
+    let mut tokens: Vec<i32> = (0..bucket).map(|i| 3 + (i as i32 * 97) % 500).collect();
+    let pol = Policy::OeaSimplified { k0: 1, k: 2 };
+    let mut out_logits = Vec::new();
+    for step in 0..steps {
+        let pos: Vec<i32> = vec![step as i32; bucket];
+        let out = r.decode_step(&mut batch, &tokens, &pos, &live, pol, true).unwrap();
+        for (i, t) in tokens.iter_mut().enumerate() {
+            let row = &out.logits[i * vocab..(i + 1) * vocab];
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            *t = best as i32;
+        }
+        out_logits.push(out.logits);
+    }
+    out_logits
+}
+
+#[test]
+fn installed_tracer_leaves_backend_logits_bitwise_identical() {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let opts = || CpuOptions {
+        dispatch: DispatchMode::Grouped,
+        threads: 1,
+        residency: None,
+        ep_ranks: 1,
+    };
+    let plain = ModelRunner::new(CpuBackend::synthetic_with(cfg.clone(), 0, opts()));
+    let mut traced_backend = CpuBackend::synthetic_with(cfg.clone(), 0, opts());
+    let tr = Arc::new(Tracer::new());
+    traced_backend.install_tracer(Arc::clone(&tr));
+    let traced = ModelRunner::new(traced_backend);
+    let a = drive_logits(&plain, 4, 8);
+    let b = drive_logits(&traced, 4, 8);
+    assert_eq!(a.len(), b.len());
+    for (step, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.len(), y.len());
+        for (i, (p, q)) in x.iter().zip(y).enumerate() {
+            assert!(
+                p.to_bits() == q.to_bits(),
+                "logits diverged at step {step} index {i}: {p} vs {q}"
+            );
+        }
+    }
+}
+
+// ---- end-to-end export ---------------------------------------------------
+
+#[test]
+fn traced_engine_run_exports_reconstructible_timeline() {
+    let tr = Arc::new(Tracer::new());
+    let done = run_workload(Some(Arc::clone(&tr)), 5);
+    assert_eq!(done.len(), 8);
+    let parsed = Json::parse(&tr.chrome_trace().write()).unwrap();
+    assert_balanced(&parsed);
+    let ev = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    let names: BTreeSet<&str> =
+        ev.iter().map(|e| e.get("name").unwrap().as_str().unwrap()).collect();
+    for want in ["queue", "prefill", "decode", "decode_step", "admit"] {
+        assert!(names.contains(want), "span {want:?} missing from export: {names:?}");
+    }
+    // decode-step spans carry the paper's per-step quantities
+    let ds = ev
+        .iter()
+        .find(|e| {
+            e.get("name").unwrap().as_str().unwrap() == "decode_step"
+                && e.get("ph").unwrap().as_str().unwrap() == "B"
+        })
+        .expect("at least one decode_step B span");
+    let args = ds.get("args").unwrap();
+    for k in ["step", "live_b", "load", "piggybacked", "misses", "max_rank_t", "tight", "step_us"] {
+        assert!(args.get_opt(k).is_some(), "decode_step missing arg {k:?}");
+    }
+    // routed load >= piggybacked (piggyback = load - T, saturating)
+    let load = args.get("load").unwrap().as_f64().unwrap();
+    let piggy = args.get("piggybacked").unwrap().as_f64().unwrap();
+    assert!(load >= piggy, "piggybacked {piggy} exceeds routed load {load}");
+}
