@@ -83,6 +83,18 @@ def extract_micro_hotpath(doc):
         # the floor 0.95, i.e. <= ~5% tracing overhead
         m["tracing on/off throughput"] = (
             "rate", tr["off_p50_us"] / tr["on_p50_us"])
+    kern = doc.get("kernels")
+    if kern and kern.get("speedup") is not None:
+        # SIMD-vs-scalar moe_apply speedup (scalar p50 / simd p50).
+        # Hosts without AVX2+FMA degrade SIMD to the scalar path, so a
+        # healthy run never sits far below 1.0 anywhere; the bootstrap
+        # baseline (0.75, rate kind -> floor 0.70) only catches a SIMD
+        # path that got *slower* than scalar.
+        m["kernel_speedup"] = ("rate", kern["speedup"])
+    if kern and kern.get("int8_bytes_ratio") is not None:
+        # pure packed-panel byte math (f32 bytes / int8 bytes): machine-
+        # independent, must never drop below ~3.5x
+        m["int8_bytes_ratio"] = ("rate", kern["int8_bytes_ratio"])
     return m
 
 
@@ -92,6 +104,21 @@ def extract_ep_balance(doc):
         m[f"{r['policy']} ranks={r['ranks']:.0f} tokens/s"] = (
             "throughput", r["tokens_per_s"])
     with_min(m, "runs min tokens/s", "throughput")
+    # measured-vs-analytic EP concurrency: per-rank measured wall over
+    # the whole measured MoE stage (min across multi-rank runs). The
+    # analytic model prices a step at its max rank; if the measured rank
+    # walls collapse toward zero the concurrency story (and the model's
+    # grounding) is broken. Bootstrap floor is deliberately loose — rank
+    # walls exclude combine/reduction overhead the stage wall includes.
+    ratios = [
+        s["max_rank_wall_us_ep"] / s["moe_us_ep"]
+        for s in doc.get("summary", [])
+        if s.get("ranks", 0) > 1
+        and s.get("moe_us_ep")
+        and s.get("max_rank_wall_us_ep") is not None
+    ]
+    if ratios:
+        m["ep_wall_vs_analytic"] = ("rate", min(ratios))
     return m
 
 

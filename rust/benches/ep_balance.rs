@@ -53,6 +53,11 @@ struct RunOut {
     rank_paged: Vec<u64>,
     /// residency hit rate (0 without an expert cache)
     hit_rate: f64,
+    /// mean measured µs of the whole MoE stage per layer-step
+    moe_us_mean: f64,
+    /// mean measured max-over-ranks wall µs per layer-step — the measured
+    /// counterpart of the analytic max-rank `sim_us_mean`
+    max_rank_wall_us_mean: f64,
 }
 
 fn run_policy(
@@ -68,7 +73,13 @@ fn run_policy(
     let backend = CpuBackend::synthetic_with(
         c.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 0, residency, ep_ranks: ranks },
+        CpuOptions {
+            dispatch: DispatchMode::Grouped,
+            threads: 0,
+            residency,
+            ep_ranks: ranks,
+            ..CpuOptions::default()
+        },
     );
     let runner = ModelRunner::new(backend);
     let bucket = c.bucket_for(B).unwrap();
@@ -96,6 +107,8 @@ fn run_policy(
     let mut t_sum = 0usize;
     let mut mrt_sum = 0usize;
     let mut sim_sum = 0.0;
+    let mut moe_sum = 0.0;
+    let mut wall_sum = 0.0;
     let mut nrec = 0usize;
     let t0 = Instant::now();
     for t in warmup..warmup + steps {
@@ -104,6 +117,8 @@ fn run_policy(
             t_sum += ls.t;
             mrt_sum += ls.max_rank_t();
             sim_sum += cost.step_us_ep(&ls.rank_loads());
+            moe_sum += ls.moe_us;
+            wall_sum += ls.rank_wall_us.iter().copied().fold(0.0, f64::max);
             nrec += 1;
         }
     }
@@ -140,6 +155,8 @@ fn run_policy(
         load_imbalance: imbalance(&rank_load),
         rank_paged: if any_res { rank_paged } else { Vec::new() },
         hit_rate,
+        moe_us_mean: moe_sum / nrec.max(1) as f64,
+        max_rank_wall_us_mean: wall_sum / nrec.max(1) as f64,
     }
 }
 
@@ -151,6 +168,8 @@ fn run_json(r: &RunOut) -> Json {
         ("avg_t", Json::num(r.avg_t)),
         ("avg_max_rank_t", Json::num(r.avg_max_rank_t)),
         ("sim_us_mean", Json::num(r.sim_us_mean)),
+        ("moe_us_mean", Json::num(r.moe_us_mean)),
+        ("max_rank_wall_us_mean", Json::num(r.max_rank_wall_us_mean)),
         ("load_imbalance", Json::num(r.load_imbalance)),
         (
             "rank_paged_bytes",
@@ -269,10 +288,47 @@ fn main() {
             ("max_rank_t_ep_cache", Json::num(ec.avg_max_rank_t)),
             ("sim_us_vanilla", Json::num(v.sim_us_mean)),
             ("sim_us_ep", Json::num(e.sim_us_mean)),
+            ("moe_us_ep", Json::num(e.moe_us_mean)),
+            ("max_rank_wall_us_ep", Json::num(e.max_rank_wall_us_mean)),
             ("ep_max_rank_le_vanilla", Json::Bool(e.avg_max_rank_t <= v.avg_max_rank_t)),
             ("page_in_imbalance_ep_cache", Json::num(imbalance(&ec.rank_paged))),
             ("hit_rate_ep_cache", Json::num(ec.hit_rate)),
         ]));
+    }
+    // measured-vs-analytic concurrency gate: the analytic model says an
+    // EP step costs its max rank; the measured per-rank walls must agree
+    // with the measured stage wall within a stated factor — the stage can
+    // never beat its slowest rank (lower bound, modulo timing noise), and
+    // spawn/norm/reduce overhead must not swamp the rank work (factor
+    // WALL_FACTOR upper bound). Skipped in smoke tier: a loaded shared
+    // runner (or a 1-core box, where ranks execute serially) makes
+    // wall-clock factors meaningless there.
+    const WALL_FACTOR: f64 = 6.0;
+    if !opts.smoke {
+        for &ranks in &[2usize, 4] {
+            if !rank_counts.contains(&ranks) {
+                continue;
+            }
+            let e = at("ep", ranks);
+            assert!(
+                e.max_rank_wall_us_mean > 0.0,
+                "ranks={ranks}: no per-rank wall measurements recorded"
+            );
+            let ratio = e.moe_us_mean / e.max_rank_wall_us_mean;
+            assert!(
+                (0.9..WALL_FACTOR).contains(&ratio),
+                "ranks={ranks}: MoE stage {:.1} us vs measured max-rank wall {:.1} us \
+                 (ratio {ratio:.2} outside [0.9, {WALL_FACTOR})): per-rank concurrency \
+                 is not delivering the analytic max-rank shape",
+                e.moe_us_mean,
+                e.max_rank_wall_us_mean,
+            );
+            println!(
+                "ranks={ranks}: measured max-rank wall {:.1} us, stage {:.1} us \
+                 (ratio {ratio:.2}, bound {WALL_FACTOR}); analytic sim {:.1} us",
+                e.max_rank_wall_us_mean, e.moe_us_mean, e.sim_us_mean,
+            );
+        }
     }
     // sanity: at one rank the max-rank quantity IS T, and the max-rank
     // cost model reduces to the single-rank layer cost

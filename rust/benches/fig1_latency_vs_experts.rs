@@ -44,7 +44,13 @@ fn run_sweep(
     let runner = ModelRunner::new(CpuBackend::synthetic_with(
         c.clone(),
         0,
-        CpuOptions { dispatch: mode, threads: 0, residency: None, ep_ranks: 1 },
+        CpuOptions {
+            dispatch: mode,
+            threads: 0,
+            residency: None,
+            ep_ranks: 1,
+            ..CpuOptions::default()
+        },
     ));
     // Vary T at FIXED batch size via k0 and batch composition (the paper
     // gets the variation naturally from serving GPQA at B<=16). B must be

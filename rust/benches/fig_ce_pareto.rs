@@ -14,7 +14,8 @@
 //!     cargo bench --bench fig_ce_pareto -- --smoke     # CI tier
 //!     OEA_BENCH_FAST=1 cargo bench --bench fig_ce_pareto   # smaller grid
 
-use oea_serve::backend::cpu::CpuBackend;
+use oea_serve::backend::cpu::kernels::{KernelMode, PanelDtype};
+use oea_serve::backend::cpu::{CpuBackend, CpuOptions, DispatchMode};
 use oea_serve::config::ModelConfig;
 use oea_serve::eval;
 use oea_serve::model::ModelRunner;
@@ -199,6 +200,52 @@ fn main() {
         ]));
     }
 
+    // ---- dtype axis: quantized expert panels vs the f32 reference ------
+    // Same traffic, vanilla routing on every arm: the CE/KL delta here is
+    // pure panel-precision loss — the quality bill for the smaller panel
+    // bytes — reported per dtype, never silently folded into the routing
+    // deltas above. Skipped under the gather oracle (f32-only by design).
+    let mut dtype_json: Vec<Json> = Vec::new();
+    if CpuOptions::from_env().dispatch == DispatchMode::Grouped {
+        let bq = *batches.last().unwrap();
+        let mut rng = Rng::new(bq as u64);
+        let seqs = eval::synthetic_sequences(&c, &mut rng, bq, positions, true);
+        let vanilla =
+            eval::forced_run(&runner, &seqs, positions, Policy::Vanilla { k }, true)
+                .unwrap();
+        for (name, dt) in [("bf16", PanelDtype::Bf16), ("int8", PanelDtype::Int8)] {
+            let be = CpuBackend::synthetic_with(
+                c.clone(),
+                0,
+                CpuOptions {
+                    dispatch: DispatchMode::Grouped,
+                    kernels: KernelMode::Scalar,
+                    panel_dtype: dt,
+                    ..CpuOptions::from_env()
+                },
+            );
+            let qr = ModelRunner::new(be);
+            let run =
+                eval::forced_run(&qr, &seqs, positions, Policy::Vanilla { k }, true)
+                    .unwrap();
+            let r = eval::ce_compare(&seqs, &run, &vanilla);
+            println!(
+                "panel dtype {name} @ B={bq} (vanilla k={k}): ce={:.4} \
+                 ce_delta={:+.4} kl={:.5}",
+                r.ce, r.ce_delta, r.kl_vanilla
+            );
+            dtype_json.push(Json::obj(vec![
+                ("dtype", Json::str(name)),
+                ("b", Json::num(bq as f64)),
+                ("ce", Json::num(r.ce)),
+                ("ce_delta", Json::num(r.ce_delta)),
+                ("kl_vs_f32", Json::num(r.kl_vanilla)),
+            ]));
+        }
+    } else {
+        eprintln!("gather dispatch: skipping the panel-dtype quality axis (f32 oracle only)");
+    }
+
     opts.emit(
         "fig_ce_pareto",
         Json::obj(vec![
@@ -206,6 +253,7 @@ fn main() {
             ("smoke", Json::Bool(opts.smoke)),
             ("positions", Json::num(positions as f64)),
             ("batches", Json::arr(batches_json)),
+            ("dtypes", Json::arr(dtype_json)),
         ]),
     )
     .unwrap();

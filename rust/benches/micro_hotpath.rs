@@ -13,6 +13,7 @@
 
 use std::sync::Arc;
 
+use oea_serve::backend::cpu::kernels::{self, KernelMode, PackedMat, PanelDtype};
 use oea_serve::backend::cpu::{CpuBackend, CpuOptions, DispatchMode};
 use oea_serve::backend::Backend;
 use oea_serve::config::ModelConfig;
@@ -187,6 +188,105 @@ fn main() {
         speedups.push((case.to_string(), speedup));
     }
 
+    // ---- kernel modes: scalar oracle vs SIMD, quantized panel bytes ----
+    // Same operating point as the dispatch block (small config, B=16,
+    // vanilla k=8 — the heaviest routed load), grouped dispatch, kernel
+    // mode forced per backend. tokens/s speedup is the tentpole gate.
+    println!("\nkernel modes (small config, grouped, B=16, vanilla k=8):");
+    let d_k = route(Policy::Vanilla { k: 8 }, &input_m);
+    let tb_k = cfg.t_bucket_for(d_k.t()).unwrap();
+    let ids_k = pad_active_list(&d_k.active, tb_k, cfg.n_experts);
+    let mut kern_pair: Vec<f64> = Vec::new();
+    let mut kern_entries: Vec<Json> = Vec::new();
+    for (mode_name, kmode) in [("scalar", KernelMode::Scalar), ("simd", KernelMode::Simd)] {
+        let be = CpuBackend::synthetic_with(
+            cfg.clone(),
+            0,
+            CpuOptions {
+                dispatch: DispatchMode::Grouped,
+                kernels: kmode,
+                panel_dtype: PanelDtype::F32,
+                ..env
+            },
+        );
+        let r = bench(&format!("moe_apply grouped kernels={mode_name}"), 2, moe_iters, || {
+            std::hint::black_box(be.moe_apply(0, &hidden, &d_k.combine, &ids_k).unwrap());
+        });
+        r.print();
+        kern_entries.push(Json::obj(vec![
+            ("kernels", Json::str(mode_name)),
+            ("mean_us", Json::num(r.mean_us)),
+            ("p50_us", Json::num(r.p50_us)),
+            ("tokens_per_s", Json::num(bm as f64 / (r.p50_us * 1e-6))),
+        ]));
+        kern_pair.push(r.p50_us);
+    }
+    let kernel_speedup = kern_pair[0] / kern_pair[1];
+    println!(
+        "  simd is {kernel_speedup:.2}x scalar (p50; simd_available={})",
+        kernels::simd_available()
+    );
+
+    // quantized panel bytes: the per-miss page-in traffic each dtype
+    // moves, from the actual packed-panel byte math (wg + wu + wd of one
+    // expert at this config's shapes)
+    let (dm, dh) = (cfg.d_model, cfg.d_expert);
+    let raw_w: Vec<f32> = (0..dm * dh).map(|_| rng.gaussian() as f32 * 0.3).collect();
+    let panel_bytes = |dt: PanelDtype| {
+        PackedMat::pack_dtype(&raw_w, 1, dm, dh, dt).bytes() * 2
+            + PackedMat::pack_dtype(&raw_w, 1, dh, dm, dt).bytes()
+    };
+    let (b_f32, b_bf16, b_int8) = (
+        panel_bytes(PanelDtype::F32),
+        panel_bytes(PanelDtype::Bf16),
+        panel_bytes(PanelDtype::Int8),
+    );
+    let int8_bytes_ratio = b_f32 as f64 / b_int8 as f64;
+    println!(
+        "  panel bytes/expert: f32 {b_f32}  bf16 {b_bf16}  int8 {b_int8} \
+         (int8 cuts {int8_bytes_ratio:.2}x)"
+    );
+
+    // quality delta per dtype: same MoE layer applied with quantized
+    // panels vs the f32 reference — reported, never silently absorbed
+    let out_ref = grouped.moe_apply(0, &hidden, &d_k.combine, &ids_k).unwrap();
+    let ref_scale = out_ref.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-6);
+    let mut quality_entries: Vec<Json> = Vec::new();
+    for (dt_name, dt) in [("bf16", PanelDtype::Bf16), ("int8", PanelDtype::Int8)] {
+        let be = CpuBackend::synthetic_with(
+            cfg.clone(),
+            0,
+            CpuOptions {
+                dispatch: DispatchMode::Grouped,
+                kernels: KernelMode::Scalar,
+                panel_dtype: dt,
+                ..env
+            },
+        );
+        let out = be.moe_apply(0, &hidden, &d_k.combine, &ids_k).unwrap();
+        let max_abs = out
+            .iter()
+            .zip(out_ref.iter())
+            .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()));
+        let rel = max_abs / ref_scale;
+        println!("  {dt_name} moe_apply delta vs f32: max abs {max_abs:.5} (rel {rel:.5})");
+        quality_entries.push(Json::obj(vec![
+            ("dtype", Json::str(dt_name)),
+            ("max_abs_delta", Json::num(max_abs as f64)),
+            ("rel_delta", Json::num(rel as f64)),
+        ]));
+    }
+    let kernels_block = Json::obj(vec![
+        ("simd_available", Json::Bool(kernels::simd_available())),
+        ("speedup", Json::num(kernel_speedup)),
+        ("modes", Json::arr(kern_entries)),
+        ("panel_bytes_f32", Json::num(b_f32 as f64)),
+        ("panel_bytes_bf16", Json::num(b_bf16 as f64)),
+        ("panel_bytes_int8", Json::num(b_int8 as f64)),
+        ("int8_bytes_ratio", Json::num(int8_bytes_ratio)),
+        ("quality", Json::arr(quality_entries)),
+    ]);
+
     // ---- flight-recorder overhead: tracing off vs on -------------------
     // The same engine decode workload with the tracer disarmed vs armed.
     // Armed adds two ring pushes + the per-step arg sums per decode step
@@ -260,6 +360,7 @@ fn main() {
             ("smoke", Json::Bool(opts.smoke)),
             ("results", Json::arr(entries)),
             ("moe_dispatch", Json::arr(moe_entries)),
+            ("kernels", kernels_block),
             ("tracing", tracing_block),
         ]),
     )
@@ -280,5 +381,25 @@ fn main() {
     assert!(
         trace_ratio < 1.5,
         "armed flight recorder halved decode throughput: {trace_ratio:.2}x"
+    );
+    // tentpole gates: SIMD grouped dispatch must deliver >= 1.5x tokens/s
+    // over the scalar oracle at B=16 small-config (full tier, on AVX2
+    // hardware; smoke's 6-iteration medians on a shared runner only get a
+    // catastrophic-regression bound), and int8 panels must cut per-miss
+    // page-in bytes >= 3.5x — a pure byte-math fact, asserted everywhere.
+    if kernels::simd_available() && !opts.smoke {
+        assert!(
+            kernel_speedup >= 1.5,
+            "SIMD kernels must be >= 1.5x scalar at B=16 small-config: {kernel_speedup:.2}x"
+        );
+    } else {
+        assert!(
+            kernel_speedup > 0.5,
+            "SIMD kernel mode collapsed vs scalar: {kernel_speedup:.2}x"
+        );
+    }
+    assert!(
+        int8_bytes_ratio >= 3.5,
+        "int8 panels must cut page-in bytes >= 3.5x: {int8_bytes_ratio:.2}x"
     );
 }

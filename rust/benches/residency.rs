@@ -51,6 +51,8 @@ struct RunOut {
     misses: u64,
     evictions: u64,
     bytes_paged: u64,
+    /// dtype of the packed panels the paged bytes are denominated in
+    panel_dtype: &'static str,
     prefetches: u64,
     avg_t: f64,
     /// mean simulated H100 µs per layer-step (misses charged page_in_us)
@@ -82,8 +84,10 @@ fn run_policy(
             threads: 0,
             residency: Some(rc),
             ep_ranks: 1,
+            ..CpuOptions::default()
         },
     );
+    let panel_dtype = backend.panel_dtype().label();
     let runner = ModelRunner::new(backend);
     let bucket = c.bucket_for(B).unwrap();
     let mut rng = Rng::new(7);
@@ -148,6 +152,7 @@ fn run_policy(
         misses: stats.counters.misses,
         evictions: stats.counters.evictions,
         bytes_paged: stats.counters.bytes_paged,
+        panel_dtype,
         prefetches: stats.counters.prefetches,
         avg_t: t_sum as f64 / nrec.max(1) as f64,
         sim_us_mean: sim_sum / nrec.max(1) as f64,
@@ -170,6 +175,7 @@ fn run_json(r: &RunOut) -> Json {
         ("misses", Json::num(r.misses as f64)),
         ("evictions", Json::num(r.evictions as f64)),
         ("bytes_paged", Json::num(r.bytes_paged as f64)),
+        ("panel_dtype", Json::str(r.panel_dtype)),
         ("prefetches", Json::num(r.prefetches as f64)),
         ("avg_t", Json::num(r.avg_t)),
         ("sim_us_mean", Json::num(r.sim_us_mean)),

@@ -44,6 +44,7 @@ fn run_variant(cfg: &ModelConfig, v: &Variant) -> (f64, f64, f64, Vec<u64>, Vec<
             threads: 0,
             residency: v.residency,
             ep_ranks: RANKS,
+            ..CpuOptions::default()
         },
     );
     let runner = ModelRunner::new(backend);

@@ -32,12 +32,130 @@ use crate::util::arena::Arena;
 /// usually a no-op).
 pub const LANES: usize = 8;
 
+/// Which kernel implementations the hot path runs. `Scalar` is the
+/// golden oracle — every bitwise pin in the test suite is stated
+/// against it, exactly the way gather dispatch backs grouped dispatch.
+/// `Simd` selects the explicit AVX2+FMA kernels when the CPU supports
+/// them (checked once per call via [`simd_available`], falling back to
+/// scalar otherwise), equivalence-tested to ≤1e-4 but never bitwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// portable scalar loops (default; the correctness oracle)
+    #[default]
+    Scalar,
+    /// runtime-dispatched AVX2+FMA wide-lane kernels
+    Simd,
+}
+
+impl KernelMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelMode::Scalar => "scalar",
+            KernelMode::Simd => "simd",
+        }
+    }
+}
+
+/// True when the explicit SIMD kernels can run on this CPU (x86-64 with
+/// AVX2 and FMA). `KernelMode::Simd` degrades to scalar when false, so
+/// requesting SIMD is always safe.
+#[cfg(target_arch = "x86_64")]
+pub fn simd_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// True when the explicit SIMD kernels can run on this CPU.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn simd_available() -> bool {
+    false
+}
+
+#[inline]
+fn simd_on(mode: KernelMode) -> bool {
+    mode == KernelMode::Simd && simd_available()
+}
+
+/// Storage dtype of a packed expert panel. Decode is memory-bound, so
+/// panel bytes are the latency currency: bf16 halves them at ~2^-8
+/// relative rounding, int8 (per-packed-row scale) cuts them ~4× at a
+/// quality delta the eval harness measures rather than assumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PanelDtype {
+    /// full precision (default; all bitwise pins hold)
+    #[default]
+    F32,
+    /// truncated-mantissa f32 (round-to-nearest-even high 16 bits)
+    Bf16,
+    /// symmetric int8 with one f32 scale per packed `[n_pad]` row
+    Int8,
+}
+
+impl PanelDtype {
+    pub fn label(self) -> &'static str {
+        match self {
+            PanelDtype::F32 => "f32",
+            PanelDtype::Bf16 => "bf16",
+            PanelDtype::Int8 => "int8",
+        }
+    }
+}
+
+/// Round-to-nearest-even truncation of an f32 to bf16 bits.
+#[inline]
+pub fn bf16_from_f32(x: f32) -> u16 {
+    let b = x.to_bits();
+    (b.wrapping_add(0x7fff + ((b >> 16) & 1)) >> 16) as u16
+}
+
+/// Widen bf16 bits back to f32 (exact).
+#[inline]
+pub fn bf16_to_f32(u: u16) -> f32 {
+    f32::from_bits((u as u32) << 16)
+}
+
+/// Dtype-tagged panel storage behind [`PackedMat`]. Int8 keeps one f32
+/// scale per packed row (`experts * k` scales), chosen as
+/// `max_abs(row) / 127` so dequant is a single multiply fused into the
+/// GEMM coefficient.
+#[derive(Debug, Clone)]
+enum PanelData {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    I8 { q: Vec<i8>, scale: Vec<f32> },
+}
+
+/// A borrowed view of one expert's `[k, n_pad]` panel in its storage
+/// dtype; what the dtype-dispatched GEMM ([`matmul_view`]) consumes.
+#[derive(Debug, Clone, Copy)]
+pub enum PanelView<'a> {
+    F32(&'a [f32]),
+    Bf16(&'a [u16]),
+    I8 { q: &'a [i8], scale: &'a [f32] },
+}
+
+impl PanelView<'_> {
+    /// Element count of the viewed panel (`k * n_pad`).
+    pub fn len(&self) -> usize {
+        match self {
+            PanelView::F32(p) => p.len(),
+            PanelView::Bf16(p) => p.len(),
+            PanelView::I8 { q, .. } => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// A weight matrix (or a bank of per-expert matrices) pre-packed for
 /// [`matmul_packed`]: row-major `[K, n_pad]` panels with `n_pad` the
 /// column count rounded up to [`LANES`] and the padding columns zeroed.
 /// The `[K, N]` orientation means the GEMM inner loop streams weight rows
 /// contiguously (the layout `ref.py` already uses), and the padding keeps
-/// every row a whole number of vector lanes.
+/// every row a whole number of vector lanes. Panels may be stored
+/// quantized ([`PanelDtype`]); quantization happens once at pack time
+/// and dequant is fused into the micro-kernel.
 #[derive(Debug, Clone)]
 pub struct PackedMat {
     /// reduction dimension (rows of one panel)
@@ -48,26 +166,106 @@ pub struct PackedMat {
     pub n_pad: usize,
     /// number of stacked per-expert panels
     pub experts: usize,
-    data: Vec<f32>,
+    data: PanelData,
 }
 
 impl PackedMat {
-    /// Pack `experts` stacked `[k, n]` row-major matrices.
+    /// Pack `experts` stacked `[k, n]` row-major matrices at f32.
     pub fn pack(raw: &[f32], experts: usize, k: usize, n: usize) -> PackedMat {
+        Self::pack_dtype(raw, experts, k, n, PanelDtype::F32)
+    }
+
+    /// Pack `experts` stacked `[k, n]` row-major matrices, quantizing to
+    /// `dtype` at pack time.
+    pub fn pack_dtype(
+        raw: &[f32],
+        experts: usize,
+        k: usize,
+        n: usize,
+        dtype: PanelDtype,
+    ) -> PackedMat {
         debug_assert_eq!(raw.len(), experts * k * n);
         let n_pad = n.div_ceil(LANES) * LANES;
-        let mut data = vec![0.0f32; experts * k * n_pad];
-        for row in 0..experts * k {
-            data[row * n_pad..row * n_pad + n].copy_from_slice(&raw[row * n..(row + 1) * n]);
+        let rows = experts * k;
+        let mut padded = vec![0.0f32; rows * n_pad];
+        for row in 0..rows {
+            padded[row * n_pad..row * n_pad + n].copy_from_slice(&raw[row * n..(row + 1) * n]);
         }
+        let data = match dtype {
+            PanelDtype::F32 => PanelData::F32(padded),
+            PanelDtype::Bf16 => {
+                PanelData::Bf16(padded.iter().map(|&x| bf16_from_f32(x)).collect())
+            }
+            PanelDtype::Int8 => {
+                let mut q = vec![0i8; rows * n_pad];
+                let mut scale = vec![0.0f32; rows];
+                for row in 0..rows {
+                    let src = &padded[row * n_pad..(row + 1) * n_pad];
+                    let amax = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                    if amax > 0.0 {
+                        let s = amax / 127.0;
+                        scale[row] = s;
+                        let inv = 1.0 / s;
+                        for (dst, &x) in q[row * n_pad..(row + 1) * n_pad].iter_mut().zip(src) {
+                            *dst = (x * inv).round().clamp(-127.0, 127.0) as i8;
+                        }
+                    }
+                }
+                PanelData::I8 { q, scale }
+            }
+        };
         PackedMat { k, n, n_pad, experts, data }
     }
 
-    /// Expert `e`'s `[k, n_pad]` panel.
+    /// Storage dtype of the panels.
+    pub fn dtype(&self) -> PanelDtype {
+        match &self.data {
+            PanelData::F32(_) => PanelDtype::F32,
+            PanelData::Bf16(_) => PanelDtype::Bf16,
+            PanelData::I8 { .. } => PanelDtype::Int8,
+        }
+    }
+
+    /// Bytes actually resident for the packed bank — the number the
+    /// residency plane charges per page-in, so it must track the
+    /// storage dtype, not a hard-coded f32.
+    pub fn bytes(&self) -> usize {
+        let elems = self.experts * self.k * self.n_pad;
+        match &self.data {
+            PanelData::F32(_) => elems * std::mem::size_of::<f32>(),
+            PanelData::Bf16(_) => elems * std::mem::size_of::<u16>(),
+            PanelData::I8 { .. } => {
+                elems + self.experts * self.k * std::mem::size_of::<f32>()
+            }
+        }
+    }
+
+    /// Expert `e`'s `[k, n_pad]` panel as f32. Panics for quantized
+    /// panels — quantized consumers go through [`PackedMat::expert_view`].
     #[inline]
     pub fn expert(&self, e: usize) -> &[f32] {
         let stride = self.k * self.n_pad;
-        &self.data[e * stride..(e + 1) * stride]
+        match &self.data {
+            PanelData::F32(d) => &d[e * stride..(e + 1) * stride],
+            _ => panic!(
+                "PackedMat::expert is f32-only (panel dtype is {}); use expert_view",
+                self.dtype().label()
+            ),
+        }
+    }
+
+    /// Expert `e`'s `[k, n_pad]` panel in its storage dtype.
+    #[inline]
+    pub fn expert_view(&self, e: usize) -> PanelView<'_> {
+        let stride = self.k * self.n_pad;
+        match &self.data {
+            PanelData::F32(d) => PanelView::F32(&d[e * stride..(e + 1) * stride]),
+            PanelData::Bf16(d) => PanelView::Bf16(&d[e * stride..(e + 1) * stride]),
+            PanelData::I8 { q, scale } => PanelView::I8 {
+                q: &q[e * stride..(e + 1) * stride],
+                scale: &scale[e * self.k..(e + 1) * self.k],
+            },
+        }
     }
 }
 
@@ -149,6 +347,551 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     out
 }
 
+/// Scalar GEMM over a bf16-stored panel: widen each weight element to
+/// f32 in the inner loop (exact — bf16 is a truncated f32). The scalar
+/// oracle for the AVX2 bf16 kernel.
+pub fn matmul_packed_bf16(
+    a: &[f32],
+    lda: usize,
+    panel: &[u16],
+    k: usize,
+    n_pad: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(m == 0 || a.len() >= (m - 1) * lda + k);
+    debug_assert_eq!(panel.len(), k * n_pad);
+    debug_assert_eq!(out.len(), m * n_pad);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * lda..i * lda + k];
+        let orow = &mut out[i * n_pad..(i + 1) * n_pad];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &panel[kk * n_pad..(kk + 1) * n_pad];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bf16_to_f32(bv);
+            }
+        }
+    }
+}
+
+/// Scalar GEMM over an int8-stored panel with one f32 `scale` per packed
+/// row: dequant is fused into the coefficient (`c = a[kk] * scale[kk]`),
+/// so the inner loop is one int→float convert and one FMA per element.
+/// The scalar oracle for the AVX2 int8 kernel.
+pub fn matmul_packed_i8(
+    a: &[f32],
+    lda: usize,
+    q: &[i8],
+    scale: &[f32],
+    k: usize,
+    n_pad: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(m == 0 || a.len() >= (m - 1) * lda + k);
+    debug_assert_eq!(q.len(), k * n_pad);
+    debug_assert_eq!(scale.len(), k);
+    debug_assert_eq!(out.len(), m * n_pad);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * lda..i * lda + k];
+        let orow = &mut out[i * n_pad..(i + 1) * n_pad];
+        for (kk, &av) in arow.iter().enumerate() {
+            let c = av * scale[kk];
+            if c == 0.0 {
+                continue;
+            }
+            let brow = &q[kk * n_pad..(kk + 1) * n_pad];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += c * bv as f32;
+            }
+        }
+    }
+}
+
+/// Mode-dispatched f32 GEMM: the AVX2 micro-kernel when `mode` asks for
+/// SIMD, the CPU supports it, and the panel stride is lane-aligned
+/// (packed panels always are; dense callers with odd `n_pad` fall back
+/// to scalar). Results match scalar to ≤1e-4, never bitwise.
+pub fn matmul_packed_mode(
+    a: &[f32],
+    lda: usize,
+    panel: &[f32],
+    k: usize,
+    n_pad: usize,
+    m: usize,
+    out: &mut [f32],
+    mode: KernelMode,
+) {
+    if simd_on(mode) && n_pad % LANES == 0 {
+        #[cfg(target_arch = "x86_64")]
+        {
+            debug_assert!(m == 0 || a.len() >= (m - 1) * lda + k);
+            debug_assert_eq!(panel.len(), k * n_pad);
+            debug_assert_eq!(out.len(), m * n_pad);
+            unsafe { simd::matmul_f32(a, lda, panel, k, n_pad, m, out) };
+            return;
+        }
+    }
+    matmul_packed(a, lda, panel, k, n_pad, m, out);
+}
+
+/// Dtype- and mode-dispatched GEMM over one expert panel view; the
+/// single entry point the grouped-dispatch hot path uses.
+pub fn matmul_view(
+    a: &[f32],
+    lda: usize,
+    panel: PanelView<'_>,
+    k: usize,
+    n_pad: usize,
+    m: usize,
+    out: &mut [f32],
+    mode: KernelMode,
+) {
+    match panel {
+        PanelView::F32(p) => matmul_packed_mode(a, lda, p, k, n_pad, m, out, mode),
+        PanelView::Bf16(p) => {
+            if simd_on(mode) && n_pad % LANES == 0 {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    debug_assert!(m == 0 || a.len() >= (m - 1) * lda + k);
+                    debug_assert_eq!(p.len(), k * n_pad);
+                    debug_assert_eq!(out.len(), m * n_pad);
+                    unsafe { simd::matmul_bf16(a, lda, p, k, n_pad, m, out) };
+                    return;
+                }
+            }
+            matmul_packed_bf16(a, lda, p, k, n_pad, m, out);
+        }
+        PanelView::I8 { q, scale } => {
+            if simd_on(mode) && n_pad % LANES == 0 {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    debug_assert!(m == 0 || a.len() >= (m - 1) * lda + k);
+                    debug_assert_eq!(q.len(), k * n_pad);
+                    debug_assert_eq!(scale.len(), k);
+                    debug_assert_eq!(out.len(), m * n_pad);
+                    unsafe { simd::matmul_i8(a, lda, q, scale, k, n_pad, m, out) };
+                    return;
+                }
+            }
+            matmul_packed_i8(a, lda, q, scale, k, n_pad, m, out);
+        }
+    }
+}
+
+/// Explicit AVX2+FMA kernels. Every `unsafe fn` here is sound only on a
+/// CPU with AVX2 and FMA; callers gate on [`simd_available`] (and
+/// lane-aligned strides for the GEMMs). The vectorized `exp` is the
+/// classic Cephes-style degree-5 polynomial with two-step ln2 range
+/// reduction — ~1e-7 relative error, far inside the ≤1e-4 equivalence
+/// budget the tests enforce.
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use core::arch::x86_64::*;
+
+    /// Horizontal sum of 8 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Horizontal max of 8 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hmax(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_max_ps(lo, hi);
+        let s = _mm_max_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_max_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Vectorized `exp(x)` (Cephes polynomial, inputs clamped to the
+    /// finite-f32 exponent range).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp_ps(x: __m256) -> __m256 {
+        let x = _mm256_min_ps(x, _mm256_set1_ps(88.376_26));
+        let x = _mm256_max_ps(x, _mm256_set1_ps(-88.376_26));
+        // n = round(x * log2(e)) via floor(x * log2e + 0.5)
+        let fx = _mm256_fmadd_ps(
+            x,
+            _mm256_set1_ps(std::f32::consts::LOG2_E),
+            _mm256_set1_ps(0.5),
+        );
+        let fx = _mm256_floor_ps(fx);
+        // r = x - n*ln2 in two steps for extra precision
+        let mut r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(0.693_359_4), x);
+        r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(-2.121_944_4e-4), r);
+        let r2 = _mm256_mul_ps(r, r);
+        let mut y = _mm256_set1_ps(1.987_569_1e-4);
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(1.398_199_9e-3));
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(8.333_452e-3));
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(4.166_579_6e-2));
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(1.666_666_5e-1));
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(5.000_000_3e-1));
+        y = _mm256_fmadd_ps(y, r2, r);
+        y = _mm256_add_ps(y, _mm256_set1_ps(1.0));
+        // scale by 2^n through the exponent bits
+        let n = _mm256_cvttps_epi32(fx);
+        let pow2n = _mm256_castsi256_ps(_mm256_slli_epi32(
+            _mm256_add_epi32(n, _mm256_set1_epi32(0x7f)),
+            23,
+        ));
+        _mm256_mul_ps(y, pow2n)
+    }
+
+    /// Widen 8 bf16 values to an f32 vector (exact).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn load_bf16(p: *const u16) -> __m256 {
+        let h = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32(_mm256_cvtepu16_epi32(h), 16))
+    }
+
+    /// Widen 8 int8 values to an f32 vector.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn load_i8(p: *const i8) -> __m256 {
+        let b = _mm_loadl_epi64(p as *const __m128i);
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(b))
+    }
+
+    /// AVX2 f32 GEMM: 4 output rows × 16 columns of register blocking
+    /// (8 ymm accumulators), each streamed panel row reused 4×, FMA
+    /// throughput-bound at decode shapes. Requires `n_pad % 8 == 0`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matmul_f32(
+        a: &[f32],
+        lda: usize,
+        panel: &[f32],
+        k: usize,
+        n_pad: usize,
+        m: usize,
+        out: &mut [f32],
+    ) {
+        out.fill(0.0);
+        let ap = a.as_ptr();
+        let pp = panel.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= m {
+            let a0 = ap.add(i * lda);
+            let a1 = ap.add((i + 1) * lda);
+            let a2 = ap.add((i + 2) * lda);
+            let a3 = ap.add((i + 3) * lda);
+            let o0 = op.add(i * n_pad);
+            let o1 = op.add((i + 1) * n_pad);
+            let o2 = op.add((i + 2) * n_pad);
+            let o3 = op.add((i + 3) * n_pad);
+            let mut j = 0;
+            while j + 16 <= n_pad {
+                let mut c00 = _mm256_setzero_ps();
+                let mut c01 = _mm256_setzero_ps();
+                let mut c10 = _mm256_setzero_ps();
+                let mut c11 = _mm256_setzero_ps();
+                let mut c20 = _mm256_setzero_ps();
+                let mut c21 = _mm256_setzero_ps();
+                let mut c30 = _mm256_setzero_ps();
+                let mut c31 = _mm256_setzero_ps();
+                for kk in 0..k {
+                    let bp = pp.add(kk * n_pad + j);
+                    let b0 = _mm256_loadu_ps(bp);
+                    let b1 = _mm256_loadu_ps(bp.add(8));
+                    let v0 = _mm256_set1_ps(*a0.add(kk));
+                    c00 = _mm256_fmadd_ps(v0, b0, c00);
+                    c01 = _mm256_fmadd_ps(v0, b1, c01);
+                    let v1 = _mm256_set1_ps(*a1.add(kk));
+                    c10 = _mm256_fmadd_ps(v1, b0, c10);
+                    c11 = _mm256_fmadd_ps(v1, b1, c11);
+                    let v2 = _mm256_set1_ps(*a2.add(kk));
+                    c20 = _mm256_fmadd_ps(v2, b0, c20);
+                    c21 = _mm256_fmadd_ps(v2, b1, c21);
+                    let v3 = _mm256_set1_ps(*a3.add(kk));
+                    c30 = _mm256_fmadd_ps(v3, b0, c30);
+                    c31 = _mm256_fmadd_ps(v3, b1, c31);
+                }
+                _mm256_storeu_ps(o0.add(j), c00);
+                _mm256_storeu_ps(o0.add(j + 8), c01);
+                _mm256_storeu_ps(o1.add(j), c10);
+                _mm256_storeu_ps(o1.add(j + 8), c11);
+                _mm256_storeu_ps(o2.add(j), c20);
+                _mm256_storeu_ps(o2.add(j + 8), c21);
+                _mm256_storeu_ps(o3.add(j), c30);
+                _mm256_storeu_ps(o3.add(j + 8), c31);
+                j += 16;
+            }
+            while j < n_pad {
+                let mut c0 = _mm256_setzero_ps();
+                let mut c1 = _mm256_setzero_ps();
+                let mut c2 = _mm256_setzero_ps();
+                let mut c3 = _mm256_setzero_ps();
+                for kk in 0..k {
+                    let b0 = _mm256_loadu_ps(pp.add(kk * n_pad + j));
+                    c0 = _mm256_fmadd_ps(_mm256_set1_ps(*a0.add(kk)), b0, c0);
+                    c1 = _mm256_fmadd_ps(_mm256_set1_ps(*a1.add(kk)), b0, c1);
+                    c2 = _mm256_fmadd_ps(_mm256_set1_ps(*a2.add(kk)), b0, c2);
+                    c3 = _mm256_fmadd_ps(_mm256_set1_ps(*a3.add(kk)), b0, c3);
+                }
+                _mm256_storeu_ps(o0.add(j), c0);
+                _mm256_storeu_ps(o1.add(j), c1);
+                _mm256_storeu_ps(o2.add(j), c2);
+                _mm256_storeu_ps(o3.add(j), c3);
+                j += 8;
+            }
+            i += 4;
+        }
+        while i < m {
+            let arow = ap.add(i * lda);
+            let orow = op.add(i * n_pad);
+            let mut j = 0;
+            while j < n_pad {
+                let mut c0 = _mm256_setzero_ps();
+                for kk in 0..k {
+                    let b0 = _mm256_loadu_ps(pp.add(kk * n_pad + j));
+                    c0 = _mm256_fmadd_ps(_mm256_set1_ps(*arow.add(kk)), b0, c0);
+                }
+                _mm256_storeu_ps(orow.add(j), c0);
+                j += 8;
+            }
+            i += 1;
+        }
+    }
+
+    /// AVX2 bf16 GEMM: widen 8 weights per load, then the same FMA
+    /// pattern as the f32 kernel (4 rows × 8 columns).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matmul_bf16(
+        a: &[f32],
+        lda: usize,
+        panel: &[u16],
+        k: usize,
+        n_pad: usize,
+        m: usize,
+        out: &mut [f32],
+    ) {
+        out.fill(0.0);
+        let ap = a.as_ptr();
+        let pp = panel.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= m {
+            let a0 = ap.add(i * lda);
+            let a1 = ap.add((i + 1) * lda);
+            let a2 = ap.add((i + 2) * lda);
+            let a3 = ap.add((i + 3) * lda);
+            let mut j = 0;
+            while j < n_pad {
+                let mut c0 = _mm256_setzero_ps();
+                let mut c1 = _mm256_setzero_ps();
+                let mut c2 = _mm256_setzero_ps();
+                let mut c3 = _mm256_setzero_ps();
+                for kk in 0..k {
+                    let b0 = load_bf16(pp.add(kk * n_pad + j));
+                    c0 = _mm256_fmadd_ps(_mm256_set1_ps(*a0.add(kk)), b0, c0);
+                    c1 = _mm256_fmadd_ps(_mm256_set1_ps(*a1.add(kk)), b0, c1);
+                    c2 = _mm256_fmadd_ps(_mm256_set1_ps(*a2.add(kk)), b0, c2);
+                    c3 = _mm256_fmadd_ps(_mm256_set1_ps(*a3.add(kk)), b0, c3);
+                }
+                _mm256_storeu_ps(op.add(i * n_pad + j), c0);
+                _mm256_storeu_ps(op.add((i + 1) * n_pad + j), c1);
+                _mm256_storeu_ps(op.add((i + 2) * n_pad + j), c2);
+                _mm256_storeu_ps(op.add((i + 3) * n_pad + j), c3);
+                j += 8;
+            }
+            i += 4;
+        }
+        while i < m {
+            let arow = ap.add(i * lda);
+            let mut j = 0;
+            while j < n_pad {
+                let mut c0 = _mm256_setzero_ps();
+                for kk in 0..k {
+                    let b0 = load_bf16(pp.add(kk * n_pad + j));
+                    c0 = _mm256_fmadd_ps(_mm256_set1_ps(*arow.add(kk)), b0, c0);
+                }
+                _mm256_storeu_ps(op.add(i * n_pad + j), c0);
+                j += 8;
+            }
+            i += 1;
+        }
+    }
+
+    /// AVX2 int8 GEMM with fused per-row dequant: the broadcast
+    /// coefficient is `a[kk] * scale[kk]`, so the inner loop is one
+    /// sign-extend + convert + FMA per 8 weights (4 rows × 8 columns).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matmul_i8(
+        a: &[f32],
+        lda: usize,
+        q: &[i8],
+        scale: &[f32],
+        k: usize,
+        n_pad: usize,
+        m: usize,
+        out: &mut [f32],
+    ) {
+        out.fill(0.0);
+        let ap = a.as_ptr();
+        let qp = q.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= m {
+            let a0 = ap.add(i * lda);
+            let a1 = ap.add((i + 1) * lda);
+            let a2 = ap.add((i + 2) * lda);
+            let a3 = ap.add((i + 3) * lda);
+            let mut j = 0;
+            while j < n_pad {
+                let mut c0 = _mm256_setzero_ps();
+                let mut c1 = _mm256_setzero_ps();
+                let mut c2 = _mm256_setzero_ps();
+                let mut c3 = _mm256_setzero_ps();
+                for (kk, &s) in scale.iter().enumerate().take(k) {
+                    let b0 = load_i8(qp.add(kk * n_pad + j));
+                    c0 = _mm256_fmadd_ps(_mm256_set1_ps(*a0.add(kk) * s), b0, c0);
+                    c1 = _mm256_fmadd_ps(_mm256_set1_ps(*a1.add(kk) * s), b0, c1);
+                    c2 = _mm256_fmadd_ps(_mm256_set1_ps(*a2.add(kk) * s), b0, c2);
+                    c3 = _mm256_fmadd_ps(_mm256_set1_ps(*a3.add(kk) * s), b0, c3);
+                }
+                _mm256_storeu_ps(op.add(i * n_pad + j), c0);
+                _mm256_storeu_ps(op.add((i + 1) * n_pad + j), c1);
+                _mm256_storeu_ps(op.add((i + 2) * n_pad + j), c2);
+                _mm256_storeu_ps(op.add((i + 3) * n_pad + j), c3);
+                j += 8;
+            }
+            i += 4;
+        }
+        while i < m {
+            let arow = ap.add(i * lda);
+            let mut j = 0;
+            while j < n_pad {
+                let mut c0 = _mm256_setzero_ps();
+                for (kk, &s) in scale.iter().enumerate().take(k) {
+                    let b0 = load_i8(qp.add(kk * n_pad + j));
+                    c0 = _mm256_fmadd_ps(_mm256_set1_ps(*arow.add(kk) * s), b0, c0);
+                }
+                _mm256_storeu_ps(op.add(i * n_pad + j), c0);
+                j += 8;
+            }
+            i += 1;
+        }
+    }
+
+    /// Vectorized fused SwiGLU: `g = silu(g) * u` with the Cephes exp;
+    /// scalar (libm) tail for the last `len % 8` elements.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn silu_mul(g: &mut [f32], u: &[f32]) {
+        let n = g.len();
+        let gp = g.as_mut_ptr();
+        let up = u.as_ptr();
+        let one = _mm256_set1_ps(1.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            let gv = _mm256_loadu_ps(gp.add(i));
+            let uv = _mm256_loadu_ps(up.add(i));
+            let e = exp_ps(_mm256_sub_ps(_mm256_setzero_ps(), gv));
+            let s = _mm256_div_ps(gv, _mm256_add_ps(one, e));
+            _mm256_storeu_ps(gp.add(i), _mm256_mul_ps(s, uv));
+            i += 8;
+        }
+        for j in i..n {
+            let x = *gp.add(j);
+            *gp.add(j) = x / (1.0 + (-x).exp()) * *up.add(j);
+        }
+    }
+
+    /// Vectorized RMSNorm: FMA sum-of-squares reduction, then one
+    /// multiply pass; scalar tails for `d % 8`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn rmsnorm_into(h: &[f32], scale: &[f32], d: usize, eps: f32, out: &mut [f32]) {
+        let rows = h.len() / d;
+        let sp = scale.as_ptr();
+        for r in 0..rows {
+            let row = h.as_ptr().add(r * d);
+            let orow = out.as_mut_ptr().add(r * d);
+            let mut acc = _mm256_setzero_ps();
+            let mut i = 0;
+            while i + 8 <= d {
+                let v = _mm256_loadu_ps(row.add(i));
+                acc = _mm256_fmadd_ps(v, v, acc);
+                i += 8;
+            }
+            let mut ms = hsum(acc);
+            for j in i..d {
+                let x = *row.add(j);
+                ms += x * x;
+            }
+            ms /= d as f32;
+            let inv = 1.0 / (ms + eps).sqrt();
+            let vinv = _mm256_set1_ps(inv);
+            i = 0;
+            while i + 8 <= d {
+                let v = _mm256_loadu_ps(row.add(i));
+                let s = _mm256_loadu_ps(sp.add(i));
+                _mm256_storeu_ps(orow.add(i), _mm256_mul_ps(_mm256_mul_ps(v, vinv), s));
+                i += 8;
+            }
+            for j in i..d {
+                *orow.add(j) = *row.add(j) * inv * *sp.add(j);
+            }
+        }
+    }
+
+    /// Vectorized numerically-stable softmax per row: max, Cephes exp +
+    /// running sum, then scale by the reciprocal; scalar tails for
+    /// `n % 8`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn softmax_rows(x: &mut [f32], n: usize) {
+        for row in x.chunks_exact_mut(n) {
+            let rp = row.as_mut_ptr();
+            let mut vmax = _mm256_set1_ps(f32::NEG_INFINITY);
+            let mut i = 0;
+            while i + 8 <= n {
+                vmax = _mm256_max_ps(vmax, _mm256_loadu_ps(rp.add(i)));
+                i += 8;
+            }
+            let mut m = hmax(vmax);
+            for j in i..n {
+                m = m.max(*rp.add(j));
+            }
+            let vm = _mm256_set1_ps(m);
+            let mut vsum = _mm256_setzero_ps();
+            i = 0;
+            while i + 8 <= n {
+                let e = exp_ps(_mm256_sub_ps(_mm256_loadu_ps(rp.add(i)), vm));
+                _mm256_storeu_ps(rp.add(i), e);
+                vsum = _mm256_add_ps(vsum, e);
+                i += 8;
+            }
+            let mut z = hsum(vsum);
+            for j in i..n {
+                let e = (*rp.add(j) - m).exp();
+                *rp.add(j) = e;
+                z += e;
+            }
+            let vz = _mm256_set1_ps(1.0 / z);
+            i = 0;
+            while i + 8 <= n {
+                _mm256_storeu_ps(rp.add(i), _mm256_mul_ps(_mm256_loadu_ps(rp.add(i)), vz));
+                i += 8;
+            }
+            for j in i..n {
+                *rp.add(j) /= z;
+            }
+        }
+    }
+}
+
 /// RMSNorm per row into a caller buffer: `h / sqrt(mean(h^2) + eps) *
 /// scale` (ref.rmsnorm_ref).
 pub fn rmsnorm_into(h: &[f32], scale: &[f32], d: usize, eps: f32, out: &mut [f32]) {
@@ -201,7 +944,80 @@ pub fn silu_mul(g: &mut [f32], u: &[f32]) {
     }
 }
 
+/// Mode-dispatched [`rmsnorm_into`].
+pub fn rmsnorm_into_mode(
+    h: &[f32],
+    scale: &[f32],
+    d: usize,
+    eps: f32,
+    out: &mut [f32],
+    mode: KernelMode,
+) {
+    if simd_on(mode) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            debug_assert_eq!(h.len() % d, 0);
+            debug_assert_eq!(scale.len(), d);
+            debug_assert_eq!(out.len(), h.len());
+            unsafe { simd::rmsnorm_into(h, scale, d, eps, out) };
+            return;
+        }
+    }
+    rmsnorm_into(h, scale, d, eps, out);
+}
+
+/// Mode-dispatched [`silu_mul`].
+pub fn silu_mul_mode(g: &mut [f32], u: &[f32], mode: KernelMode) {
+    if simd_on(mode) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            debug_assert_eq!(g.len(), u.len());
+            unsafe { simd::silu_mul(g, u) };
+            return;
+        }
+    }
+    silu_mul(g, u);
+}
+
+/// Mode-dispatched [`softmax_rows`].
+pub fn softmax_rows_mode(x: &mut [f32], n: usize, mode: KernelMode) {
+    if simd_on(mode) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            debug_assert_eq!(x.len() % n, 0);
+            unsafe { simd::softmax_rows(x, n) };
+            return;
+        }
+    }
+    softmax_rows(x, n);
+}
+
+/// Router scores into caller buffers: `out = softmax(rmsnorm(h, n2) @
+/// w)` with `hn` as the `[B, D]` norm scratch — the allocation-free form
+/// the per-layer hot path uses (scratch comes from the backend pool).
+#[allow(clippy::too_many_arguments)]
+pub fn router_scores_into(
+    h: &[f32],
+    n2: &[f32],
+    w: &[f32],
+    b: usize,
+    d: usize,
+    n_experts: usize,
+    eps: f32,
+    hn: &mut [f32],
+    out: &mut [f32],
+    mode: KernelMode,
+) {
+    debug_assert_eq!(hn.len(), b * d);
+    debug_assert_eq!(out.len(), b * n_experts);
+    rmsnorm_into_mode(h, n2, d, eps, hn, mode);
+    matmul_packed_mode(hn, d, w, d, n_experts, b, out, mode);
+    softmax_rows_mode(out, n_experts, mode);
+}
+
 /// Router scores: `softmax(rmsnorm(h, n2) @ w)` (ref.router_scores_ref).
+/// Allocating wrapper over [`router_scores_into`] at scalar mode — kept
+/// as the golden-fixture entry point.
 pub fn router_scores(
     h: &[f32],
     n2: &[f32],
@@ -211,9 +1027,9 @@ pub fn router_scores(
     n_experts: usize,
     eps: f32,
 ) -> Vec<f32> {
-    let hn = rmsnorm(h, n2, d, eps);
-    let mut s = matmul(&hn, w, b, d, n_experts);
-    softmax_rows(&mut s, n_experts);
+    let mut hn = vec![0.0f32; b * d];
+    let mut s = vec![0.0f32; b * n_experts];
+    router_scores_into(h, n2, w, b, d, n_experts, eps, &mut hn, &mut s, KernelMode::Scalar);
     s
 }
 
@@ -449,11 +1265,12 @@ pub fn moe_ffn_gather(
 /// whole-layer pack ([`moe_ffn_groups`]) and the residency path's
 /// lazily-paged per-expert panels — the same micro-kernels run on the
 /// same panel bytes, so the two paths are bitwise-identical.
+#[allow(clippy::too_many_arguments)]
 pub fn moe_ffn_group_rows(
     x: &[f32],
-    wg_panel: &[f32],
-    wu_panel: &[f32],
-    wd_panel: &[f32],
+    wg_panel: PanelView<'_>,
+    wu_panel: PanelView<'_>,
+    wd_panel: PanelView<'_>,
     d: usize,
     h: usize,
     h_pad: usize,
@@ -462,6 +1279,7 @@ pub fn moe_ffn_group_rows(
     weights: &[f32],
     acc: &mut [f32],
     arena: &mut Arena,
+    mode: KernelMode,
 ) {
     let m = rows.len();
     if m == 0 {
@@ -479,10 +1297,10 @@ pub fn moe_ffn_group_rows(
         let r = r as usize;
         xg[j * d..(j + 1) * d].copy_from_slice(&x[r * d..(r + 1) * d]);
     }
-    matmul_packed(&xg, d, wg_panel, d, h_pad, m, &mut g);
-    matmul_packed(&xg, d, wu_panel, d, h_pad, m, &mut u);
-    silu_mul(&mut g, &u);
-    matmul_packed(&g, h_pad, wd_panel, h, d_pad, m, &mut y);
+    matmul_view(&xg, d, wg_panel, d, h_pad, m, &mut g, mode);
+    matmul_view(&xg, d, wu_panel, d, h_pad, m, &mut u, mode);
+    silu_mul_mode(&mut g, &u, mode);
+    matmul_view(&g, h_pad, wd_panel, h, d_pad, m, &mut y, mode);
     for (j, (&r, &w)) in rows.iter().zip(weights.iter()).enumerate() {
         let r = r as usize;
         let orow = &mut acc[r * d..(r + 1) * d];
@@ -511,6 +1329,7 @@ pub fn moe_ffn_group_rows(
 /// shard), indexed by `expert - e_base`. A whole-layer pack passes 0.
 /// Per-expert panel rows are byte-identical however the shard was cut,
 /// so sharded execution is bitwise-equal to whole-layer execution.
+#[allow(clippy::too_many_arguments)]
 pub fn moe_ffn_groups(
     x: &[f32],
     wg: &PackedMat,
@@ -522,6 +1341,7 @@ pub fn moe_ffn_groups(
     g1: usize,
     acc: &mut [f32],
     arena: &mut Arena,
+    mode: KernelMode,
 ) {
     let d = wg.k;
     let h = wd.k;
@@ -538,9 +1358,9 @@ pub fn moe_ffn_groups(
         let e = grp.expert - e_base;
         moe_ffn_group_rows(
             x,
-            wg.expert(e),
-            wu.expert(e),
-            wd.expert(e),
+            wg.expert_view(e),
+            wu.expert_view(e),
+            wd.expert_view(e),
             d,
             h,
             h_pad,
@@ -549,6 +1369,7 @@ pub fn moe_ffn_groups(
             grp.weights,
             acc,
             arena,
+            mode,
         );
     }
 }
@@ -753,15 +1574,16 @@ mod tests {
         let groups = ExpertGroups::from_combine(&comb, &ids, b, n);
         let mut acc = vec![0.0f32; b * d];
         let mut arena = Arena::new();
-        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, 0, groups.len(), &mut acc, &mut arena);
+        let sc = KernelMode::Scalar;
+        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, 0, groups.len(), &mut acc, &mut arena, sc);
         for (i, (g, w)) in acc.iter().zip(want.iter()).enumerate() {
             assert!((g - w).abs() < 1e-5, "[{i}] grouped {g} vs gather {w}");
         }
         // split ranges (the parallel chunking) must also agree
         let mut acc2 = vec![0.0f32; b * d];
         let mid = groups.len() / 2;
-        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, 0, mid, &mut acc2, &mut arena);
-        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, mid, groups.len(), &mut acc2, &mut arena);
+        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, 0, mid, &mut acc2, &mut arena, sc);
+        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, mid, groups.len(), &mut acc2, &mut arena, sc);
         assert_eq!(acc, acc2);
     }
 
@@ -782,7 +1604,8 @@ mod tests {
         assert_eq!(groups.routed_tokens(), 1);
         let mut acc = vec![0.0f32; b * d];
         let mut arena = Arena::new();
-        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, 0, groups.len(), &mut acc, &mut arena);
+        let sc = KernelMode::Scalar;
+        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, 0, groups.len(), &mut acc, &mut arena, sc);
         assert!(acc[..d].iter().all(|&v| v != 0.0));
         assert!(acc[d..].iter().all(|&v| v == 0.0), "unrouted rows touched");
     }
@@ -815,9 +1638,120 @@ mod tests {
         let pd = PackedMat::pack(&wd, n, h, d);
         let mut acc = vec![0.0f32; b * d];
         let mut arena = Arena::new();
-        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, 0, groups.len(), &mut acc, &mut arena);
+        let sc = KernelMode::Scalar;
+        moe_ffn_groups(&x, &pg, &pu, &pd, 0, &groups, 0, groups.len(), &mut acc, &mut arena, sc);
         for (g, w) in acc.iter().zip(want.iter()) {
             assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bf16_round_trip_is_exact_for_bf16_values() {
+        for x in [0.0f32, 1.0, -2.5, 0.15625, -1024.0] {
+            let u = bf16_from_f32(x);
+            let y = bf16_to_f32(u);
+            // these values are exactly representable in bf16
+            assert_eq!(x, y, "{x} -> {u:#06x} -> {y}");
+        }
+        // rounding is to nearest: error bounded by 2^-8 relative
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let x = rng.gaussian() as f32 * 3.0;
+            let y = bf16_to_f32(bf16_from_f32(x));
+            assert!((x - y).abs() <= x.abs() * 0.004 + 1e-30, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn quantized_packs_report_smaller_bytes() {
+        let raw: Vec<f32> = (0..4 * 6 * 8).map(|x| (x as f32).sin()).collect();
+        let f = PackedMat::pack_dtype(&raw, 4, 6, 8, PanelDtype::F32);
+        let b = PackedMat::pack_dtype(&raw, 4, 6, 8, PanelDtype::Bf16);
+        let q = PackedMat::pack_dtype(&raw, 4, 6, 8, PanelDtype::Int8);
+        assert_eq!(f.bytes(), 4 * 6 * 8 * 4);
+        assert_eq!(b.bytes(), f.bytes() / 2);
+        // int8: 1 byte/elem + one f32 scale per packed row
+        assert_eq!(q.bytes(), 4 * 6 * 8 + 4 * 6 * 4);
+        assert!(f.bytes() as f64 / q.bytes() as f64 >= 3.0);
+    }
+
+    #[test]
+    fn int8_quantization_error_bounded_by_half_scale_step() {
+        let mut rng = Rng::new(13);
+        let (e, k, n) = (2usize, 5usize, 11usize);
+        let raw: Vec<f32> = (0..e * k * n).map(|_| rng.gaussian() as f32).collect();
+        let p = PackedMat::pack_dtype(&raw, e, k, n, PanelDtype::Int8);
+        for ei in 0..e {
+            let (q, scale) = match p.expert_view(ei) {
+                PanelView::I8 { q, scale } => (q, scale),
+                _ => unreachable!(),
+            };
+            for kk in 0..k {
+                for j in 0..n {
+                    let x = raw[(ei * k + kk) * n + j];
+                    let deq = q[kk * p.n_pad + j] as f32 * scale[kk];
+                    assert!(
+                        (x - deq).abs() <= scale[kk] * 0.5 + 1e-7,
+                        "[{ei},{kk},{j}] {x} vs {deq} (scale {})",
+                        scale[kk]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_matmul_matches_dequantized_dense() {
+        // the fused-dequant GEMMs must equal an f32 GEMM over the
+        // explicitly dequantized panel (same math, different fusion)
+        let mut rng = Rng::new(17);
+        let (m, k, n) = (5usize, 7usize, 12usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gaussian() as f32).collect();
+        let raw: Vec<f32> = (0..k * n).map(|_| rng.gaussian() as f32).collect();
+        for dtype in [PanelDtype::Bf16, PanelDtype::Int8] {
+            let p = PackedMat::pack_dtype(&raw, 1, k, n, dtype);
+            let mut got = vec![0.0f32; m * p.n_pad];
+            matmul_view(&a, k, p.expert_view(0), k, p.n_pad, m, &mut got, KernelMode::Scalar);
+            // dequantize then run the f32 kernel
+            let deq: Vec<f32> = (0..k * p.n_pad)
+                .map(|i| match p.expert_view(0) {
+                    PanelView::Bf16(d) => bf16_to_f32(d[i]),
+                    PanelView::I8 { q, scale } => q[i] as f32 * scale[i / p.n_pad],
+                    PanelView::F32(d) => d[i],
+                })
+                .collect();
+            let mut want = vec![0.0f32; m * p.n_pad];
+            matmul_packed(&a, k, &deq, k, p.n_pad, m, &mut want);
+            for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert!((g - w).abs() < 1e-4, "{dtype:?}[{i}] {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_mode_falls_back_and_matches_scalar() {
+        // whatever the host CPU, the mode-dispatched wrappers must stay
+        // within equivalence tolerance of the scalar oracle (on non-AVX2
+        // hosts they ARE the scalar oracle)
+        let mut rng = Rng::new(23);
+        let (m, k, n) = (6usize, 9usize, 16usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gaussian() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gaussian() as f32).collect();
+        let mut want = vec![0.0f32; m * n];
+        matmul_packed(&a, k, &b, k, n, m, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        matmul_packed_mode(&a, k, &b, k, n, m, &mut got, KernelMode::Simd);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-4);
+        }
+        let g0: Vec<f32> = (0..64).map(|_| rng.gaussian() as f32).collect();
+        let u: Vec<f32> = (0..64).map(|_| rng.gaussian() as f32).collect();
+        let mut gs = g0.clone();
+        silu_mul(&mut gs, &u);
+        let mut gv = g0.clone();
+        silu_mul_mode(&mut gv, &u, KernelMode::Simd);
+        for (a1, b1) in gs.iter().zip(gv.iter()) {
+            assert!((a1 - b1).abs() < 1e-4);
         }
     }
 }

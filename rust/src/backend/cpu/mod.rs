@@ -54,7 +54,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
-use kernels::PackedMat;
+use kernels::{KernelMode, PackedMat, PanelDtype};
 
 /// How `moe_apply` executes the expert FFN. See the module docs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -88,6 +88,18 @@ pub struct CpuOptions {
     /// path, bitwise-identical to the pre-EP backend. Grouped dispatch
     /// only.
     pub ep_ranks: usize,
+    /// Kernel implementation for the hot paths
+    /// ([`kernels::KernelMode`]): the scalar oracle by default (all
+    /// bitwise pins hold), or runtime-detected AVX2+FMA SIMD. Requesting
+    /// SIMD on a host without the features silently degrades to scalar
+    /// (`kernels::simd_available`).
+    pub kernels: KernelMode,
+    /// Storage dtype of the packed expert panels
+    /// ([`kernels::PanelDtype`]): f32 (default, bitwise-pinned), bf16
+    /// (half the panel bytes), or int8 with per-row scales (~4× fewer
+    /// bytes). Quantized panels require grouped dispatch — the gather
+    /// oracle runs raw f32 weights.
+    pub panel_dtype: PanelDtype,
 }
 
 impl Default for CpuOptions {
@@ -97,15 +109,18 @@ impl Default for CpuOptions {
             threads: 0,
             residency: None,
             ep_ranks: 1,
+            kernels: KernelMode::Scalar,
+            panel_dtype: PanelDtype::F32,
         }
     }
 }
 
 impl CpuOptions {
     /// Environment overrides for benches and A/B runs:
-    /// `OEA_DISPATCH=grouped|gather`, `OEA_THREADS=<n>`. Panics on
-    /// unrecognized values — a typo must not silently measure the wrong
-    /// dispatch mode.
+    /// `OEA_DISPATCH=grouped|gather`, `OEA_THREADS=<n>`,
+    /// `OEA_KERNELS=scalar|simd`, `OEA_PANEL_DTYPE=f32|bf16|int8`.
+    /// Panics on unrecognized values — a typo must not silently measure
+    /// the wrong dispatch mode, kernel, or dtype.
     pub fn from_env() -> CpuOptions {
         let mut o = CpuOptions::default();
         if let Ok(v) = std::env::var("OEA_DISPATCH") {
@@ -120,6 +135,21 @@ impl CpuOptions {
                 .trim()
                 .parse::<usize>()
                 .unwrap_or_else(|_| panic!("OEA_THREADS={v:?}: not an integer"));
+        }
+        if let Ok(v) = std::env::var("OEA_KERNELS") {
+            o.kernels = match v.trim().to_ascii_lowercase().as_str() {
+                "scalar" => KernelMode::Scalar,
+                "simd" => KernelMode::Simd,
+                other => panic!("OEA_KERNELS={other:?}: expected scalar|simd"),
+            };
+        }
+        if let Ok(v) = std::env::var("OEA_PANEL_DTYPE") {
+            o.panel_dtype = match v.trim().to_ascii_lowercase().as_str() {
+                "f32" => PanelDtype::F32,
+                "bf16" => PanelDtype::Bf16,
+                "int8" => PanelDtype::Int8,
+                other => panic!("OEA_PANEL_DTYPE={other:?}: expected f32|bf16|int8"),
+            };
         }
         o
     }
@@ -175,20 +205,21 @@ pub struct ExpertPanels {
 
 impl ExpertPanels {
     /// Pack expert `e`'s three matrices out of the layer's raw weights —
-    /// byte-identical to the corresponding rows of the whole-layer pack,
-    /// which is what keeps residency execution bitwise-equal.
-    fn pack(lw: &LayerWeights, e: usize, d: usize, h: usize) -> ExpertPanels {
+    /// byte-identical to the corresponding rows of the whole-layer pack
+    /// at the same dtype, which is what keeps residency execution
+    /// bitwise-equal to the eager pack.
+    fn pack(lw: &LayerWeights, e: usize, d: usize, h: usize, dtype: PanelDtype) -> ExpertPanels {
         ExpertPanels {
-            wg: PackedMat::pack(&lw.wg[e * d * h..(e + 1) * d * h], 1, d, h),
-            wu: PackedMat::pack(&lw.wu[e * d * h..(e + 1) * d * h], 1, d, h),
-            wd: PackedMat::pack(&lw.wd[e * h * d..(e + 1) * h * d], 1, h, d),
+            wg: PackedMat::pack_dtype(&lw.wg[e * d * h..(e + 1) * d * h], 1, d, h, dtype),
+            wu: PackedMat::pack_dtype(&lw.wu[e * d * h..(e + 1) * d * h], 1, d, h, dtype),
+            wd: PackedMat::pack_dtype(&lw.wd[e * h * d..(e + 1) * h * d], 1, h, d, dtype),
         }
     }
 
-    /// Packed footprint in bytes (the page-in size the ledger charges).
+    /// Packed footprint in bytes (the page-in size the ledger charges) —
+    /// tracks the storage dtype, so quantized panels charge fewer bytes.
     fn bytes(&self) -> usize {
-        (self.wg.k * self.wg.n_pad + self.wu.k * self.wu.n_pad + self.wd.k * self.wd.n_pad)
-            * std::mem::size_of::<f32>()
+        self.wg.bytes() + self.wu.bytes() + self.wd.bytes()
     }
 }
 
@@ -211,9 +242,9 @@ struct RankResidency {
 
 impl RankResidency {
     /// Page shard-local expert `le`'s panels in (packing them if absent)
-    /// and charge this rank's ledger.
-    fn page_in(&mut self, lw: &LayerWeights, le: usize, d: usize, h: usize) {
-        let p = Arc::new(ExpertPanels::pack(lw, self.e0 + le, d, h));
+    /// and charge this rank's ledger at the panel dtype's byte size.
+    fn page_in(&mut self, lw: &LayerWeights, le: usize, d: usize, h: usize, dtype: PanelDtype) {
+        let p = Arc::new(ExpertPanels::pack(lw, self.e0 + le, d, h, dtype));
         self.counters.bytes_paged += p.bytes() as u64;
         self.panels[le] = Some(p);
     }
@@ -284,8 +315,24 @@ pub struct CpuBackend {
     /// EP rank shards the MoE stage executes over (1 = single-rank)
     ep_ranks: usize,
     mode: DispatchMode,
+    /// kernel implementation selected for the hot paths (scalar oracle
+    /// by default; SIMD degrades to scalar on unsupported hosts)
+    kernels_mode: KernelMode,
+    /// storage dtype the expert panels were packed in
+    panel_dtype: PanelDtype,
     /// worker pool for expert groups / attention rows (None = inline)
     pool: Option<ThreadPool>,
+    /// Pinned per-rank worker pools (grouped dispatch, `ep_ranks > 1`,
+    /// threaded): each EP rank's work list executes on its own subset of
+    /// `workers / ep_ranks` threads driven by one scope thread per rank,
+    /// so ranks genuinely overlap and per-rank wall time is measurable
+    /// ([`CpuBackend::rank_wall`]) — the wall-clock counterpart of the
+    /// cost model's analytic max-over-ranks step time. Empty = the
+    /// single-pool path.
+    rank_pools: Vec<ThreadPool>,
+    /// wall-clock µs each EP rank spent in the most recent grouped MoE
+    /// call (index = rank; empty until grouped dispatch has run)
+    rank_wall: Mutex<Vec<f64>>,
     /// shared scratch for buffers that cross threads or live across one
     /// backend call (hidden-state temporaries, partial accumulators)
     scratch: ScratchPool,
@@ -336,24 +383,40 @@ fn chunk_groups(
 ) -> Vec<(usize, usize, usize)> {
     let mut out = Vec::with_capacity(workers.max(ranges.len()));
     for (r, &(r0, r1)) in ranges.iter().enumerate() {
-        if r1 == r0 {
-            continue;
-        }
-        let rows: usize = (r0..r1).map(|gi| groups.group(gi).rows.len()).sum();
-        let nchunks = workers.min(r1 - r0).max(1);
-        let target = rows.div_ceil(nchunks).max(1);
-        let mut start = r0;
-        let mut acc = 0;
-        for gi in r0..r1 {
-            acc += groups.group(gi).rows.len();
-            if acc >= target || gi == r1 - 1 {
-                out.push((r, start, gi + 1));
-                start = gi + 1;
-                acc = 0;
-            }
-        }
+        chunk_rank(groups, workers, r, r0, r1, &mut out);
     }
     out
+}
+
+/// One rank's slice of [`chunk_groups`]: split group range `[r0, r1)`
+/// into up to `workers` row-balanced contiguous chunks, appended to
+/// `out` in ascending order. The concurrent-rank path calls this per
+/// rank (with that rank's pinned worker count) so each driver chunks
+/// only its own work list.
+fn chunk_rank(
+    groups: &ExpertGroups,
+    workers: usize,
+    rank: usize,
+    r0: usize,
+    r1: usize,
+    out: &mut Vec<(usize, usize, usize)>,
+) {
+    if r1 == r0 {
+        return;
+    }
+    let rows: usize = (r0..r1).map(|gi| groups.group(gi).rows.len()).sum();
+    let nchunks = workers.min(r1 - r0).max(1);
+    let target = rows.div_ceil(nchunks).max(1);
+    let mut start = r0;
+    let mut acc = 0;
+    for gi in r0..r1 {
+        acc += groups.group(gi).rows.len();
+        if acc >= target || gi == r1 - 1 {
+            out.push((rank, start, gi + 1));
+            start = gi + 1;
+            acc = 0;
+        }
+    }
 }
 
 impl CpuBackend {
@@ -456,6 +519,12 @@ impl CpuBackend {
             // of the raw weights — there is no per-rank work list to shard
             panic!("expert-parallel sharding requires grouped dispatch (OEA_DISPATCH=grouped)");
         }
+        if opts.panel_dtype != PanelDtype::F32 && opts.dispatch == DispatchMode::Gather {
+            // the gather oracle executes the raw f32 weights directly and
+            // never consults packed panels, so a "quantized" gather run
+            // would silently measure full precision
+            panic!("quantized panels require grouped dispatch (OEA_DISPATCH=grouped)");
+        }
         let packed = match (opts.dispatch, opts.residency) {
             // residency: panels page in lazily on first touch, so nothing
             // is packed up front (the cold-start memory win)
@@ -469,11 +538,30 @@ impl CpuBackend {
                         .map(|r| {
                             let (e0, e1) = rank_span(r, n, ep_ranks);
                             let ne = e1 - e0;
+                            let dt = opts.panel_dtype;
                             PackedShard {
                                 e0,
-                                wg: PackedMat::pack(&lw.wg[e0 * d * h..e1 * d * h], ne, d, h),
-                                wu: PackedMat::pack(&lw.wu[e0 * d * h..e1 * d * h], ne, d, h),
-                                wd: PackedMat::pack(&lw.wd[e0 * h * d..e1 * h * d], ne, h, d),
+                                wg: PackedMat::pack_dtype(
+                                    &lw.wg[e0 * d * h..e1 * d * h],
+                                    ne,
+                                    d,
+                                    h,
+                                    dt,
+                                ),
+                                wu: PackedMat::pack_dtype(
+                                    &lw.wu[e0 * d * h..e1 * d * h],
+                                    ne,
+                                    d,
+                                    h,
+                                    dt,
+                                ),
+                                wd: PackedMat::pack_dtype(
+                                    &lw.wd[e0 * h * d..e1 * h * d],
+                                    ne,
+                                    h,
+                                    d,
+                                    dt,
+                                ),
                             }
                         })
                         .collect()
@@ -494,6 +582,16 @@ impl CpuBackend {
             t => t,
         };
         let pool = if workers > 1 { Some(ThreadPool::new(workers)) } else { None };
+        // pinned worker subsets for real rank concurrency: workers split
+        // evenly across ranks (min 1 each), so the MoE stage never runs
+        // on more threads than the single-pool path would have used
+        let rank_pools: Vec<ThreadPool> =
+            if opts.dispatch == DispatchMode::Grouped && ep_ranks > 1 && workers > 1 {
+                let per_rank = (workers / ep_ranks).max(1);
+                (0..ep_ranks).map(|_| ThreadPool::new(per_rank)).collect()
+            } else {
+                Vec::new()
+            };
 
         CpuBackend {
             expert_load: Mutex::new(vec![0u64; n]),
@@ -507,7 +605,11 @@ impl CpuBackend {
             res_cfg: opts.residency,
             ep_ranks,
             mode: opts.dispatch,
+            kernels_mode: opts.kernels,
+            panel_dtype: opts.panel_dtype,
             pool,
+            rank_pools,
+            rank_wall: Mutex::new(Vec::new()),
             scratch: ScratchPool::new(),
             faults: None,
             tracer: None,
@@ -554,6 +656,16 @@ impl CpuBackend {
 
     pub fn dispatch_mode(&self) -> DispatchMode {
         self.mode
+    }
+
+    /// Kernel implementation the hot paths were constructed with.
+    pub fn kernel_mode(&self) -> KernelMode {
+        self.kernels_mode
+    }
+
+    /// Storage dtype the expert panels were packed in.
+    pub fn panel_dtype(&self) -> PanelDtype {
+        self.panel_dtype
     }
 
     /// Snapshot of cumulative per-expert routed-token counts.
@@ -630,7 +742,7 @@ impl CpuBackend {
                             ],
                         );
                     }
-                    rr.page_in(lw, le, d, h);
+                    rr.page_in(lw, le, d, h, self.panel_dtype);
                     wave.push(le);
                 }
             }
@@ -779,7 +891,7 @@ impl CpuBackend {
                                     ],
                                 );
                             }
-                            rr.page_in(lw, le, d, h);
+                            rr.page_in(lw, le, d, h, self.panel_dtype);
                         }
                     }
                     Arc::clone(rr.panels[le].as_ref().expect("resident expert has panels"))
@@ -790,8 +902,9 @@ impl CpuBackend {
             std::thread::sleep(Duration::from_micros(fault_sleep_us));
         }
         let shards = if panels.is_none() { Some(&self.packed[l]) } else { None };
+        let kmode = self.kernels_mode;
         let mut hn = self.scratch.take(b * d);
-        kernels::rmsnorm_into(hidden, &lw.n2, d, c.rms_eps, &mut hn);
+        kernels::rmsnorm_into_mode(hidden, &lw.n2, d, c.rms_eps, &mut hn, kmode);
         let mut acc = self.scratch.take(b * d);
         let ngroups = groups.len();
         let workers = self.pool.as_ref().map(|p| p.size()).unwrap_or(1);
@@ -824,9 +937,9 @@ impl CpuBackend {
                         let p = &ps[gi];
                         kernels::moe_ffn_group_rows(
                             hn_ref,
-                            p.wg.expert(0),
-                            p.wu.expert(0),
-                            p.wd.expert(0),
+                            p.wg.expert_view(0),
+                            p.wu.expert_view(0),
+                            p.wd.expert_view(0),
                             d,
                             h,
                             p.wg.n_pad,
@@ -835,25 +948,93 @@ impl CpuBackend {
                             grp.weights,
                             out,
                             arena,
+                            kmode,
                         );
                     }
                 }
                 (None, Some(shards)) => {
                     let pk = &shards[rank];
                     kernels::moe_ffn_groups(
-                        hn_ref, &pk.wg, &pk.wu, &pk.wd, pk.e0, groups, g0, g1, out, arena,
+                        hn_ref, &pk.wg, &pk.wu, &pk.wd, pk.e0, groups, g0, g1, out, arena, kmode,
                     )
                 }
                 (None, None) => unreachable!("no packed panels and no residency"),
             }
         };
+        let mut rank_wall = vec![0.0f64; self.ep_ranks];
         if workers <= 1 || ngroups <= 1 {
             with_thread_arena(|arena| {
                 for (rank, &(g0, g1)) in ranges.iter().enumerate() {
+                    let t0 = std::time::Instant::now();
                     run_range(rank, g0, g1, &mut acc, arena);
+                    rank_wall[rank] = t0.elapsed().as_secs_f64() * 1e6;
                 }
             });
+        } else if !self.rank_pools.is_empty() {
+            // Real rank concurrency: one driver thread per active rank
+            // executes that rank's chunk list on its own pinned worker
+            // subset while the driver clocks the rank's wall time — the
+            // measured counterpart of the cost model's analytic
+            // max-over-ranks step cost. Partials still reduce in (rank
+            // ascending, chunk ascending) order below, exactly the
+            // serial ascending-expert order, so concurrent execution
+            // never changes the reduction order.
+            let scratch = &self.scratch;
+            let run_range = &run_range;
+            let rank_parts: Vec<(usize, f64, Vec<Vec<f32>>)> = std::thread::scope(|s| {
+                let handles: Vec<_> = ranges
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &(g0, g1))| g1 > g0)
+                    .map(|(rank, &(g0, g1))| {
+                        let rpool = &self.rank_pools[rank];
+                        s.spawn(move || {
+                            let t0 = std::time::Instant::now();
+                            let mut chunks = Vec::new();
+                            chunk_rank(groups, rpool.size(), rank, g0, g1, &mut chunks);
+                            let parts = if rpool.size() > 1 && chunks.len() > 1 {
+                                rpool.scoped_map(
+                                    chunks,
+                                    |(r, c0, c1): (usize, usize, usize)| {
+                                        let mut part = scratch.take(b * d);
+                                        with_thread_arena(|arena| {
+                                            run_range(r, c0, c1, &mut part, arena)
+                                        });
+                                        part
+                                    },
+                                )
+                            } else {
+                                let mut part = scratch.take(b * d);
+                                with_thread_arena(|arena| {
+                                    run_range(rank, g0, g1, &mut part, arena)
+                                });
+                                vec![part]
+                            };
+                            (rank, t0.elapsed().as_secs_f64() * 1e6, parts)
+                        })
+                    })
+                    .collect();
+                // spawn order is rank-ascending; joining in that order
+                // keeps the reduction deterministic
+                handles
+                    .into_iter()
+                    .map(|hd| match hd.join() {
+                        Ok(v) => v,
+                        Err(e) => std::panic::resume_unwind(e),
+                    })
+                    .collect()
+            });
+            for (rank, wall, parts) in rank_parts {
+                rank_wall[rank] = wall;
+                for part in parts {
+                    for (o, &pv) in acc.iter_mut().zip(part.iter()) {
+                        *o += pv;
+                    }
+                    self.scratch.put(part);
+                }
+            }
         } else {
+            let t0 = std::time::Instant::now();
             let chunks = chunk_groups(groups, workers, &ranges);
             let scratch = &self.scratch;
             let pool = self.pool.as_ref().unwrap();
@@ -873,7 +1054,10 @@ impl CpuBackend {
                 }
                 self.scratch.put(part);
             }
+            // single-rank pooled path: the whole MoE stage is rank 0's wall
+            rank_wall[0] = t0.elapsed().as_secs_f64() * 1e6;
         }
+        *lock_clean(&self.rank_wall) = rank_wall;
         {
             let mut load = lock_clean(&self.expert_load);
             for grp in groups.iter() {
@@ -979,7 +1163,7 @@ impl Backend for CpuBackend {
         let (hq, hkv, hd) = (c.n_q_heads, c.n_kv_heads, c.head_dim);
 
         let mut h1 = self.scratch.take(b * d);
-        kernels::rmsnorm_into(hidden, &lw.n1, d, c.rms_eps, &mut h1);
+        kernels::rmsnorm_into_mode(hidden, &lw.n1, d, c.rms_eps, &mut h1, self.kernels_mode);
         let mut q = self.scratch.take(b * qd);
         let mut k = self.scratch.take(b * kvd);
         let mut v = self.scratch.take(b * kvd);
@@ -1017,8 +1201,23 @@ impl Backend for CpuBackend {
             *o += a;
         }
         self.scratch.put(ao);
-        let scores =
-            kernels::router_scores(&h_out, &lw.n2, &lw.router, b, d, c.n_experts, c.rms_eps);
+        // router scores with pooled norm scratch (the score Vec itself
+        // escapes into LayerPre, so it cannot come from the pool)
+        let mut rhn = self.scratch.take(b * d);
+        let mut scores = vec![0.0f32; b * c.n_experts];
+        kernels::router_scores_into(
+            &h_out,
+            &lw.n2,
+            &lw.router,
+            b,
+            d,
+            c.n_experts,
+            c.rms_eps,
+            &mut rhn,
+            &mut scores,
+            self.kernels_mode,
+        );
+        self.scratch.put(rhn);
         Ok(LayerPre { h: h_out, scores })
     }
 
@@ -1108,7 +1307,14 @@ impl Backend for CpuBackend {
         let (d, v) = (self.cfg.d_model, self.cfg.vocab);
         let b = hidden.len() / d;
         let mut hn = self.scratch.take(b * d);
-        kernels::rmsnorm_into(hidden, &self.final_norm, d, self.cfg.rms_eps, &mut hn);
+        kernels::rmsnorm_into_mode(
+            hidden,
+            &self.final_norm,
+            d,
+            self.cfg.rms_eps,
+            &mut hn,
+            self.kernels_mode,
+        );
         let mut out = vec![0.0f32; b * v];
         let workers = self.pool.as_ref().map(|p| p.size()).unwrap_or(1);
         if workers <= 1 || b <= 4 {
@@ -1239,7 +1445,7 @@ impl Backend for CpuBackend {
             self.apply_prefetch_wave(l);
             let lw = &self.layers[l];
             let mut h1 = self.scratch.take(cn * d);
-            kernels::rmsnorm_into(&hidden, &lw.n1, d, c.rms_eps, &mut h1);
+            kernels::rmsnorm_into_mode(&hidden, &lw.n1, d, c.rms_eps, &mut h1, self.kernels_mode);
             let mut q = self.scratch.take(cn * qd);
             let mut k = self.scratch.take(cn * kvd);
             let mut v = self.scratch.take(cn * kvd);
@@ -1283,9 +1489,21 @@ impl Backend for CpuBackend {
             }
             self.scratch.put(ao);
             // vanilla routing, like prefill (paper: OEA is decode-only)
-            let scores = kernels::router_scores(
-                &hidden, &lw.n2, &lw.router, cn, d, c.n_experts, c.rms_eps,
+            let mut rhn = self.scratch.take(cn * d);
+            let mut scores = vec![0.0f32; cn * c.n_experts];
+            kernels::router_scores_into(
+                &hidden,
+                &lw.n2,
+                &lw.router,
+                cn,
+                d,
+                c.n_experts,
+                c.rms_eps,
+                &mut rhn,
+                &mut scores,
+                self.kernels_mode,
             );
+            self.scratch.put(rhn);
             let sm = ScoreMatrix::new(cn, c.n_experts, scores);
             // prefill honors the health mask too: a prompt routed
             // through a poisoned expert would NaN its whole KV trail
@@ -1485,6 +1703,10 @@ impl Backend for CpuBackend {
         let fs = self.faults.as_ref()?;
         Some(lock_clean(fs).stats())
     }
+
+    fn rank_wall_us(&self) -> Vec<f64> {
+        lock_clean(&self.rank_wall).clone()
+    }
 }
 
 #[cfg(test)]
@@ -1499,7 +1721,7 @@ mod tests {
         CpuBackend::synthetic_with(
             ModelConfig::preset("tiny").unwrap(),
             0,
-            CpuOptions { dispatch, threads, residency: None, ep_ranks: 1 },
+            CpuOptions { dispatch, threads, ..CpuOptions::default() },
         )
     }
 
@@ -1606,7 +1828,7 @@ mod tests {
                 dispatch: DispatchMode::Grouped,
                 threads: 1,
                 residency: Some(ResidencyConfig::new(capacity, evict, 0)),
-                ep_ranks: 1,
+                ..CpuOptions::default()
             },
         )
     }
@@ -1709,7 +1931,7 @@ mod tests {
                 dispatch: DispatchMode::Grouped,
                 threads: 1,
                 residency: Some(ResidencyConfig::new(4, EvictPolicy::Lru, 2)),
-                ep_ranks: 1,
+                ..CpuOptions::default()
             },
         );
         let mut cache = be.new_cache(2).unwrap();
@@ -1746,7 +1968,7 @@ mod tests {
                 dispatch: DispatchMode::Gather,
                 threads: 1,
                 residency: Some(ResidencyConfig::new(4, EvictPolicy::Lru, 0)),
-                ep_ranks: 1,
+                ..CpuOptions::default()
             },
         );
     }
@@ -1755,7 +1977,12 @@ mod tests {
         CpuBackend::synthetic_with(
             ModelConfig::preset("tiny").unwrap(),
             0,
-            CpuOptions { dispatch: DispatchMode::Grouped, threads, residency: None, ep_ranks },
+            CpuOptions {
+                dispatch: DispatchMode::Grouped,
+                threads,
+                ep_ranks,
+                ..CpuOptions::default()
+            },
         )
     }
 
@@ -1800,6 +2027,7 @@ mod tests {
                 threads: 1,
                 residency: Some(ResidencyConfig::new(4, EvictPolicy::Lru, 0)),
                 ep_ranks: 4,
+                ..CpuOptions::default()
             },
         );
         touch_experts(&be, &[0, 2, 4, 6]); // one expert per rank
@@ -1868,8 +2096,8 @@ mod tests {
             CpuOptions {
                 dispatch: DispatchMode::Gather,
                 threads: 1,
-                residency: None,
                 ep_ranks: 2,
+                ..CpuOptions::default()
             },
         );
     }
@@ -1883,8 +2111,8 @@ mod tests {
             CpuOptions {
                 dispatch: DispatchMode::Grouped,
                 threads: 1,
-                residency: None,
                 ep_ranks: 0,
+                ..CpuOptions::default()
             },
         );
     }
@@ -1921,5 +2149,150 @@ mod tests {
             thread0,
             "thread arena allocated after warmup"
         );
+    }
+
+    fn backend_dtype(dtype: PanelDtype, threads: usize) -> CpuBackend {
+        CpuBackend::synthetic_with(
+            ModelConfig::preset("tiny").unwrap(),
+            0,
+            CpuOptions { threads, panel_dtype: dtype, ..CpuOptions::default() },
+        )
+    }
+
+    #[test]
+    fn quantized_panels_execute_close_to_f32() {
+        let f32be = backend_with(DispatchMode::Grouped, 1);
+        let c = f32be.config().clone();
+        let (b, n) = (4usize, c.n_experts);
+        let hidden: Vec<f32> =
+            (0..b * c.d_model).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let mut combine = vec![0.0f32; b * n];
+        combine[0] = 0.7;
+        combine[1] = 0.3;
+        combine[n + 1] = 0.5;
+        combine[n + 4] = 0.5;
+        combine[2 * n + 4] = 1.0;
+        combine[3 * n + 7] = 1.0;
+        let ids = [0i32, 1, 4, 7];
+        let want = f32be.moe_apply(0, &hidden, &combine, &ids).unwrap();
+        let scale = want.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1.0);
+        // tolerances are relative to the output magnitude: bf16 keeps 8
+        // mantissa bits (~2^-9 per weight), int8 rounds to half a scale
+        // step per weight; both accumulate over two D·H GEMMs
+        for (dtype, tol) in [(PanelDtype::Bf16, 0.05f32), (PanelDtype::Int8, 0.2f32)] {
+            let be = backend_dtype(dtype, 1);
+            assert_eq!(be.panel_dtype(), dtype);
+            let got = be.moe_apply(0, &hidden, &combine, &ids).unwrap();
+            let mut max_err = 0.0f32;
+            for (&w, &g) in want.iter().zip(got.iter()) {
+                assert!(g.is_finite());
+                max_err = max_err.max((w - g).abs());
+            }
+            assert!(
+                max_err <= tol * scale,
+                "{}: max err {max_err} > {} (scale {scale})",
+                dtype.label(),
+                tol * scale
+            );
+        }
+    }
+
+    fn backend_res_dtype(dtype: PanelDtype) -> CpuBackend {
+        use crate::residency::EvictPolicy;
+        CpuBackend::synthetic_with(
+            ModelConfig::preset("tiny").unwrap(),
+            0,
+            CpuOptions {
+                threads: 1,
+                residency: Some(ResidencyConfig::new(2, EvictPolicy::Lru, 0)),
+                panel_dtype: dtype,
+                ..CpuOptions::default()
+            },
+        )
+    }
+
+    #[test]
+    fn bytes_paged_tracks_panel_dtype() {
+        // the residency ledger must charge the panel's storage dtype, not
+        // a hard-coded f32 size — the offload-economics honesty property
+        let paged = |dtype| {
+            let be = backend_res_dtype(dtype);
+            touch_experts(&be, &[0]);
+            Backend::residency_stats(&be).unwrap().counters.bytes_paged
+        };
+        let f32b = paged(PanelDtype::F32);
+        let bf16b = paged(PanelDtype::Bf16);
+        let i8b = paged(PanelDtype::Int8);
+        assert_eq!(f32b, 2 * bf16b, "bf16 panels are exactly half the f32 bytes");
+        let ratio = f32b as f64 / i8b as f64;
+        assert!(ratio >= 3.5, "int8 page-in bytes ratio {ratio} < 3.5");
+    }
+
+    #[test]
+    fn concurrent_rank_execution_matches_serial_and_measures_walls() {
+        let serial = backend_ep(2, 1);
+        let conc = backend_ep(2, 4);
+        assert_eq!(conc.rank_pools.len(), 2, "threaded EP backend builds per-rank pools");
+        let c = serial.config().clone();
+        let (b, n) = (4usize, c.n_experts);
+        let hidden: Vec<f32> =
+            (0..b * c.d_model).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let mut combine = vec![0.0f32; b * n];
+        combine[0] = 0.7;
+        combine[1] = 0.3;
+        combine[n + 1] = 0.5;
+        combine[n + 6] = 0.5;
+        combine[2 * n + 4] = 1.0;
+        combine[3 * n + 7] = 1.0;
+        let ids = [0i32, 1, 4, 6, 7];
+        let want = serial.moe_apply(0, &hidden, &combine, &ids).unwrap();
+        let got = conc.moe_apply(0, &hidden, &combine, &ids).unwrap();
+        for (&w, &g) in want.iter().zip(got.iter()) {
+            assert!((w - g).abs() < 1e-6, "concurrent ranks diverged: {w} vs {g}");
+        }
+        // both ranks executed work and report a measured wall time
+        let walls = Backend::rank_wall_us(&conc);
+        assert_eq!(walls.len(), 2);
+        assert!(walls.iter().all(|&w| w > 0.0), "rank walls not measured: {walls:?}");
+        // the serial path measures per-rank walls too
+        let walls = Backend::rank_wall_us(&serial);
+        assert_eq!(walls.len(), 2);
+        assert!(walls.iter().all(|&w| w > 0.0), "serial rank walls: {walls:?}");
+    }
+
+    #[test]
+    fn simd_kernel_mode_matches_scalar_backend() {
+        // on a non-AVX2 host SIMD degrades to scalar and this is bitwise;
+        // on AVX2 the ≤1e-4 equivalence bound applies (the same bound
+        // tests/kernel_equivalence.rs pins per kernel)
+        let scalar = backend_with(DispatchMode::Grouped, 1);
+        let simd = CpuBackend::synthetic_with(
+            ModelConfig::preset("tiny").unwrap(),
+            0,
+            CpuOptions { threads: 1, kernels: KernelMode::Simd, ..CpuOptions::default() },
+        );
+        assert_eq!(simd.kernel_mode(), KernelMode::Simd);
+        let c = scalar.config().clone();
+        let b = 4usize;
+        let mut cache_s = scalar.new_cache(b).unwrap();
+        let mut cache_v = simd.new_cache(b).unwrap();
+        let h_s = scalar.embed(&[5, 100, 200, 400]).unwrap();
+        let pos = vec![0i32; b];
+        let pre_s = scalar.layer_pre(0, &h_s, &mut cache_s, &pos).unwrap();
+        let pre_v = simd.layer_pre(0, &h_s, &mut cache_v, &pos).unwrap();
+        for (&a, &z) in pre_s.scores.iter().zip(pre_v.scores.iter()) {
+            assert!((a - z).abs() < 1e-4, "router scores diverged: {a} vs {z}");
+        }
+        let n = c.n_experts;
+        let mut combine = vec![0.0f32; b * n];
+        combine[0] = 0.7;
+        combine[1] = 0.3;
+        combine[n + 4] = 1.0;
+        let ids = [0i32, 1, 4];
+        let want = scalar.moe_apply(0, &pre_s.h, &combine, &ids).unwrap();
+        let got = simd.moe_apply(0, &pre_v.h, &combine, &ids).unwrap();
+        for (&w, &g) in want.iter().zip(got.iter()) {
+            assert!((w - g).abs() < 1e-3, "simd moe diverged: {w} vs {g}");
+        }
     }
 }

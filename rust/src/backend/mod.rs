@@ -245,4 +245,14 @@ pub trait Backend {
     fn fault_stats(&self) -> Option<crate::faults::FaultStats> {
         None
     }
+
+    /// Measured wall-clock µs each EP rank spent executing the MoE stage
+    /// of the most recent grouped dispatch call (index = rank). The model
+    /// runner snapshots this right after `moe_apply_routed`, landing the
+    /// *measured* per-rank time in `LayerStep` next to the analytic
+    /// `CostModel::step_us_ep` max-over-ranks figure. Empty for backends
+    /// (or dispatch modes) that don't execute per-rank work lists.
+    fn rank_wall_us(&self) -> Vec<f64> {
+        Vec::new()
+    }
 }

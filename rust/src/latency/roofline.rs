@@ -34,6 +34,13 @@ pub struct CostModel {
     /// host-to-device over PCIe for the presets. Zero models the paper's
     /// original single-tier setting (everything permanently in HBM).
     pub page_in_us: f64,
+    /// per routed token-expert assignment all-to-all dispatch + combine
+    /// cost (µs) under expert parallelism: each assignment ships one
+    /// hidden row to its expert's rank and one partial back. Charged by
+    /// [`CostModel::step_us_ep`] on the `(R-1)/R` fraction of assignments
+    /// that cross ranks (uniform placement); zero at one rank, so
+    /// single-rank numbers (the paper's Tables 3/4) are untouched.
+    pub alltoall_us: f64,
 }
 
 impl CostModel {
@@ -54,14 +61,24 @@ impl CostModel {
     /// Latency of one MoE layer step under expert parallelism (paper §7):
     /// ranks execute their shards concurrently, so the step costs the
     /// *maximum* per-rank latency — `max_r layer_us(t_r, load_r,
-    /// misses_r)`. Reduces exactly to [`CostModel::layer_us`] at one rank
-    /// (and to `layer_us(0, 0, 0)` for an empty slice: an idle step still
-    /// pays the per-layer overhead).
+    /// misses_r)` — plus the all-to-all dispatch/combine bill: with
+    /// uniform token->rank placement, `(R-1)/R` of the routed assignments
+    /// cross a rank boundary, each paying [`CostModel::alltoall_us`].
+    /// Reduces exactly to [`CostModel::layer_us`] at one rank — no
+    /// communication term — (and to `layer_us(0, 0, 0)` for an empty
+    /// slice: an idle step still pays the per-layer overhead).
     pub fn step_us_ep(&self, per_rank: &[RankLoad]) -> f64 {
-        per_rank
+        let max_rank = per_rank
             .iter()
             .map(|r| self.layer_us(r.t, r.load, r.misses))
-            .fold(self.layer_us(0, 0, 0), f64::max)
+            .fold(self.layer_us(0, 0, 0), f64::max);
+        let ranks = per_rank.len();
+        if ranks <= 1 {
+            return max_rank;
+        }
+        let total_load: usize = per_rank.iter().map(|r| r.load).sum();
+        let crossing = total_load as f64 * (ranks as f64 - 1.0) / ranks as f64;
+        max_rank + self.alltoall_us * crossing
     }
 
     /// Fit (fetch, overhead) by OLS on measured (t, µs) samples, leaving
@@ -76,6 +93,7 @@ impl CostModel {
                 compute_us: 0.0,
                 overhead_us: f.intercept,
                 page_in_us: 0.0,
+                alltoall_us: 0.0,
             },
             f.r2,
         ))
@@ -122,8 +140,18 @@ impl H100Presets {
     /// at ~55 GB/s effective -> ~172 µs. Only charged on residency
     /// misses, so the paper's single-tier numbers (misses = 0) are
     /// unchanged.
+    /// `alltoall_us`: one assignment ships a d=2048 bf16 hidden row out
+    /// and a partial back = ~8 KB over NVLink at ~450 GB/s effective ->
+    /// ~0.018 µs. Only charged by `step_us_ep` at R > 1, so the paper's
+    /// single-GPU tables are unchanged.
     pub fn qwen3_30b() -> CostModel {
-        CostModel { fetch_us: 2.91, compute_us: 0.012, overhead_us: 33.5, page_in_us: 172.0 }
+        CostModel {
+            fetch_us: 2.91,
+            compute_us: 0.012,
+            overhead_us: 33.5,
+            page_in_us: 172.0,
+            alltoall_us: 0.018,
+        }
     }
 
     /// Qwen3-235B-A22B under TP=8 (Tables 5/10, Figure 4).
@@ -133,8 +161,16 @@ impl H100Presets {
     /// ~53 µs floor — the all-reduce overhead the paper cites for the
     /// smaller relative gains.
     /// `page_in_us`: 4.7 MB per-rank shard over PCIe gen5 -> ~86 µs.
+    /// `alltoall_us`: d=4096 bf16 row out + partial back = ~16 KB over
+    /// NVLink -> ~0.036 µs per crossing assignment (R > 1 only).
     pub fn qwen3_235b_tp8() -> CostModel {
-        CostModel { fetch_us: 1.23, compute_us: 0.006, overhead_us: 53.0, page_in_us: 86.0 }
+        CostModel {
+            fetch_us: 1.23,
+            compute_us: 0.006,
+            overhead_us: 53.0,
+            page_in_us: 86.0,
+            alltoall_us: 0.036,
+        }
     }
 
     /// Map a scaled-down config onto a paper-scale preset: experts are
@@ -172,11 +208,15 @@ mod tests {
 
     #[test]
     fn step_us_ep_is_max_over_ranks_and_reduces_at_one_rank() {
-        let m = H100Presets::qwen3_30b();
-        // one rank: exactly layer_us, for every shape incl. misses
+        let full = H100Presets::qwen3_30b();
+        // comm-free model isolates the max-over-ranks structure
+        let m = CostModel { alltoall_us: 0.0, ..full };
+        // one rank: exactly layer_us, for every shape incl. misses — and
+        // the comm term never fires at R = 1 even on the full preset
         for (t, load, misses) in [(0usize, 0usize, 0usize), (8, 32, 0), (51, 128, 3)] {
             let one = [RankLoad { t, load, misses }];
             assert_eq!(m.step_us_ep(&one), m.layer_us(t, load, misses));
+            assert_eq!(full.step_us_ep(&one), full.layer_us(t, load, misses));
         }
         // several ranks: the max rank sets the step
         let ranks = [
@@ -190,6 +230,8 @@ mod tests {
             .fold(f64::MIN, f64::max);
         assert_eq!(m.step_us_ep(&ranks), want);
         // balancing the same totals never costs more than concentrating
+        // (the comm term depends only on total load + R, so the full
+        // preset preserves the ordering too)
         let concentrated = [
             RankLoad { t: 12, load: 96, misses: 0 },
             RankLoad::default(),
@@ -199,14 +241,43 @@ mod tests {
             RankLoad { t: 6, load: 48, misses: 0 },
         ];
         assert!(m.step_us_ep(&balanced) < m.step_us_ep(&concentrated));
+        assert!(full.step_us_ep(&balanced) < full.step_us_ep(&concentrated));
         // empty slice: an idle step still pays the layer overhead
         assert_eq!(m.step_us_ep(&[]), m.overhead_us);
     }
 
     #[test]
+    fn step_us_ep_charges_crossing_fraction_of_alltoall() {
+        let base = H100Presets::qwen3_30b();
+        let m = CostModel { alltoall_us: 0.5, ..base };
+        let free = CostModel { alltoall_us: 0.0, ..base };
+        // R = 2, total load 96: (R-1)/R = 1/2 of assignments cross
+        let two = [
+            RankLoad { t: 6, load: 48, misses: 0 },
+            RankLoad { t: 6, load: 48, misses: 0 },
+        ];
+        let want = free.step_us_ep(&two) + 0.5 * 96.0 * 0.5;
+        assert!((m.step_us_ep(&two) - want).abs() < 1e-9);
+        // R = 4: 3/4 cross — the bill grows with fan-out at fixed load
+        let four = [
+            RankLoad { t: 3, load: 24, misses: 0 },
+            RankLoad { t: 3, load: 24, misses: 0 },
+            RankLoad { t: 3, load: 24, misses: 0 },
+            RankLoad { t: 3, load: 24, misses: 0 },
+        ];
+        let want4 = free.step_us_ep(&four) + 0.5 * 96.0 * 0.75;
+        assert!((m.step_us_ep(&four) - want4).abs() < 1e-9);
+    }
+
+    #[test]
     fn fit_recovers_exact_line() {
-        let truth =
-            CostModel { fetch_us: 2.5, compute_us: 0.0, overhead_us: 30.0, page_in_us: 0.0 };
+        let truth = CostModel {
+            fetch_us: 2.5,
+            compute_us: 0.0,
+            overhead_us: 30.0,
+            page_in_us: 0.0,
+            alltoall_us: 0.0,
+        };
         let ts: Vec<f64> = (8..=128).step_by(8).map(|t| t as f64).collect();
         let us: Vec<f64> = ts.iter().map(|&t| truth.layer_us(t as usize, 0, 0)).collect();
         let (fit, r2) = CostModel::fit(&ts, &us).unwrap();
@@ -254,8 +325,13 @@ mod tests {
     fn fit_page_in_recovers_miss_slope() {
         // synthetic measured samples at fixed (t, load), varying misses:
         // the OLS slope must recover the per-miss penalty
-        let truth =
-            CostModel { fetch_us: 2.91, compute_us: 0.012, overhead_us: 33.5, page_in_us: 40.0 };
+        let truth = CostModel {
+            fetch_us: 2.91,
+            compute_us: 0.012,
+            overhead_us: 33.5,
+            page_in_us: 40.0,
+            alltoall_us: 0.0,
+        };
         let misses: Vec<f64> = (0..=16).map(|m| m as f64).collect();
         let us: Vec<f64> = misses.iter().map(|&m| truth.layer_us(20, 64, m as usize)).collect();
         let (slope, intercept, r2) = CostModel::fit_page_in(&misses, &us).unwrap();

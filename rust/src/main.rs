@@ -22,6 +22,7 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use oea_serve::backend::cpu::kernels::{KernelMode, PanelDtype};
 use oea_serve::backend::cpu::{CpuBackend, CpuOptions};
 use oea_serve::backend::Backend;
 use oea_serve::residency::{EvictPolicy, ResidencyConfig};
@@ -57,6 +58,13 @@ fn spec() -> Spec {
             ("ep-ranks", true, "cpu: expert-parallel rank shards executing the MoE stage \
                               (default: the policy's ranks, or 1). Must match an ep: \
                               policy's ranks when both are given"),
+            ("kernels", true, "cpu: kernel implementation: scalar (default, the bitwise \
+                              oracle) | simd (runtime-detected AVX2+FMA; falls back to \
+                              scalar where unavailable)"),
+            ("panel-dtype", true, "cpu: packed expert panel precision: f32 (default) | \
+                              bf16 | int8 (per-row scales; fused dequant in the \
+                              micro-kernel). Grouped dispatch only; shrinks residency \
+                              page-in bytes and the cost model prices that"),
             ("expert-cache", true, "cpu: expert residency capacity (experts per layer); \
                               misses page packed panels in lazily (default: off, all \
                               experts pre-packed)"),
@@ -217,6 +225,18 @@ fn engine_config(args: &Args, c: &ModelConfig) -> Result<EngineConfig> {
     })
 }
 
+/// Quantized expert panels shrink the bytes a residency miss moves, so a
+/// CPU run prices the cost model's `page_in_us` at the packed dtype's
+/// actual panel size (bf16 halves it; int8 panels + per-row f32 scales
+/// land near 0.26x of f32).
+fn scale_page_in(ecfg: &mut EngineConfig, dtype: PanelDtype) {
+    ecfg.cost_model.page_in_us *= match dtype {
+        PanelDtype::F32 => 1.0,
+        PanelDtype::Bf16 => 0.5,
+        PanelDtype::Int8 => 0.26,
+    };
+}
+
 /// CPU path only: the trained vocab when artifacts exist, byte-level
 /// fallback otherwise (every model vocab here is >= 259, so byte-level
 /// ids always fit). The PJRT path loads the manifest's vocab strictly —
@@ -233,10 +253,14 @@ fn cpu_tokenizer(args: &Args, cfg_name: &str) -> Tokenizer {
     }
 }
 
-fn cmd_generate<B: Backend>(args: &Args, runner: ModelRunner<B>, tok: Tokenizer) -> Result<()> {
+fn cmd_generate<B: Backend>(
+    args: &Args,
+    runner: ModelRunner<B>,
+    tok: Tokenizer,
+    ecfg: EngineConfig,
+) -> Result<()> {
     let prompt_text = args.str_or("prompt", "The quiet river carried the");
     let prompt: Vec<i32> = tok.encode(&prompt_text).iter().map(|&t| t as i32).collect();
-    let ecfg = engine_config(args, runner.cfg())?;
     let mut engine = Engine::new(runner, ecfg)?;
     engine
         .submit(GenRequest {
@@ -389,6 +413,29 @@ fn cpu_runner(args: &Args) -> Result<ModelRunner<CpuBackend>> {
             }
         }
     }
+    if let Some(v) = args.str_opt("kernels") {
+        opts.kernels = match v.as_str() {
+            "scalar" => KernelMode::Scalar,
+            "simd" => KernelMode::Simd,
+            other => {
+                return Err(oea_serve::Error::Config(format!(
+                    "--kernels {other:?} (scalar | simd)"
+                )))
+            }
+        };
+    }
+    if let Some(v) = args.str_opt("panel-dtype") {
+        opts.panel_dtype = match v.as_str() {
+            "f32" => PanelDtype::F32,
+            "bf16" => PanelDtype::Bf16,
+            "int8" => PanelDtype::Int8,
+            other => {
+                return Err(oea_serve::Error::Config(format!(
+                    "--panel-dtype {other:?} (f32 | bf16 | int8)"
+                )))
+            }
+        };
+    }
     let mut backend = CpuBackend::synthetic_with(cfg, seed, opts);
     if let Some(spec) = args.str_opt("faults") {
         if backend.dispatch_mode() != oea_serve::backend::cpu::DispatchMode::Grouped {
@@ -415,6 +462,7 @@ fn run_cpu(args: &Args) -> Result<()> {
                 println!("flight recorder armed (GET /trace)");
             }
             let mut ecfg = engine_config(args, runner.cfg())?;
+            scale_page_in(&mut ecfg, runner.backend.panel_dtype());
             ecfg.tracer = tracer.clone();
             let (addr, mut opts) = serve_preamble(args, runner.cfg(), "cpu")?;
             opts.tracer = tracer;
@@ -424,7 +472,9 @@ fn run_cpu(args: &Args) -> Result<()> {
         Some("generate") => {
             let runner = cpu_runner(args)?;
             let tok = cpu_tokenizer(args, &runner.cfg().name.clone());
-            cmd_generate(args, runner, tok)
+            let mut ecfg = engine_config(args, runner.cfg())?;
+            scale_page_in(&mut ecfg, runner.backend.panel_dtype());
+            cmd_generate(args, runner, tok, ecfg)
         }
         Some("ce-eval") => {
             let runner = cpu_runner(args)?;
@@ -475,7 +525,8 @@ fn run_pjrt(args: &Args) -> Result<()> {
             let runner = ModelRunner::new(PjrtBackend::load(&root, &cfg_name)?);
             let m = &runner.backend.rt.manifest;
             let tok = Tokenizer::load(&m.dir.join(&m.vocab_file))?;
-            cmd_generate(args, runner, tok)
+            let ecfg = engine_config(args, runner.cfg())?;
+            cmd_generate(args, runner, tok, ecfg)
         }
         Some("ce-eval") => {
             let runner = ModelRunner::new(PjrtBackend::load(&root, &cfg_name)?);

@@ -61,6 +61,11 @@ pub struct LayerStep {
     pub moe_us: f64,
     /// µs spent in the rust routing decision
     pub route_us: f64,
+    /// measured wall µs each EP rank spent executing its MoE work-list
+    /// (empty when the backend doesn't execute per-rank lists) — the
+    /// measured counterpart of the analytic
+    /// [`crate::latency::CostModel::step_us_ep`] max-over-ranks figure
+    pub rank_wall_us: Vec<f64>,
 }
 
 impl LayerStep {
@@ -280,6 +285,7 @@ impl<B: Backend> ModelRunner<B> {
             let step = RoutedStep { groups: &groups, combine: &d.combine, ids: &ids };
             hidden = self.backend.moe_apply_routed(l, &pre.h, &step)?;
             let moe_us = t0.elapsed().as_secs_f64() * 1e6;
+            let rank_wall_us = self.backend.rank_wall_us();
             let misses = match (res0, self.backend.residency_counters(l)) {
                 (Some(before), Some(after)) => after.delta_from(&before).misses as usize,
                 _ => 0,
@@ -318,6 +324,7 @@ impl<B: Backend> ModelRunner<B> {
                 rank_misses,
                 moe_us,
                 route_us,
+                rank_wall_us,
             });
         }
 

@@ -47,12 +47,12 @@ fn backends(cfg: &ModelConfig, threads: usize) -> (CpuBackend, CpuBackend) {
     let grouped = CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads, residency: None, ep_ranks: 1 },
+        CpuOptions { dispatch: DispatchMode::Grouped, threads, ..CpuOptions::default() },
     );
     let gather = CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Gather, threads: 1, residency: None, ep_ranks: 1 },
+        CpuOptions { dispatch: DispatchMode::Gather, threads: 1, ..CpuOptions::default() },
     );
     (grouped, gather)
 }
@@ -186,7 +186,7 @@ fn grouped_threaded_is_deterministic() {
         let be = CpuBackend::synthetic_with(
             cfg.clone(),
             0,
-            CpuOptions { dispatch: DispatchMode::Grouped, threads, residency: None, ep_ranks: 1 },
+            CpuOptions { dispatch: DispatchMode::Grouped, threads, ..CpuOptions::default() },
         );
         let runner = ModelRunner::new(be);
         let b = 4usize;
@@ -224,12 +224,12 @@ fn logits_parallel_matches_serial() {
     let serial = CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, residency: None, ep_ranks: 1 },
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, ..CpuOptions::default() },
     );
     let parallel = CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 4, residency: None, ep_ranks: 1 },
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 4, ..CpuOptions::default() },
     );
     let mut rng = Rng::new(7);
     // the paper's operating point (B=16) plus odd sizes that exercise the

@@ -205,7 +205,12 @@ fn backend_ep(cfg: &ModelConfig, ep_ranks: usize) -> CpuBackend {
     CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, residency: None, ep_ranks },
+        CpuOptions {
+            dispatch: DispatchMode::Grouped,
+            threads: 1,
+            ep_ranks,
+            ..CpuOptions::default()
+        },
     )
 }
 
@@ -283,6 +288,7 @@ fn ep_with_unbounded_residency_is_bitwise_identical() {
             threads: 1,
             residency: Some(ResidencyConfig::new(cfg.n_experts, EvictPolicy::Lru, 0)),
             ep_ranks: 4,
+            ..CpuOptions::default()
         },
     ));
     let (logits_b, tel_b) = drive(&cached, pol, 4, 12);

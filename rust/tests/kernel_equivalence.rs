@@ -1,0 +1,255 @@
+//! SIMD-vs-scalar and quantized-panel equivalence: the scalar kernels
+//! are the golden oracles (every bitwise pin in the suite is stated
+//! against them), so the AVX2+FMA kernels and the bf16/int8 panel
+//! storage must be shown equivalent within stated, per-dtype bounds:
+//!
+//! - **simd vs scalar**: ≤ 1e-4 absolute on every hot-path kernel, on
+//!   shapes whose dimensions are NOT multiples of the 8-wide lanes
+//!   (the remainder loops are where vector kernels rot);
+//! - **bf16**: round-trip relative error ≤ 2⁻⁸ per element (7 explicit
+//!   mantissa bits, round-to-nearest-even half-ULP), end-to-end logits
+//!   within 5% of the f32 run's max |logit|;
+//! - **int8**: dequant error ≤ scale/2 per element (symmetric per-row
+//!   scales `max_abs/127`), end-to-end logits within 25% of the f32
+//!   run's max |logit|.
+//!
+//! On hosts without AVX2+FMA the SIMD cases degrade to the scalar path
+//! by construction and the comparisons hold bitwise.
+
+use oea_serve::backend::cpu::kernels::{
+    self, bf16_from_f32, bf16_to_f32, KernelMode, PackedMat, PanelDtype, PanelView, LANES,
+};
+use oea_serve::backend::cpu::{CpuBackend, CpuOptions, DispatchMode};
+use oea_serve::config::ModelConfig;
+use oea_serve::model::ModelRunner;
+use oea_serve::moe::policy::Policy;
+use oea_serve::util::rng::Rng;
+
+fn gaussian_vec(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian() as f32 * s).collect()
+}
+
+/// Odd shapes on purpose: k and n straddle the LANES=8 boundary so both
+/// the main vector body and the scalar remainder columns execute.
+const SHAPES: &[(usize, usize, usize)] =
+    &[(1, 3, 5), (4, 7, 9), (2, 17, 8), (5, 64, 33), (16, 96, 40), (3, 100, 100)];
+
+#[test]
+fn matmul_simd_matches_scalar_on_odd_shapes() {
+    if !kernels::simd_available() {
+        eprintln!("skip: no AVX2+FMA on this host (SIMD degrades to the scalar oracle)");
+    }
+    let mut rng = Rng::new(11);
+    for &(m, k, n) in SHAPES {
+        let a = gaussian_vec(&mut rng, m * k, 0.5);
+        let raw = gaussian_vec(&mut rng, k * n, 0.5);
+        let p = PackedMat::pack(&raw, 1, k, n);
+        assert_eq!(p.n_pad % LANES, 0);
+        let panel = p.expert(0);
+        let mut out_s = vec![0.0f32; m * p.n_pad];
+        let mut out_v = vec![0.0f32; m * p.n_pad];
+        kernels::matmul_packed_mode(&a, k, panel, k, p.n_pad, m, &mut out_s, KernelMode::Scalar);
+        kernels::matmul_packed_mode(&a, k, panel, k, p.n_pad, m, &mut out_v, KernelMode::Simd);
+        for (i, (x, y)) in out_s.iter().zip(out_v.iter()).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-4,
+                "({m},{k},{n}) out[{i}]: scalar {x} vs simd {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn elementwise_kernels_simd_match_scalar() {
+    let mut rng = Rng::new(23);
+    // silu_mul: odd lengths around the lane width
+    for len in [1usize, 7, 8, 9, 31, 100] {
+        let g0 = gaussian_vec(&mut rng, len, 2.0);
+        let u = gaussian_vec(&mut rng, len, 2.0);
+        let mut gs = g0.clone();
+        let mut gv = g0.clone();
+        kernels::silu_mul_mode(&mut gs, &u, KernelMode::Scalar);
+        kernels::silu_mul_mode(&mut gv, &u, KernelMode::Simd);
+        for (i, (x, y)) in gs.iter().zip(gv.iter()).enumerate() {
+            assert!((x - y).abs() < 1e-4, "silu_mul len={len} [{i}]: {x} vs {y}");
+        }
+    }
+    // rmsnorm: odd row widths
+    for d in [3usize, 8, 13, 67] {
+        let rows = 4usize;
+        let h = gaussian_vec(&mut rng, rows * d, 1.5);
+        let scale = gaussian_vec(&mut rng, d, 1.0);
+        let mut os = vec![0.0f32; rows * d];
+        let mut ov = vec![0.0f32; rows * d];
+        kernels::rmsnorm_into_mode(&h, &scale, d, 1e-6, &mut os, KernelMode::Scalar);
+        kernels::rmsnorm_into_mode(&h, &scale, d, 1e-6, &mut ov, KernelMode::Simd);
+        for (i, (x, y)) in os.iter().zip(ov.iter()).enumerate() {
+            assert!((x - y).abs() < 1e-4, "rmsnorm d={d} [{i}]: {x} vs {y}");
+        }
+    }
+    // softmax: odd row widths, a spread wide enough to exercise the
+    // max-subtraction; rows must stay normalized under both kernels
+    for n in [2usize, 5, 8, 21, 63] {
+        let rows = 3usize;
+        let xs0 = gaussian_vec(&mut rng, rows * n, 4.0);
+        let mut xs = xs0.clone();
+        let mut xv = xs0.clone();
+        kernels::softmax_rows_mode(&mut xs, n, KernelMode::Scalar);
+        kernels::softmax_rows_mode(&mut xv, n, KernelMode::Simd);
+        for (i, (x, y)) in xs.iter().zip(xv.iter()).enumerate() {
+            assert!((x - y).abs() < 1e-4, "softmax n={n} [{i}]: {x} vs {y}");
+        }
+        for row in xv.chunks_exact(n) {
+            let z: f32 = row.iter().sum();
+            assert!((z - 1.0).abs() < 1e-5, "softmax row sum {z}");
+        }
+    }
+    // router fused path: rmsnorm -> GEMM -> softmax under one dispatch
+    let (b, d, ne) = (5usize, 36usize, 12usize);
+    let h = gaussian_vec(&mut rng, b * d, 0.8);
+    let n2 = gaussian_vec(&mut rng, d, 1.0);
+    let w = gaussian_vec(&mut rng, d * ne, 0.5);
+    let mut hn = vec![0.0f32; b * d];
+    let mut ss = vec![0.0f32; b * ne];
+    let mut sv = vec![0.0f32; b * ne];
+    kernels::router_scores_into(&h, &n2, &w, b, d, ne, 1e-6, &mut hn, &mut ss, KernelMode::Scalar);
+    kernels::router_scores_into(&h, &n2, &w, b, d, ne, 1e-6, &mut hn, &mut sv, KernelMode::Simd);
+    for (i, (x, y)) in ss.iter().zip(sv.iter()).enumerate() {
+        assert!((x - y).abs() < 1e-4, "router_scores [{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn bf16_round_trip_is_within_an_ulp_bound() {
+    let mut rng = Rng::new(7);
+    for _ in 0..2000 {
+        let x = (rng.gaussian() as f32) * 10f32.powi(rng.below(7) as i32 - 3);
+        let y = bf16_to_f32(bf16_from_f32(x));
+        // 7 explicit mantissa bits, round-to-nearest-even: ≤ 2⁻⁸ relative
+        assert!(
+            (x - y).abs() <= x.abs() / 256.0,
+            "bf16 round-trip {x} -> {y} beyond 2^-8 relative"
+        );
+    }
+    assert_eq!(bf16_to_f32(bf16_from_f32(0.0)), 0.0);
+    assert_eq!(bf16_to_f32(bf16_from_f32(1.0)), 1.0);
+    assert_eq!(bf16_to_f32(bf16_from_f32(-2.5)), -2.5);
+}
+
+#[test]
+fn int8_pack_error_is_bounded_by_half_a_scale_step() {
+    let mut rng = Rng::new(13);
+    let (experts, k, n) = (3usize, 9usize, 21usize);
+    let raw = gaussian_vec(&mut rng, experts * k * n, 1.3);
+    let p = PackedMat::pack_dtype(&raw, experts, k, n, PanelDtype::Int8);
+    for e in 0..experts {
+        let PanelView::I8 { q, scale } = p.expert_view(e) else {
+            panic!("int8 pack must expose an I8 view");
+        };
+        for r in 0..k {
+            let row = &raw[(e * k + r) * n..(e * k + r + 1) * n];
+            let max_abs = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            // symmetric per-row scale: max_abs maps onto ±127 exactly
+            assert!((scale[r] - max_abs / 127.0).abs() <= max_abs * 1e-6);
+            for c in 0..p.n_pad {
+                let deq = q[r * p.n_pad + c] as f32 * scale[r];
+                let orig = if c < n { row[c] } else { 0.0 };
+                assert!(
+                    (deq - orig).abs() <= scale[r] * 0.5 + 1e-7,
+                    "e{e} r{r} c{c}: {orig} -> {deq} (scale {})",
+                    scale[r]
+                );
+            }
+        }
+    }
+    // bf16 panels round-trip through the packed view with the same
+    // per-element bound as the raw conversion
+    let pb = PackedMat::pack_dtype(&raw, experts, k, n, PanelDtype::Bf16);
+    for e in 0..experts {
+        let PanelView::Bf16(bits) = pb.expert_view(e) else {
+            panic!("bf16 pack must expose a Bf16 view");
+        };
+        for r in 0..k {
+            for c in 0..n {
+                let orig = raw[(e * k + r) * n + c];
+                let got = bf16_to_f32(bits[r * pb.n_pad + c]);
+                assert!((orig - got).abs() <= orig.abs() / 256.0);
+            }
+        }
+    }
+}
+
+/// Decode a fixed (feedback-free) token stream so every variant sees
+/// identical inputs, and return the per-step logits.
+fn logits_stream(dt: PanelDtype, kmode: KernelMode) -> Vec<Vec<f32>> {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let be = CpuBackend::synthetic_with(
+        cfg.clone(),
+        0,
+        CpuOptions {
+            dispatch: DispatchMode::Grouped,
+            threads: 1,
+            kernels: kmode,
+            panel_dtype: dt,
+            ..CpuOptions::default()
+        },
+    );
+    let runner = ModelRunner::new(be);
+    let b = 4usize;
+    let mut batch = runner.new_batch(b).unwrap();
+    let live = vec![true; b];
+    let mut all = Vec::new();
+    for t in 0..6usize {
+        let toks: Vec<i32> = (0..b).map(|i| ((t * 31 + i * 7) % cfg.vocab) as i32).collect();
+        let pos = vec![t as i32; b];
+        let out = runner
+            .decode_step(&mut batch, &toks, &pos, &live, Policy::Vanilla { k: 2 }, true)
+            .unwrap();
+        all.push(out.logits);
+    }
+    all
+}
+
+fn max_abs_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .flat_map(|(x, y)| x.iter().zip(y.iter()).map(|(p, q)| (p - q).abs()))
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn end_to_end_logits_hold_their_per_dtype_bounds() {
+    let reference = logits_stream(PanelDtype::F32, KernelMode::Scalar);
+    let logit_scale = reference
+        .iter()
+        .flat_map(|v| v.iter().map(|x| x.abs()))
+        .fold(0.0f32, f32::max);
+    assert!(logit_scale > 0.0);
+
+    // SIMD on f32 panels: same math reassociated — tight bound (bitwise
+    // on hosts without AVX2+FMA, where Simd degrades to scalar)
+    let simd = logits_stream(PanelDtype::F32, KernelMode::Simd);
+    let d_simd = max_abs_diff(&reference, &simd);
+    assert!(
+        d_simd <= 1e-3 * logit_scale,
+        "simd logits drifted {d_simd} (scale {logit_scale})"
+    );
+
+    // quantized panels change the weights themselves; the bounds below
+    // are the documented quality contract per dtype
+    let bf16 = logits_stream(PanelDtype::Bf16, KernelMode::Scalar);
+    let d_bf16 = max_abs_diff(&reference, &bf16);
+    assert!(
+        d_bf16 <= 0.05 * logit_scale,
+        "bf16 logits drifted {d_bf16} (scale {logit_scale})"
+    );
+    assert!(d_bf16 > 0.0, "bf16 run was bitwise-identical — quantization never happened");
+
+    let int8 = logits_stream(PanelDtype::Int8, KernelMode::Scalar);
+    let d_int8 = max_abs_diff(&reference, &int8);
+    assert!(
+        d_int8 <= 0.25 * logit_scale,
+        "int8 logits drifted {d_int8} (scale {logit_scale})"
+    );
+    assert!(d_int8 > 0.0, "int8 run was bitwise-identical — quantization never happened");
+}

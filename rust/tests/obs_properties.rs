@@ -207,8 +207,7 @@ fn installed_tracer_leaves_backend_logits_bitwise_identical() {
     let opts = || CpuOptions {
         dispatch: DispatchMode::Grouped,
         threads: 1,
-        residency: None,
-        ep_ranks: 1,
+        ..CpuOptions::default()
     };
     let plain = ModelRunner::new(CpuBackend::synthetic_with(cfg.clone(), 0, opts()));
     let mut traced_backend = CpuBackend::synthetic_with(cfg.clone(), 0, opts());

@@ -7,6 +7,7 @@
 
 use std::collections::HashMap;
 
+use oea_serve::backend::cpu::kernels::{PackedMat, PanelDtype};
 use oea_serve::backend::cpu::{CpuBackend, CpuOptions, DispatchMode};
 use oea_serve::backend::Backend;
 use oea_serve::config::ModelConfig;
@@ -219,7 +220,7 @@ fn grouped_dispatch_bitwise_unchanged_by_residency_bookkeeping() {
     let plain = CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, residency: None, ep_ranks: 1 },
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, ..CpuOptions::default() },
     );
     let cached: Vec<CpuBackend> = [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::ScoreAware]
         .into_iter()
@@ -231,7 +232,7 @@ fn grouped_dispatch_bitwise_unchanged_by_residency_bookkeeping() {
                     dispatch: DispatchMode::Grouped,
                     threads: 1,
                     residency: Some(ResidencyConfig::new(2, evict, 0)),
-                    ep_ranks: 1,
+                    ..CpuOptions::default()
                 },
             )
         })
@@ -323,7 +324,7 @@ fn infinite_capacity_cache_aware_is_decision_identical_to_oea() {
     let oea_backend = CpuBackend::synthetic_with(
         cfg.clone(),
         0,
-        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, residency: None, ep_ranks: 1 },
+        CpuOptions { dispatch: DispatchMode::Grouped, threads: 1, ..CpuOptions::default() },
     );
     let ca_backend = CpuBackend::synthetic_with(
         cfg.clone(),
@@ -332,7 +333,7 @@ fn infinite_capacity_cache_aware_is_decision_identical_to_oea() {
             dispatch: DispatchMode::Grouped,
             threads: 1,
             residency: Some(ResidencyConfig::new(cfg.n_experts, EvictPolicy::Lru, 0)),
-            ep_ranks: 1,
+            ..CpuOptions::default()
         },
     );
     let oea = ModelRunner::new(oea_backend);
@@ -352,6 +353,52 @@ fn infinite_capacity_cache_aware_is_decision_identical_to_oea() {
 }
 
 #[test]
+fn bytes_paged_prices_the_packed_panel_dtype() {
+    // `bytes_paged` must be denominated in the panels' ACTUAL dtype size
+    // (misses x per-expert packed bytes), not a hard-coded f32 constant —
+    // quantized panels are the whole point of the smaller page-ins
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let (d, h) = (cfg.d_model, cfg.d_expert);
+    let per_expert = |dt: PanelDtype| -> u64 {
+        let raw_dh = vec![0.0f32; d * h];
+        let raw_hd = vec![0.0f32; h * d];
+        // one expert's SwiGLU panel set: wg + wu ([d, h]) and wd ([h, d])
+        (PackedMat::pack_dtype(&raw_dh, 1, d, h, dt).bytes() * 2
+            + PackedMat::pack_dtype(&raw_hd, 1, h, d, dt).bytes()) as u64
+    };
+    for dt in [PanelDtype::F32, PanelDtype::Bf16, PanelDtype::Int8] {
+        let be = CpuBackend::synthetic_with(
+            cfg.clone(),
+            0,
+            CpuOptions {
+                dispatch: DispatchMode::Grouped,
+                threads: 1,
+                residency: Some(ResidencyConfig::new(2, EvictPolicy::Lru, 0)),
+                panel_dtype: dt,
+                ..CpuOptions::default()
+            },
+        );
+        let runner = ModelRunner::new(be);
+        drive(&runner, Policy::Vanilla { k: 2 }, 4, 12);
+        let s = Backend::residency_stats(&runner.backend).unwrap();
+        assert!(s.counters.misses > 0, "{}: trace never missed — weak test", dt.label());
+        assert_eq!(
+            s.counters.bytes_paged,
+            s.counters.misses * per_expert(dt),
+            "{}: bytes_paged must equal misses x per-expert packed bytes",
+            dt.label()
+        );
+    }
+    // the dtype byte economics themselves: bf16 is exactly half of f32,
+    // int8 (+ per-row f32 scales) cuts at least 3.5x
+    assert_eq!(per_expert(PanelDtype::F32), 2 * per_expert(PanelDtype::Bf16));
+    assert!(
+        per_expert(PanelDtype::F32) as f64 / per_expert(PanelDtype::Int8) as f64 >= 3.5,
+        "int8 per-expert bytes did not cut >= 3.5x"
+    );
+}
+
+#[test]
 fn bounded_cache_aware_beats_vanilla_hit_rate_end_to_end() {
     // the steering property the bench sweeps: at capacity < n_experts,
     // cache-aware routing achieves a strictly higher hit rate than
@@ -365,7 +412,7 @@ fn bounded_cache_aware_beats_vanilla_hit_rate_end_to_end() {
                 dispatch: DispatchMode::Grouped,
                 threads: 1,
                 residency: Some(policy_residency),
-                ep_ranks: 1,
+                ..CpuOptions::default()
             },
         )
     };
